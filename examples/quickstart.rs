@@ -1,0 +1,80 @@
+//! Quickstart: the whole DSI pipeline in ~60 lines.
+//!
+//! Generates a small RM3-shaped dataset through the offline path
+//! (serving sim → Scribe → ETL → DWRF files in Tectonic), then runs a
+//! DPP session (Master + Workers + Client) and prints what came out.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::datagen::build_dataset;
+use dsi::dpp::{Session, SessionConfig, SessionSpec};
+use dsi::dwrf::WriterOptions;
+use dsi::tectonic::{Cluster, ClusterConfig};
+use dsi::transforms::dag::session_dag;
+use dsi::util::rng::Pcg32;
+use dsi::warehouse::Catalog;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let rm = RmConfig::get(RmId::Rm3);
+    let scale = SimScale::standard();
+    let mut rng = Pcg32::new(42);
+
+    // 1. Offline data generation: samples land as DWRF partitions in the
+    //    Tectonic cluster and register in the warehouse catalog.
+    let cluster = Arc::new(Cluster::new(ClusterConfig::default()));
+    let catalog = Catalog::new();
+    let ds = build_dataset(&cluster, &catalog, &rm, &scale, WriterOptions::default(), 42)?;
+    let table = catalog.get(&ds.table_name).unwrap();
+    println!(
+        "dataset: {} partitions, {} rows, {} stored bytes (3x replicated: {})",
+        table.partitions.len(),
+        table.total_rows(),
+        table.total_bytes(),
+        cluster.stored_bytes(),
+    );
+
+    // 2. A training job's session spec: feature projection + transform DAG.
+    let take = (ds.schema.features.len() as f64 * rm.frac_feats_used()).round() as usize;
+    let projection = ds.schema.sample_projection(&mut rng, take, rm.popularity_zipf_s);
+    println!(
+        "projection: {} of {} features ({}%)",
+        projection.len(),
+        ds.schema.features.len(),
+        projection.len() * 100 / ds.schema.features.len()
+    );
+    let dag = session_dag(&mut rng, &rm, &ds.schema, &projection);
+    let spec = SessionSpec::from_dag(&ds.table_name, 0, u32::MAX, dag, 64);
+
+    // 3. Run DPP: Master shards the read into splits; Workers extract,
+    //    transform, and load; the Client receives ready-to-train tensors.
+    let report = Session::run(
+        &catalog,
+        &cluster,
+        spec,
+        &SessionConfig {
+            initial_workers: 2,
+            max_workers: 4,
+            clients: 1,
+            ..Default::default()
+        },
+    )?;
+    println!(
+        "DPP session: {} rows in {:.2}s ({:.0} rows/s), {} tensor batches",
+        report.rows_delivered,
+        report.wall_secs,
+        report.rows_per_sec,
+        report.batches_delivered,
+    );
+    println!(
+        "storage: {} reads / {} seeks, {:.1} MB fetched, {:.1} MB/s per device-sec",
+        report.storage_reads,
+        report.storage_seeks,
+        report.storage_bytes_read as f64 / 1e6,
+        report.storage_mbps(),
+    );
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Walkthrough of the paper's §7.5 co-designed storage optimizations
+//! (Table 12): runs the real pipeline under each progressive
+//! configuration and prints the throughput story stage by stage.
+//!
+//! ```bash
+//! cargo run --release --example storage_optimizations
+//! ```
+
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::dwrf::WriterOptions;
+use dsi::paper::harness::{build_world, measure_pipeline, popularity_order};
+use dsi::paper::storage::table12_stages;
+
+fn main() -> anyhow::Result<()> {
+    let rm = RmConfig::get(RmId::Rm1);
+    let scale = SimScale::standard();
+    let seed = 42;
+
+    println!("Table 12 walkthrough — RM1-shaped dataset, real pipeline\n");
+    let probe = build_world(
+        &rm,
+        &scale,
+        WriterOptions {
+            stripe_rows: 128,
+            ..Default::default()
+        },
+        seed,
+    )?;
+    let order = popularity_order(&probe);
+
+    let mut base_dpp = None;
+    let mut base_storage = None;
+    for (name, encoding, reorder, pipeline, _, stripe_mult) in table12_stages() {
+        let writer = WriterOptions {
+            encoding,
+            stripe_rows: 128 * stripe_mult,
+            feature_order: if reorder { Some(order.clone()) } else { None },
+            ..Default::default()
+        };
+        let world = build_world(&rm, &scale, writer, seed)?;
+        let m = measure_pipeline(&world, pipeline, 64, seed)?;
+        let dpp0 = *base_dpp.get_or_insert(m.worker_sps);
+        let st0 = *base_storage.get_or_insert(m.storage_mbps);
+        println!(
+            "{:<9} DPP {:>8.0} rows/s ({:>5.2}x) | storage {:>9.1} MB/s \
+             ({:>5.2}x) | {:>6} I/Os, {:>6} seeks, over-read {:>4.2}x",
+            name,
+            m.worker_sps,
+            m.worker_sps / dpp0,
+            m.storage_mbps,
+            m.storage_mbps / st0,
+            m.storage.reads,
+            m.storage.seeks,
+            m.storage.bytes_read as f64 / m.storage_rx_bytes.max(1) as f64,
+        );
+        match name {
+            "Baseline" => println!("          ^ map encoding: big sequential reads, but decodes every feature"),
+            "+FF" => println!("          ^ feature flattening: reads only projected features — small I/Os crater HDD throughput"),
+            "+FM" => println!("          ^ in-memory flatmap: no row-map reconstruction"),
+            "+LO" => println!("          ^ localized opts: branch-lean decode inner loops"),
+            "+CR" => println!("          ^ coalesced reads: ≤1.25MiB windows amortize seeks (over-reads gaps)"),
+            "+FR" => println!("          ^ feature reordering: popular features adjacent — less over-read"),
+            "+LS" => println!("          ^ large stripes: longer feature streams per seek"),
+            _ => {}
+        }
+    }
+    println!(
+        "\npaper reference: DPP 1.00→2.00→2.30→2.94 (flat after); storage \
+         1.00→0.03→0.03→0.03→0.99→1.84→2.41"
+    );
+    println!(
+        "note: this walkthrough runs at a small interactive scale; the \
+         calibrated production-regime reproduction (wide stripes, 1k \
+         features) is `dsi paper --exp table12`."
+    );
+    Ok(())
+}

@@ -1,0 +1,104 @@
+"""AOT export: lower the L2 DLRM graphs (with their L1 Pallas kernels) to
+HLO **text** artifacts the Rust runtime loads via PJRT.
+
+HLO text — NOT `lowered.compile().serialize()` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run once via `make artifacts`; Python never runs on the request path.
+
+Outputs (in --out-dir):
+  dlrm_fwd.hlo.txt         (*params, batch) -> (loss, logits)
+  dlrm_train_step.hlo.txt  (*params, batch) -> (*new_params, loss)
+  dense_xform.hlo.txt      standalone L1 kernel (for worker-side offload
+                           experiments and runtime smoke tests)
+  manifest.txt             key=value interface description for Rust
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.dense_xform import dense_xform
+from .model import (CFG, PARAM_NAMES, batch_spec, fwd_loss, num_params,
+                    param_shapes, param_specs, train_step)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    pspecs = param_specs()
+    bspecs = batch_spec()
+
+    # --- dlrm_fwd: (*params, dense, ids, mask, labels) -> (loss, logits)
+    def fwd_entry(*args):
+        return fwd_loss(args)
+
+    lowered = jax.jit(fwd_entry).lower(*pspecs, *bspecs)
+    path = os.path.join(out_dir, "dlrm_fwd.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    # --- dlrm_train_step: fused fwd+bwd+SGD
+    lowered = jax.jit(train_step).lower(*pspecs, *bspecs)
+    path = os.path.join(out_dir, "dlrm_train_step.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    # --- standalone dense_xform kernel
+    def dx_entry(x, mean, std):
+        return (dense_xform(x, mean, std),)
+
+    spec = jax.ShapeDtypeStruct((CFG.batch, CFG.n_dense), jnp.float32)
+    vspec = jax.ShapeDtypeStruct((CFG.n_dense,), jnp.float32)
+    lowered = jax.jit(dx_entry).lower(spec, vspec, vspec)
+    path = os.path.join(out_dir, "dense_xform.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    # --- manifest: the positional interface the Rust runtime needs
+    lines = [
+        f"batch={CFG.batch}",
+        f"n_dense={CFG.n_dense}",
+        f"n_sparse={CFG.n_sparse}",
+        f"ids_per_feature={CFG.ids_per_feature}",
+        f"vocab={CFG.vocab}",
+        f"emb_dim={CFG.emb_dim}",
+        f"hidden={CFG.hidden}",
+        f"lr={CFG.lr}",
+        f"num_params={num_params()}",
+        f"param_tensors={len(PARAM_NAMES)}",
+    ]
+    for name, shape in zip(PARAM_NAMES, param_shapes()):
+        lines.append(f"param.{name}={','.join(str(d) for d in shape)}")
+    path = os.path.join(out_dir, "manifest.txt")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    export(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: fused dense-feature normalization.
+
+The DLRM dense path applies a per-feature normalization pipeline
+(paper Table 11: Clamp / Logit / BoxCox-style ops). Done naively this is
+several elementwise passes over the [B, D] dense matrix — several HBM
+round-trips. This kernel fuses the whole pipeline into one VMEM-resident
+pass.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles [B, D] into
+(BLOCK_B, BLOCK_D) VPU-aligned blocks (lanes = 128, sublanes = 8);
+`mean`/`std` are tiled along D only and broadcast across the batch block.
+`interpret=True` everywhere on this image — CPU PJRT cannot run Mosaic
+custom-calls; the kernel's *structure* is what carries to real TPUs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU-friendly tile: 8 sublanes x 128 lanes.
+BLOCK_B = 8
+BLOCK_D = 128
+
+
+def _fwd_kernel(x_ref, mean_ref, std_ref, o_ref):
+    x = x_ref[...]
+    mean = mean_ref[...]
+    std = std_ref[...]
+    z = (x - mean) / std
+    y = jnp.sign(z) * jnp.log1p(jnp.abs(z))
+    o_ref[...] = jnp.clip(y, -8.0, 8.0)
+
+
+def _bwd_kernel(x_ref, mean_ref, std_ref, g_ref, o_ref):
+    """dL/dx for the fused pipeline: fused elementwise, same tiling."""
+    x = x_ref[...]
+    mean = mean_ref[...]
+    std = std_ref[...]
+    g = g_ref[...]
+    z = (x - mean) / std
+    inner = jnp.sign(z) * jnp.log1p(jnp.abs(z))
+    live = (jnp.abs(inner) < 8.0).astype(x.dtype)  # clip pass-through
+    o_ref[...] = g * live / (1.0 + jnp.abs(z)) / std
+
+
+def _tiled_call(kernel, arrs_2d, arrs_1d, b, d, dtype):
+    """Run an elementwise kernel over [B, D] blocks with D-tiled vectors."""
+    pb = (-b) % BLOCK_B
+    pd = (-d) % BLOCK_D
+    padded_2d = [jnp.pad(a, ((0, pb), (0, pd))) for a in arrs_2d]
+    # Vector pads: std-like vectors pad with 1 to avoid /0 in dead lanes.
+    padded_1d = [
+        jnp.pad(a, (0, pd), constant_values=cv) for (a, cv) in arrs_1d
+    ]
+    gb, gd = (b + pb) // BLOCK_B, (d + pd) // BLOCK_D
+    out = pl.pallas_call(
+        kernel,
+        grid=(gb, gd),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, BLOCK_D), lambda i, j: (i, j))
+            for _ in padded_2d[:1]
+        ]
+        + [
+            pl.BlockSpec((BLOCK_D,), lambda i, j: (j,))
+            for _ in padded_1d
+        ]
+        + [
+            pl.BlockSpec((BLOCK_B, BLOCK_D), lambda i, j: (i, j))
+            for _ in padded_2d[1:]
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, BLOCK_D), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(((b + pb), (d + pd)), dtype),
+        interpret=True,
+    )(padded_2d[0], *padded_1d, *padded_2d[1:])
+    return out[:b, :d]
+
+
+@jax.custom_vjp
+def dense_xform(x, mean, std):
+    """Fused normalization of a [B, D] dense-feature matrix.
+
+    Pads to block multiples, runs the Pallas grid, slices back — so any
+    shape works while the kernel itself stays block-aligned. Reverse-mode
+    AD flows through a matching fused Pallas backward kernel.
+    """
+    b, d = x.shape
+    return _tiled_call(
+        _fwd_kernel, [x], [(mean, 0.0), (std, 1.0)], b, d, x.dtype
+    )
+
+
+def _dx_fwd(x, mean, std):
+    return dense_xform(x, mean, std), (x, mean, std)
+
+
+def _dx_bwd(res, g):
+    x, mean, std = res
+    b, d = x.shape
+    dx = _tiled_call(
+        _bwd_kernel, [x, g], [(mean, 0.0), (std, 1.0)], b, d, x.dtype
+    )
+    # mean/std are dataset statistics (constants in the model); exact
+    # cotangents are cheap reductions of dx.
+    z = (x - mean[None, :]) / std[None, :]
+    dmean = -dx.sum(axis=0)
+    dstd = -(dx * z).sum(axis=0)
+    return dx, dmean, dstd
+
+
+dense_xform.defvjp(_dx_fwd, _dx_bwd)
+
+
+def vmem_bytes_per_step(dtype_bytes: int = 4) -> int:
+    """VMEM working set per grid step (for the DESIGN.md §Perf estimate):
+    x block + out block + mean + std tiles."""
+    return (2 * BLOCK_B * BLOCK_D + 2 * BLOCK_D) * dtype_bytes

@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: DLRM dot-product feature interaction.
+
+Computes the per-sample Gram matrix of the (bottom ⊕ embedding-bag)
+vectors — `gram[b] = cat[b] @ cat[b]^T` — the MXU-shaped core of the
+DLRM interaction layer. The upper-triangle extraction (a cheap gather)
+stays in the surrounding jax.
+
+TPU mapping: the grid walks batch blocks; each step issues one batched
+[S+1, E] x [E, S+1] contraction per sample from VMEM. `interpret=True`
+as everywhere on this image (see dense_xform.py). Differentiable via a
+matching Pallas backward kernel: dcat = (g + g^T) @ cat.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 8
+
+
+def _fwd_kernel(cat_ref, o_ref):
+    cat = cat_ref[...]  # [BB, S1, E]
+    o_ref[...] = jnp.einsum(
+        "bie,bje->bij", cat, cat, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _bwd_kernel(cat_ref, g_ref, o_ref):
+    cat = cat_ref[...]
+    g = g_ref[...]  # [BB, S1, S1]
+    gsym = g + jnp.swapaxes(g, 1, 2)
+    o_ref[...] = jnp.einsum(
+        "bij,bje->bie", gsym, cat, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _call(kernel, args, out_shape):
+    b = args[0].shape[0]
+    pb = (-b) % BLOCK_B
+    padded = [jnp.pad(a, ((0, pb),) + ((0, 0),) * (a.ndim - 1)) for a in args]
+    gb = (b + pb) // BLOCK_B
+    out = pl.pallas_call(
+        kernel,
+        grid=(gb,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B,) + a.shape[1:], lambda i: (i,) + (0,) * (a.ndim - 1))
+            for a in padded
+        ],
+        out_specs=pl.BlockSpec(
+            (BLOCK_B,) + out_shape[1:], lambda i: (i,) + (0,) * (len(out_shape) - 1)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b + pb,) + out_shape[1:], jnp.float32),
+        interpret=True,
+    )(*padded)
+    return out[:b]
+
+
+@jax.custom_vjp
+def gram(cat):
+    """Per-sample Gram matrix: [B, S1, E] -> [B, S1, S1]."""
+    b, s1, _ = cat.shape
+    return _call(_fwd_kernel, [cat], (b, s1, s1))
+
+
+def _gram_fwd(cat):
+    return gram(cat), cat
+
+
+def _gram_bwd(cat, g):
+    b, s1, e = cat.shape
+    return (_call(_bwd_kernel, [cat, g], (b, s1, e)),)
+
+
+gram.defvjp(_gram_fwd, _gram_bwd)
+
+
+def interaction(bottom, pooled):
+    """DLRM interaction: upper-triangle pairwise dots of the S+1 vectors.
+
+    bottom [B, E], pooled [B, S, E] -> [B, S(S+1)/2]
+    """
+    s = pooled.shape[1]
+    cat = jnp.concatenate([bottom[:, None, :], pooled], axis=1)
+    gm = gram(cat)
+    iu = jnp.triu_indices(s + 1, k=1)
+    return gm[:, iu[0], iu[1]]
+
+
+def vmem_bytes_per_step(s1: int, e: int, dtype_bytes: int = 4) -> int:
+    """VMEM per grid step: cat block + gram block."""
+    return BLOCK_B * (s1 * e + s1 * s1) * dtype_bytes

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: tiled dense layer (matmul + bias + optional ReLU).
+
+The DLRM bottom/top MLP towers are the model's MXU work. The kernel
+tiles the output [M, N] into (BLOCK_M, BLOCK_N) blocks; each grid step
+loads an [BLOCK_M, K] x-slab and a [K, BLOCK_N] w-slab into VMEM and
+issues one MXU contraction. K is kept whole per step (DLRM tower widths
+here are <= 128, so a K-loop with an accumulator would only add
+scratch traffic; on larger towers, extend the grid with a K axis and a
+VMEM accumulator).
+
+MXU mapping (DESIGN.md §Hardware-Adaptation): BLOCK_M x BLOCK_N = 128 x
+128 matches the MXU systolic array; f32 here, bf16 inputs + f32
+accumulation on real hardware. `interpret=True` for CPU-PJRT (see
+dense_xform.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _mm_impl(x, w, b, relu):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    pm = (-m) % BLOCK_M
+    pn = (-n) % BLOCK_N
+    xp = jnp.pad(x, ((0, pm), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, pn)))
+    bp = jnp.pad(b, (0, pn))
+    gm, gn = xp.shape[0] // BLOCK_M, wp.shape[1] // BLOCK_N
+    out = pl.pallas_call(
+        functools.partial(_kernel, relu=relu),
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BLOCK_N), lambda i, j: (0, j)),
+            pl.BlockSpec((BLOCK_N,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _mm_vjp(x, w, b, relu):
+    return _mm_impl(x, w, b, relu)
+
+
+def _mm_fwd(x, w, b, relu):
+    y = _mm_impl(x, w, b, relu)
+    return y, (x, w, y if relu else None)
+
+
+def _mm_bwd(relu, res, g):
+    x, w, y = res
+    if relu:
+        g = g * (y > 0).astype(g.dtype)
+    zero_n = jnp.zeros((w.shape[0],), g.dtype)
+    zero_k = jnp.zeros((g.shape[1],), g.dtype)
+    # Backward matmuls run through the same Pallas kernel (bias 0, no
+    # activation): dx = g @ w^T, dw = x^T @ g.
+    dx = _mm_impl(g, w.T, zero_n, False)
+    dw = _mm_impl(x.T, g, zero_k, False)
+    db = g.sum(axis=0)
+    return dx, dw, db
+
+
+_mm_vjp.defvjp(_mm_fwd, _mm_bwd)
+
+
+def matmul_bias_relu(x, w, b, relu=True):
+    """[M, K] @ [K, N] + b with optional ReLU, Pallas-tiled over [M, N].
+    Differentiable: backward matmuls reuse the same Pallas kernel."""
+    return _mm_vjp(x, w, b, relu)
+
+
+def vmem_bytes_per_step(k: int, dtype_bytes: int = 4) -> int:
+    """VMEM working set per grid step: x slab + w slab + bias + out block."""
+    return (
+        BLOCK_M * k + k * BLOCK_N + BLOCK_N + BLOCK_M * BLOCK_N
+    ) * dtype_bytes
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int) -> float:
+    """Fraction of MXU-issue slots doing useful work for these dims
+    (padding waste only; assumes perfect pipelining)."""
+    pm = BLOCK_M * -(-m // BLOCK_M)
+    pn = BLOCK_N * -(-n // BLOCK_N)
+    return (m * k * n) / float(pm * k * pn)

@@ -1,0 +1,62 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Everything here is straight-line jax.numpy with no Pallas — the ground
+truth that `pytest python/tests` compares the kernels against.
+"""
+
+import jax.numpy as jnp
+
+
+def dense_xform_ref(x, mean, std):
+    """Fused dense-feature normalization (the DLRM dense path's hot loop).
+
+    Per feature j: z = (x[:, j] - mean[j]) / std[j]; then a signed
+    log1p squash and a clamp — the Logit/BoxCox/Clamp-flavored
+    normalization pipeline of paper Table 11, fused into one pass.
+    """
+    z = (x - mean[None, :]) / std[None, :]
+    y = jnp.sign(z) * jnp.log1p(jnp.abs(z))
+    return jnp.clip(y, -8.0, 8.0)
+
+
+def matmul_bias_relu_ref(x, w, b, *, relu=True):
+    """Dense layer: x @ w + b, optional ReLU."""
+    y = x @ w + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def embedding_bag_ref(emb, ids, mask):
+    """Per-feature embedding-bag sum.
+
+    emb:  [V, E]
+    ids:  [B, S, L] int32 in [0, V)
+    mask: [B, S, L] float (1.0 = real id, 0.0 = padding)
+    returns [B, S, E]
+    """
+    vecs = emb[ids]  # [B, S, L, E]
+    return (vecs * mask[..., None]).sum(axis=2)
+
+
+def interaction_ref(bottom, pooled):
+    """DLRM dot-product feature interaction.
+
+    bottom: [B, E] (dense tower output)
+    pooled: [B, S, E] (embedding bags)
+    returns [B, (S+1)S/2] upper-triangle pairwise dots of the S+1
+    vectors (excluding self-interactions).
+    """
+    s = pooled.shape[1]
+    cat = jnp.concatenate([bottom[:, None, :], pooled], axis=1)  # [B,S+1,E]
+    gram = jnp.einsum("bie,bje->bij", cat, cat)  # [B,S+1,S+1]
+    iu = jnp.triu_indices(s + 1, k=1)
+    return gram[:, iu[0], iu[1]]
+
+
+def bce_with_logits_ref(logits, labels):
+    """Numerically-stable binary cross entropy on logits."""
+    z = logits
+    return jnp.mean(
+        jnp.maximum(z, 0.0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    )

@@ -1,0 +1,167 @@
+"""L2: the DLRM forward/backward in JAX, calling the L1 Pallas kernels.
+
+The model consumes exactly what DPP produces (dense matrix + per-feature
+id lists + labels) and is the paper's "trainer" compute: dense tower →
+embedding bags → dot interaction → top tower → CTR logit (Naumov et al.
+DLRM, the architecture the paper's RMs build on).
+
+Shapes are fixed at AOT time (one compiled executable per model variant;
+see DESIGN.md). Params travel as a flat tuple so the Rust runtime can
+feed/receive them positionally.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dense_xform import dense_xform
+from .kernels.interaction import interaction
+from .kernels.mlp import matmul_bias_relu
+
+
+@dataclass(frozen=True)
+class DlrmConfig:
+    batch: int = 32
+    n_dense: int = 16       # dense features after preprocessing
+    n_sparse: int = 8       # sparse features (embedding bags)
+    ids_per_feature: int = 16  # L: padded id-list length
+    vocab: int = 8192       # hashed id space (SigridHash modulus)
+    emb_dim: int = 16       # E
+    hidden: int = 64
+    lr: float = 0.05
+
+    @property
+    def n_interactions(self) -> int:
+        s = self.n_sparse + 1
+        return s * (s - 1) // 2
+
+    @property
+    def top_in(self) -> int:
+        return self.emb_dim + self.n_interactions
+
+
+CFG = DlrmConfig()
+
+# Flat param order (the Rust runtime indexes these positionally).
+PARAM_NAMES = (
+    "emb",      # [V, E]
+    "w_bot1",   # [D, H]
+    "b_bot1",   # [H]
+    "w_bot2",   # [H, E]
+    "b_bot2",   # [E]
+    "w_top1",   # [E + I, H]
+    "b_top1",   # [H]
+    "w_top2",   # [H, 1]
+    "b_top2",   # [1]
+)
+
+
+def param_shapes(cfg: DlrmConfig = CFG):
+    return (
+        (cfg.vocab, cfg.emb_dim),
+        (cfg.n_dense, cfg.hidden),
+        (cfg.hidden,),
+        (cfg.hidden, cfg.emb_dim),
+        (cfg.emb_dim,),
+        (cfg.top_in, cfg.hidden),
+        (cfg.hidden,),
+        (cfg.hidden, 1),
+        (1,),
+    )
+
+
+def init_params(key, cfg: DlrmConfig = CFG):
+    """Glorot-ish init, returned as a flat tuple of f32 arrays."""
+    shapes = param_shapes(cfg)
+    keys = jax.random.split(key, len(shapes))
+    out = []
+    for k, shape in zip(keys, shapes):
+        if len(shape) == 2:
+            scale = (2.0 / (shape[0] + shape[1])) ** 0.5
+            out.append(scale * jax.random.normal(k, shape, jnp.float32))
+        else:
+            out.append(jnp.zeros(shape, jnp.float32))
+    return tuple(out)
+
+
+def num_params(cfg: DlrmConfig = CFG) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for s in param_shapes(cfg))
+
+
+# Per-feature normalization constants (static: dataset statistics).
+_DENSE_MEAN = jnp.zeros((CFG.n_dense,), jnp.float32)
+_DENSE_STD = 2.0 * jnp.ones((CFG.n_dense,), jnp.float32)
+
+
+def forward(params, dense, ids, mask, cfg: DlrmConfig = CFG):
+    """DLRM forward: returns logits [B]."""
+    (emb, w1, b1, w2, b2, wt1, bt1, wt2, bt2) = params
+    # L1 kernel: fused dense normalization.
+    x = dense_xform(dense, _DENSE_MEAN, _DENSE_STD)
+    # Bottom tower (L1 Pallas matmuls).
+    h = matmul_bias_relu(x, w1, b1, relu=True)
+    bottom = matmul_bias_relu(h, w2, b2, relu=False)  # [B, E]
+    # Embedding bags.
+    vecs = emb[ids]                                   # [B, S, L, E]
+    pooled = (vecs * mask[..., None]).sum(axis=2)     # [B, S, E]
+    # Dot interaction (L1 Pallas gram kernel; triu extracted in jax).
+    inter = interaction(bottom, pooled)               # [B, I]
+    # Top tower.
+    top_in = jnp.concatenate([bottom, inter], axis=1)
+    h2 = matmul_bias_relu(top_in, wt1, bt1, relu=True)
+    logits = matmul_bias_relu(h2, wt2, bt2, relu=False)[:, 0]
+    return logits
+
+
+def loss_fn(params, dense, ids, mask, labels, cfg: DlrmConfig = CFG):
+    logits = forward(params, dense, ids, mask, cfg)
+    z = logits
+    loss = jnp.mean(
+        jnp.maximum(z, 0.0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    )
+    return loss
+
+
+def fwd_loss(params_and_batch_flat, cfg: DlrmConfig = CFG):
+    """AOT entrypoint: (*params, dense, ids, mask, labels) -> (loss, logits)."""
+    params = params_and_batch_flat[: len(PARAM_NAMES)]
+    dense, ids, mask, labels = params_and_batch_flat[len(PARAM_NAMES):]
+    logits = forward(params, dense, ids, mask, cfg)
+    z = logits
+    loss = jnp.mean(
+        jnp.maximum(z, 0.0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    )
+    return (loss, logits)
+
+
+def train_step(*params_and_batch, cfg: DlrmConfig = CFG):
+    """AOT entrypoint: one fused fwd+bwd+SGD step.
+
+    (*params, dense, ids, mask, labels) -> (*new_params, loss)
+    """
+    params = tuple(params_and_batch[: len(PARAM_NAMES)])
+    dense, ids, mask, labels = params_and_batch[len(PARAM_NAMES):]
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, dense, ids, mask, labels, cfg)
+    )(params)
+    new_params = tuple(p - cfg.lr * g for p, g in zip(params, grads))
+    return (*new_params, loss)
+
+
+def batch_spec(cfg: DlrmConfig = CFG):
+    """ShapeDtypeStructs for one input batch (after the params)."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((cfg.batch, cfg.n_dense), f32),                  # dense
+        jax.ShapeDtypeStruct((cfg.batch, cfg.n_sparse, cfg.ids_per_feature), i32),  # ids
+        jax.ShapeDtypeStruct((cfg.batch, cfg.n_sparse, cfg.ids_per_feature), f32),  # mask
+        jax.ShapeDtypeStruct((cfg.batch,), f32),                              # labels
+    )
+
+
+def param_specs(cfg: DlrmConfig = CFG):
+    return tuple(
+        jax.ShapeDtypeStruct(s, jnp.float32) for s in param_shapes(cfg)
+    )

@@ -1,0 +1,208 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (including non-block-aligned ones) and value
+regimes; assert_allclose against the reference is THE core correctness
+signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dense_xform import dense_xform, BLOCK_B, BLOCK_D
+from compile.kernels.mlp import matmul_bias_relu, mxu_utilization_estimate
+from compile.kernels.ref import (bce_with_logits_ref, dense_xform_ref,
+                                 embedding_bag_ref, interaction_ref,
+                                 matmul_bias_relu_ref)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------
+# dense_xform kernel
+# ---------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=40),
+    d=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 100.0]),
+)
+def test_dense_xform_matches_ref(b, d, seed, scale):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = rand(k1, (b, d), scale)
+    mean = rand(k2, (d,))
+    std = jnp.abs(rand(k3, (d,))) + 0.1
+    got = dense_xform(x, mean, std)
+    want = dense_xform_ref(x, mean, std)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dense_xform_exact_block_shape():
+    key = jax.random.PRNGKey(0)
+    x = rand(key, (BLOCK_B * 2, BLOCK_D))
+    mean = jnp.zeros((BLOCK_D,))
+    std = jnp.ones((BLOCK_D,))
+    np.testing.assert_allclose(
+        dense_xform(x, mean, std),
+        dense_xform_ref(x, mean, std),
+        rtol=1e-6,
+    )
+
+
+def test_dense_xform_clamps_extremes():
+    x = jnp.array([[1e30, -1e30]], jnp.float32)
+    mean = jnp.zeros((2,))
+    std = jnp.full((2,), 0.1, jnp.float32)
+    y = dense_xform(x, mean, std)
+    assert float(y[0, 0]) == 8.0
+    assert float(y[0, 1]) == -8.0
+
+
+def test_dense_xform_grad_matches_ref_grad():
+    key = jax.random.PRNGKey(3)
+    x = rand(key, (9, 33))
+    mean = jnp.zeros((33,))
+    std = jnp.ones((33,)) * 1.5
+
+    def f_kernel(x):
+        return dense_xform(x, mean, std).sum()
+
+    def f_ref(x):
+        return dense_xform_ref(x, mean, std).sum()
+
+    gk = jax.grad(f_kernel)(x)
+    gr = jax.grad(f_ref)(x)
+    np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------
+# MLP (tiled matmul) kernel
+# ---------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=70),
+    k=st.integers(min_value=1, max_value=96),
+    n=st.integers(min_value=1, max_value=150),
+    relu=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, relu, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = rand(k1, (m, k))
+    w = rand(k2, (k, n))
+    b = rand(k3, (n,))
+    got = matmul_bias_relu(x, w, b, relu=relu)
+    want = matmul_bias_relu_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_grads_match_ref():
+    key = jax.random.PRNGKey(5)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = rand(k1, (17, 23))
+    w = rand(k2, (23, 31))
+    b = rand(k3, (31,))
+
+    def f_kernel(x, w, b):
+        return (matmul_bias_relu(x, w, b, relu=True) ** 2).sum()
+
+    def f_ref(x, w, b):
+        return (matmul_bias_relu_ref(x, w, b, relu=True) ** 2).sum()
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-3, atol=1e-4)
+
+
+def test_mxu_utilization_estimate_sane():
+    assert mxu_utilization_estimate(128, 64, 128) == pytest.approx(1.0)
+    assert mxu_utilization_estimate(32, 64, 52) < 0.2
+
+
+# ---------------------------------------------------------------------
+# Reference-level invariants (used by the model)
+# ---------------------------------------------------------------------
+
+def test_embedding_bag_masks_padding():
+    emb = jnp.arange(12, dtype=jnp.float32).reshape(6, 2)
+    ids = jnp.array([[[1, 2, 0]]], jnp.int32)  # [1,1,3]
+    mask = jnp.array([[[1.0, 1.0, 0.0]]])
+    out = embedding_bag_ref(emb, ids, mask)
+    np.testing.assert_allclose(out[0, 0], emb[1] + emb[2])
+
+
+def test_interaction_count_and_symmetry():
+    key = jax.random.PRNGKey(1)
+    bottom = rand(key, (4, 8))
+    pooled = rand(key, (4, 3, 8))
+    out = interaction_ref(bottom, pooled)
+    assert out.shape == (4, 6)  # (3+1)*3/2
+
+
+def test_bce_at_zero_logits_is_ln2():
+    logits = jnp.zeros((16,))
+    labels = jnp.array([0.0, 1.0] * 8)
+    assert float(bce_with_logits_ref(logits, labels)) == pytest.approx(
+        float(jnp.log(2.0)), rel=1e-6
+    )
+
+
+# ---------------------------------------------------------------------
+# Interaction (gram) kernel
+# ---------------------------------------------------------------------
+
+from compile.kernels.interaction import gram, interaction  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=20),
+    s=st.integers(min_value=1, max_value=9),
+    e=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_interaction_matches_ref(b, s, e, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    bottom = rand(k1, (b, e))
+    pooled = rand(k2, (b, s, e))
+    got = interaction(bottom, pooled)
+    want = interaction_ref(bottom, pooled)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_gram_is_symmetric():
+    key = jax.random.PRNGKey(9)
+    cat = rand(key, (6, 5, 8))
+    g = gram(cat)
+    np.testing.assert_allclose(g, np.swapaxes(g, 1, 2), rtol=1e-6)
+
+
+def test_interaction_grads_match_ref():
+    key = jax.random.PRNGKey(10)
+    k1, k2 = jax.random.split(key)
+    bottom = rand(k1, (7, 8))
+    pooled = rand(k2, (7, 4, 8))
+
+    def f_kernel(b, p):
+        return (interaction(b, p) ** 2).sum()
+
+    def f_ref(b, p):
+        return (interaction_ref(b, p) ** 2).sum()
+
+    gk = jax.grad(f_kernel, argnums=(0, 1))(bottom, pooled)
+    gr = jax.grad(f_ref, argnums=(0, 1))(bottom, pooled)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-3, atol=1e-5)

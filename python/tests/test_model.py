@@ -1,0 +1,139 @@
+"""L2 correctness: DLRM model shapes, loss behaviour, and the AOT
+entrypoints' (fwd / train_step) agreement with an all-reference model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import (bce_with_logits_ref, dense_xform_ref,
+                                 embedding_bag_ref, interaction_ref,
+                                 matmul_bias_relu_ref)
+from compile.model import (CFG, PARAM_NAMES, batch_spec, forward, fwd_loss,
+                           init_params, loss_fn, num_params, param_shapes,
+                           train_step)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_batch(seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    dense = jax.random.normal(k1, (CFG.batch, CFG.n_dense), jnp.float32)
+    ids = jax.random.randint(
+        k2, (CFG.batch, CFG.n_sparse, CFG.ids_per_feature), 0, CFG.vocab
+    )
+    mask = (
+        jax.random.uniform(k3, (CFG.batch, CFG.n_sparse, CFG.ids_per_feature))
+        < 0.8
+    ).astype(jnp.float32)
+    labels = (dense[:, 0] > 0).astype(jnp.float32)
+    return dense, ids, mask, labels
+
+
+def reference_forward(params, dense, ids, mask):
+    """The whole model with reference ops only (no Pallas)."""
+    emb, w1, b1, w2, b2, wt1, bt1, wt2, bt2 = params
+    mean = jnp.zeros((CFG.n_dense,), jnp.float32)
+    std = 2.0 * jnp.ones((CFG.n_dense,), jnp.float32)
+    x = dense_xform_ref(dense, mean, std)
+    h = matmul_bias_relu_ref(x, w1, b1, relu=True)
+    bottom = matmul_bias_relu_ref(h, w2, b2, relu=False)
+    pooled = embedding_bag_ref(emb, ids, mask)
+    inter = interaction_ref(bottom, pooled)
+    top_in = jnp.concatenate([bottom, inter], axis=1)
+    h2 = matmul_bias_relu_ref(top_in, wt1, bt1, relu=True)
+    return matmul_bias_relu_ref(h2, wt2, bt2, relu=False)[:, 0]
+
+
+def test_param_shapes_consistent():
+    assert len(PARAM_NAMES) == len(param_shapes())
+    params = init_params(jax.random.PRNGKey(0))
+    for p, shape in zip(params, param_shapes()):
+        assert p.shape == shape
+    total = sum(int(np.prod(s)) for s in param_shapes())
+    assert total == num_params()
+
+
+def test_forward_shape_and_finiteness():
+    params = init_params(jax.random.PRNGKey(1))
+    dense, ids, mask, labels = make_batch(1)
+    logits = forward(params, dense, ids, mask)
+    assert logits.shape == (CFG.batch,)
+    assert bool(jnp.isfinite(logits).all())
+    loss = loss_fn(params, dense, ids, mask, labels)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_pallas_model_matches_reference_model():
+    params = init_params(jax.random.PRNGKey(2))
+    dense, ids, mask, _ = make_batch(2)
+    got = forward(params, dense, ids, mask)
+    want = reference_forward(params, dense, ids, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fwd_loss_entry_matches_loss_fn():
+    params = init_params(jax.random.PRNGKey(3))
+    dense, ids, mask, labels = make_batch(3)
+    loss_a, logits = fwd_loss((*params, dense, ids, mask, labels))
+    loss_b = loss_fn(params, dense, ids, mask, labels)
+    assert float(loss_a) == pytest.approx(float(loss_b), rel=1e-6)
+    ref = bce_with_logits_ref(logits, labels)
+    assert float(loss_a) == pytest.approx(float(ref), rel=1e-5)
+
+
+def test_train_step_descends_on_fixed_batch():
+    params = init_params(jax.random.PRNGKey(4))
+    dense, ids, mask, labels = make_batch(4)
+    step = jax.jit(train_step)
+    loss0 = float(loss_fn(params, dense, ids, mask, labels))
+    p = params
+    losses = []
+    for _ in range(40):
+        out = step(*p, dense, ids, mask, labels)
+        p, loss = out[:-1], out[-1]
+        losses.append(float(loss))
+    assert losses[-1] < loss0 * 0.92, f"{loss0} -> {losses[-1]}"
+    # Monotone-ish: strictly below start for the whole back half.
+    assert all(l < loss0 for l in losses[20:])
+
+
+def test_train_step_generalizes_across_batches():
+    params = init_params(jax.random.PRNGKey(5))
+    step = jax.jit(train_step)
+    p = params
+    losses = []
+    for s in range(50):
+        dense, ids, mask, labels = make_batch(100 + s)
+        out = step(*p, dense, ids, mask, labels)
+        p, loss = out[:-1], out[-1]
+        losses.append(float(loss))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.97, losses
+
+
+def test_gradients_match_reference_model_gradients():
+    params = init_params(jax.random.PRNGKey(6))
+    dense, ids, mask, labels = make_batch(6)
+
+    def loss_pallas(p):
+        return loss_fn(p, dense, ids, mask, labels)
+
+    def loss_ref(p):
+        logits = reference_forward(p, dense, ids, mask)
+        return bce_with_logits_ref(logits, labels)
+
+    gp = jax.grad(loss_pallas)(params)
+    gr = jax.grad(loss_ref)(params)
+    for name, a, b in zip(PARAM_NAMES, gp, gr):
+        np.testing.assert_allclose(
+            a, b, rtol=1e-3, atol=1e-5, err_msg=f"grad mismatch: {name}"
+        )
+
+
+def test_batch_spec_matches_make_batch():
+    specs = batch_spec()
+    batch = make_batch(7)
+    for spec, arr in zip(specs, batch):
+        assert spec.shape == arr.shape
+        assert spec.dtype == arr.dtype

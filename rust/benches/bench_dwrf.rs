@@ -1,0 +1,136 @@
+//! DWRF format benchmarks: write, plan, decode (map vs flattened;
+//! checked vs fast decode; rows vs flatmap output) — the micro-level
+//! levers behind Table 12's DPP row.
+
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::datagen::{generate_partition_samples, materialized_schema};
+use dsi::dwrf::{
+    DecodeMode, DwrfReader, DwrfWriter, Encoding, Projection, WriterOptions,
+};
+use dsi::schema::FeatureId;
+use dsi::util::rng::Pcg32;
+use dsi::util::timing::Bench;
+
+fn main() {
+    let rm = RmConfig::get(RmId::Rm1);
+    let scale = SimScale::bench();
+    let mut rng = Pcg32::new(11);
+    let schema = materialized_schema(&mut rng, &rm, &scale);
+    let samples = generate_partition_samples(&mut rng, &schema, 2048, 0);
+    let dense_ids: Vec<FeatureId> = schema.dense().map(|f| f.id).collect();
+    let sparse_ids: Vec<FeatureId> = schema.sparse().map(|f| f.id).collect();
+    let take = (schema.features.len() as f64 * rm.frac_feats_used()).round() as usize;
+    let projection = Projection::new(
+        schema.sample_projection(&mut rng, take, rm.popularity_zipf_s),
+    );
+
+    let build = |encoding: Encoding| -> Vec<u8> {
+        let mut w = DwrfWriter::new(
+            "bench",
+            dense_ids.clone(),
+            sparse_ids.clone(),
+            WriterOptions {
+                encoding,
+                stripe_rows: 512,
+                ..Default::default()
+            },
+        );
+        w.write_all(samples.clone());
+        w.finish()
+    };
+
+    Bench::print_header("DWRF write (2048 rows, 256 features)");
+    let mut b = Bench::new();
+    for (name, enc) in [("write/map", Encoding::Map), ("write/flattened", Encoding::Flattened)] {
+        b.run(name, || {
+            let bytes = build(enc);
+            let n = bytes.len() as u64;
+            std::hint::black_box(bytes);
+            n
+        });
+    }
+
+    let map_file = build(Encoding::Map);
+    let flat_file = build(Encoding::Flattened);
+    println!(
+        "file sizes: map {} B, flattened {} B ({:+.1}% — the paper's FF \
+         cost was +12% storage)",
+        map_file.len(),
+        flat_file.len(),
+        (flat_file.len() as f64 / map_file.len() as f64 - 1.0) * 100.0
+    );
+
+    Bench::print_header("DWRF plan + decode under projection");
+    let map_reader = DwrfReader::open_table(&map_file, "bench").unwrap();
+    let flat_reader = DwrfReader::open_table(&flat_file, "bench").unwrap();
+    let map_plan = map_reader.plan(&projection, None);
+    let flat_plan = flat_reader.plan(&projection, None);
+    let flat_plan_cr = flat_reader.plan(&projection, Some(1_310_720));
+    println!(
+        "plan: map reads {} B in {} I/Os; flattened {} B in {} I/Os; +CR {} \
+         I/Os ({:.2}x over-read)",
+        map_plan.read_bytes,
+        map_plan.num_ios(),
+        flat_plan.read_bytes,
+        flat_plan.num_ios(),
+        flat_plan_cr.num_ios(),
+        flat_plan_cr.overread()
+    );
+    let map_bufs = map_reader.fetch_local(&map_file, &map_plan);
+    let flat_bufs = flat_reader.fetch_local(&flat_file, &flat_plan);
+
+    b.run("decode/map->rows", || {
+        let mut n = 0u64;
+        for s in 0..map_reader.meta.stripes.len() {
+            let rows = map_reader
+                .decode_stripe_rows(s, &map_bufs, &projection, DecodeMode::default())
+                .unwrap();
+            n += rows.len() as u64;
+            std::hint::black_box(rows);
+        }
+        n * 100
+    });
+    b.run("decode/flat->rows (no FM)", || {
+        let mut n = 0u64;
+        for s in 0..flat_reader.meta.stripes.len() {
+            let rows = flat_reader
+                .decode_stripe_rows(s, &flat_bufs, &projection, DecodeMode::default())
+                .unwrap();
+            n += rows.len() as u64;
+            std::hint::black_box(rows);
+        }
+        n * 100
+    });
+    b.run("decode/flat->columnar (FM) checked", || {
+        let mut n = 0u64;
+        for s in 0..flat_reader.meta.stripes.len() {
+            let batch = flat_reader
+                .decode_stripe_columnar(
+                    s,
+                    &flat_bufs,
+                    &projection,
+                    DecodeMode { fast: false },
+                )
+                .unwrap();
+            n += batch.num_rows as u64;
+            std::hint::black_box(batch);
+        }
+        n * 100
+    });
+    b.run("decode/flat->columnar (FM) fast (LO)", || {
+        let mut n = 0u64;
+        for s in 0..flat_reader.meta.stripes.len() {
+            let batch = flat_reader
+                .decode_stripe_columnar(
+                    s,
+                    &flat_bufs,
+                    &projection,
+                    DecodeMode { fast: true },
+                )
+                .unwrap();
+            n += batch.num_rows as u64;
+            std::hint::black_box(batch);
+        }
+        n * 100
+    });
+}

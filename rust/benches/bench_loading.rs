@@ -1,0 +1,94 @@
+//! Trainer-side data-loading benchmark (Fig 8's datacenter tax):
+//! serialize / encrypt / decrypt / deserialize tensor batches, and the
+//! PJRT ingestion path when artifacts are present.
+
+use dsi::dpp::TensorBatch;
+use dsi::dwrf::crypto::StreamCipher;
+use dsi::paper::harness::measure_loading_cost_per_byte;
+use dsi::runtime::{artifacts_available, artifacts_dir, DlrmBatch, DlrmRuntime};
+use dsi::schema::FeatureId;
+use dsi::util::rng::Pcg32;
+use dsi::util::timing::Bench;
+
+fn make_batch(rng: &mut Pcg32, rows: usize) -> TensorBatch {
+    let n_dense = 64;
+    let mut sparse = Vec::new();
+    for s in 0..16u32 {
+        let mut offsets = vec![0u32];
+        let mut ids = Vec::new();
+        for _ in 0..rows {
+            let n = rng.below(30) as usize;
+            for _ in 0..n {
+                ids.push(rng.below(1 << 20));
+            }
+            offsets.push(ids.len() as u32);
+        }
+        sparse.push((FeatureId(1000 + s), offsets, ids));
+    }
+    TensorBatch {
+        rows,
+        dense: (0..rows * n_dense).map(|_| rng.f32()).collect(),
+        dense_names: (0..n_dense as u32).map(FeatureId).collect(),
+        sparse,
+        labels: vec![0.5; rows],
+    }
+}
+
+fn main() {
+    let mut rng = Pcg32::new(3);
+    let tb = make_batch(&mut rng, 64);
+    let cipher = StreamCipher::for_table("bench");
+    let wire = tb.to_wire(&cipher, 1);
+    println!("wire batch: {} rows, {} bytes", tb.rows, wire.len());
+
+    Bench::print_header("client loading path (Fig 8 tax components)");
+    let mut b = Bench::new();
+    let n = wire.len() as u64;
+    b.run("serialize", || {
+        std::hint::black_box(tb.serialize());
+        n
+    });
+    b.run("serialize+encrypt (worker tx)", || {
+        std::hint::black_box(tb.to_wire(&cipher, 1));
+        n
+    });
+    b.run("decrypt+deserialize (client rx)", || {
+        std::hint::black_box(TensorBatch::from_wire(&cipher, 1, &wire).unwrap());
+        n
+    });
+    let plain = tb.serialize();
+    b.run("deserialize only", || {
+        std::hint::black_box(TensorBatch::deserialize(&plain).unwrap());
+        n
+    });
+    let per_byte = measure_loading_cost_per_byte(3);
+    println!(
+        "measured loading cost: {:.2} ns/byte → at RM1's 16.5 GB/s a \
+         V100-node would spend {:.1} cores on loading",
+        per_byte * 1e9,
+        16.5e9 * per_byte / dsi::resources::HOST_CORE_EQUIV
+    );
+
+    if artifacts_available() {
+        Bench::print_header("PJRT ingestion (tensor batch → DLRM step)");
+        let rt = DlrmRuntime::load(&artifacts_dir()).unwrap();
+        let mut params = rt.init_params(1).unwrap();
+        let batch = DlrmBatch::synthetic(&rt.manifest, &mut rng);
+        // Warm-up + measure steps/s.
+        let t = std::time::Instant::now();
+        let steps = 30;
+        for _ in 0..steps {
+            let (p, _) = rt.train_step(params, &batch).unwrap();
+            params = p;
+        }
+        let dt = t.elapsed().as_secs_f64();
+        println!(
+            "train_step: {:.1} steps/s ({:.0} samples/s, batch {})",
+            steps as f64 / dt,
+            steps as f64 * rt.manifest.batch as f64 / dt,
+            rt.manifest.batch
+        );
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT bench)");
+    }
+}

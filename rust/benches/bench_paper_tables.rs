@@ -1,0 +1,23 @@
+//! One-shot regeneration of every paper table/figure (`cargo bench`
+//! umbrella target). Equivalent to `dsi paper --exp all` at standard
+//! scale — prints the paper's reported rows next to measured values.
+
+use dsi::config::SimScale;
+use dsi::paper;
+
+fn main() {
+    let scale = SimScale::standard();
+    let seed = 42;
+    match paper::run_all(&scale, seed) {
+        Ok(json) => {
+            let path = "target/paper_results.json";
+            if std::fs::write(path, json.to_string_pretty()).is_ok() {
+                println!("\nwrote {path}");
+            }
+        }
+        Err(e) => {
+            eprintln!("paper harness failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

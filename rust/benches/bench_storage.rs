@@ -1,0 +1,142 @@
+//! Storage-device model benchmarks: HDD vs SSD service under the I/O
+//! patterns each Table 12 stage produces, plus raw cluster throughput.
+
+use dsi::config::{DeviceSpec, SimScale};
+use dsi::config::{RmConfig, RmId};
+use dsi::dpp::PipelineOptions;
+use dsi::dwrf::plan::COALESCE_WINDOW;
+use dsi::dwrf::WriterOptions;
+use dsi::paper::harness::{build_world, measure_pipeline, popularity_order};
+use dsi::tectonic::{Cluster, ClusterConfig};
+use dsi::util::timing::Bench;
+
+fn main() {
+    // Raw device model: service times for the canonical patterns.
+    Bench::print_header("device model service times");
+    for dev in [DeviceSpec::hdd(), DeviceSpec::ssd()] {
+        let small_random = dev.service_time(23_000, false);
+        let coalesced = dev.service_time(1_250_000, false);
+        let chunk_seq = dev.service_time(8 << 20, true);
+        println!(
+            "{:<14} 23KB random {:>8.2} ms | 1.25MB coalesced {:>7.2} ms | \
+             8MB sequential {:>7.2} ms | max 4K IOPS {:>7.0}",
+            dev.name,
+            small_random * 1e3,
+            coalesced * 1e3,
+            chunk_seq * 1e3,
+            dev.max_iops_4k()
+        );
+    }
+
+    // Cluster read throughput (actual bytes + simulated device time).
+    Bench::print_header("tectonic cluster reads (device-time accounted)");
+    let cluster = Cluster::new(ClusterConfig::default());
+    let f = cluster.create("bench");
+    let data = vec![0xA5u8; 32 << 20];
+    cluster.append(f, &data).unwrap();
+    let mut b = Bench::new();
+    b.run("read 8MB sequential-ish", || {
+        cluster
+            .read_range(
+                f,
+                dsi::dwrf::IoRange {
+                    offset: 0,
+                    len: 8 << 20,
+                },
+            )
+            .unwrap();
+        8 << 20
+    });
+    b.run("read 64x 20KB scattered", || {
+        for i in 0..64u64 {
+            cluster
+                .read_range(
+                    f,
+                    dsi::dwrf::IoRange {
+                        offset: (i * 517_123) % (30 << 20),
+                        len: 20_000,
+                    },
+                )
+                .unwrap();
+        }
+        64 * 20_000
+    });
+    let st = cluster.stats();
+    println!(
+        "cluster device accounting: {} reads, {} seeks, {:.1} device-sec, \
+         {:.1} MB/s effective",
+        st.reads,
+        st.seeks,
+        st.device_secs,
+        st.read_mbps()
+    );
+
+    // End-to-end storage throughput per Table 12 layout (one partition).
+    Bench::print_header("storage throughput by layout (RM1, Table 12 storage row)");
+    let rm = RmConfig::get(RmId::Rm1);
+    let scale = SimScale {
+        rows_per_partition: 2048,
+        materialized_features: 256,
+        partitions: 2,
+    };
+    let probe = build_world(&rm, &scale, WriterOptions::default(), 5).unwrap();
+    let order = popularity_order(&probe);
+    let stages: Vec<(&str, WriterOptions, Option<u64>)> = vec![
+        (
+            "map (baseline)",
+            WriterOptions {
+                encoding: dsi::dwrf::Encoding::Map,
+                stripe_rows: 128,
+                ..Default::default()
+            },
+            None,
+        ),
+        (
+            "FF",
+            WriterOptions {
+                stripe_rows: 128,
+                ..Default::default()
+            },
+            None,
+        ),
+        (
+            "FF+CR",
+            WriterOptions {
+                stripe_rows: 128,
+                ..Default::default()
+            },
+            Some(COALESCE_WINDOW),
+        ),
+        (
+            "FF+CR+FR",
+            WriterOptions {
+                stripe_rows: 128,
+                feature_order: Some(order.clone()),
+                ..Default::default()
+            },
+            Some(COALESCE_WINDOW),
+        ),
+        (
+            "FF+CR+FR+LS",
+            WriterOptions {
+                stripe_rows: 1024,
+                feature_order: Some(order),
+                ..Default::default()
+            },
+            Some(COALESCE_WINDOW),
+        ),
+    ];
+    for (name, writer, window) in stages {
+        let world = build_world(&rm, &scale, writer, 5).unwrap();
+        let pipeline = PipelineOptions {
+            coalesce: window,
+            ..Default::default()
+        };
+        let m = measure_pipeline(&world, pipeline, 64, 5).unwrap();
+        println!(
+            "{:<14} {:>9.1} MB/s storage | {:>7} reads | {:>7} seeks | \
+             {:>8.0} rows/s worker",
+            name, m.storage_mbps, m.storage.reads, m.storage.seeks, m.worker_sps
+        );
+    }
+}

@@ -1,0 +1,155 @@
+//! Per-op transform microbenchmarks (Table 11's ops) + the §6.4 cycle
+//! split on a representative session DAG.
+
+use dsi::config::{RmConfig, RmId};
+use dsi::data::ColumnarBatch;
+use dsi::datagen::generate_partition_samples;
+use dsi::schema::{FeatureId, FeatureKind, Schema};
+use dsi::transforms::dag::session_dag;
+use dsi::transforms::{Op, OpClass, Value};
+use dsi::util::rng::Pcg32;
+use dsi::util::timing::Bench;
+
+fn sparse_value(rng: &mut Pcg32, rows: usize, avg_len: usize) -> Value {
+    let mut offsets = vec![0u32];
+    let mut ids = Vec::new();
+    for _ in 0..rows {
+        let n = rng.range(1, (avg_len * 2) as u64) as usize;
+        for _ in 0..n {
+            ids.push(rng.below(1 << 20));
+        }
+        offsets.push(ids.len() as u32);
+    }
+    Value::Sparse {
+        offsets,
+        ids,
+        scores: None,
+    }
+}
+
+fn main() {
+    let mut rng = Pcg32::new(1);
+    let rows = 512;
+    let dense = Value::Dense((0..rows).map(|_| rng.f32() * 4.0 - 2.0).collect());
+    let sparse = sparse_value(&mut rng, rows, 26);
+    let sparse2 = sparse_value(&mut rng, rows, 26);
+
+    Bench::print_header("transform ops (512-row batch, Table 11)");
+    let mut b = Bench::new();
+    let ops: Vec<(&str, Op, Vec<&Value>)> = vec![
+        ("Clamp", Op::Clamp { lo: -1.0, hi: 1.0 }, vec![&dense]),
+        ("Logit", Op::Logit { eps: 1e-4 }, vec![&dense]),
+        ("BoxCox", Op::BoxCox { lambda: 0.5 }, vec![&dense]),
+        ("Onehot", Op::Onehot { buckets: 64 }, vec![&dense]),
+        (
+            "GetLocalHour",
+            Op::GetLocalHour {
+                tz_offset_secs: -28800,
+            },
+            vec![&dense],
+        ),
+        (
+            "Bucketize",
+            Op::Bucketize {
+                borders: (0..32).map(|i| i as f32 / 8.0 - 2.0).collect(),
+            },
+            vec![&dense],
+        ),
+        (
+            "SigridHash",
+            Op::SigridHash {
+                salt: 3,
+                modulus: 1 << 16,
+            },
+            vec![&sparse],
+        ),
+        ("FirstX", Op::FirstX { x: 16 }, vec![&sparse]),
+        (
+            "PositiveModulus",
+            Op::PositiveModulus { modulus: 1000 },
+            vec![&sparse],
+        ),
+        ("Enumerate", Op::Enumerate, vec![&sparse]),
+        (
+            "ComputeScore",
+            Op::ComputeScore { mul: 2.0, add: 0.5 },
+            vec![&sparse],
+        ),
+        (
+            "MapId",
+            Op::MapId {
+                mapping: Default::default(),
+                default: 1,
+            },
+            vec![&sparse],
+        ),
+        ("NGram", Op::NGram { n: 2 }, vec![&sparse]),
+        ("Cartesian", Op::Cartesian, vec![&sparse, &sparse2]),
+        (
+            "IdListTransform",
+            Op::IdListTransform,
+            vec![&sparse, &sparse2],
+        ),
+        (
+            "Sampling",
+            Op::Sampling { rate: 0.5, seed: 1 },
+            vec![&sparse],
+        ),
+    ];
+    for (name, op, inputs) in &ops {
+        let bytes = inputs.iter().map(|v| v.elements() * 8).sum::<usize>() as u64;
+        b.run(name, || {
+            let out = op.apply(inputs).unwrap();
+            std::hint::black_box(&out);
+            bytes
+        });
+    }
+
+    // §6.4 cycle split on a full session DAG.
+    Bench::print_header("session DAG cycle split (per RM, §6.4)");
+    for id in RmId::ALL {
+        let rm = RmConfig::get(id);
+        let mut rng = Pcg32::new(7);
+        let schema =
+            Schema::synthetic(&mut rng, 120, 60, rm.avg_coverage, rm.avg_sparse_len);
+        let samples = generate_partition_samples(&mut rng, &schema, 256, 0);
+        let proj: Vec<FeatureId> =
+            schema.features.iter().take(40).map(|f| f.id).collect();
+        let dense_ids: Vec<FeatureId> = proj
+            .iter()
+            .filter(|f| {
+                matches!(
+                    schema.by_id(**f).map(|d| d.kind),
+                    Some(FeatureKind::Dense)
+                )
+            })
+            .copied()
+            .collect();
+        let sparse_ids: Vec<FeatureId> = proj
+            .iter()
+            .filter(|f| {
+                !matches!(
+                    schema.by_id(**f).map(|d| d.kind),
+                    Some(FeatureKind::Dense)
+                )
+            })
+            .copied()
+            .collect();
+        let batch = ColumnarBatch::from_samples(&samples, &dense_ids, &sparse_ids);
+        let dag = session_dag(&mut rng, &rm, &schema, &proj);
+        let (_, stats) = dag.execute(&batch).unwrap();
+        let mut agg = stats;
+        for _ in 0..4 {
+            let (_, s) = dag.execute(&batch).unwrap();
+            agg.merge(&s);
+        }
+        println!(
+            "{}: feature-gen {:.0}% | sparse-norm {:.0}% | dense-norm {:.0}% \
+             (paper: ~75/20/5)",
+            rm.id.name(),
+            agg.class_frac(OpClass::FeatureGen) * 100.0,
+            agg.class_frac(OpClass::SparseNorm) * 100.0,
+            agg.class_frac(OpClass::DenseNorm) * 100.0,
+        );
+    }
+}

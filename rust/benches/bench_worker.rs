@@ -1,0 +1,66 @@
+//! End-to-end DPP worker pipeline benchmark per RM (Table 9's kQPS and
+//! byte-rate columns) and the threaded-session throughput scaling.
+
+use dsi::config::{NodeSpec, RmConfig, SimScale};
+use dsi::dpp::{PipelineOptions, Session, SessionConfig, SessionSpec};
+use dsi::dwrf::{Projection, WriterOptions};
+use dsi::paper::harness::{build_world, measure_pipeline};
+use dsi::resources::saturation;
+use dsi::transforms::dag::session_dag;
+use dsi::util::rng::Pcg32;
+
+fn main() {
+    let scale = SimScale {
+        rows_per_partition: 2048,
+        materialized_features: 256,
+        partitions: 2,
+    };
+    println!("\n=== worker pipeline per RM (single thread, real bytes) ===");
+    for rm in RmConfig::all() {
+        let world = build_world(&rm, &scale, WriterOptions::default(), 9).unwrap();
+        let m = measure_pipeline(&world, PipelineOptions::default(), 64, 9).unwrap();
+        let sat = saturation(&m.cost, &NodeSpec::c_v1());
+        println!(
+            "{}: {:>8.0} rows/s measured | cpu/sample {:>8.1} µs | \
+             storage rx {:>6.1} KB/sample | tensor tx {:>6.1} KB/sample | \
+             C-v1 saturation {:>8.0} rows/s ({})",
+            rm.id.name(),
+            m.worker_sps,
+            m.cost.cpu_secs * 1e6,
+            m.cost.net_rx_bytes / 1e3,
+            m.cost.net_tx_bytes / 1e3,
+            sat.max_samples_per_sec,
+            sat.bottleneck.name(),
+        );
+    }
+
+    println!("\n=== threaded session scaling (RM3) ===");
+    let rm = RmConfig::get(dsi::config::RmId::Rm3);
+    let world = build_world(&rm, &scale, WriterOptions::default(), 9).unwrap();
+    for workers in [1usize, 2, 4] {
+        let mut rng = Pcg32::new(17);
+        let dag = session_dag(&mut rng, &rm, &world.schema, &world.projection);
+        let mut spec =
+            SessionSpec::from_dag(&world.table, 0, u32::MAX, dag, 64);
+        spec.projection = Projection::new(world.projection.iter().copied());
+        let report = Session::run(
+            &world.catalog,
+            &world.cluster,
+            spec,
+            &SessionConfig {
+                initial_workers: workers,
+                max_workers: workers,
+                clients: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        println!(
+            "{} workers: {:>8.0} rows/s wall | {} rows | stall {:.3}s",
+            workers,
+            report.rows_per_sec,
+            report.rows_delivered,
+            report.client_stall_secs
+        );
+    }
+}

@@ -1,0 +1,250 @@
+//! Hardware specifications: DPP compute nodes (paper Table 10), storage
+//! devices (§5.1/§7.1–7.2), and the GPU trainer node (§2/§6).
+//!
+//! These feed the resource model (`resources`), the storage device model
+//! (`tectonic`), and the power model (`power`).
+
+/// A general-purpose compute server class used for DPP Workers (Table 10).
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub name: &'static str,
+    pub physical_cores: u32,
+    pub nic_gbps: f64,
+    pub memory_gb: f64,
+    pub peak_mem_bw_gbps: f64, // GB/s
+    /// Typical operating power draw (watts) for the power model. Not from
+    /// the paper's table; representative single-socket server values.
+    pub watts: f64,
+}
+
+impl NodeSpec {
+    pub fn mem_bw_per_core(&self) -> f64 {
+        self.peak_mem_bw_gbps / self.physical_cores as f64
+    }
+
+    pub fn nic_bw_per_core(&self) -> f64 {
+        self.nic_gbps / self.physical_cores as f64
+    }
+
+    pub const fn c_v1() -> NodeSpec {
+        NodeSpec {
+            name: "C-v1",
+            physical_cores: 18,
+            nic_gbps: 12.5,
+            memory_gb: 64.0,
+            peak_mem_bw_gbps: 75.0,
+            watts: 300.0,
+        }
+    }
+
+    pub const fn c_v2() -> NodeSpec {
+        NodeSpec {
+            name: "C-v2",
+            physical_cores: 26,
+            nic_gbps: 25.0,
+            memory_gb: 64.0,
+            peak_mem_bw_gbps: 92.0,
+            watts: 350.0,
+        }
+    }
+
+    pub const fn c_v3() -> NodeSpec {
+        NodeSpec {
+            name: "C-v3",
+            physical_cores: 36,
+            nic_gbps: 25.0,
+            memory_gb: 64.0,
+            peak_mem_bw_gbps: 83.0,
+            watts: 400.0,
+        }
+    }
+
+    pub const fn c_vsota() -> NodeSpec {
+        NodeSpec {
+            name: "C-vSotA",
+            physical_cores: 64,
+            nic_gbps: 100.0,
+            memory_gb: 1024.0,
+            peak_mem_bw_gbps: 205.0,
+            watts: 650.0,
+        }
+    }
+
+    pub fn all_generations() -> Vec<NodeSpec> {
+        vec![Self::c_v1(), Self::c_v2(), Self::c_v3(), Self::c_vsota()]
+    }
+}
+
+/// Storage medium behaviour model. The paper's storage findings hinge on
+/// HDD seek behaviour under small I/O (Table 6 + Table 12: feature
+/// flattening cut storage throughput 97% before coalesced reads).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MediaKind {
+    Hdd,
+    Ssd,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub kind: MediaKind,
+    pub name: &'static str,
+    /// Average positioning time per random I/O (seek + rotational latency).
+    pub seek_ms: f64,
+    /// Sequential transfer rate, MB/s.
+    pub transfer_mbps: f64,
+    /// Capacity in TB.
+    pub capacity_tb: f64,
+    /// Operating power, watts.
+    pub watts: f64,
+}
+
+impl DeviceSpec {
+    /// A nearline datacenter HDD.
+    pub const fn hdd() -> DeviceSpec {
+        DeviceSpec {
+            kind: MediaKind::Hdd,
+            name: "HDD-nearline",
+            seek_ms: 8.0,
+            transfer_mbps: 180.0,
+            capacity_tb: 14.0,
+            watts: 8.0,
+        }
+    }
+
+    /// A datacenter NVMe SSD.
+    pub const fn ssd() -> DeviceSpec {
+        DeviceSpec {
+            kind: MediaKind::Ssd,
+            name: "SSD-nvme",
+            seek_ms: 0.02,
+            transfer_mbps: 2800.0,
+            capacity_tb: 4.0,
+            watts: 12.0,
+        }
+    }
+
+    /// Max random 4K IOPS implied by the seek model.
+    pub fn max_iops_4k(&self) -> f64 {
+        let per_io_s = self.seek_ms / 1e3 + 4096.0 / (self.transfer_mbps * 1e6);
+        1.0 / per_io_s
+    }
+
+    pub fn iops_per_watt(&self) -> f64 {
+        self.max_iops_4k() / self.watts
+    }
+
+    pub fn capacity_per_watt_tb(&self) -> f64 {
+        self.capacity_tb / self.watts
+    }
+
+    /// Service time (seconds) for one I/O of `len` bytes; `sequential`
+    /// suppresses the positioning cost (head already in place).
+    pub fn service_time(&self, len: u64, sequential: bool) -> f64 {
+        let pos = if sequential { 0.0 } else { self.seek_ms / 1e3 };
+        pos + len as f64 / (self.transfer_mbps * 1e6)
+    }
+}
+
+/// ZionEX-like GPU training node (§2): 8 GPUs, 4 CPU sockets, 4×100G
+/// frontend NICs (the paper's V100 testbed in §6.2 uses 2 sockets +
+/// 2×100G; we model both).
+#[derive(Clone, Debug)]
+pub struct TrainerNodeSpec {
+    pub name: &'static str,
+    pub gpus: u32,
+    pub cpu_sockets: u32,
+    pub cores_per_socket: u32,
+    pub frontend_nic_gbps: f64, // aggregate
+    pub peak_mem_bw_gbps: f64,  // aggregate host memory bandwidth
+    pub gpu_watts: f64,         // per GPU
+    pub host_watts: f64,
+}
+
+impl TrainerNodeSpec {
+    /// The §6.2 experiment node: 2×28-core sockets, 2×100G, 8 V100s.
+    pub const fn v100_node() -> TrainerNodeSpec {
+        TrainerNodeSpec {
+            name: "trainer-v100",
+            gpus: 8,
+            cpu_sockets: 2,
+            cores_per_socket: 28,
+            frontend_nic_gbps: 200.0,
+            peak_mem_bw_gbps: 256.0,
+            gpu_watts: 300.0,
+            host_watts: 700.0,
+        }
+    }
+
+    /// ZionEX: 8 A100s, 4 sockets, 4×100G frontend.
+    pub const fn zionex() -> TrainerNodeSpec {
+        TrainerNodeSpec {
+            name: "ZionEX",
+            gpus: 8,
+            cpu_sockets: 4,
+            cores_per_socket: 28,
+            frontend_nic_gbps: 400.0,
+            peak_mem_bw_gbps: 512.0,
+            gpu_watts: 400.0,
+            host_watts: 900.0,
+        }
+    }
+
+    pub fn total_cores(&self) -> u32 {
+        self.cpu_sockets * self.cores_per_socket
+    }
+
+    pub fn total_watts(&self) -> f64 {
+        self.gpus as f64 * self.gpu_watts + self.host_watts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table10_specs_match_paper() {
+        let v1 = NodeSpec::c_v1();
+        assert_eq!(v1.physical_cores, 18);
+        assert_eq!(v1.nic_gbps, 12.5);
+        assert_eq!(v1.peak_mem_bw_gbps, 75.0);
+        // Derived columns (paper: 4.2 GB/s/core, 0.69 Gbps/core).
+        assert!((v1.mem_bw_per_core() - 4.2).abs() < 0.1);
+        assert!((v1.nic_bw_per_core() - 0.69).abs() < 0.01);
+        let sota = NodeSpec::c_vsota();
+        assert!((sota.mem_bw_per_core() - 3.2).abs() < 0.1);
+        assert!((sota.nic_bw_per_core() - 1.56).abs() < 0.01);
+    }
+
+    #[test]
+    fn membw_per_core_declines_across_generations() {
+        // §6.3's core claim: per-core memory bandwidth shrinks relative to
+        // per-core NIC bandwidth across C-v1 → C-v3.
+        let v1 = NodeSpec::c_v1();
+        let v3 = NodeSpec::c_v3();
+        assert!(v3.mem_bw_per_core() < v1.mem_bw_per_core());
+    }
+
+    #[test]
+    fn ssd_iops_per_watt_dominates_capacity_per_watt() {
+        // §7.2: SSD ≈326% IOPS/W but only ≈9% capacity/W vs HDD.
+        let hdd = DeviceSpec::hdd();
+        let ssd = DeviceSpec::ssd();
+        let iops_ratio = ssd.iops_per_watt() / hdd.iops_per_watt();
+        let cap_ratio = ssd.capacity_per_watt_tb() / hdd.capacity_per_watt_tb();
+        assert!(iops_ratio > 3.0, "iops ratio {iops_ratio}");
+        assert!(cap_ratio < 0.5, "cap ratio {cap_ratio}");
+    }
+
+    #[test]
+    fn hdd_service_time_is_seek_dominated_for_small_io() {
+        let hdd = DeviceSpec::hdd();
+        // A 20 KB random read (Table 6 median-ish) is dominated by seek.
+        let t = hdd.service_time(20_000, false);
+        let seek = hdd.seek_ms / 1e3;
+        assert!(seek / t > 0.95);
+        // An 8 MB sequential read is transfer dominated.
+        let t = hdd.service_time(8 << 20, true);
+        assert!(t > 0.04);
+    }
+}

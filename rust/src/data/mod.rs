@@ -1,0 +1,412 @@
+//! In-memory sample representations.
+//!
+//! Two formats, mirroring the paper's §7.5 "in-memory flatmaps" discussion:
+//!
+//! * [`Sample`] — row-oriented map format (feature id → value), the
+//!   *baseline* DPP Worker representation. Reconstructing these from
+//!   columnar storage costs format conversions and copies.
+//! * [`ColumnarBatch`] — the flatmap format that matches both the DWRF
+//!   on-disk layout and the tensor layout, eliminating most conversions
+//!   (the paper's +FM optimization, +15% worker throughput).
+
+use crate::schema::FeatureId;
+
+/// Variable-length sparse value: categorical ids, optionally scored.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseValue {
+    pub ids: Vec<u64>,
+    /// Parallel per-id float scores (ScoredSparse features only).
+    pub scores: Option<Vec<f32>>,
+}
+
+impl SparseValue {
+    pub fn ids(ids: Vec<u64>) -> SparseValue {
+        SparseValue { ids, scores: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
+/// Row-oriented training sample (map format). Features are sorted by id
+/// so lookups can binary-search.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Sample {
+    pub dense: Vec<(FeatureId, f32)>,
+    pub sparse: Vec<(FeatureId, SparseValue)>,
+    pub label: f32,
+    /// Event timestamp (seconds) — used by GetLocalHour and partitioning.
+    pub timestamp: u64,
+}
+
+impl Sample {
+    pub fn get_dense(&self, id: FeatureId) -> Option<f32> {
+        self.dense
+            .binary_search_by_key(&id, |(f, _)| *f)
+            .ok()
+            .map(|i| self.dense[i].1)
+    }
+
+    pub fn get_sparse(&self, id: FeatureId) -> Option<&SparseValue> {
+        self.sparse
+            .binary_search_by_key(&id, |(f, _)| *f)
+            .ok()
+            .map(|i| &self.sparse[i].1)
+    }
+
+    pub fn sort_features(&mut self) {
+        self.dense.sort_by_key(|(f, _)| *f);
+        self.sparse.sort_by_key(|(f, _)| *f);
+    }
+
+    /// Approximate in-memory bytes (for memory accounting).
+    pub fn approx_bytes(&self) -> usize {
+        let dense = self.dense.len() * 8;
+        let sparse: usize = self
+            .sparse
+            .iter()
+            .map(|(_, v)| {
+                16 + v.ids.len() * 8
+                    + v.scores.as_ref().map_or(0, |s| s.len() * 4)
+            })
+            .sum();
+        16 + dense + sparse
+    }
+}
+
+/// Presence bitmap over rows.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Bitmap {
+    bits: Vec<u64>,
+    len: usize,
+}
+
+impl Bitmap {
+    pub fn new(len: usize) -> Bitmap {
+        Bitmap {
+            bits: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        self.bits[i / 64] |= 1 << (i % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        (self.bits[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.bits
+    }
+
+    pub fn from_words(words: Vec<u64>, len: usize) -> Bitmap {
+        assert!(words.len() == len.div_ceil(64));
+        Bitmap { bits: words, len }
+    }
+}
+
+/// One dense feature column: compact values for present rows + presence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseColumn {
+    pub id: FeatureId,
+    pub present: Bitmap,
+    /// Values only for rows where `present` is set, in row order.
+    pub values: Vec<f32>,
+}
+
+impl DenseColumn {
+    /// Expand into a per-row vector with `default` for missing rows.
+    pub fn expand(&self, default: f32) -> Vec<f32> {
+        let mut out = vec![default; self.present.len()];
+        let mut vi = 0;
+        for (row, slot) in out.iter_mut().enumerate() {
+            if self.present.get(row) {
+                *slot = self.values[vi];
+                vi += 1;
+            }
+        }
+        out
+    }
+}
+
+/// One sparse feature column in CSR-like layout: `offsets.len() == rows+1`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseColumn {
+    pub id: FeatureId,
+    pub offsets: Vec<u32>,
+    pub ids: Vec<u64>,
+    pub scores: Option<Vec<f32>>,
+}
+
+impl SparseColumn {
+    pub fn num_rows(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn row(&self, r: usize) -> &[u64] {
+        &self.ids[self.offsets[r] as usize..self.offsets[r + 1] as usize]
+    }
+
+    pub fn row_scores(&self, r: usize) -> Option<&[f32]> {
+        self.scores.as_ref().map(|s| {
+            &s[self.offsets[r] as usize..self.offsets[r + 1] as usize]
+        })
+    }
+
+    pub fn empty(id: FeatureId, rows: usize) -> SparseColumn {
+        SparseColumn {
+            id,
+            offsets: vec![0; rows + 1],
+            ids: Vec::new(),
+            scores: None,
+        }
+    }
+}
+
+/// Column-oriented batch — the in-memory *flatmap* (paper §7.5 +FM):
+/// matches both DWRF streams and the final tensor layout.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ColumnarBatch {
+    pub num_rows: usize,
+    pub dense: Vec<DenseColumn>,
+    pub sparse: Vec<SparseColumn>,
+    pub labels: Vec<f32>,
+    pub timestamps: Vec<u64>,
+}
+
+impl ColumnarBatch {
+    /// Convert to row-oriented samples (the conversion +FM avoids).
+    pub fn to_samples(&self) -> Vec<Sample> {
+        let mut out: Vec<Sample> = (0..self.num_rows)
+            .map(|r| Sample {
+                label: self.labels[r],
+                timestamp: *self.timestamps.get(r).unwrap_or(&0),
+                ..Default::default()
+            })
+            .collect();
+        for col in &self.dense {
+            let mut vi = 0;
+            for (r, s) in out.iter_mut().enumerate() {
+                if col.present.get(r) {
+                    s.dense.push((col.id, col.values[vi]));
+                    vi += 1;
+                }
+            }
+        }
+        for col in &self.sparse {
+            for (r, s) in out.iter_mut().enumerate() {
+                let ids = col.row(r);
+                if !ids.is_empty() {
+                    s.sparse.push((
+                        col.id,
+                        SparseValue {
+                            ids: ids.to_vec(),
+                            scores: col.row_scores(r).map(|x| x.to_vec()),
+                        },
+                    ));
+                }
+            }
+        }
+        for s in &mut out {
+            s.sort_features();
+        }
+        out
+    }
+
+    /// Build from row-oriented samples over a fixed feature layout.
+    ///
+    /// Scatter-based: each sample's (sorted, sparse-in-F) feature map is
+    /// walked once and values land directly in their column builders — a
+    /// per-(row, selected-feature) binary search was ~16% of pipeline CPU
+    /// at warehouse feature counts (EXPERIMENTS.md §Perf).
+    pub fn from_samples(
+        samples: &[Sample],
+        dense_ids: &[FeatureId],
+        sparse_ids: &[FeatureId],
+    ) -> ColumnarBatch {
+        use std::collections::HashMap;
+        let rows = samples.len();
+        let dense_pos: HashMap<FeatureId, usize> = dense_ids
+            .iter()
+            .enumerate()
+            .map(|(i, &id)| (id, i))
+            .collect();
+        let sparse_pos: HashMap<FeatureId, usize> = sparse_ids
+            .iter()
+            .enumerate()
+            .map(|(i, &id)| (id, i))
+            .collect();
+        let mut dense: Vec<DenseColumn> = dense_ids
+            .iter()
+            .map(|&id| DenseColumn {
+                id,
+                present: Bitmap::new(rows),
+                values: Vec::new(),
+            })
+            .collect();
+        let mut sparse: Vec<SparseColumn> = sparse_ids
+            .iter()
+            .map(|&id| SparseColumn {
+                id,
+                offsets: {
+                    let mut v = Vec::with_capacity(rows + 1);
+                    v.push(0u32);
+                    v
+                },
+                ids: Vec::new(),
+                scores: None,
+            })
+            .collect();
+        for (r, s) in samples.iter().enumerate() {
+            for (fid, v) in &s.dense {
+                if let Some(&i) = dense_pos.get(fid) {
+                    dense[i].present.set(r);
+                    dense[i].values.push(*v);
+                }
+            }
+            for (fid, v) in &s.sparse {
+                if let Some(&i) = sparse_pos.get(fid) {
+                    let col = &mut sparse[i];
+                    col.ids.extend_from_slice(&v.ids);
+                    if let Some(sc) = &v.scores {
+                        col.scores
+                            .get_or_insert_with(Vec::new)
+                            .extend_from_slice(sc);
+                    }
+                }
+            }
+            // Close the row for every sparse column (CSR offsets).
+            for col in &mut sparse {
+                col.offsets.push(col.ids.len() as u32);
+            }
+        }
+        ColumnarBatch {
+            num_rows: rows,
+            dense,
+            sparse,
+            labels: samples.iter().map(|s| s.label).collect(),
+            timestamps: samples.iter().map(|s| s.timestamp).collect(),
+        }
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        let d: usize = self
+            .dense
+            .iter()
+            .map(|c| c.values.len() * 4 + c.present.words().len() * 8)
+            .sum();
+        let s: usize = self
+            .sparse
+            .iter()
+            .map(|c| {
+                c.offsets.len() * 4
+                    + c.ids.len() * 8
+                    + c.scores.as_ref().map_or(0, |x| x.len() * 4)
+            })
+            .sum();
+        d + s + self.labels.len() * 4 + self.timestamps.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(i: u64) -> Sample {
+        let mut s = Sample {
+            dense: vec![(FeatureId(0), i as f32), (FeatureId(2), -1.0)],
+            sparse: vec![(
+                FeatureId(10),
+                SparseValue::ids(vec![i, i + 1, i + 2]),
+            )],
+            label: (i % 2) as f32,
+            timestamp: 1_650_000_000 + i,
+        };
+        if i % 2 == 0 {
+            s.sparse.push((
+                FeatureId(11),
+                SparseValue {
+                    ids: vec![7],
+                    scores: Some(vec![0.5]),
+                },
+            ));
+        }
+        s.sort_features();
+        s
+    }
+
+    #[test]
+    fn bitmap_roundtrip() {
+        let mut b = Bitmap::new(130);
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert!(!b.get(1) && !b.get(128));
+        assert_eq!(b.count_ones(), 3);
+        let b2 = Bitmap::from_words(b.words().to_vec(), 130);
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn columnar_roundtrip_preserves_samples() {
+        let samples: Vec<Sample> = (0..17).map(sample).collect();
+        let batch = ColumnarBatch::from_samples(
+            &samples,
+            &[FeatureId(0), FeatureId(2)],
+            &[FeatureId(10), FeatureId(11)],
+        );
+        assert_eq!(batch.num_rows, 17);
+        let back = batch.to_samples();
+        assert_eq!(back, samples);
+    }
+
+    #[test]
+    fn dense_expand_fills_missing() {
+        let samples = vec![sample(0), Sample::default(), sample(2)];
+        let batch =
+            ColumnarBatch::from_samples(&samples, &[FeatureId(0)], &[]);
+        let col = &batch.dense[0];
+        assert_eq!(col.values.len(), 2); // row 1 missing
+        assert_eq!(col.expand(0.0), vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn sparse_rows_access() {
+        let samples: Vec<Sample> = (0..4).map(sample).collect();
+        let batch =
+            ColumnarBatch::from_samples(&samples, &[], &[FeatureId(10)]);
+        let col = &batch.sparse[0];
+        assert_eq!(col.num_rows(), 4);
+        assert_eq!(col.row(2), &[2, 3, 4]);
+    }
+
+    #[test]
+    fn sample_lookup_binary_search() {
+        let s = sample(6);
+        assert_eq!(s.get_dense(FeatureId(0)), Some(6.0));
+        assert_eq!(s.get_dense(FeatureId(1)), None);
+        assert_eq!(s.get_sparse(FeatureId(10)).unwrap().ids, vec![6, 7, 8]);
+    }
+}

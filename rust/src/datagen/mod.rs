@@ -1,0 +1,319 @@
+//! Synthetic data generation: the model-serving simulator that produces
+//! raw feature/event logs, and the end-to-end dataset builder that runs
+//! the full offline path (serve → Scribe → ETL join → DWRF → Tectonic →
+//! catalog).
+//!
+//! Statistics are calibrated to the paper's Tables 4–6: per-feature
+//! coverage around the model's average, lognormal sparse lengths, Zipf
+//! categorical ids, and CTR-like labels.
+
+use crate::config::{RmConfig, SimScale};
+use crate::data::Sample;
+use crate::dwrf::{DwrfWriter, WriterOptions};
+use crate::etl;
+use crate::schema::{FeatureId, FeatureKind, Schema};
+use crate::scribe::{EventLog, FeatureLog, Record, Scribe};
+use crate::tectonic::Cluster;
+use crate::util::rng::{Pcg32, Zipf};
+use crate::warehouse::{Catalog, Partition, Table};
+use anyhow::Result;
+
+/// Sparse-id vocabulary size for the generator.
+const VOCAB: u64 = 1 << 20;
+
+/// Build the *materialized* schema for an RM at a simulation scale: the
+/// full logged feature counts are scaled down proportionally (dense :
+/// sparse ratio preserved); coverage / length statistics keep the paper's
+/// table values.
+pub fn materialized_schema(rng: &mut Pcg32, rm: &RmConfig, scale: &SimScale) -> Schema {
+    let total = rm.dataset_features() as f64;
+    let n = scale.materialized_features;
+    let n_dense = ((rm.dataset_dense_features as f64 / total) * n as f64).round()
+        as usize;
+    let n_sparse = n - n_dense;
+    Schema::synthetic(
+        rng,
+        n_dense.max(1),
+        n_sparse.max(1),
+        rm.avg_coverage,
+        rm.avg_sparse_len,
+    )
+}
+
+/// The model-serving framework simulator (§3.1.1): evaluates one
+/// (user, item) request, generating the extensive feature set as model
+/// input and monitoring the outcome event.
+pub struct ServingSim {
+    pub schema: Schema,
+    zipf_ids: Zipf,
+    ctr: f64,
+    next_request: u64,
+    clock: u64,
+}
+
+impl ServingSim {
+    pub fn new(schema: Schema, ctr: f64, epoch: u64) -> ServingSim {
+        ServingSim {
+            schema,
+            zipf_ids: Zipf::new(4096, 1.05),
+            ctr,
+            next_request: 0,
+            clock: epoch,
+        }
+    }
+
+    /// Serve one request: emit the feature log and the (monitored) event.
+    pub fn serve(&mut self, rng: &mut Pcg32) -> (FeatureLog, EventLog) {
+        let request_id = self.next_request;
+        self.next_request += 1;
+        self.clock += 1 + rng.below(5);
+        let mut dense = Vec::new();
+        let mut sparse = Vec::new();
+        let mut scored = Vec::new();
+        for f in &self.schema.features {
+            if !rng.chance(f.coverage) {
+                continue;
+            }
+            match f.kind {
+                FeatureKind::Dense => {
+                    dense.push((f.id.0, rng.normal_ms(0.0, 2.0) as f32));
+                }
+                FeatureKind::Sparse => {
+                    let len = rng
+                        .lognormal_mean(f.avg_len, 0.7)
+                        .round()
+                        .clamp(1.0, 512.0) as usize;
+                    let ids = (0..len)
+                        .map(|_| {
+                            // Zipf bucket + uniform tail keeps ids skewed but
+                            // spread over the vocabulary.
+                            let bucket = self.zipf_ids.sample(rng) as u64;
+                            bucket * (VOCAB / 4096) + rng.below(VOCAB / 4096)
+                        })
+                        .collect();
+                    sparse.push((f.id.0, ids));
+                }
+                FeatureKind::ScoredSparse => {
+                    let len = rng
+                        .lognormal_mean(f.avg_len, 0.7)
+                        .round()
+                        .clamp(1.0, 512.0) as usize;
+                    let pairs = (0..len)
+                        .map(|_| (rng.below(VOCAB), rng.f32()))
+                        .collect();
+                    scored.push((f.id.0, pairs));
+                }
+            }
+        }
+        let flog = FeatureLog {
+            request_id,
+            timestamp: self.clock,
+            dense,
+            sparse,
+            scored,
+        };
+        let elog = EventLog {
+            request_id,
+            timestamp: self.clock + 30 + rng.below(600),
+            engaged: rng.chance(self.ctr),
+        };
+        (flog, elog)
+    }
+}
+
+/// Generate one day-partition worth of labeled samples through the real
+/// offline path: serving sim → Scribe streams → ETL batch join.
+pub fn generate_partition_samples(
+    rng: &mut Pcg32,
+    schema: &Schema,
+    rows: usize,
+    day: u32,
+) -> Vec<Sample> {
+    let scribe = Scribe::new();
+    let mut sim = ServingSim::new(schema.clone(), 0.12, day as u64 * 86_400);
+    let fstream = "features";
+    let estream = "events";
+    for _ in 0..rows {
+        let (f, e) = sim.serve(rng);
+        scribe.publish(fstream, Record::Feature(f));
+        // Events arrive on their own stream (order independent of features).
+        scribe.publish(estream, Record::Event(e));
+    }
+    etl::batch_join(&scribe, fstream, estream)
+}
+
+/// A built dataset: catalog entry + where its partitions live.
+pub struct DatasetHandle {
+    pub table_name: String,
+    pub schema: Schema,
+}
+
+/// Build a complete synthetic dataset for an RM: all partitions written as
+/// DWRF files into the Tectonic cluster and registered in the catalog.
+pub fn build_dataset(
+    cluster: &Cluster,
+    catalog: &Catalog,
+    rm: &RmConfig,
+    scale: &SimScale,
+    writer_opts: WriterOptions,
+    seed: u64,
+) -> Result<DatasetHandle> {
+    let mut rng = Pcg32::new(seed);
+    let schema = materialized_schema(&mut rng, rm, scale);
+    let table_name = format!("{}_table", rm.id.name().to_lowercase());
+    let dense_ids: Vec<FeatureId> = schema.dense().map(|f| f.id).collect();
+    let sparse_ids: Vec<FeatureId> = schema.sparse().map(|f| f.id).collect();
+    catalog.register(Table {
+        name: table_name.clone(),
+        schema: schema.clone(),
+        partitions: Vec::new(),
+    });
+    for day in 0..scale.partitions as u32 {
+        let mut part_rng = rng.fork(day as u64);
+        let samples = generate_partition_samples(
+            &mut part_rng,
+            &schema,
+            scale.rows_per_partition,
+            day,
+        );
+        let mut writer = DwrfWriter::new(
+            &table_name,
+            dense_ids.clone(),
+            sparse_ids.clone(),
+            writer_opts.clone(),
+        );
+        let rows = samples.len() as u64;
+        writer.write_all(samples);
+        let bytes = writer.finish();
+        let fname = format!("warehouse/{table_name}/day={day}/part-0.dwrf");
+        let file = cluster.create(&fname);
+        cluster.append(file, &bytes)?;
+        cluster.seal(file);
+        catalog.add_partition(
+            &table_name,
+            Partition {
+                day,
+                file,
+                rows,
+                bytes: bytes.len() as u64,
+            },
+        );
+    }
+    Ok(DatasetHandle {
+        table_name,
+        schema,
+    })
+}
+
+/// Dataset growth model for Fig 2: normalized dataset size and ingestion
+/// bandwidth over `months`, matching the paper's reported 2× storage and
+/// 4× bandwidth growth over 24 months (drivers: organic growth, reduced
+/// downsampling, more engineered features; bandwidth additionally grows
+/// with faster trainers).
+pub fn growth_series(months: usize) -> (Vec<f64>, Vec<f64>) {
+    let size_factor = 2.0f64;
+    let bw_factor = 4.0f64;
+    let size: Vec<f64> = (0..months)
+        .map(|m| size_factor.powf(m as f64 / 23.0))
+        .collect();
+    let bw: Vec<f64> = (0..months)
+        .map(|m| bw_factor.powf(m as f64 / 23.0))
+        .collect();
+    (size, bw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RmId;
+    use crate::tectonic::ClusterConfig;
+
+    #[test]
+    fn serving_sim_respects_coverage() {
+        let mut rng = Pcg32::new(3);
+        let schema = Schema::synthetic(&mut rng, 30, 10, 0.5, 10.0);
+        let mut sim = ServingSim::new(schema.clone(), 0.1, 0);
+        let mut logged = vec![0usize; schema.features.len()];
+        let n = 400;
+        for _ in 0..n {
+            let (f, _) = sim.serve(&mut rng);
+            for (id, _) in &f.dense {
+                logged[*id as usize] += 1;
+            }
+            for (id, _) in &f.sparse {
+                logged[*id as usize] += 1;
+            }
+            for (id, _) in &f.scored {
+                logged[*id as usize] += 1;
+            }
+        }
+        // Observed coverage tracks per-feature configured coverage.
+        for f in &schema.features {
+            let obs = logged[f.id.0 as usize] as f64 / n as f64;
+            assert!(
+                (obs - f.coverage).abs() < 0.15,
+                "feature {:?}: obs {obs:.2} vs cfg {:.2}",
+                f.id,
+                f.coverage
+            );
+        }
+    }
+
+    #[test]
+    fn generate_partition_labels_and_joins() {
+        let mut rng = Pcg32::new(5);
+        let schema = Schema::synthetic(&mut rng, 10, 5, 0.6, 8.0);
+        let samples = generate_partition_samples(&mut rng, &schema, 200, 0);
+        assert_eq!(samples.len(), 200, "every request joins");
+        let pos = samples.iter().filter(|s| s.label == 1.0).count();
+        assert!(pos > 5 && pos < 80, "CTR-ish positive rate, got {pos}");
+        assert!(samples.iter().all(|s| !s.dense.is_empty() || !s.sparse.is_empty()));
+    }
+
+    #[test]
+    fn build_dataset_end_to_end() {
+        let cluster = Cluster::new(ClusterConfig {
+            chunk_bytes: 64 << 10,
+            ..Default::default()
+        });
+        let catalog = Catalog::new();
+        let rm = RmConfig::get(RmId::Rm3);
+        let scale = SimScale::tiny();
+        let h = build_dataset(
+            &cluster,
+            &catalog,
+            &rm,
+            &scale,
+            WriterOptions::default(),
+            42,
+        )
+        .unwrap();
+        let t = catalog.get(&h.table_name).unwrap();
+        assert_eq!(t.partitions.len(), scale.partitions);
+        assert_eq!(t.total_rows(), (scale.rows_per_partition * scale.partitions) as u64);
+        assert!(cluster.logical_bytes() > 0);
+        // 3x replication on disk.
+        assert_eq!(cluster.stored_bytes(), 3 * cluster.logical_bytes());
+    }
+
+    #[test]
+    fn materialized_schema_preserves_ratio() {
+        let mut rng = Pcg32::new(1);
+        let rm = RmConfig::get(RmId::Rm1);
+        let scale = SimScale::standard();
+        let s = materialized_schema(&mut rng, &rm, &scale);
+        assert_eq!(s.features.len(), scale.materialized_features);
+        let dense_frac = s.dense().count() as f64 / s.features.len() as f64;
+        let want = rm.dataset_dense_features as f64 / rm.dataset_features() as f64;
+        assert!((dense_frac - want).abs() < 0.05);
+    }
+
+    #[test]
+    fn growth_matches_paper_factors() {
+        let (size, bw) = growth_series(24);
+        assert!((size[23] / size[0] - 2.0).abs() < 0.05);
+        assert!((bw[23] / bw[0] - 4.0).abs() < 0.1);
+        // Monotonic growth.
+        assert!(size.windows(2).all(|w| w[1] >= w[0]));
+    }
+}

@@ -1,0 +1,208 @@
+//! Preprocessed-tensor cache (§7.5: "We are also exploring other
+//! optimization techniques, such as caching preprocessed tensors").
+//!
+//! Keyed by (split extent, session fingerprint): two jobs (or epochs)
+//! with the same projection + transform pipeline + batching reuse each
+//! other's fully-preprocessed wire batches, skipping storage reads,
+//! extraction, and transformation entirely — the OneAccess-style sharing
+//! the paper cites as related work, applied at the worker.
+
+use super::spec::SessionSpec;
+use super::split::Split;
+use super::worker::WireBatch;
+use crate::metrics::Counter;
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+/// Fingerprint of everything that affects a split's preprocessed output.
+pub fn session_fingerprint(spec: &SessionSpec) -> u64 {
+    // FNV-1a over the semantically-relevant session fields.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    eat(spec.table.as_bytes());
+    let mut feats: Vec<u32> = spec.projection.iter().map(|f| f.0).collect();
+    feats.sort_unstable();
+    for f in feats {
+        eat(&f.to_le_bytes());
+    }
+    eat(&(spec.batch_size as u64).to_le_bytes());
+    eat(&[
+        spec.pipeline.fast_decode as u8,
+        spec.pipeline.flatmap as u8,
+    ]);
+    eat(&spec.pipeline.coalesce.unwrap_or(0).to_le_bytes());
+    eat(&(spec.dag.nodes.len() as u64).to_le_bytes());
+    eat(&(spec.dag.outputs.len() as u64).to_le_bytes());
+    h
+}
+
+type Key = (u64, u64, usize, usize); // (fingerprint, file, stripe_start, count)
+
+/// Bounded shared cache of preprocessed wire batches.
+pub struct TensorCache {
+    map: RwLock<HashMap<Key, Arc<Vec<WireBatch>>>>,
+    pub budget_bytes: u64,
+    used: RwLock<u64>,
+    pub hits: Counter,
+    pub misses: Counter,
+    pub inserted_bytes: Counter,
+}
+
+impl TensorCache {
+    pub fn new(budget_bytes: u64) -> Arc<TensorCache> {
+        Arc::new(TensorCache {
+            map: RwLock::new(HashMap::new()),
+            budget_bytes,
+            used: RwLock::new(0),
+            hits: Counter::new(),
+            misses: Counter::new(),
+            inserted_bytes: Counter::new(),
+        })
+    }
+
+    fn key(fingerprint: u64, split: &Split) -> Key {
+        (
+            fingerprint,
+            split.file.0,
+            split.stripe_start,
+            split.stripe_count,
+        )
+    }
+
+    pub fn get(&self, fingerprint: u64, split: &Split) -> Option<Arc<Vec<WireBatch>>> {
+        let got = self
+            .map
+            .read()
+            .unwrap()
+            .get(&Self::key(fingerprint, split))
+            .cloned();
+        match &got {
+            Some(_) => self.hits.inc(),
+            None => self.misses.inc(),
+        }
+        got
+    }
+
+    /// Insert if within budget. Returns whether it was stored.
+    pub fn put(
+        &self,
+        fingerprint: u64,
+        split: &Split,
+        batches: Arc<Vec<WireBatch>>,
+    ) -> bool {
+        let bytes: u64 = batches.iter().map(|b| b.bytes.len() as u64).sum();
+        {
+            let mut used = self.used.write().unwrap();
+            if *used + bytes > self.budget_bytes {
+                return false;
+            }
+            *used += bytes;
+        }
+        self.inserted_bytes.add(bytes);
+        self.map
+            .write()
+            .unwrap()
+            .insert(Self::key(fingerprint, split), batches);
+        true
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        *self.used.read().unwrap()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.get() as f64;
+        let m = self.misses.get() as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dwrf::Projection;
+    use crate::schema::FeatureId;
+    use crate::tectonic::FileId;
+    use crate::transforms::TransformDag;
+
+    fn spec(table: &str, feats: &[u32], batch: usize) -> SessionSpec {
+        let mut dag = TransformDag::default();
+        for &f in feats {
+            let i = dag.input(FeatureId(f));
+            dag.output(FeatureId(f), i);
+        }
+        let mut s = SessionSpec::from_dag(table, 0, 1, dag, batch);
+        s.projection = Projection::new(feats.iter().map(|&f| FeatureId(f)));
+        s
+    }
+
+    fn split(file: u64, start: usize) -> Split {
+        Split {
+            id: crate::dpp::SplitId(start as u64),
+            file: FileId(file),
+            day: 0,
+            stripe_start: start,
+            stripe_count: 2,
+            rows: 64,
+        }
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_sessions() {
+        let a = session_fingerprint(&spec("t", &[1, 2, 3], 32));
+        let b = session_fingerprint(&spec("t", &[1, 2, 3], 32));
+        assert_eq!(a, b, "deterministic");
+        assert_ne!(a, session_fingerprint(&spec("t", &[1, 2, 4], 32)));
+        assert_ne!(a, session_fingerprint(&spec("t", &[1, 2, 3], 64)));
+        assert_ne!(a, session_fingerprint(&spec("u", &[1, 2, 3], 32)));
+        // Projection order must not matter.
+        assert_eq!(a, session_fingerprint(&spec("t", &[3, 2, 1], 32)));
+    }
+
+    #[test]
+    fn cache_roundtrip_and_isolation() {
+        let cache = TensorCache::new(1 << 20);
+        let fp = 42u64;
+        let batches = Arc::new(vec![WireBatch {
+            seq: 0,
+            rows: 8,
+            bytes: vec![1, 2, 3],
+        }]);
+        assert!(cache.get(fp, &split(1, 0)).is_none());
+        assert!(cache.put(fp, &split(1, 0), batches.clone()));
+        let got = cache.get(fp, &split(1, 0)).unwrap();
+        assert_eq!(got[0].bytes, vec![1, 2, 3]);
+        // Different split / fingerprint: miss.
+        assert!(cache.get(fp, &split(1, 2)).is_none());
+        assert!(cache.get(fp + 1, &split(1, 0)).is_none());
+        assert!((cache.hit_rate() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_enforced() {
+        let cache = TensorCache::new(4);
+        let big = Arc::new(vec![WireBatch {
+            seq: 0,
+            rows: 8,
+            bytes: vec![0; 8],
+        }]);
+        assert!(!cache.put(1, &split(1, 0), big));
+        assert_eq!(cache.used_bytes(), 0);
+        let small = Arc::new(vec![WireBatch {
+            seq: 0,
+            rows: 8,
+            bytes: vec![0; 3],
+        }]);
+        assert!(cache.put(1, &split(1, 0), small));
+        assert_eq!(cache.used_bytes(), 3);
+    }
+}

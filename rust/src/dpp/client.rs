@@ -1,0 +1,199 @@
+//! DPP Clients — the trainer-side data plane half (§3.2.1): one Client
+//! runs on each training node, exposing the hook the PyTorch runtime
+//! calls to obtain preprocessed tensors. Requests become RPCs against a
+//! bounded set of Workers via **partitioned round-robin routing**,
+//! "capping the number of connections that Clients and Workers need to
+//! maintain".
+
+use super::tensor::TensorBatch;
+use super::worker::WireBatch;
+use crate::dwrf::crypto::StreamCipher;
+use crate::metrics::Counter;
+use anyhow::Result;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Assign `workers` across `clients` in contiguous partitions, then
+/// round-robin within each partition. Every worker lands on exactly one
+/// client; partition sizes differ by at most one (caps fan-in/fan-out).
+pub fn partition_round_robin(workers: usize, clients: usize) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); clients.max(1)];
+    if workers == 0 {
+        return out;
+    }
+    let base = workers / clients.max(1);
+    let extra = workers % clients.max(1);
+    let mut w = 0;
+    for (c, slot) in out.iter_mut().enumerate() {
+        let take = base + usize::from(c < extra);
+        for _ in 0..take {
+            slot.push(w);
+            w += 1;
+        }
+    }
+    out
+}
+
+/// The trainer-side tensor source.
+pub struct Client {
+    /// Receiving ends of this client's partition of workers.
+    rxs: Vec<Receiver<WireBatch>>,
+    cipher: StreamCipher,
+    next: usize,
+    /// Datacenter-tax accounting: wire bytes received and deserialized.
+    pub rx_bytes: Counter,
+    pub batches: Counter,
+    /// Time spent blocked waiting for a batch (data-stall signal).
+    pub stall_secs: std::sync::Mutex<f64>,
+}
+
+impl Client {
+    pub fn new(table: &str, rxs: Vec<Receiver<WireBatch>>) -> Client {
+        Client {
+            rxs,
+            cipher: StreamCipher::for_table(table),
+            next: 0,
+            rx_bytes: Counter::new(),
+            batches: Counter::new(),
+            stall_secs: std::sync::Mutex::new(0.0),
+        }
+    }
+
+    pub fn num_connections(&self) -> usize {
+        self.rxs.len()
+    }
+
+    /// The PyTorch-runtime hook: next preprocessed tensor batch.
+    /// Round-robins across this client's workers; blocks (recording stall
+    /// time) until a batch arrives or all workers disconnect.
+    pub fn next_batch(&mut self, timeout: Duration) -> Result<Option<TensorBatch>> {
+        if self.rxs.is_empty() {
+            return Ok(None);
+        }
+        let start = Instant::now();
+        let mut disconnected = vec![false; self.rxs.len()];
+        loop {
+            let mut all_dead = true;
+            for k in 0..self.rxs.len() {
+                let i = (self.next + k) % self.rxs.len();
+                if disconnected[i] {
+                    continue;
+                }
+                all_dead = false;
+                match self.rxs[i].try_recv() {
+                    Ok(wire) => {
+                        self.next = (i + 1) % self.rxs.len();
+                        self.rx_bytes.add(wire.bytes.len() as u64);
+                        self.batches.inc();
+                        let stalled = start.elapsed().as_secs_f64();
+                        *self.stall_secs.lock().unwrap() += stalled;
+                        // TLS decrypt + Thrift-like deserialize: the
+                        // trainer-side datacenter tax (§6.2).
+                        let tb = TensorBatch::from_wire(
+                            &self.cipher,
+                            wire.seq,
+                            &wire.bytes,
+                        )?;
+                        return Ok(Some(tb));
+                    }
+                    Err(std::sync::mpsc::TryRecvError::Empty) => {}
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        disconnected[i] = true;
+                    }
+                }
+            }
+            if all_dead {
+                return Ok(None);
+            }
+            if start.elapsed() > timeout {
+                *self.stall_secs.lock().unwrap() +=
+                    start.elapsed().as_secs_f64();
+                return Ok(None);
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    pub fn stalled(&self) -> f64 {
+        *self.stall_secs.lock().unwrap()
+    }
+}
+
+/// Shared handle bundle when one process hosts several clients.
+pub type Clients = Vec<Arc<std::sync::Mutex<Client>>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    #[test]
+    fn partition_rr_covers_all_workers_once() {
+        for (w, c) in [(10, 3), (3, 3), (2, 5), (0, 2), (7, 1)] {
+            let parts = partition_round_robin(w, c);
+            assert_eq!(parts.len(), c.max(1));
+            let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..w).collect::<Vec<_>>());
+            // Balanced within one.
+            let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+            let (mn, mx) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            assert!(mx - mn <= 1, "unbalanced: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn client_round_robins_and_decodes() {
+        let (tx1, rx1) = sync_channel(4);
+        let (tx2, rx2) = sync_channel(4);
+        let cipher = StreamCipher::for_table("t");
+        let tb = TensorBatch {
+            rows: 2,
+            dense: vec![1.0, 2.0],
+            dense_names: vec![crate::schema::FeatureId(0)],
+            sparse: vec![],
+            labels: vec![0.0, 1.0],
+        };
+        for (seq, tx) in [(0u64, &tx1), (1u64, &tx2)] {
+            tx.send(WireBatch {
+                seq,
+                rows: 2,
+                bytes: tb.to_wire(&cipher, seq),
+            })
+            .unwrap();
+        }
+        drop(tx1);
+        drop(tx2);
+        let mut client = Client::new("t", vec![rx1, rx2]);
+        assert_eq!(client.num_connections(), 2);
+        let a = client.next_batch(Duration::from_secs(1)).unwrap().unwrap();
+        let b = client.next_batch(Duration::from_secs(1)).unwrap().unwrap();
+        assert_eq!(a, tb);
+        assert_eq!(b, tb);
+        assert!(client
+            .next_batch(Duration::from_millis(50))
+            .unwrap()
+            .is_none());
+        assert_eq!(client.batches.get(), 2);
+        assert!(client.rx_bytes.get() > 0);
+    }
+
+    #[test]
+    fn client_with_no_workers_returns_none() {
+        let mut c = Client::new("t", vec![]);
+        assert!(c.next_batch(Duration::from_millis(1)).unwrap().is_none());
+    }
+
+    #[test]
+    fn stall_time_recorded_on_timeout() {
+        let (_tx, rx) = sync_channel::<WireBatch>(1);
+        let mut c = Client::new("t", vec![rx]);
+        let got = c.next_batch(Duration::from_millis(20)).unwrap();
+        assert!(got.is_none());
+        assert!(c.stalled() >= 0.02);
+    }
+}

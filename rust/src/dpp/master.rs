@@ -1,0 +1,527 @@
+//! The DPP Master — control plane (§3.2.1): breaks the preprocessing
+//! workload into splits, serves them to Workers on request, tracks
+//! progress, checkpoints reader state, monitors Worker health (restarting
+//! failed Workers without checkpoint restore, thanks to their stateless
+//! design), and runs the auto-scaling controller.
+
+use super::spec::SessionSpec;
+use super::split::{splits_for_partition, Split, SplitId};
+use crate::dwrf::{FileMeta, IoRange};
+use crate::tectonic::{Cluster, FileId};
+use crate::warehouse::Catalog;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+pub type WorkerId = usize;
+
+/// Health/utilization report a Worker heartbeats to the Master — the
+/// signals the auto-scaling controller consumes (§3.2.1: "utilization
+/// (CPU, memory, and network) statistics and the number of buffered
+/// tensors from each DPP Worker").
+#[derive(Clone, Debug)]
+pub struct WorkerHealth {
+    pub last_heartbeat: Instant,
+    pub buffered_tensors: usize,
+    pub cpu_util: f64,
+    pub mem_util: f64,
+    pub net_util: f64,
+    pub alive: bool,
+}
+
+impl Default for WorkerHealth {
+    fn default() -> Self {
+        WorkerHealth {
+            last_heartbeat: Instant::now(),
+            buffered_tensors: 0,
+            cpu_util: 0.0,
+            mem_util: 0.0,
+            net_util: 0.0,
+            alive: true,
+        }
+    }
+}
+
+/// Serializable master progress (the periodic checkpoint used to restore
+/// reader state on failure).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MasterCheckpoint {
+    pub completed: Vec<u64>,
+}
+
+struct MasterState {
+    queue: VecDeque<SplitId>,
+    all: HashMap<SplitId, Split>,
+    in_flight: HashMap<SplitId, (WorkerId, Instant)>,
+    completed: BTreeSet<SplitId>,
+    workers: HashMap<WorkerId, WorkerHealth>,
+    next_worker: WorkerId,
+}
+
+/// Auto-scaler targets.
+#[derive(Clone, Debug)]
+pub struct AutoscalePolicy {
+    /// Scale up while average buffered tensors per worker is below this
+    /// (buffer empty ⇒ trainers are at risk of stalling).
+    pub min_buffered: f64,
+    /// Scale down when buffers exceed this *and* CPUs are underutilized
+    /// (wasted preprocessing capacity).
+    pub max_buffered: f64,
+    pub target_cpu: f64,
+    pub min_workers: usize,
+    pub max_workers: usize,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            min_buffered: 1.0,
+            max_buffered: 8.0,
+            target_cpu: 0.85,
+            min_workers: 1,
+            max_workers: 64,
+        }
+    }
+}
+
+pub struct Master {
+    pub spec: SessionSpec,
+    state: Mutex<MasterState>,
+    pub policy: AutoscalePolicy,
+}
+
+impl Master {
+    /// Create a session: resolve the table, fetch partition footers
+    /// (control-plane I/O through the same storage path), and enumerate
+    /// splits.
+    pub fn new(
+        catalog: &Catalog,
+        cluster: &Cluster,
+        spec: SessionSpec,
+    ) -> Result<Master> {
+        let table = catalog
+            .get(&spec.table)
+            .with_context(|| format!("unknown table {}", spec.table))?;
+        let parts = table.select_partitions(spec.from_day, spec.to_day);
+        if parts.is_empty() {
+            bail!(
+                "no partitions in [{}, {}] for {}",
+                spec.from_day,
+                spec.to_day,
+                spec.table
+            );
+        }
+        let mut next_id = 0u64;
+        let mut all = HashMap::new();
+        let mut queue = VecDeque::new();
+        for p in parts {
+            let meta = Self::fetch_meta(cluster, p.file)?;
+            let stripe_rows: Vec<u32> =
+                meta.stripes.iter().map(|s| s.rows).collect();
+            for split in splits_for_partition(
+                &mut next_id,
+                p.file,
+                p.day,
+                &stripe_rows,
+                spec.stripes_per_split,
+            ) {
+                queue.push_back(split.id);
+                all.insert(split.id, split);
+            }
+        }
+        Ok(Master {
+            spec,
+            state: Mutex::new(MasterState {
+                queue,
+                all,
+                in_flight: HashMap::new(),
+                completed: BTreeSet::new(),
+                workers: HashMap::new(),
+                next_worker: 0,
+            }),
+            policy: AutoscalePolicy::default(),
+        })
+    }
+
+    /// Fetch and parse a file's footer via ranged tail reads (doubling
+    /// until the whole footer fits).
+    pub fn fetch_meta(cluster: &Cluster, file: FileId) -> Result<FileMeta> {
+        let flen = cluster.file_len(file).context("file length")?;
+        let mut tail = flen.min(64 * 1024);
+        loop {
+            let io = IoRange {
+                offset: flen - tail,
+                len: tail,
+            };
+            let bytes = cluster.read_range(file, io)?;
+            let n = bytes.len();
+            if n < 12 {
+                bail!("file too short");
+            }
+            let magic = u32::from_le_bytes(bytes[n - 4..].try_into().unwrap());
+            if magic != crate::dwrf::MAGIC {
+                bail!("bad DWRF magic");
+            }
+            let footer_len =
+                u64::from_le_bytes(bytes[n - 12..n - 4].try_into().unwrap());
+            if footer_len + 12 <= tail {
+                let start = n - 12 - footer_len as usize;
+                return FileMeta::decode_footer(
+                    &bytes[start..n - 12],
+                    flen,
+                );
+            }
+            if tail == flen {
+                bail!("footer larger than file");
+            }
+            tail = (tail * 2).min(flen);
+        }
+    }
+
+    /// Register a new Worker; returns its id.
+    pub fn register_worker(&self) -> WorkerId {
+        let mut st = self.state.lock().unwrap();
+        let id = st.next_worker;
+        st.next_worker += 1;
+        st.workers.insert(id, WorkerHealth::default());
+        id
+    }
+
+    /// Worker requests the next split. `None` ⇒ no work remains *right
+    /// now* (the session is done once `is_done`).
+    pub fn fetch_split(&self, worker: WorkerId) -> Option<Split> {
+        let mut st = self.state.lock().unwrap();
+        let id = st.queue.pop_front()?;
+        st.in_flight.insert(id, (worker, Instant::now()));
+        Some(st.all[&id].clone())
+    }
+
+    pub fn complete_split(&self, worker: WorkerId, id: SplitId) {
+        let mut st = self.state.lock().unwrap();
+        match st.in_flight.remove(&id) {
+            Some((w, _)) if w == worker => {
+                st.completed.insert(id);
+            }
+            Some((w, t)) => {
+                // Split was reassigned (we thought this worker died);
+                // first completion wins.
+                st.in_flight.insert(id, (w, t));
+                st.completed.insert(id);
+                st.in_flight.remove(&id);
+            }
+            None => {
+                // Already completed elsewhere — idempotent.
+                st.completed.insert(id);
+            }
+        }
+    }
+
+    pub fn heartbeat(&self, worker: WorkerId, buffered: usize, cpu: f64, mem: f64, net: f64) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(h) = st.workers.get_mut(&worker) {
+            h.last_heartbeat = Instant::now();
+            h.buffered_tensors = buffered;
+            h.cpu_util = cpu;
+            h.mem_util = mem;
+            h.net_util = net;
+            h.alive = true;
+        }
+    }
+
+    /// Mark a worker dead (crash detected / drained); its in-flight splits
+    /// go back on the queue — no checkpoint restore needed because
+    /// Workers are stateless.
+    pub fn worker_failed(&self, worker: WorkerId) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(h) = st.workers.get_mut(&worker) {
+            h.alive = false;
+        }
+        let orphaned: Vec<SplitId> = st
+            .in_flight
+            .iter()
+            .filter(|(_, (w, _))| *w == worker)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in orphaned {
+            st.in_flight.remove(&id);
+            st.queue.push_front(id);
+        }
+    }
+
+    /// Requeue splits whose worker missed heartbeats past `timeout`.
+    pub fn reap_expired(&self, timeout: Duration) -> usize {
+        let mut st = self.state.lock().unwrap();
+        let now = Instant::now();
+        let dead: Vec<WorkerId> = st
+            .workers
+            .iter()
+            .filter(|(_, h)| h.alive && now.duration_since(h.last_heartbeat) > timeout)
+            .map(|(&w, _)| w)
+            .collect();
+        let mut requeued = 0;
+        for w in dead {
+            st.workers.get_mut(&w).unwrap().alive = false;
+            let orphaned: Vec<SplitId> = st
+                .in_flight
+                .iter()
+                .filter(|(_, (wk, _))| *wk == w)
+                .map(|(id, _)| *id)
+                .collect();
+            for id in orphaned {
+                st.in_flight.remove(&id);
+                st.queue.push_front(id);
+                requeued += 1;
+            }
+        }
+        requeued
+    }
+
+    pub fn is_done(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        st.queue.is_empty() && st.in_flight.is_empty()
+    }
+
+    /// (completed, total) splits.
+    pub fn progress(&self) -> (usize, usize) {
+        let st = self.state.lock().unwrap();
+        (st.completed.len(), st.all.len())
+    }
+
+    pub fn total_rows(&self) -> u64 {
+        let st = self.state.lock().unwrap();
+        st.all.values().map(|s| s.rows).sum()
+    }
+
+    // ---- Fault tolerance: checkpoint / restore ----
+
+    pub fn checkpoint(&self) -> MasterCheckpoint {
+        let st = self.state.lock().unwrap();
+        MasterCheckpoint {
+            completed: st.completed.iter().map(|s| s.0).collect(),
+        }
+    }
+
+    /// Rebuild a Master from a checkpoint: completed splits are not
+    /// re-queued (restores reader state after a Master failover).
+    pub fn restore(
+        catalog: &Catalog,
+        cluster: &Cluster,
+        spec: SessionSpec,
+        ckpt: &MasterCheckpoint,
+    ) -> Result<Master> {
+        let m = Master::new(catalog, cluster, spec)?;
+        {
+            let mut st = m.state.lock().unwrap();
+            let done: BTreeSet<SplitId> =
+                ckpt.completed.iter().map(|&i| SplitId(i)).collect();
+            st.queue.retain(|id| !done.contains(id));
+            st.completed = done;
+        }
+        Ok(m)
+    }
+
+    // ---- Auto-scaling controller ----
+
+    /// Evaluate a scaling decision: returns the desired worker count given
+    /// live worker count and health reports. Goal (§3.2.1): maintain a
+    /// non-zero number of buffered tensors with maximum utilization.
+    pub fn autoscale(&self, current: usize) -> usize {
+        let st = self.state.lock().unwrap();
+        let alive: Vec<&WorkerHealth> =
+            st.workers.values().filter(|h| h.alive).collect();
+        drop_guard(&alive);
+        if alive.is_empty() {
+            return current.max(self.policy.min_workers);
+        }
+        let avg_buf: f64 = alive
+            .iter()
+            .map(|h| h.buffered_tensors as f64)
+            .sum::<f64>()
+            / alive.len() as f64;
+        let avg_cpu: f64 =
+            alive.iter().map(|h| h.cpu_util).sum::<f64>() / alive.len() as f64;
+        let mut desired = current;
+        if avg_buf < self.policy.min_buffered {
+            // Trainers draining faster than workers fill: scale up
+            // proportionally to the shortfall.
+            let grow = ((self.policy.min_buffered - avg_buf)
+                / self.policy.min_buffered
+                * current as f64)
+                .ceil() as usize;
+            desired = current + grow.max(1);
+        } else if avg_buf > self.policy.max_buffered
+            && avg_cpu < self.policy.target_cpu * 0.5
+        {
+            desired = current.saturating_sub(1);
+        }
+        desired.clamp(self.policy.min_workers, self.policy.max_workers)
+    }
+}
+
+fn drop_guard<T>(_: &T) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{RmConfig, RmId, SimScale};
+    use crate::datagen::build_dataset;
+    use crate::dwrf::{Projection, WriterOptions};
+    use crate::tectonic::ClusterConfig;
+    use crate::transforms::TransformDag;
+
+    fn setup() -> (Cluster, Catalog, SessionSpec) {
+        let cluster = Cluster::new(ClusterConfig {
+            chunk_bytes: 64 << 10,
+            ..Default::default()
+        });
+        let catalog = Catalog::new();
+        let rm = RmConfig::get(RmId::Rm3);
+        let scale = SimScale::tiny();
+        let h = build_dataset(
+            &cluster,
+            &catalog,
+            &rm,
+            &scale,
+            WriterOptions {
+                stripe_rows: 16,
+                ..Default::default()
+            },
+            7,
+        )
+        .unwrap();
+        let proj: Vec<_> = h.schema.features.iter().take(8).map(|f| f.id).collect();
+        let mut dag = TransformDag::default();
+        for &f in &proj {
+            let i = dag.input(f);
+            dag.output(f, i);
+        }
+        let spec = SessionSpec {
+            table: h.table_name,
+            from_day: 0,
+            to_day: 10,
+            projection: Projection::new(proj),
+            dag,
+            batch_size: 16,
+            stripes_per_split: 2,
+            pipeline: Default::default(),
+        };
+        (cluster, catalog, spec)
+    }
+
+    #[test]
+    fn master_enumerates_splits() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        let (_, total) = m.progress();
+        // tiny scale: 2 partitions × 64 rows, stripe 16 → 4 stripes each →
+        // 2 splits per partition (2 stripes per split).
+        assert_eq!(total, 4);
+        assert_eq!(m.total_rows(), 128);
+    }
+
+    #[test]
+    fn fetch_complete_lifecycle() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        let w = m.register_worker();
+        let mut seen = Vec::new();
+        while let Some(s) = m.fetch_split(w) {
+            seen.push(s.id);
+            m.complete_split(w, s.id);
+        }
+        assert_eq!(seen.len(), 4);
+        assert!(m.is_done());
+        assert_eq!(m.progress(), (4, 4));
+    }
+
+    #[test]
+    fn failed_worker_splits_requeue() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        let w1 = m.register_worker();
+        let s1 = m.fetch_split(w1).unwrap();
+        let _s2 = m.fetch_split(w1).unwrap();
+        m.complete_split(w1, s1.id);
+        m.worker_failed(w1);
+        assert!(!m.is_done());
+        // A new worker picks up the orphaned split.
+        let w2 = m.register_worker();
+        let mut count = 0;
+        while let Some(s) = m.fetch_split(w2) {
+            m.complete_split(w2, s.id);
+            count += 1;
+        }
+        assert_eq!(count, 3, "one completed + one requeued + two fresh... ");
+        assert!(m.is_done());
+    }
+
+    #[test]
+    fn heartbeat_timeout_reaps() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        let w = m.register_worker();
+        let _ = m.fetch_split(w).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        let requeued = m.reap_expired(Duration::from_millis(10));
+        assert_eq!(requeued, 1);
+        assert!(!m.is_done());
+    }
+
+    #[test]
+    fn checkpoint_restore_skips_completed() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec.clone()).unwrap();
+        let w = m.register_worker();
+        let s = m.fetch_split(w).unwrap();
+        m.complete_split(w, s.id);
+        let ckpt = m.checkpoint();
+        assert_eq!(ckpt.completed.len(), 1);
+
+        let m2 = Master::restore(&catalog, &cluster, spec, &ckpt).unwrap();
+        let w2 = m2.register_worker();
+        let mut remaining = 0;
+        while let Some(s) = m2.fetch_split(w2) {
+            m2.complete_split(w2, s.id);
+            remaining += 1;
+        }
+        assert_eq!(remaining, 3);
+        assert!(m2.is_done());
+    }
+
+    #[test]
+    fn autoscaler_scales_up_on_empty_buffers() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        let w = m.register_worker();
+        m.heartbeat(w, 0, 0.95, 0.4, 0.3);
+        assert!(m.autoscale(1) > 1, "empty buffer must scale up");
+    }
+
+    #[test]
+    fn autoscaler_scales_down_on_idle_full_buffers() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        for _ in 0..4 {
+            let w = m.register_worker();
+            m.heartbeat(w, 20, 0.1, 0.2, 0.1);
+        }
+        assert_eq!(m.autoscale(4), 3);
+    }
+
+    #[test]
+    fn autoscaler_steady_state_holds() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        let w = m.register_worker();
+        m.heartbeat(w, 4, 0.8, 0.5, 0.5);
+        assert_eq!(m.autoscale(2), 2);
+    }
+
+    #[test]
+    fn unknown_table_errors() {
+        let (cluster, catalog, mut spec) = setup();
+        spec.table = "nope".into();
+        assert!(Master::new(&catalog, &cluster, spec).is_err());
+    }
+}

@@ -1,0 +1,33 @@
+//! DPP — the **Data PreProcessing Service** (§3.2.1), the paper's system
+//! contribution: a disaggregated online-preprocessing service that reads
+//! raw training data from storage, preprocesses it into ready-to-load
+//! tensors, and serves them to trainers, scaling out to eliminate data
+//! stalls.
+//!
+//! Control plane: [`Master`] — session spec intake, split generation and
+//! work distribution, fault tolerance (checkpointing + stateless-worker
+//! restart), and the auto-scaling controller.
+//!
+//! Data plane: [`WorkerCore`]/[`Worker`] — the extract→transform→load
+//! loop over real bytes (tectonic I/O → DWRF decode → transform DAGs →
+//! tensor batches); [`Client`] — the trainer-side hook with partitioned
+//! round-robin routing to a bounded set of workers.
+
+pub mod cache;
+pub mod client;
+pub mod master;
+pub mod service;
+pub mod spec;
+pub mod split;
+pub mod tensor;
+pub mod transport;
+pub mod worker;
+
+pub use cache::{session_fingerprint, TensorCache};
+pub use client::Client;
+pub use master::{Master, MasterCheckpoint, WorkerHealth};
+pub use service::{run_session, Session, SessionConfig, SessionReport};
+pub use spec::{PipelineOptions, SessionSpec};
+pub use split::{Split, SplitId};
+pub use tensor::TensorBatch;
+pub use worker::{Worker, WorkerCore};

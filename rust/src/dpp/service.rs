@@ -1,0 +1,393 @@
+//! Session orchestration: wires a Master, a scalable pool of Workers, and
+//! the trainer-side Clients into a running DPP session, with the
+//! auto-scaling loop and fault injection used by the experiments.
+
+use super::client::{partition_round_robin, Client};
+use super::master::Master;
+use super::spec::SessionSpec;
+use super::worker::{WireBatch, Worker};
+use crate::metrics::EtlMetrics;
+use crate::tectonic::Cluster;
+use crate::warehouse::Catalog;
+use anyhow::Result;
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Session runtime knobs.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    pub initial_workers: usize,
+    pub max_workers: usize,
+    pub clients: usize,
+    /// Bounded tensor buffer per worker (batches).
+    pub buffer_per_worker: usize,
+    /// Run the Master's auto-scaling controller at this cadence.
+    pub autoscale_every: Option<Duration>,
+    /// Trainer demand pacing: max rows/s each client consumes
+    /// (`None` = consume as fast as possible).
+    pub client_rows_per_sec: Option<f64>,
+    /// Fault injection: kill one worker after this many batches have been
+    /// delivered (session must still complete).
+    pub kill_worker_after_batches: Option<u64>,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            initial_workers: 2,
+            max_workers: 8,
+            clients: 1,
+            buffer_per_worker: 16,
+            autoscale_every: None,
+            client_rows_per_sec: None,
+            kill_worker_after_batches: None,
+        }
+    }
+}
+
+/// What a finished session reports (feeds Tables 7/9 and Fig 8/9).
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    pub rows_delivered: u64,
+    pub batches_delivered: u64,
+    pub wall_secs: f64,
+    pub rows_per_sec: f64,
+    /// Total client wire bytes (loading throughput).
+    pub client_rx_bytes: u64,
+    /// Seconds clients spent stalled waiting on tensors.
+    pub client_stall_secs: f64,
+    pub peak_workers: usize,
+    /// Merged worker pipeline metrics snapshot.
+    pub storage_rx_bytes: u64,
+    pub tensor_tx_bytes: u64,
+    pub worker_busy_secs: f64,
+    pub worker_qps: f64,
+    /// Storage-device accounting for the session's reads.
+    pub storage_device_secs: f64,
+    pub storage_reads: u64,
+    pub storage_seeks: u64,
+    pub storage_bytes_read: u64,
+}
+
+impl SessionReport {
+    /// Effective storage throughput: useful bytes fetched per device-sec.
+    pub fn storage_mbps(&self) -> f64 {
+        if self.storage_device_secs == 0.0 {
+            0.0
+        } else {
+            self.storage_bytes_read as f64 / 1e6 / self.storage_device_secs
+        }
+    }
+}
+
+/// Run a DPP session to completion.
+pub fn run_session(
+    catalog: &Catalog,
+    cluster: &Arc<Cluster>,
+    spec: SessionSpec,
+    cfg: &SessionConfig,
+) -> Result<SessionReport> {
+    assert!(cfg.initial_workers >= 1);
+    assert!(cfg.max_workers >= cfg.initial_workers);
+    let master = Arc::new(Master::new(catalog, cluster, spec.clone())?);
+    let spec = Arc::new(spec);
+    let metrics = Arc::new(EtlMetrics::default());
+    cluster.reset_stats();
+
+    // Pre-create channel pairs for the maximum pool so clients' connection
+    // sets are fixed while workers scale dynamically.
+    let mut txs: Vec<Option<SyncSender<WireBatch>>> = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..cfg.max_workers {
+        let (tx, rx) = sync_channel(cfg.buffer_per_worker);
+        txs.push(Some(tx));
+        rxs.push(Some(rx));
+    }
+    let parts = partition_round_robin(cfg.max_workers, cfg.clients);
+
+    // Spawn clients.
+    let table = spec.table.clone();
+    let mut client_handles = Vec::new();
+    for part in parts {
+        let client_rxs: Vec<_> =
+            part.iter().map(|&w| rxs[w].take().unwrap()).collect();
+        let table = table.clone();
+        let pace = cfg.client_rows_per_sec;
+        client_handles.push(std::thread::spawn(move || {
+            let mut client = Client::new(&table, client_rxs);
+            let mut rows = 0u64;
+            let mut batches = 0u64;
+            let start = Instant::now();
+            while let Ok(Some(tb)) = client.next_batch(Duration::from_secs(30))
+            {
+                rows += tb.rows as u64;
+                batches += 1;
+                if let Some(rate) = pace {
+                    // Trainer demand model: don't consume faster than the
+                    // GPUs would.
+                    let target = rows as f64 / rate;
+                    let elapsed = start.elapsed().as_secs_f64();
+                    if target > elapsed {
+                        std::thread::sleep(Duration::from_secs_f64(
+                            target - elapsed,
+                        ));
+                    }
+                }
+            }
+            (rows, batches, client.rx_bytes.get(), client.stalled())
+        }));
+    }
+
+    // Spawn initial workers.
+    let start = Instant::now();
+    let mut workers: Vec<Worker> = Vec::new();
+    for _ in 0..cfg.initial_workers {
+        let tx = txs[workers.len()].take().unwrap();
+        workers.push(Worker::spawn(
+            master.clone(),
+            cluster.clone(),
+            spec.clone(),
+            metrics.clone(),
+            tx,
+        ));
+    }
+    let mut peak_workers = workers.len();
+    let mut killed = false;
+
+    // Control loop: autoscale + fault injection + completion watch.
+    loop {
+        if master.is_done() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        master.reap_expired(Duration::from_secs(5));
+        if let Some(n) = cfg.kill_worker_after_batches {
+            if !killed && metrics.batches.get() >= n && workers.len() > 1 {
+                workers[0].kill();
+                master.worker_failed(workers[0].id);
+                killed = true;
+            }
+        }
+        if cfg.autoscale_every.is_some() {
+            let desired = master
+                .autoscale(workers.len())
+                .min(cfg.max_workers);
+            while workers.len() < desired {
+                let Some(tx) = txs[workers.len()].take() else { break };
+                workers.push(Worker::spawn(
+                    master.clone(),
+                    cluster.clone(),
+                    spec.clone(),
+                    metrics.clone(),
+                    tx,
+                ));
+            }
+            peak_workers = peak_workers.max(workers.len());
+        }
+    }
+
+    // Drain: drop unspawned senders so clients observe end-of-stream,
+    // then join workers (dropping their senders).
+    for t in txs.iter_mut() {
+        t.take();
+    }
+    for w in workers {
+        w.join();
+    }
+    let mut rows = 0u64;
+    let mut batches = 0u64;
+    let mut rx_bytes = 0u64;
+    let mut stalls = 0.0f64;
+    for h in client_handles {
+        let (r, b, bytes, stall) = h.join().expect("client thread");
+        rows += r;
+        batches += b;
+        rx_bytes += bytes;
+        stalls += stall;
+    }
+    let wall = start.elapsed().as_secs_f64();
+    let st = cluster.stats();
+    Ok(SessionReport {
+        rows_delivered: rows,
+        batches_delivered: batches,
+        wall_secs: wall,
+        rows_per_sec: rows as f64 / wall.max(1e-9),
+        client_rx_bytes: rx_bytes,
+        client_stall_secs: stalls,
+        peak_workers,
+        storage_rx_bytes: metrics.storage_rx_bytes.get(),
+        tensor_tx_bytes: metrics.tensor_tx_bytes.get(),
+        worker_busy_secs: metrics.total_secs(),
+        worker_qps: metrics.qps(),
+        storage_device_secs: st.device_secs,
+        storage_reads: st.reads,
+        storage_seeks: st.seeks,
+        storage_bytes_read: st.bytes_read,
+    })
+}
+
+/// A full standard session over an RM-shaped dataset (shared by tests,
+/// benches, and the paper drivers).
+pub struct Session;
+
+impl Session {
+    pub fn run(
+        catalog: &Catalog,
+        cluster: &Arc<Cluster>,
+        spec: SessionSpec,
+        cfg: &SessionConfig,
+    ) -> Result<SessionReport> {
+        run_session(catalog, cluster, spec, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{RmConfig, RmId, SimScale};
+    use crate::datagen::build_dataset;
+    use crate::dwrf::WriterOptions;
+    use crate::schema::FeatureKind;
+    use crate::tectonic::ClusterConfig;
+    use crate::transforms::{Op, TransformDag};
+
+    fn setup() -> (Arc<Cluster>, Catalog, SessionSpec) {
+        let cluster = Arc::new(Cluster::new(ClusterConfig {
+            chunk_bytes: 64 << 10,
+            ..Default::default()
+        }));
+        let catalog = Catalog::new();
+        let rm = RmConfig::get(RmId::Rm3);
+        let scale = SimScale::tiny();
+        let h = build_dataset(
+            &cluster,
+            &catalog,
+            &rm,
+            &scale,
+            WriterOptions {
+                stripe_rows: 16,
+                ..Default::default()
+            },
+            21,
+        )
+        .unwrap();
+        let dense = h
+            .schema
+            .features
+            .iter()
+            .find(|f| matches!(f.kind, FeatureKind::Dense))
+            .unwrap()
+            .id;
+        let sparse = h
+            .schema
+            .features
+            .iter()
+            .find(|f| !matches!(f.kind, FeatureKind::Dense))
+            .unwrap()
+            .id;
+        let mut dag = TransformDag::default();
+        let d = dag.input_dense(dense);
+        let l = dag.apply(Op::Logit { eps: 1e-3 }, vec![d]);
+        dag.output(dense, l);
+        let s = dag.input_sparse(sparse);
+        let hh = dag.apply(
+            Op::SigridHash {
+                salt: 3,
+                modulus: 4096,
+            },
+            vec![s],
+        );
+        dag.output(sparse, hh);
+        let spec = SessionSpec::from_dag(&h.table_name, 0, 10, dag, 16);
+        (cluster, catalog, spec)
+    }
+
+    #[test]
+    fn session_delivers_every_row_once() {
+        let (cluster, catalog, spec) = setup();
+        let report = Session::run(
+            &catalog,
+            &cluster,
+            spec,
+            &SessionConfig {
+                initial_workers: 2,
+                max_workers: 4,
+                clients: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.rows_delivered, 128);
+        assert!(report.batches_delivered >= 8);
+        assert!(report.rows_per_sec > 0.0);
+        assert!(report.client_rx_bytes > 0);
+        assert!(report.storage_bytes_read > 0);
+    }
+
+    #[test]
+    fn session_survives_worker_failure() {
+        let (cluster, catalog, spec) = setup();
+        let report = Session::run(
+            &catalog,
+            &cluster,
+            spec,
+            &SessionConfig {
+                initial_workers: 2,
+                max_workers: 4,
+                clients: 1,
+                kill_worker_after_batches: Some(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // All rows still delivered (the killed worker's split re-runs; it
+        // may double-deliver a split's already-buffered batches, so >=).
+        assert!(report.rows_delivered >= 128, "{}", report.rows_delivered);
+    }
+
+    #[test]
+    fn autoscaler_spawns_more_workers_under_demand() {
+        let (cluster, catalog, spec) = setup();
+        let report = Session::run(
+            &catalog,
+            &cluster,
+            spec,
+            &SessionConfig {
+                initial_workers: 1,
+                max_workers: 4,
+                clients: 1,
+                buffer_per_worker: 1,
+                autoscale_every: Some(Duration::from_millis(1)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(report.peak_workers >= 1);
+        assert_eq!(report.rows_delivered, 128);
+    }
+
+    #[test]
+    fn paced_client_throttles_throughput() {
+        let (cluster, catalog, spec) = setup();
+        let fast = Session::run(
+            &catalog,
+            &cluster,
+            spec.clone(),
+            &SessionConfig::default(),
+        )
+        .unwrap();
+        let slow = Session::run(
+            &catalog,
+            &cluster,
+            spec,
+            &SessionConfig {
+                client_rows_per_sec: Some(400.0),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(slow.wall_secs > fast.wall_secs);
+        assert!(slow.rows_per_sec <= 500.0);
+    }
+}

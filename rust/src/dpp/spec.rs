@@ -1,0 +1,121 @@
+//! The session specification a training job hands to the DPP Master
+//! (§3.2.1): "the dataset table, specific partitions, required features,
+//! and transformation operations for each feature" — the PyTorch DataSet
+//! analogue — plus the pipeline-optimization toggles characterized in
+//! Table 12.
+
+use crate::dwrf::plan::COALESCE_WINDOW;
+use crate::dwrf::Projection;
+use crate::schema::FeatureId;
+use crate::transforms::TransformDag;
+
+/// Worker-side pipeline toggles (the read/decode/format levers of
+/// Table 12; the write-side levers FF/FR/LS are fixed at dataset-build
+/// time in [`crate::dwrf::WriterOptions`]).
+#[derive(Clone, Debug)]
+pub struct PipelineOptions {
+    /// Coalesced reads window (CR). `None` = one I/O per stream.
+    pub coalesce: Option<u64>,
+    /// Branch-lean decode inner loops (LO).
+    pub fast_decode: bool,
+    /// Keep batches columnar end-to-end (FM, "in-memory flatmap");
+    /// `false` = reconstruct row maps and convert back (the baseline's
+    /// extra format changes and copies).
+    pub flatmap: bool,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        // Production configuration: everything on.
+        PipelineOptions {
+            coalesce: Some(COALESCE_WINDOW),
+            fast_decode: true,
+            flatmap: true,
+        }
+    }
+}
+
+impl PipelineOptions {
+    /// The pre-optimization worker (for ablations).
+    pub fn baseline() -> PipelineOptions {
+        PipelineOptions {
+            coalesce: None,
+            fast_decode: false,
+            flatmap: false,
+        }
+    }
+}
+
+/// A training job's preprocessing workload.
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    pub table: String,
+    /// Row filter: day partitions `[from_day, to_day]`.
+    pub from_day: u32,
+    pub to_day: u32,
+    /// Column filter: raw features to read.
+    pub projection: Projection,
+    /// Per-feature transformation program.
+    pub dag: TransformDag,
+    /// Rows per output tensor batch.
+    pub batch_size: usize,
+    /// Stripes per split (work-item granularity).
+    pub stripes_per_split: usize,
+    pub pipeline: PipelineOptions,
+}
+
+impl SessionSpec {
+    /// Build a spec whose projection is exactly the DAG's required inputs
+    /// (plus any extra features the caller wants materialized raw).
+    pub fn from_dag(
+        table: &str,
+        from_day: u32,
+        to_day: u32,
+        dag: TransformDag,
+        batch_size: usize,
+    ) -> SessionSpec {
+        let inputs: Vec<FeatureId> = dag.required_inputs();
+        SessionSpec {
+            table: table.to_string(),
+            from_day,
+            to_day,
+            projection: Projection::new(inputs),
+            dag,
+            batch_size,
+            stripes_per_split: 2,
+            pipeline: PipelineOptions::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transforms::Op;
+
+    #[test]
+    fn spec_projection_tracks_dag_inputs() {
+        let mut dag = TransformDag::default();
+        let a = dag.input(FeatureId(3));
+        let b = dag.input(FeatureId(9));
+        let x = dag.apply(Op::Cartesian, vec![a, b]);
+        dag.output(FeatureId(100), x);
+        let spec = SessionSpec::from_dag("t", 0, 1, dag, 32);
+        assert_eq!(spec.projection.len(), 2);
+        assert!(spec.projection.contains(FeatureId(3)));
+        assert!(spec.projection.contains(FeatureId(9)));
+        assert!(!spec.projection.contains(FeatureId(100)));
+    }
+
+    #[test]
+    fn default_pipeline_is_fully_optimized() {
+        let p = PipelineOptions::default();
+        assert!(p.coalesce.is_some());
+        assert!(p.fast_decode);
+        assert!(p.flatmap);
+        let b = PipelineOptions::baseline();
+        assert!(b.coalesce.is_none());
+        assert!(!b.fast_decode);
+        assert!(!b.flatmap);
+    }
+}

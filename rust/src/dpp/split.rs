@@ -1,0 +1,99 @@
+//! Splits: "independent and self-contained work items for the data plane
+//! ... that represent successive rows of the entire dataset" (§3.2.1).
+//!
+//! A split is a run of stripes within one partition file. The Master
+//! enumerates partition footers once at session start (control-plane
+//! I/O) and slices each file into splits.
+
+use crate::tectonic::FileId;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SplitId(pub u64);
+
+/// One self-contained work item.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Split {
+    pub id: SplitId,
+    pub file: FileId,
+    /// Partition day (for bookkeeping / popularity accounting).
+    pub day: u32,
+    /// First stripe index in the file.
+    pub stripe_start: usize,
+    /// Number of stripes.
+    pub stripe_count: usize,
+    /// Total rows covered (from the footer).
+    pub rows: u64,
+}
+
+/// Slice a partition's stripe row-counts into splits.
+pub fn splits_for_partition(
+    next_id: &mut u64,
+    file: FileId,
+    day: u32,
+    stripe_rows: &[u32],
+    stripes_per_split: usize,
+) -> Vec<Split> {
+    assert!(stripes_per_split > 0);
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < stripe_rows.len() {
+        let count = stripes_per_split.min(stripe_rows.len() - i);
+        let rows: u64 = stripe_rows[i..i + count].iter().map(|&r| r as u64).sum();
+        out.push(Split {
+            id: SplitId(*next_id),
+            file,
+            day,
+            stripe_start: i,
+            stripe_count: count,
+            rows,
+        });
+        *next_id += 1;
+        i += count;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_cover_all_stripes_exactly_once() {
+        let mut id = 0;
+        let rows = vec![100u32, 100, 100, 100, 50];
+        let splits = splits_for_partition(&mut id, FileId(1), 0, &rows, 2);
+        assert_eq!(splits.len(), 3);
+        assert_eq!(splits[0].stripe_count, 2);
+        assert_eq!(splits[2].stripe_count, 1);
+        let total_rows: u64 = splits.iter().map(|s| s.rows).sum();
+        assert_eq!(total_rows, 450);
+        // Stripes tile the file.
+        let mut covered = vec![false; rows.len()];
+        for s in &splits {
+            for k in s.stripe_start..s.stripe_start + s.stripe_count {
+                assert!(!covered[k]);
+                covered[k] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+        assert_eq!(id, 3);
+    }
+
+    #[test]
+    fn ids_are_unique_across_partitions() {
+        let mut id = 0;
+        let a = splits_for_partition(&mut id, FileId(1), 0, &[10, 10], 1);
+        let b = splits_for_partition(&mut id, FileId(2), 1, &[10], 1);
+        let mut ids: Vec<u64> =
+            a.iter().chain(b.iter()).map(|s| s.id.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 3);
+    }
+
+    #[test]
+    fn empty_partition_yields_no_splits() {
+        let mut id = 0;
+        assert!(splits_for_partition(&mut id, FileId(1), 0, &[], 2).is_empty());
+    }
+}

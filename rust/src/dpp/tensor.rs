@@ -1,0 +1,275 @@
+//! Preprocessed tensor batches and their wire format.
+//!
+//! Workers batch transformed features into tensors (§3.2.1) and serve
+//! them to Clients over RPC. The wire path models the paper's
+//! "datacenter tax" (§6.2): a Thrift-like compact binary serialization
+//! plus TLS-style encryption — both real byte passes whose CPU/memory
+//! cost shows up in the Fig 8 loading experiment.
+
+use crate::dwrf::crypto::StreamCipher;
+use crate::schema::FeatureId;
+use crate::transforms::Value;
+use crate::util::bytes::{put_f32, put_u32, put_varint, ByteReader};
+use anyhow::{bail, Context, Result};
+
+/// A ready-to-load mini-batch: dense matrix + CSR sparse features +
+/// labels. This layout mirrors what the PyTorch runtime hands the GPU
+/// (and what our PJRT DLRM artifact consumes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorBatch {
+    pub rows: usize,
+    /// Row-major `[rows, dense_names.len()]`.
+    pub dense: Vec<f32>,
+    pub dense_names: Vec<FeatureId>,
+    /// Per sparse feature: (id, offsets `[rows+1]`, ids).
+    pub sparse: Vec<(FeatureId, Vec<u32>, Vec<u64>)>,
+    pub labels: Vec<f32>,
+}
+
+impl TensorBatch {
+    /// Assemble from transform-DAG outputs for rows `[row_start, row_end)`.
+    pub fn from_outputs(
+        outputs: &[(FeatureId, Value)],
+        labels: &[f32],
+        row_start: usize,
+        row_end: usize,
+    ) -> TensorBatch {
+        let rows = row_end - row_start;
+        let mut dense_names = Vec::new();
+        let mut dense_cols: Vec<&[f32]> = Vec::new();
+        let mut sparse = Vec::new();
+        for (id, v) in outputs {
+            match v {
+                Value::Dense(d) => {
+                    dense_names.push(*id);
+                    dense_cols.push(&d[row_start..row_end]);
+                }
+                Value::Sparse { offsets, ids, .. } => {
+                    let base = offsets[row_start];
+                    let o: Vec<u32> = offsets[row_start..=row_end]
+                        .iter()
+                        .map(|x| x - base)
+                        .collect();
+                    let idv = ids
+                        [offsets[row_start] as usize..offsets[row_end] as usize]
+                        .to_vec();
+                    sparse.push((*id, o, idv));
+                }
+            }
+        }
+        // Interleave dense columns into a row-major matrix.
+        let d = dense_names.len();
+        let mut dense = vec![0f32; rows * d];
+        for (j, col) in dense_cols.iter().enumerate() {
+            for (i, &v) in col.iter().enumerate() {
+                dense[i * d + j] = v;
+            }
+        }
+        TensorBatch {
+            rows,
+            dense,
+            dense_names,
+            sparse,
+            labels: labels[row_start..row_end].to_vec(),
+        }
+    }
+
+    /// In-memory footprint (for buffer accounting / autoscaler).
+    pub fn bytes(&self) -> usize {
+        self.dense.len() * 4
+            + self.labels.len() * 4
+            + self
+                .sparse
+                .iter()
+                .map(|(_, o, i)| o.len() * 4 + i.len() * 8)
+                .sum::<usize>()
+    }
+
+    // ---- Wire format (Thrift-compact-like: field markers + varints) ----
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.bytes() + 64);
+        put_varint(&mut out, self.rows as u64);
+        put_varint(&mut out, self.dense_names.len() as u64);
+        for f in &self.dense_names {
+            put_u32(&mut out, f.0);
+        }
+        for &v in &self.dense {
+            put_f32(&mut out, v);
+        }
+        put_varint(&mut out, self.sparse.len() as u64);
+        for (f, offsets, ids) in &self.sparse {
+            put_u32(&mut out, f.0);
+            let mut prev = 0u32;
+            for &o in &offsets[1..] {
+                put_varint(&mut out, (o - prev) as u64);
+                prev = o;
+            }
+            put_varint(&mut out, ids.len() as u64);
+            for &id in ids {
+                put_varint(&mut out, id);
+            }
+        }
+        for &l in &self.labels {
+            put_f32(&mut out, l);
+        }
+        out
+    }
+
+    pub fn deserialize(buf: &[u8]) -> Result<TensorBatch> {
+        let mut r = ByteReader::new(buf);
+        let rows = r.varint().context("rows")? as usize;
+        let nd = r.varint().context("nd")? as usize;
+        let mut dense_names = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            dense_names.push(FeatureId(r.u32().context("dense name")?));
+        }
+        let mut dense = Vec::with_capacity(rows * nd);
+        for _ in 0..rows * nd {
+            dense.push(r.f32().context("dense value")?);
+        }
+        let ns = r.varint().context("ns")? as usize;
+        let mut sparse = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            let f = FeatureId(r.u32().context("sparse name")?);
+            let mut offsets = Vec::with_capacity(rows + 1);
+            offsets.push(0u32);
+            let mut acc = 0u32;
+            for _ in 0..rows {
+                acc += r.varint().context("offset")? as u32;
+                offsets.push(acc);
+            }
+            let n = r.varint().context("n ids")? as usize;
+            if n != acc as usize {
+                bail!("sparse length mismatch: {n} vs {acc}");
+            }
+            let mut ids = Vec::with_capacity(n);
+            for _ in 0..n {
+                ids.push(r.varint().context("id")?);
+            }
+            sparse.push((f, offsets, ids));
+        }
+        let mut labels = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            labels.push(r.f32().context("label")?);
+        }
+        Ok(TensorBatch {
+            rows,
+            dense,
+            dense_names,
+            sparse,
+            labels,
+        })
+    }
+
+    /// Serialize + encrypt — the full worker→client wire cost.
+    pub fn to_wire(&self, cipher: &StreamCipher, seq: u64) -> Vec<u8> {
+        let mut buf = self.serialize();
+        cipher.apply(seq, &mut buf);
+        buf
+    }
+
+    pub fn from_wire(cipher: &StreamCipher, seq: u64, data: &[u8]) -> Result<TensorBatch> {
+        let mut buf = data.to_vec();
+        cipher.apply(seq, &mut buf);
+        Self::deserialize(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch() -> TensorBatch {
+        let outputs = vec![
+            (FeatureId(1), Value::Dense(vec![1.0, 2.0, 3.0, 4.0])),
+            (FeatureId(2), Value::Dense(vec![-1.0, -2.0, -3.0, -4.0])),
+            (
+                FeatureId(10),
+                Value::Sparse {
+                    offsets: vec![0, 2, 2, 5, 6],
+                    ids: vec![7, 8, 1, 2, 3, 9],
+                    scores: None,
+                },
+            ),
+        ];
+        let labels = vec![0.0, 1.0, 1.0, 0.0];
+        TensorBatch::from_outputs(&outputs, &labels, 0, 4)
+    }
+
+    #[test]
+    fn from_outputs_interleaves_dense() {
+        let b = batch();
+        assert_eq!(b.rows, 4);
+        assert_eq!(b.dense_names.len(), 2);
+        // Row-major [4,2]: row 0 = [1, -1].
+        assert_eq!(&b.dense[..2], &[1.0, -1.0]);
+        assert_eq!(&b.dense[6..], &[4.0, -4.0]);
+        assert_eq!(b.sparse[0].1, vec![0, 2, 2, 5, 6]);
+    }
+
+    #[test]
+    fn from_outputs_slices_rows() {
+        let outputs = vec![
+            (FeatureId(1), Value::Dense(vec![1.0, 2.0, 3.0, 4.0])),
+            (
+                FeatureId(10),
+                Value::Sparse {
+                    offsets: vec![0, 2, 2, 5, 6],
+                    ids: vec![7, 8, 1, 2, 3, 9],
+                    scores: None,
+                },
+            ),
+        ];
+        let labels = vec![0.0, 1.0, 1.0, 0.0];
+        let b = TensorBatch::from_outputs(&outputs, &labels, 2, 4);
+        assert_eq!(b.rows, 2);
+        assert_eq!(b.dense, vec![3.0, 4.0]);
+        assert_eq!(b.sparse[0].1, vec![0, 3, 4]); // rebased offsets
+        assert_eq!(b.sparse[0].2, vec![1, 2, 3, 9]);
+        assert_eq!(b.labels, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let b = batch();
+        let buf = b.serialize();
+        let back = TensorBatch::deserialize(&buf).unwrap();
+        assert_eq!(back, b);
+    }
+
+    #[test]
+    fn encrypted_wire_roundtrip() {
+        let b = batch();
+        let cipher = StreamCipher::for_table("session-1");
+        let wire = b.to_wire(&cipher, 42);
+        assert_ne!(wire, b.serialize());
+        let back = TensorBatch::from_wire(&cipher, 42, &wire).unwrap();
+        assert_eq!(back, b);
+    }
+
+    #[test]
+    fn wrong_seq_fails_or_garbles() {
+        let b = batch();
+        let cipher = StreamCipher::for_table("s");
+        let wire = b.to_wire(&cipher, 1);
+        match TensorBatch::from_wire(&cipher, 2, &wire) {
+            Err(_) => {}
+            Ok(garbled) => assert_ne!(garbled, b),
+        }
+    }
+
+    #[test]
+    fn truncated_wire_errors() {
+        let b = batch();
+        let buf = b.serialize();
+        assert!(TensorBatch::deserialize(&buf[..buf.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn bytes_accounting_positive() {
+        let b = batch();
+        assert!(b.bytes() > 0);
+        assert!(b.bytes() >= b.dense.len() * 4);
+    }
+}

@@ -1,0 +1,206 @@
+//! TCP transport for the worker→client tensor stream: the actual
+//! disaggregation boundary. In-process sessions use channels; this module
+//! carries the identical wire frames over sockets so Workers and Clients
+//! can live on different hosts (as in production, where each Client keeps
+//! a capped set of connections to its partition of Workers).
+//!
+//! Frame: `[magic u32][seq u64][rows u32][len u32][payload]`, little
+//! endian. The payload is the already-encrypted `WireBatch` body, so the
+//! transport adds framing only — TLS-equivalent protection is the
+//! payload encryption applied at serialization time.
+
+use super::worker::WireBatch;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+const FRAME_MAGIC: u32 = 0xD51_F00D;
+
+/// Send one batch over a stream.
+pub fn send_batch(stream: &mut TcpStream, b: &WireBatch) -> std::io::Result<()> {
+    let mut header = [0u8; 20];
+    header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    header[4..12].copy_from_slice(&b.seq.to_le_bytes());
+    header[12..16].copy_from_slice(&(b.rows as u32).to_le_bytes());
+    header[16..20].copy_from_slice(&(b.bytes.len() as u32).to_le_bytes());
+    stream.write_all(&header)?;
+    stream.write_all(&b.bytes)
+}
+
+/// Receive one batch; `Ok(None)` on clean end-of-stream.
+pub fn recv_batch(stream: &mut TcpStream) -> std::io::Result<Option<WireBatch>> {
+    let mut header = [0u8; 20];
+    match stream.read_exact(&mut header) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Ok(None)
+        }
+        Err(e) => return Err(e),
+    }
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame magic {magic:#x}"),
+        ));
+    }
+    let seq = u64::from_le_bytes(header[4..12].try_into().unwrap());
+    let rows = u32::from_le_bytes(header[12..16].try_into().unwrap()) as usize;
+    let len = u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
+    let mut bytes = vec![0u8; len];
+    stream.read_exact(&mut bytes)?;
+    Ok(Some(WireBatch { seq, rows, bytes }))
+}
+
+/// Serve a stream of batches to the first client that connects, then
+/// close. Returns the bound address immediately; the serving happens on
+/// a background thread (the DPP Worker's "serve tensors" half).
+pub fn serve_batches(
+    batches: Vec<WireBatch>,
+) -> std::io::Result<(std::net::SocketAddr, std::thread::JoinHandle<std::io::Result<()>>)>
+{
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let handle = std::thread::spawn(move || -> std::io::Result<()> {
+        let (mut stream, _) = listener.accept()?;
+        stream.set_nodelay(true)?;
+        for b in &batches {
+            send_batch(&mut stream, b)?;
+        }
+        Ok(())
+    });
+    Ok((addr, handle))
+}
+
+/// Client half: connect and drain all batches.
+pub fn fetch_all(addr: std::net::SocketAddr) -> std::io::Result<Vec<WireBatch>> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut out = Vec::new();
+    while let Some(b) = recv_batch(&mut stream)? {
+        out.push(b);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::TensorBatch;
+    use crate::dwrf::crypto::StreamCipher;
+    use crate::schema::FeatureId;
+
+    fn batch(seq: u64) -> WireBatch {
+        let tb = TensorBatch {
+            rows: 4,
+            dense: vec![seq as f32; 8],
+            dense_names: vec![FeatureId(0), FeatureId(1)],
+            sparse: vec![(FeatureId(9), vec![0, 1, 2, 2, 3], vec![7, 8, 9])],
+            labels: vec![0.0, 1.0, 1.0, 0.0],
+        };
+        let cipher = StreamCipher::for_table("tcp");
+        WireBatch {
+            seq,
+            rows: 4,
+            bytes: tb.to_wire(&cipher, seq),
+        }
+    }
+
+    #[test]
+    fn tcp_roundtrip_preserves_batches() {
+        let batches: Vec<WireBatch> = (0..16).map(batch).collect();
+        let (addr, server) = serve_batches(batches.clone()).unwrap();
+        let got = fetch_all(addr).unwrap();
+        server.join().unwrap().unwrap();
+        assert_eq!(got.len(), 16);
+        let cipher = StreamCipher::for_table("tcp");
+        for (a, b) in got.iter().zip(batches.iter()) {
+            assert_eq!(a.seq, b.seq);
+            assert_eq!(a.bytes, b.bytes);
+            // Payload decrypts + deserializes on the far side.
+            let tb = TensorBatch::from_wire(&cipher, a.seq, &a.bytes).unwrap();
+            assert_eq!(tb.rows, 4);
+            assert_eq!(tb.dense[0], a.seq as f32);
+        }
+    }
+
+    #[test]
+    fn tcp_full_worker_stream() {
+        // End to end: a real WorkerCore's output shipped over TCP and
+        // consumed like a trainer would.
+        use crate::config::{RmConfig, RmId, SimScale};
+        use crate::datagen::build_dataset;
+        use crate::dpp::{Master, SessionSpec, WorkerCore};
+        use crate::dwrf::{Projection, WriterOptions};
+        use crate::metrics::EtlMetrics;
+        use crate::tectonic::{Cluster, ClusterConfig};
+        use crate::transforms::TransformDag;
+        use std::sync::Arc;
+
+        let cluster = Arc::new(Cluster::new(ClusterConfig {
+            chunk_bytes: 64 << 10,
+            ..Default::default()
+        }));
+        let catalog = crate::warehouse::Catalog::new();
+        let rm = RmConfig::get(RmId::Rm3);
+        let h = build_dataset(
+            &cluster,
+            &catalog,
+            &rm,
+            &SimScale::tiny(),
+            WriterOptions {
+                stripe_rows: 16,
+                ..Default::default()
+            },
+            33,
+        )
+        .unwrap();
+        let feats: Vec<_> =
+            h.schema.features.iter().take(6).map(|f| f.id).collect();
+        let mut dag = TransformDag::default();
+        for &f in &feats {
+            let i = dag.input(f);
+            dag.output(f, i);
+        }
+        let mut spec = SessionSpec::from_dag(&h.table_name, 0, 9, dag, 16);
+        spec.projection = Projection::new(feats);
+        let spec = Arc::new(spec);
+        let master = Master::new(&catalog, &cluster, (*spec).clone()).unwrap();
+        let w = master.register_worker();
+        let metrics = Arc::new(EtlMetrics::default());
+        let mut core = WorkerCore::new(spec.clone(), cluster, metrics);
+        let mut all = Vec::new();
+        while let Some(split) = master.fetch_split(w) {
+            all.extend(core.process_split(&split).unwrap());
+            master.complete_split(w, split.id);
+        }
+        let n = all.len();
+        let (addr, server) = serve_batches(all).unwrap();
+        let got = fetch_all(addr).unwrap();
+        server.join().unwrap().unwrap();
+        assert_eq!(got.len(), n);
+        let cipher = StreamCipher::for_table(&spec.table);
+        let rows: usize = got
+            .iter()
+            .map(|b| {
+                TensorBatch::from_wire(&cipher, b.seq, &b.bytes)
+                    .unwrap()
+                    .rows
+            })
+            .sum();
+        assert_eq!(rows, 128);
+    }
+
+    #[test]
+    fn corrupt_frame_rejected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            s.write_all(&[0u8; 20]).unwrap(); // zero magic
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let err = recv_batch(&mut stream);
+        h.join().unwrap();
+        assert!(err.is_err());
+    }
+}

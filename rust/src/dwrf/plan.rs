@@ -1,0 +1,218 @@
+//! Read planning: which file extents a projection needs, and how they are
+//! grouped into physical I/Os.
+//!
+//! This is where two of the paper's optimizations live:
+//! * **Coalesced reads (§7.5)** — group selected feature streams within a
+//!   window (paper: 1.25 MiB) into one I/O, amortizing HDD seeks at the
+//!   cost of over-reading the gap bytes between wanted streams.
+//! * The plan's `useful_bytes` vs `read_bytes` vs `num_ios` accounting is
+//!   what the storage device model (tectonic) consumes, and what Table 6
+//!   and Table 12's storage rows are computed from.
+
+/// The paper's coalescing window.
+pub const COALESCE_WINDOW: u64 = 1_310_720; // 1.25 MiB
+
+/// One physical I/O against a file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IoRange {
+    pub offset: u64,
+    pub len: u64,
+}
+
+impl IoRange {
+    pub fn end(&self) -> u64 {
+        self.offset + self.len
+    }
+}
+
+/// Plan for one stripe: the wanted stream indices and the physical I/Os
+/// that cover them.
+#[derive(Clone, Debug)]
+pub struct StripePlan {
+    pub stripe: usize,
+    /// Indices into `StripeInfo::streams` that the projection needs.
+    pub wanted_streams: Vec<usize>,
+    pub ios: Vec<IoRange>,
+}
+
+/// Plan for a whole file.
+#[derive(Clone, Debug, Default)]
+pub struct ReadPlan {
+    pub stripes: Vec<StripePlan>,
+    /// Bytes belonging to wanted streams.
+    pub useful_bytes: u64,
+    /// Bytes actually fetched (>= useful when coalescing over-reads gaps).
+    pub read_bytes: u64,
+}
+
+impl ReadPlan {
+    pub fn num_ios(&self) -> usize {
+        self.stripes.iter().map(|s| s.ios.len()).sum()
+    }
+
+    pub fn io_sizes(&self) -> Vec<u64> {
+        self.stripes
+            .iter()
+            .flat_map(|s| s.ios.iter().map(|io| io.len))
+            .collect()
+    }
+
+    /// Over-read ratio: fetched / useful.
+    pub fn overread(&self) -> f64 {
+        if self.useful_bytes == 0 {
+            1.0
+        } else {
+            self.read_bytes as f64 / self.useful_bytes as f64
+        }
+    }
+}
+
+/// Merge sorted extents into physical I/Os.
+///
+/// `window = None` → one I/O per extent (no coalescing — post-FF baseline).
+/// `window = Some(w)` → greedy merge while the coalesced I/O stays ≤ `w`.
+/// Gaps between merged extents are over-read.
+pub fn coalesce(mut extents: Vec<IoRange>, window: Option<u64>) -> Vec<IoRange> {
+    extents.sort_by_key(|e| e.offset);
+    let Some(w) = window else {
+        return extents;
+    };
+    let mut out: Vec<IoRange> = Vec::with_capacity(extents.len());
+    for e in extents {
+        match out.last_mut() {
+            Some(cur) if e.end().saturating_sub(cur.offset) <= w && e.offset <= cur.end() + w => {
+                // Extend the current I/O through this extent (absorbing any
+                // gap) as long as the total stays within the window.
+                let new_end = cur.end().max(e.end());
+                if new_end - cur.offset <= w {
+                    cur.len = new_end - cur.offset;
+                    continue;
+                }
+                out.push(e);
+            }
+            _ => out.push(e),
+        }
+    }
+    out
+}
+
+/// Buffers produced by executing a plan's I/Os; lets the decoder slice out
+/// stream extents (streams may sit inside larger coalesced reads).
+#[derive(Clone, Debug, Default)]
+pub struct IoBuffers {
+    /// Sorted by offset, non-overlapping.
+    bufs: Vec<(IoRange, Vec<u8>)>,
+}
+
+impl IoBuffers {
+    pub fn new() -> IoBuffers {
+        IoBuffers::default()
+    }
+
+    pub fn insert(&mut self, range: IoRange, data: Vec<u8>) {
+        debug_assert_eq!(range.len as usize, data.len());
+        self.bufs.push((range, data));
+        self.bufs.sort_by_key(|(r, _)| r.offset);
+    }
+
+    /// Total fetched bytes held.
+    pub fn bytes(&self) -> u64 {
+        self.bufs.iter().map(|(r, _)| r.len).sum()
+    }
+
+    /// Slice out `[offset, offset+len)`; the extent must be fully inside
+    /// one fetched I/O.
+    pub fn slice(&self, offset: u64, len: u64) -> Option<&[u8]> {
+        let idx = match self
+            .bufs
+            .binary_search_by_key(&offset, |(r, _)| r.offset)
+        {
+            Ok(i) => i,
+            Err(0) => return None,
+            Err(i) => i - 1,
+        };
+        let (r, data) = &self.bufs[idx];
+        if offset >= r.offset && offset + len <= r.end() {
+            let start = (offset - r.offset) as usize;
+            Some(&data[start..start + len as usize])
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ext(offset: u64, len: u64) -> IoRange {
+        IoRange { offset, len }
+    }
+
+    #[test]
+    fn no_window_means_one_io_per_extent() {
+        let ios = coalesce(vec![ext(100, 10), ext(0, 10)], None);
+        assert_eq!(ios, vec![ext(0, 10), ext(100, 10)]);
+    }
+
+    #[test]
+    fn adjacent_extents_merge() {
+        let ios = coalesce(vec![ext(0, 10), ext(10, 10)], Some(1024));
+        assert_eq!(ios, vec![ext(0, 20)]);
+    }
+
+    #[test]
+    fn gap_within_window_is_absorbed() {
+        let ios = coalesce(vec![ext(0, 10), ext(50, 10)], Some(1024));
+        assert_eq!(ios, vec![ext(0, 60)]);
+    }
+
+    #[test]
+    fn window_limits_coalescing() {
+        // Total would be 2000 bytes > window of 100.
+        let ios = coalesce(vec![ext(0, 10), ext(1990, 10)], Some(100));
+        assert_eq!(ios.len(), 2);
+    }
+
+    #[test]
+    fn chain_respects_window() {
+        // Extents every 40 bytes of 10; window 100 → groups of ~3.
+        let extents: Vec<IoRange> = (0..6).map(|i| ext(i * 40, 10)).collect();
+        let ios = coalesce(extents, Some(100));
+        assert!(ios.len() >= 2);
+        for io in &ios {
+            assert!(io.len <= 100);
+        }
+        // Coverage: every original extent inside some I/O.
+        for i in 0..6u64 {
+            let (o, l) = (i * 40, 10);
+            assert!(
+                ios.iter().any(|io| o >= io.offset && o + l <= io.end()),
+                "extent {o} uncovered"
+            );
+        }
+    }
+
+    #[test]
+    fn io_buffers_slice_inside_coalesced_read() {
+        let mut bufs = IoBuffers::new();
+        bufs.insert(ext(100, 50), (0..50u8).collect());
+        assert_eq!(bufs.slice(110, 5), Some(&[10u8, 11, 12, 13, 14][..]));
+        assert_eq!(bufs.slice(100, 50).unwrap().len(), 50);
+        assert!(bufs.slice(95, 10).is_none());
+        assert!(bufs.slice(140, 20).is_none());
+        assert!(bufs.slice(0, 1).is_none());
+    }
+
+    #[test]
+    fn overread_accounting() {
+        let mut p = ReadPlan {
+            useful_bytes: 100,
+            read_bytes: 150,
+            ..Default::default()
+        };
+        assert!((p.overread() - 1.5).abs() < 1e-12);
+        p.useful_bytes = 0;
+        assert_eq!(p.overread(), 1.0);
+    }
+}

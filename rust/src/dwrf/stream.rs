@@ -1,0 +1,463 @@
+//! Per-stream encoding/decoding for DWRF.
+//!
+//! A *stream* is the unit of on-disk storage inside a stripe (§3.1.2):
+//! either a whole-map column chunk (baseline encoding: every feature of
+//! every row, serialized row-major) or a single flattened feature column
+//! chunk (the paper's feature-flattening optimization). Streams are
+//! zstd-compressed then AES-CTR-encrypted.
+//!
+//! Two decode paths exist for flattened columns: a `checked` path with
+//! per-value validation (the baseline) and a `fast` path (the paper's
+//! "+LO localized optimizations": removing unnecessary null checks and
+//! branchy validation from the inner loop).
+
+use crate::data::{Bitmap, DenseColumn, Sample, SparseColumn, SparseValue};
+use crate::schema::FeatureId;
+use crate::util::bytes::{put_f32, put_varint, ByteReader};
+use anyhow::{bail, Context, Result};
+
+/// What a stream contains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamKind {
+    /// Labels + timestamps for the stripe's rows.
+    RowMeta = 0,
+    /// Row-major dense feature map for every row (baseline encoding).
+    MapDense = 1,
+    /// Row-major sparse feature map for every row (baseline encoding).
+    MapSparse = 2,
+    /// One flattened dense feature column.
+    FlatDense = 3,
+    /// One flattened sparse feature column.
+    FlatSparse = 4,
+}
+
+impl StreamKind {
+    pub fn from_u8(v: u8) -> Result<StreamKind> {
+        Ok(match v {
+            0 => StreamKind::RowMeta,
+            1 => StreamKind::MapDense,
+            2 => StreamKind::MapSparse,
+            3 => StreamKind::FlatDense,
+            4 => StreamKind::FlatSparse,
+            _ => bail!("bad stream kind {v}"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Row-meta stream: labels + timestamps.
+// ---------------------------------------------------------------------
+
+pub fn encode_row_meta(labels: &[f32], timestamps: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(labels.len() * 8);
+    put_varint(&mut out, labels.len() as u64);
+    for &l in labels {
+        put_f32(&mut out, l);
+    }
+    let mut prev = 0u64;
+    for &t in timestamps {
+        // Delta varint: timestamps are near-monotonic within a stripe.
+        put_varint(&mut out, t.wrapping_sub(prev));
+        prev = t;
+    }
+    out
+}
+
+pub fn decode_row_meta(buf: &[u8]) -> Result<(Vec<f32>, Vec<u64>)> {
+    let mut r = ByteReader::new(buf);
+    let n = r.varint().context("row_meta count")? as usize;
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        labels.push(r.f32().context("label")?);
+    }
+    let mut ts = Vec::with_capacity(n);
+    let mut prev = 0u64;
+    for _ in 0..n {
+        prev = prev.wrapping_add(r.varint().context("timestamp")?);
+        ts.push(prev);
+    }
+    Ok((labels, ts))
+}
+
+// ---------------------------------------------------------------------
+// Map streams (baseline): every row's full feature map, row-major.
+// The reader must decode *everything* to extract any feature — exactly
+// the "over read" the paper's feature flattening eliminates.
+// ---------------------------------------------------------------------
+
+pub fn encode_map_dense(samples: &[Sample]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_varint(&mut out, samples.len() as u64);
+    for s in samples {
+        put_varint(&mut out, s.dense.len() as u64);
+        for &(fid, v) in &s.dense {
+            put_varint(&mut out, fid.0 as u64);
+            put_f32(&mut out, v);
+        }
+    }
+    out
+}
+
+pub fn encode_map_sparse(samples: &[Sample]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_varint(&mut out, samples.len() as u64);
+    for s in samples {
+        put_varint(&mut out, s.sparse.len() as u64);
+        for (fid, v) in &s.sparse {
+            put_varint(&mut out, fid.0 as u64);
+            put_varint(&mut out, v.ids.len() as u64);
+            for &id in &v.ids {
+                put_varint(&mut out, id);
+            }
+            match &v.scores {
+                Some(sc) => {
+                    out.push(1);
+                    for &x in sc {
+                        put_f32(&mut out, x);
+                    }
+                }
+                None => out.push(0),
+            }
+        }
+    }
+    out
+}
+
+/// Decode a dense map stream, keeping only features in `projection`
+/// (`None` keeps all). Note the cost structure: every entry is decoded
+/// regardless of the projection — filtering happens *after* decode.
+pub fn decode_map_dense(
+    buf: &[u8],
+    projection: Option<&dyn Fn(FeatureId) -> bool>,
+) -> Result<Vec<Vec<(FeatureId, f32)>>> {
+    let mut r = ByteReader::new(buf);
+    let rows = r.varint().context("map_dense rows")? as usize;
+    let mut out = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let n = r.varint().context("n_dense")? as usize;
+        let mut row = Vec::with_capacity(n);
+        for _ in 0..n {
+            let fid = FeatureId(r.varint().context("fid")? as u32);
+            let v = r.f32().context("value")?;
+            if projection.map_or(true, |p| p(fid)) {
+                row.push((fid, v));
+            }
+        }
+        out.push(row);
+    }
+    Ok(out)
+}
+
+pub fn decode_map_sparse(
+    buf: &[u8],
+    projection: Option<&dyn Fn(FeatureId) -> bool>,
+) -> Result<Vec<Vec<(FeatureId, SparseValue)>>> {
+    let mut r = ByteReader::new(buf);
+    let rows = r.varint().context("map_sparse rows")? as usize;
+    let mut out = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let n = r.varint().context("n_sparse")? as usize;
+        let mut row = Vec::new();
+        for _ in 0..n {
+            let fid = FeatureId(r.varint().context("fid")? as u32);
+            let len = r.varint().context("len")? as usize;
+            let mut ids = Vec::with_capacity(len);
+            for _ in 0..len {
+                ids.push(r.varint().context("id")?);
+            }
+            let has_scores = r.bytes(1).context("scores flag")?[0] == 1;
+            let scores = if has_scores {
+                let mut sc = Vec::with_capacity(len);
+                for _ in 0..len {
+                    sc.push(r.f32().context("score")?);
+                }
+                Some(sc)
+            } else {
+                None
+            };
+            if projection.map_or(true, |p| p(fid)) {
+                row.push((fid, SparseValue { ids, scores }));
+            }
+        }
+        out.push(row);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Flattened feature column streams (the paper's FF optimization).
+// ---------------------------------------------------------------------
+
+pub fn encode_flat_dense(col: &DenseColumn) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_varint(&mut out, col.present.len() as u64);
+    for &w in col.present.words() {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    put_varint(&mut out, col.values.len() as u64);
+    for &v in &col.values {
+        put_f32(&mut out, v);
+    }
+    out
+}
+
+pub fn encode_flat_sparse(col: &SparseColumn) -> Vec<u8> {
+    let mut out = Vec::new();
+    let rows = col.num_rows();
+    put_varint(&mut out, rows as u64);
+    let mut prev = 0u32;
+    for &o in &col.offsets[1..] {
+        put_varint(&mut out, (o - prev) as u64);
+        prev = o;
+    }
+    for &id in &col.ids {
+        put_varint(&mut out, id);
+    }
+    match &col.scores {
+        Some(sc) => {
+            out.push(1);
+            for &x in sc {
+                put_f32(&mut out, x);
+            }
+        }
+        None => out.push(0),
+    }
+    out
+}
+
+/// Decode a flattened dense column.
+///
+/// `fast == false`: the baseline path — per-value bounds checks, per-bit
+/// presence queries, and unsized growth (models the null-check-laden
+/// generic reader the paper's +LO removed).
+/// `fast == true`: batch word-wise bitmap copy + exact preallocation +
+/// bulk f32 reinterpretation.
+pub fn decode_flat_dense(buf: &[u8], id: FeatureId, fast: bool) -> Result<DenseColumn> {
+    let mut r = ByteReader::new(buf);
+    let rows = r.varint().context("flat_dense rows")? as usize;
+    let words = rows.div_ceil(64);
+    let mut wv = Vec::with_capacity(words);
+    for _ in 0..words {
+        wv.push(r.u64().context("bitmap word")?);
+    }
+    let present = Bitmap::from_words(wv, rows);
+    let n = r.varint().context("value count")? as usize;
+    let values = if fast {
+        let raw = r.bytes(n * 4).context("values")?;
+        let mut values = Vec::with_capacity(n);
+        // Bulk conversion: chunk-exact, no per-element Option handling.
+        values.extend(
+            raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        values
+    } else {
+        let mut values = Vec::new(); // unsized: realloc churn like the
+                                     // generic row reader
+        for i in 0..n {
+            let v = r.f32().with_context(|| format!("value {i}"))?;
+            // Redundant null/NaN validation per value (the "unnecessary
+            // null checks" of §7.5).
+            if v.is_nan() {
+                bail!("unexpected NaN at {i}");
+            }
+            if present.count_ones() < values.len() {
+                bail!("presence underflow");
+            }
+            values.push(v);
+        }
+        values
+    };
+    if values.len() != present.count_ones() {
+        bail!(
+            "dense column {id:?}: {} values vs {} present",
+            values.len(),
+            present.count_ones()
+        );
+    }
+    Ok(DenseColumn {
+        id,
+        present,
+        values,
+    })
+}
+
+pub fn decode_flat_sparse(buf: &[u8], id: FeatureId, fast: bool) -> Result<SparseColumn> {
+    let mut r = ByteReader::new(buf);
+    let rows = r.varint().context("flat_sparse rows")? as usize;
+    let mut offsets = Vec::with_capacity(rows + 1);
+    offsets.push(0u32);
+    let mut acc = 0u32;
+    for _ in 0..rows {
+        acc += r.varint().context("offset delta")? as u32;
+        offsets.push(acc);
+    }
+    let n = acc as usize;
+    let ids = if fast {
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            ids.push(r.varint().context("id")?);
+        }
+        ids
+    } else {
+        let mut ids = Vec::new();
+        for i in 0..n {
+            let v = r.varint().with_context(|| format!("id {i}"))?;
+            // Per-value monotone offset re-validation (redundant work the
+            // fast path drops).
+            let row = match offsets.binary_search(&(i as u32)) {
+                Ok(x) => x,
+                Err(x) => x - 1,
+            };
+            if row > rows {
+                bail!("row overflow");
+            }
+            ids.push(v);
+        }
+        ids
+    };
+    let has_scores = r.bytes(1).context("scores flag")?[0] == 1;
+    let scores = if has_scores {
+        let mut sc = Vec::with_capacity(n);
+        for _ in 0..n {
+            sc.push(r.f32().context("score")?);
+        }
+        Some(sc)
+    } else {
+        None
+    };
+    Ok(SparseColumn {
+        id,
+        offsets,
+        ids,
+        scores,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ColumnarBatch;
+
+    fn samples() -> Vec<Sample> {
+        (0..9u64)
+            .map(|i| {
+                let mut s = Sample {
+                    dense: vec![(FeatureId(1), i as f32 * 0.5)],
+                    sparse: vec![(
+                        FeatureId(7),
+                        SparseValue::ids(vec![i, i * 3]),
+                    )],
+                    label: (i % 2) as f32,
+                    timestamp: 1000 + i * 7,
+                };
+                if i % 3 == 0 {
+                    s.dense.push((FeatureId(2), -(i as f32)));
+                }
+                s.sort_features();
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn row_meta_roundtrip() {
+        let labels = vec![0.0, 1.0, 1.0, 0.0];
+        let ts = vec![100, 107, 107, 230];
+        let buf = encode_row_meta(&labels, &ts);
+        let (l2, t2) = decode_row_meta(&buf).unwrap();
+        assert_eq!(l2, labels);
+        assert_eq!(t2, ts);
+    }
+
+    #[test]
+    fn map_streams_roundtrip_full() {
+        let ss = samples();
+        let d = decode_map_dense(&encode_map_dense(&ss), None).unwrap();
+        let sp = decode_map_sparse(&encode_map_sparse(&ss), None).unwrap();
+        for (i, s) in ss.iter().enumerate() {
+            assert_eq!(d[i], s.dense);
+            assert_eq!(sp[i], s.sparse);
+        }
+    }
+
+    #[test]
+    fn map_streams_filter_after_decode() {
+        let ss = samples();
+        let keep = |f: FeatureId| f == FeatureId(2);
+        let d = decode_map_dense(&encode_map_dense(&ss), Some(&keep)).unwrap();
+        assert!(d[0].iter().all(|(f, _)| *f == FeatureId(2)));
+        assert!(d[1].is_empty()); // sample 1 has no feature 2
+    }
+
+    #[test]
+    fn flat_dense_roundtrip_both_paths() {
+        let ss = samples();
+        let batch = ColumnarBatch::from_samples(
+            &ss,
+            &[FeatureId(1), FeatureId(2)],
+            &[],
+        );
+        for col in &batch.dense {
+            let buf = encode_flat_dense(col);
+            for fast in [false, true] {
+                let back = decode_flat_dense(&buf, col.id, fast).unwrap();
+                assert_eq!(&back, col, "fast={fast}");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_sparse_roundtrip_both_paths() {
+        let ss = samples();
+        let batch =
+            ColumnarBatch::from_samples(&ss, &[], &[FeatureId(7)]);
+        let col = &batch.sparse[0];
+        let buf = encode_flat_sparse(col);
+        for fast in [false, true] {
+            let back = decode_flat_sparse(&buf, col.id, fast).unwrap();
+            assert_eq!(&back, col, "fast={fast}");
+        }
+    }
+
+    #[test]
+    fn flat_sparse_scored_roundtrip() {
+        let col = SparseColumn {
+            id: FeatureId(3),
+            offsets: vec![0, 2, 2, 3],
+            ids: vec![5, 9, 1],
+            scores: Some(vec![0.1, 0.9, 0.5]),
+        };
+        let buf = encode_flat_sparse(&col);
+        let back = decode_flat_sparse(&buf, col.id, true).unwrap();
+        assert_eq!(back, col);
+    }
+
+    #[test]
+    fn truncated_buffers_error_not_panic() {
+        let ss = samples();
+        let buf = encode_map_dense(&ss);
+        for cut in [0usize, 1, buf.len() / 2, buf.len() - 1] {
+            assert!(decode_map_dense(&buf[..cut], None).is_err());
+        }
+        let batch = ColumnarBatch::from_samples(&ss, &[FeatureId(1)], &[]);
+        let fbuf = encode_flat_dense(&batch.dense[0]);
+        for cut in [0usize, 2, fbuf.len() - 1] {
+            assert!(decode_flat_dense(&fbuf[..cut], FeatureId(1), true).is_err());
+        }
+    }
+
+    #[test]
+    fn stream_kind_codes_roundtrip() {
+        for k in [
+            StreamKind::RowMeta,
+            StreamKind::MapDense,
+            StreamKind::MapSparse,
+            StreamKind::FlatDense,
+            StreamKind::FlatSparse,
+        ] {
+            assert_eq!(StreamKind::from_u8(k as u8).unwrap(), k);
+        }
+        assert!(StreamKind::from_u8(99).is_err());
+    }
+}

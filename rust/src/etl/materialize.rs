@@ -1,0 +1,291 @@
+//! Offline/online transform balance (§7.5: "balancing transformations
+//! between offline and online ETL").
+//!
+//! [`materialize_transforms`] runs a session's transform DAG *offline*
+//! over a table and writes the outputs as a new, already-preprocessed
+//! table. Online, the job then uses a pass-through DAG: extraction still
+//! happens, but transformation cost moves off the training-time critical
+//! path — paid once at write time instead of per training job, at the
+//! price of extra stored bytes (exactly the trade-off the paper weighs;
+//! it only pays off for outputs shared across many jobs, cf. Fig 7).
+
+use crate::data::{Bitmap, ColumnarBatch, DenseColumn, SparseColumn};
+use crate::dpp::Master;
+use crate::dwrf::{DecodeMode, DwrfReader, DwrfWriter, Projection, WriterOptions};
+use crate::schema::FeatureId;
+use crate::tectonic::Cluster;
+use crate::transforms::{TransformDag, Value};
+use crate::warehouse::{Catalog, Partition};
+use anyhow::{Context, Result};
+
+/// Convert DAG output columns into a columnar batch (labels/timestamps
+/// carried through from the source batch).
+fn outputs_to_batch(
+    outputs: Vec<(FeatureId, Value)>,
+    labels: Vec<f32>,
+    timestamps: Vec<u64>,
+    rows: usize,
+) -> ColumnarBatch {
+    let mut dense = Vec::new();
+    let mut sparse = Vec::new();
+    for (id, v) in outputs {
+        match v {
+            Value::Dense(vals) => {
+                let mut present = Bitmap::new(rows);
+                for r in 0..rows {
+                    present.set(r);
+                }
+                dense.push(DenseColumn {
+                    id,
+                    present,
+                    values: vals,
+                });
+            }
+            Value::Sparse {
+                offsets,
+                ids,
+                scores,
+            } => sparse.push(SparseColumn {
+                id,
+                offsets,
+                ids,
+                scores,
+            }),
+        }
+    }
+    ColumnarBatch {
+        num_rows: rows,
+        dense,
+        sparse,
+        labels,
+        timestamps,
+    }
+}
+
+/// The pass-through DAG a job uses over a materialized table: every
+/// output feature is read as-is.
+pub fn passthrough_dag(outputs: &[(FeatureId, bool)]) -> TransformDag {
+    let mut dag = TransformDag::default();
+    for &(id, is_dense) in outputs {
+        let n = if is_dense {
+            dag.input_dense(id)
+        } else {
+            dag.input_sparse(id)
+        };
+        dag.output(id, n);
+    }
+    dag
+}
+
+/// Run `dag` offline over `table` and write the preprocessed outputs as
+/// `<table>__materialized`. Returns the new table name and the output
+/// feature layout (id, is_dense) for building the pass-through DAG.
+pub fn materialize_transforms(
+    cluster: &Cluster,
+    catalog: &Catalog,
+    table: &str,
+    projection: &Projection,
+    dag: &TransformDag,
+    writer_opts: WriterOptions,
+) -> Result<(String, Vec<(FeatureId, bool)>)> {
+    let src = catalog.get(table).context("unknown table")?;
+    let out_name = format!("{table}__materialized");
+    let mut layout: Option<Vec<(FeatureId, bool)>> = None;
+    let mut partitions = Vec::new();
+    for p in &src.partitions {
+        let meta = Master::fetch_meta(cluster, p.file)?;
+        let reader = DwrfReader::from_meta(meta, table);
+        let mut writer: Option<DwrfWriter> = None;
+        let mut rows_written = 0u64;
+        for si in 0..reader.meta.stripes.len() {
+            let plan = reader.plan_stripes(projection, None, si, 1);
+            let bufs = cluster.execute_ios(p.file, &plan.stripes[0].ios)?;
+            let batch = reader.decode_stripe_columnar(
+                si,
+                &bufs,
+                projection,
+                DecodeMode::default(),
+            )?;
+            let (outputs, _) = dag.execute(&batch)?;
+            // Fix the output layout from the first stripe seen.
+            if layout.is_none() {
+                layout = Some(
+                    outputs
+                        .iter()
+                        .map(|(id, v)| (*id, matches!(v, Value::Dense(_))))
+                        .collect(),
+                );
+            }
+            if writer.is_none() {
+                // One writer per output partition.
+                let l = layout.as_ref().unwrap();
+                let dense_ids: Vec<FeatureId> =
+                    l.iter().filter(|(_, d)| *d).map(|(i, _)| *i).collect();
+                let sparse_ids: Vec<FeatureId> =
+                    l.iter().filter(|(_, d)| !*d).map(|(i, _)| *i).collect();
+                writer = Some(DwrfWriter::new(
+                    &out_name,
+                    dense_ids,
+                    sparse_ids,
+                    writer_opts.clone(),
+                ));
+            }
+            let rows = batch.num_rows;
+            let out_batch = outputs_to_batch(
+                outputs,
+                batch.labels.clone(),
+                batch.timestamps.clone(),
+                rows,
+            );
+            writer
+                .as_mut()
+                .unwrap()
+                .write_all(out_batch.to_samples());
+            rows_written += rows as u64;
+        }
+        let bytes = writer.context("empty partition")?.finish();
+        let fname = format!("warehouse/{out_name}/day={}/part-0.dwrf", p.day);
+        let file = cluster.create(&fname);
+        cluster.append(file, &bytes)?;
+        cluster.seal(file);
+        partitions.push(Partition {
+            day: p.day,
+            file,
+            rows: rows_written,
+            bytes: bytes.len() as u64,
+        });
+    }
+    catalog.register(crate::warehouse::Table {
+        name: out_name.clone(),
+        schema: src.schema.clone(),
+        partitions,
+    });
+    Ok((out_name, layout.unwrap_or_default()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{RmConfig, RmId, SimScale};
+    use crate::datagen::build_dataset;
+    use crate::dpp::{PipelineOptions, SessionSpec, TensorBatch, WorkerCore};
+    use crate::dwrf::crypto::StreamCipher;
+    use crate::metrics::EtlMetrics;
+    use crate::tectonic::ClusterConfig;
+    use crate::transforms::dag::session_dag;
+    use crate::util::rng::Pcg32;
+    use std::sync::Arc;
+
+    fn run_session_tensors(
+        cluster: &Arc<Cluster>,
+        catalog: &Catalog,
+        spec: SessionSpec,
+    ) -> (Vec<TensorBatch>, Arc<EtlMetrics>) {
+        let cipher = StreamCipher::for_table(&spec.table);
+        let spec = Arc::new(spec);
+        let master = Master::new(catalog, cluster, (*spec).clone()).unwrap();
+        let w = master.register_worker();
+        let metrics = Arc::new(EtlMetrics::default());
+        let mut core =
+            WorkerCore::new(spec.clone(), cluster.clone(), metrics.clone());
+        let mut out = Vec::new();
+        while let Some(split) = master.fetch_split(w) {
+            for b in core.process_split(&split).unwrap() {
+                out.push(
+                    TensorBatch::from_wire(&cipher, b.seq, &b.bytes).unwrap(),
+                );
+            }
+            master.complete_split(w, split.id);
+        }
+        (out, metrics)
+    }
+
+    #[test]
+    fn materialized_table_yields_identical_tensors_with_no_online_transforms() {
+        let cluster = Arc::new(Cluster::new(ClusterConfig {
+            chunk_bytes: 128 << 10,
+            ..Default::default()
+        }));
+        let catalog = Catalog::new();
+        let rm = RmConfig::get(RmId::Rm1);
+        let h = build_dataset(
+            &cluster,
+            &catalog,
+            &rm,
+            &SimScale::tiny(),
+            WriterOptions {
+                stripe_rows: 32,
+                ..Default::default()
+            },
+            55,
+        )
+        .unwrap();
+        let mut rng = Pcg32::new(55);
+        let projection: Vec<FeatureId> =
+            h.schema.sample_projection(&mut rng, 12, 1.0);
+        let dag = session_dag(&mut rng, &rm, &h.schema, &projection);
+
+        // Online path: full DAG at training time.
+        let mut online_spec =
+            SessionSpec::from_dag(&h.table_name, 0, u32::MAX, dag.clone(), 16);
+        online_spec.projection = Projection::new(projection.iter().copied());
+        online_spec.pipeline = PipelineOptions::default();
+        let (online, online_metrics) =
+            run_session_tensors(&cluster, &catalog, online_spec);
+
+        // Offline path: materialize once, train with a pass-through DAG.
+        let (mat_table, layout) = materialize_transforms(
+            &cluster,
+            &catalog,
+            &h.table_name,
+            &Projection::new(projection.iter().copied()),
+            &dag,
+            WriterOptions {
+                stripe_rows: 32,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let pt = passthrough_dag(&layout);
+        let mut offline_spec =
+            SessionSpec::from_dag(&mat_table, 0, u32::MAX, pt, 16);
+        offline_spec.projection =
+            Projection::new(layout.iter().map(|(i, _)| *i));
+        offline_spec.pipeline = PipelineOptions::default();
+        let (offline, offline_metrics) =
+            run_session_tensors(&cluster, &catalog, offline_spec);
+
+        // Same number of samples; tensors carry the same features; the
+        // dense/sparse content matches (both sides produce the DAG's
+        // outputs — one at write time, one at read time).
+        assert_eq!(online.len(), offline.len());
+        let total_on: usize = online.iter().map(|t| t.rows).sum();
+        let total_off: usize = offline.iter().map(|t| t.rows).sum();
+        assert_eq!(total_on, total_off);
+        for (a, b) in online.iter().zip(offline.iter()) {
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.dense_names, b.dense_names);
+            assert_eq!(a.dense, b.dense);
+            assert_eq!(a.sparse.len(), b.sparse.len());
+            for ((fa, oa, ia), (fb, ob, ib)) in
+                a.sparse.iter().zip(b.sparse.iter())
+            {
+                assert_eq!(fa, fb);
+                assert_eq!(oa, ob);
+                assert_eq!(ia, ib);
+            }
+        }
+        // The whole point: online transform time collapses.
+        assert!(
+            offline_metrics.t_transform.secs()
+                < online_metrics.t_transform.secs() * 0.5,
+            "materialized transform time {:.6}s !<< online {:.6}s",
+            offline_metrics.t_transform.secs(),
+            online_metrics.t_transform.secs()
+        );
+        // The cost: the materialized table stores the derived features.
+        let src_bytes = catalog.get(&h.table_name).unwrap().total_bytes();
+        let mat_bytes = catalog.get(&mat_table).unwrap().total_bytes();
+        assert!(mat_bytes > 0 && src_bytes > 0);
+    }
+}

@@ -1,0 +1,208 @@
+//! Offline ETL (§3.1.1): joins raw feature and event logs from Scribe
+//! into labeled, schematized samples — the batch jobs that produce the
+//! partitioned offline datasets used to train new model versions.
+//!
+//! Both engines of the paper are modelled:
+//! * [`batch_join`] — the Spark-like batch job building a day partition,
+//! * [`StreamingJoiner`] — the streaming engine that incrementally joins
+//!   as logs arrive (used for the continuous-update path).
+
+pub mod materialize;
+
+use crate::data::{Sample, SparseValue};
+use crate::schema::FeatureId;
+use crate::scribe::{EventLog, FeatureLog, Record, Scribe};
+use std::collections::HashMap;
+
+fn to_sample(f: &FeatureLog, engaged: bool) -> Sample {
+    let mut s = Sample {
+        dense: f
+            .dense
+            .iter()
+            .map(|&(id, v)| (FeatureId(id), v))
+            .collect(),
+        sparse: f
+            .sparse
+            .iter()
+            .map(|(id, ids)| (FeatureId(*id), SparseValue::ids(ids.clone())))
+            .chain(f.scored.iter().map(|(id, pairs)| {
+                (
+                    FeatureId(*id),
+                    SparseValue {
+                        ids: pairs.iter().map(|p| p.0).collect(),
+                        scores: Some(pairs.iter().map(|p| p.1).collect()),
+                    },
+                )
+            }))
+            .collect(),
+        label: if engaged { 1.0 } else { 0.0 },
+        timestamp: f.timestamp,
+    };
+    s.sort_features();
+    s
+}
+
+/// Batch join over complete streams: every feature log with a matching
+/// event log becomes a labeled sample (in feature-log order).
+pub fn batch_join(scribe: &Scribe, feature_stream: &str, event_stream: &str) -> Vec<Sample> {
+    let (feats, _) = scribe.tail(feature_stream, 0);
+    let (events, _) = scribe.tail(event_stream, 0);
+    let mut outcomes: HashMap<u64, bool> = HashMap::new();
+    for r in &events {
+        if let Record::Event(e) = r {
+            outcomes.insert(e.request_id, e.engaged);
+        }
+    }
+    feats
+        .iter()
+        .filter_map(|r| match r {
+            Record::Feature(f) => {
+                outcomes.get(&f.request_id).map(|&e| to_sample(f, e))
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+/// Incremental joiner: buffers unmatched logs; emits samples as pairs
+/// complete. Mirrors the streaming engines that update in-production
+/// models (§3.1.1).
+#[derive(Default)]
+pub struct StreamingJoiner {
+    pending_features: HashMap<u64, FeatureLog>,
+    pending_events: HashMap<u64, EventLog>,
+    feature_cursor: usize,
+    event_cursor: usize,
+}
+
+impl StreamingJoiner {
+    pub fn new() -> StreamingJoiner {
+        StreamingJoiner::default()
+    }
+
+    /// Pull new records from both streams; return newly-joined samples.
+    pub fn poll(
+        &mut self,
+        scribe: &Scribe,
+        feature_stream: &str,
+        event_stream: &str,
+    ) -> Vec<Sample> {
+        let mut out = Vec::new();
+        let (feats, fc) = scribe.tail(feature_stream, self.feature_cursor);
+        self.feature_cursor = fc;
+        let (events, ec) = scribe.tail(event_stream, self.event_cursor);
+        self.event_cursor = ec;
+        for r in events {
+            if let Record::Event(e) = r {
+                self.pending_events.insert(e.request_id, e);
+            }
+        }
+        for r in feats {
+            if let Record::Feature(f) = r {
+                if let Some(e) = self.pending_events.remove(&f.request_id) {
+                    out.push(to_sample(&f, e.engaged));
+                } else {
+                    self.pending_features.insert(f.request_id, f);
+                }
+            }
+        }
+        // Match any previously-buffered features against new events.
+        let matched: Vec<u64> = self
+            .pending_features
+            .keys()
+            .filter(|id| self.pending_events.contains_key(id))
+            .copied()
+            .collect();
+        for id in matched {
+            let f = self.pending_features.remove(&id).unwrap();
+            let e = self.pending_events.remove(&id).unwrap();
+            out.push(to_sample(&f, e.engaged));
+        }
+        out
+    }
+
+    pub fn pending(&self) -> (usize, usize) {
+        (self.pending_features.len(), self.pending_events.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feature(id: u64) -> Record {
+        Record::Feature(FeatureLog {
+            request_id: id,
+            timestamp: id,
+            dense: vec![(0, id as f32)],
+            sparse: vec![(10, vec![id, id + 1])],
+            scored: vec![(11, vec![(5, 0.5)])],
+        })
+    }
+
+    fn event(id: u64, engaged: bool) -> Record {
+        Record::Event(EventLog {
+            request_id: id,
+            timestamp: id + 100,
+            engaged,
+        })
+    }
+
+    #[test]
+    fn batch_join_labels_matched_pairs() {
+        let s = Scribe::new();
+        s.publish_all("f", (0..5).map(feature));
+        s.publish_all("e", vec![event(0, true), event(2, false), event(4, true)]);
+        let samples = batch_join(&s, "f", "e");
+        assert_eq!(samples.len(), 3);
+        assert_eq!(samples[0].label, 1.0);
+        assert_eq!(samples[1].label, 0.0);
+        // Scored sparse features carry scores through the join.
+        let sv = samples[0].get_sparse(FeatureId(11)).unwrap();
+        assert_eq!(sv.scores.as_deref(), Some(&[0.5f32][..]));
+    }
+
+    #[test]
+    fn batch_join_drops_unmatched() {
+        let s = Scribe::new();
+        s.publish_all("f", (0..3).map(feature));
+        s.publish("e", event(7, true)); // no matching feature log
+        assert!(batch_join(&s, "f", "e").is_empty());
+    }
+
+    #[test]
+    fn streaming_join_handles_out_of_order_arrival() {
+        let s = Scribe::new();
+        let mut j = StreamingJoiner::new();
+        // Event arrives before its feature log.
+        s.publish("e", event(1, true));
+        assert!(j.poll(&s, "f", "e").is_empty());
+        s.publish("f", feature(1));
+        let got = j.poll(&s, "f", "e");
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].label, 1.0);
+        assert_eq!(j.pending(), (0, 0));
+        // Feature first, then event.
+        s.publish("f", feature(2));
+        assert!(j.poll(&s, "f", "e").is_empty());
+        assert_eq!(j.pending(), (1, 0));
+        s.publish("e", event(2, false));
+        let got = j.poll(&s, "f", "e");
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].label, 0.0);
+    }
+
+    #[test]
+    fn streaming_matches_batch_on_same_data() {
+        let s = Scribe::new();
+        s.publish_all("f", (0..20).map(feature));
+        s.publish_all("e", (0..20).map(|i| event(i, i % 3 == 0)));
+        let batch = batch_join(&s, "f", "e");
+        let mut j = StreamingJoiner::new();
+        let mut stream = j.poll(&s, "f", "e");
+        stream.sort_by_key(|x| x.timestamp);
+        let mut batch_sorted = batch.clone();
+        batch_sorted.sort_by_key(|x| x.timestamp);
+        assert_eq!(stream, batch_sorted);
+    }
+}

@@ -1,0 +1,45 @@
+//! `dsi` — a full-system reproduction of Meta's **Data Storage and
+//! Ingestion (DSI) pipeline** for large-scale deep recommendation model
+//! training (Zhao et al., ISCA '22).
+//!
+//! The crate implements, from scratch:
+//!
+//! * the **DWRF** columnar warehouse format with feature flattening,
+//!   coalesced reads, feature reordering, and large stripes ([`dwrf`]);
+//! * a **Tectonic**-like distributed append-only filesystem over modelled
+//!   HDD/SSD storage nodes ([`tectonic`]);
+//! * **Scribe**/ETL offline data generation ([`scribe`], [`etl`],
+//!   [`datagen`]) into a Hive-like partitioned warehouse ([`warehouse`]);
+//! * the 16 production preprocessing transforms and their per-feature
+//!   DAGs ([`transforms`]);
+//! * **DPP**, the disaggregated online preprocessing service — Master,
+//!   Workers, Clients, autoscaler ([`dpp`]);
+//! * trainer, node-resource, and power models ([`trainer`], [`resources`],
+//!   [`power`]);
+//! * the global multi-region training-job scheduler ([`sched`]) and
+//!   byte/feature popularity tracking ([`popularity`]);
+//! * a PJRT runtime that executes the AOT-compiled JAX/Pallas DLRM
+//!   artifacts from the Rust hot path ([`runtime`]);
+//! * drivers that regenerate every table and figure of the paper
+//!   ([`paper`]).
+
+pub mod config;
+pub mod data;
+pub mod datagen;
+pub mod dpp;
+pub mod dwrf;
+pub mod etl;
+pub mod metrics;
+pub mod paper;
+pub mod popularity;
+pub mod power;
+pub mod resources;
+pub mod runtime;
+pub mod sched;
+pub mod schema;
+pub mod scribe;
+pub mod tectonic;
+pub mod trainer;
+pub mod transforms;
+pub mod util;
+pub mod warehouse;

@@ -1,0 +1,195 @@
+//! `dsi` — the leader binary: paper experiment drivers, a DPP session
+//! runner, and the PJRT-backed DLRM training loop.
+//!
+//! ```text
+//! dsi paper --exp table12 [--seed 42] [--scale tiny|standard|bench] [--json out.json]
+//! dsi paper --exp all
+//! dsi session --rm rm1 --workers 4 --clients 2 [--autoscale]
+//! dsi train --steps 200 [--seed 7]
+//! dsi info
+//! ```
+
+use anyhow::{bail, Context, Result};
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::dpp::{Session, SessionConfig, SessionSpec};
+use dsi::dwrf::WriterOptions;
+use dsi::paper;
+use dsi::runtime::{artifacts_available, artifacts_dir, DlrmBatch, DlrmRuntime};
+use dsi::util::cli::Args;
+use dsi::util::rng::Pcg32;
+
+fn main() {
+    let args = Args::parse();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn scale_from(args: &Args) -> SimScale {
+    match args.get_or("scale", "standard") {
+        "tiny" => SimScale::tiny(),
+        "bench" => SimScale::bench(),
+        _ => SimScale::standard(),
+    }
+}
+
+fn rm_from(args: &Args) -> Result<RmConfig> {
+    Ok(match args.get_or("rm", "rm1").to_lowercase().as_str() {
+        "rm1" => RmConfig::get(RmId::Rm1),
+        "rm2" => RmConfig::get(RmId::Rm2),
+        "rm3" => RmConfig::get(RmId::Rm3),
+        other => bail!("unknown model '{other}' (rm1|rm2|rm3)"),
+    })
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("paper") => cmd_paper(args),
+        Some("session") => cmd_session(args),
+        Some("train") => cmd_train(args),
+        Some("info") | None => cmd_info(),
+        Some(other) => bail!("unknown subcommand '{other}'"),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("dsi — Meta DSI pipeline reproduction (Zhao et al., ISCA '22)");
+    println!("subcommands: paper | session | train | info");
+    println!("experiments: {}", paper::ALL_EXPERIMENTS.join(", "));
+    println!(
+        "artifacts: {} ({})",
+        artifacts_dir().display(),
+        if artifacts_available() {
+            "present"
+        } else {
+            "missing — run `make artifacts`"
+        }
+    );
+    Ok(())
+}
+
+fn cmd_paper(args: &Args) -> Result<()> {
+    let exp = args.get_or("exp", "all");
+    let seed = args.get_u64("seed", 42);
+    let scale = scale_from(args);
+    let json = if exp == "all" {
+        paper::run_all(&scale, seed)?
+    } else {
+        paper::run(exp, &scale, seed)?
+    };
+    if let Some(path) = args.get("json").filter(|s| !s.is_empty()) {
+        std::fs::write(path, json.to_string_pretty())
+            .with_context(|| format!("write {path}"))?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_session(args: &Args) -> Result<()> {
+    use dsi::datagen::build_dataset;
+    use dsi::tectonic::{Cluster, ClusterConfig};
+    use dsi::transforms::dag::session_dag;
+    use dsi::warehouse::Catalog;
+    use std::sync::Arc;
+
+    let rm = rm_from(args)?;
+    let scale = scale_from(args);
+    let seed = args.get_u64("seed", 42);
+    let mut rng = Pcg32::new(seed);
+
+    println!("building {} dataset (scale: {scale:?}) ...", rm.id.name());
+    let cluster = Arc::new(Cluster::new(ClusterConfig::default()));
+    let catalog = Catalog::new();
+    let handle = build_dataset(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions::default(),
+        seed,
+    )?;
+    let take = (handle.schema.features.len() as f64 * rm.frac_feats_used())
+        .round()
+        .max(4.0) as usize;
+    let projection =
+        handle
+            .schema
+            .sample_projection(&mut rng, take, rm.popularity_zipf_s);
+    let dag = session_dag(&mut rng, &rm, &handle.schema, &projection);
+    let spec = SessionSpec::from_dag(&handle.table_name, 0, u32::MAX, dag, 64);
+
+    let cfg = SessionConfig {
+        initial_workers: args.get_u64("workers", 2) as usize,
+        max_workers: args.get_u64("max-workers", 8) as usize,
+        clients: args.get_u64("clients", 1) as usize,
+        autoscale_every: if args.has("autoscale") {
+            Some(std::time::Duration::from_millis(5))
+        } else {
+            None
+        },
+        ..Default::default()
+    };
+    println!(
+        "running DPP session: {} workers (max {}), {} clients ...",
+        cfg.initial_workers, cfg.max_workers, cfg.clients
+    );
+    let report = Session::run(&catalog, &cluster, spec, &cfg)?;
+    println!("rows delivered     : {}", report.rows_delivered);
+    println!("batches delivered  : {}", report.batches_delivered);
+    println!("wall time          : {:.3}s", report.wall_secs);
+    println!("throughput         : {:.0} rows/s", report.rows_per_sec);
+    println!("worker QPS (busy)  : {:.0} rows/s", report.worker_qps);
+    println!("peak workers       : {}", report.peak_workers);
+    println!(
+        "client loading     : {:.2} MB ({:.1} MB/s)",
+        report.client_rx_bytes as f64 / 1e6,
+        report.client_rx_bytes as f64 / 1e6 / report.wall_secs
+    );
+    println!(
+        "storage            : {} reads, {} seeks, {:.2} MB, {:.1} MB/s per \
+         device-sec",
+        report.storage_reads,
+        report.storage_seeks,
+        report.storage_bytes_read as f64 / 1e6,
+        report.storage_mbps()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    if !artifacts_available() {
+        bail!("artifacts missing — run `make artifacts` first");
+    }
+    let steps = args.get_u64("steps", 200);
+    let seed = args.get_u64("seed", 7);
+    let rt = DlrmRuntime::load(&artifacts_dir())?;
+    println!(
+        "DLRM: {} params across {} tensors; batch {}",
+        rt.manifest.num_params,
+        rt.manifest.params.len(),
+        rt.manifest.batch
+    );
+    let mut params = rt.init_params(seed)?;
+    let mut rng = Pcg32::new(seed);
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let batch = DlrmBatch::synthetic(&rt.manifest, &mut rng);
+        let (p, loss) = rt.train_step(params, &batch)?;
+        params = p;
+        if step % 20 == 0 || step + 1 == steps {
+            println!("step {step:>4}  loss {loss:.4}");
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{steps} steps in {dt:.2}s ({:.1} steps/s, {:.0} samples/s)",
+        steps as f64 / dt,
+        steps as f64 * rt.manifest.batch as f64 / dt
+    );
+    Ok(())
+}

@@ -1,0 +1,303 @@
+//! Metrics: thread-safe counters/gauges, per-stage time accounting, and the
+//! aligned-table printer used by every paper experiment driver.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Monotonic counter (bytes, samples, splits, ...).
+#[derive(Default, Debug)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Gauge for sampled levels (buffer depth, worker count).
+#[derive(Default, Debug)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Nanosecond-accumulating stage timer: `extract`, `transform`, `load`, ...
+#[derive(Default, Debug)]
+pub struct StageClock {
+    ns: AtomicU64,
+}
+
+impl StageClock {
+    #[inline]
+    pub fn add(&self, d: Duration) {
+        self.ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn reset(&self) {
+        self.ns.store(0, Ordering::Relaxed);
+    }
+}
+
+/// The per-worker ETL stage metrics the paper reports in Fig 9 / Table 9.
+#[derive(Default, Debug)]
+pub struct EtlMetrics {
+    pub storage_rx_bytes: Counter,   // compressed bytes off storage
+    pub extract_out_bytes: Counter,  // decompressed/decoded bytes
+    pub transform_out_bytes: Counter, // bytes after transforms
+    pub tensor_tx_bytes: Counter,    // serialized tensor bytes to clients
+    pub samples: Counter,
+    pub batches: Counter,
+    pub t_read: StageClock,
+    pub t_extract: StageClock,
+    pub t_transform: StageClock,
+    pub t_load: StageClock,
+    pub t_misc: StageClock,
+}
+
+impl EtlMetrics {
+    pub fn total_secs(&self) -> f64 {
+        self.t_read.secs()
+            + self.t_extract.secs()
+            + self.t_transform.secs()
+            + self.t_load.secs()
+            + self.t_misc.secs()
+    }
+
+    pub fn qps(&self) -> f64 {
+        let t = self.total_secs();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.samples.get() as f64 / t
+        }
+    }
+}
+
+/// Time-series of (x, y) points for figure reproduction.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn max_y(&self) -> f64 {
+        self.points.iter().map(|p| p.1).fold(0.0, f64::max)
+    }
+
+    /// Normalize y values so the peak is 1.0 (paper figures are normalized).
+    pub fn normalized(&self) -> Series {
+        let m = self.max_y().max(1e-12);
+        Series {
+            name: self.name.clone(),
+            points: self.points.iter().map(|&(x, y)| (x, y / m)).collect(),
+        }
+    }
+
+    /// Render as a row of unicode sparkline glyphs for terminal figures.
+    pub fn sparkline(&self, width: usize) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        if self.points.is_empty() {
+            return String::new();
+        }
+        let m = self.max_y().max(1e-12);
+        let n = self.points.len();
+        (0..width)
+            .map(|i| {
+                let idx = i * n / width;
+                let y = self.points[idx].1 / m;
+                GLYPHS[((y * 7.0).round() as usize).min(7)]
+            })
+            .collect()
+    }
+}
+
+/// Aligned-column table printer for paper-style output.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(
+            &widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  "),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Shared collector of log lines for experiment drivers (also lets tests
+/// assert on driver output without capturing stdout).
+#[derive(Default)]
+pub struct Log {
+    lines: Mutex<Vec<String>>,
+}
+
+impl Log {
+    pub fn say(&self, s: impl Into<String>) {
+        let s = s.into();
+        println!("{s}");
+        self.lines.lock().unwrap().push(s);
+    }
+
+    pub fn lines(&self) -> Vec<String> {
+        self.lines.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let c = Counter::new();
+        c.add(3);
+        c.inc();
+        assert_eq!(c.get(), 4);
+        c.reset();
+        assert_eq!(c.get(), 0);
+        let g = Gauge::default();
+        g.set(9);
+        assert_eq!(g.get(), 9);
+    }
+
+    #[test]
+    fn stage_clock_accumulates() {
+        let s = StageClock::default();
+        s.add(Duration::from_millis(250));
+        s.add(Duration::from_millis(750));
+        assert!((s.secs() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Model", "GB/s"]);
+        t.row_strs(&["RM1", "16.50"]);
+        t.row_strs(&["RM2", "4.69"]);
+        let r = t.render();
+        assert!(r.contains("## Demo"));
+        assert!(r.contains("RM1"));
+        let lines: Vec<&str> = r.lines().collect();
+        // header, separator, two rows (+title/blank)
+        assert!(lines.len() >= 5);
+    }
+
+    #[test]
+    fn series_normalizes_and_sparks() {
+        let mut s = Series::new("util");
+        for i in 0..10 {
+            s.push(i as f64, (i % 5) as f64);
+        }
+        let n = s.normalized();
+        assert!((n.max_y() - 1.0).abs() < 1e-12);
+        assert_eq!(s.sparkline(10).chars().count(), 10);
+    }
+
+    #[test]
+    fn etl_metrics_qps() {
+        let m = EtlMetrics::default();
+        m.samples.add(500);
+        m.t_transform.add(Duration::from_millis(500));
+        assert!((m.qps() - 1000.0).abs() < 1.0);
+    }
+}

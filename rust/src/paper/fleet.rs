@@ -1,0 +1,632 @@
+//! Fleet-level drivers: Table 2 (feature lifecycle), Figs 4/5/6
+//! (coordinated training), Fig 7 (byte popularity), Fig 1 (power split),
+//! Fig 2 (growth), and the §7 insights / §7.5 power analyses.
+
+use super::harness::{build_world, measure_pipeline};
+use crate::config::{DeviceSpec, NodeSpec, RmConfig, RmId, SimScale, TrainerNodeSpec};
+use crate::datagen::growth_series;
+use crate::dpp::PipelineOptions;
+use crate::dwrf::WriterOptions;
+use crate::metrics::{Series, Table};
+use crate::popularity::simulate_month;
+use crate::power::{dsi_power_reduction, power_split, provision_storage, PowerSplit};
+use crate::schema::{FeatureCatalog, FeatureStatus, Schema};
+use crate::sched::{
+    combo_iteration, daily_utilization, model_release_jobs, place_balanced,
+    place_packed, top10_model_demand, JobStatus, REGIONS,
+};
+use crate::transforms::{all_op_names, Op, OpClass};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+
+/// Table 2: feature lifecycle over a 6-month window.
+pub fn table2(seed: u64) -> Result<Json> {
+    let mut rng = Pcg32::new(seed);
+    let mut cat = FeatureCatalog::new();
+    cat.propose(&mut rng, 14614);
+    let mut t = Table::new(
+        "Table 2 — features created in 6 months, status 6 months later (paper | sim)",
+        &["Beta", "Experimental", "Active", "Deprecated", "Total"],
+    );
+    t.row(&[
+        format!("10148 | {}", cat.count(FeatureStatus::Beta)),
+        format!("883 | {}", cat.count(FeatureStatus::Experimental)),
+        format!("1650 | {}", cat.count(FeatureStatus::Active)),
+        format!("1933 | {}", cat.count(FeatureStatus::Deprecated)),
+        format!("14614 | {}", cat.total()),
+    ]);
+    t.print();
+    println!(
+        "  actively written to the dataset: {} features (experimental + \
+         active + deprecated)",
+        cat.actively_written()
+    );
+    let mut j = Json::obj();
+    j.set("beta", cat.count(FeatureStatus::Beta))
+        .set("experimental", cat.count(FeatureStatus::Experimental))
+        .set("active", cat.count(FeatureStatus::Active))
+        .set("deprecated", cat.count(FeatureStatus::Deprecated));
+    Ok(j)
+}
+
+/// Table 4: features required by representative RC model versions.
+pub fn table4() -> Result<Json> {
+    let mut t = Table::new(
+        "Table 4 — features used by representative RC models",
+        &["Model Class", "# Dense", "# Sparse", "# Derived"],
+    );
+    let mut j = Json::obj();
+    for rm in RmConfig::all() {
+        t.row(&[
+            rm.id.name().into(),
+            format!("{}", rm.used_dense_features),
+            format!("{}", rm.used_sparse_features),
+            format!("{}", rm.derived_features),
+        ]);
+        let mut o = Json::obj();
+        o.set("dense", rm.used_dense_features)
+            .set("sparse", rm.used_sparse_features)
+            .set("derived", rm.derived_features);
+        j.set(rm.id.name(), o);
+    }
+    t.print();
+    Ok(j)
+}
+
+/// Table 10: compute-node generations + derived per-core ratios.
+pub fn table10() -> Result<Json> {
+    let mut t = Table::new(
+        "Table 10 — DPP compute node generations",
+        &[
+            "Node",
+            "Cores",
+            "NIC (Gbps)",
+            "Mem (GB)",
+            "Peak MemBW (GB/s)",
+            "MemBW/Core",
+            "NIC/Core",
+        ],
+    );
+    let mut j = Json::obj();
+    for n in NodeSpec::all_generations() {
+        t.row(&[
+            n.name.into(),
+            format!("{}", n.physical_cores),
+            format!("{:.1}", n.nic_gbps),
+            format!("{:.0}", n.memory_gb),
+            format!("{:.0}", n.peak_mem_bw_gbps),
+            format!("{:.1}", n.mem_bw_per_core()),
+            format!("{:.2}", n.nic_bw_per_core()),
+        ]);
+        let mut o = Json::obj();
+        o.set("membw_per_core", n.mem_bw_per_core())
+            .set("nic_per_core", n.nic_bw_per_core());
+        j.set(n.name, o);
+    }
+    t.print();
+    println!(
+        "  §6.3: NIC/core grows while memBW/core shrinks → memory \
+         bandwidth becomes the preprocessing bottleneck."
+    );
+    Ok(j)
+}
+
+/// Table 11: the transform op inventory with class + GPU amenability.
+pub fn table11() -> Result<Json> {
+    let mut t = Table::new(
+        "Table 11 — production preprocessing transforms",
+        &["Op", "Class", "GPU/CPU speedup (paper §7.2 where given)"],
+    );
+    let examples: Vec<(&str, Op)> = vec![
+        ("Cartesian", Op::Cartesian),
+        ("Bucketize", Op::Bucketize { borders: vec![0.0] }),
+        ("ComputeScore", Op::ComputeScore { mul: 1.0, add: 0.0 }),
+        ("Enumerate", Op::Enumerate),
+        ("PositiveModulus", Op::PositiveModulus { modulus: 10 }),
+        ("IdListTransform", Op::IdListTransform),
+        ("BoxCox", Op::BoxCox { lambda: 0.5 }),
+        ("Logit", Op::Logit { eps: 1e-4 }),
+        (
+            "MapId",
+            Op::MapId {
+                mapping: Default::default(),
+                default: 0,
+            },
+        ),
+        ("FirstX", Op::FirstX { x: 8 }),
+        ("GetLocalHour", Op::GetLocalHour { tz_offset_secs: 0 }),
+        (
+            "SigridHash",
+            Op::SigridHash {
+                salt: 0,
+                modulus: 1 << 16,
+            },
+        ),
+        ("NGram", Op::NGram { n: 2 }),
+        ("Onehot", Op::Onehot { buckets: 16 }),
+        ("Clamp", Op::Clamp { lo: 0.0, hi: 1.0 }),
+        (
+            "Sampling",
+            Op::Sampling {
+                rate: 0.5,
+                seed: 0,
+            },
+        ),
+    ];
+    assert_eq!(examples.len(), all_op_names().len());
+    let mut j = Json::obj();
+    for (name, op) in &examples {
+        let class = match op.class() {
+            OpClass::DenseNorm => "dense norm",
+            OpClass::SparseNorm => "sparse norm",
+            OpClass::FeatureGen => "feature gen",
+        };
+        t.row(&[
+            (*name).into(),
+            class.into(),
+            format!("{:.1}x", op.gpu_speedup()),
+        ]);
+        j.set(name, op.gpu_speedup());
+    }
+    t.print();
+    println!(
+        "  §6.4 cycle split target: feature gen ≈75%, sparse norm ≈20%, \
+         dense norm ≈5% of transform cycles."
+    );
+    Ok(j)
+}
+
+/// Fig 1: storage/preprocessing/training power split per RM.
+pub fn fig1(scale: &SimScale, seed: u64) -> Result<Json> {
+    let mut t = Table::new(
+        "Fig 1 — power split per training node (measured-model)",
+        &["Model", "Storage %", "Preproc %", "Training %", "DSI > 50%?"],
+    );
+    let mut j = Json::obj();
+    for rm in RmConfig::all() {
+        let split = rm_power_split(&rm, scale, seed)?;
+        let (s, p, tr) = split.fracs();
+        t.row(&[
+            rm.id.name().into(),
+            format!("{:.0}", s * 100.0),
+            format!("{:.0}", p * 100.0),
+            format!("{:.0}", tr * 100.0),
+            if split.dsi_frac() > 0.5 { "yes" } else { "no" }.into(),
+        ]);
+        let mut o = Json::obj();
+        o.set("storage", s).set("preproc", p).set("training", tr);
+        j.set(rm.id.name(), o);
+    }
+    t.print();
+    println!(
+        "  paper: DSI (storage+preproc) power can exceed training power; \
+         RM1/RM3 cross 50% in Fig 1."
+    );
+    Ok(j)
+}
+
+/// Power split for an RM using measured worker throughput + Table 3
+/// dataset sizes + the observed average I/O size.
+pub fn rm_power_split(rm: &RmConfig, scale: &SimScale, seed: u64) -> Result<PowerSplit> {
+    let world = build_world(rm, scale, WriterOptions::default(), seed)?;
+    let m = measure_pipeline(&world, PipelineOptions::default(), 64, seed)?;
+    let sat = crate::resources::saturation(&m.cost, &NodeSpec::c_v1());
+    let bytes_per_sample = m.tensor_tx_bytes as f64 / m.samples.max(1) as f64;
+    let demand = crate::trainer::TrainerDemand::for_rm(rm, bytes_per_sample);
+    let wpt = crate::trainer::workers_per_trainer(
+        demand.samples_per_sec(),
+        sat.max_samples_per_sec,
+    );
+    // Storage: demand per trainer node, observed average I/O size.
+    let avg_io = m.storage.bytes_read as f64 / m.storage.reads.max(1) as f64;
+    let read_gbps_per_trainer =
+        demand.samples_per_sec() * m.cost.net_rx_bytes * 8.0 / 1e9;
+    // Trainers sharing the dataset: total fleet demand for this model.
+    let trainers_sharing = 100.0;
+    let storage = provision_storage(
+        rm.used_partitions_pb,
+        3.0,
+        read_gbps_per_trainer * trainers_sharing,
+        avg_io,
+        &DeviceSpec::hdd(),
+    );
+    Ok(power_split(
+        &TrainerNodeSpec::zionex(),
+        &NodeSpec::c_v1(),
+        wpt,
+        storage.watts(&DeviceSpec::hdd()) / trainers_sharing,
+    ))
+}
+
+/// Fig 2: dataset size and ingestion bandwidth growth over 24 months.
+pub fn fig2() -> Result<Json> {
+    let (size, bw) = growth_series(24);
+    let mut s1 = Series::new("dataset size");
+    let mut s2 = Series::new("ingest bw");
+    for (m, (&a, &b)) in size.iter().zip(bw.iter()).enumerate() {
+        s1.push(m as f64, a);
+        s2.push(m as f64, b);
+    }
+    println!("\n## Fig 2 — 24-month growth (normalized to month 0)");
+    println!("  size ({:.2}x): {}", size[23], s1.sparkline(48));
+    println!("  bw   ({:.2}x): {}", bw[23], s2.sparkline(48));
+    println!("  paper: storage grew >2x, bandwidth >4x over two years");
+    let mut j = Json::obj();
+    j.set("size_growth", size[23]).set("bw_growth", bw[23]);
+    Ok(j)
+}
+
+/// Fig 4: one RM1 release iteration's combo jobs.
+pub fn fig4(seed: u64) -> Result<Json> {
+    let mut rng = Pcg32::new(seed);
+    let jobs = combo_iteration(&mut rng, 0, 82, 10.0);
+    let mut sorted = jobs.clone();
+    sorted.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    println!("\n## Fig 4 — 82 combo jobs in one RM1 release iteration");
+    let glyph = |s: JobStatus| match s {
+        JobStatus::Completed => '█',
+        JobStatus::Killed => '▒',
+        JobStatus::Failed => '░',
+    };
+    for (i, chunk) in sorted.chunks(20).enumerate() {
+        let line: String = chunk
+            .iter()
+            .map(|x| glyph(x.status))
+            .collect();
+        println!("  jobs {:>2}-{:<2}: {}", i * 20, i * 20 + chunk.len() - 1, line);
+    }
+    let completed =
+        jobs.iter().filter(|x| x.status == JobStatus::Completed).count();
+    let killed = jobs.iter().filter(|x| x.status == JobStatus::Killed).count();
+    let failed = jobs.iter().filter(|x| x.status == JobStatus::Failed).count();
+    let mut durs: Vec<f64> = jobs.iter().map(|x| x.duration).collect();
+    durs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "  completed {completed} / killed {killed} / failed {failed}; \
+         duration p50 {:.1}d p95 {:.1}d max {:.1}d (skewed, some >10d)",
+        durs[durs.len() / 2],
+        durs[(durs.len() as f64 * 0.95) as usize],
+        durs.last().unwrap()
+    );
+    let mut j = Json::obj();
+    j.set("completed", completed)
+        .set("killed", killed)
+        .set("failed", failed)
+        .set("max_duration", *durs.last().unwrap());
+    Ok(j)
+}
+
+/// Fig 5: a year of daily peak compute across collaborative jobs.
+pub fn fig5(seed: u64) -> Result<Json> {
+    let mut rng = Pcg32::new(seed);
+    let mut jobs = Vec::new();
+    for m in 0..60 {
+        let scale = 1.0 / (m as f64 + 1.0).powf(0.6);
+        let cycle = 30.0 + rng.f64() * 40.0;
+        jobs.extend(model_release_jobs(&mut rng, m, 365.0, cycle, scale));
+    }
+    let days = daily_utilization(&jobs, 365);
+    let mut s = Series::new("daily util");
+    for (d, &u) in days.iter().enumerate() {
+        s.push(d as f64, u);
+    }
+    let n = s.normalized();
+    println!("\n## Fig 5 — normalized daily compute over one year ({} jobs)", jobs.len());
+    println!("  {}", n.sparkline(72));
+    let mean = days.iter().sum::<f64>() / days.len() as f64;
+    let peak = days.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "  peak/mean = {:.2} — distinct peaks where many models run combo \
+         jobs concurrently (must provision for these, §4.2)",
+        peak / mean
+    );
+    let mut j = Json::obj();
+    j.set("peak_over_mean", peak / mean).set("jobs", jobs.len());
+    Ok(j)
+}
+
+/// Fig 6: top-10 model demand split across 5 regions + §7.3 bin-packing.
+pub fn fig6(seed: u64) -> Result<Json> {
+    let mut rng = Pcg32::new(seed);
+    let demand = top10_model_demand();
+    let balanced = place_balanced(&mut rng, &demand);
+    let mut t = Table::new(
+        "Fig 6 — compute demand of top-10 models by region (normalized to J)",
+        &["Model", "R1", "R2", "R3", "R4", "R5", "Total"],
+    );
+    for (m, row) in balanced.demand.iter().enumerate() {
+        let name = (b'A' + m as u8) as char;
+        let mut cells = vec![name.to_string()];
+        for r in 0..REGIONS {
+            cells.push(format!("{:.2}", row[r]));
+        }
+        cells.push(format!("{:.2}", demand[m]));
+        t.row(&cells);
+    }
+    t.print();
+    let total: f64 = demand.iter().sum();
+    let packed = place_packed(&demand, total / REGIONS as f64 * 1.25);
+    println!(
+        "  balanced placement: {} dataset copies; bin-packed: {} copies \
+         (−{:.0}% replica storage, §7.3)",
+        balanced.dataset_copies,
+        packed.dataset_copies,
+        (1.0 - packed.dataset_copies as f64 / balanced.dataset_copies as f64)
+            * 100.0
+    );
+    let mut j = Json::obj();
+    j.set("balanced_copies", balanced.dataset_copies)
+        .set("packed_copies", packed.dataset_copies);
+    Ok(j)
+}
+
+/// Fig 7: byte-popularity CDFs for RM1–3.
+pub fn fig7(seed: u64) -> Result<Json> {
+    println!("\n## Fig 7 — CDF of popular bytes vs I/O absorbed (1 month of jobs)");
+    let mut j = Json::obj();
+    for rm in RmConfig::all() {
+        let mut rng = Pcg32::new(seed ^ rm.id.index() as u64);
+        let schema = Schema::synthetic(
+            &mut rng,
+            400,
+            120,
+            rm.avg_coverage,
+            rm.avg_sparse_len,
+        );
+        let stats = simulate_month(&mut rng, &rm, &schema, 150);
+        let frac80 = stats.bytes_for_io(0.8);
+        let cdf = stats.cdf();
+        let mut s = Series::new("cdf");
+        for &(x, y) in &cdf {
+            s.push(x, y);
+        }
+        println!(
+            "  {}: {} | {:.0}% of bytes serve 80% of I/O (paper: {:.0}%)",
+            rm.id.name(),
+            s.sparkline(48),
+            frac80 * 100.0,
+            rm.paper_bytes_for_80pct_io * 100.0
+        );
+        let mut o = Json::obj();
+        o.set("bytes_for_80pct_io", frac80)
+            .set("paper", rm.paper_bytes_for_80pct_io);
+        j.set(rm.id.name(), o);
+    }
+    println!(
+        "  shape: RM3 most concentrated (fewest bytes for 80% of I/O), \
+         matching the paper's 18% vs RM1's 39%."
+    );
+    Ok(j)
+}
+
+/// §7.2 insights: heterogeneous storage media + transform acceleration +
+/// kernel batching.
+pub fn insights() -> Result<Json> {
+    let hdd = DeviceSpec::hdd();
+    let ssd = DeviceSpec::ssd();
+    let mut t = Table::new(
+        "§7.2 — storage media trade-off (per watt, vs HDD)",
+        &["Medium", "IOPS/W", "Capacity/W (TB)", "IOPS/W vs HDD", "Cap/W vs HDD"],
+    );
+    for d in [&hdd, &ssd] {
+        t.row(&[
+            d.name.into(),
+            format!("{:.1}", d.iops_per_watt()),
+            format!("{:.2}", d.capacity_per_watt_tb()),
+            format!("{:.0}%", d.iops_per_watt() / hdd.iops_per_watt() * 100.0),
+            format!(
+                "{:.0}%",
+                d.capacity_per_watt_tb() / hdd.capacity_per_watt_tb() * 100.0
+            ),
+        ]);
+    }
+    t.print();
+    println!(
+        "  paper: SSD ≈326% IOPS/W but ≈9% capacity/W → tier popular \
+         features (Fig 7) onto flash, keep capacity on HDD."
+    );
+
+    // Live tiering experiment: Fig-7 popularity says ~40% of bytes serve
+    // 80% of I/O — admit exactly those bytes to a bounded SSD tier and
+    // measure the service-time (≈power) cut on a skewed read workload.
+    {
+        use crate::dwrf::IoRange;
+        use crate::tectonic::{Cluster, ClusterConfig, TieredStore};
+        use crate::util::rng::{Pcg32, Zipf};
+        let hdd_cluster = std::sync::Arc::new(Cluster::new(ClusterConfig {
+            chunk_bytes: 1 << 20,
+            ..Default::default()
+        }));
+        let f = hdd_cluster.create("tiering-exp");
+        let n_regions = 100usize;
+        let region = 16_384u64;
+        hdd_cluster
+            .append(f, &vec![0xABu8; n_regions * region as usize])
+            .unwrap();
+        // Popularity over regions: Zipf; admit the hottest 40% of bytes.
+        let zipf = Zipf::new(n_regions, 1.1);
+        let tier =
+            TieredStore::new(hdd_cluster, 2, (n_regions as u64 * region) * 2 / 5);
+        for r in 0..(n_regions * 2 / 5) as u64 {
+            tier.admit(
+                f,
+                IoRange {
+                    offset: r * region,
+                    len: region,
+                },
+            )
+            .unwrap();
+        }
+        tier.reset_stats();
+        let mut rng = Pcg32::new(99);
+        for _ in 0..2000 {
+            let r = zipf.sample(&mut rng) as u64;
+            tier.read_range(
+                f,
+                IoRange {
+                    offset: r * region + rng.below(region - 2048),
+                    len: 2048,
+                },
+            )
+            .unwrap();
+        }
+        let tiered_secs = tier.total_device_secs();
+        let hit = tier.hit_rate();
+        // Same workload, no tier.
+        let cold = TieredStore::new(tier.hdd.clone(), 2, 0);
+        cold.reset_stats();
+        let mut rng = Pcg32::new(99);
+        for _ in 0..2000 {
+            let r = zipf.sample(&mut rng) as u64;
+            cold.read_range(
+                f,
+                IoRange {
+                    offset: r * region + rng.below(region - 2048),
+                    len: 2048,
+                },
+            )
+            .unwrap();
+        }
+        let cold_secs = cold.total_device_secs();
+        println!(
+            "  tiering experiment: hottest 40% of bytes on SSD → hit rate \
+             {:.0}%, storage service time {:.2}s → {:.2}s ({:.1}x less \
+             disk-time ≈ {:.1}x fewer IOPS-provisioned HDD nodes)",
+            hit * 100.0,
+            cold_secs,
+            tiered_secs,
+            cold_secs / tiered_secs.max(1e-12),
+            cold_secs / tiered_secs.max(1e-12),
+        );
+    }
+    // Kernel-batching experiment: one op over 1000 fused features vs 1000
+    // per-feature invocations (the CPU-side analogue of the paper's
+    // >1000x GPU launch-overhead observation).
+    let op = Op::SigridHash {
+        salt: 1,
+        modulus: 1 << 16,
+    };
+    let per_feature_elems = 32usize;
+    let n_features = 1000usize;
+    let mk = |n_rows: usize| crate::transforms::Value::Sparse {
+        offsets: (0..=n_rows as u32).collect(),
+        ids: (0..n_rows as u64).collect(),
+        scores: None,
+    };
+    let small = mk(per_feature_elems);
+    let big = mk(per_feature_elems * n_features);
+    let t0 = std::time::Instant::now();
+    for _ in 0..n_features {
+        std::hint::black_box(op.apply(&[&small]).unwrap());
+    }
+    let separate = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    std::hint::black_box(op.apply(&[&big]).unwrap());
+    let fused = t0.elapsed().as_secs_f64();
+    // On a GPU each per-feature apply is a kernel launch + host-to-device
+    // transfer (~10 µs launch alone); the fused call pays it once. The
+    // paper's >1000x comes from that per-launch overhead.
+    const GPU_LAUNCH_SECS: f64 = 10e-6;
+    let gpu_separate = n_features as f64 * GPU_LAUNCH_SECS
+        + separate / 10.0; // compute itself accelerates ~10x
+    let gpu_fused = GPU_LAUNCH_SECS + fused / 10.0;
+    let modeled = gpu_separate / gpu_fused.max(1e-12);
+    println!(
+        "  kernel batching: 1000 per-feature applies {:.2}ms vs 1 fused \
+         {:.2}ms on CPU ({:.1}x — CPUs have no launch overhead); with a \
+         10µs/launch GPU model: {:.0}x (paper: >1000x observed on V100)",
+        separate * 1e3,
+        fused * 1e3,
+        separate / fused.max(1e-9),
+        modeled,
+    );
+    let mut j = Json::obj();
+    j.set("ssd_iops_per_watt_ratio", ssd.iops_per_watt() / hdd.iops_per_watt())
+        .set(
+            "ssd_cap_per_watt_ratio",
+            ssd.capacity_per_watt_tb() / hdd.capacity_per_watt_tb(),
+        )
+        .set("batching_speedup_cpu", separate / fused.max(1e-9))
+        .set("batching_speedup_gpu_model", modeled);
+    Ok(j)
+}
+
+/// §7.5: DSI power reduction from the measured Table 12 gains.
+pub fn power_analysis(scale: &SimScale, seed: u64) -> Result<Json> {
+    // Measure the Table 12 end states for RM1.
+    let stages = super::storage::table12(scale, seed)?;
+    let dpp = stages.get("dpp").unwrap();
+    let storage = stages.get("storage").unwrap();
+    let (dpp_gain, storage_gain) = match (dpp, storage) {
+        (Json::Arr(d), Json::Arr(s)) => (
+            d.last().unwrap().as_f64().unwrap(),
+            s.last().unwrap().as_f64().unwrap(),
+        ),
+        _ => (1.0, 1.0),
+    };
+    let rm = RmConfig::get(RmId::Rm1);
+    let split = rm_power_split(&rm, scale, seed)?;
+    let reduction = dsi_power_reduction(&split, dpp_gain, storage_gain);
+    let paper_reduction = dsi_power_reduction(
+        &PowerSplit {
+            storage_w: split.storage_w,
+            preproc_w: split.preproc_w,
+            training_w: split.training_w,
+        },
+        2.94,
+        2.41,
+    );
+    println!("\n## §7.5 — co-designed optimization power impact");
+    println!(
+        "  measured gains: DPP {dpp_gain:.2}x, storage {storage_gain:.2}x \
+         (paper: 2.94x / 2.41x)"
+    );
+    println!(
+        "  → DSI power reduction {reduction:.2}x on our power split \
+         (paper reports 2.59x; our split would give {paper_reduction:.2}x \
+         at the paper's gains)"
+    );
+    let mut j = Json::obj();
+    j.set("dpp_gain", dpp_gain)
+        .set("storage_gain", storage_gain)
+        .set("reduction", reduction);
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper_distribution() {
+        let j = table2(3).unwrap();
+        let beta = j.get("beta").unwrap().as_f64().unwrap();
+        assert!((beta - 10148.0).abs() < 600.0);
+    }
+
+    #[test]
+    fn fig7_rm3_most_concentrated() {
+        let j = fig7(9).unwrap();
+        let f = |k: &str| {
+            j.get(k)
+                .unwrap()
+                .get("bytes_for_80pct_io")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert!(f("RM3") < f("RM1"));
+    }
+
+    #[test]
+    fn insights_ratios() {
+        let j = insights().unwrap();
+        assert!(j.get("ssd_iops_per_watt_ratio").unwrap().as_f64().unwrap() > 3.0);
+        assert!(j.get("ssd_cap_per_watt_ratio").unwrap().as_f64().unwrap() < 0.5);
+        assert!(
+            j.get("batching_speedup_gpu_model").unwrap().as_f64().unwrap()
+                > 50.0
+        );
+    }
+}

@@ -1,0 +1,231 @@
+//! Shared experiment machinery: build an RM-shaped world (dataset in
+//! Tectonic + catalog), run a measured single-threaded worker pipeline
+//! over it, and collect the cost/throughput numbers the drivers print.
+
+use crate::config::{RmConfig, SimScale};
+use crate::datagen::build_dataset;
+use crate::dpp::{Master, PipelineOptions, SessionSpec, WorkerCore};
+use crate::dwrf::{Projection, WriterOptions};
+use crate::metrics::EtlMetrics;
+use crate::popularity::{simulate_month, AccessStats};
+use crate::resources::PerSampleCost;
+use crate::schema::{FeatureId, Schema};
+use crate::tectonic::{Cluster, ClusterConfig, IoStats};
+use crate::transforms::dag::session_dag;
+use crate::util::rng::Pcg32;
+use crate::warehouse::Catalog;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A built experiment world for one RM.
+pub struct World {
+    pub rm: RmConfig,
+    pub cluster: Arc<Cluster>,
+    pub catalog: Catalog,
+    pub table: String,
+    pub schema: Schema,
+    /// The representative job's feature projection.
+    pub projection: Vec<FeatureId>,
+    /// Popularity stats over a month of simulated jobs (drives FR).
+    pub stats: AccessStats,
+}
+
+/// Build a world: generate the dataset with `writer_opts`, sample a
+/// representative projection, accumulate popularity stats.
+pub fn build_world(
+    rm: &RmConfig,
+    scale: &SimScale,
+    writer_opts: WriterOptions,
+    seed: u64,
+) -> Result<World> {
+    let mut rng = Pcg32::new(seed);
+    let cluster = Arc::new(Cluster::new(ClusterConfig {
+        chunk_bytes: 4 << 20,
+        ..Default::default()
+    }));
+    let catalog = Catalog::new();
+    let handle =
+        build_dataset(&cluster, &catalog, rm, scale, writer_opts, seed)?;
+    let schema = handle.schema.clone();
+    let stats = simulate_month(&mut rng.fork(1), rm, &schema, 90);
+    let take = (schema.features.len() as f64 * rm.frac_feats_used())
+        .round()
+        .max(4.0) as usize;
+    // §5.2: jobs "largely build upon a common baseline (e.g., the current
+    // production model version)" — the representative job reads the
+    // production feature set (the aggregate-popular features) plus a
+    // smaller experimental tail sampled from the rest.
+    let mut proj_rng = rng.fork(2);
+    let baseline_n = take * 19 / 20;
+    let order = stats.reorder();
+    let mut projection: Vec<FeatureId> =
+        order.iter().take(baseline_n).copied().collect();
+    let rest: Vec<FeatureId> = order
+        .iter()
+        .skip(baseline_n)
+        .copied()
+        .collect();
+    while projection.len() < take && projection.len() - baseline_n < rest.len() {
+        let pick = rest[proj_rng.below(rest.len() as u64) as usize];
+        if !projection.contains(&pick) {
+            projection.push(pick);
+        }
+    }
+    Ok(World {
+        rm: rm.clone(),
+        cluster,
+        catalog,
+        table: handle.table_name,
+        schema,
+        projection,
+        stats,
+    })
+}
+
+/// The popularity order for feature reordering, derived the way
+/// production does it (§7.5: jobs launched within a recent window).
+pub fn popularity_order(world: &World) -> Vec<FeatureId> {
+    world.stats.reorder()
+}
+
+/// Rebuild the same world with different writer options (same seed so
+/// data and projection distribution match).
+pub fn rebuild(world: &World, scale: &SimScale, writer_opts: WriterOptions, seed: u64) -> Result<World> {
+    build_world(&world.rm, scale, writer_opts, seed)
+}
+
+/// Result of a measured single-threaded pipeline run.
+#[derive(Clone, Debug)]
+pub struct PipelineMeasurement {
+    pub samples: u64,
+    /// Worker wall seconds (busy; single thread).
+    pub busy_secs: f64,
+    /// Worker throughput, samples/s.
+    pub worker_sps: f64,
+    pub cost: PerSampleCost,
+    pub storage: IoStats,
+    /// Useful (wanted-stream) bytes fetched.
+    pub storage_rx_bytes: u64,
+    pub tensor_tx_bytes: u64,
+    /// Storage throughput: delivered bytes per device-second (MB/s).
+    pub storage_mbps: f64,
+}
+
+/// Run the real worker pipeline single-threaded over the whole dataset
+/// with the given toggles; measure everything.
+pub fn measure_pipeline(
+    world: &World,
+    pipeline: PipelineOptions,
+    batch_size: usize,
+    seed: u64,
+) -> Result<PipelineMeasurement> {
+    let mut rng = Pcg32::new(seed ^ 0xABCD);
+    let dag = session_dag(&mut rng, &world.rm, &world.schema, &world.projection);
+    let mut spec = SessionSpec::from_dag(&world.table, 0, u32::MAX, dag, batch_size);
+    // The projection includes DAG inputs; also read any projected raw
+    // features not consumed by the DAG (loaded as-is in production).
+    spec.projection = Projection::new(world.projection.iter().copied());
+    spec.pipeline = pipeline;
+    let spec = Arc::new(spec);
+
+    world.cluster.reset_stats();
+    let master = Master::new(&world.catalog, &world.cluster, (*spec).clone())?;
+    let wid = master.register_worker();
+    let metrics = Arc::new(EtlMetrics::default());
+    let mut core = WorkerCore::new(spec, world.cluster.clone(), metrics.clone());
+    while let Some(split) = master.fetch_split(wid) {
+        let batches = core.process_split(&split)?;
+        std::hint::black_box(&batches);
+        master.complete_split(wid, split.id);
+    }
+    let storage = world.cluster.stats();
+    let samples = metrics.samples.get();
+    let busy = metrics.total_secs();
+    let cost = PerSampleCost::from_metrics(&metrics);
+    let storage_rx = metrics.storage_rx_bytes.get();
+    Ok(PipelineMeasurement {
+        samples,
+        busy_secs: busy,
+        worker_sps: samples as f64 / busy.max(1e-12),
+        cost,
+        storage_mbps: storage_rx as f64 / 1e6 / storage.device_secs.max(1e-12),
+        storage,
+        storage_rx_bytes: storage_rx,
+        tensor_tx_bytes: metrics.tensor_tx_bytes.get(),
+    })
+}
+
+/// Measure trainer-client loading cost per wire byte: decrypt +
+/// deserialize a realistic tensor batch repeatedly.
+pub fn measure_loading_cost_per_byte(seed: u64) -> f64 {
+    use crate::dpp::TensorBatch;
+    use crate::dwrf::crypto::StreamCipher;
+    let mut rng = Pcg32::new(seed);
+    // A representative DPP output batch.
+    let rows = 64usize;
+    let n_dense = 64usize;
+    let dense: Vec<f32> = (0..rows * n_dense).map(|_| rng.f32()).collect();
+    let mut sparse = Vec::new();
+    for s in 0..16u32 {
+        let mut offsets = vec![0u32];
+        let mut ids = Vec::new();
+        for _ in 0..rows {
+            let n = rng.below(30) as usize;
+            for _ in 0..n {
+                ids.push(rng.below(1 << 20));
+            }
+            offsets.push(ids.len() as u32);
+        }
+        sparse.push((crate::schema::FeatureId(1000 + s), offsets, ids));
+    }
+    let tb = TensorBatch {
+        rows,
+        dense,
+        dense_names: (0..n_dense as u32).map(crate::schema::FeatureId).collect(),
+        sparse,
+        labels: vec![0.5; rows],
+    };
+    let cipher = StreamCipher::for_table("loading-bench");
+    let wire = tb.to_wire(&cipher, 7);
+    let bytes = wire.len();
+    // Warm + measure.
+    let mut total = 0usize;
+    let t = std::time::Instant::now();
+    let iters = 64;
+    for i in 0..iters {
+        let got = TensorBatch::from_wire(&cipher, 7, &wire).unwrap();
+        std::hint::black_box(&got);
+        total += bytes;
+        let _ = i;
+    }
+    t.elapsed().as_secs_f64() / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RmId;
+
+    #[test]
+    fn world_builds_and_measures() {
+        let rm = RmConfig::get(RmId::Rm3);
+        let scale = SimScale::tiny();
+        let world =
+            build_world(&rm, &scale, WriterOptions::default(), 99).unwrap();
+        assert!(!world.projection.is_empty());
+        let m = measure_pipeline(&world, PipelineOptions::default(), 16, 1)
+            .unwrap();
+        assert_eq!(m.samples, 128);
+        assert!(m.worker_sps > 0.0);
+        assert!(m.storage_mbps > 0.0);
+        assert!(m.cost.cpu_secs > 0.0);
+        assert!(m.cost.frac_extract + m.cost.frac_transform + m.cost.frac_misc > 0.99);
+    }
+
+    #[test]
+    fn loading_cost_is_positive_and_small() {
+        let c = measure_loading_cost_per_byte(3);
+        assert!(c > 0.0);
+        assert!(c < 1e-5, "cost per byte {c}");
+    }
+}

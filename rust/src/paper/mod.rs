@@ -1,0 +1,91 @@
+//! Paper experiment registry: every table and figure of the paper's
+//! evaluation, regenerable via `dsi paper --exp <id>` (or `--exp all`).
+//!
+//! Each driver prints the paper's reported values next to what this
+//! reproduction measures; `--json` additionally emits machine-readable
+//! results (consumed when updating EXPERIMENTS.md).
+
+pub mod fleet;
+pub mod harness;
+pub mod preproc;
+pub mod storage;
+
+use crate::config::SimScale;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// All experiment ids, in paper order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig1", "fig2", "table2", "fig4", "fig5", "fig6", "table3", "table4",
+    "table5", "table6", "fig7", "table7", "table8", "fig8", "table9", "fig9",
+    "table10", "table11", "fig10", "table12", "insights", "power",
+];
+
+/// Run one experiment by id.
+pub fn run(exp: &str, scale: &SimScale, seed: u64) -> Result<Json> {
+    match exp {
+        "fig1" => fleet::fig1(scale, seed),
+        "fig2" => fleet::fig2(),
+        "table2" => fleet::table2(seed),
+        "fig4" => fleet::fig4(seed),
+        "fig5" => fleet::fig5(seed),
+        "fig6" => fleet::fig6(seed),
+        "table3" => storage::table3(scale, seed),
+        "table4" => fleet::table4(),
+        "table5" => storage::table5(scale, seed),
+        "table6" => storage::table6(scale, seed),
+        "fig7" => fleet::fig7(seed),
+        "table7" => preproc::table7(scale, seed),
+        "table8" => preproc::table8(scale, seed),
+        "fig8" => preproc::fig8(scale, seed),
+        "table9" => preproc::table9(scale, seed),
+        "fig9" => preproc::fig9(scale, seed),
+        "table10" => fleet::table10(),
+        "table11" => fleet::table11(),
+        "fig10" => storage::fig10(scale, seed),
+        "table12" => storage::table12(scale, seed),
+        "insights" => fleet::insights(),
+        "power" => fleet::power_analysis(scale, seed),
+        other => bail!(
+            "unknown experiment '{other}'; known: {}",
+            ALL_EXPERIMENTS.join(", ")
+        ),
+    }
+}
+
+/// Run every experiment; returns a combined JSON object.
+pub fn run_all(scale: &SimScale, seed: u64) -> Result<Json> {
+    let mut all = Json::obj();
+    for exp in ALL_EXPERIMENTS {
+        println!("\n==================== {exp} ====================");
+        let j = run(exp, scale, seed)?;
+        all.set(exp, j);
+    }
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run("nope", &SimScale::tiny(), 1).is_err());
+    }
+
+    #[test]
+    fn registry_covers_every_table_and_figure() {
+        // Tables 1 (summary) and Fig 3 (architecture diagram) have no
+        // experiment; everything else must be present.
+        for required in [
+            "fig1", "fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
+            "fig10", "table2", "table3", "table4", "table5", "table6",
+            "table7", "table8", "table9", "table10", "table11", "table12",
+        ] {
+            assert!(
+                ALL_EXPERIMENTS.contains(&required),
+                "missing {required}"
+            );
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Byte/feature popularity across training jobs (§5.2, Fig 7) and the
+//! feature-reordering input it feeds (§7.5).
+//!
+//! Jobs for a model mostly build on the production baseline, so their
+//! projections overlap heavily on popular features. Simulating a month
+//! of jobs sampling Zipf-weighted projections over a schema yields the
+//! byte-popularity CDF of Fig 7; the same counts, windowed over recent
+//! jobs, produce the popularity order the DWRF writer uses for FR.
+
+use crate::config::RmConfig;
+use crate::schema::{FeatureId, Schema};
+use crate::util::rng::Pcg32;
+use crate::util::stats::{bytes_needed_for_io, popularity_cdf};
+use std::collections::HashMap;
+
+/// Accumulated access statistics across jobs.
+#[derive(Clone, Debug, Default)]
+pub struct AccessStats {
+    /// feature → (stored bytes weight, access count weighted by bytes).
+    pub per_feature: HashMap<FeatureId, (f64, f64)>,
+    pub jobs: usize,
+}
+
+impl AccessStats {
+    /// Record one job's projection over the schema.
+    pub fn record_job(&mut self, schema: &Schema, projection: &[FeatureId]) {
+        self.jobs += 1;
+        for f in &schema.features {
+            let entry = self
+                .per_feature
+                .entry(f.id)
+                .or_insert((f.expected_bytes_per_row(), 0.0));
+            entry.0 = f.expected_bytes_per_row();
+            if projection.contains(&f.id) {
+                entry.1 += f.expected_bytes_per_row();
+            }
+        }
+    }
+
+    /// Fig 7's CDF: (fraction of stored bytes, fraction of I/O served).
+    pub fn cdf(&self) -> Vec<(f64, f64)> {
+        let items: Vec<(f64, f64)> =
+            self.per_feature.values().copied().collect();
+        popularity_cdf(&items)
+    }
+
+    /// % of bytes required to absorb `io_frac` of I/O.
+    pub fn bytes_for_io(&self, io_frac: f64) -> f64 {
+        bytes_needed_for_io(&self.cdf(), io_frac)
+    }
+
+    /// Popularity-ordered feature list (most accessed first) — the FR
+    /// writer order (§7.5: ordered by popularity in jobs launched within
+    /// a recent window).
+    pub fn reorder(&self) -> Vec<FeatureId> {
+        let mut feats: Vec<(&FeatureId, &(f64, f64))> =
+            self.per_feature.iter().collect();
+        // Rank by access density (accesses per stored byte): the features
+        // most often read per byte of footprint lead each stripe, which
+        // both concentrates job projections at the stripe front (FR) and
+        // is the natural SSD-tiering order (§7.2).
+        feats.sort_by(|a, b| {
+            let da = a.1 .1 / a.1 .0.max(1e-12);
+            let db = b.1 .1 / b.1 .0.max(1e-12);
+            db.partial_cmp(&da).unwrap().then(a.0.cmp(b.0))
+        });
+        feats.into_iter().map(|(id, _)| *id).collect()
+    }
+}
+
+/// Simulate a month of training jobs for an RM over a schema; returns
+/// the accumulated access stats.
+pub fn simulate_month(
+    rng: &mut Pcg32,
+    rm: &RmConfig,
+    schema: &Schema,
+    jobs: usize,
+) -> AccessStats {
+    let mut stats = AccessStats::default();
+    let take = (schema.features.len() as f64 * rm.frac_feats_used())
+        .round()
+        .max(1.0) as usize;
+    for _ in 0..jobs {
+        let proj = schema.sample_projection(rng, take, rm.popularity_zipf_s);
+        stats.record_job(schema, &proj);
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RmId;
+
+    fn setup(id: RmId) -> (Pcg32, RmConfig, Schema) {
+        let mut rng = Pcg32::new(31);
+        let rm = RmConfig::get(id);
+        let schema = Schema::synthetic(
+            &mut rng,
+            200,
+            60,
+            rm.avg_coverage,
+            rm.avg_sparse_len,
+        );
+        (rng, rm, schema)
+    }
+
+    #[test]
+    fn popular_bytes_absorb_most_io() {
+        let (mut rng, rm, schema) = setup(RmId::Rm1);
+        let stats = simulate_month(&mut rng, &rm, &schema, 120);
+        let frac = stats.bytes_for_io(0.8);
+        // Paper Fig 7: 39% of RM1 bytes serve 80% of I/O. Assert the
+        // qualitative shape (well under uniform = 80%).
+        assert!(frac < 0.6, "RM1 bytes-for-80%-io = {frac}");
+        assert!(frac > 0.05);
+    }
+
+    #[test]
+    fn rm3_is_more_concentrated_than_rm1() {
+        // Paper: RM3 needs only 18% of bytes vs RM1's 39%.
+        let (mut rng1, rm1, schema1) = setup(RmId::Rm1);
+        let s1 = simulate_month(&mut rng1, &rm1, &schema1, 120);
+        let (mut rng3, rm3, schema3) = setup(RmId::Rm3);
+        let s3 = simulate_month(&mut rng3, &rm3, &schema3, 120);
+        assert!(
+            s3.bytes_for_io(0.8) < s1.bytes_for_io(0.8),
+            "RM3 {} !< RM1 {}",
+            s3.bytes_for_io(0.8),
+            s1.bytes_for_io(0.8)
+        );
+    }
+
+    #[test]
+    fn reorder_puts_projected_features_first() {
+        let (mut rng, rm, schema) = setup(RmId::Rm2);
+        let stats = simulate_month(&mut rng, &rm, &schema, 60);
+        let order = stats.reorder();
+        assert_eq!(order.len(), schema.features.len());
+        // Front of the order must be dominated by low-popularity-rank
+        // (popular) features.
+        let front_ranks: Vec<usize> = order[..20]
+            .iter()
+            .map(|id| schema.by_id(*id).unwrap().popularity_rank)
+            .collect();
+        let avg_front: f64 =
+            front_ranks.iter().sum::<usize>() as f64 / front_ranks.len() as f64;
+        assert!(
+            avg_front < schema.features.len() as f64 / 3.0,
+            "front avg rank {avg_front}"
+        );
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_complete() {
+        let (mut rng, rm, schema) = setup(RmId::Rm2);
+        let stats = simulate_month(&mut rng, &rm, &schema, 40);
+        let cdf = stats.cdf();
+        assert!(!cdf.is_empty());
+        for w in cdf.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 >= w[0].1 - 1e-12);
+        }
+        let last = cdf.last().unwrap();
+        assert!((last.0 - 1.0).abs() < 1e-9);
+        assert!((last.1 - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,204 @@
+//! Power model: the Fig 1 storage/preprocessing/training split and the
+//! §7.5 co-designed-optimization power accounting (2.59× DSI reduction).
+//!
+//! Fleet power per training node is the sum of
+//! * trainer node power (8 GPUs + host),
+//! * DPP worker power (workers-per-trainer × node watts),
+//! * storage power: the *larger* of capacity-provisioned and
+//!   IOPS-provisioned HDD counts (the paper's §7.1 throughput-to-storage
+//!   gap means IOPS usually dominates).
+
+use crate::config::{DeviceSpec, NodeSpec, RmConfig, TrainerNodeSpec};
+
+/// Storage-node provisioning for one model's training demand.
+#[derive(Clone, Copy, Debug)]
+pub struct StorageProvision {
+    pub capacity_nodes: f64,
+    pub iops_nodes: f64,
+    /// The gap the paper calls out (>8×): IOPS-driven over capacity-driven.
+    pub throughput_to_storage_gap: f64,
+}
+
+/// HDDs per storage node (typical storage sled).
+pub const HDDS_PER_NODE: f64 = 36.0;
+/// Storage node host overhead (watts) on top of its disks.
+pub const STORAGE_HOST_WATTS: f64 = 200.0;
+
+/// Provision storage nodes for a dataset + read demand.
+///
+/// * `dataset_pb` — compressed dataset size (× replication on disk).
+/// * `read_gbps` — aggregate storage read demand for this model's
+///   training jobs.
+/// * `avg_io_bytes` — observed average I/O size (drives achievable
+///   per-disk throughput through the seek model).
+pub fn provision_storage(
+    dataset_pb: f64,
+    replication: f64,
+    read_gbps: f64,
+    avg_io_bytes: f64,
+    disk: &DeviceSpec,
+) -> StorageProvision {
+    let bytes = dataset_pb * 1e15 * replication;
+    let capacity_nodes = bytes / (disk.capacity_tb * 1e12) / HDDS_PER_NODE;
+    // Achievable MB/s per disk at this I/O size (seek + transfer).
+    let per_io_secs = disk.service_time(avg_io_bytes as u64, false);
+    let disk_mbps = avg_io_bytes / 1e6 / per_io_secs;
+    let demand_mbps = read_gbps * 1e9 / 8.0 / 1e6;
+    let iops_nodes = demand_mbps / disk_mbps / HDDS_PER_NODE;
+    StorageProvision {
+        capacity_nodes,
+        iops_nodes,
+        throughput_to_storage_gap: iops_nodes / capacity_nodes.max(1e-12),
+    }
+}
+
+impl StorageProvision {
+    pub fn nodes(&self) -> f64 {
+        self.capacity_nodes.max(self.iops_nodes)
+    }
+
+    pub fn watts(&self, disk: &DeviceSpec) -> f64 {
+        self.nodes() * (HDDS_PER_NODE * disk.watts + STORAGE_HOST_WATTS)
+    }
+}
+
+/// Power split for one model's training footprint (Fig 1).
+#[derive(Clone, Copy, Debug)]
+pub struct PowerSplit {
+    pub storage_w: f64,
+    pub preproc_w: f64,
+    pub training_w: f64,
+}
+
+impl PowerSplit {
+    pub fn total(&self) -> f64 {
+        self.storage_w + self.preproc_w + self.training_w
+    }
+
+    pub fn dsi_frac(&self) -> f64 {
+        (self.storage_w + self.preproc_w) / self.total()
+    }
+
+    pub fn fracs(&self) -> (f64, f64, f64) {
+        let t = self.total();
+        (
+            self.storage_w / t,
+            self.preproc_w / t,
+            self.training_w / t,
+        )
+    }
+}
+
+/// Fig 1: per-trainer-node power split for an RM.
+///
+/// * `workers_per_trainer` — measured DPP workers needed per trainer
+///   node (Table 9).
+/// * `storage` — storage provisioning for this model **per trainer
+///   node's share** of the dataset demand.
+pub fn power_split(
+    trainer: &TrainerNodeSpec,
+    worker_node: &NodeSpec,
+    workers_per_trainer: f64,
+    storage_watts_per_trainer: f64,
+) -> PowerSplit {
+    PowerSplit {
+        storage_w: storage_watts_per_trainer,
+        preproc_w: workers_per_trainer * worker_node.watts,
+        training_w: trainer.total_watts(),
+    }
+}
+
+/// §7.5: DSI power reduction when DPP throughput improves `dpp_gain`×
+/// and storage throughput improves `storage_gain`× (same demand ⇒
+/// proportionally fewer nodes).
+pub fn dsi_power_reduction(
+    split: &PowerSplit,
+    dpp_gain: f64,
+    storage_gain: f64,
+) -> f64 {
+    let before = split.storage_w + split.preproc_w;
+    let after = split.storage_w / storage_gain + split.preproc_w / dpp_gain;
+    before / after
+}
+
+/// Convenience: the paper's Fig 1 reproduction inputs for an RM, using
+/// Table 9 workers-per-trainer and Table 3 dataset sizes.
+pub fn paper_inputs(rm: &RmConfig) -> (f64, f64) {
+    (rm.paper_workers_per_trainer, rm.used_partitions_pb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RmId;
+
+    #[test]
+    fn iops_provisioning_dominates_at_small_io() {
+        // Table 6-ish 23 KB average I/O on HDDs → big gap (§7.1: >8×).
+        // Demand: ~30 trainer nodes' worth of RM1 storage reads.
+        let p = provision_storage(10.0, 3.0, 450.0, 23_000.0, &DeviceSpec::hdd());
+        assert!(
+            p.throughput_to_storage_gap > 8.0,
+            "gap {}",
+            p.throughput_to_storage_gap
+        );
+        assert!(p.nodes() == p.iops_nodes);
+    }
+
+    #[test]
+    fn large_io_closes_the_gap() {
+        let small = provision_storage(10.0, 3.0, 300.0, 23_000.0, &DeviceSpec::hdd());
+        let large = provision_storage(10.0, 3.0, 300.0, 1_250_000.0, &DeviceSpec::hdd());
+        assert!(large.throughput_to_storage_gap < small.throughput_to_storage_gap / 5.0);
+    }
+
+    #[test]
+    fn fig1_dsi_can_exceed_half() {
+        // RM1-shaped: 24 workers/trainer on C-v1 + IOPS-heavy storage.
+        let rm = RmConfig::get(RmId::Rm1);
+        let storage = provision_storage(
+            rm.used_partitions_pb,
+            3.0,
+            rm.paper_storage_rx_gbps * rm.paper_workers_per_trainer * 8.0,
+            23_000.0,
+            &DeviceSpec::hdd(),
+        );
+        // Storage watts spread across ~100 trainer nodes sharing the
+        // dataset.
+        let split = power_split(
+            &TrainerNodeSpec::zionex(),
+            &NodeSpec::c_v1(),
+            rm.paper_workers_per_trainer,
+            storage.watts(&DeviceSpec::hdd()) / 100.0,
+        );
+        assert!(
+            split.dsi_frac() > 0.5,
+            "RM1 DSI fraction {}",
+            split.dsi_frac()
+        );
+    }
+
+    #[test]
+    fn dsi_reduction_matches_paper_shape() {
+        // With the paper's 2.94x / 2.41x gains, reduction lands near
+        // 2.59x when preproc is ~38% of DSI power.
+        let split = PowerSplit {
+            storage_w: 615.0,
+            preproc_w: 385.0,
+            training_w: 4100.0,
+        };
+        let r = dsi_power_reduction(&split, 2.94, 2.41);
+        assert!((r - 2.59).abs() < 0.05, "reduction {r}");
+    }
+
+    #[test]
+    fn power_split_fracs_sum_to_one() {
+        let split = PowerSplit {
+            storage_w: 1.0,
+            preproc_w: 2.0,
+            training_w: 3.0,
+        };
+        let (a, b, c) = split.fracs();
+        assert!((a + b + c - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,307 @@
+//! Node resource model: translates the worker pipeline's *measured*
+//! per-sample costs (CPU seconds, bytes moved per stage) into projected
+//! utilization and saturation throughput on the paper's hardware classes
+//! (Table 10) — the machinery behind Fig 8, Fig 9, Table 7, and Table 9.
+//!
+//! Method: run the real pipeline on this host, measure per-sample CPU
+//! time and count per-stage bytes; estimate memory traffic per stage with
+//! pass multipliers (TLS decrypt amplifies memory bandwidth ≈3×, §7.2;
+//! decompress/decode/serialize each re-touch their bytes); then, for a
+//! target node, compute the throughput at which each resource saturates.
+//! The minimum is the node's achievable throughput, and per-resource
+//! utilization at that point reproduces the Fig 9 breakdown.
+
+use crate::config::NodeSpec;
+use crate::metrics::EtlMetrics;
+
+/// Per-sample cost vector measured from a real pipeline run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PerSampleCost {
+    /// CPU seconds per sample (single-thread measured).
+    pub cpu_secs: f64,
+    /// Estimated memory-traffic bytes per sample.
+    pub mem_bytes: f64,
+    /// NIC receive bytes per sample (compressed storage reads).
+    pub net_rx_bytes: f64,
+    /// NIC transmit bytes per sample (serialized tensors).
+    pub net_tx_bytes: f64,
+    /// Resident bytes per sample held in buffers (memory capacity).
+    pub resident_bytes: f64,
+    /// CPU split for the Fig 9 stack (fractions of cpu_secs).
+    pub frac_extract: f64,
+    pub frac_transform: f64,
+    pub frac_misc: f64,
+}
+
+/// Memory-traffic pass multipliers (how many times each stage's bytes
+/// cross the memory bus). TLS ≈3× is from the paper (§7.2); the others
+/// are one read + one write pass per transformation of the data.
+pub mod passes {
+    pub const NET_RX: f64 = 2.0; // NIC → kernel → user
+    pub const TLS: f64 = 3.0; // §7.2: "TLS operations amplify ... by 3×"
+    pub const DECOMPRESS: f64 = 2.0;
+    pub const DECODE: f64 = 2.0;
+    pub const TRANSFORM: f64 = 2.0;
+    pub const SERIALIZE: f64 = 2.0;
+    pub const NET_TX: f64 = 2.0;
+}
+
+impl PerSampleCost {
+    /// Derive from pipeline metrics accumulated over a measured run.
+    pub fn from_metrics(m: &EtlMetrics) -> PerSampleCost {
+        let samples = m.samples.get().max(1) as f64;
+        let storage_rx = m.storage_rx_bytes.get() as f64;
+        let extracted = m.extract_out_bytes.get() as f64;
+        let transformed = m.transform_out_bytes.get() as f64;
+        let tx = m.tensor_tx_bytes.get() as f64;
+        // Memory traffic: every stage's bytes times its pass count.
+        let mem = storage_rx * (passes::NET_RX + passes::TLS + passes::DECOMPRESS)
+            + extracted * passes::DECODE
+            + (extracted + transformed) * passes::TRANSFORM
+            + tx * (passes::SERIALIZE + passes::NET_TX);
+        let cpu = m.total_secs();
+        // Extraction = decompress/decrypt/decode (t_extract); the read
+        // stage (network receive) and load stage (serialize/send) are the
+        // "miscellaneous" datacenter-tax cycles of Fig 9.
+        let extract_cpu = m.t_extract.secs();
+        let transform_cpu = m.t_transform.secs();
+        let misc_cpu = (cpu - extract_cpu - transform_cpu).max(0.0);
+        PerSampleCost {
+            cpu_secs: cpu / samples,
+            mem_bytes: mem / samples,
+            net_rx_bytes: storage_rx / samples,
+            net_tx_bytes: tx / samples,
+            resident_bytes: (extracted + tx) / samples,
+            frac_extract: if cpu > 0.0 { extract_cpu / cpu } else { 0.0 },
+            frac_transform: if cpu > 0.0 { transform_cpu / cpu } else { 0.0 },
+            frac_misc: if cpu > 0.0 { misc_cpu / cpu } else { 0.0 },
+        }
+    }
+}
+
+/// Which resource binds first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bottleneck {
+    Cpu,
+    MemoryBandwidth,
+    MemoryCapacity,
+    NicRx,
+    NicTx,
+}
+
+impl Bottleneck {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Bottleneck::Cpu => "CPU",
+            Bottleneck::MemoryBandwidth => "memory BW",
+            Bottleneck::MemoryCapacity => "memory capacity",
+            Bottleneck::NicRx => "NIC rx",
+            Bottleneck::NicTx => "NIC tx",
+        }
+    }
+}
+
+/// Utilization of one node at a given throughput.
+#[derive(Clone, Copy, Debug)]
+pub struct Utilization {
+    pub samples_per_sec: f64,
+    pub cpu: f64,
+    pub mem_bw: f64,
+    pub mem_cap: f64,
+    pub nic_rx: f64,
+    pub nic_tx: f64,
+}
+
+/// Saturation analysis of a pipeline on a node class.
+#[derive(Clone, Debug)]
+pub struct Saturation {
+    pub node: &'static str,
+    pub max_samples_per_sec: f64,
+    pub bottleneck: Bottleneck,
+    pub at_saturation: Utilization,
+}
+
+/// Host-speed calibration: measured per-sample CPU seconds on *this*
+/// machine are translated to a reference-core budget. A C-v1-era core
+/// (18-core Broadwell class) delivers roughly `HOST_CORE_EQUIV` of one
+/// core of this host.
+pub const HOST_CORE_EQUIV: f64 = 0.5;
+
+/// Project utilization on `node` at `sps` samples/sec, with work spread
+/// over all cores (workers run one pipeline thread per core).
+pub fn utilization_at(cost: &PerSampleCost, node: &NodeSpec, sps: f64) -> Utilization {
+    let cpu_capacity =
+        node.physical_cores as f64 / (cost.cpu_secs / HOST_CORE_EQUIV).max(1e-18);
+    // Buffered working set ~2s of throughput.
+    let resident = cost.resident_bytes * sps * 2.0;
+    Utilization {
+        samples_per_sec: sps,
+        cpu: sps / cpu_capacity,
+        mem_bw: sps * cost.mem_bytes / (node.peak_mem_bw_gbps * 1e9),
+        mem_cap: resident / (node.memory_gb * 1e9),
+        nic_rx: sps * cost.net_rx_bytes * 8.0 / (node.nic_gbps * 1e9),
+        nic_tx: sps * cost.net_tx_bytes * 8.0 / (node.nic_gbps * 1e9),
+    }
+}
+
+/// Paper §6.2: memory bandwidth saturates at ≈70% of peak in practice.
+pub const MEMBW_PRACTICAL_FRAC: f64 = 0.70;
+/// Practical NIC ceiling (paper: ~10 of 12.5 Gbps reachable).
+pub const NIC_PRACTICAL_FRAC: f64 = 0.80;
+
+/// Find the node's saturation throughput and binding resource.
+pub fn saturation(cost: &PerSampleCost, node: &NodeSpec) -> Saturation {
+    let u1 = utilization_at(cost, node, 1.0);
+    // Max sps per resource = practical limit / per-sps utilization.
+    let candidates = [
+        (Bottleneck::Cpu, 1.0 / u1.cpu.max(1e-18)),
+        (
+            Bottleneck::MemoryBandwidth,
+            MEMBW_PRACTICAL_FRAC / u1.mem_bw.max(1e-18),
+        ),
+        (Bottleneck::MemoryCapacity, 0.9 / u1.mem_cap.max(1e-18)),
+        (Bottleneck::NicRx, NIC_PRACTICAL_FRAC / u1.nic_rx.max(1e-18)),
+        (Bottleneck::NicTx, NIC_PRACTICAL_FRAC / u1.nic_tx.max(1e-18)),
+    ];
+    let (bottleneck, sps) = candidates
+        .iter()
+        .copied()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    Saturation {
+        node: node.name,
+        max_samples_per_sec: sps,
+        bottleneck,
+        at_saturation: utilization_at(cost, node, sps),
+    }
+}
+
+/// Trainer-side loading cost (Fig 8): per *wire byte* loaded, derived
+/// from a measured client decode run + network-stack pass constants.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadingCost {
+    /// CPU seconds per wire byte (TLS + deserialization + memory mgmt).
+    pub cpu_secs_per_byte: f64,
+    /// Memory-bus passes per wire byte.
+    pub mem_passes: f64,
+}
+
+/// Production loading paths (AES-NI TLS offload-assisted + tuned Thrift
+/// C++) move roughly 3x more bytes per cycle than this repo's portable
+/// implementation; Fig 8 models the production trainer, so the measured
+/// per-byte cost is scaled by this efficiency factor (documented in
+/// EXPERIMENTS.md).
+pub const PRODUCTION_LOADING_EFF: f64 = 3.0;
+
+impl LoadingCost {
+    pub fn standard(measured_cpu_secs_per_byte: f64) -> LoadingCost {
+        LoadingCost {
+            cpu_secs_per_byte: measured_cpu_secs_per_byte
+                / PRODUCTION_LOADING_EFF,
+            // RX + TLS + deser + copy-to-pinned (Fig 8's "datacenter tax").
+            mem_passes: passes::NET_RX + passes::TLS + 2.0,
+        }
+    }
+
+    /// (CPU util, memBW util) on a trainer host at `gbps` of loading.
+    pub fn trainer_utilization(
+        &self,
+        node: &crate::config::TrainerNodeSpec,
+        gbps: f64,
+    ) -> (f64, f64) {
+        let bytes_per_sec = gbps * 1e9 / 8.0;
+        let cpu = bytes_per_sec * self.cpu_secs_per_byte / HOST_CORE_EQUIV
+            / node.total_cores() as f64;
+        let mem = bytes_per_sec * self.mem_passes / (node.peak_mem_bw_gbps * 1e9);
+        (cpu, mem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainerNodeSpec;
+    use std::time::Duration;
+
+    fn cost(cpu: f64, mem: f64, rx: f64, tx: f64) -> PerSampleCost {
+        PerSampleCost {
+            cpu_secs: cpu,
+            mem_bytes: mem,
+            net_rx_bytes: rx,
+            net_tx_bytes: tx,
+            resident_bytes: 1000.0,
+            frac_extract: 0.3,
+            frac_transform: 0.6,
+            frac_misc: 0.1,
+        }
+    }
+
+    #[test]
+    fn from_metrics_accounts_all_stages() {
+        let m = EtlMetrics::default();
+        m.samples.add(100);
+        m.storage_rx_bytes.add(10_000);
+        m.extract_out_bytes.add(30_000);
+        m.transform_out_bytes.add(15_000);
+        m.tensor_tx_bytes.add(20_000);
+        m.t_read.add(Duration::from_millis(100));
+        m.t_extract.add(Duration::from_millis(200));
+        m.t_transform.add(Duration::from_millis(600));
+        m.t_load.add(Duration::from_millis(100));
+        let c = PerSampleCost::from_metrics(&m);
+        assert!((c.cpu_secs - 0.01).abs() < 1e-9);
+        assert!(c.mem_bytes > (10_000f64 + 30_000.0 + 20_000.0) / 100.0);
+        assert!((c.frac_transform - 0.6).abs() < 1e-9);
+        // Extraction excludes the read stage (that's misc/datacenter tax).
+        assert!((c.frac_extract - 0.2).abs() < 1e-9);
+        assert!((c.frac_misc - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cpu_bound_pipeline_saturates_on_cpu() {
+        // Heavy compute, tiny bytes (an RM1-flavored transform load).
+        let c = cost(1e-3, 1e4, 1e3, 1e3);
+        let s = saturation(&c, &NodeSpec::c_v1());
+        assert_eq!(s.bottleneck, Bottleneck::Cpu);
+        assert!(s.at_saturation.cpu > 0.95);
+        assert!(s.at_saturation.mem_bw < 0.5);
+    }
+
+    #[test]
+    fn nic_bound_pipeline_saturates_on_rx() {
+        // Cheap compute, fat reads (RM2: bound on ingress NIC, §6.3).
+        let c = cost(1e-6, 1e4, 150_000.0, 1e3);
+        let s = saturation(&c, &NodeSpec::c_v1());
+        assert_eq!(s.bottleneck, Bottleneck::NicRx);
+        assert!(s.at_saturation.nic_rx > 0.75);
+    }
+
+    #[test]
+    fn membw_becomes_bottleneck_on_cv3() {
+        // §6.3's projection: per-core memory bandwidth shrinks on newer
+        // nodes, flipping a CPU-bound load to membw-bound.
+        let c = cost(2.4e-5, 1.1e6, 1e4, 1e4);
+        let v3 = saturation(&c, &NodeSpec::c_v3());
+        assert_eq!(v3.bottleneck, Bottleneck::MemoryBandwidth);
+    }
+
+    #[test]
+    fn trainer_loading_utilization_scales_linearly() {
+        let lc = LoadingCost::standard(2e-9);
+        let node = TrainerNodeSpec::v100_node();
+        let (cpu1, mem1) = lc.trainer_utilization(&node, 4.0);
+        let (cpu2, mem2) = lc.trainer_utilization(&node, 16.0);
+        assert!((cpu2 / cpu1 - 4.0).abs() < 1e-9);
+        assert!((mem2 / mem1 - 4.0).abs() < 1e-9);
+        assert!(cpu2 > 0.0 && mem2 > 0.0);
+    }
+
+    #[test]
+    fn utilization_components_nonnegative() {
+        let c = cost(1e-4, 1e5, 1e4, 5e3);
+        let u = utilization_at(&c, &NodeSpec::c_v2(), 1000.0);
+        for v in [u.cpu, u.mem_bw, u.mem_cap, u.nic_rx, u.nic_tx] {
+            assert!(v >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,377 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas DLRM artifacts
+//! (HLO text, see `python/compile/aot.py`) and executes them from the
+//! Rust hot path. Python never runs at request time — after
+//! `make artifacts` the binary is self-contained.
+
+use crate::dpp::TensorBatch;
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// The positional interface exported by `aot.py` (manifest.txt).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub n_dense: usize,
+    pub n_sparse: usize,
+    pub ids_per_feature: usize,
+    pub vocab: usize,
+    pub emb_dim: usize,
+    pub hidden: usize,
+    pub lr: f64,
+    pub num_params: usize,
+    /// (name, shape) in positional order.
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {path:?}"))?;
+        let mut kv = HashMap::new();
+        let mut params = Vec::new();
+        for line in text.lines() {
+            let Some((k, v)) = line.split_once('=') else { continue };
+            if let Some(name) = k.strip_prefix("param.") {
+                let shape: Vec<usize> = v
+                    .split(',')
+                    .map(|d| d.parse().context("param dim"))
+                    .collect::<Result<_>>()?;
+                params.push((name.to_string(), shape));
+            } else {
+                kv.insert(k.to_string(), v.to_string());
+            }
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .with_context(|| format!("manifest missing {k}"))?
+                .parse()
+                .with_context(|| format!("manifest {k}"))
+        };
+        Ok(Manifest {
+            batch: get("batch")?,
+            n_dense: get("n_dense")?,
+            n_sparse: get("n_sparse")?,
+            ids_per_feature: get("ids_per_feature")?,
+            vocab: get("vocab")?,
+            emb_dim: get("emb_dim")?,
+            hidden: get("hidden")?,
+            lr: kv
+                .get("lr")
+                .context("manifest missing lr")?
+                .parse()
+                .context("lr")?,
+            num_params: get("num_params")?,
+            params,
+        })
+    }
+}
+
+/// One fixed-shape model input batch (the manifest's layout).
+#[derive(Clone, Debug)]
+pub struct DlrmBatch {
+    pub dense: Vec<f32>, // [B * D]
+    pub ids: Vec<i32>,   // [B * S * L]
+    pub mask: Vec<f32>,  // [B * S * L]
+    pub labels: Vec<f32>, // [B]
+}
+
+impl DlrmBatch {
+    /// Adapt a DPP [`TensorBatch`] to the model's fixed shapes: first
+    /// `n_dense` dense columns (zero-padded), first `n_sparse` sparse
+    /// features truncated/padded to `ids_per_feature` with a mask, ids
+    /// hashed into the vocab. Rows beyond `batch` are dropped; missing
+    /// rows are zero-padded with label 0 and mask 0.
+    pub fn from_tensor_batch(tb: &TensorBatch, m: &Manifest) -> DlrmBatch {
+        let b = m.batch;
+        let rows = tb.rows.min(b);
+        let d_have = tb.dense_names.len();
+        let mut dense = vec![0f32; b * m.n_dense];
+        for r in 0..rows {
+            for j in 0..m.n_dense.min(d_have) {
+                dense[r * m.n_dense + j] = tb.dense[r * d_have + j];
+            }
+        }
+        let l = m.ids_per_feature;
+        let mut ids = vec![0i32; b * m.n_sparse * l];
+        let mut mask = vec![0f32; b * m.n_sparse * l];
+        for (s, (_, offsets, idv)) in
+            tb.sparse.iter().take(m.n_sparse).enumerate()
+        {
+            for r in 0..rows {
+                let (lo, hi) = (offsets[r] as usize, offsets[r + 1] as usize);
+                for (k, &id) in idv[lo..hi].iter().take(l).enumerate() {
+                    let at = (r * m.n_sparse + s) * l + k;
+                    ids[at] = (id % m.vocab as u64) as i32;
+                    mask[at] = 1.0;
+                }
+            }
+        }
+        let mut labels = vec![0f32; b];
+        labels[..rows].copy_from_slice(&tb.labels[..rows]);
+        DlrmBatch {
+            dense,
+            ids,
+            mask,
+            labels,
+        }
+    }
+
+    /// Synthetic batch for tests/benches.
+    pub fn synthetic(m: &Manifest, rng: &mut Pcg32) -> DlrmBatch {
+        let b = m.batch;
+        let dense: Vec<f32> = (0..b * m.n_dense)
+            .map(|_| rng.normal_ms(0.0, 2.0) as f32)
+            .collect();
+        let n_ids = b * m.n_sparse * m.ids_per_feature;
+        let ids: Vec<i32> =
+            (0..n_ids).map(|_| rng.below(m.vocab as u64) as i32).collect();
+        let mask: Vec<f32> = (0..n_ids)
+            .map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 })
+            .collect();
+        // Learnable labels: depend on the first dense feature.
+        let labels: Vec<f32> = (0..b)
+            .map(|r| {
+                let x = dense[r * m.n_dense];
+                if x > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        DlrmBatch {
+            dense,
+            ids,
+            mask,
+            labels,
+        }
+    }
+}
+
+/// Loaded + compiled DLRM executables.
+pub struct DlrmRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    fwd: xla::PjRtLoadedExecutable,
+    train: xla::PjRtLoadedExecutable,
+    dense_xform: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+/// Default artifacts dir: `$DSI_ARTIFACTS` or `<repo>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("DSI_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True when `make artifacts` has produced the HLO files.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}
+
+impl DlrmRuntime {
+    pub fn load(dir: &Path) -> Result<DlrmRuntime> {
+        let manifest = Manifest::load(&dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("path utf8")?,
+            )
+            .map_err(anyhow_xla)
+            .with_context(|| format!("parse {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(anyhow_xla)
+                .with_context(|| format!("compile {name}"))
+        };
+        Ok(DlrmRuntime {
+            fwd: compile("dlrm_fwd.hlo.txt")?,
+            train: compile("dlrm_train_step.hlo.txt")?,
+            dense_xform: compile("dense_xform.hlo.txt")?,
+            client,
+            manifest,
+        })
+    }
+
+    /// Glorot-style parameter init on the Rust side (so training runs
+    /// without any Python at runtime).
+    pub fn init_params(&self, seed: u64) -> Result<Vec<xla::Literal>> {
+        let mut rng = Pcg32::new(seed);
+        let mut out = Vec::new();
+        for (_, shape) in &self.manifest.params {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = if shape.len() == 2 {
+                let scale = (2.0 / (shape[0] + shape[1]) as f64).sqrt();
+                (0..n)
+                    .map(|_| (rng.normal() * scale) as f32)
+                    .collect()
+            } else {
+                vec![0f32; n]
+            };
+            out.push(literal_f32(&data, shape)?);
+        }
+        Ok(out)
+    }
+
+    fn batch_literals(&self, batch: &DlrmBatch) -> Result<Vec<xla::Literal>> {
+        let m = &self.manifest;
+        Ok(vec![
+            literal_f32(&batch.dense, &[m.batch, m.n_dense])?,
+            literal_i32(
+                &batch.ids,
+                &[m.batch, m.n_sparse, m.ids_per_feature],
+            )?,
+            literal_f32(
+                &batch.mask,
+                &[m.batch, m.n_sparse, m.ids_per_feature],
+            )?,
+            literal_f32(&batch.labels, &[m.batch])?,
+        ])
+    }
+
+    /// Evaluate loss + logits without updating parameters.
+    pub fn fwd_loss(
+        &self,
+        params: &[xla::Literal],
+        batch: &DlrmBatch,
+    ) -> Result<(f32, Vec<f32>)> {
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        let batch_lits = self.batch_literals(batch)?;
+        args.extend(batch_lits.iter());
+        let result = self.fwd.execute::<&xla::Literal>(&args).map_err(anyhow_xla)?;
+        let lit = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        let mut outs = lit.to_tuple().map_err(anyhow_xla)?;
+        if outs.len() != 2 {
+            bail!("fwd returned {} outputs", outs.len());
+        }
+        let logits = outs.pop().unwrap().to_vec::<f32>().map_err(anyhow_xla)?;
+        let loss = outs.pop().unwrap().to_vec::<f32>().map_err(anyhow_xla)?[0];
+        Ok((loss, logits))
+    }
+
+    /// One fused fwd+bwd+SGD step; returns updated params and the loss.
+    pub fn train_step(
+        &self,
+        params: Vec<xla::Literal>,
+        batch: &DlrmBatch,
+    ) -> Result<(Vec<xla::Literal>, f32)> {
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        let batch_lits = self.batch_literals(batch)?;
+        args.extend(batch_lits.iter());
+        let result =
+            self.train.execute::<&xla::Literal>(&args).map_err(anyhow_xla)?;
+        let lit = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        let mut outs = lit.to_tuple().map_err(anyhow_xla)?;
+        let expect = self.manifest.params.len() + 1;
+        if outs.len() != expect {
+            bail!("train step returned {} outputs, want {expect}", outs.len());
+        }
+        let loss = outs.pop().unwrap().to_vec::<f32>().map_err(anyhow_xla)?[0];
+        Ok((outs, loss))
+    }
+
+    /// Run the standalone L1 dense-normalization kernel artifact.
+    pub fn dense_xform(
+        &self,
+        x: &[f32],
+        mean: &[f32],
+        std: &[f32],
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let args = vec![
+            literal_f32(x, &[m.batch, m.n_dense])?,
+            literal_f32(mean, &[m.n_dense])?,
+            literal_f32(std, &[m.n_dense])?,
+        ];
+        let result = self
+            .dense_xform
+            .execute::<xla::Literal>(&args)
+            .map_err(anyhow_xla)?;
+        let lit = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        let out = lit.to_tuple1().map_err(anyhow_xla)?;
+        out.to_vec::<f32>().map_err(anyhow_xla)
+    }
+}
+
+fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(anyhow_xla)
+}
+
+fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(anyhow_xla)
+}
+
+fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir().join("manifest.txt")).unwrap();
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.params.len(), 9);
+        assert_eq!(m.params[0].0, "emb");
+        assert_eq!(m.params[0].1, vec![m.vocab, m.emb_dim]);
+        let n: usize = m
+            .params
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        assert_eq!(n, m.num_params);
+    }
+
+    #[test]
+    fn tensor_batch_adapter_shapes() {
+        let m = Manifest {
+            batch: 4,
+            n_dense: 3,
+            n_sparse: 2,
+            ids_per_feature: 2,
+            vocab: 100,
+            emb_dim: 4,
+            hidden: 8,
+            lr: 0.1,
+            num_params: 0,
+            params: vec![],
+        };
+        let tb = TensorBatch {
+            rows: 3,
+            dense: vec![1.0; 3 * 5], // 5 dense features available
+            dense_names: (0..5)
+                .map(crate::schema::FeatureId)
+                .collect(),
+            sparse: vec![(
+                crate::schema::FeatureId(9),
+                vec![0, 3, 3, 4],
+                vec![500, 501, 502, 7],
+            )],
+            labels: vec![1.0, 0.0, 1.0],
+        };
+        let b = DlrmBatch::from_tensor_batch(&tb, &m);
+        assert_eq!(b.dense.len(), 4 * 3);
+        assert_eq!(b.ids.len(), 4 * 2 * 2);
+        // Row 0 of sparse feature 0: first 2 of [500,501,502] mod 100.
+        assert_eq!(&b.ids[..2], &[0, 1]);
+        assert_eq!(&b.mask[..2], &[1.0, 1.0]);
+        // Row 1 empty.
+        assert_eq!(b.mask[4], 0.0);
+        // Padded row 3: label 0.
+        assert_eq!(b.labels[3], 0.0);
+    }
+}

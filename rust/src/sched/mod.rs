@@ -1,0 +1,352 @@
+//! Global training scheduler + the collaborative release process (§4):
+//! exploratory → combo → release-candidate jobs across hundreds of
+//! models, scheduled over geo-distributed regions with dataset
+//! co-location — the generators behind Figs 4, 5, and 6 and the
+//! bin-packing analysis of §7.3.
+
+use crate::util::rng::{Pcg32, Zipf};
+
+/// Job phase in the release process (§4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobType {
+    /// Hundreds–thousands of small jobs, <5% of the table.
+    Exploratory,
+    /// Tens–hundreds of large jobs in a short window, most of the table.
+    Combo,
+    /// A few large final jobs on fresh data.
+    ReleaseCandidate,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    Completed,
+    Failed,
+    Killed,
+}
+
+/// One training job instance.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub model: usize,
+    pub kind: JobType,
+    /// Start day (fractional) within the simulation horizon.
+    pub start: f64,
+    /// Duration in days.
+    pub duration: f64,
+    pub status: JobStatus,
+    /// Relative compute demand (trainer nodes).
+    pub demand: f64,
+    /// Fraction of the model's table this job reads.
+    pub table_fraction: f64,
+}
+
+impl Job {
+    pub fn end(&self) -> f64 {
+        self.start + self.duration
+    }
+
+    pub fn active_at(&self, day: f64) -> bool {
+        day >= self.start && day < self.end()
+    }
+}
+
+/// Generate one model-release iteration's combo jobs (Fig 4): skewed
+/// lognormal durations (long tail past 10 days), temporally skewed
+/// starts (engineers launch asynchronously to maximize explored ideas),
+/// and a realistic status mix — many jobs fail or are killed for
+/// lackluster performance.
+pub fn combo_iteration(rng: &mut Pcg32, model: usize, n_jobs: usize, window_days: f64) -> Vec<Job> {
+    let mut jobs = Vec::with_capacity(n_jobs);
+    for _ in 0..n_jobs {
+        // Asynchronous staggering across the window (earlier-heavy).
+        let start = window_days * rng.f64().powf(1.5);
+        let duration = rng.lognormal_mean(4.0, 0.9).clamp(0.1, 30.0);
+        let u = rng.f64();
+        let status = if u < 0.55 {
+            JobStatus::Completed
+        } else if u < 0.8 {
+            JobStatus::Killed
+        } else {
+            JobStatus::Failed
+        };
+        // Killed jobs die partway through.
+        let duration = match status {
+            JobStatus::Killed => duration * rng.f64().max(0.05),
+            JobStatus::Failed => duration * rng.f64().max(0.02),
+            JobStatus::Completed => duration,
+        };
+        jobs.push(Job {
+            model,
+            kind: JobType::Combo,
+            start,
+            duration,
+            status,
+            demand: rng.lognormal_mean(8.0, 0.5),
+            table_fraction: 0.6 + 0.3 * rng.f64(),
+        });
+    }
+    jobs
+}
+
+/// The full release cycle for one model over `horizon_days`: continuous
+/// exploratory background + periodic combo bursts + RC tails.
+pub fn model_release_jobs(
+    rng: &mut Pcg32,
+    model: usize,
+    horizon_days: f64,
+    cycle_days: f64,
+    demand_scale: f64,
+) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    // Exploratory: a steady trickle, small demand, tiny table fractions.
+    let n_explore = (horizon_days * 3.0) as usize;
+    for _ in 0..n_explore {
+        jobs.push(Job {
+            model,
+            kind: JobType::Exploratory,
+            start: rng.f64() * horizon_days,
+            duration: rng.lognormal_mean(1.0, 0.8).clamp(0.05, 10.0),
+            status: if rng.chance(0.7) {
+                JobStatus::Completed
+            } else {
+                JobStatus::Killed
+            },
+            demand: demand_scale * rng.lognormal_mean(0.5, 0.4),
+            table_fraction: 0.05 * rng.f64(),
+        });
+    }
+    // Combo bursts every cycle + RC follow-ups.
+    let mut t = rng.f64() * cycle_days;
+    while t < horizon_days {
+        let n = 40 + rng.below(80) as usize;
+        for mut j in combo_iteration(rng, model, n, 10.0) {
+            j.start += t;
+            j.demand *= demand_scale;
+            jobs.push(j);
+        }
+        for _ in 0..2 + rng.below(3) {
+            jobs.push(Job {
+                model,
+                kind: JobType::ReleaseCandidate,
+                start: t + 10.0 + rng.f64() * 4.0,
+                duration: rng.lognormal_mean(6.0, 0.5).clamp(1.0, 20.0),
+                status: JobStatus::Completed,
+                demand: demand_scale * rng.lognormal_mean(10.0, 0.3),
+                table_fraction: 0.9,
+            });
+        }
+        t += cycle_days;
+    }
+    jobs
+}
+
+/// Daily total compute demand over a horizon (Fig 5's series).
+pub fn daily_utilization(jobs: &[Job], horizon_days: usize) -> Vec<f64> {
+    let mut days = vec![0.0; horizon_days];
+    for j in jobs {
+        let lo = j.start.floor().max(0.0) as usize;
+        let hi = (j.end().ceil() as usize).min(horizon_days);
+        for (d, slot) in days.iter_mut().enumerate().take(hi).skip(lo) {
+            // Overlap of [d, d+1) with the job.
+            let overlap = (j.end().min(d as f64 + 1.0)
+                - j.start.max(d as f64))
+            .clamp(0.0, 1.0);
+            *slot += overlap * j.demand;
+        }
+    }
+    days
+}
+
+/// Regions of the global fleet (Fig 6's R1–R5).
+pub const REGIONS: usize = 5;
+
+/// Placement of models' jobs onto regions. The current-production policy
+/// balances each model across all regions (requiring every region to
+/// hold a copy of its dataset); the bin-packed alternative pins each
+/// model to few regions (§7.3).
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// demand[model][region]
+    pub demand: Vec<[f64; REGIONS]>,
+    /// Region capacity used (max over time proxy: total demand).
+    pub dataset_copies: usize,
+}
+
+/// Balance-everywhere policy: each model's demand spread across regions
+/// proportional to regional capacity (uniform here).
+pub fn place_balanced(rng: &mut Pcg32, model_demand: &[f64]) -> Placement {
+    let mut demand = Vec::with_capacity(model_demand.len());
+    for &d in model_demand {
+        let mut row = [0.0; REGIONS];
+        // Roughly even with jitter (the paper's Fig 6 shows every model
+        // in every region, unevenly).
+        let mut weights = [0.0; REGIONS];
+        for w in weights.iter_mut() {
+            *w = 0.5 + rng.f64();
+        }
+        let sum: f64 = weights.iter().sum();
+        for r in 0..REGIONS {
+            row[r] = d * weights[r] / sum;
+        }
+        demand.push(row);
+    }
+    Placement {
+        dataset_copies: model_demand.len() * REGIONS,
+        demand,
+    }
+}
+
+/// Bin-packing policy: place each model in the fewest regions that fit
+/// its peak demand given per-region capacity.
+pub fn place_packed(model_demand: &[f64], region_capacity: f64) -> Placement {
+    let mut free = [region_capacity; REGIONS];
+    let mut demand = vec![[0.0; REGIONS]; model_demand.len()];
+    let mut copies = 0;
+    // Largest models first.
+    let mut order: Vec<usize> = (0..model_demand.len()).collect();
+    order.sort_by(|&a, &b| {
+        model_demand[b].partial_cmp(&model_demand[a]).unwrap()
+    });
+    for m in order {
+        let mut remaining = model_demand[m];
+        // Fill best-fit regions until demand is placed.
+        while remaining > 1e-12 {
+            // Region with most free capacity.
+            let (r, &cap) = free
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            if cap <= 1e-12 {
+                // Out of capacity; overflow into the emptiest region.
+                demand[m][r] += remaining;
+                copies += 1;
+                break;
+            }
+            let take = remaining.min(cap);
+            demand[m][r] += take;
+            free[r] -= take;
+            remaining -= take;
+            copies += 1;
+        }
+    }
+    Placement {
+        demand,
+        dataset_copies: copies,
+    }
+}
+
+/// Fig 6 inputs: relative compute demand of the top-10 models (A–J),
+/// normalized so model J = 1. Zipf-flavored decay matching the figure's
+/// heavy skew.
+pub fn top10_model_demand() -> Vec<f64> {
+    let z = Zipf::new(10, 0.9);
+    let base: Vec<f64> = (0..10).map(|k| z.pmf(k)).collect();
+    let min = base[9];
+    base.iter().map(|b| b / min).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combo_iteration_is_skewed_and_mixed() {
+        let mut rng = Pcg32::new(82);
+        let jobs = combo_iteration(&mut rng, 0, 82, 10.0);
+        assert_eq!(jobs.len(), 82);
+        let completed =
+            jobs.iter().filter(|j| j.status == JobStatus::Completed).count();
+        let failed =
+            jobs.iter().filter(|j| j.status == JobStatus::Failed).count();
+        let killed =
+            jobs.iter().filter(|j| j.status == JobStatus::Killed).count();
+        assert!(completed > 25 && completed < 70, "{completed}");
+        assert!(failed + killed > 15, "many jobs fail/are killed (§4.1)");
+        // Duration skew: max ≫ median; some > 10 days.
+        let mut durs: Vec<f64> = jobs
+            .iter()
+            .filter(|j| j.status == JobStatus::Completed)
+            .map(|j| j.duration)
+            .collect();
+        durs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = durs[durs.len() / 2];
+        let max = *durs.last().unwrap();
+        assert!(max / median > 2.0, "skew {max}/{median}");
+        // Paper: individual jobs "can take over 10 days"; with one 82-job
+        // sample the tail lands near that.
+        assert!(max > 8.0, "long-running jobs exist: {max}");
+    }
+
+    #[test]
+    fn yearly_utilization_has_combo_peaks() {
+        let mut rng = Pcg32::new(5);
+        let mut jobs = Vec::new();
+        for m in 0..20 {
+            let scale = 1.0 / (m as f64 + 1.0).sqrt();
+            jobs.extend(model_release_jobs(&mut rng, m, 365.0, 45.0, scale));
+        }
+        let days = daily_utilization(&jobs, 365);
+        let mean = days.iter().sum::<f64>() / 365.0;
+        let peak = days.iter().fold(0.0f64, |a, &b| a.max(b));
+        assert!(
+            peak / mean > 1.4,
+            "distinct peaks expected: peak/mean = {}",
+            peak / mean
+        );
+        // Utilization is never zero mid-year (continuous training).
+        assert!(days[100..300].iter().all(|&d| d > 0.0));
+    }
+
+    #[test]
+    fn top10_demand_is_skewed_normalized() {
+        let d = top10_model_demand();
+        assert_eq!(d.len(), 10);
+        assert!((d[9] - 1.0).abs() < 1e-9);
+        assert!(d[0] > 5.0, "model A ≫ model J: {}", d[0]);
+        assert!(d.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn balanced_placement_uses_all_regions() {
+        let mut rng = Pcg32::new(7);
+        let p = place_balanced(&mut rng, &top10_model_demand());
+        assert_eq!(p.dataset_copies, 50);
+        for row in &p.demand {
+            assert!(row.iter().all(|&d| d > 0.0));
+        }
+    }
+
+    #[test]
+    fn packed_placement_reduces_dataset_copies() {
+        let demand = top10_model_demand();
+        let total: f64 = demand.iter().sum();
+        let p = place_packed(&demand, total / REGIONS as f64 * 1.2);
+        assert!(
+            p.dataset_copies < 50,
+            "packing must beat replicate-everywhere: {}",
+            p.dataset_copies
+        );
+        // All demand placed.
+        let placed: f64 = p.demand.iter().flatten().sum();
+        assert!((placed - total).abs() / total < 1e-9);
+    }
+
+    #[test]
+    fn daily_utilization_conserves_job_mass() {
+        let jobs = vec![Job {
+            model: 0,
+            kind: JobType::Combo,
+            start: 1.25,
+            duration: 2.5,
+            status: JobStatus::Completed,
+            demand: 4.0,
+            table_fraction: 0.5,
+        }];
+        let days = daily_utilization(&jobs, 10);
+        let mass: f64 = days.iter().sum();
+        assert!((mass - 10.0).abs() < 1e-9, "4.0 demand × 2.5 days");
+        assert_eq!(days[0], 0.0);
+        assert!(days[1] > 0.0);
+    }
+}

@@ -1,0 +1,335 @@
+//! Feature schema and catalog.
+//!
+//! §3.1.2: samples are structured rows whose features live in *map columns*
+//! — a dense map (feature id → float) and a sparse map (feature id →
+//! variable-length id list), with an optional score column. §4.3/Table 2:
+//! the feature set evolves rapidly (beta → experimental → active →
+//! deprecated), which the [`FeatureCatalog`] models.
+
+use crate::util::rng::{Pcg32, Zipf};
+
+/// Stable feature identifier (the map key in the warehouse schema).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FeatureId(pub u32);
+
+/// Storage type of a feature (paper §3.1.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FeatureKind {
+    /// feature id → continuous value (e.g. current time).
+    Dense,
+    /// feature id → variable-length list of categorical ids.
+    Sparse,
+    /// Sparse with an extra float score per id (used for weighing).
+    ScoredSparse,
+}
+
+/// Lifecycle status (paper Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FeatureStatus {
+    /// Not actively logged; may be back-filled/injected per job.
+    Beta,
+    /// Used by combo / release-candidate jobs; actively written.
+    Experimental,
+    /// Part of the production model; actively written.
+    Active,
+    /// Kept for compatibility pending review/reaping; actively written.
+    Deprecated,
+}
+
+impl FeatureStatus {
+    /// Whether samples for this feature land in the dataset.
+    pub fn is_logged(&self) -> bool {
+        !matches!(self, FeatureStatus::Beta)
+    }
+}
+
+/// Definition of one feature in a table's schema.
+#[derive(Clone, Debug)]
+pub struct FeatureDef {
+    pub id: FeatureId,
+    pub kind: FeatureKind,
+    pub status: FeatureStatus,
+    /// Fraction of samples that log this feature (paper Table 5 coverage).
+    pub coverage: f64,
+    /// Mean id-list length for sparse features (1.0 for dense).
+    pub avg_len: f64,
+    /// Popularity rank across training jobs (0 = most popular). Drives
+    /// reuse (Fig 7) and feature reordering (§7.5).
+    pub popularity_rank: usize,
+}
+
+impl FeatureDef {
+    /// Expected encoded bytes per *logging* row for this feature, used for
+    /// sizing math (4 bytes/float; 8 bytes/sparse id + ~1 byte framing).
+    pub fn bytes_per_logging_row(&self) -> f64 {
+        match self.kind {
+            FeatureKind::Dense => 4.0 + 1.0,
+            FeatureKind::Sparse => self.avg_len * 8.0 + 2.0,
+            FeatureKind::ScoredSparse => self.avg_len * 12.0 + 2.0,
+        }
+    }
+
+    pub fn expected_bytes_per_row(&self) -> f64 {
+        self.coverage * self.bytes_per_logging_row()
+    }
+}
+
+/// A table schema: the full set of logged features + the label column.
+#[derive(Clone, Debug)]
+pub struct Schema {
+    pub features: Vec<FeatureDef>,
+}
+
+impl Schema {
+    pub fn by_id(&self, id: FeatureId) -> Option<&FeatureDef> {
+        self.features.iter().find(|f| f.id == id)
+    }
+
+    pub fn dense(&self) -> impl Iterator<Item = &FeatureDef> {
+        self.features
+            .iter()
+            .filter(|f| matches!(f.kind, FeatureKind::Dense))
+    }
+
+    pub fn sparse(&self) -> impl Iterator<Item = &FeatureDef> {
+        self.features
+            .iter()
+            .filter(|f| !matches!(f.kind, FeatureKind::Dense))
+    }
+
+    pub fn expected_bytes_per_row(&self) -> f64 {
+        self.features
+            .iter()
+            .map(|f| f.expected_bytes_per_row())
+            .sum()
+    }
+
+    /// Build a synthetic schema with `n_dense`/`n_sparse` features whose
+    /// coverage averages `avg_coverage` and whose sparse lengths average
+    /// `avg_sparse_len`. Popularity ranks are a random permutation; actual
+    /// reuse skew comes from sampling jobs' projections with a Zipf over
+    /// ranks.
+    pub fn synthetic(
+        rng: &mut Pcg32,
+        n_dense: usize,
+        n_sparse: usize,
+        avg_coverage: f64,
+        avg_sparse_len: f64,
+    ) -> Schema {
+        let n = n_dense + n_sparse;
+        let mut ranks: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut ranks);
+        let mut features = Vec::with_capacity(n);
+        for i in 0..n {
+            let kind = if i < n_dense {
+                FeatureKind::Dense
+            } else if rng.chance(0.15) {
+                FeatureKind::ScoredSparse
+            } else {
+                FeatureKind::Sparse
+            };
+            // Per-feature coverage: Beta-like around the target mean; popular
+            // features (low rank) get higher coverage — the paper notes read
+            // features exhibit larger coverage because stronger signals are
+            // favored (§5.1).
+            let rank_boost = 1.0 - ranks[i] as f64 / n as f64; // 1.0 = most popular
+            let noise = (rng.f64() - 0.5) * 0.4;
+            let coverage = (avg_coverage * (0.6 + 0.8 * rank_boost) + noise)
+                .clamp(0.02, 0.98);
+            let avg_len = if matches!(kind, FeatureKind::Dense) {
+                1.0
+            } else {
+                // Skewed lengths; popular sparse features are longer (§5.1).
+                rng.lognormal_mean(avg_sparse_len * (0.7 + 0.6 * rank_boost), 0.6)
+                    .clamp(1.0, 400.0)
+            };
+            features.push(FeatureDef {
+                id: FeatureId(i as u32),
+                kind,
+                status: FeatureStatus::Active,
+                coverage,
+                avg_len,
+                popularity_rank: ranks[i],
+            });
+        }
+        Schema { features }
+    }
+
+    /// The projection a training job reads: features sampled by popularity
+    /// (Zipf over ranks) without replacement, `n_take` of them.
+    pub fn sample_projection(
+        &self,
+        rng: &mut Pcg32,
+        n_take: usize,
+        zipf_s: f64,
+    ) -> Vec<FeatureId> {
+        let n = self.features.len();
+        let zipf = Zipf::new(n, zipf_s);
+        let mut by_rank: Vec<FeatureId> = vec![FeatureId(0); n];
+        for f in &self.features {
+            by_rank[f.popularity_rank] = f.id;
+        }
+        let mut taken = vec![false; n];
+        let mut out = Vec::with_capacity(n_take);
+        let mut guard = 0;
+        while out.len() < n_take.min(n) && guard < n_take * 1000 {
+            guard += 1;
+            let rank = zipf.sample(rng);
+            if !taken[rank] {
+                taken[rank] = true;
+                out.push(by_rank[rank]);
+            }
+        }
+        // Fill any remainder deterministically from the most popular ranks.
+        for rank in 0..n {
+            if out.len() >= n_take.min(n) {
+                break;
+            }
+            if !taken[rank] {
+                taken[rank] = true;
+                out.push(by_rank[rank]);
+            }
+        }
+        out
+    }
+}
+
+/// Catalog of feature lifecycle over time — reproduces the Table 2 flow:
+/// features proposed in a 6-month window classified 6 months later.
+#[derive(Clone, Debug, Default)]
+pub struct FeatureCatalog {
+    pub entries: Vec<(FeatureId, FeatureStatus)>,
+    next_id: u32,
+}
+
+/// Table 2 outcome proportions (10148/883/1650/1933 of 14614).
+const P_BETA: f64 = 10148.0 / 14614.0;
+const P_EXPERIMENTAL: f64 = 883.0 / 14614.0;
+const P_ACTIVE: f64 = 1650.0 / 14614.0;
+
+impl FeatureCatalog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Propose `n` new features; classify each according to the empirical
+    /// lifecycle distribution.
+    pub fn propose(&mut self, rng: &mut Pcg32, n: usize) {
+        for _ in 0..n {
+            let u = rng.f64();
+            let status = if u < P_BETA {
+                FeatureStatus::Beta
+            } else if u < P_BETA + P_EXPERIMENTAL {
+                FeatureStatus::Experimental
+            } else if u < P_BETA + P_EXPERIMENTAL + P_ACTIVE {
+                FeatureStatus::Active
+            } else {
+                FeatureStatus::Deprecated
+            };
+            self.entries.push((FeatureId(self.next_id), status));
+            self.next_id += 1;
+        }
+    }
+
+    pub fn count(&self, s: FeatureStatus) -> usize {
+        self.entries.iter().filter(|(_, st)| *st == s).count()
+    }
+
+    pub fn total(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Count of features that are actively written to the dataset
+    /// (experimental + active + deprecated; §4.3).
+    pub fn actively_written(&self) -> usize {
+        self.entries.iter().filter(|(_, s)| s.is_logged()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_schema() -> (Pcg32, Schema) {
+        let mut rng = Pcg32::new(101);
+        let s = Schema::synthetic(&mut rng, 120, 40, 0.45, 26.0);
+        (rng, s)
+    }
+
+    #[test]
+    fn synthetic_schema_counts() {
+        let (_, s) = test_schema();
+        assert_eq!(s.features.len(), 160);
+        assert_eq!(s.dense().count(), 120);
+        assert_eq!(s.sparse().count(), 40);
+    }
+
+    #[test]
+    fn synthetic_schema_hits_coverage_target() {
+        let (_, s) = test_schema();
+        let mean: f64 = s.features.iter().map(|f| f.coverage).sum::<f64>()
+            / s.features.len() as f64;
+        assert!((mean - 0.45).abs() < 0.08, "coverage mean {mean}");
+    }
+
+    #[test]
+    fn sparse_lengths_are_skewed_positive() {
+        let (_, s) = test_schema();
+        let lens: Vec<f64> = s.sparse().map(|f| f.avg_len).collect();
+        let mean = lens.iter().sum::<f64>() / lens.len() as f64;
+        assert!(mean > 10.0 && mean < 60.0, "sparse len mean {mean}");
+        assert!(lens.iter().all(|&l| l >= 1.0));
+    }
+
+    #[test]
+    fn projection_prefers_popular_features() {
+        let (mut rng, s) = test_schema();
+        // Take 20% of features many times; popular ranks should dominate.
+        let mut hits = vec![0usize; s.features.len()];
+        for _ in 0..200 {
+            for id in s.sample_projection(&mut rng, 32, 1.0) {
+                hits[s.by_id(id).unwrap().popularity_rank] += 1;
+            }
+        }
+        let top: usize = hits[..16].iter().sum();
+        let bottom: usize = hits[hits.len() - 16..].iter().sum();
+        assert!(top > bottom * 3, "top {top} bottom {bottom}");
+    }
+
+    #[test]
+    fn projection_has_no_duplicates_and_exact_size() {
+        let (mut rng, s) = test_schema();
+        let p = s.sample_projection(&mut rng, 40, 1.2);
+        assert_eq!(p.len(), 40);
+        let mut q = p.clone();
+        q.sort();
+        q.dedup();
+        assert_eq!(q.len(), 40);
+    }
+
+    #[test]
+    fn catalog_reproduces_table2_proportions() {
+        let mut rng = Pcg32::new(7);
+        let mut cat = FeatureCatalog::new();
+        cat.propose(&mut rng, 14614);
+        let beta = cat.count(FeatureStatus::Beta);
+        // Expect ~10148 ± a few hundred.
+        assert!((beta as f64 - 10148.0).abs() < 500.0, "beta {beta}");
+        assert_eq!(cat.total(), 14614);
+        assert_eq!(
+            cat.actively_written(),
+            cat.total() - beta,
+            "beta features are not logged"
+        );
+    }
+
+    #[test]
+    fn expected_bytes_dominated_by_sparse() {
+        // Paper: features are >99% of stored bytes and sparse lists carry
+        // most of it.
+        let (_, s) = test_schema();
+        let dense: f64 = s.dense().map(|f| f.expected_bytes_per_row()).sum();
+        let sparse: f64 = s.sparse().map(|f| f.expected_bytes_per_row()).sum();
+        assert!(sparse > dense);
+    }
+}

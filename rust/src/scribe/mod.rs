@@ -1,0 +1,153 @@
+//! Scribe — Meta's distributed messaging system (§3.1.1), modelled as
+//! named append-only record streams (the LogDevice layer is abstracted to
+//! in-memory storage; stream semantics — ordered, trimmable, grouped by
+//! logical stream — are preserved).
+//!
+//! The model-serving simulator publishes raw *feature logs* and *event
+//! logs* here at serving time (features logged at serving time to avoid
+//! data leakage, §3.1.1); the ETL engine tails the streams and joins them
+//! into labeled samples.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+/// A raw feature log: everything the model-serving framework computed for
+/// one (user, item) evaluation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureLog {
+    pub request_id: u64,
+    pub timestamp: u64,
+    pub dense: Vec<(u32, f32)>,
+    pub sparse: Vec<(u32, Vec<u64>)>,
+    pub scored: Vec<(u32, Vec<(u64, f32)>)>,
+}
+
+/// An event log: the monitored outcome of one recommendation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EventLog {
+    pub request_id: u64,
+    pub timestamp: u64,
+    /// Did the user interact (click/like/...)?
+    pub engaged: bool,
+}
+
+/// A record in a Scribe stream.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    Feature(FeatureLog),
+    Event(EventLog),
+}
+
+/// The Scribe service: named streams of records.
+#[derive(Default)]
+pub struct Scribe {
+    streams: RwLock<HashMap<String, Vec<Record>>>,
+}
+
+impl Scribe {
+    pub fn new() -> Scribe {
+        Scribe::default()
+    }
+
+    pub fn publish(&self, stream: &str, rec: Record) {
+        self.streams
+            .write()
+            .unwrap()
+            .entry(stream.to_string())
+            .or_default()
+            .push(rec);
+    }
+
+    pub fn publish_all(&self, stream: &str, recs: impl IntoIterator<Item = Record>) {
+        let mut s = self.streams.write().unwrap();
+        s.entry(stream.to_string()).or_default().extend(recs);
+    }
+
+    /// Read records `[from, ..)` of a stream; returns the next cursor.
+    pub fn tail(&self, stream: &str, from: usize) -> (Vec<Record>, usize) {
+        let s = self.streams.read().unwrap();
+        match s.get(stream) {
+            Some(recs) if from < recs.len() => (recs[from..].to_vec(), recs.len()),
+            Some(recs) => (Vec::new(), recs.len()),
+            None => (Vec::new(), from),
+        }
+    }
+
+    pub fn len(&self, stream: &str) -> usize {
+        self.streams
+            .read()
+            .unwrap()
+            .get(stream)
+            .map_or(0, |r| r.len())
+    }
+
+    pub fn is_empty(&self, stream: &str) -> bool {
+        self.len(stream) == 0
+    }
+
+    /// Trim a prefix (LogDevice streams are trimmable).
+    pub fn trim(&self, stream: &str, upto: usize) {
+        if let Some(recs) = self.streams.write().unwrap().get_mut(stream) {
+            let upto = upto.min(recs.len());
+            recs.drain(..upto);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feat(id: u64) -> Record {
+        Record::Feature(FeatureLog {
+            request_id: id,
+            timestamp: id * 10,
+            dense: vec![(0, 1.0)],
+            sparse: vec![],
+            scored: vec![],
+        })
+    }
+
+    #[test]
+    fn publish_tail_roundtrip() {
+        let s = Scribe::new();
+        s.publish("rm1_features", feat(1));
+        s.publish("rm1_features", feat(2));
+        let (recs, cur) = s.tail("rm1_features", 0);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(cur, 2);
+        let (recs, cur) = s.tail("rm1_features", cur);
+        assert!(recs.is_empty());
+        assert_eq!(cur, 2);
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let s = Scribe::new();
+        s.publish("a", feat(1));
+        assert_eq!(s.len("a"), 1);
+        assert_eq!(s.len("b"), 0);
+        assert!(s.is_empty("b"));
+    }
+
+    #[test]
+    fn trim_drops_prefix() {
+        let s = Scribe::new();
+        s.publish_all("a", (0..10).map(feat));
+        s.trim("a", 4);
+        assert_eq!(s.len("a"), 6);
+        let (recs, _) = s.tail("a", 0);
+        match &recs[0] {
+            Record::Feature(f) => assert_eq!(f.request_id, 4),
+            _ => panic!("wrong record"),
+        }
+    }
+
+    #[test]
+    fn tail_unknown_stream_is_empty() {
+        let s = Scribe::new();
+        let (recs, cur) = s.tail("missing", 5);
+        assert!(recs.is_empty());
+        assert_eq!(cur, 5);
+    }
+}

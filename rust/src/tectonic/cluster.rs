@@ -1,0 +1,371 @@
+//! The Tectonic cluster: name-node metadata + chunk placement +
+//! replicated reads/appends across storage nodes.
+
+use super::node::{IoStats, StorageNode};
+use crate::config::DeviceSpec;
+use crate::dwrf::{IoBuffers, IoRange};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, RwLock};
+
+/// Opaque file handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FileId(pub u64);
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub nodes: usize,
+    pub device: DeviceSpec,
+    /// Replication factor (paper: triplicate for durability, §7.1).
+    pub replication: usize,
+    /// Chunk size (paper: Tectonic's ~8 MB; tests shrink this).
+    pub chunk_bytes: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 6,
+            device: DeviceSpec::hdd(),
+            replication: 3,
+            chunk_bytes: 8 << 20,
+        }
+    }
+}
+
+struct ChunkLoc {
+    chunk_id: u64,
+    /// Node indices holding replicas.
+    replicas: Vec<usize>,
+    len: u64,
+}
+
+struct FileMetaEntry {
+    chunks: Vec<ChunkLoc>,
+    len: u64,
+    sealed: bool,
+}
+
+/// The cluster: metadata service + storage nodes. Thread-safe; DPP workers
+/// read concurrently.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    nodes: Vec<StorageNode>,
+    files: RwLock<HashMap<FileId, FileMetaEntry>>,
+    next_file: AtomicU64,
+    next_chunk: AtomicU64,
+    rr: AtomicUsize,
+    /// Lock ordering: `files` before `names`.
+    names: Mutex<HashMap<String, FileId>>,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Cluster {
+        assert!(cfg.replication >= 1 && cfg.replication <= cfg.nodes);
+        let nodes = (0..cfg.nodes)
+            .map(|i| StorageNode::new(i, cfg.device.clone()))
+            .collect();
+        Cluster {
+            cfg,
+            nodes,
+            files: RwLock::new(HashMap::new()),
+            next_file: AtomicU64::new(1),
+            next_chunk: AtomicU64::new(1),
+            rr: AtomicUsize::new(0),
+            names: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn create(&self, name: &str) -> FileId {
+        let id = FileId(self.next_file.fetch_add(1, Ordering::Relaxed));
+        self.files.write().unwrap().insert(
+            id,
+            FileMetaEntry {
+                chunks: Vec::new(),
+                len: 0,
+                sealed: false,
+            },
+        );
+        self.names.lock().unwrap().insert(name.to_string(), id);
+        id
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<FileId> {
+        self.names.lock().unwrap().get(name).copied()
+    }
+
+    /// Append bytes (append-only, like Tectonic). Splits into chunks and
+    /// places `replication` copies round-robin across nodes.
+    pub fn append(&self, file: FileId, data: &[u8]) -> Result<()> {
+        let mut files = self.files.write().unwrap();
+        let entry = files.get_mut(&file).context("no such file")?;
+        if entry.sealed {
+            bail!("file {file:?} is sealed (append-only store)");
+        }
+        let mut pos = 0usize;
+        // Fill the tail chunk first if it has room.
+        while pos < data.len() {
+            let need_new = match entry.chunks.last() {
+                Some(c) => c.len >= self.cfg.chunk_bytes,
+                None => true,
+            };
+            if need_new {
+                let chunk_id = self.next_chunk.fetch_add(1, Ordering::Relaxed);
+                let start = self.rr.fetch_add(1, Ordering::Relaxed);
+                let replicas: Vec<usize> = (0..self.cfg.replication)
+                    .map(|r| (start + r) % self.nodes.len())
+                    .collect();
+                for &n in &replicas {
+                    self.nodes[n].put_chunk(chunk_id, Vec::new());
+                }
+                entry.chunks.push(ChunkLoc {
+                    chunk_id,
+                    replicas,
+                    len: 0,
+                });
+            }
+            let chunk = entry.chunks.last_mut().unwrap();
+            let room = (self.cfg.chunk_bytes - chunk.len) as usize;
+            let take = room.min(data.len() - pos);
+            let piece = &data[pos..pos + take];
+            for &n in &chunk.replicas {
+                self.nodes[n].append_chunk(chunk.chunk_id, piece);
+            }
+            chunk.len += take as u64;
+            entry.len += take as u64;
+            pos += take;
+        }
+        Ok(())
+    }
+
+    /// Seal a file (no further appends; readers may cache layout).
+    pub fn seal(&self, file: FileId) {
+        if let Some(e) = self.files.write().unwrap().get_mut(&file) {
+            e.sealed = true;
+        }
+    }
+
+    pub fn file_len(&self, file: FileId) -> Option<u64> {
+        self.files.read().unwrap().get(&file).map(|e| e.len)
+    }
+
+    /// Total bytes stored across all nodes (includes replication).
+    pub fn stored_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.stored_bytes()).sum()
+    }
+
+    /// Logical bytes (pre-replication).
+    pub fn logical_bytes(&self) -> u64 {
+        self.files.read().unwrap().values().map(|e| e.len).sum()
+    }
+
+    /// Execute one logical read `[offset, offset+len)` of a file. The read
+    /// is split at chunk boundaries; each piece goes to one replica
+    /// (rotating for load spread).
+    pub fn read_range(&self, file: FileId, io: IoRange) -> Result<Vec<u8>> {
+        let files = self.files.read().unwrap();
+        let entry = files.get(&file).context("no such file")?;
+        if io.offset + io.len > entry.len {
+            bail!(
+                "read past EOF: {}+{} > {}",
+                io.offset,
+                io.len,
+                entry.len
+            );
+        }
+        let mut out = Vec::with_capacity(io.len as usize);
+        let mut remaining = io.len;
+        let mut pos = io.offset;
+        while remaining > 0 {
+            let ci = (pos / self.cfg.chunk_bytes) as usize;
+            let within = pos % self.cfg.chunk_bytes;
+            let chunk = &entry.chunks[ci];
+            let take = remaining.min(chunk.len - within);
+            // Chunk-affine replica selection: a scan over one chunk keeps
+            // hitting the same node so the head-position model sees the
+            // sequentiality a real reader preserves (readers don't bounce
+            // replicas mid-scan).
+            let replica_idx = (chunk.chunk_id as usize) % chunk.replicas.len();
+            let node = &self.nodes[chunk.replicas[replica_idx]];
+            let data = node
+                .read(chunk.chunk_id, within, take)
+                .context("replica read failed")?;
+            out.extend_from_slice(&data);
+            pos += take;
+            remaining -= take;
+        }
+        Ok(out)
+    }
+
+    /// Execute a set of planned I/Os, returning decode-ready buffers.
+    pub fn execute_ios(&self, file: FileId, ios: &[IoRange]) -> Result<IoBuffers> {
+        let mut bufs = IoBuffers::new();
+        for &io in ios {
+            let data = self.read_range(file, io)?;
+            bufs.insert(io, data);
+        }
+        Ok(bufs)
+    }
+
+    /// Aggregate I/O stats across nodes.
+    pub fn stats(&self) -> IoStats {
+        let mut s = IoStats::default();
+        for n in &self.nodes {
+            s.merge(&n.stats());
+        }
+        s
+    }
+
+    pub fn reset_stats(&self) {
+        for n in &self.nodes {
+            n.reset_stats();
+        }
+    }
+
+    pub fn node_stats(&self) -> Vec<IoStats> {
+        self.nodes.iter().map(|n| n.stats()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cluster() -> Cluster {
+        Cluster::new(ClusterConfig {
+            nodes: 4,
+            device: DeviceSpec::hdd(),
+            replication: 3,
+            chunk_bytes: 1024,
+        })
+    }
+
+    #[test]
+    fn append_and_read_roundtrip() {
+        let c = small_cluster();
+        let f = c.create("part-0");
+        let data: Vec<u8> = (0..5000u32).map(|i| i as u8).collect();
+        c.append(f, &data).unwrap();
+        assert_eq!(c.file_len(f), Some(5000));
+        let got = c
+            .read_range(
+                f,
+                IoRange {
+                    offset: 0,
+                    len: 5000,
+                },
+            )
+            .unwrap();
+        assert_eq!(got, data);
+    }
+
+    #[test]
+    fn reads_cross_chunk_boundaries() {
+        let c = small_cluster();
+        let f = c.create("x");
+        let data: Vec<u8> = (0..3000u32).map(|i| (i % 251) as u8).collect();
+        c.append(f, &data).unwrap();
+        // Read spanning chunks 0→2 (chunk=1024).
+        let got = c
+            .read_range(
+                f,
+                IoRange {
+                    offset: 1000,
+                    len: 1100,
+                },
+            )
+            .unwrap();
+        assert_eq!(got, data[1000..2100].to_vec());
+    }
+
+    #[test]
+    fn replication_stores_copies() {
+        let c = small_cluster();
+        let f = c.create("r");
+        c.append(f, &vec![7u8; 2048]).unwrap();
+        // 2 chunks × 3 replicas.
+        assert_eq!(c.stored_bytes(), 3 * 2048);
+        assert_eq!(c.logical_bytes(), 2048);
+    }
+
+    #[test]
+    fn sealed_file_rejects_append() {
+        let c = small_cluster();
+        let f = c.create("s");
+        c.append(f, b"abc").unwrap();
+        c.seal(f);
+        assert!(c.append(f, b"more").is_err());
+    }
+
+    #[test]
+    fn read_past_eof_errors() {
+        let c = small_cluster();
+        let f = c.create("e");
+        c.append(f, b"hello").unwrap();
+        assert!(c
+            .read_range(f, IoRange { offset: 3, len: 10 })
+            .is_err());
+    }
+
+    #[test]
+    fn incremental_appends_accumulate() {
+        let c = small_cluster();
+        let f = c.create("inc");
+        for i in 0..10u8 {
+            c.append(f, &[i; 300]).unwrap();
+        }
+        assert_eq!(c.file_len(f), Some(3000));
+        let got = c
+            .read_range(
+                f,
+                IoRange {
+                    offset: 299,
+                    len: 2,
+                },
+            )
+            .unwrap();
+        assert_eq!(got, vec![0, 1]);
+    }
+
+    #[test]
+    fn stats_account_device_time() {
+        let c = small_cluster();
+        let f = c.create("st");
+        c.append(f, &vec![0u8; 4096]).unwrap();
+        c.reset_stats();
+        for _ in 0..5 {
+            c.read_range(f, IoRange { offset: 0, len: 512 }).unwrap();
+        }
+        let s = c.stats();
+        assert_eq!(s.reads, 5);
+        assert!(s.device_secs > 0.0);
+    }
+
+    #[test]
+    fn execute_ios_returns_sliceable_buffers() {
+        let c = small_cluster();
+        let f = c.create("io");
+        let data: Vec<u8> = (0..4000u32).map(|i| i as u8).collect();
+        c.append(f, &data).unwrap();
+        let ios = vec![
+            IoRange { offset: 0, len: 100 },
+            IoRange {
+                offset: 2000,
+                len: 500,
+            },
+        ];
+        let bufs = c.execute_ios(f, &ios).unwrap();
+        assert_eq!(bufs.bytes(), 600);
+        assert_eq!(bufs.slice(2010, 4).unwrap(), &data[2010..2014]);
+        assert!(bufs.slice(1000, 4).is_none());
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        let c = small_cluster();
+        let f = c.create("warehouse/rm1/2026-07-01/part-0.dwrf");
+        assert_eq!(c.lookup("warehouse/rm1/2026-07-01/part-0.dwrf"), Some(f));
+        assert_eq!(c.lookup("nope"), None);
+    }
+}

@@ -1,0 +1,19 @@
+//! Tectonic — an exabyte-scale distributed append-only filesystem in the
+//! paper (§3.1.2); rebuilt here as a chunked object store over modelled
+//! storage nodes.
+//!
+//! Real byte storage + simulated device time: file contents are held in
+//! memory (our "exabyte" is MiB-scale), but every read is charged against
+//! a [`crate::config::DeviceSpec`]-based seek/transfer model so IOPS,
+//! service time, and the paper's throughput-to-storage gap (§7.1: >8×
+//! even after 3× replication) fall out of the same mechanism as in
+//! production — HDD seeks dominating small feature reads
+//! (Table 6 → Table 12).
+
+pub mod cluster;
+pub mod node;
+pub mod tiering;
+
+pub use cluster::{Cluster, ClusterConfig, FileId};
+pub use node::{IoStats, StorageNode};
+pub use tiering::TieredStore;

@@ -1,0 +1,155 @@
+//! Trainer model: GPU ingestion demand (Table 8), data-stall accounting
+//! for colocated preprocessing (Table 7), and the PJRT-backed training
+//! loop that consumes DPP tensors for real (the end-to-end example).
+
+use crate::config::{RmConfig, TrainerNodeSpec};
+use crate::resources::{PerSampleCost, HOST_CORE_EQUIV};
+
+/// GPU-side ingestion demand for one 8-GPU training node.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainerDemand {
+    /// Preprocessed-tensor ingestion rate, GB/s per node (Table 8).
+    pub gbps_per_node: f64,
+    /// Average preprocessed bytes per sample (from the live pipeline).
+    pub bytes_per_sample: f64,
+}
+
+impl TrainerDemand {
+    pub fn for_rm(rm: &RmConfig, bytes_per_sample: f64) -> TrainerDemand {
+        TrainerDemand {
+            gbps_per_node: rm.trainer_node_gbps,
+            bytes_per_sample,
+        }
+    }
+
+    /// Samples/s the node's GPUs demand.
+    pub fn samples_per_sec(&self) -> f64 {
+        self.gbps_per_node * 1e9 / self.bytes_per_sample.max(1.0)
+    }
+}
+
+/// Colocated-preprocessing analysis (the paper's §6 motivation run:
+/// preprocessing on the trainer host's own CPUs → Table 7's 56% stall).
+#[derive(Clone, Copy, Debug)]
+pub struct ColocatedReport {
+    /// Fraction of GPU cycles stalled waiting for data.
+    pub gpu_stall_frac: f64,
+    /// Host CPU utilization while preprocessing.
+    pub cpu_util: f64,
+    /// Host memory-bandwidth utilization.
+    pub mem_bw_util: f64,
+    /// Achievable vs demanded samples/s.
+    pub achievable_sps: f64,
+    pub demanded_sps: f64,
+}
+
+/// Model a training node doing its own preprocessing: demand comes from
+/// the GPUs (Table 8); supply from running the measured pipeline on the
+/// host cores (minus a reserve for the training framework itself).
+pub fn colocated_preprocessing(
+    demand: &TrainerDemand,
+    cost: &PerSampleCost,
+    node: &TrainerNodeSpec,
+    framework_core_reserve: f64,
+) -> ColocatedReport {
+    let cores = node.total_cores() as f64 - framework_core_reserve;
+    let cpu_capacity_sps = cores / (cost.cpu_secs / HOST_CORE_EQUIV).max(1e-18);
+    let membw_capacity_sps = crate::resources::MEMBW_PRACTICAL_FRAC
+        * node.peak_mem_bw_gbps
+        * 1e9
+        / cost.mem_bytes.max(1.0);
+    let achievable = cpu_capacity_sps.min(membw_capacity_sps);
+    let demanded = demand.samples_per_sec();
+    let served = achievable.min(demanded);
+    let stall = (1.0 - served / demanded).max(0.0);
+    // Utilizations at the served rate.
+    let cpu_util = (served / cpu_capacity_sps).min(1.0);
+    let mem_bw_util = served * cost.mem_bytes / (node.peak_mem_bw_gbps * 1e9);
+    ColocatedReport {
+        gpu_stall_frac: stall,
+        cpu_util,
+        mem_bw_util,
+        achievable_sps: achievable,
+        demanded_sps: demanded,
+    }
+}
+
+/// Number of DPP workers (on a given worker saturation throughput) needed
+/// to keep one trainer node unstalled — Table 9's last column.
+pub fn workers_per_trainer(demand_sps: f64, worker_sps: f64) -> f64 {
+    demand_sps / worker_sps.max(1e-18)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{RmConfig, RmId};
+
+    fn rm1_like_cost() -> PerSampleCost {
+        // Shaped like a measured RM1 pipeline: expensive transforms.
+        PerSampleCost {
+            cpu_secs: 2.4e-4,
+            mem_bytes: 8e5,
+            net_rx_bytes: 7e4,
+            net_tx_bytes: 6e4,
+            resident_bytes: 1e5,
+            frac_extract: 0.25,
+            frac_transform: 0.65,
+            frac_misc: 0.10,
+        }
+    }
+
+    #[test]
+    fn demand_rates_track_table8() {
+        let rm1 = RmConfig::get(RmId::Rm1);
+        let rm2 = RmConfig::get(RmId::Rm2);
+        let d1 = TrainerDemand::for_rm(&rm1, 60_000.0);
+        let d2 = TrainerDemand::for_rm(&rm2, 60_000.0);
+        // RM1 demands 16.5/4.69 ≈ 3.5x the samples of RM2 at equal
+        // sample size.
+        let ratio = d1.samples_per_sec() / d2.samples_per_sec();
+        assert!((ratio - 16.50 / 4.69).abs() < 0.01);
+    }
+
+    #[test]
+    fn colocated_preprocessing_stalls_heavy_models() {
+        // Table 7's setup: RM1 on the 2-socket V100 node.
+        let rm1 = RmConfig::get(RmId::Rm1);
+        let demand = TrainerDemand::for_rm(&rm1, 60_000.0);
+        let r = colocated_preprocessing(
+            &demand,
+            &rm1_like_cost(),
+            &TrainerNodeSpec::v100_node(),
+            4.0,
+        );
+        assert!(
+            r.gpu_stall_frac > 0.3,
+            "expected heavy stalls, got {}",
+            r.gpu_stall_frac
+        );
+        assert!(r.cpu_util > 0.85, "CPUs should be pegged: {}", r.cpu_util);
+        assert!(r.achievable_sps < r.demanded_sps);
+    }
+
+    #[test]
+    fn light_demand_does_not_stall() {
+        let demand = TrainerDemand {
+            gbps_per_node: 0.05,
+            bytes_per_sample: 60_000.0,
+        };
+        let r = colocated_preprocessing(
+            &demand,
+            &rm1_like_cost(),
+            &TrainerNodeSpec::v100_node(),
+            4.0,
+        );
+        assert!(r.gpu_stall_frac < 1e-9);
+        assert!(r.cpu_util < 1.0);
+    }
+
+    #[test]
+    fn workers_per_trainer_scales_with_demand() {
+        assert!((workers_per_trainer(1000.0, 100.0) - 10.0).abs() < 1e-9);
+        assert!(workers_per_trainer(50.0, 100.0) < 1.0);
+    }
+}

@@ -1,0 +1,489 @@
+//! Per-feature transform DAGs (§7.2): "a single feature X may require a
+//! DAG of multiple operations that apply Bucketize to feature A, apply
+//! FirstX to feature B, compute the NGram of the intermediate values, and
+//! apply SigridHash to generate feature X."
+//!
+//! The executor runs a whole session's DAG over one mini-batch of
+//! columnar data, tracking per-class cycle accounting (the Fig 9 /
+//! §6.4 breakdown).
+
+use super::{Op, OpClass, Value, XformError};
+use crate::config::RmConfig;
+use crate::data::ColumnarBatch;
+use crate::schema::{FeatureId, FeatureKind, Schema};
+use crate::util::rng::Pcg32;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Declared type of a raw input feature — determines what an *absent*
+/// column materializes as (features can be missing from a stripe
+/// entirely when coverage is low or partitions predate the feature,
+/// §4.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputKind {
+    /// Resolve from the batch; absent ⇒ empty sparse.
+    Auto,
+    /// Absent ⇒ all-zero dense column.
+    Dense,
+    /// Absent ⇒ empty sparse column.
+    Sparse,
+}
+
+/// One node in the DAG. Inputs refer to earlier node indices
+/// (topological by construction).
+#[derive(Clone, Debug)]
+pub enum Node {
+    /// Read a raw feature column from the batch.
+    Input { id: FeatureId, kind: InputKind },
+    /// Apply an op to earlier nodes' outputs.
+    Apply { op: Op, inputs: Vec<usize> },
+}
+
+/// Execution statistics for Fig 9 / §6.4.
+#[derive(Clone, Debug, Default)]
+pub struct DagStats {
+    pub secs_by_class: HashMap<OpClass, f64>,
+    pub elements_by_class: HashMap<OpClass, u64>,
+    pub ops_run: u64,
+}
+
+impl DagStats {
+    pub fn total_secs(&self) -> f64 {
+        self.secs_by_class.values().sum()
+    }
+
+    pub fn class_frac(&self, c: OpClass) -> f64 {
+        let t = self.total_secs();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.secs_by_class.get(&c).copied().unwrap_or(0.0) / t
+        }
+    }
+
+    pub fn merge(&mut self, o: &DagStats) {
+        for (k, v) in &o.secs_by_class {
+            *self.secs_by_class.entry(*k).or_default() += v;
+        }
+        for (k, v) in &o.elements_by_class {
+            *self.elements_by_class.entry(*k).or_default() += v;
+        }
+        self.ops_run += o.ops_run;
+    }
+}
+
+/// A session's transform program: nodes + which node feeds each output
+/// (derived or normalized) feature.
+#[derive(Clone, Debug, Default)]
+pub struct TransformDag {
+    pub nodes: Vec<Node>,
+    /// (output feature id, node index) — these become tensor columns.
+    pub outputs: Vec<(FeatureId, usize)>,
+}
+
+impl TransformDag {
+    pub fn input(&mut self, id: FeatureId) -> usize {
+        self.input_kind(id, InputKind::Auto)
+    }
+
+    pub fn input_dense(&mut self, id: FeatureId) -> usize {
+        self.input_kind(id, InputKind::Dense)
+    }
+
+    pub fn input_sparse(&mut self, id: FeatureId) -> usize {
+        self.input_kind(id, InputKind::Sparse)
+    }
+
+    pub fn input_kind(&mut self, id: FeatureId, kind: InputKind) -> usize {
+        self.nodes.push(Node::Input { id, kind });
+        self.nodes.len() - 1
+    }
+
+    pub fn apply(&mut self, op: Op, inputs: Vec<usize>) -> usize {
+        for &i in &inputs {
+            assert!(i < self.nodes.len(), "forward reference in DAG");
+        }
+        self.nodes.push(Node::Apply { op, inputs });
+        self.nodes.len() - 1
+    }
+
+    pub fn output(&mut self, id: FeatureId, node: usize) {
+        self.outputs.push((id, node));
+    }
+
+    /// The raw features the DAG needs from storage (the projection).
+    pub fn required_inputs(&self) -> Vec<FeatureId> {
+        let mut v: Vec<FeatureId> = self
+            .nodes
+            .iter()
+            .filter_map(|n| match n {
+                Node::Input { id, .. } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Execute over one batch; returns output columns + stats.
+    pub fn execute(
+        &self,
+        batch: &ColumnarBatch,
+    ) -> Result<(Vec<(FeatureId, Value)>, DagStats), XformError> {
+        let mut slots: Vec<Option<Value>> = vec![None; self.nodes.len()];
+        let mut stats = DagStats::default();
+        for (i, node) in self.nodes.iter().enumerate() {
+            match node {
+                Node::Input { id, kind } => {
+                    let v = if let Some(c) =
+                        batch.dense.iter().find(|c| c.id == *id)
+                    {
+                        Value::Dense(c.expand(0.0))
+                    } else if let Some(c) =
+                        batch.sparse.iter().find(|c| c.id == *id)
+                    {
+                        Value::Sparse {
+                            offsets: c.offsets.clone(),
+                            ids: c.ids.clone(),
+                            scores: c.scores.clone(),
+                        }
+                    } else {
+                        // Missing feature (absent from this stripe / old
+                        // partition, §4.3): typed default.
+                        match kind {
+                            InputKind::Dense => {
+                                Value::Dense(vec![0.0; batch.num_rows])
+                            }
+                            _ => Value::empty_sparse(batch.num_rows),
+                        }
+                    };
+                    slots[i] = Some(v);
+                }
+                Node::Apply { op, inputs } => {
+                    let ins: Vec<&Value> = inputs
+                        .iter()
+                        .map(|&j| slots[j].as_ref().expect("topo order"))
+                        .collect();
+                    let t = Instant::now();
+                    let out = op.apply(&ins)?;
+                    let dt = t.elapsed().as_secs_f64();
+                    let class = op.class();
+                    *stats.secs_by_class.entry(class).or_default() += dt;
+                    *stats.elements_by_class.entry(class).or_default() +=
+                        out.elements() as u64;
+                    stats.ops_run += 1;
+                    slots[i] = Some(out);
+                }
+            }
+        }
+        let outputs = self
+            .outputs
+            .iter()
+            .map(|&(id, n)| (id, slots[n].clone().expect("output slot")))
+            .collect();
+        Ok((outputs, stats))
+    }
+}
+
+/// Build a representative per-RM session DAG over a materialized schema:
+/// normalization for every used feature plus `derived` feature-generation
+/// chains shaped like the paper's example (Bucketize + FirstX → NGram →
+/// SigridHash), with op counts tuned by the RM's intensity so the cycle
+/// mix lands near the §6.4 split.
+pub fn session_dag(rng: &mut Pcg32, rm: &RmConfig, schema: &Schema, projection: &[FeatureId]) -> TransformDag {
+    let mut dag = TransformDag::default();
+    let mut dense_nodes: Vec<(FeatureId, usize)> = Vec::new();
+    let mut sparse_nodes: Vec<(FeatureId, usize)> = Vec::new();
+
+    for &fid in projection {
+        let Some(def) = schema.by_id(fid) else { continue };
+        let node = match def.kind {
+            FeatureKind::Dense => dag.input_dense(fid),
+            _ => dag.input_sparse(fid),
+        };
+        match def.kind {
+            FeatureKind::Dense => {
+                // Dense normalization chain: clamp → (logit | boxcox).
+                let c = dag.apply(
+                    Op::Clamp {
+                        lo: -100.0,
+                        hi: 100.0,
+                    },
+                    vec![node],
+                );
+                let n = if rng.chance(0.5) {
+                    dag.apply(Op::Logit { eps: 1e-4 }, vec![c])
+                } else {
+                    dag.apply(Op::BoxCox { lambda: 0.5 }, vec![c])
+                };
+                dag.output(fid, n);
+                dense_nodes.push((fid, n));
+            }
+            FeatureKind::Sparse | FeatureKind::ScoredSparse => {
+                // Sparse normalization: FirstX → SigridHash.
+                let f = dag.apply(Op::FirstX { x: 64 }, vec![node]);
+                let h = dag.apply(
+                    Op::SigridHash {
+                        salt: fid.0 as u64,
+                        modulus: 100_000,
+                    },
+                    vec![f],
+                );
+                dag.output(fid, h);
+                sparse_nodes.push((fid, h));
+            }
+        }
+    }
+
+    // Derived features: feature-generation chains (the expensive 75%).
+    // Scale count by the RM's derived-feature share and intensity.
+    let derived_frac =
+        rm.derived_features as f64 / rm.used_features().max(1) as f64;
+    let n_derived = ((projection.len() as f64 * derived_frac)
+        * rm.transform_intensity)
+        .round()
+        .max(if rm.derived_features > 0 { 1.0 } else { 0.0 })
+        as usize;
+    let derived_base = 1 << 20; // synthetic id namespace for derived feats
+    for d in 0..n_derived {
+        let out_id = FeatureId((derived_base + d) as u32);
+        match (
+            sparse_nodes.is_empty(),
+            dense_nodes.is_empty(),
+            rng.below(4),
+        ) {
+            (false, false, 0) => {
+                // Bucketize(dense) ⊗ sparse → NGram → SigridHash
+                let (_, dn) = *rng.choose(&dense_nodes);
+                let (_, sn) = *rng.choose(&sparse_nodes);
+                let b = dag.apply(
+                    Op::Bucketize {
+                        borders: vec![-2.0, -1.0, 0.0, 1.0, 2.0],
+                    },
+                    vec![dn],
+                );
+                let c = dag.apply(Op::Cartesian, vec![b, sn]);
+                let h = dag.apply(
+                    Op::SigridHash {
+                        salt: d as u64,
+                        modulus: 65_536,
+                    },
+                    vec![c],
+                );
+                dag.output(out_id, h);
+            }
+            (false, _, 1) => {
+                // NGram chain.
+                let (_, sn) = *rng.choose(&sparse_nodes);
+                let g = dag.apply(Op::NGram { n: 2 }, vec![sn]);
+                let h = dag.apply(
+                    Op::SigridHash {
+                        salt: 7 + d as u64,
+                        modulus: 65_536,
+                    },
+                    vec![g],
+                );
+                dag.output(out_id, h);
+            }
+            (false, _, 2) if sparse_nodes.len() >= 2 => {
+                // Intersection of two lists → MapId.
+                let (_, a) = *rng.choose(&sparse_nodes);
+                let (_, b) = *rng.choose(&sparse_nodes);
+                let i = dag.apply(Op::IdListTransform, vec![a, b]);
+                let m = dag.apply(
+                    Op::MapId {
+                        mapping: HashMap::new(),
+                        default: 1,
+                    },
+                    vec![i],
+                );
+                dag.output(out_id, m);
+            }
+            (_, false, _) => {
+                // Bucketize + Onehot from dense.
+                let (_, dn) = *rng.choose(&dense_nodes);
+                let b = dag.apply(
+                    Op::Bucketize {
+                        borders: (0..16).map(|i| i as f32 / 4.0 - 2.0).collect(),
+                    },
+                    vec![dn],
+                );
+                dag.output(out_id, b);
+            }
+            _ => {}
+        }
+    }
+    dag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RmId;
+    use crate::data::{Sample, SparseValue};
+
+    fn batch() -> ColumnarBatch {
+        let samples: Vec<Sample> = (0..8u64)
+            .map(|i| {
+                let mut s = Sample {
+                    dense: vec![(FeatureId(0), i as f32 / 8.0)],
+                    sparse: vec![(
+                        FeatureId(10),
+                        SparseValue::ids(vec![i, i + 1, i + 2]),
+                    )],
+                    label: 0.0,
+                    timestamp: i,
+                };
+                s.sort_features();
+                s
+            })
+            .collect();
+        ColumnarBatch::from_samples(&samples, &[FeatureId(0)], &[FeatureId(10)])
+    }
+
+    #[test]
+    fn simple_dag_executes() {
+        let mut dag = TransformDag::default();
+        let d = dag.input(FeatureId(0));
+        let c = dag.apply(Op::Clamp { lo: 0.0, hi: 0.5 }, vec![d]);
+        dag.output(FeatureId(0), c);
+        let s = dag.input(FeatureId(10));
+        let h = dag.apply(
+            Op::SigridHash {
+                salt: 1,
+                modulus: 50,
+            },
+            vec![s],
+        );
+        dag.output(FeatureId(10), h);
+
+        let (outs, stats) = dag.execute(&batch()).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].1.rows(), 8);
+        assert_eq!(stats.ops_run, 2);
+        assert!(stats.total_secs() >= 0.0);
+    }
+
+    #[test]
+    fn paper_example_dag() {
+        // Bucketize(A) + FirstX(B) → NGram → SigridHash = feature X (§7.2).
+        let mut dag = TransformDag::default();
+        let a = dag.input(FeatureId(0));
+        let b = dag.input(FeatureId(10));
+        let ba = dag.apply(
+            Op::Bucketize {
+                borders: vec![0.25, 0.5, 0.75],
+            },
+            vec![a],
+        );
+        let fb = dag.apply(Op::FirstX { x: 2 }, vec![b]);
+        let cross = dag.apply(Op::Cartesian, vec![ba, fb]);
+        let ng = dag.apply(Op::NGram { n: 2 }, vec![cross]);
+        let x = dag.apply(
+            Op::SigridHash {
+                salt: 9,
+                modulus: 1000,
+            },
+            vec![ng],
+        );
+        dag.output(FeatureId(999), x);
+        let (outs, stats) = dag.execute(&batch()).unwrap();
+        assert_eq!(outs.len(), 1);
+        if let Value::Sparse { ids, .. } = &outs[0].1 {
+            assert!(ids.iter().all(|&i| i < 1000));
+        } else {
+            panic!()
+        }
+        assert!(stats.class_frac(OpClass::FeatureGen) > 0.0);
+    }
+
+    #[test]
+    fn required_inputs_dedup() {
+        let mut dag = TransformDag::default();
+        let a = dag.input(FeatureId(5));
+        let b = dag.input(FeatureId(5));
+        let c = dag.input(FeatureId(3));
+        dag.apply(Op::Cartesian, vec![a, b]);
+        dag.apply(Op::FirstX { x: 1 }, vec![c]);
+        assert_eq!(
+            dag.required_inputs(),
+            vec![FeatureId(3), FeatureId(5)]
+        );
+    }
+
+    #[test]
+    fn missing_input_becomes_empty_sparse() {
+        let mut dag = TransformDag::default();
+        let m = dag.input(FeatureId(777)); // not in batch
+        let h = dag.apply(
+            Op::SigridHash {
+                salt: 0,
+                modulus: 10,
+            },
+            vec![m],
+        );
+        dag.output(FeatureId(777), h);
+        let (outs, _) = dag.execute(&batch()).unwrap();
+        assert_eq!(outs[0].1.elements(), 0);
+        assert_eq!(outs[0].1.rows(), 8);
+    }
+
+    #[test]
+    fn session_dag_generates_for_all_rms() {
+        let mut rng = Pcg32::new(11);
+        for id in RmId::ALL {
+            let rm = RmConfig::get(id);
+            let schema = Schema::synthetic(&mut rng, 40, 20, 0.5, 10.0);
+            let proj: Vec<FeatureId> =
+                schema.features.iter().take(20).map(|f| f.id).collect();
+            let dag = session_dag(&mut rng, &rm, &schema, &proj);
+            assert!(!dag.outputs.is_empty(), "{}", rm.id.name());
+            let (outs, stats) = dag.execute(&batch_for(&schema, &proj)).unwrap();
+            assert!(!outs.is_empty());
+            assert!(stats.ops_run > 0);
+            // Structural check (cycle fractions are timing-noisy at tiny
+            // batch sizes; the §6.4 split is reported at realistic sizes
+            // by bench_transforms): RM1's DAG must contain a substantial
+            // number of feature-generation ops.
+            if id == RmId::Rm1 {
+                let fg_ops = dag
+                    .nodes
+                    .iter()
+                    .filter(|n| {
+                        matches!(n, Node::Apply { op, .. }
+                            if op.class() == OpClass::FeatureGen)
+                    })
+                    .count();
+                assert!(fg_ops >= 5, "only {fg_ops} feature-gen ops");
+            }
+        }
+    }
+
+    fn batch_for(schema: &Schema, proj: &[FeatureId]) -> ColumnarBatch {
+        let mut rng = Pcg32::new(5);
+        let samples =
+            crate::datagen::generate_partition_samples(&mut rng, schema, 16, 0);
+        let dense: Vec<FeatureId> = proj
+            .iter()
+            .filter(|f| {
+                matches!(
+                    schema.by_id(**f).map(|d| d.kind),
+                    Some(FeatureKind::Dense)
+                )
+            })
+            .copied()
+            .collect();
+        let sparse: Vec<FeatureId> = proj
+            .iter()
+            .filter(|f| {
+                !matches!(
+                    schema.by_id(**f).map(|d| d.kind),
+                    Some(FeatureKind::Dense)
+                )
+            })
+            .copied()
+            .collect();
+        ColumnarBatch::from_samples(&samples, &dense, &sparse)
+    }
+}

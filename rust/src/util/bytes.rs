@@ -1,0 +1,201 @@
+//! Byte-level codecs shared by the DWRF format and the RPC framing:
+//! LEB128 varints, zigzag, fixed-width little-endian helpers, and
+//! human-readable size formatting for reports.
+
+/// Append a u64 as LEB128 varint.
+#[inline]
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read a LEB128 varint; returns (value, bytes_consumed).
+#[inline]
+pub fn get_varint(buf: &[u8]) -> Option<(u64, usize)> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    for (i, &b) in buf.iter().enumerate() {
+        if shift >= 64 {
+            return None;
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Some((v, i + 1));
+        }
+        shift += 7;
+    }
+    None
+}
+
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+#[inline]
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn get_u32(buf: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(buf[at..at + 4].try_into().unwrap())
+}
+
+#[inline]
+pub fn get_u64(buf: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(buf[at..at + 8].try_into().unwrap())
+}
+
+#[inline]
+pub fn get_f32(buf: &[u8], at: usize) -> f32 {
+    f32::from_le_bytes(buf[at..at + 4].try_into().unwrap())
+}
+
+/// Sequential reader over a byte slice (decode side of the codecs above).
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn varint(&mut self) -> Option<u64> {
+        let (v, n) = get_varint(&self.buf[self.pos..])?;
+        self.pos += n;
+        Some(v)
+    }
+
+    pub fn u32(&mut self) -> Option<u32> {
+        if self.remaining() < 4 {
+            return None;
+        }
+        let v = get_u32(self.buf, self.pos);
+        self.pos += 4;
+        Some(v)
+    }
+
+    pub fn u64(&mut self) -> Option<u64> {
+        if self.remaining() < 8 {
+            return None;
+        }
+        let v = get_u64(self.buf, self.pos);
+        self.pos += 8;
+        Some(v)
+    }
+
+    pub fn f32(&mut self) -> Option<f32> {
+        if self.remaining() < 4 {
+            return None;
+        }
+        let v = get_f32(self.buf, self.pos);
+        self.pos += 4;
+        Some(v)
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.remaining() < n {
+            return None;
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Some(s)
+    }
+}
+
+/// "16.50 GB/s"-style size formatting for report tables.
+pub fn human_bytes(v: f64) -> String {
+    const UNITS: [&str; 7] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB", "EiB"];
+    let mut v = v;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{v:.0} {}", UNITS[u])
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip() {
+        let cases = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        for &v in &cases {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let (back, n) = get_varint(&buf).unwrap();
+            assert_eq!(back, v);
+            assert_eq!(n, buf.len());
+        }
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [-1i64, 0, 1, -1000, 1000, i64::MIN, i64::MAX] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+    }
+
+    #[test]
+    fn byte_reader_sequences() {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 300);
+        put_u32(&mut buf, 0xdeadbeef);
+        put_f32(&mut buf, 1.5);
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.varint(), Some(300));
+        assert_eq!(r.u32(), Some(0xdeadbeef));
+        assert_eq!(r.f32(), Some(1.5));
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(r.f32(), None);
+    }
+
+    #[test]
+    fn human_readable() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert_eq!(human_bytes(1536.0), "1.50 KiB");
+        assert_eq!(human_bytes(8.0 * 1024.0 * 1024.0), "8.00 MiB");
+    }
+}

@@ -1,0 +1,106 @@
+//! Tiny `--flag [value]` argument parser for the `dsi` binary
+//! (clap is unavailable in the offline vendored crate set).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments in order (e.g. subcommand names).
+    pub positional: Vec<String>,
+    /// `--key value` or bare `--key` (stored with empty value).
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Value is next token unless it's another flag.
+                    let take = matches!(iter.peek(), Some(n) if !n.starts_with("--"));
+                    let v = if take { iter.next().unwrap() } else { String::new() };
+                    args.flags.insert(key.to_string(), v);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).filter(|s| !s.is_empty()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse("paper --exp table12 --json --seed 7");
+        assert_eq!(a.subcommand(), Some("paper"));
+        assert_eq!(a.get("exp"), Some("table12"));
+        assert!(a.has("json"));
+        assert_eq!(a.get_u64("seed", 0), 7);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse("run --scale=0.5 --out=x.json");
+        assert_eq!(a.get_f64("scale", 1.0), 0.5);
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn bare_flag_before_flag() {
+        let a = parse("--verbose --n 3");
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), Some(""));
+        assert_eq!(a.get_u64("n", 0), 3);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("bench");
+        assert_eq!(a.get_or("exp", "all"), "all");
+        assert_eq!(a.get_u64("seed", 42), 42);
+    }
+}

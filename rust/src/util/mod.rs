@@ -1,0 +1,26 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline and only ships the `xla` crate's
+//! vendored dependency closure — no `rand`, `serde`, `clap`, `criterion`, or
+//! `proptest`. This module provides deterministic, minimal functional
+//! equivalents (see DESIGN.md substitution table):
+//!
+//! * [`rng`] — SplitMix64 / PCG32 PRNGs and the distributions the dataset
+//!   generator needs (uniform, normal, lognormal, zipf, ...).
+//! * [`stats`] — online moments, percentiles, log-bucketed histograms.
+//! * [`json`] — a tiny JSON value model + writer for machine-readable
+//!   experiment reports.
+//! * [`cli`] — a `--flag value` argument parser for the `dsi` binary.
+//! * [`timing`] — wallclock timing + a micro-bench harness used by the
+//!   `harness = false` bench targets.
+//! * [`prop`] — a miniature property-testing harness (seed-reporting,
+//!   bounded shrinking over the case index).
+//! * [`bytes`] — varint/zigzag codecs and human-readable byte formatting.
+
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timing;

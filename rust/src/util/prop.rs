@@ -1,0 +1,176 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the xla rpath on this
+//! image — the same code runs for real in `rust/tests/proptests.rs`):
+//! ```no_run
+//! use dsi::util::prop::{check, Gen};
+//! check("reverse twice is identity", 200, |g| {
+//!     let xs = g.vec_u64(0..64, 1000);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     if ys == xs { Ok(()) } else { Err(format!("mismatch for {xs:?}")) }
+//! });
+//! ```
+//!
+//! On failure the harness retries the failing case at progressively smaller
+//! `size` values (a bounded shrink over the generator's size budget) and
+//! panics with the smallest failing seed + size so the case is trivially
+//! reproducible.
+
+use super::rng::Pcg32;
+use std::ops::Range;
+
+/// Value generator handed to each property case. `size` scales collection
+/// lengths so shrinking can retry with smaller structures.
+pub struct Gen {
+    pub rng: Pcg32,
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Self {
+            rng: Pcg32::new(seed),
+            size,
+        }
+    }
+
+    pub fn u64(&mut self, range: Range<u64>) -> u64 {
+        self.rng.range(range.start, range.end)
+    }
+
+    pub fn usize(&mut self, range: Range<usize>) -> usize {
+        self.rng.range(range.start as u64, range.end as u64) as usize
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        // Mix of regular, small, large, and special-ish values.
+        match self.rng.below(8) {
+            0 => 0.0,
+            1 => -1.0,
+            2 => self.rng.f32() * 1e-6,
+            3 => self.rng.f32() * 1e6,
+            _ => self.rng.f32() * 2.0 - 1.0,
+        }
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Collection length scaled by the shrink budget.
+    pub fn len(&mut self, max: usize) -> usize {
+        let cap = ((max as f64) * self.size).ceil().max(1.0) as usize;
+        self.usize(0..cap + 1)
+    }
+
+    pub fn vec_u64(&mut self, each: Range<u64>, max_len: usize) -> Vec<u64> {
+        let n = self.len(max_len);
+        (0..n).map(|_| self.u64(each.clone())).collect()
+    }
+
+    pub fn vec_f32(&mut self, max_len: usize) -> Vec<f32> {
+        let n = self.len(max_len);
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn bytes(&mut self, max_len: usize) -> Vec<u8> {
+        let n = self.len(max_len);
+        (0..n).map(|_| self.rng.next_u32() as u8).collect()
+    }
+
+    pub fn string(&mut self, max_len: usize) -> String {
+        let n = self.len(max_len);
+        (0..n)
+            .map(|_| (b'a' + (self.rng.below(26) as u8)) as char)
+            .collect()
+    }
+}
+
+/// Run `cases` random cases of property `f`. Panics with a reproducible
+/// seed on failure (after attempting to shrink the size budget).
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    // Honor an env knob so CI can crank cases up.
+    let cases = std::env::var("DSI_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+    let base_seed = 0xD51C0DE ^ hash_name(name);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = f(&mut g) {
+            // Shrink: retry the same seed with smaller size budgets and
+            // report the smallest size that still fails.
+            let mut fail_size = 1.0;
+            let mut fail_msg = msg;
+            for &size in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                let mut g = Gen::new(seed, size);
+                if let Err(m) = f(&mut g) {
+                    fail_size = size;
+                    fail_msg = m;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 size {fail_size}): {fail_msg}"
+            );
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum is commutative", 50, |g| {
+            let a = g.u64(0..1000);
+            let b = g.u64(0..1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 100, |g| {
+            let v = g.u64(10..20);
+            if !(10..20).contains(&v) {
+                return Err(format!("u64 out of range: {v}"));
+            }
+            let xs = g.vec_u64(0..5, 16);
+            if xs.len() > 17 {
+                return Err("vec too long".into());
+            }
+            if xs.iter().any(|&x| x >= 5) {
+                return Err("element out of range".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,343 @@
+//! Deterministic PRNGs and sampling distributions.
+//!
+//! All simulation randomness flows through [`Pcg32`], seeded explicitly so
+//! every experiment in the paper harness is exactly reproducible. SplitMix64
+//! is used for seed expansion (the standard PCG seeding recipe).
+
+/// SplitMix64 — used to expand a single `u64` seed into stream/state pairs.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG32 (XSH-RR 64/32) — the workhorse generator.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+    /// Cached second output of the last Box–Muller draw.
+    spare_normal: Option<f64>,
+}
+
+impl Pcg32 {
+    /// Create from a seed; the stream id is derived via SplitMix64.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let state = sm.next_u64();
+        let inc = sm.next_u64() | 1;
+        let mut rng = Self {
+            state,
+            inc,
+            spare_normal: None,
+        };
+        rng.next_u32(); // warm up
+        rng
+    }
+
+    /// Independent child generator (for per-thread / per-partition streams).
+    pub fn fork(&mut self, tag: u64) -> Pcg32 {
+        Pcg32::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // 128-bit multiply method; bias negligible for simulation purposes.
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (both outputs used: the sine twin
+    /// is cached — the cos/ln pair was ~12% of dataset-generation CPU).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (sin, cos) = (std::f64::consts::TAU * u2).sin_cos();
+        self.spare_normal = Some(r * sin);
+        r * cos
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Lognormal parameterized by the *target* mean and sigma of the
+    /// underlying normal — used for sparse-feature lengths and job
+    /// durations, both of which the paper describes as heavily skewed.
+    pub fn lognormal_mean(&mut self, target_mean: f64, sigma: f64) -> f64 {
+        // E[lognormal(mu, sigma)] = exp(mu + sigma^2/2) => solve for mu.
+        let mu = target_mean.ln() - sigma * sigma / 2.0;
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with given mean.
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        -mean * self.f64().max(1e-12).ln()
+    }
+
+    /// Geometric-ish positive integer with given mean (>= 1).
+    pub fn geometric(&mut self, mean: f64) -> u64 {
+        (self.exponential((mean - 1.0).max(0.0)).round() as u64) + 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniform element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Weighted index sample (weights need not be normalized).
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut t = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// Zipf sampler over ranks `0..n` with exponent `s`.
+///
+/// Feature popularity and byte reuse in the paper are heavily skewed
+/// (Fig 7: ~40% of bytes serve 80% of I/O); Zipf-distributed feature
+/// popularity is the standard generative model for that shape.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+    /// Inverse-CDF acceleration table: quantile bucket → first candidate
+    /// rank, so sampling is ~O(1) instead of a full binary search (the
+    /// dataset generator draws hundreds of millions of ids).
+    lut: Vec<u32>,
+}
+
+const ZIPF_LUT: usize = 4096;
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in &mut cdf {
+            *v /= total;
+        }
+        // lut[q] = smallest rank whose cdf ≥ q/ZIPF_LUT.
+        let mut lut = Vec::with_capacity(ZIPF_LUT);
+        let mut rank = 0usize;
+        for q in 0..ZIPF_LUT {
+            let target = q as f64 / ZIPF_LUT as f64;
+            while rank + 1 < n && cdf[rank] < target {
+                rank += 1;
+            }
+            lut.push(rank as u32);
+        }
+        Self { cdf, lut }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Probability mass of rank `k` (0-based).
+    pub fn pmf(&self, k: usize) -> f64 {
+        if k == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[k] - self.cdf[k - 1]
+        }
+    }
+
+    /// Sample a rank (0-based); most popular rank is 0.
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        let u = rng.f64();
+        // Jump near the answer via the LUT, then walk forward.
+        let bucket = ((u * ZIPF_LUT as f64) as usize).min(ZIPF_LUT - 1);
+        let mut i = self.lut[bucket] as usize;
+        while self.cdf[i] < u && i + 1 < self.cdf.len() {
+            i += 1;
+        }
+        i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_is_deterministic() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn pcg_seeds_differ() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg32::new(7);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut rng = Pcg32::new(9);
+        for bound in [1u64, 2, 3, 10, 1000] {
+            for _ in 0..1000 {
+                assert!(rng.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::new(11);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_hits_target_mean() {
+        let mut rng = Pcg32::new(13);
+        let n = 200_000;
+        let target = 25.97; // RM1 average sparse feature length (Table 5)
+        let mean: f64 =
+            (0..n).map(|_| rng.lognormal_mean(target, 1.0)).sum::<f64>() / n as f64;
+        assert!((mean - target).abs() / target < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_normalized() {
+        let z = Zipf::new(1000, 1.1);
+        let mut rng = Pcg32::new(17);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[0] > counts[500].max(1) * 10);
+        let total: f64 = (0..1000).map(|k| z.pmf(k)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shuffle_preserves_elements() {
+        let mut rng = Pcg32::new(19);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut rng = Pcg32::new(23);
+        let w = [1.0, 0.0, 9.0];
+        let mut c = [0usize; 3];
+        for _ in 0..10_000 {
+            c[rng.weighted(&w)] += 1;
+        }
+        assert_eq!(c[1], 0);
+        assert!(c[2] > c[0] * 5);
+    }
+}

@@ -1,0 +1,348 @@
+//! Streaming statistics, percentiles, and log-bucketed histograms.
+//!
+//! Used throughout the characterization harness: Table 6 (I/O size
+//! distribution mean/std/p5..p95), Fig 7 (byte-popularity CDF), Fig 8/9
+//! (utilization curves), and the §Perf iteration log.
+
+/// Welford online mean/variance plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.mean * self.n as f64
+    }
+
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + d * d * self.n as f64 * other.n as f64 / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exact-percentile sample collector (stores values; fine at sim scale).
+#[derive(Clone, Debug, Default)]
+pub struct Percentiles {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs
+                .sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// `q` in [0, 100]; linear interpolation between closest ranks.
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let rank = q / 100.0 * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            0.0
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.xs.len() - 1) as f64)
+            .sqrt()
+    }
+}
+
+/// Power-of-two bucketed histogram for byte sizes / durations.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    buckets: Vec<u64>, // bucket i counts values in [2^i, 2^(i+1))
+    count: u64,
+    sum: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: vec![0; 64],
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, v: u64) {
+        let b = 63 - v.max(1).leading_zeros() as usize;
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += v as f64;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// (bucket_low_bound, count) for non-empty buckets.
+    pub fn nonzero(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (1u64 << i, c))
+            .collect()
+    }
+}
+
+/// Build a popularity CDF: given per-item (weight, accesses), returns
+/// points (fraction_of_bytes, fraction_of_io) sorted by item popularity
+/// (most-accessed first). Exactly the construction of the paper's Fig 7.
+pub fn popularity_cdf(items: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    let total_w: f64 = items.iter().map(|(w, _)| w).sum();
+    let total_a: f64 = items.iter().map(|(_, a)| a).sum();
+    if total_w == 0.0 || total_a == 0.0 {
+        return vec![];
+    }
+    let mut sorted: Vec<_> = items.to_vec();
+    // Most I/O-per-byte first (popularity density), matching "most-popular
+    // x% of stored bytes".
+    sorted.sort_by(|a, b| {
+        (b.1 / b.0.max(1e-12))
+            .partial_cmp(&(a.1 / a.0.max(1e-12)))
+            .unwrap()
+    });
+    let mut out = Vec::with_capacity(sorted.len());
+    let (mut cw, mut ca) = (0.0, 0.0);
+    for (w, a) in sorted {
+        cw += w;
+        ca += a;
+        out.push((cw / total_w, ca / total_a));
+    }
+    out
+}
+
+/// Interpolate a CDF at x (fraction of bytes) → fraction of I/O.
+pub fn cdf_at(cdf: &[(f64, f64)], x: f64) -> f64 {
+    if cdf.is_empty() {
+        return 0.0;
+    }
+    let mut prev = (0.0, 0.0);
+    for &(bx, by) in cdf {
+        if bx >= x {
+            let span = bx - prev.0;
+            if span <= 0.0 {
+                return by;
+            }
+            let t = (x - prev.0) / span;
+            return prev.1 + t * (by - prev.1);
+        }
+        prev = (bx, by);
+    }
+    1.0
+}
+
+/// Smallest byte-fraction that absorbs at least `io_frac` of I/O.
+pub fn bytes_needed_for_io(cdf: &[(f64, f64)], io_frac: f64) -> f64 {
+    for &(bx, by) in cdf {
+        if by >= io_frac {
+            return bx;
+        }
+    }
+    1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_basics() {
+        let mut s = OnlineStats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-9);
+        assert!((s.std() - 2.138_089_935).abs() < 1e-6);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn online_stats_merge_matches_single_stream() {
+        let xs: Vec<f64> = (0..100).map(|i| (i * i % 37) as f64).collect();
+        let mut whole = OnlineStats::new();
+        xs.iter().for_each(|&x| whole.push(x));
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        xs[..40].iter().for_each(|&x| a.push(x));
+        xs[40..].iter().for_each(|&x| b.push(x));
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.std() - whole.std()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut p = Percentiles::new();
+        for i in 1..=100 {
+            p.push(i as f64);
+        }
+        assert!((p.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((p.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((p.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert!((p.percentile(95.0) - 95.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_histogram_buckets() {
+        let mut h = LogHistogram::new();
+        h.push(1);
+        h.push(2);
+        h.push(3);
+        h.push(1024);
+        let nz = h.nonzero();
+        assert_eq!(nz, vec![(1, 1), (2, 2), (1024, 1)]);
+        assert_eq!(h.count(), 4);
+    }
+
+    #[test]
+    fn popularity_cdf_shape() {
+        // 10 items of equal size; one item gets 90% of accesses.
+        let mut items = vec![(1.0, 1.0); 10];
+        items[0].1 = 81.0; // 81 / 90 = 90%
+        let cdf = popularity_cdf(&items);
+        // The first 10% of bytes should absorb 90% of I/O.
+        assert!((cdf[0].0 - 0.1).abs() < 1e-9);
+        assert!((cdf[0].1 - 0.9).abs() < 1e-9);
+        assert!((bytes_needed_for_io(&cdf, 0.8) - 0.1).abs() < 1e-9);
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cdf_at_interpolates() {
+        let cdf = vec![(0.5, 0.8), (1.0, 1.0)];
+        assert!((cdf_at(&cdf, 0.25) - 0.4).abs() < 1e-9);
+        assert!((cdf_at(&cdf, 0.75) - 0.9).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,174 @@
+//! Wallclock timing + the micro-bench harness used by the
+//! `harness = false` bench targets (criterion is unavailable offline).
+
+use std::time::{Duration, Instant};
+
+/// Simple scoped timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Result of one benchmark: iterations, wall time, optional bytes processed.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub total: Duration,
+    pub bytes: u64,
+}
+
+impl BenchResult {
+    pub fn ns_per_iter(&self) -> f64 {
+        self.total.as_nanos() as f64 / self.iters.max(1) as f64
+    }
+
+    pub fn throughput_mb_s(&self) -> f64 {
+        if self.total.as_secs_f64() == 0.0 {
+            return 0.0;
+        }
+        self.bytes as f64 / 1e6 / self.total.as_secs_f64()
+    }
+
+    pub fn report_line(&self) -> String {
+        if self.bytes > 0 {
+            format!(
+                "{:<44} {:>12.1} ns/iter {:>10.1} MB/s ({} iters)",
+                self.name,
+                self.ns_per_iter(),
+                self.throughput_mb_s(),
+                self.iters
+            )
+        } else {
+            format!(
+                "{:<44} {:>12.1} ns/iter ({} iters)",
+                self.name,
+                self.ns_per_iter(),
+                self.iters
+            )
+        }
+    }
+}
+
+/// Criterion-lite: warm up, auto-scale iteration count to ~`budget`,
+/// report ns/iter (and MB/s when the closure reports bytes).
+pub struct Bench {
+    budget: Duration,
+    warmup: Duration,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self {
+            budget: Duration::from_millis(700),
+            warmup: Duration::from_millis(150),
+            // Honor `cargo bench -- --quick`-style env for CI.
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Run `f` repeatedly; `f` returns the number of bytes it processed
+    /// (0 if throughput is meaningless for this benchmark).
+    pub fn run<F: FnMut() -> u64>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        let mut bytes_per_iter = 0u64;
+        while t0.elapsed() < self.warmup || calib_iters == 0 {
+            bytes_per_iter = f();
+            calib_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / calib_iters as f64;
+        let iters = ((self.budget.as_secs_f64() / per_iter.max(1e-9)) as u64)
+            .clamp(1, 10_000_000);
+
+        let start = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        let total = start.elapsed();
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters,
+            total,
+            bytes: bytes_per_iter * iters,
+        });
+        let r = self.results.last().unwrap();
+        println!("{}", r.report_line());
+        r
+    }
+
+    pub fn print_header(title: &str) {
+        println!("\n=== {title} ===");
+    }
+}
+
+/// Measure a one-shot operation's wall time and throughput.
+pub fn measure_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        let mut b = Bench::new().with_budget(Duration::from_millis(20));
+        let r = b
+            .run("noop-ish", || {
+                let mut acc = 0u64;
+                for i in 0..100u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                std::hint::black_box(acc);
+                800
+            })
+            .clone();
+        assert!(r.iters >= 1);
+        assert!(r.ns_per_iter() > 0.0);
+        assert!(r.throughput_mb_s() > 0.0);
+    }
+
+    #[test]
+    fn measure_once_returns_value() {
+        let (v, d) = measure_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

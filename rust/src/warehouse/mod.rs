@@ -1,0 +1,167 @@
+//! Hive-like data warehouse catalog (§3.1.2): tables of structured
+//! samples, partitioned by date, stored as DWRF files in Tectonic.
+//!
+//! Training jobs select data along two dimensions (§5.1): a set of
+//! partitions (row filter) and a feature projection (column filter).
+
+use crate::dwrf::Projection;
+use crate::schema::Schema;
+use crate::tectonic::FileId;
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+/// One date partition of a table.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Day index (e.g. days since dataset epoch).
+    pub day: u32,
+    pub file: FileId,
+    pub rows: u64,
+    /// Stored (compressed) bytes of the partition file.
+    pub bytes: u64,
+}
+
+/// A warehouse table: schema + partitions.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub name: String,
+    pub schema: Schema,
+    pub partitions: Vec<Partition>,
+}
+
+impl Table {
+    /// Row filter: partitions within `[from_day, to_day]`.
+    pub fn select_partitions(&self, from_day: u32, to_day: u32) -> Vec<&Partition> {
+        self.partitions
+            .iter()
+            .filter(|p| p.day >= from_day && p.day <= to_day)
+            .collect()
+    }
+
+    pub fn total_rows(&self) -> u64 {
+        self.partitions.iter().map(|p| p.rows).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.partitions.iter().map(|p| p.bytes).sum()
+    }
+}
+
+/// A training job's dataset selection: table + row filter + column filter
+/// (the "session specification" core, §3.2.1).
+#[derive(Clone, Debug)]
+pub struct DatasetSelection {
+    pub table: String,
+    pub from_day: u32,
+    pub to_day: u32,
+    pub projection: Projection,
+}
+
+/// The central catalog (one per region in production; one here).
+#[derive(Default)]
+pub struct Catalog {
+    tables: RwLock<HashMap<String, Table>>,
+}
+
+impl Catalog {
+    pub fn new() -> Catalog {
+        Catalog::default()
+    }
+
+    pub fn register(&self, table: Table) {
+        self.tables
+            .write()
+            .unwrap()
+            .insert(table.name.clone(), table);
+    }
+
+    pub fn get(&self, name: &str) -> Option<Table> {
+        self.tables.read().unwrap().get(name).cloned()
+    }
+
+    pub fn add_partition(&self, table: &str, p: Partition) {
+        if let Some(t) = self.tables.write().unwrap().get_mut(table) {
+            t.partitions.push(p);
+            t.partitions.sort_by_key(|p| p.day);
+        }
+    }
+
+    pub fn table_names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.tables.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schema::{FeatureDef, FeatureId, FeatureKind, FeatureStatus};
+
+    fn schema() -> Schema {
+        Schema {
+            features: vec![FeatureDef {
+                id: FeatureId(0),
+                kind: FeatureKind::Dense,
+                status: FeatureStatus::Active,
+                coverage: 1.0,
+                avg_len: 1.0,
+                popularity_rank: 0,
+            }],
+        }
+    }
+
+    fn table() -> Table {
+        Table {
+            name: "rm1".into(),
+            schema: schema(),
+            partitions: (0..10)
+                .map(|d| Partition {
+                    day: d,
+                    file: FileId(d as u64 + 1),
+                    rows: 100,
+                    bytes: 1000,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn partition_pruning_by_day() {
+        let t = table();
+        let sel = t.select_partitions(3, 5);
+        assert_eq!(sel.len(), 3);
+        assert!(sel.iter().all(|p| (3..=5).contains(&p.day)));
+        assert_eq!(t.select_partitions(100, 200).len(), 0);
+    }
+
+    #[test]
+    fn totals() {
+        let t = table();
+        assert_eq!(t.total_rows(), 1000);
+        assert_eq!(t.total_bytes(), 10_000);
+    }
+
+    #[test]
+    fn catalog_register_and_extend() {
+        let c = Catalog::new();
+        c.register(table());
+        assert!(c.get("rm1").is_some());
+        assert!(c.get("rm2").is_none());
+        c.add_partition(
+            "rm1",
+            Partition {
+                day: 2,
+                file: FileId(99),
+                rows: 5,
+                bytes: 50,
+            },
+        );
+        let t = c.get("rm1").unwrap();
+        assert_eq!(t.partitions.len(), 11);
+        // Sorted by day after insert.
+        assert!(t.partitions.windows(2).all(|w| w[0].day <= w[1].day));
+        assert_eq!(c.table_names(), vec!["rm1".to_string()]);
+    }
+}

@@ -1,0 +1,228 @@
+//! DPP coordinator integration: fault tolerance, checkpoint/restore,
+//! autoscaling dynamics, and client routing under real sessions.
+
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::datagen::build_dataset;
+use dsi::dpp::{
+    Master, MasterCheckpoint, Session, SessionConfig, SessionSpec,
+};
+use dsi::dwrf::{Projection, WriterOptions};
+use dsi::tectonic::{Cluster, ClusterConfig};
+use dsi::transforms::dag::session_dag;
+use dsi::util::rng::Pcg32;
+use dsi::warehouse::Catalog;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn fixture(seed: u64) -> (Arc<Cluster>, Catalog, SessionSpec, u64) {
+    let rm = RmConfig::get(RmId::Rm3);
+    let scale = SimScale {
+        rows_per_partition: 192,
+        materialized_features: 48,
+        partitions: 4,
+    };
+    let mut rng = Pcg32::new(seed);
+    let cluster = Arc::new(Cluster::new(ClusterConfig {
+        chunk_bytes: 128 << 10,
+        ..Default::default()
+    }));
+    let catalog = Catalog::new();
+    let h = build_dataset(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions {
+            stripe_rows: 48,
+            ..Default::default()
+        },
+        seed,
+    )
+    .unwrap();
+    let projection = h.schema.sample_projection(&mut rng, 10, 1.0);
+    let dag = session_dag(&mut rng, &rm, &h.schema, &projection);
+    let mut spec = SessionSpec::from_dag(&h.table_name, 0, u32::MAX, dag, 24);
+    spec.projection = Projection::new(projection);
+    let rows = catalog.get(&h.table_name).unwrap().total_rows();
+    (cluster, catalog, spec, rows)
+}
+
+#[test]
+fn worker_crash_mid_session_recovers_all_rows() {
+    let (cluster, catalog, spec, rows) = fixture(101);
+    let report = Session::run(
+        &catalog,
+        &cluster,
+        spec,
+        &SessionConfig {
+            initial_workers: 3,
+            max_workers: 4,
+            clients: 2,
+            kill_worker_after_batches: Some(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // The crashed worker's split is re-run; duplicates possible but no
+    // loss.
+    assert!(report.rows_delivered >= rows, "{} < {rows}", report.rows_delivered);
+}
+
+#[test]
+fn master_checkpoint_restore_resumes_exactly() {
+    let (cluster, catalog, spec, _) = fixture(102);
+    let master = Master::new(&catalog, &cluster, spec.clone()).unwrap();
+    let w = master.register_worker();
+    let (_, total) = master.progress();
+    // Complete half the splits, checkpoint, "fail over".
+    for _ in 0..total / 2 {
+        let s = master.fetch_split(w).unwrap();
+        master.complete_split(w, s.id);
+    }
+    let ckpt: MasterCheckpoint = master.checkpoint();
+    assert_eq!(ckpt.completed.len(), total / 2);
+
+    let restored = Master::restore(&catalog, &cluster, spec, &ckpt).unwrap();
+    let w2 = restored.register_worker();
+    let mut remaining = 0;
+    while let Some(s) = restored.fetch_split(w2) {
+        restored.complete_split(w2, s.id);
+        remaining += 1;
+    }
+    assert_eq!(remaining, total - total / 2);
+    assert!(restored.is_done());
+}
+
+#[test]
+fn autoscaled_session_stays_within_bounds() {
+    let (cluster, catalog, spec, rows) = fixture(103);
+    let report = Session::run(
+        &catalog,
+        &cluster,
+        spec,
+        &SessionConfig {
+            initial_workers: 1,
+            max_workers: 6,
+            clients: 2,
+            buffer_per_worker: 2,
+            autoscale_every: Some(Duration::from_millis(2)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(report.peak_workers >= 1 && report.peak_workers <= 6);
+    assert_eq!(report.rows_delivered, rows);
+}
+
+#[test]
+fn multiple_clients_split_the_stream_completely() {
+    let (cluster, catalog, spec, rows) = fixture(104);
+    for clients in [1usize, 2, 3] {
+        let report = Session::run(
+            &catalog,
+            &cluster,
+            spec.clone(),
+            &SessionConfig {
+                initial_workers: 3,
+                max_workers: 3,
+                clients,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.rows_delivered, rows, "clients={clients}");
+    }
+}
+
+#[test]
+fn paced_trainer_demand_controls_session_rate() {
+    let (cluster, catalog, spec, rows) = fixture(105);
+    let report = Session::run(
+        &catalog,
+        &cluster,
+        spec,
+        &SessionConfig {
+            client_rows_per_sec: Some(900.0),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(report.rows_delivered, rows);
+    // Must take at least rows/rate seconds.
+    assert!(
+        report.wall_secs >= rows as f64 / 900.0 * 0.8,
+        "wall {:.3}s",
+        report.wall_secs
+    );
+}
+
+#[test]
+fn stale_heartbeats_requeue_after_reap() {
+    let (cluster, catalog, spec, _) = fixture(106);
+    let master = Master::new(&catalog, &cluster, spec).unwrap();
+    let w = master.register_worker();
+    let s1 = master.fetch_split(w).unwrap();
+    let _s2 = master.fetch_split(w).unwrap();
+    std::thread::sleep(Duration::from_millis(25));
+    assert_eq!(master.reap_expired(Duration::from_millis(5)), 2);
+    // A fresh worker finishes everything, including the reaped splits.
+    let w2 = master.register_worker();
+    let mut n = 0;
+    while let Some(s) = master.fetch_split(w2) {
+        master.complete_split(w2, s.id);
+        n += 1;
+    }
+    assert!(n >= 2);
+    assert!(master.is_done());
+    let _ = s1;
+}
+
+#[test]
+fn tensor_cache_serves_second_epoch_without_storage() {
+    use dsi::dpp::{TensorCache, WorkerCore};
+    use dsi::metrics::EtlMetrics;
+    let (cluster, catalog, spec, _) = fixture(107);
+    let cache = TensorCache::new(64 << 20);
+    let spec = Arc::new(spec);
+
+    let run_epoch = |metrics: Arc<EtlMetrics>| {
+        let master = Master::new(&catalog, &cluster, (*spec).clone()).unwrap();
+        let w = master.register_worker();
+        let mut core =
+            WorkerCore::new(spec.clone(), cluster.clone(), metrics)
+                .with_tensor_cache(cache.clone());
+        let mut batches = Vec::new();
+        while let Some(split) = master.fetch_split(w) {
+            batches.extend(core.process_split(&split).unwrap());
+            master.complete_split(w, split.id);
+        }
+        batches
+    };
+
+    let m1 = Arc::new(EtlMetrics::default());
+    cluster.reset_stats();
+    let first = run_epoch(m1.clone());
+    let storage_first = cluster.stats().reads;
+    assert!(storage_first > 0);
+
+    let m2 = Arc::new(EtlMetrics::default());
+    cluster.reset_stats();
+    let second = run_epoch(m2.clone());
+    let storage_second = cluster.stats().reads;
+
+    // Second epoch: full cache hits — identical tensors, no data-plane
+    // storage I/O (only the Master's 4 control-plane footer fetches),
+    // no extract/transform time.
+    assert!(
+        storage_second <= 4,
+        "cached epoch read data: {storage_second} reads"
+    );
+    assert!(storage_first > storage_second * 5);
+    assert_eq!(m1.samples.get(), m2.samples.get());
+    assert_eq!(first.len(), second.len());
+    for (a, b) in first.iter().zip(second.iter()) {
+        assert_eq!(a.bytes, b.bytes);
+    }
+    assert!(cache.hit_rate() > 0.49, "rate {}", cache.hit_rate());
+    assert_eq!(m2.t_transform.secs(), 0.0);
+}

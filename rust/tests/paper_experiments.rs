@@ -1,0 +1,114 @@
+//! Smoke + shape tests over the paper experiment drivers at tiny scale:
+//! every driver must run, and the qualitative claims the paper makes must
+//! hold in the reproduction.
+
+use dsi::config::SimScale;
+use dsi::paper;
+use dsi::util::json::Json;
+
+fn tiny() -> SimScale {
+    SimScale {
+        rows_per_partition: 128,
+        materialized_features: 64,
+        partitions: 2,
+    }
+}
+
+#[test]
+fn every_experiment_runs_at_tiny_scale() {
+    for exp in paper::ALL_EXPERIMENTS {
+        // table12/power at tiny scale use the smoke-test path.
+        let scale = if *exp == "table12" || *exp == "power" {
+            SimScale {
+                rows_per_partition: 128,
+                materialized_features: 64,
+                partitions: 2,
+            }
+        } else {
+            tiny()
+        };
+        let out = paper::run(exp, &scale, 7);
+        assert!(out.is_ok(), "{exp} failed: {:?}", out.err());
+    }
+}
+
+#[test]
+fn fig1_dsi_power_is_substantial() {
+    let j = paper::run("fig1", &tiny(), 11).unwrap();
+    for rm in ["RM1", "RM2", "RM3"] {
+        let o = j.get(rm).unwrap();
+        let storage = o.get("storage").unwrap().as_f64().unwrap();
+        let preproc = o.get("preproc").unwrap().as_f64().unwrap();
+        assert!(
+            storage + preproc > 0.3,
+            "{rm}: DSI fraction {}",
+            storage + preproc
+        );
+    }
+}
+
+#[test]
+fn fig2_growth_factors() {
+    let j = paper::run("fig2", &tiny(), 1).unwrap();
+    assert!((j.get("size_growth").unwrap().as_f64().unwrap() - 2.0).abs() < 0.1);
+    assert!((j.get("bw_growth").unwrap().as_f64().unwrap() - 4.0).abs() < 0.2);
+}
+
+#[test]
+fn fig5_shows_peaks() {
+    let j = paper::run("fig5", &tiny(), 5).unwrap();
+    assert!(j.get("peak_over_mean").unwrap().as_f64().unwrap() > 1.3);
+}
+
+#[test]
+fn fig6_binpacking_saves_copies() {
+    let j = paper::run("fig6", &tiny(), 5).unwrap();
+    let balanced = j.get("balanced_copies").unwrap().as_f64().unwrap();
+    let packed = j.get("packed_copies").unwrap().as_f64().unwrap();
+    assert!(packed < balanced);
+}
+
+#[test]
+fn table8_demand_ordering_matches_paper() {
+    let j = paper::run("table8", &tiny(), 13).unwrap();
+    if let Some(Json::Arr(gbps)) = j.get("gbps") {
+        let v: Vec<f64> = gbps.iter().map(|x| x.as_f64().unwrap()).collect();
+        assert!(v[0] > v[2] && v[2] > v[1], "RM1 > RM3 > RM2: {v:?}");
+    } else {
+        panic!("missing gbps");
+    }
+}
+
+#[test]
+fn table12_smoke_shape() {
+    let j = paper::run("table12", &tiny(), 42).unwrap();
+    let dpp: Vec<f64> = match j.get("dpp") {
+        Some(Json::Arr(a)) => a.iter().map(|x| x.as_f64().unwrap()).collect(),
+        _ => panic!("missing dpp"),
+    };
+    let storage: Vec<f64> = match j.get("storage") {
+        Some(Json::Arr(a)) => a.iter().map(|x| x.as_f64().unwrap()).collect(),
+        _ => panic!("missing storage"),
+    };
+    // Minimal invariants that must hold even at smoke scale:
+    assert!((dpp[0] - 1.0).abs() < 1e-9);
+    assert!(dpp[1] > 1.0, "FF must speed up the worker: {dpp:?}");
+    assert!(
+        storage[1] < 0.6,
+        "FF must hurt storage throughput: {storage:?}"
+    );
+    assert!(
+        storage[4] > storage[1] * 2.0,
+        "CR must recover storage: {storage:?}"
+    );
+}
+
+#[test]
+fn fig10_overread_story() {
+    let j = paper::run("fig10", &tiny(), 3).unwrap();
+    let read = |k: &str| {
+        j.get(k).unwrap().get("read").unwrap().as_f64().unwrap()
+    };
+    assert!(read("FF") <= read("map (baseline)"));
+    assert!(read("FF+CR+FR") <= read("FF+CR"));
+}

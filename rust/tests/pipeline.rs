@@ -1,0 +1,176 @@
+//! End-to-end pipeline integration: offline generation → warehouse →
+//! DWRF/Tectonic → DPP session → tensors, exercising every subsystem
+//! together under the standard production configuration.
+
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::datagen::build_dataset;
+use dsi::dpp::{PipelineOptions, Session, SessionConfig, SessionSpec};
+use dsi::dwrf::{Encoding, Projection, WriterOptions};
+use dsi::schema::FeatureKind;
+use dsi::tectonic::{Cluster, ClusterConfig};
+use dsi::transforms::dag::session_dag;
+use dsi::util::rng::Pcg32;
+use dsi::warehouse::Catalog;
+use std::sync::Arc;
+
+struct WorldFixture {
+    cluster: Arc<Cluster>,
+    catalog: Catalog,
+    table: String,
+    spec: SessionSpec,
+    total_rows: u64,
+}
+
+fn build(rm_id: RmId, encoding: Encoding, seed: u64) -> WorldFixture {
+    let rm = RmConfig::get(rm_id);
+    let scale = SimScale {
+        rows_per_partition: 256,
+        materialized_features: 64,
+        partitions: 3,
+    };
+    let mut rng = Pcg32::new(seed);
+    let cluster = Arc::new(Cluster::new(ClusterConfig {
+        chunk_bytes: 256 << 10,
+        ..Default::default()
+    }));
+    let catalog = Catalog::new();
+    let handle = build_dataset(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions {
+            encoding,
+            stripe_rows: 64,
+            ..Default::default()
+        },
+        seed,
+    )
+    .unwrap();
+    let take = (handle.schema.features.len() as f64 * rm.frac_feats_used())
+        .round()
+        .max(6.0) as usize;
+    let projection =
+        handle
+            .schema
+            .sample_projection(&mut rng, take, rm.popularity_zipf_s);
+    let dag = session_dag(&mut rng, &rm, &handle.schema, &projection);
+    let mut spec = SessionSpec::from_dag(&handle.table_name, 0, u32::MAX, dag, 32);
+    spec.projection = Projection::new(projection);
+    let total_rows = catalog.get(&handle.table_name).unwrap().total_rows();
+    WorldFixture {
+        cluster,
+        catalog,
+        table: handle.table_name,
+        spec,
+        total_rows,
+    }
+}
+
+#[test]
+fn full_pipeline_flattened_encoding() {
+    let w = build(RmId::Rm1, Encoding::Flattened, 1);
+    let report = Session::run(
+        &w.catalog,
+        &w.cluster,
+        w.spec.clone(),
+        &SessionConfig {
+            initial_workers: 3,
+            max_workers: 3,
+            clients: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(report.rows_delivered, w.total_rows);
+    assert!(report.storage_reads > 0);
+    assert!(report.client_rx_bytes > 0);
+    assert!(report.tensor_tx_bytes >= report.client_rx_bytes);
+}
+
+#[test]
+fn full_pipeline_map_encoding_baseline() {
+    let w = build(RmId::Rm2, Encoding::Map, 2);
+    let mut spec = w.spec.clone();
+    spec.pipeline = PipelineOptions::baseline();
+    let report = Session::run(
+        &w.catalog,
+        &w.cluster,
+        spec,
+        &SessionConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(report.rows_delivered, w.total_rows);
+}
+
+#[test]
+fn pipeline_variants_agree_on_row_count() {
+    // Every PipelineOptions combination must deliver exactly the dataset.
+    let w = build(RmId::Rm3, Encoding::Flattened, 3);
+    for coalesce in [None, Some(1u64 << 20)] {
+        for fast in [false, true] {
+            for flatmap in [false, true] {
+                let mut spec = w.spec.clone();
+                spec.pipeline = PipelineOptions {
+                    coalesce,
+                    fast_decode: fast,
+                    flatmap,
+                };
+                let report = Session::run(
+                    &w.catalog,
+                    &w.cluster,
+                    spec,
+                    &SessionConfig::default(),
+                )
+                .unwrap();
+                assert_eq!(
+                    report.rows_delivered, w.total_rows,
+                    "coalesce={coalesce:?} fast={fast} flatmap={flatmap}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn replication_survives_dataset_build() {
+    let w = build(RmId::Rm3, Encoding::Flattened, 4);
+    assert_eq!(
+        w.cluster.stored_bytes(),
+        3 * w.cluster.logical_bytes(),
+        "triplicate replication"
+    );
+}
+
+#[test]
+fn labels_flow_through_to_tensors() {
+    // The CTR labels produced by the ETL join must arrive in tensors with
+    // a plausible positive rate.
+    use dsi::dpp::{Master, WorkerCore};
+    use dsi::metrics::EtlMetrics;
+    let w = build(RmId::Rm1, Encoding::Flattened, 5);
+    let spec = Arc::new(w.spec.clone());
+    let master = Master::new(&w.catalog, &w.cluster, (*spec).clone()).unwrap();
+    let id = master.register_worker();
+    let metrics = Arc::new(EtlMetrics::default());
+    let mut core = WorkerCore::new(spec.clone(), w.cluster.clone(), metrics);
+    let cipher = dsi::dwrf::crypto::StreamCipher::for_table(&w.table);
+    let mut pos = 0usize;
+    let mut total = 0usize;
+    while let Some(split) = master.fetch_split(id) {
+        for wire in core.process_split(&split).unwrap() {
+            let tb = dsi::dpp::TensorBatch::from_wire(&cipher, wire.seq, &wire.bytes)
+                .unwrap();
+            pos += tb.labels.iter().filter(|&&l| l == 1.0).count();
+            total += tb.labels.len();
+            assert!(tb.labels.iter().all(|&l| l == 0.0 || l == 1.0));
+        }
+        master.complete_split(id, split.id);
+    }
+    assert_eq!(total as u64, w.total_rows);
+    let rate = pos as f64 / total as f64;
+    assert!(
+        (0.02..0.4).contains(&rate),
+        "CTR-like positive rate, got {rate}"
+    );
+}

@@ -1,0 +1,310 @@
+//! Property-based tests over coordinator and format invariants (using the
+//! in-repo `util::prop` mini-harness; proptest is unavailable offline).
+
+use dsi::data::{ColumnarBatch, Sample, SparseValue};
+use dsi::dpp::client::partition_round_robin;
+use dsi::dpp::split::splits_for_partition;
+use dsi::dpp::TensorBatch;
+use dsi::dwrf::plan::{coalesce, IoRange};
+use dsi::dwrf::{DecodeMode, DwrfReader, DwrfWriter, Encoding, Projection, WriterOptions};
+use dsi::schema::FeatureId;
+use dsi::tectonic::FileId;
+use dsi::transforms::{Op, Value};
+use dsi::util::bytes::{get_varint, put_varint, unzigzag, zigzag};
+use dsi::util::prop::{check, Gen};
+
+#[test]
+fn prop_varint_roundtrip() {
+    check("varint roundtrip", 500, |g| {
+        let v = g.u64(0..u64::MAX);
+        let mut buf = Vec::new();
+        put_varint(&mut buf, v);
+        let (back, n) = get_varint(&buf).ok_or("decode failed")?;
+        if back != v || n != buf.len() {
+            return Err(format!("{v} -> {back}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zigzag_roundtrip() {
+    check("zigzag roundtrip", 500, |g| {
+        let v = g.u64(0..u64::MAX) as i64;
+        if unzigzag(zigzag(v)) != v {
+            return Err(format!("{v}"));
+        }
+        Ok(())
+    });
+}
+
+fn random_samples(g: &mut Gen) -> Vec<Sample> {
+    let rows = g.usize(1..40);
+    (0..rows)
+        .map(|r| {
+            let mut s = Sample {
+                label: if g.bool() { 1.0 } else { 0.0 },
+                timestamp: g.u64(0..1 << 40),
+                ..Default::default()
+            };
+            for fid in 0..g.usize(0..6) as u32 {
+                if g.bool() {
+                    s.dense.push((FeatureId(fid), g.f32()));
+                }
+            }
+            for fid in 10..(10 + g.usize(0..5)) as u32 {
+                if g.bool() {
+                    // Empty lists are semantically "absent" (the formats
+                    // collapse them, like production); never emit them.
+                    let ids = g.vec_u64(0..1 << 30, 12);
+                    if !ids.is_empty() {
+                        s.sparse
+                            .push((FeatureId(fid), SparseValue::ids(ids)));
+                    }
+                }
+            }
+            let _ = r;
+            s.sort_features();
+            s
+        })
+        .collect()
+}
+
+#[test]
+fn prop_dwrf_roundtrip_any_samples_both_encodings() {
+    check("dwrf roundtrip", 60, |g| {
+        let samples = random_samples(g);
+        let dense_ids: Vec<FeatureId> = (0..6).map(FeatureId).collect();
+        let sparse_ids: Vec<FeatureId> = (10..15).map(FeatureId).collect();
+        let stripe_rows = g.usize(1..16);
+        for encoding in [Encoding::Map, Encoding::Flattened] {
+            let mut w = DwrfWriter::new(
+                "prop",
+                dense_ids.clone(),
+                sparse_ids.clone(),
+                WriterOptions {
+                    encoding,
+                    stripe_rows,
+                    ..Default::default()
+                },
+            );
+            w.write_all(samples.clone());
+            let bytes = w.finish();
+            let r = DwrfReader::open_table(&bytes, "prop")
+                .map_err(|e| e.to_string())?;
+            let proj = Projection::new(
+                dense_ids.iter().chain(sparse_ids.iter()).copied(),
+            );
+            let plan = r.plan(&proj, None);
+            let bufs = r.fetch_local(&bytes, &plan);
+            let mut back = Vec::new();
+            for s in 0..r.meta.stripes.len() {
+                back.extend(
+                    r.decode_stripe_rows(s, &bufs, &proj, DecodeMode::default())
+                        .map_err(|e| e.to_string())?,
+                );
+            }
+            if back != samples {
+                return Err(format!(
+                    "mismatch ({encoding:?}, {} rows, stripe {stripe_rows})",
+                    samples.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coalesce_covers_all_extents_within_window() {
+    check("coalesce coverage", 300, |g| {
+        let n = g.usize(0..40);
+        let mut extents = Vec::new();
+        let mut off = 0u64;
+        for _ in 0..n {
+            off += g.u64(0..5000);
+            let len = g.u64(1..3000);
+            extents.push(IoRange { offset: off, len });
+            off += len;
+        }
+        let window = g.u64(1000..200_000);
+        let ios = coalesce(extents.clone(), Some(window));
+        // Every extent fully covered by exactly one I/O.
+        for e in &extents {
+            let covering = ios
+                .iter()
+                .filter(|io| e.offset >= io.offset && e.end() <= io.end())
+                .count();
+            if covering != 1 {
+                return Err(format!("extent {e:?} covered by {covering} ios"));
+            }
+        }
+        // No I/O exceeds the window (single extents may).
+        for io in &ios {
+            if io.len > window
+                && !extents
+                    .iter()
+                    .any(|e| e.offset == io.offset && e.len == io.len)
+            {
+                return Err(format!("io {io:?} exceeds window {window}"));
+            }
+        }
+        // I/Os are sorted and non-overlapping.
+        for w in ios.windows(2) {
+            if w[1].offset < w[0].end() {
+                return Err("overlapping ios".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_round_robin_is_balanced_partition() {
+    check("client routing partition", 300, |g| {
+        let workers = g.usize(0..50);
+        let clients = g.usize(1..10);
+        let parts = partition_round_robin(workers, clients);
+        let mut seen = vec![0usize; workers];
+        for p in &parts {
+            for &w in p {
+                seen[w] += 1;
+            }
+        }
+        if seen.iter().any(|&c| c != 1) {
+            return Err("worker not assigned exactly once".into());
+        }
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        let (mn, mx) = (
+            sizes.iter().min().copied().unwrap_or(0),
+            sizes.iter().max().copied().unwrap_or(0),
+        );
+        if mx - mn > 1 {
+            return Err(format!("unbalanced: {sizes:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_splits_tile_stripes_exactly() {
+    check("split tiling", 300, |g| {
+        let stripes: Vec<u32> =
+            (0..g.usize(0..30)).map(|_| g.u64(1..500) as u32).collect();
+        let per = g.usize(1..8);
+        let mut next = g.u64(0..1000);
+        let splits =
+            splits_for_partition(&mut next, FileId(1), 0, &stripes, per);
+        let mut covered = vec![0usize; stripes.len()];
+        let mut rows = 0u64;
+        for s in &splits {
+            for k in s.stripe_start..s.stripe_start + s.stripe_count {
+                covered[k] += 1;
+            }
+            rows += s.rows;
+        }
+        if covered.iter().any(|&c| c != 1) {
+            return Err("stripe not covered exactly once".into());
+        }
+        let want: u64 = stripes.iter().map(|&r| r as u64).sum();
+        if rows != want {
+            return Err(format!("row mass {rows} != {want}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tensor_batch_wire_roundtrip() {
+    check("tensor wire roundtrip", 150, |g| {
+        let rows = g.usize(1..20);
+        let nd = g.usize(0..5);
+        let dense: Vec<f32> = (0..rows * nd).map(|_| g.f32()).collect();
+        let mut sparse = Vec::new();
+        for f in 0..g.usize(0..4) {
+            let mut offsets = vec![0u32];
+            let mut ids = Vec::new();
+            for _ in 0..rows {
+                ids.extend(g.vec_u64(0..1 << 40, 6));
+                offsets.push(ids.len() as u32);
+            }
+            sparse.push((FeatureId(100 + f as u32), offsets, ids));
+        }
+        let tb = TensorBatch {
+            rows,
+            dense,
+            dense_names: (0..nd as u32).map(FeatureId).collect(),
+            sparse,
+            labels: (0..rows).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect(),
+        };
+        let back = TensorBatch::deserialize(&tb.serialize())
+            .map_err(|e| e.to_string())?;
+        if back != tb {
+            return Err("wire mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transform_ops_preserve_row_count() {
+    check("transforms preserve rows", 200, |g| {
+        let rows = g.usize(1..30);
+        let mut offsets = vec![0u32];
+        let mut ids = Vec::new();
+        for _ in 0..rows {
+            ids.extend(g.vec_u64(0..1 << 20, 8));
+            offsets.push(ids.len() as u32);
+        }
+        let sparse = Value::Sparse {
+            offsets,
+            ids,
+            scores: None,
+        };
+        let dense = Value::Dense((0..rows).map(|_| g.f32()).collect());
+        let ops: Vec<(Op, &Value)> = vec![
+            (
+                Op::SigridHash {
+                    salt: g.u64(0..99),
+                    modulus: g.u64(1..1 << 20),
+                },
+                &sparse,
+            ),
+            (Op::FirstX { x: g.usize(0..20) }, &sparse),
+            (Op::Enumerate, &sparse),
+            (
+                Op::PositiveModulus {
+                    modulus: g.u64(1..1000),
+                },
+                &sparse,
+            ),
+            (Op::NGram { n: g.usize(1..4) }, &sparse),
+            (Op::Clamp { lo: -1.0, hi: 1.0 }, &dense),
+            (Op::Logit { eps: 1e-4 }, &dense),
+            (Op::BoxCox { lambda: 0.5 }, &dense),
+            (Op::Onehot { buckets: 32 }, &dense),
+        ];
+        for (op, input) in ops {
+            let out = op.apply(&[input]).map_err(|e| e.to_string())?;
+            if out.rows() != rows {
+                return Err(format!("{} changed rows", op.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_columnar_row_conversion_is_lossless() {
+    check("columnar<->rows lossless", 120, |g| {
+        let samples = random_samples(g);
+        let dense_ids: Vec<FeatureId> = (0..6).map(FeatureId).collect();
+        let sparse_ids: Vec<FeatureId> = (10..15).map(FeatureId).collect();
+        let batch =
+            ColumnarBatch::from_samples(&samples, &dense_ids, &sparse_ids);
+        if batch.to_samples() != samples {
+            return Err("conversion lost data".into());
+        }
+        Ok(())
+    });
+}

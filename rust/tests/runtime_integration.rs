@@ -1,0 +1,117 @@
+//! Integration: the AOT bridge. Loads the HLO-text artifacts produced by
+//! `make artifacts`, compiles them on the PJRT CPU client, and verifies
+//! numerics against expectations — the proof that L1 (Pallas) and L2
+//! (JAX) compose with L3 (Rust) with no Python at runtime.
+
+use dsi::runtime::{artifacts_available, artifacts_dir, DlrmBatch, DlrmRuntime};
+use dsi::util::rng::Pcg32;
+
+fn runtime() -> Option<DlrmRuntime> {
+    if !artifacts_available() {
+        eprintln!("skipping runtime integration: run `make artifacts`");
+        return None;
+    }
+    Some(DlrmRuntime::load(&artifacts_dir()).expect("load artifacts"))
+}
+
+#[test]
+fn dense_xform_kernel_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let m = &rt.manifest;
+    let mut rng = Pcg32::new(1);
+    let x: Vec<f32> = (0..m.batch * m.n_dense)
+        .map(|_| rng.normal_ms(0.0, 3.0) as f32)
+        .collect();
+    let mean = vec![0f32; m.n_dense];
+    let std = vec![2f32; m.n_dense];
+    let y = rt.dense_xform(&x, &mean, &std).unwrap();
+    assert_eq!(y.len(), x.len());
+    for (i, (&xi, &yi)) in x.iter().zip(y.iter()).enumerate() {
+        let z = (xi - 0.0) / 2.0;
+        let want = (z.signum() * z.abs().ln_1p()).clamp(-8.0, 8.0);
+        assert!(
+            (yi - want).abs() < 1e-5,
+            "elem {i}: kernel {yi} vs ref {want}"
+        );
+    }
+}
+
+#[test]
+fn fwd_loss_is_finite_and_reasonable() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.init_params(7).unwrap();
+    let mut rng = Pcg32::new(2);
+    let batch = DlrmBatch::synthetic(&rt.manifest, &mut rng);
+    let (loss, logits) = rt.fwd_loss(&params, &batch).unwrap();
+    assert!(loss.is_finite());
+    // Untrained BCE should hover near ln 2.
+    assert!((0.2..2.0).contains(&loss), "loss {loss}");
+    assert_eq!(logits.len(), rt.manifest.batch);
+    assert!(logits.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    let Some(rt) = runtime() else { return };
+    let mut params = rt.init_params(7).unwrap();
+    let mut rng = Pcg32::new(3);
+    let batch = DlrmBatch::synthetic(&rt.manifest, &mut rng);
+    let (loss0, _) = rt.fwd_loss(&params, &batch).unwrap();
+    let mut last = loss0;
+    for _ in 0..30 {
+        let (p, l) = rt.train_step(params, &batch).unwrap();
+        params = p;
+        last = l;
+    }
+    assert!(
+        last < loss0 * 0.9,
+        "loss did not drop: {loss0} -> {last}"
+    );
+}
+
+#[test]
+fn training_loss_curve_descends_across_batches() {
+    let Some(rt) = runtime() else { return };
+    let mut params = rt.init_params(11).unwrap();
+    let mut rng = Pcg32::new(5);
+    // Learnable task (labels depend on dense feature 0): loss must fall
+    // across *different* batches, i.e. the model generalizes.
+    let mut first5 = 0.0;
+    let mut last5 = 0.0;
+    let steps = 100;
+    for step in 0..steps {
+        let batch = DlrmBatch::synthetic(&rt.manifest, &mut rng);
+        let (p, loss) = rt.train_step(params, &batch).unwrap();
+        params = p;
+        if step < 5 {
+            first5 += loss;
+        }
+        if step >= steps - 5 {
+            last5 += loss;
+        }
+    }
+    assert!(
+        last5 < first5 * 0.9,
+        "no learning: first5 {first5} last5 {last5}"
+    );
+}
+
+#[test]
+fn params_stay_finite_through_training() {
+    let Some(rt) = runtime() else { return };
+    let mut params = rt.init_params(13).unwrap();
+    let mut rng = Pcg32::new(17);
+    for _ in 0..10 {
+        let batch = DlrmBatch::synthetic(&rt.manifest, &mut rng);
+        let (p, loss) = rt.train_step(params, &batch).unwrap();
+        assert!(loss.is_finite());
+        params = p;
+    }
+    for (i, p) in params.iter().enumerate() {
+        let v = p.to_vec::<f32>().unwrap();
+        assert!(
+            v.iter().all(|x| x.is_finite()),
+            "param {i} has non-finite values"
+        );
+    }
+}

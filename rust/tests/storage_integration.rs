@@ -1,0 +1,196 @@
+//! Storage-stack integration: DWRF files through the Tectonic cluster,
+//! optimization mechanisms end to end, and device-model invariants.
+
+use dsi::config::{DeviceSpec, RmConfig, RmId, SimScale};
+use dsi::datagen::build_dataset;
+use dsi::dpp::Master;
+use dsi::dwrf::plan::COALESCE_WINDOW;
+use dsi::dwrf::{DecodeMode, DwrfReader, Encoding, Projection, WriterOptions};
+use dsi::schema::FeatureId;
+use dsi::tectonic::{Cluster, ClusterConfig};
+use dsi::warehouse::Catalog;
+
+fn build(encoding: Encoding, seed: u64) -> (Cluster, Catalog, String, Vec<FeatureId>) {
+    let rm = RmConfig::get(RmId::Rm1);
+    let scale = SimScale {
+        rows_per_partition: 256,
+        materialized_features: 96,
+        partitions: 2,
+    };
+    let cluster = Cluster::new(ClusterConfig {
+        chunk_bytes: 256 << 10,
+        ..Default::default()
+    });
+    let catalog = Catalog::new();
+    let h = build_dataset(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions {
+            encoding,
+            stripe_rows: 64,
+            ..Default::default()
+        },
+        seed,
+    )
+    .unwrap();
+    let proj: Vec<FeatureId> =
+        h.schema.features.iter().take(12).map(|f| f.id).collect();
+    (cluster, catalog, h.table_name, proj)
+}
+
+#[test]
+fn remote_footer_fetch_matches_local_parse() {
+    let (cluster, catalog, table, _) = build(Encoding::Flattened, 7);
+    let t = catalog.get(&table).unwrap();
+    for p in &t.partitions {
+        // Remote path: ranged tail reads through the device model.
+        let meta = Master::fetch_meta(&cluster, p.file).unwrap();
+        // Local path: read the whole file and parse.
+        let bytes = cluster
+            .read_range(
+                p.file,
+                dsi::dwrf::IoRange {
+                    offset: 0,
+                    len: p.bytes,
+                },
+            )
+            .unwrap();
+        let local = DwrfReader::open_table(&bytes, &table).unwrap();
+        assert_eq!(meta.total_rows, local.meta.total_rows);
+        assert_eq!(meta.stripes.len(), local.meta.stripes.len());
+    }
+}
+
+#[test]
+fn planned_reads_decode_through_cluster() {
+    let (cluster, catalog, table, proj) = build(Encoding::Flattened, 8);
+    let t = catalog.get(&table).unwrap();
+    let projection = Projection::new(proj);
+    let mut rows = 0u64;
+    for p in &t.partitions {
+        let meta = Master::fetch_meta(&cluster, p.file).unwrap();
+        let reader = DwrfReader::from_meta(meta, &table);
+        let plan = reader.plan(&projection, Some(COALESCE_WINDOW));
+        for sp in &plan.stripes {
+            let bufs = cluster.execute_ios(p.file, &sp.ios).unwrap();
+            let batch = reader
+                .decode_stripe_columnar(
+                    sp.stripe,
+                    &bufs,
+                    &projection,
+                    DecodeMode::default(),
+                )
+                .unwrap();
+            rows += batch.num_rows as u64;
+        }
+    }
+    assert_eq!(rows, t.total_rows());
+}
+
+#[test]
+fn coalescing_reduces_iops_at_equal_useful_bytes() {
+    let (cluster, catalog, table, proj) = build(Encoding::Flattened, 9);
+    let t = catalog.get(&table).unwrap();
+    let projection = Projection::new(proj);
+    let p = &t.partitions[0];
+    let meta = Master::fetch_meta(&cluster, p.file).unwrap();
+    let reader = DwrfReader::from_meta(meta, &table);
+    let plain = reader.plan(&projection, None);
+    let coalesced = reader.plan(&projection, Some(COALESCE_WINDOW));
+    assert_eq!(plain.useful_bytes, coalesced.useful_bytes);
+    assert!(coalesced.num_ios() < plain.num_ios());
+    assert!(coalesced.read_bytes >= plain.read_bytes);
+
+    // Device time: execute both against the cluster and compare.
+    cluster.reset_stats();
+    for sp in &plain.stripes {
+        cluster.execute_ios(p.file, &sp.ios).unwrap();
+    }
+    let t_plain = cluster.stats().device_secs;
+    cluster.reset_stats();
+    for sp in &coalesced.stripes {
+        cluster.execute_ios(p.file, &sp.ios).unwrap();
+    }
+    let t_coalesced = cluster.stats().device_secs;
+    assert!(
+        t_coalesced < t_plain,
+        "coalescing must cut device time: {t_coalesced} vs {t_plain}"
+    );
+}
+
+#[test]
+fn map_encoding_reads_more_than_flattened_under_projection() {
+    let (c1, cat1, t1, proj) = build(Encoding::Map, 10);
+    let (c2, cat2, t2, _) = build(Encoding::Flattened, 10);
+    let projection = Projection::new(proj);
+    let read_bytes = |cluster: &Cluster, catalog: &Catalog, table: &str| -> u64 {
+        let t = catalog.get(table).unwrap();
+        let mut total = 0;
+        for p in &t.partitions {
+            let meta = Master::fetch_meta(cluster, p.file).unwrap();
+            let reader = DwrfReader::from_meta(meta, table);
+            total += reader.plan(&projection, None).read_bytes;
+        }
+        total
+    };
+    let map_bytes = read_bytes(&c1, &cat1, &t1);
+    let flat_bytes = read_bytes(&c2, &cat2, &t2);
+    assert!(
+        flat_bytes * 2 < map_bytes,
+        "flattened {flat_bytes} should be well under map {map_bytes}"
+    );
+}
+
+#[test]
+fn ssd_cluster_shrugs_off_small_reads() {
+    // The §7.2 heterogeneous-media argument, end to end.
+    let mk = |device: DeviceSpec| {
+        let rm = RmConfig::get(RmId::Rm3);
+        let scale = SimScale::tiny();
+        let cluster = Cluster::new(ClusterConfig {
+            device,
+            chunk_bytes: 128 << 10,
+            ..Default::default()
+        });
+        let catalog = Catalog::new();
+        let h = build_dataset(
+            &cluster,
+            &catalog,
+            &rm,
+            &scale,
+            WriterOptions {
+                stripe_rows: 16,
+                ..Default::default()
+            },
+            11,
+        )
+        .unwrap();
+        (cluster, catalog, h.table_name)
+    };
+    let run = |cluster: &Cluster, catalog: &Catalog, table: &str| -> f64 {
+        let t = catalog.get(table).unwrap();
+        let projection = Projection::new(
+            t.schema.features.iter().take(6).map(|f| f.id),
+        );
+        cluster.reset_stats();
+        for p in &t.partitions {
+            let meta = Master::fetch_meta(cluster, p.file).unwrap();
+            let reader = DwrfReader::from_meta(meta, table);
+            let plan = reader.plan(&projection, None);
+            for sp in &plan.stripes {
+                cluster.execute_ios(p.file, &sp.ios).unwrap();
+            }
+        }
+        cluster.stats().device_secs
+    };
+    let (hc, hcat, ht) = mk(DeviceSpec::hdd());
+    let (sc, scat, st) = mk(DeviceSpec::ssd());
+    let hdd_secs = run(&hc, &hcat, &ht);
+    let ssd_secs = run(&sc, &scat, &st);
+    assert!(
+        hdd_secs / ssd_secs > 50.0,
+        "small-read workload: HDD {hdd_secs:.4}s vs SSD {ssd_secs:.6}s"
+    );
+}
