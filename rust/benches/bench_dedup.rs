@@ -1,0 +1,210 @@
+//! RecD-style dedup benchmark: the paper-style table of what end-to-end
+//! sample deduplication buys at each duplication factor — warehouse
+//! bytes stored, storage bytes read, and preprocessing rows transformed,
+//! DedupDWRF + dedup-aware DPP versus the flattened baseline on the
+//! *same* sample multiset. Also emits `target/dedup_results.json`
+//! alongside the other machine-readable paper tables.
+
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::datagen::build_dataset_dup;
+use dsi::dedup::scan_table;
+use dsi::dpp::{Master, SessionSpec, WorkerCore};
+use dsi::dwrf::{Encoding, WriterOptions};
+use dsi::metrics::{EtlMetrics, Table};
+use dsi::schema::{FeatureId, FeatureKind};
+use dsi::tectonic::{Cluster, ClusterConfig};
+use dsi::transforms::{Op, TransformDag};
+use dsi::util::json::Json;
+use dsi::util::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Instant;
+
+struct StageOut {
+    stored_bytes: u64,
+    read_bytes: u64,
+    transform_rows: u64,
+    samples: u64,
+    tensor_tx_bytes: u64,
+    wall_secs: f64,
+    observed_factor: f64,
+}
+
+fn run_stage(encoding: Encoding, dup: usize, seed: u64) -> StageOut {
+    let rm = RmConfig::get(RmId::Rm1);
+    let scale = SimScale {
+        rows_per_partition: 2048,
+        materialized_features: 128,
+        partitions: 2,
+    };
+    let cluster = Arc::new(Cluster::new(ClusterConfig {
+        chunk_bytes: 256 << 10,
+        ..Default::default()
+    }));
+    let catalog = dsi::warehouse::Catalog::new();
+    let h = build_dataset_dup(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions {
+            encoding,
+            stripe_rows: 256,
+            ..Default::default()
+        },
+        seed,
+        dup,
+    )
+    .expect("build dataset");
+    let stored_bytes = catalog.get(&h.table_name).unwrap().total_bytes();
+    let observed = scan_table(&cluster, &catalog, &h.table_name)
+        .expect("scan")
+        .within_partition()
+        .factor();
+
+    // A normalization session over ~25% of the features.
+    let mut rng = Pcg32::new(seed ^ 0xbeef);
+    let take = (h.schema.features.len() / 4).max(4);
+    let proj: Vec<FeatureId> = h.schema.sample_projection(&mut rng, take, 1.0);
+    let mut dag = TransformDag::default();
+    for &fid in &proj {
+        match h.schema.by_id(fid).map(|d| d.kind) {
+            Some(FeatureKind::Dense) => {
+                let i = dag.input_dense(fid);
+                let c = dag.apply(Op::Clamp { lo: -3.0, hi: 3.0 }, vec![i]);
+                dag.output(fid, c);
+            }
+            _ => {
+                let i = dag.input_sparse(fid);
+                let s = dag.apply(
+                    Op::SigridHash {
+                        salt: 7,
+                        modulus: 1 << 16,
+                    },
+                    vec![i],
+                );
+                dag.output(fid, s);
+            }
+        }
+    }
+    let spec = Arc::new(SessionSpec::from_dag(
+        &h.table_name,
+        0,
+        u32::MAX,
+        dag,
+        64,
+    ));
+
+    let master =
+        Master::new(&catalog, &cluster, (*spec).clone()).expect("master");
+    let w = master.register_worker();
+    let metrics = Arc::new(EtlMetrics::default());
+    let mut core = WorkerCore::new(spec, cluster.clone(), metrics.clone());
+    cluster.reset_stats();
+    let t = Instant::now();
+    while let Some(split) = master.fetch_split(w) {
+        core.process_split(&split).expect("process split");
+        master.complete_split(w, split.id);
+    }
+    StageOut {
+        stored_bytes,
+        read_bytes: metrics.storage_rx_bytes.get(),
+        transform_rows: metrics.transform_rows.get(),
+        samples: metrics.samples.get(),
+        tensor_tx_bytes: metrics.tensor_tx_bytes.get(),
+        wall_secs: t.elapsed().as_secs_f64(),
+        observed_factor: observed,
+    }
+}
+
+fn main() {
+    let seed = 17;
+    let mut table = Table::new(
+        "End-to-end dedup savings (DedupDWRF + dedup-aware DPP vs \
+         flattened baseline, RM1, 4096 rows)",
+        &[
+            "dup",
+            "observed",
+            "stored MB (flat/dedup)",
+            "stored x",
+            "read MB (flat/dedup)",
+            "read x",
+            "preproc rows (flat/dedup)",
+            "preproc x",
+            "wire x",
+        ],
+    );
+    let mut arr = Vec::new();
+    let mut crit_stored = 0.0;
+    let mut crit_preproc = 0.0;
+    for dup in [1usize, 2, 4, 8] {
+        let flat = run_stage(Encoding::Flattened, dup, seed);
+        let dd = run_stage(Encoding::Dedup, dup, seed);
+        assert_eq!(flat.samples, dd.samples, "both paths deliver every row");
+        let stored_x = flat.stored_bytes as f64 / dd.stored_bytes.max(1) as f64;
+        let read_x = flat.read_bytes as f64 / dd.read_bytes.max(1) as f64;
+        let preproc_x =
+            flat.transform_rows as f64 / dd.transform_rows.max(1) as f64;
+        let wire_x =
+            flat.tensor_tx_bytes as f64 / dd.tensor_tx_bytes.max(1) as f64;
+        if dup == 4 {
+            crit_stored = stored_x;
+            crit_preproc = preproc_x;
+        }
+        table.row(&[
+            format!("{dup}"),
+            format!("{:.2}", dd.observed_factor),
+            format!(
+                "{:.2}/{:.2}",
+                flat.stored_bytes as f64 / 1e6,
+                dd.stored_bytes as f64 / 1e6
+            ),
+            format!("{stored_x:.2}"),
+            format!(
+                "{:.2}/{:.2}",
+                flat.read_bytes as f64 / 1e6,
+                dd.read_bytes as f64 / 1e6
+            ),
+            format!("{read_x:.2}"),
+            format!("{}/{}", flat.transform_rows, dd.transform_rows),
+            format!("{preproc_x:.2}"),
+            format!("{wire_x:.2}"),
+        ]);
+        let mut j = Json::obj();
+        j.set("dup_factor", dup)
+            .set("observed_factor", dd.observed_factor)
+            .set("flat_stored_bytes", flat.stored_bytes)
+            .set("dedup_stored_bytes", dd.stored_bytes)
+            .set("stored_reduction", stored_x)
+            .set("flat_read_bytes", flat.read_bytes)
+            .set("dedup_read_bytes", dd.read_bytes)
+            .set("read_reduction", read_x)
+            .set("flat_preproc_rows", flat.transform_rows)
+            .set("dedup_preproc_rows", dd.transform_rows)
+            .set("preproc_reduction", preproc_x)
+            .set("wire_reduction", wire_x)
+            .set("flat_wall_secs", flat.wall_secs)
+            .set("dedup_wall_secs", dd.wall_secs);
+        arr.push(j);
+    }
+    table.print();
+    let pass = crit_stored >= 2.0 && crit_preproc >= 2.0;
+    println!(
+        "\ncriterion @ dup=4: stored-bytes reduction {crit_stored:.2}x, \
+         preprocessing-ops reduction {crit_preproc:.2}x (target >= 2x \
+         each): {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+    let mut out = Json::obj();
+    out.set("table", Json::Arr(arr));
+    out.set("criterion_pass", pass);
+    let _ = std::fs::create_dir_all("target");
+    let path = "target/dedup_results.json";
+    if std::fs::write(path, out.to_string_pretty()).is_ok() {
+        println!("wrote {path}");
+    }
+    // The CI smoke step relies on this exit code to catch regressions
+    // that erode the dedup savings below the acceptance criterion.
+    if !pass {
+        std::process::exit(1);
+    }
+}

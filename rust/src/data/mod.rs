@@ -310,6 +310,76 @@ impl ColumnarBatch {
         }
     }
 
+    /// Gather rows by index (repetition allowed) into a new batch — the
+    /// expansion step of the dedup pipeline: `idx` is an inverse index
+    /// over this batch's (unique) rows. Labels/timestamps are gathered
+    /// when present; callers with per-output-row metadata (the DedupDWRF
+    /// reader) overwrite them afterwards.
+    pub fn gather(&self, idx: &[u32]) -> ColumnarBatch {
+        let rows = idx.len();
+        let mut dense = Vec::with_capacity(self.dense.len());
+        for col in &self.dense {
+            // Rank of each source row among present rows (value cursor).
+            let n = col.present.len();
+            let mut rank = Vec::with_capacity(n);
+            let mut acc = 0usize;
+            for r in 0..n {
+                rank.push(acc);
+                if col.present.get(r) {
+                    acc += 1;
+                }
+            }
+            let mut present = Bitmap::new(rows);
+            let mut values = Vec::new();
+            for (i, &u) in idx.iter().enumerate() {
+                let u = u as usize;
+                if col.present.get(u) {
+                    present.set(i);
+                    values.push(col.values[rank[u]]);
+                }
+            }
+            dense.push(DenseColumn {
+                id: col.id,
+                present,
+                values,
+            });
+        }
+        let mut sparse = Vec::with_capacity(self.sparse.len());
+        for col in &self.sparse {
+            let mut offsets = Vec::with_capacity(rows + 1);
+            offsets.push(0u32);
+            let mut ids = Vec::new();
+            let mut scores = col.scores.as_ref().map(|_| Vec::new());
+            for &u in idx {
+                let u = u as usize;
+                ids.extend_from_slice(col.row(u));
+                if let (Some(out), Some(sc)) = (&mut scores, col.row_scores(u))
+                {
+                    out.extend_from_slice(sc);
+                }
+                offsets.push(ids.len() as u32);
+            }
+            sparse.push(SparseColumn {
+                id: col.id,
+                offsets,
+                ids,
+                scores,
+            });
+        }
+        let pick = |i: usize| -> usize { idx[i] as usize };
+        ColumnarBatch {
+            num_rows: rows,
+            dense,
+            sparse,
+            labels: (0..rows)
+                .map(|i| self.labels.get(pick(i)).copied().unwrap_or(0.0))
+                .collect(),
+            timestamps: (0..rows)
+                .map(|i| self.timestamps.get(pick(i)).copied().unwrap_or(0))
+                .collect(),
+        }
+    }
+
     pub fn approx_bytes(&self) -> usize {
         let d: usize = self
             .dense
@@ -400,6 +470,34 @@ mod tests {
         let col = &batch.sparse[0];
         assert_eq!(col.num_rows(), 4);
         assert_eq!(col.row(2), &[2, 3, 4]);
+    }
+
+    #[test]
+    fn gather_expands_rows_with_repetition() {
+        let samples: Vec<Sample> = (0..4).map(sample).collect();
+        let batch = ColumnarBatch::from_samples(
+            &samples,
+            &[FeatureId(0), FeatureId(2)],
+            &[FeatureId(10), FeatureId(11)],
+        );
+        let idx = vec![2u32, 0, 2, 3, 0];
+        let got = batch.gather(&idx);
+        assert_eq!(got.num_rows, 5);
+        let want: Vec<Sample> =
+            idx.iter().map(|&u| samples[u as usize].clone()).collect();
+        assert_eq!(got.to_samples(), want);
+    }
+
+    #[test]
+    fn gather_identity_is_noop() {
+        let samples: Vec<Sample> = (0..6).map(sample).collect();
+        let batch = ColumnarBatch::from_samples(
+            &samples,
+            &[FeatureId(0), FeatureId(2)],
+            &[FeatureId(10), FeatureId(11)],
+        );
+        let idx: Vec<u32> = (0..6).collect();
+        assert_eq!(batch.gather(&idx), batch);
     }
 
     #[test]

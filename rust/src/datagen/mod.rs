@@ -119,6 +119,41 @@ impl ServingSim {
         };
         (flog, elog)
     }
+
+    /// Serve one *session*: the user's feature payload is evaluated once
+    /// and fans out into `copies` impression logs — identical features,
+    /// distinct request ids/timestamps, independent outcomes. This is
+    /// the production duplication RecD exploits: payload-identical
+    /// samples whose labels/timestamps differ.
+    pub fn serve_session(
+        &mut self,
+        rng: &mut Pcg32,
+        copies: usize,
+    ) -> Vec<(FeatureLog, EventLog)> {
+        let (first_f, first_e) = self.serve(rng);
+        let mut out = Vec::with_capacity(copies.max(1));
+        out.push((first_f, first_e));
+        for _ in 1..copies.max(1) {
+            let request_id = self.next_request;
+            self.next_request += 1;
+            self.clock += 1 + rng.below(5);
+            let base = &out[0].0;
+            let flog = FeatureLog {
+                request_id,
+                timestamp: self.clock,
+                dense: base.dense.clone(),
+                sparse: base.sparse.clone(),
+                scored: base.scored.clone(),
+            };
+            let elog = EventLog {
+                request_id,
+                timestamp: self.clock + 30 + rng.below(600),
+                engaged: rng.chance(self.ctr),
+            };
+            out.push((flog, elog));
+        }
+        out
+    }
 }
 
 /// Generate one day-partition worth of labeled samples through the real
@@ -142,6 +177,43 @@ pub fn generate_partition_samples(
     etl::batch_join(&scribe, fstream, estream)
 }
 
+/// [`generate_partition_samples`] with a duplication factor: sessions fan
+/// out into a geometric-ish number of payload-identical impressions
+/// (mean `dup_factor`), scattered across the partition the way
+/// interleaved production logs are. `dup_factor <= 1` is exactly the
+/// duplication-free path (bit-identical output for a given seed).
+pub fn generate_partition_samples_dup(
+    rng: &mut Pcg32,
+    schema: &Schema,
+    rows: usize,
+    day: u32,
+    dup_factor: usize,
+) -> Vec<Sample> {
+    if dup_factor <= 1 {
+        return generate_partition_samples(rng, schema, rows, day);
+    }
+    let scribe = Scribe::new();
+    let mut sim = ServingSim::new(schema.clone(), 0.12, day as u64 * 86_400);
+    let fstream = "features";
+    let estream = "events";
+    let mut pairs = Vec::with_capacity(rows);
+    while pairs.len() < rows {
+        let copies = (rng.geometric(dup_factor as f64) as usize)
+            .min(rows - pairs.len())
+            .max(1);
+        pairs.extend(sim.serve_session(rng, copies));
+    }
+    // Scatter sessions: a session's impressions spread through the day's
+    // log instead of sitting adjacent (which generic compression could
+    // otherwise absorb within a stripe).
+    rng.shuffle(&mut pairs);
+    for (f, e) in pairs {
+        scribe.publish(fstream, Record::Feature(f));
+        scribe.publish(estream, Record::Event(e));
+    }
+    etl::batch_join(&scribe, fstream, estream)
+}
+
 /// A built dataset: catalog entry + where its partitions live.
 pub struct DatasetHandle {
     pub table_name: String,
@@ -158,6 +230,22 @@ pub fn build_dataset(
     writer_opts: WriterOptions,
     seed: u64,
 ) -> Result<DatasetHandle> {
+    build_dataset_dup(cluster, catalog, rm, scale, writer_opts, seed, 1)
+}
+
+/// [`build_dataset`] with a sample-duplication factor (see
+/// [`generate_partition_samples_dup`]): models the production session
+/// reuse the dedup subsystem exploits. Factor 1 is bit-identical to
+/// [`build_dataset`].
+pub fn build_dataset_dup(
+    cluster: &Cluster,
+    catalog: &Catalog,
+    rm: &RmConfig,
+    scale: &SimScale,
+    writer_opts: WriterOptions,
+    seed: u64,
+    dup_factor: usize,
+) -> Result<DatasetHandle> {
     let mut rng = Pcg32::new(seed);
     let schema = materialized_schema(&mut rng, rm, scale);
     let table_name = format!("{}_table", rm.id.name().to_lowercase());
@@ -170,11 +258,12 @@ pub fn build_dataset(
     });
     for day in 0..scale.partitions as u32 {
         let mut part_rng = rng.fork(day as u64);
-        let samples = generate_partition_samples(
+        let samples = generate_partition_samples_dup(
             &mut part_rng,
             &schema,
             scale.rows_per_partition,
             day,
+            dup_factor,
         );
         let mut writer = DwrfWriter::new(
             &table_name,
@@ -268,6 +357,54 @@ mod tests {
         let pos = samples.iter().filter(|s| s.label == 1.0).count();
         assert!(pos > 5 && pos < 80, "CTR-ish positive rate, got {pos}");
         assert!(samples.iter().all(|s| !s.dense.is_empty() || !s.sparse.is_empty()));
+    }
+
+    #[test]
+    fn dup_factor_injects_payload_duplicates() {
+        let mut rng = Pcg32::new(8);
+        let schema = Schema::synthetic(&mut rng, 10, 5, 0.6, 8.0);
+        let samples =
+            generate_partition_samples_dup(&mut rng, &schema, 300, 0, 4);
+        assert_eq!(samples.len(), 300);
+        let idx = crate::dedup::DedupIndex::analyze(&samples);
+        assert!(idx.factor() > 2.0, "realized dup factor {}", idx.factor());
+        // Duplicates carry independent labels: at CTR 0.12 a duplicated
+        // payload eventually sees both outcomes.
+        let pos = samples.iter().filter(|s| s.label == 1.0).count();
+        assert!(pos > 5, "positives {pos}");
+    }
+
+    #[test]
+    fn dup_factor_one_is_bit_identical_to_plain_generator() {
+        let mut rng = Pcg32::new(9);
+        let schema = Schema::synthetic(&mut rng, 10, 5, 0.6, 8.0);
+        let mut a = rng.fork(1);
+        let mut b = rng.fork(1);
+        let s1 = generate_partition_samples(&mut a, &schema, 50, 0);
+        let s2 = generate_partition_samples_dup(&mut b, &schema, 50, 0, 1);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn serve_session_copies_share_payload_not_identity() {
+        let mut rng = Pcg32::new(4);
+        let schema = Schema::synthetic(&mut rng, 8, 4, 0.9, 6.0);
+        let mut sim = ServingSim::new(schema, 0.5, 0);
+        let session = sim.serve_session(&mut rng, 5);
+        assert_eq!(session.len(), 5);
+        let first = &session[0].0;
+        for (f, e) in &session[1..] {
+            assert_eq!(f.dense, first.dense);
+            assert_eq!(f.sparse, first.sparse);
+            assert_eq!(f.scored, first.scored);
+            assert_ne!(f.request_id, first.request_id);
+            assert_eq!(e.request_id, f.request_id);
+        }
+        // Request ids unique across the session.
+        let mut ids: Vec<u64> = session.iter().map(|(f, _)| f.request_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 5);
     }
 
     #[test]

@@ -1,0 +1,326 @@
+//! Sample deduplication across the DSI pipeline (RecD-style).
+//!
+//! The paper's workload characterization shows training jobs "read and
+//! heavily filter massive and evolving datasets, resulting in popular
+//! features and samples used across training jobs". Production feature
+//! logs amplify this *within* a dataset too: one user session fans out
+//! into many impression samples that share an identical feature payload
+//! and differ only in label and timestamp. RecD (see PAPERS.md) exploits
+//! that duplication end-to-end; this module is the shared foundation:
+//!
+//! * content-addressed **payload fingerprinting** ([`Fnv64`],
+//!   [`sample_payload_fingerprint`]) — label- and timestamp-blind, so
+//!   "same session, different outcome" rows are recognized as duplicates;
+//! * **duplicate-run detection** ([`DedupIndex::analyze`]) — the inverse
+//!   index (row → unique payload) that the DedupDWRF encoding stores and
+//!   the dedup-aware DPP worker preprocesses by;
+//! * duplication **accounting** ([`DedupStats`]) and whole-warehouse
+//!   [`scan`]ning used by the paper-style dedup tables.
+//!
+//! Consumers:
+//! * [`crate::dwrf`] — `Encoding::Dedup` clusters duplicate sessions into
+//!   stripes and stores each unique payload once plus the inverse index;
+//! * [`crate::dpp`] — workers transform each unique payload once and ship
+//!   inverse-keyed wire batches; clients expand them back to full batches;
+//! * [`crate::datagen`] — generates warehouses with a configurable
+//!   duplication factor so the savings are measurable end-to-end.
+
+pub mod scan;
+
+pub use scan::{scan_table, PartitionDedup, TableDedupReport};
+
+use crate::data::Sample;
+use std::collections::HashMap;
+
+/// Minimal streaming FNV-1a 64-bit hasher. Used for content fingerprints
+/// (samples, session specs) where we need determinism across processes —
+/// `std::hash` makes no such guarantee.
+#[derive(Clone, Debug)]
+pub struct Fnv64 {
+    h: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64 {
+            h: 0xcbf2_9ce4_8422_2325,
+        }
+    }
+
+    #[inline]
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    #[inline]
+    pub fn write_u8(&mut self, v: u8) {
+        self.write(&[v]);
+    }
+
+    #[inline]
+    pub fn write_u32(&mut self, v: u32) {
+        self.write(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Hash the bit pattern (stable for -0.0/NaN payloads, unlike `==`).
+    #[inline]
+    pub fn write_f32(&mut self, v: f32) {
+        self.write_u32(v.to_bits());
+    }
+
+    #[inline]
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+/// Content fingerprint of a sample's *feature payload*: dense + sparse
+/// maps only. Label and timestamp are deliberately excluded — duplicate
+/// sessions produce distinct outcomes/times, and the DedupDWRF encoding
+/// stores those per-row anyway.
+pub fn sample_payload_fingerprint(s: &Sample) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(s.dense.len() as u64);
+    for (fid, v) in &s.dense {
+        h.write_u32(fid.0);
+        h.write_f32(*v);
+    }
+    h.write_u64(s.sparse.len() as u64);
+    for (fid, v) in &s.sparse {
+        h.write_u32(fid.0);
+        h.write_u64(v.ids.len() as u64);
+        for &id in &v.ids {
+            h.write_u64(id);
+        }
+        match &v.scores {
+            Some(sc) => {
+                h.write_u8(1);
+                for &x in sc {
+                    h.write_f32(x);
+                }
+            }
+            None => h.write_u8(0),
+        }
+    }
+    h.finish()
+}
+
+/// Exact payload equality (the fingerprint is only a filter: matches are
+/// verified so a 64-bit collision can never conflate distinct payloads).
+pub fn same_payload(a: &Sample, b: &Sample) -> bool {
+    a.dense == b.dense && a.sparse == b.sparse
+}
+
+/// The duplicate-run structure of a run of samples: `inverse[row]` names
+/// the unique payload the row carries; `unique_rows[u]` is the original
+/// index of unique payload `u`'s first occurrence.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DedupIndex {
+    pub inverse: Vec<u32>,
+    pub unique_rows: Vec<usize>,
+}
+
+impl DedupIndex {
+    /// Detect duplicate payloads in `samples` (fingerprint + verified
+    /// equality), preserving first-occurrence order of uniques.
+    pub fn analyze(samples: &[Sample]) -> DedupIndex {
+        let mut by_fp: HashMap<u64, Vec<u32>> = HashMap::new();
+        let mut inverse = Vec::with_capacity(samples.len());
+        let mut unique_rows = Vec::new();
+        for (row, s) in samples.iter().enumerate() {
+            let fp = sample_payload_fingerprint(s);
+            let candidates = by_fp.entry(fp).or_default();
+            let found = candidates
+                .iter()
+                .copied()
+                .find(|&u| same_payload(&samples[unique_rows[u as usize]], s));
+            match found {
+                Some(u) => inverse.push(u),
+                None => {
+                    let u = unique_rows.len() as u32;
+                    unique_rows.push(row);
+                    candidates.push(u);
+                    inverse.push(u);
+                }
+            }
+        }
+        DedupIndex {
+            inverse,
+            unique_rows,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.inverse.len()
+    }
+
+    pub fn unique_count(&self) -> usize {
+        self.unique_rows.len()
+    }
+
+    /// rows / unique payloads (1.0 = no duplication).
+    pub fn factor(&self) -> f64 {
+        if self.unique_rows.is_empty() {
+            1.0
+        } else {
+            self.inverse.len() as f64 / self.unique_rows.len() as f64
+        }
+    }
+}
+
+/// Aggregated duplication accounting (per partition, table, or fleet).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DedupStats {
+    pub rows: u64,
+    pub unique_rows: u64,
+}
+
+impl DedupStats {
+    pub fn record(&mut self, idx: &DedupIndex) {
+        self.rows += idx.rows() as u64;
+        self.unique_rows += idx.unique_count() as u64;
+    }
+
+    pub fn merge(&mut self, o: &DedupStats) {
+        self.rows += o.rows;
+        self.unique_rows += o.unique_rows;
+    }
+
+    pub fn factor(&self) -> f64 {
+        if self.unique_rows == 0 {
+            1.0
+        } else {
+            self.rows as f64 / self.unique_rows as f64
+        }
+    }
+
+    /// Fraction of per-row work a dedup-aware stage avoids.
+    pub fn saved_frac(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            1.0 - self.unique_rows as f64 / self.rows as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SparseValue;
+    use crate::schema::FeatureId;
+
+    fn sample(i: u64, label: f32, ts: u64) -> Sample {
+        let mut s = Sample {
+            dense: vec![(FeatureId(0), i as f32)],
+            sparse: vec![(FeatureId(10), SparseValue::ids(vec![i, i + 1]))],
+            label,
+            timestamp: ts,
+        };
+        s.sort_features();
+        s
+    }
+
+    #[test]
+    fn fingerprint_ignores_label_and_timestamp() {
+        let a = sample(3, 0.0, 100);
+        let b = sample(3, 1.0, 999);
+        assert_eq!(
+            sample_payload_fingerprint(&a),
+            sample_payload_fingerprint(&b)
+        );
+        assert!(same_payload(&a, &b));
+        let c = sample(4, 0.0, 100);
+        assert_ne!(
+            sample_payload_fingerprint(&a),
+            sample_payload_fingerprint(&c)
+        );
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_scores() {
+        let mut a = sample(1, 0.0, 0);
+        let mut b = a.clone();
+        b.sparse[0].1.scores = Some(vec![0.5, 0.25]);
+        assert_ne!(
+            sample_payload_fingerprint(&a),
+            sample_payload_fingerprint(&b)
+        );
+        assert!(!same_payload(&a, &b));
+        a.sparse[0].1.scores = Some(vec![0.5, 0.25]);
+        assert_eq!(
+            sample_payload_fingerprint(&a),
+            sample_payload_fingerprint(&b)
+        );
+    }
+
+    #[test]
+    fn analyze_builds_inverse_index() {
+        let rows = vec![
+            sample(7, 0.0, 1),
+            sample(9, 1.0, 2),
+            sample(7, 1.0, 3), // dup of row 0
+            sample(9, 0.0, 4), // dup of row 1
+            sample(7, 0.0, 5), // dup of row 0
+        ];
+        let idx = DedupIndex::analyze(&rows);
+        assert_eq!(idx.inverse, vec![0, 1, 0, 1, 0]);
+        assert_eq!(idx.unique_rows, vec![0, 1]);
+        assert_eq!(idx.unique_count(), 2);
+        assert!((idx.factor() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn analyze_no_duplicates_is_identity() {
+        let rows: Vec<Sample> = (0..6).map(|i| sample(i, 0.0, i)).collect();
+        let idx = DedupIndex::analyze(&rows);
+        assert_eq!(idx.inverse, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(idx.unique_count(), 6);
+        assert!((idx.factor() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut st = DedupStats::default();
+        st.record(&DedupIndex::analyze(&[
+            sample(1, 0.0, 0),
+            sample(1, 1.0, 1),
+            sample(2, 0.0, 2),
+            sample(1, 0.0, 3),
+        ]));
+        assert_eq!(st.rows, 4);
+        assert_eq!(st.unique_rows, 2);
+        assert!((st.factor() - 2.0).abs() < 1e-12);
+        assert!((st.saved_frac() - 0.5).abs() < 1e-12);
+        let mut other = DedupStats::default();
+        other.merge(&st);
+        assert_eq!(other, st);
+    }
+
+    #[test]
+    fn empty_input_is_sane() {
+        let idx = DedupIndex::analyze(&[]);
+        assert_eq!(idx.rows(), 0);
+        assert!((idx.factor() - 1.0).abs() < 1e-12);
+        assert_eq!(DedupStats::default().saved_frac(), 0.0);
+    }
+}

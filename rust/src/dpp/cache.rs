@@ -6,62 +6,190 @@
 //! other's fully-preprocessed wire batches, skipping storage reads,
 //! extraction, and transformation entirely — the OneAccess-style sharing
 //! the paper cites as related work, applied at the worker.
+//!
+//! The fingerprint covers the *entire* session semantics — including the
+//! full transform DAG structure and every op's parameters — so two specs
+//! that merely share node/output counts can never collide into the same
+//! cache entry. Entries are evicted least-recently-used under budget
+//! pressure.
 
 use super::spec::SessionSpec;
 use super::split::Split;
 use super::worker::WireBatch;
+use crate::dedup::Fnv64;
 use crate::metrics::Counter;
+use crate::transforms::dag::InputKind;
+use crate::transforms::{Node, Op};
 use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex};
 
 /// Fingerprint of everything that affects a split's preprocessed output.
 pub fn session_fingerprint(spec: &SessionSpec) -> u64 {
-    // FNV-1a over the semantically-relevant session fields.
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    let mut eat = |bytes: &[u8]| {
-        for &b in bytes {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3);
-        }
-    };
-    eat(spec.table.as_bytes());
+    let mut h = Fnv64::new();
+    h.write_str(&spec.table);
+    h.write_u32(spec.from_day);
+    h.write_u32(spec.to_day);
+    // Projection is a set: hash order-independently.
     let mut feats: Vec<u32> = spec.projection.iter().map(|f| f.0).collect();
     feats.sort_unstable();
+    h.write_u64(feats.len() as u64);
     for f in feats {
-        eat(&f.to_le_bytes());
+        h.write_u32(f);
     }
-    eat(&(spec.batch_size as u64).to_le_bytes());
-    eat(&[
-        spec.pipeline.fast_decode as u8,
-        spec.pipeline.flatmap as u8,
-    ]);
-    eat(&spec.pipeline.coalesce.unwrap_or(0).to_le_bytes());
-    eat(&(spec.dag.nodes.len() as u64).to_le_bytes());
-    eat(&(spec.dag.outputs.len() as u64).to_le_bytes());
-    h
+    h.write_u64(spec.batch_size as u64);
+    h.write_u64(spec.stripes_per_split as u64);
+    h.write_u8(spec.pipeline.fast_decode as u8);
+    h.write_u8(spec.pipeline.flatmap as u8);
+    h.write_u8(spec.pipeline.dedup_aware as u8);
+    h.write_u8(spec.pipeline.coalesce.is_some() as u8);
+    h.write_u64(spec.pipeline.coalesce.unwrap_or(0));
+    // Full DAG structure: node kinds, op parameters, wiring, outputs.
+    h.write_u64(spec.dag.nodes.len() as u64);
+    for node in &spec.dag.nodes {
+        match node {
+            Node::Input { id, kind } => {
+                h.write_u8(0);
+                h.write_u32(id.0);
+                h.write_u8(match kind {
+                    InputKind::Auto => 0,
+                    InputKind::Dense => 1,
+                    InputKind::Sparse => 2,
+                });
+            }
+            Node::Apply { op, inputs } => {
+                h.write_u8(1);
+                eat_op(&mut h, op);
+                h.write_u64(inputs.len() as u64);
+                for &i in inputs {
+                    h.write_u64(i as u64);
+                }
+            }
+        }
+    }
+    h.write_u64(spec.dag.outputs.len() as u64);
+    for (fid, node) in &spec.dag.outputs {
+        h.write_u32(fid.0);
+        h.write_u64(*node as u64);
+    }
+    h.finish()
+}
+
+/// Hash one op with all its parameters (exhaustive on purpose: adding an
+/// op without deciding its cache identity is a compile error).
+fn eat_op(h: &mut Fnv64, op: &Op) {
+    match op {
+        Op::Cartesian => h.write_u8(0),
+        Op::Bucketize { borders } => {
+            h.write_u8(1);
+            h.write_u64(borders.len() as u64);
+            for &b in borders {
+                h.write_f32(b);
+            }
+        }
+        Op::ComputeScore { mul, add } => {
+            h.write_u8(2);
+            h.write_f32(*mul);
+            h.write_f32(*add);
+        }
+        Op::Enumerate => h.write_u8(3),
+        Op::PositiveModulus { modulus } => {
+            h.write_u8(4);
+            h.write_u64(*modulus);
+        }
+        Op::IdListTransform => h.write_u8(5),
+        Op::BoxCox { lambda } => {
+            h.write_u8(6);
+            h.write_f32(*lambda);
+        }
+        Op::Logit { eps } => {
+            h.write_u8(7);
+            h.write_f32(*eps);
+        }
+        Op::MapId { mapping, default } => {
+            h.write_u8(8);
+            let mut entries: Vec<(u64, u64)> =
+                mapping.iter().map(|(&k, &v)| (k, v)).collect();
+            entries.sort_unstable();
+            h.write_u64(entries.len() as u64);
+            for (k, v) in entries {
+                h.write_u64(k);
+                h.write_u64(v);
+            }
+            h.write_u64(*default);
+        }
+        Op::FirstX { x } => {
+            h.write_u8(9);
+            h.write_u64(*x as u64);
+        }
+        Op::GetLocalHour { tz_offset_secs } => {
+            h.write_u8(10);
+            h.write_u64(*tz_offset_secs as u64);
+        }
+        Op::SigridHash { salt, modulus } => {
+            h.write_u8(11);
+            h.write_u64(*salt);
+            h.write_u64(*modulus);
+        }
+        Op::NGram { n } => {
+            h.write_u8(12);
+            h.write_u64(*n as u64);
+        }
+        Op::Onehot { buckets } => {
+            h.write_u8(13);
+            h.write_u32(*buckets);
+        }
+        Op::Clamp { lo, hi } => {
+            h.write_u8(14);
+            h.write_f32(*lo);
+            h.write_f32(*hi);
+        }
+        Op::Sampling { rate, seed } => {
+            h.write_u8(15);
+            h.write_f32(*rate);
+            h.write_u64(*seed);
+        }
+    }
 }
 
 type Key = (u64, u64, usize, usize); // (fingerprint, file, stripe_start, count)
 
-/// Bounded shared cache of preprocessed wire batches.
+struct Entry {
+    batches: Arc<Vec<WireBatch>>,
+    bytes: u64,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<Key, Entry>,
+    used: u64,
+    tick: u64,
+}
+
+/// Bounded shared cache of preprocessed wire batches with LRU eviction.
 pub struct TensorCache {
-    map: RwLock<HashMap<Key, Arc<Vec<WireBatch>>>>,
+    inner: Mutex<Inner>,
     pub budget_bytes: u64,
-    used: RwLock<u64>,
     pub hits: Counter,
     pub misses: Counter,
     pub inserted_bytes: Counter,
+    pub evictions: Counter,
+    pub evicted_bytes: Counter,
 }
 
 impl TensorCache {
     pub fn new(budget_bytes: u64) -> Arc<TensorCache> {
         Arc::new(TensorCache {
-            map: RwLock::new(HashMap::new()),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                used: 0,
+                tick: 0,
+            }),
             budget_bytes,
-            used: RwLock::new(0),
             hits: Counter::new(),
             misses: Counter::new(),
             inserted_bytes: Counter::new(),
+            evictions: Counter::new(),
+            evicted_bytes: Counter::new(),
         })
     }
 
@@ -75,20 +203,25 @@ impl TensorCache {
     }
 
     pub fn get(&self, fingerprint: u64, split: &Split) -> Option<Arc<Vec<WireBatch>>> {
-        let got = self
-            .map
-            .read()
-            .unwrap()
-            .get(&Self::key(fingerprint, split))
-            .cloned();
-        match &got {
-            Some(_) => self.hits.inc(),
-            None => self.misses.inc(),
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(&Self::key(fingerprint, split)) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.inc();
+                Some(e.batches.clone())
+            }
+            None => {
+                self.misses.inc();
+                None
+            }
         }
-        got
     }
 
-    /// Insert if within budget. Returns whether it was stored.
+    /// Insert, evicting least-recently-used entries to fit the budget.
+    /// Returns whether it was stored (an item larger than the whole
+    /// budget never is).
     pub fn put(
         &self,
         fingerprint: u64,
@@ -96,23 +229,51 @@ impl TensorCache {
         batches: Arc<Vec<WireBatch>>,
     ) -> bool {
         let bytes: u64 = batches.iter().map(|b| b.bytes.len() as u64).sum();
-        {
-            let mut used = self.used.write().unwrap();
-            if *used + bytes > self.budget_bytes {
-                return false;
-            }
-            *used += bytes;
+        if bytes > self.budget_bytes {
+            return false;
         }
+        let key = Self::key(fingerprint, split);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(old) = inner.map.remove(&key) {
+            inner.used -= old.bytes;
+        }
+        while inner.used + bytes > self.budget_bytes {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let Some(victim) = victim else { break };
+            let e = inner.map.remove(&victim).expect("victim present");
+            inner.used -= e.bytes;
+            self.evictions.inc();
+            self.evicted_bytes.add(e.bytes);
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(
+            key,
+            Entry {
+                batches,
+                bytes,
+                last_used: tick,
+            },
+        );
+        inner.used += bytes;
         self.inserted_bytes.add(bytes);
-        self.map
-            .write()
-            .unwrap()
-            .insert(Self::key(fingerprint, split), batches);
         true
     }
 
     pub fn used_bytes(&self) -> u64 {
-        *self.used.read().unwrap()
+        self.inner.lock().unwrap().used
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -156,6 +317,15 @@ mod tests {
         }
     }
 
+    fn wire(bytes: Vec<u8>) -> Arc<Vec<WireBatch>> {
+        Arc::new(vec![WireBatch {
+            seq: 0,
+            rows: 8,
+            dedup: false,
+            bytes,
+        }])
+    }
+
     #[test]
     fn fingerprint_distinguishes_sessions() {
         let a = session_fingerprint(&spec("t", &[1, 2, 3], 32));
@@ -169,14 +339,41 @@ mod tests {
     }
 
     #[test]
+    fn fingerprint_covers_full_dag_not_just_counts() {
+        use crate::transforms::Op;
+        // Two specs with identical node/output *counts* but different
+        // ops/parameters — the old count-based fingerprint collided here.
+        let mk = |op: Op| {
+            let mut dag = TransformDag::default();
+            let i = dag.input(FeatureId(1));
+            let x = dag.apply(op, vec![i]);
+            dag.output(FeatureId(1), x);
+            let mut s = SessionSpec::from_dag("t", 0, 1, dag, 32);
+            s.projection = Projection::new([FeatureId(1)]);
+            s
+        };
+        let a = mk(Op::SigridHash {
+            salt: 1,
+            modulus: 1000,
+        });
+        let b = mk(Op::SigridHash {
+            salt: 2,
+            modulus: 1000,
+        });
+        let c = mk(Op::FirstX { x: 5 });
+        assert_ne!(session_fingerprint(&a), session_fingerprint(&b));
+        assert_ne!(session_fingerprint(&a), session_fingerprint(&c));
+        // Pipeline toggles matter too (they change the produced wire).
+        let mut d = mk(Op::FirstX { x: 5 });
+        d.pipeline.dedup_aware = !d.pipeline.dedup_aware;
+        assert_ne!(session_fingerprint(&c), session_fingerprint(&d));
+    }
+
+    #[test]
     fn cache_roundtrip_and_isolation() {
         let cache = TensorCache::new(1 << 20);
         let fp = 42u64;
-        let batches = Arc::new(vec![WireBatch {
-            seq: 0,
-            rows: 8,
-            bytes: vec![1, 2, 3],
-        }]);
+        let batches = wire(vec![1, 2, 3]);
         assert!(cache.get(fp, &split(1, 0)).is_none());
         assert!(cache.put(fp, &split(1, 0), batches.clone()));
         let got = cache.get(fp, &split(1, 0)).unwrap();
@@ -190,19 +387,65 @@ mod tests {
     #[test]
     fn budget_enforced() {
         let cache = TensorCache::new(4);
-        let big = Arc::new(vec![WireBatch {
-            seq: 0,
-            rows: 8,
-            bytes: vec![0; 8],
-        }]);
+        let big = wire(vec![0; 8]);
         assert!(!cache.put(1, &split(1, 0), big));
         assert_eq!(cache.used_bytes(), 0);
-        let small = Arc::new(vec![WireBatch {
-            seq: 0,
-            rows: 8,
-            bytes: vec![0; 3],
-        }]);
+        let small = wire(vec![0; 3]);
         assert!(cache.put(1, &split(1, 0), small));
         assert_eq!(cache.used_bytes(), 3);
+    }
+
+    #[test]
+    fn lru_eviction_under_budget_pressure() {
+        let cache = TensorCache::new(10);
+        assert!(cache.put(1, &split(1, 0), wire(vec![0; 4]))); // A
+        assert!(cache.put(1, &split(1, 2), wire(vec![0; 4]))); // B
+        assert_eq!(cache.used_bytes(), 8);
+        // Touch A so B becomes the LRU victim.
+        assert!(cache.get(1, &split(1, 0)).is_some());
+        assert!(cache.put(1, &split(1, 4), wire(vec![0; 4]))); // C evicts B
+        assert_eq!(cache.evictions.get(), 1);
+        assert_eq!(cache.evicted_bytes.get(), 4);
+        assert_eq!(cache.used_bytes(), 8);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(1, &split(1, 0)).is_some(), "A survives");
+        assert!(cache.get(1, &split(1, 4)).is_some(), "C present");
+        assert!(cache.get(1, &split(1, 2)).is_none(), "B evicted");
+    }
+
+    #[test]
+    fn eviction_frees_enough_for_large_insert() {
+        let cache = TensorCache::new(10);
+        assert!(cache.put(1, &split(1, 0), wire(vec![0; 3])));
+        assert!(cache.put(1, &split(1, 2), wire(vec![0; 3])));
+        assert!(cache.put(1, &split(1, 4), wire(vec![0; 3])));
+        // 9 used; a 10-byte insert must evict everything, then fit.
+        assert!(cache.put(1, &split(1, 6), wire(vec![0; 10])));
+        assert_eq!(cache.used_bytes(), 10);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.evictions.get(), 3);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_double_counting() {
+        let cache = TensorCache::new(10);
+        assert!(cache.put(1, &split(1, 0), wire(vec![0; 4])));
+        assert!(cache.put(1, &split(1, 0), wire(vec![0; 6])));
+        assert_eq!(cache.used_bytes(), 6);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn hit_rate_accounting() {
+        let cache = TensorCache::new(1 << 10);
+        assert_eq!(cache.hit_rate(), 0.0);
+        assert!(cache.put(7, &split(2, 0), wire(vec![1])));
+        for _ in 0..3 {
+            assert!(cache.get(7, &split(2, 0)).is_some());
+        }
+        assert!(cache.get(7, &split(2, 2)).is_none());
+        assert_eq!(cache.hits.get(), 3);
+        assert_eq!(cache.misses.get(), 1);
+        assert!((cache.hit_rate() - 0.75).abs() < 1e-9);
     }
 }

@@ -5,7 +5,7 @@
 //! "capping the number of connections that Clients and Workers need to
 //! maintain".
 
-use super::tensor::TensorBatch;
+use super::tensor::{DedupTensorBatch, TensorBatch};
 use super::worker::WireBatch;
 use crate::dwrf::crypto::StreamCipher;
 use crate::metrics::Counter;
@@ -44,6 +44,8 @@ pub struct Client {
     /// Datacenter-tax accounting: wire bytes received and deserialized.
     pub rx_bytes: Counter,
     pub batches: Counter,
+    /// Dedup wire batches expanded on this client.
+    pub dedup_expanded: Counter,
     /// Time spent blocked waiting for a batch (data-stall signal).
     pub stall_secs: std::sync::Mutex<f64>,
 }
@@ -56,6 +58,7 @@ impl Client {
             next: 0,
             rx_bytes: Counter::new(),
             batches: Counter::new(),
+            dedup_expanded: Counter::new(),
             stall_secs: std::sync::Mutex::new(0.0),
         }
     }
@@ -89,12 +92,25 @@ impl Client {
                         let stalled = start.elapsed().as_secs_f64();
                         *self.stall_secs.lock().unwrap() += stalled;
                         // TLS decrypt + Thrift-like deserialize: the
-                        // trainer-side datacenter tax (§6.2).
-                        let tb = TensorBatch::from_wire(
-                            &self.cipher,
-                            wire.seq,
-                            &wire.bytes,
-                        )?;
+                        // trainer-side datacenter tax (§6.2). Dedup wire
+                        // batches additionally expand (gather unique rows
+                        // through the inverse index) so the trainer only
+                        // ever sees ordinary full batches.
+                        let tb = if wire.dedup {
+                            self.dedup_expanded.inc();
+                            DedupTensorBatch::from_wire(
+                                &self.cipher,
+                                wire.seq,
+                                &wire.bytes,
+                            )?
+                            .expand()
+                        } else {
+                            TensorBatch::from_wire(
+                                &self.cipher,
+                                wire.seq,
+                                &wire.bytes,
+                            )?
+                        };
                         return Ok(Some(tb));
                     }
                     Err(std::sync::mpsc::TryRecvError::Empty) => {}
@@ -162,6 +178,7 @@ mod tests {
             tx.send(WireBatch {
                 seq,
                 rows: 2,
+                dedup: false,
                 bytes: tb.to_wire(&cipher, seq),
             })
             .unwrap();
@@ -186,6 +203,45 @@ mod tests {
     fn client_with_no_workers_returns_none() {
         let mut c = Client::new("t", vec![]);
         assert!(c.next_batch(Duration::from_millis(1)).unwrap().is_none());
+    }
+
+    #[test]
+    fn client_expands_dedup_wire_batches() {
+        use crate::dpp::tensor::DedupTensorBatch;
+        let (tx, rx) = sync_channel(4);
+        let cipher = StreamCipher::for_table("t");
+        let unique = TensorBatch {
+            rows: 2,
+            dense: vec![10.0, 20.0],
+            dense_names: vec![crate::schema::FeatureId(0)],
+            sparse: vec![(
+                crate::schema::FeatureId(9),
+                vec![0, 1, 3],
+                vec![5, 6, 7],
+            )],
+            labels: vec![0.0, 0.0],
+        };
+        let db = DedupTensorBatch {
+            inverse: vec![1, 0, 1, 1],
+            labels: vec![1.0, 0.0, 0.0, 1.0],
+            unique,
+        };
+        tx.send(WireBatch {
+            seq: 0,
+            rows: 4,
+            dedup: true,
+            bytes: db.to_wire(&cipher, 0),
+        })
+        .unwrap();
+        drop(tx);
+        let mut client = Client::new("t", vec![rx]);
+        let got = client.next_batch(Duration::from_secs(1)).unwrap().unwrap();
+        assert_eq!(got.rows, 4);
+        assert_eq!(got.dense, vec![20.0, 10.0, 20.0, 20.0]);
+        assert_eq!(got.labels, vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(got.sparse[0].1, vec![0, 2, 3, 5, 7]);
+        assert_eq!(got.sparse[0].2, vec![6, 7, 5, 6, 7, 6, 7]);
+        assert_eq!(client.dedup_expanded.get(), 1);
     }
 
     #[test]

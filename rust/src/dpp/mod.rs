@@ -29,5 +29,5 @@ pub use master::{Master, MasterCheckpoint, WorkerHealth};
 pub use service::{run_session, Session, SessionConfig, SessionReport};
 pub use spec::{PipelineOptions, SessionSpec};
 pub use split::{Split, SplitId};
-pub use tensor::TensorBatch;
+pub use tensor::{DedupTensorBatch, TensorBatch};
 pub use worker::{Worker, WorkerCore};

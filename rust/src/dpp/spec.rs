@@ -22,6 +22,13 @@ pub struct PipelineOptions {
     /// `false` = reconstruct row maps and convert back (the baseline's
     /// extra format changes and copies).
     pub flatmap: bool,
+    /// RecD-style dedup-aware preprocessing: on Dedup-encoded files,
+    /// transform each unique payload once and ship inverse-keyed wire
+    /// batches that the Client expands. No effect on Map/Flattened
+    /// files. Requires row-index-independent transforms; the worker
+    /// checks `TransformDag::row_index_sensitive` (true for `Sampling`)
+    /// and falls back to the oblivious path when it would be unsound.
+    pub dedup_aware: bool,
 }
 
 impl Default for PipelineOptions {
@@ -31,6 +38,7 @@ impl Default for PipelineOptions {
             coalesce: Some(COALESCE_WINDOW),
             fast_decode: true,
             flatmap: true,
+            dedup_aware: true,
         }
     }
 }
@@ -42,6 +50,7 @@ impl PipelineOptions {
             coalesce: None,
             fast_decode: false,
             flatmap: false,
+            dedup_aware: false,
         }
     }
 }
@@ -113,9 +122,11 @@ mod tests {
         assert!(p.coalesce.is_some());
         assert!(p.fast_decode);
         assert!(p.flatmap);
+        assert!(p.dedup_aware);
         let b = PipelineOptions::baseline();
         assert!(b.coalesce.is_none());
         assert!(!b.fast_decode);
         assert!(!b.flatmap);
+        assert!(!b.dedup_aware);
     }
 }

@@ -85,39 +85,100 @@ impl TensorBatch {
                 .sum::<usize>()
     }
 
+    /// Gather arbitrary (possibly repeated) rows of the DAG outputs into
+    /// a batch — the dedup-aware load stage: `rows` indexes *unique*
+    /// payload rows. Labels are placeholders; the real per-row labels
+    /// travel in the enclosing [`DedupTensorBatch`].
+    pub fn from_outputs_gather(
+        outputs: &[(FeatureId, Value)],
+        rows: &[u32],
+    ) -> TensorBatch {
+        let k = rows.len();
+        let mut dense_names = Vec::new();
+        let mut dense_cols: Vec<Vec<f32>> = Vec::new();
+        let mut sparse = Vec::new();
+        for (id, v) in outputs {
+            match v {
+                Value::Dense(d) => {
+                    dense_names.push(*id);
+                    dense_cols
+                        .push(rows.iter().map(|&u| d[u as usize]).collect());
+                }
+                Value::Sparse { offsets, ids, .. } => {
+                    let mut o = Vec::with_capacity(k + 1);
+                    o.push(0u32);
+                    let mut idv = Vec::new();
+                    for &u in rows {
+                        let u = u as usize;
+                        idv.extend_from_slice(
+                            &ids[offsets[u] as usize..offsets[u + 1] as usize],
+                        );
+                        o.push(idv.len() as u32);
+                    }
+                    sparse.push((*id, o, idv));
+                }
+            }
+        }
+        let d = dense_names.len();
+        let mut dense = vec![0f32; k * d];
+        for (j, col) in dense_cols.iter().enumerate() {
+            for (i, &v) in col.iter().enumerate() {
+                dense[i * d + j] = v;
+            }
+        }
+        TensorBatch {
+            rows: k,
+            dense,
+            dense_names,
+            sparse,
+            labels: vec![0.0; k],
+        }
+    }
+
     // ---- Wire format (Thrift-compact-like: field markers + varints) ----
 
     pub fn serialize(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.bytes() + 64);
-        put_varint(&mut out, self.rows as u64);
-        put_varint(&mut out, self.dense_names.len() as u64);
+        self.write_into(&mut out);
+        out
+    }
+
+    /// Append the wire form to `out` (composable: the dedup wire frame
+    /// embeds a unique-row batch after its own header).
+    pub fn write_into(&self, out: &mut Vec<u8>) {
+        put_varint(out, self.rows as u64);
+        put_varint(out, self.dense_names.len() as u64);
         for f in &self.dense_names {
-            put_u32(&mut out, f.0);
+            put_u32(out, f.0);
         }
         for &v in &self.dense {
-            put_f32(&mut out, v);
+            put_f32(out, v);
         }
-        put_varint(&mut out, self.sparse.len() as u64);
+        put_varint(out, self.sparse.len() as u64);
         for (f, offsets, ids) in &self.sparse {
-            put_u32(&mut out, f.0);
+            put_u32(out, f.0);
             let mut prev = 0u32;
             for &o in &offsets[1..] {
-                put_varint(&mut out, (o - prev) as u64);
+                put_varint(out, (o - prev) as u64);
                 prev = o;
             }
-            put_varint(&mut out, ids.len() as u64);
+            put_varint(out, ids.len() as u64);
             for &id in ids {
-                put_varint(&mut out, id);
+                put_varint(out, id);
             }
         }
         for &l in &self.labels {
-            put_f32(&mut out, l);
+            put_f32(out, l);
         }
-        out
     }
 
     pub fn deserialize(buf: &[u8]) -> Result<TensorBatch> {
         let mut r = ByteReader::new(buf);
+        Self::read_from(&mut r)
+    }
+
+    /// Decode one batch from a reader, leaving the cursor after it.
+    pub fn read_from(r: &mut ByteReader) -> Result<TensorBatch> {
         let rows = r.varint().context("rows")? as usize;
         let nd = r.varint().context("nd")? as usize;
         let mut dense_names = Vec::with_capacity(nd);
@@ -170,6 +231,131 @@ impl TensorBatch {
     }
 
     pub fn from_wire(cipher: &StreamCipher, seq: u64, data: &[u8]) -> Result<TensorBatch> {
+        let mut buf = data.to_vec();
+        cipher.apply(seq, &mut buf);
+        Self::deserialize(&buf)
+    }
+}
+
+/// The dedup-aware wire extension (RecD): a worker that preprocessed
+/// only *unique* payloads ships them once, plus the row→unique inverse
+/// index and the true per-row labels. The Client [`expand`]s this back
+/// into an ordinary [`TensorBatch`] before handing it to the trainer —
+/// duplicate rows cost wire bytes and transform cycles exactly once.
+///
+/// [`expand`]: DedupTensorBatch::expand
+#[derive(Clone, Debug, PartialEq)]
+pub struct DedupTensorBatch {
+    /// Per output row: index into `unique`'s rows.
+    pub inverse: Vec<u32>,
+    /// Per output row: the true label (labels are row identity, never
+    /// deduplicated).
+    pub labels: Vec<f32>,
+    /// Preprocessed tensors over unique payload rows (placeholder
+    /// labels).
+    pub unique: TensorBatch,
+}
+
+impl DedupTensorBatch {
+    /// Full (expanded) row count.
+    pub fn rows(&self) -> usize {
+        self.inverse.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.inverse.len() * 4 + self.labels.len() * 4 + self.unique.bytes()
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.bytes() + 64);
+        put_varint(&mut out, self.inverse.len() as u64);
+        for &u in &self.inverse {
+            put_varint(&mut out, u as u64);
+        }
+        for &l in &self.labels {
+            put_f32(&mut out, l);
+        }
+        self.unique.write_into(&mut out);
+        out
+    }
+
+    pub fn deserialize(buf: &[u8]) -> Result<DedupTensorBatch> {
+        let mut r = ByteReader::new(buf);
+        let rows = r.varint().context("dedup rows")? as usize;
+        let mut inverse = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            inverse.push(r.varint().context("inverse")? as u32);
+        }
+        let mut labels = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            labels.push(r.f32().context("label")?);
+        }
+        let unique = TensorBatch::read_from(&mut r)?;
+        for &u in &inverse {
+            if u as usize >= unique.rows {
+                bail!(
+                    "dedup inverse {u} out of range ({} uniques)",
+                    unique.rows
+                );
+            }
+        }
+        Ok(DedupTensorBatch {
+            inverse,
+            labels,
+            unique,
+        })
+    }
+
+    /// Reconstruct the full batch: gather unique rows through the
+    /// inverse index and restore per-row labels.
+    pub fn expand(&self) -> TensorBatch {
+        let rows = self.inverse.len();
+        let u = &self.unique;
+        let d = u.dense_names.len();
+        let mut dense = vec![0f32; rows * d];
+        for (i, &src) in self.inverse.iter().enumerate() {
+            let src = src as usize;
+            dense[i * d..(i + 1) * d]
+                .copy_from_slice(&u.dense[src * d..(src + 1) * d]);
+        }
+        let sparse = u
+            .sparse
+            .iter()
+            .map(|(id, offsets, ids)| {
+                let mut o = Vec::with_capacity(rows + 1);
+                o.push(0u32);
+                let mut idv = Vec::new();
+                for &src in &self.inverse {
+                    let src = src as usize;
+                    idv.extend_from_slice(
+                        &ids[offsets[src] as usize..offsets[src + 1] as usize],
+                    );
+                    o.push(idv.len() as u32);
+                }
+                (*id, o, idv)
+            })
+            .collect();
+        TensorBatch {
+            rows,
+            dense,
+            dense_names: u.dense_names.clone(),
+            sparse,
+            labels: self.labels.clone(),
+        }
+    }
+
+    /// Serialize + encrypt (same datacenter-tax path as the plain wire).
+    pub fn to_wire(&self, cipher: &StreamCipher, seq: u64) -> Vec<u8> {
+        let mut buf = self.serialize();
+        cipher.apply(seq, &mut buf);
+        buf
+    }
+
+    pub fn from_wire(
+        cipher: &StreamCipher,
+        seq: u64,
+        data: &[u8],
+    ) -> Result<DedupTensorBatch> {
         let mut buf = data.to_vec();
         cipher.apply(seq, &mut buf);
         Self::deserialize(&buf)
@@ -271,5 +457,123 @@ mod tests {
         let b = batch();
         assert!(b.bytes() > 0);
         assert!(b.bytes() >= b.dense.len() * 4);
+    }
+
+    fn outputs() -> Vec<(FeatureId, Value)> {
+        vec![
+            (FeatureId(1), Value::Dense(vec![1.0, 2.0, 3.0, 4.0])),
+            (FeatureId(2), Value::Dense(vec![-1.0, -2.0, -3.0, -4.0])),
+            (
+                FeatureId(10),
+                Value::Sparse {
+                    offsets: vec![0, 2, 2, 5, 6],
+                    ids: vec![7, 8, 1, 2, 3, 9],
+                    scores: None,
+                },
+            ),
+        ]
+    }
+
+    #[test]
+    fn gather_identity_matches_from_outputs() {
+        let outs = outputs();
+        let labels = vec![0.0f32; 4];
+        let direct = TensorBatch::from_outputs(&outs, &labels, 0, 4);
+        let gathered =
+            TensorBatch::from_outputs_gather(&outs, &[0, 1, 2, 3]);
+        assert_eq!(gathered, direct);
+    }
+
+    /// Expand a Value column by an inverse index (test oracle).
+    fn expand_value(v: &Value, inv: &[u32]) -> Value {
+        match v {
+            Value::Dense(d) => Value::Dense(
+                inv.iter().map(|&u| d[u as usize]).collect(),
+            ),
+            Value::Sparse { offsets, ids, .. } => {
+                let mut o = vec![0u32];
+                let mut out_ids = Vec::new();
+                for &u in inv {
+                    let u = u as usize;
+                    out_ids.extend_from_slice(
+                        &ids[offsets[u] as usize..offsets[u + 1] as usize],
+                    );
+                    o.push(out_ids.len() as u32);
+                }
+                Value::Sparse {
+                    offsets: o,
+                    ids: out_ids,
+                    scores: None,
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dedup_batch_expand_equals_duplication_oblivious_path() {
+        let outs = outputs();
+        let inverse = vec![2u32, 0, 2, 3, 1, 1, 0];
+        let labels: Vec<f32> =
+            (0..inverse.len()).map(|i| (i % 2) as f32).collect();
+        // Dedup path: gather uniques actually referenced, ship inverse.
+        let uniques = vec![0u32, 1, 2, 3];
+        let db = DedupTensorBatch {
+            inverse: inverse.clone(),
+            labels: labels.clone(),
+            unique: TensorBatch::from_outputs_gather(&outs, &uniques),
+        };
+        let expanded = db.expand();
+        // Oracle: expand the raw outputs first, batch second.
+        let full: Vec<(FeatureId, Value)> = outs
+            .iter()
+            .map(|(id, v)| (*id, expand_value(v, &inverse)))
+            .collect();
+        let direct =
+            TensorBatch::from_outputs(&full, &labels, 0, inverse.len());
+        assert_eq!(expanded, direct);
+    }
+
+    #[test]
+    fn dedup_batch_wire_roundtrip() {
+        let outs = outputs();
+        let db = DedupTensorBatch {
+            inverse: vec![1, 1, 0, 3, 2, 0],
+            labels: vec![1.0, 0.0, 0.0, 1.0, 0.0, 1.0],
+            unique: TensorBatch::from_outputs_gather(&outs, &[0, 1, 2, 3]),
+        };
+        let back = DedupTensorBatch::deserialize(&db.serialize()).unwrap();
+        assert_eq!(back, db);
+        let cipher = StreamCipher::for_table("dedup");
+        let wire = db.to_wire(&cipher, 9);
+        assert_ne!(wire, db.serialize());
+        let back = DedupTensorBatch::from_wire(&cipher, 9, &wire).unwrap();
+        assert_eq!(back, db);
+        assert_eq!(back.rows(), 6);
+        assert_eq!(back.expand().labels, db.labels);
+    }
+
+    #[test]
+    fn dedup_batch_rejects_out_of_range_inverse() {
+        let outs = outputs();
+        let db = DedupTensorBatch {
+            inverse: vec![0, 9],
+            labels: vec![0.0, 1.0],
+            unique: TensorBatch::from_outputs_gather(&outs, &[0, 1]),
+        };
+        assert!(DedupTensorBatch::deserialize(&db.serialize()).is_err());
+    }
+
+    #[test]
+    fn dedup_wire_is_smaller_than_expanded_wire() {
+        let outs = outputs();
+        // Heavy duplication: 32 rows over 4 uniques.
+        let inverse: Vec<u32> = (0..32).map(|i| i % 4).collect();
+        let labels = vec![0.0f32; 32];
+        let db = DedupTensorBatch {
+            inverse: inverse.clone(),
+            labels,
+            unique: TensorBatch::from_outputs_gather(&outs, &[0, 1, 2, 3]),
+        };
+        assert!(db.serialize().len() < db.expand().serialize().len());
     }
 }

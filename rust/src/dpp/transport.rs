@@ -4,10 +4,11 @@
 //! can live on different hosts (as in production, where each Client keeps
 //! a capped set of connections to its partition of Workers).
 //!
-//! Frame: `[magic u32][seq u64][rows u32][len u32][payload]`, little
-//! endian. The payload is the already-encrypted `WireBatch` body, so the
-//! transport adds framing only — TLS-equivalent protection is the
-//! payload encryption applied at serialization time.
+//! Frame: `[magic u32][seq u64][rows u32][len u32][flags u8][payload]`,
+//! little endian (flags bit 0: payload is a dedup wire batch). The
+//! payload is the already-encrypted `WireBatch` body, so the transport
+//! adds framing only — TLS-equivalent protection is the payload
+//! encryption applied at serialization time.
 
 use super::worker::WireBatch;
 use std::io::{Read, Write};
@@ -17,18 +18,19 @@ const FRAME_MAGIC: u32 = 0xD51_F00D;
 
 /// Send one batch over a stream.
 pub fn send_batch(stream: &mut TcpStream, b: &WireBatch) -> std::io::Result<()> {
-    let mut header = [0u8; 20];
+    let mut header = [0u8; 21];
     header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
     header[4..12].copy_from_slice(&b.seq.to_le_bytes());
     header[12..16].copy_from_slice(&(b.rows as u32).to_le_bytes());
     header[16..20].copy_from_slice(&(b.bytes.len() as u32).to_le_bytes());
+    header[20] = b.dedup as u8;
     stream.write_all(&header)?;
     stream.write_all(&b.bytes)
 }
 
 /// Receive one batch; `Ok(None)` on clean end-of-stream.
 pub fn recv_batch(stream: &mut TcpStream) -> std::io::Result<Option<WireBatch>> {
-    let mut header = [0u8; 20];
+    let mut header = [0u8; 21];
     match stream.read_exact(&mut header) {
         Ok(()) => {}
         Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
@@ -46,9 +48,15 @@ pub fn recv_batch(stream: &mut TcpStream) -> std::io::Result<Option<WireBatch>> 
     let seq = u64::from_le_bytes(header[4..12].try_into().unwrap());
     let rows = u32::from_le_bytes(header[12..16].try_into().unwrap()) as usize;
     let len = u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
+    let dedup = header[20] & 1 == 1;
     let mut bytes = vec![0u8; len];
     stream.read_exact(&mut bytes)?;
-    Ok(Some(WireBatch { seq, rows, bytes }))
+    Ok(Some(WireBatch {
+        seq,
+        rows,
+        dedup,
+        bytes,
+    }))
 }
 
 /// Serve a stream of batches to the first client that connects, then
@@ -101,6 +109,7 @@ mod tests {
         WireBatch {
             seq,
             rows: 4,
+            dedup: seq % 2 == 1, // flag must survive the framing
             bytes: tb.to_wire(&cipher, seq),
         }
     }
@@ -115,6 +124,7 @@ mod tests {
         let cipher = StreamCipher::for_table("tcp");
         for (a, b) in got.iter().zip(batches.iter()) {
             assert_eq!(a.seq, b.seq);
+            assert_eq!(a.dedup, b.dedup);
             assert_eq!(a.bytes, b.bytes);
             // Payload decrypts + deserializes on the far side.
             let tb = TensorBatch::from_wire(&cipher, a.seq, &a.bytes).unwrap();

@@ -16,10 +16,10 @@ use super::cache::{session_fingerprint, TensorCache};
 use super::master::{Master, WorkerId};
 use super::spec::SessionSpec;
 use super::split::Split;
-use super::tensor::TensorBatch;
+use super::tensor::{DedupTensorBatch, TensorBatch};
 use crate::data::ColumnarBatch;
 use crate::dwrf::crypto::StreamCipher;
-use crate::dwrf::{DecodeMode, DwrfReader, FileMeta};
+use crate::dwrf::{DecodeMode, DwrfReader, Encoding, FileMeta};
 use crate::metrics::EtlMetrics;
 use crate::tectonic::{Cluster, FileId};
 use anyhow::Result;
@@ -33,7 +33,11 @@ use std::time::Instant;
 #[derive(Clone, Debug)]
 pub struct WireBatch {
     pub seq: u64,
+    /// Trainer-visible rows (after dedup expansion, when applicable).
     pub rows: usize,
+    /// Payload is a [`DedupTensorBatch`] (inverse-keyed unique tensors)
+    /// rather than a plain [`TensorBatch`]; the Client expands it.
+    pub dedup: bool,
     pub bytes: Vec<u8>,
 }
 
@@ -128,13 +132,40 @@ impl WorkerCore {
         }
         m.t_read.add(t.elapsed());
 
+        // The dedup path evaluates the DAG once per unique payload, which
+        // is only sound when no op reads the row index (`Sampling` does);
+        // such sessions silently fall back to the oblivious path.
+        let wire = if spec.pipeline.dedup_aware
+            && reader.meta.encoding == Encoding::Dedup
+            && !spec.dag.row_index_sensitive()
+        {
+            self.process_dedup(&reader, &bufs_per_stripe)?
+        } else {
+            self.process_oblivious(&reader, &bufs_per_stripe)?
+        };
+        if let Some(cache) = &self.tensor_cache {
+            cache.put(self.fingerprint, split, Arc::new(wire.clone()));
+        }
+        Ok(wire)
+    }
+
+    /// The duplication-oblivious extract→transform→load stages (every
+    /// encoding; Dedup stripes are expanded during extract).
+    fn process_oblivious(
+        &mut self,
+        reader: &DwrfReader,
+        bufs_per_stripe: &[(usize, crate::dwrf::IoBuffers)],
+    ) -> Result<Vec<WireBatch>> {
+        let spec = self.spec.clone();
+        let m = self.metrics.clone();
+
         // ---- extract: decrypt + decompress + decode + filter ----
         let t = Instant::now();
         let mode = DecodeMode {
             fast: spec.pipeline.fast_decode,
         };
         let mut batches: Vec<ColumnarBatch> = Vec::new();
-        for (stripe, bufs) in &bufs_per_stripe {
+        for (stripe, bufs) in bufs_per_stripe {
             let batch = if spec.pipeline.flatmap {
                 // Flatmap path: storage → columnar directly.
                 reader.decode_stripe_columnar(*stripe, bufs, &spec.projection, mode)?
@@ -172,6 +203,7 @@ impl WorkerCore {
                 .map(|(_, v)| v.elements() * 8)
                 .sum();
             m.transform_out_bytes.add(out_bytes as u64);
+            m.transform_rows.add(batch.num_rows as u64);
             transformed.push((outputs, batch.labels.clone(), batch.num_rows));
         }
         m.t_transform.add(t.elapsed());
@@ -193,15 +225,109 @@ impl WorkerCore {
                 wire.push(WireBatch {
                     seq,
                     rows: end - row,
+                    dedup: false,
                     bytes,
                 });
                 row = end;
             }
         }
         m.t_load.add(t.elapsed());
-        if let Some(cache) = &self.tensor_cache {
-            cache.put(self.fingerprint, split, Arc::new(wire.clone()));
+        Ok(wire)
+    }
+
+    /// The dedup-aware stages (RecD): decode unique payloads + inverse,
+    /// transform each unique payload **once**, and ship inverse-keyed
+    /// wire batches the Client expands — per-row extract/transform/wire
+    /// cost collapses by the stripe's duplication factor.
+    fn process_dedup(
+        &mut self,
+        reader: &DwrfReader,
+        bufs_per_stripe: &[(usize, crate::dwrf::IoBuffers)],
+    ) -> Result<Vec<WireBatch>> {
+        let spec = self.spec.clone();
+        let m = self.metrics.clone();
+
+        // ---- extract: unique payloads only ----
+        let t = Instant::now();
+        let mode = DecodeMode {
+            fast: spec.pipeline.fast_decode,
+        };
+        let mut stripes = Vec::new();
+        for (stripe, bufs) in bufs_per_stripe {
+            let ds = reader.decode_stripe_dedup(
+                *stripe,
+                bufs,
+                &spec.projection,
+                mode,
+            )?;
+            m.extract_out_bytes.add(ds.unique.approx_bytes() as u64);
+            stripes.push(ds);
         }
+        m.t_extract.add(t.elapsed());
+
+        // ---- transform: each unique payload exactly once ----
+        let t = Instant::now();
+        let mut transformed = Vec::new();
+        for ds in stripes {
+            let (outputs, _stats) = spec.dag.execute(&ds.unique)?;
+            let out_bytes: usize =
+                outputs.iter().map(|(_, v)| v.elements() * 8).sum();
+            m.transform_out_bytes.add(out_bytes as u64);
+            m.transform_rows.add(ds.unique.num_rows as u64);
+            m.dedup_saved_rows
+                .add((ds.rows() - ds.unique.num_rows) as u64);
+            transformed.push((outputs, ds));
+        }
+        m.t_transform.add(t.elapsed());
+
+        // ---- load: inverse-keyed wire batches over the full rows ----
+        let t = Instant::now();
+        let mut wire = Vec::new();
+        for (outputs, ds) in &transformed {
+            // Scratch map: global unique id → slot in this wire batch.
+            let mut slot: Vec<u32> = vec![u32::MAX; ds.unique.num_rows];
+            let rows = ds.rows();
+            let mut row = 0;
+            while row < rows {
+                let end = (row + spec.batch_size).min(rows);
+                let mut local_uniques: Vec<u32> = Vec::new();
+                let mut local_inverse: Vec<u32> =
+                    Vec::with_capacity(end - row);
+                for r in row..end {
+                    let u = ds.inverse[r] as usize;
+                    if slot[u] == u32::MAX {
+                        slot[u] = local_uniques.len() as u32;
+                        local_uniques.push(u as u32);
+                    }
+                    local_inverse.push(slot[u]);
+                }
+                for &u in &local_uniques {
+                    slot[u as usize] = u32::MAX;
+                }
+                let db = DedupTensorBatch {
+                    inverse: local_inverse,
+                    labels: ds.labels[row..end].to_vec(),
+                    unique: TensorBatch::from_outputs_gather(
+                        outputs,
+                        &local_uniques,
+                    ),
+                };
+                let seq = self.seq;
+                self.seq += 1;
+                let bytes = db.to_wire(&self.cipher, seq);
+                m.tensor_tx_bytes.add(bytes.len() as u64);
+                m.samples.add((end - row) as u64);
+                m.batches.inc();
+                wire.push(WireBatch {
+                    seq,
+                    rows: end - row,
+                    dedup: true,
+                    bytes,
+                });
+                row = end;
+            }
+        }
+        m.t_load.add(t.elapsed());
         Ok(wire)
     }
 }

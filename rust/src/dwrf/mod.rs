@@ -13,6 +13,12 @@
 //!   fetches only the features it needs — at the cost of many small I/Os
 //!   (Table 6), which **coalesced reads** and **feature reordering**
 //!   then repair.
+//! * [`Encoding::Dedup`] — RecD-style flattened encoding: rows buffered
+//!   over a clustering window are grouped by feature-payload content, so
+//!   duplicate sessions land in the same stripe; each stripe stores each
+//!   unique payload **once** plus a row→unique inverse index
+//!   ([`StreamKind::DedupIndex`]) and per-row labels/timestamps —
+//!   roundtrip-lossless up to the clustering permutation within a window.
 //!
 //! The writer supports the paper's co-designed knobs directly:
 //! `stripe_rows` (large stripes), `feature_order` (feature reordering),
@@ -25,7 +31,7 @@ pub mod stream;
 pub mod writer;
 
 pub use plan::{IoBuffers, IoRange, ReadPlan, StripePlan};
-pub use reader::{DecodeMode, DwrfReader, Projection};
+pub use reader::{DecodeMode, DedupStripe, DwrfReader, Projection};
 pub use stream::StreamKind;
 pub use writer::{DwrfWriter, Encoding, WriterOptions};
 
@@ -86,6 +92,7 @@ impl FileMeta {
         out.push(match self.encoding {
             Encoding::Map => 0,
             Encoding::Flattened => 1,
+            Encoding::Dedup => 2,
         });
         out.push(self.encrypted as u8);
         put_u64(&mut out, self.total_rows);
@@ -118,6 +125,7 @@ impl FileMeta {
         let encoding = match enc {
             0 => Encoding::Map,
             1 => Encoding::Flattened,
+            2 => Encoding::Dedup,
             _ => bail!("bad encoding {enc}"),
         };
         let encrypted = r.bytes(1).ok_or_else(|| anyhow::anyhow!("encflag"))?[0] == 1;

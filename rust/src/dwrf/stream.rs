@@ -29,6 +29,9 @@ pub enum StreamKind {
     FlatDense = 3,
     /// One flattened sparse feature column.
     FlatSparse = 4,
+    /// Row → unique-payload inverse index (Dedup encoding). Flattened
+    /// feature streams in a dedup stripe cover *unique* payloads only.
+    DedupIndex = 5,
 }
 
 impl StreamKind {
@@ -39,6 +42,7 @@ impl StreamKind {
             2 => StreamKind::MapSparse,
             3 => StreamKind::FlatDense,
             4 => StreamKind::FlatSparse,
+            5 => StreamKind::DedupIndex,
             _ => bail!("bad stream kind {v}"),
         })
     }
@@ -77,6 +81,40 @@ pub fn decode_row_meta(buf: &[u8]) -> Result<(Vec<f32>, Vec<u64>)> {
         ts.push(prev);
     }
     Ok((labels, ts))
+}
+
+// ---------------------------------------------------------------------
+// Dedup index stream: row → unique-payload inverse index (the RecD-style
+// encoding's glue; see `crate::dedup`).
+// ---------------------------------------------------------------------
+
+pub fn encode_dedup_index(inverse: &[u32], unique_rows: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(inverse.len() + 8);
+    put_varint(&mut out, inverse.len() as u64);
+    put_varint(&mut out, unique_rows as u64);
+    for &u in inverse {
+        put_varint(&mut out, u as u64);
+    }
+    out
+}
+
+/// Decode `(inverse, unique_rows)` and validate every entry is in range.
+pub fn decode_dedup_index(buf: &[u8]) -> Result<(Vec<u32>, usize)> {
+    let mut r = ByteReader::new(buf);
+    let rows = r.varint().context("dedup rows")? as usize;
+    let unique = r.varint().context("dedup unique")? as usize;
+    if unique > rows {
+        bail!("dedup index: {unique} uniques for {rows} rows");
+    }
+    let mut inverse = Vec::with_capacity(rows);
+    for i in 0..rows {
+        let u = r.varint().with_context(|| format!("inverse {i}"))?;
+        if u >= unique as u64 {
+            bail!("dedup index: inverse {u} out of range ({unique} uniques)");
+        }
+        inverse.push(u as u32);
+    }
+    Ok((inverse, unique))
 }
 
 // ---------------------------------------------------------------------
@@ -455,9 +493,26 @@ mod tests {
             StreamKind::MapSparse,
             StreamKind::FlatDense,
             StreamKind::FlatSparse,
+            StreamKind::DedupIndex,
         ] {
             assert_eq!(StreamKind::from_u8(k as u8).unwrap(), k);
         }
         assert!(StreamKind::from_u8(99).is_err());
+    }
+
+    #[test]
+    fn dedup_index_roundtrip_and_validation() {
+        let inverse = vec![0u32, 1, 0, 2, 1, 0];
+        let buf = encode_dedup_index(&inverse, 3);
+        let (back, unique) = decode_dedup_index(&buf).unwrap();
+        assert_eq!(back, inverse);
+        assert_eq!(unique, 3);
+        // Out-of-range inverse entries are rejected.
+        let bad = encode_dedup_index(&[0, 5], 2);
+        assert!(decode_dedup_index(&bad).is_err());
+        // Truncation errors, never panics.
+        for cut in [0usize, 1, buf.len() - 1] {
+            assert!(decode_dedup_index(&buf[..cut]).is_err());
+        }
     }
 }

@@ -10,11 +10,12 @@
 
 use super::crypto::StreamCipher;
 use super::stream::{
-    encode_flat_dense, encode_flat_sparse, encode_map_dense, encode_map_sparse,
-    encode_row_meta, StreamKind,
+    encode_dedup_index, encode_flat_dense, encode_flat_sparse,
+    encode_map_dense, encode_map_sparse, encode_row_meta, StreamKind,
 };
 use super::{FileMeta, StreamInfo, StripeInfo};
 use crate::data::{ColumnarBatch, Sample};
+use crate::dedup::DedupIndex;
 use crate::schema::FeatureId;
 
 /// Row encoding (see module docs).
@@ -24,6 +25,10 @@ pub enum Encoding {
     Map,
     /// Feature flattening: one stream per feature.
     Flattened,
+    /// Flattened + RecD-style sample deduplication: duplicate payloads
+    /// are clustered into stripes and stored once, with a row→unique
+    /// inverse index and per-row labels/timestamps.
+    Dedup,
 }
 
 #[derive(Clone, Debug)]
@@ -37,6 +42,10 @@ pub struct WriterOptions {
     /// Write order of flattened feature streams within each stripe.
     /// `None` = dataset arrival order (the paper: "effectively random").
     pub feature_order: Option<Vec<FeatureId>>,
+    /// Dedup clustering window, in stripes: duplicate payloads arriving
+    /// within `stripe_rows * dedup_window_stripes` rows of each other are
+    /// guaranteed to land in the same stripe (Dedup encoding only).
+    pub dedup_window_stripes: usize,
 }
 
 impl Default for WriterOptions {
@@ -47,6 +56,7 @@ impl Default for WriterOptions {
             zstd_level: 1,
             encrypt: true,
             feature_order: None,
+            dedup_window_stripes: 8,
         }
     }
 }
@@ -89,10 +99,21 @@ impl DwrfWriter {
         }
     }
 
+    /// Rows buffered before a flush: one stripe normally, a clustering
+    /// window of stripes for the Dedup encoding.
+    fn pending_limit(&self) -> usize {
+        match self.opts.encoding {
+            Encoding::Dedup => {
+                self.opts.stripe_rows * self.opts.dedup_window_stripes.max(1)
+            }
+            _ => self.opts.stripe_rows,
+        }
+    }
+
     pub fn write(&mut self, sample: Sample) {
         self.pending.push(sample);
-        if self.pending.len() >= self.opts.stripe_rows {
-            self.flush_stripe();
+        if self.pending.len() >= self.pending_limit() {
+            self.flush_pending();
         }
     }
 
@@ -130,15 +151,121 @@ impl DwrfWriter {
         self.buf.extend_from_slice(&data);
     }
 
-    fn flush_stripe(&mut self) {
+    /// Flush buffered rows. Map/Flattened: the buffer is exactly one
+    /// stripe. Dedup: cluster the window's rows by payload (duplicates
+    /// become adjacent, first-seen order preserved between groups), then
+    /// emit `stripe_rows`-sized stripes — duplicate sessions land in the
+    /// same stripe where the inverse index can collapse them.
+    fn flush_pending(&mut self) {
         if self.pending.is_empty() {
             return;
         }
         let samples = std::mem::take(&mut self.pending);
+        match self.opts.encoding {
+            Encoding::Dedup => self.flush_dedup_window(samples),
+            _ => self.emit_stripe(&samples, None),
+        }
+    }
+
+    /// Cluster one window of rows (payloads fingerprinted once), move
+    /// them into clustered order, and emit stripes whose local inverse
+    /// indices are *remapped* from the window-level index — no second
+    /// fingerprinting pass per stripe.
+    fn flush_dedup_window(&mut self, samples: Vec<Sample>) {
+        let idx = DedupIndex::analyze(&samples);
+        let mut order: Vec<usize> = (0..samples.len()).collect();
+        order.sort_by_key(|&r| (idx.inverse[r], r));
+        // Window-unique id per clustered position, and the rows moved
+        // (not cloned) into clustered order.
+        let win_ids: Vec<u32> =
+            order.iter().map(|&r| idx.inverse[r]).collect();
+        let mut slots: Vec<Option<Sample>> =
+            samples.into_iter().map(Some).collect();
+        let clustered: Vec<Sample> = order
+            .into_iter()
+            .map(|r| slots[r].take().expect("permutation"))
+            .collect();
+        let stripe_rows = self.opts.stripe_rows;
+        // Scratch map: window-unique id → stripe-local unique id.
+        let mut slot: Vec<u32> = vec![u32::MAX; idx.unique_count()];
+        let mut start = 0;
+        while start < clustered.len() {
+            let end = (start + stripe_rows).min(clustered.len());
+            let mut local = DedupIndex::default();
+            let mut used = Vec::new();
+            for (i, &w) in win_ids[start..end].iter().enumerate() {
+                let w = w as usize;
+                if slot[w] == u32::MAX {
+                    slot[w] = local.unique_rows.len() as u32;
+                    local.unique_rows.push(i);
+                    used.push(w);
+                }
+                local.inverse.push(slot[w]);
+            }
+            for w in used {
+                slot[w] = u32::MAX;
+            }
+            self.emit_stripe(&clustered[start..end], Some(&local));
+            start = end;
+        }
+    }
+
+    /// Emit the per-feature streams of a columnar batch in the configured
+    /// write order (shared by the Flattened and Dedup encodings).
+    fn put_feature_streams(
+        &mut self,
+        batch: &ColumnarBatch,
+        streams: &mut Vec<StreamInfo>,
+    ) {
+        // Order the feature streams. Default: interleaved arrival
+        // order (dense then sparse by id) — "effectively random"
+        // w.r.t. training-job popularity.
+        let order: Vec<FeatureId> = match &self.opts.feature_order {
+            Some(o) => o.clone(),
+            None => self
+                .dense_ids
+                .iter()
+                .chain(self.sparse_ids.iter())
+                .copied()
+                .collect(),
+        };
+        // Index columns by feature id (a linear `find` per ordered
+        // feature is O(F^2) — ~10% of write CPU at 1k features).
+        let dense_idx: std::collections::HashMap<_, _> =
+            batch.dense.iter().map(|c| (c.id, c)).collect();
+        let sparse_idx: std::collections::HashMap<_, _> =
+            batch.sparse.iter().map(|c| (c.id, c)).collect();
+        for fid in order {
+            if let Some(col) = dense_idx.get(&fid) {
+                self.put_stream(
+                    StreamKind::FlatDense,
+                    fid.0,
+                    encode_flat_dense(col),
+                    streams,
+                );
+            } else if let Some(col) = sparse_idx.get(&fid) {
+                self.put_stream(
+                    StreamKind::FlatSparse,
+                    fid.0,
+                    encode_flat_sparse(col),
+                    streams,
+                );
+            }
+        }
+    }
+
+    /// Emit one stripe. `dedup` carries the stripe-local inverse index
+    /// (Dedup encoding only; computed once per window upstream).
+    fn emit_stripe(&mut self, samples: &[Sample], dedup: Option<&DedupIndex>) {
+        if samples.is_empty() {
+            return;
+        }
         let rows = samples.len();
         let mut streams = Vec::new();
 
-        // Row meta first (labels + timestamps) — always read.
+        // Row meta first (labels + timestamps) — always read. Under the
+        // Dedup encoding this stays per-*row*: duplicate payloads keep
+        // their own outcomes and event times (losslessness).
         let labels: Vec<f32> = samples.iter().map(|s| s.label).collect();
         let ts: Vec<u64> = samples.iter().map(|s| s.timestamp).collect();
         self.put_stream(
@@ -153,63 +280,44 @@ impl DwrfWriter {
                 self.put_stream(
                     StreamKind::MapDense,
                     u32::MAX,
-                    encode_map_dense(&samples),
+                    encode_map_dense(samples),
                     &mut streams,
                 );
                 self.put_stream(
                     StreamKind::MapSparse,
                     u32::MAX,
-                    encode_map_sparse(&samples),
+                    encode_map_sparse(samples),
                     &mut streams,
                 );
             }
             Encoding::Flattened => {
                 let batch = ColumnarBatch::from_samples(
-                    &samples,
+                    samples,
                     &self.dense_ids,
                     &self.sparse_ids,
                 );
-                // Order the feature streams. Default: interleaved arrival
-                // order (dense then sparse by id) — "effectively random"
-                // w.r.t. training-job popularity.
-                let order: Vec<FeatureId> = match &self.opts.feature_order {
-                    Some(o) => o.clone(),
-                    None => self
-                        .dense_ids
-                        .iter()
-                        .chain(self.sparse_ids.iter())
-                        .copied()
-                        .collect(),
-                };
-                // Index columns by feature id (a linear `find` per ordered
-                // feature is O(F^2) — ~10% of write CPU at 1k features).
-                let dense_idx: std::collections::HashMap<_, _> = batch
-                    .dense
+                self.put_feature_streams(&batch, &mut streams);
+            }
+            Encoding::Dedup => {
+                let idx = dedup.expect("dedup stripe requires its index");
+                self.put_stream(
+                    StreamKind::DedupIndex,
+                    u32::MAX,
+                    encode_dedup_index(&idx.inverse, idx.unique_count()),
+                    &mut streams,
+                );
+                // Feature streams cover *unique* payloads only.
+                let uniques: Vec<Sample> = idx
+                    .unique_rows
                     .iter()
-                    .map(|c| (c.id, c))
+                    .map(|&r| samples[r].clone())
                     .collect();
-                let sparse_idx: std::collections::HashMap<_, _> = batch
-                    .sparse
-                    .iter()
-                    .map(|c| (c.id, c))
-                    .collect();
-                for fid in order {
-                    if let Some(col) = dense_idx.get(&fid) {
-                        self.put_stream(
-                            StreamKind::FlatDense,
-                            fid.0,
-                            encode_flat_dense(col),
-                            &mut streams,
-                        );
-                    } else if let Some(col) = sparse_idx.get(&fid) {
-                        self.put_stream(
-                            StreamKind::FlatSparse,
-                            fid.0,
-                            encode_flat_sparse(col),
-                            &mut streams,
-                        );
-                    }
-                }
+                let batch = ColumnarBatch::from_samples(
+                    &uniques,
+                    &self.dense_ids,
+                    &self.sparse_ids,
+                );
+                self.put_feature_streams(&batch, &mut streams);
             }
         }
 
@@ -223,7 +331,7 @@ impl DwrfWriter {
 
     /// Finish the file: flush the tail stripe, append footer + trailer.
     pub fn finish(mut self) -> Vec<u8> {
-        self.flush_stripe();
+        self.flush_pending();
         let meta = FileMeta {
             encoding: self.opts.encoding,
             encrypted: self.opts.encrypt,
@@ -343,5 +451,108 @@ mod tests {
         let meta = crate::dwrf::reader::DwrfReader::open(&bytes).unwrap().meta;
         assert_eq!(meta.total_rows, 0);
         assert!(meta.stripes.is_empty());
+    }
+
+    /// n samples, every `dup`-th a payload-duplicate of sample 0.
+    fn mk_dup_samples(n: usize, dup: usize) -> Vec<Sample> {
+        (0..n as u64)
+            .map(|i| {
+                let payload = if (i as usize) % dup == 0 { 0 } else { i };
+                let mut s = Sample {
+                    dense: vec![(FeatureId(0), payload as f32)],
+                    sparse: vec![(
+                        FeatureId(100),
+                        SparseValue::ids(vec![payload, payload + 1]),
+                    )],
+                    label: (i % 2) as f32,
+                    timestamp: 9000 + i,
+                };
+                s.sort_features();
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dedup_stripe_has_index_stream_and_fewer_feature_bytes() {
+        let samples = mk_dup_samples(32, 2); // half the rows share payload 0
+        let build = |enc: Encoding| -> Vec<u8> {
+            let mut w = DwrfWriter::new(
+                "t",
+                vec![FeatureId(0)],
+                vec![FeatureId(100)],
+                WriterOptions {
+                    encoding: enc,
+                    stripe_rows: 32,
+                    encrypt: false,
+                    ..Default::default()
+                },
+            );
+            w.write_all(samples.clone());
+            w.finish()
+        };
+        let flat = build(Encoding::Flattened);
+        let dedup = build(Encoding::Dedup);
+        let meta = crate::dwrf::reader::DwrfReader::open(&dedup).unwrap().meta;
+        assert_eq!(meta.encoding, Encoding::Dedup);
+        assert_eq!(meta.total_rows, 32);
+        let kinds: Vec<StreamKind> = meta.stripes[0]
+            .streams
+            .iter()
+            .map(|s| s.kind)
+            .collect();
+        assert!(kinds.contains(&StreamKind::DedupIndex));
+        assert!(kinds.contains(&StreamKind::FlatDense));
+        // Raw (pre-compression) feature bytes shrink: unique payloads only.
+        let raw_feats = |m: &crate::dwrf::FileMeta| -> u64 {
+            m.stripes
+                .iter()
+                .flat_map(|s| s.streams.iter())
+                .filter(|s| {
+                    matches!(
+                        s.kind,
+                        StreamKind::FlatDense | StreamKind::FlatSparse
+                    )
+                })
+                .map(|s| s.raw_len)
+                .sum()
+        };
+        let flat_meta =
+            crate::dwrf::reader::DwrfReader::open(&flat).unwrap().meta;
+        assert!(
+            raw_feats(&meta) < raw_feats(&flat_meta),
+            "dedup {} !< flat {}",
+            raw_feats(&meta),
+            raw_feats(&flat_meta)
+        );
+    }
+
+    #[test]
+    fn dedup_window_spans_multiple_stripes() {
+        // Duplicates are 8 rows apart with stripe_rows=4: without the
+        // clustering window they'd never share a stripe.
+        let samples = mk_dup_samples(32, 8);
+        let mut w = DwrfWriter::new(
+            "t",
+            vec![FeatureId(0)],
+            vec![FeatureId(100)],
+            WriterOptions {
+                encoding: Encoding::Dedup,
+                stripe_rows: 4,
+                dedup_window_stripes: 8,
+                ..Default::default()
+            },
+        );
+        w.write_all(samples);
+        let bytes = w.finish();
+        let meta = crate::dwrf::reader::DwrfReader::open(&bytes).unwrap().meta;
+        assert_eq!(meta.total_rows, 32);
+        assert_eq!(meta.stripes.len(), 8);
+        // Every stripe is intact: rows sum and row_starts chain.
+        let rows: u32 = meta.stripes.iter().map(|s| s.rows).sum();
+        assert_eq!(rows, 32);
+        for w in meta.stripes.windows(2) {
+            assert_eq!(w[1].row_start, w[0].row_start + w[0].rows as u64);
+        }
     }
 }

@@ -42,6 +42,16 @@ fn to_sample(f: &FeatureLog, engaged: bool) -> Sample {
     s
 }
 
+/// Duplication observed in a joined batch (RecD-style ETL-time
+/// detection): lets the materialization step decide whether a partition
+/// is worth writing with the Dedup encoding before any bytes land in
+/// the warehouse.
+pub fn duplication_stats(samples: &[Sample]) -> crate::dedup::DedupStats {
+    let mut st = crate::dedup::DedupStats::default();
+    st.record(&crate::dedup::DedupIndex::analyze(samples));
+    st
+}
+
 /// Batch join over complete streams: every feature log with a matching
 /// event log becomes a labeled sample (in feature-log order).
 pub fn batch_join(scribe: &Scribe, feature_stream: &str, event_stream: &str) -> Vec<Sample> {
@@ -160,6 +170,27 @@ mod tests {
         // Scored sparse features carry scores through the join.
         let sv = samples[0].get_sparse(FeatureId(11)).unwrap();
         assert_eq!(sv.scores.as_deref(), Some(&[0.5f32][..]));
+    }
+
+    #[test]
+    fn duplication_stats_sees_repeated_payloads() {
+        let s = Scribe::new();
+        // Two logs with identical payloads (ids 0 and 1 → same features
+        // differ; reuse feature(1) payload under a fresh request id).
+        let mut dup = match feature(1) {
+            Record::Feature(f) => f,
+            _ => unreachable!(),
+        };
+        dup.request_id = 99;
+        s.publish_all("f", vec![feature(1), Record::Feature(dup), feature(2)]);
+        s.publish_all(
+            "e",
+            vec![event(1, true), event(99, false), event(2, true)],
+        );
+        let joined = batch_join(&s, "f", "e");
+        let st = duplication_stats(&joined);
+        assert_eq!(st.rows, 3);
+        assert_eq!(st.unique_rows, 2);
     }
 
     #[test]

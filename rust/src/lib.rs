@@ -18,6 +18,13 @@
 //!   [`power`]);
 //! * the global multi-region training-job scheduler ([`sched`]) and
 //!   byte/feature popularity tracking ([`popularity`]);
+//! * RecD-style **end-to-end sample deduplication** ([`dedup`]):
+//!   content-addressed payload fingerprints and duplicate-run detection
+//!   over warehouse sessions, a DedupDWRF encoding that clusters
+//!   duplicate sessions into stripes and stores each unique feature
+//!   payload once (plus an inverse index), and a dedup-aware DPP path
+//!   that preprocesses each unique payload once and expands batches on
+//!   the Client — cutting storage, read I/O, and preprocessing together;
 //! * a PJRT runtime that executes the AOT-compiled JAX/Pallas DLRM
 //!   artifacts from the Rust hot path ([`runtime`]);
 //! * drivers that regenerate every table and figure of the paper
@@ -26,6 +33,7 @@
 pub mod config;
 pub mod data;
 pub mod datagen;
+pub mod dedup;
 pub mod dpp;
 pub mod dwrf;
 pub mod etl;

@@ -82,6 +82,12 @@ pub struct EtlMetrics {
     pub tensor_tx_bytes: Counter,    // serialized tensor bytes to clients
     pub samples: Counter,
     pub batches: Counter,
+    /// Rows actually pushed through the transform DAG (== `samples` on
+    /// the duplication-oblivious path; only unique payloads on the
+    /// dedup-aware path).
+    pub transform_rows: Counter,
+    /// Rows whose preprocessing was skipped thanks to dedup.
+    pub dedup_saved_rows: Counter,
     pub t_read: StageClock,
     pub t_extract: StageClock,
     pub t_transform: StageClock,
@@ -104,6 +110,16 @@ impl EtlMetrics {
             0.0
         } else {
             self.samples.get() as f64 / t
+        }
+    }
+
+    /// Delivered rows per transformed row (1.0 without dedup).
+    pub fn preproc_dedup_factor(&self) -> f64 {
+        let t = self.transform_rows.get();
+        if t == 0 {
+            1.0
+        } else {
+            self.samples.get() as f64 / t as f64
         }
     }
 }
@@ -299,5 +315,15 @@ mod tests {
         m.samples.add(500);
         m.t_transform.add(Duration::from_millis(500));
         assert!((m.qps() - 1000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn preproc_dedup_factor_tracks_savings() {
+        let m = EtlMetrics::default();
+        assert_eq!(m.preproc_dedup_factor(), 1.0);
+        m.samples.add(400);
+        m.transform_rows.add(100);
+        m.dedup_saved_rows.add(300);
+        assert!((m.preproc_dedup_factor() - 4.0).abs() < 1e-12);
     }
 }

@@ -111,6 +111,23 @@ impl TransformDag {
         self.outputs.push((id, node));
     }
 
+    /// Whether any op's output depends on the *row index* rather than
+    /// only the row's feature values (today: `Sampling`, whose keep-mask
+    /// hashes the row position). Such DAGs must not be evaluated over
+    /// deduplicated unique-payload batches — the dedup-aware DPP path
+    /// checks this and falls back to the duplication-oblivious path.
+    pub fn row_index_sensitive(&self) -> bool {
+        self.nodes.iter().any(|n| {
+            matches!(
+                n,
+                Node::Apply {
+                    op: super::Op::Sampling { .. },
+                    ..
+                }
+            )
+        })
+    }
+
     /// The raw features the DAG needs from storage (the projection).
     pub fn required_inputs(&self) -> Vec<FeatureId> {
         let mut v: Vec<FeatureId> = self
@@ -396,6 +413,24 @@ mod tests {
             panic!()
         }
         assert!(stats.class_frac(OpClass::FeatureGen) > 0.0);
+    }
+
+    #[test]
+    fn row_index_sensitivity_detects_sampling() {
+        let mut dag = TransformDag::default();
+        let s = dag.input(FeatureId(10));
+        let h = dag.apply(
+            Op::SigridHash {
+                salt: 1,
+                modulus: 10,
+            },
+            vec![s],
+        );
+        dag.output(FeatureId(10), h);
+        assert!(!dag.row_index_sensitive());
+        let z = dag.apply(Op::Sampling { rate: 0.5, seed: 3 }, vec![h]);
+        dag.output(FeatureId(11), z);
+        assert!(dag.row_index_sensitive());
     }
 
     #[test]

@@ -1,0 +1,297 @@
+//! End-to-end integration of the dedup subsystem: a duplicated
+//! warehouse written as DedupDWRF, preprocessed by the dedup-aware DPP
+//! path, and expanded on the client must deliver exactly the tensors of
+//! the duplication-oblivious flattened path — while storing, reading,
+//! and transforming a fraction of the bytes/rows.
+
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::datagen::build_dataset_dup;
+use dsi::dedup::scan_table;
+use dsi::dpp::{
+    DedupTensorBatch, Master, Session, SessionConfig, SessionSpec,
+    TensorBatch, WorkerCore,
+};
+use dsi::dwrf::crypto::StreamCipher;
+use dsi::dwrf::{
+    DecodeMode, DwrfReader, Encoding, IoRange, Projection, WriterOptions,
+};
+use dsi::metrics::EtlMetrics;
+use dsi::schema::FeatureKind;
+use dsi::tectonic::{Cluster, ClusterConfig};
+use dsi::transforms::{Op, TransformDag};
+use dsi::warehouse::Catalog;
+use std::sync::Arc;
+
+struct World {
+    cluster: Arc<Cluster>,
+    catalog: Catalog,
+    table: String,
+    spec: SessionSpec,
+    total_rows: u64,
+    stored_bytes: u64,
+}
+
+const SEED: u64 = 23;
+const DUP: usize = 4;
+
+fn build(encoding: Encoding) -> World {
+    let rm = RmConfig::get(RmId::Rm1);
+    let scale = SimScale {
+        rows_per_partition: 512,
+        materialized_features: 64,
+        partitions: 2,
+    };
+    let cluster = Arc::new(Cluster::new(ClusterConfig {
+        chunk_bytes: 128 << 10,
+        ..Default::default()
+    }));
+    let catalog = Catalog::new();
+    let h = build_dataset_dup(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions {
+            encoding,
+            stripe_rows: 64,
+            ..Default::default()
+        },
+        SEED,
+        DUP,
+    )
+    .unwrap();
+    // Deterministic session: normalization over a dense + sparse mix
+    // (sparse lists carry most of the payload bytes, as in production).
+    let mut dag = TransformDag::default();
+    let picked: Vec<&dsi::schema::FeatureDef> = h
+        .schema
+        .dense()
+        .take(4)
+        .chain(h.schema.sparse().take(8))
+        .collect();
+    for f in picked {
+        match f.kind {
+            FeatureKind::Dense => {
+                let i = dag.input_dense(f.id);
+                let c =
+                    dag.apply(Op::Clamp { lo: -4.0, hi: 4.0 }, vec![i]);
+                dag.output(f.id, c);
+            }
+            _ => {
+                let i = dag.input_sparse(f.id);
+                let s = dag.apply(
+                    Op::SigridHash {
+                        salt: 5,
+                        modulus: 1 << 14,
+                    },
+                    vec![i],
+                );
+                dag.output(f.id, s);
+            }
+        }
+    }
+    let spec = SessionSpec::from_dag(&h.table_name, 0, 10, dag, 32);
+    let t = catalog.get(&h.table_name).unwrap();
+    World {
+        cluster,
+        catalog,
+        table: h.table_name,
+        spec,
+        total_rows: t.total_rows(),
+        stored_bytes: t.total_bytes(),
+    }
+}
+
+/// Canonical, orderable form of one tensor row (bitwise floats).
+type RowKey = (u32, Vec<u32>, Vec<(u32, Vec<u64>)>);
+
+fn row_keys(tb: &TensorBatch) -> Vec<RowKey> {
+    let d = tb.dense_names.len();
+    (0..tb.rows)
+        .map(|r| {
+            let dense: Vec<u32> = tb.dense[r * d..(r + 1) * d]
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            let sparse: Vec<(u32, Vec<u64>)> = tb
+                .sparse
+                .iter()
+                .map(|(f, offsets, ids)| {
+                    (
+                        f.0,
+                        ids[offsets[r] as usize..offsets[r + 1] as usize]
+                            .to_vec(),
+                    )
+                })
+                .collect();
+            (tb.labels[r].to_bits(), dense, sparse)
+        })
+        .collect()
+}
+
+/// Run a single-threaded worker over the whole session; return decoded
+/// tensor batches (dedup wires expanded) and the metrics.
+fn drain(world: &World, dedup_aware: bool) -> (Vec<TensorBatch>, Arc<EtlMetrics>) {
+    let mut spec = world.spec.clone();
+    spec.pipeline.dedup_aware = dedup_aware;
+    let spec = Arc::new(spec);
+    let master =
+        Master::new(&world.catalog, &world.cluster, (*spec).clone()).unwrap();
+    let w = master.register_worker();
+    let metrics = Arc::new(EtlMetrics::default());
+    let mut core =
+        WorkerCore::new(spec.clone(), world.cluster.clone(), metrics.clone());
+    world.cluster.reset_stats();
+    let cipher = StreamCipher::for_table(&world.table);
+    let mut out = Vec::new();
+    while let Some(split) = master.fetch_split(w) {
+        for wire in core.process_split(&split).unwrap() {
+            let tb = if wire.dedup {
+                let db =
+                    DedupTensorBatch::from_wire(&cipher, wire.seq, &wire.bytes)
+                        .unwrap();
+                assert_eq!(db.rows(), wire.rows);
+                db.expand()
+            } else {
+                TensorBatch::from_wire(&cipher, wire.seq, &wire.bytes).unwrap()
+            };
+            assert_eq!(tb.rows, wire.rows);
+            out.push(tb);
+        }
+        master.complete_split(w, split.id);
+    }
+    (out, metrics)
+}
+
+#[test]
+fn warehouse_scan_sees_the_injected_duplication() {
+    let flat = build(Encoding::Flattened);
+    let rep = scan_table(&flat.cluster, &flat.catalog, &flat.table).unwrap();
+    assert_eq!(rep.global.rows, flat.total_rows);
+    assert!(
+        rep.within_partition().factor() > 2.0,
+        "observed factor {}",
+        rep.within_partition().factor()
+    );
+}
+
+#[test]
+fn dedup_file_roundtrips_the_same_sample_multiset() {
+    let flat = build(Encoding::Flattened);
+    let dedup = build(Encoding::Dedup);
+    let read_world = |w: &World| {
+        let t = w.catalog.get(&w.table).unwrap();
+        let proj =
+            Projection::new(t.schema.features.iter().map(|f| f.id));
+        let mut rows = Vec::new();
+        for p in &t.partitions {
+            let len = w.cluster.file_len(p.file).unwrap();
+            let bytes = w
+                .cluster
+                .read_range(p.file, IoRange { offset: 0, len })
+                .unwrap();
+            let r = DwrfReader::open_table(&bytes, &w.table).unwrap();
+            let plan = r.plan(&proj, None);
+            let bufs = r.fetch_local(&bytes, &plan);
+            for s in 0..r.meta.stripes.len() {
+                rows.extend(
+                    r.decode_stripe_rows(
+                        s,
+                        &bufs,
+                        &proj,
+                        DecodeMode::default(),
+                    )
+                    .unwrap(),
+                );
+            }
+        }
+        // Serving timestamps are strictly increasing → canonical order.
+        rows.sort_by_key(|s| s.timestamp);
+        rows
+    };
+    assert_eq!(read_world(&flat), read_world(&dedup));
+}
+
+#[test]
+fn dedup_aware_worker_delivers_identical_tensors() {
+    let flat = build(Encoding::Flattened);
+    let dedup = build(Encoding::Dedup);
+    let (flat_batches, flat_m) = drain(&flat, false);
+    let (dedup_batches, dedup_m) = drain(&dedup, true);
+    let rows = |bs: &[TensorBatch]| -> usize {
+        bs.iter().map(|b| b.rows).sum()
+    };
+    assert_eq!(rows(&flat_batches) as u64, flat.total_rows);
+    assert_eq!(rows(&dedup_batches) as u64, dedup.total_rows);
+    // Same multiset of fully-preprocessed rows on both paths.
+    let mut a: Vec<RowKey> =
+        flat_batches.iter().flat_map(|b| row_keys(b)).collect();
+    let mut b: Vec<RowKey> =
+        dedup_batches.iter().flat_map(|b| row_keys(b)).collect();
+    a.sort();
+    b.sort();
+    assert_eq!(a, b);
+    // And the dedup path did strictly less transform work.
+    assert!(dedup_m.transform_rows.get() < flat_m.transform_rows.get());
+    assert!(dedup_m.dedup_saved_rows.get() > 0);
+    assert_eq!(flat_m.dedup_saved_rows.get(), 0);
+}
+
+#[test]
+fn oblivious_worker_on_dedup_file_matches_dedup_aware_exactly() {
+    let world = build(Encoding::Dedup);
+    let (aware, aware_m) = drain(&world, true);
+    let (oblivious, oblivious_m) = drain(&world, false);
+    // Same file, same split order → batch-for-batch identical tensors.
+    assert_eq!(aware, oblivious);
+    assert!(aware_m.transform_rows.get() < oblivious_m.transform_rows.get());
+}
+
+#[test]
+fn dedup_halves_storage_read_and_preproc_at_factor_4() {
+    let flat = build(Encoding::Flattened);
+    let dedup = build(Encoding::Dedup);
+    assert!(
+        dedup.stored_bytes * 2 <= flat.stored_bytes,
+        "stored: dedup {} vs flat {}",
+        dedup.stored_bytes,
+        flat.stored_bytes
+    );
+    let (_, flat_m) = drain(&flat, false);
+    let (_, dedup_m) = drain(&dedup, true);
+    assert!(
+        dedup_m.transform_rows.get() * 2 <= flat_m.transform_rows.get(),
+        "preproc rows: dedup {} vs flat {}",
+        dedup_m.transform_rows.get(),
+        flat_m.transform_rows.get()
+    );
+    assert!(
+        dedup_m.storage_rx_bytes.get() * 2 <= flat_m.storage_rx_bytes.get(),
+        "read bytes: dedup {} vs flat {}",
+        dedup_m.storage_rx_bytes.get(),
+        flat_m.storage_rx_bytes.get()
+    );
+    assert!(
+        dedup_m.tensor_tx_bytes.get() < flat_m.tensor_tx_bytes.get(),
+        "wire bytes should shrink too"
+    );
+}
+
+#[test]
+fn threaded_session_over_dedup_dataset_delivers_every_row() {
+    let world = build(Encoding::Dedup);
+    let report = Session::run(
+        &world.catalog,
+        &world.cluster,
+        world.spec.clone(),
+        &SessionConfig {
+            initial_workers: 2,
+            max_workers: 4,
+            clients: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(report.rows_delivered, world.total_rows);
+    assert!(report.client_rx_bytes > 0);
+}

@@ -115,6 +115,7 @@ fn pipeline_variants_agree_on_row_count() {
                     coalesce,
                     fast_decode: fast,
                     flatmap,
+                    ..PipelineOptions::baseline()
                 };
                 let report = Session::run(
                     &w.catalog,

@@ -2,9 +2,10 @@
 //! in-repo `util::prop` mini-harness; proptest is unavailable offline).
 
 use dsi::data::{ColumnarBatch, Sample, SparseValue};
+use dsi::dedup::DedupIndex;
 use dsi::dpp::client::partition_round_robin;
 use dsi::dpp::split::splits_for_partition;
-use dsi::dpp::TensorBatch;
+use dsi::dpp::{DedupTensorBatch, TensorBatch};
 use dsi::dwrf::plan::{coalesce, IoRange};
 use dsi::dwrf::{DecodeMode, DwrfReader, DwrfWriter, Encoding, Projection, WriterOptions};
 use dsi::schema::FeatureId;
@@ -109,6 +110,164 @@ fn prop_dwrf_roundtrip_any_samples_both_encodings() {
                     "mismatch ({encoding:?}, {} rows, stripe {stripe_rows})",
                     samples.len()
                 ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dedup_dwrf_roundtrips_duplicated_sample_sets() {
+    check("dedup dwrf roundtrip", 40, |g| {
+        // Fan each base sample out into 1..=4 payload-identical copies
+        // with independent labels, give every row a unique timestamp
+        // (the canonical order key), then scatter.
+        let base = random_samples(g);
+        let mut rows = Vec::new();
+        for s in &base {
+            for _ in 0..g.usize(1..5) {
+                let mut c = s.clone();
+                c.label = if g.bool() { 1.0 } else { 0.0 };
+                rows.push(c);
+            }
+        }
+        for (i, r) in rows.iter_mut().enumerate() {
+            r.timestamp = i as u64;
+        }
+        g.rng.shuffle(&mut rows);
+        let dense_ids: Vec<FeatureId> = (0..6).map(FeatureId).collect();
+        let sparse_ids: Vec<FeatureId> = (10..15).map(FeatureId).collect();
+        let stripe_rows = g.usize(1..16);
+        let mut w = DwrfWriter::new(
+            "prop",
+            dense_ids.clone(),
+            sparse_ids.clone(),
+            WriterOptions {
+                encoding: Encoding::Dedup,
+                stripe_rows,
+                dedup_window_stripes: g.usize(1..6),
+                ..Default::default()
+            },
+        );
+        w.write_all(rows.clone());
+        let bytes = w.finish();
+        let r = DwrfReader::open_table(&bytes, "prop")
+            .map_err(|e| e.to_string())?;
+        if r.meta.total_rows as usize != rows.len() {
+            return Err("row count lost".into());
+        }
+        let proj = Projection::new(
+            dense_ids.iter().chain(sparse_ids.iter()).copied(),
+        );
+        let plan = r.plan(&proj, None);
+        let bufs = r.fetch_local(&bytes, &plan);
+        let mut back = Vec::new();
+        for s in 0..r.meta.stripes.len() {
+            back.extend(
+                r.decode_stripe_rows(s, &bufs, &proj, DecodeMode::default())
+                    .map_err(|e| e.to_string())?,
+            );
+        }
+        // The clustering window permutes rows; the multiset must be
+        // exactly preserved (unique timestamps give a canonical order).
+        back.sort_by_key(|s| s.timestamp);
+        let mut want = rows.clone();
+        want.sort_by_key(|s| s.timestamp);
+        if back != want {
+            return Err(format!(
+                "dedup roundtrip lost data ({} rows, stripe {stripe_rows})",
+                rows.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dedup_index_expansion_is_identity() {
+    check("dedup index expansion", 80, |g| {
+        let base = random_samples(g);
+        let mut rows = Vec::new();
+        for s in &base {
+            for _ in 0..g.usize(1..4) {
+                rows.push(s.clone());
+            }
+        }
+        g.rng.shuffle(&mut rows);
+        let idx = DedupIndex::analyze(&rows);
+        if idx.inverse.len() != rows.len() {
+            return Err("inverse arity".into());
+        }
+        if idx.unique_count() > rows.len() {
+            return Err("more uniques than rows".into());
+        }
+        for (r, &u) in idx.inverse.iter().enumerate() {
+            let rep = &rows[idx.unique_rows[u as usize]];
+            if rep.dense != rows[r].dense || rep.sparse != rows[r].sparse {
+                return Err(format!("row {r} mapped to wrong payload"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dedup_tensor_wire_roundtrip_and_expand() {
+    check("dedup tensor wire roundtrip", 100, |g| {
+        let uniques = g.usize(1..8);
+        let nd = g.usize(0..4);
+        let dense: Vec<f32> = (0..uniques * nd).map(|_| g.f32()).collect();
+        let mut sparse = Vec::new();
+        for f in 0..g.usize(0..3) {
+            let mut offsets = vec![0u32];
+            let mut ids = Vec::new();
+            for _ in 0..uniques {
+                ids.extend(g.vec_u64(0..1 << 40, 5));
+                offsets.push(ids.len() as u32);
+            }
+            sparse.push((FeatureId(200 + f as u32), offsets, ids));
+        }
+        let unique = TensorBatch {
+            rows: uniques,
+            dense,
+            dense_names: (0..nd as u32).map(FeatureId).collect(),
+            sparse,
+            labels: vec![0.0; uniques],
+        };
+        let rows = g.usize(1..24);
+        let inverse: Vec<u32> =
+            (0..rows).map(|_| g.u64(0..uniques as u64) as u32).collect();
+        let labels: Vec<f32> =
+            (0..rows).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
+        let db = DedupTensorBatch {
+            inverse: inverse.clone(),
+            labels: labels.clone(),
+            unique,
+        };
+        let back = DedupTensorBatch::deserialize(&db.serialize())
+            .map_err(|e| e.to_string())?;
+        if back != db {
+            return Err("wire mismatch".into());
+        }
+        let full = back.expand();
+        if full.rows != rows || full.labels != labels {
+            return Err("expand shape".into());
+        }
+        for (i, &u) in inverse.iter().enumerate() {
+            for (f, offsets, ids) in &full.sparse {
+                let (_, uo, uids) = db
+                    .unique
+                    .sparse
+                    .iter()
+                    .find(|(uf, _, _)| uf == f)
+                    .ok_or("missing sparse feature")?;
+                let got =
+                    &ids[offsets[i] as usize..offsets[i + 1] as usize];
+                let want = &uids
+                    [uo[u as usize] as usize..uo[u as usize + 1] as usize];
+                if got != want {
+                    return Err(format!("row {i} sparse mismatch"));
+                }
             }
         }
         Ok(())
