@@ -1,0 +1,294 @@
+//! Filter-pushdown benchmark: what pushing the session row predicate
+//! down to stripe stats + selection vectors buys over the
+//! decode-then-filter baseline, across target selectivities
+//! {1.0, 0.5, 0.1, 0.01}. Reports bytes read off storage, rows/bytes
+//! decoded, and delivered rows/s; also proves stripe-stat pruning
+//! issues **zero** I/Os for a fully-filtered session. Emits
+//! `target/filter_results.json` alongside the other machine-readable
+//! tables.
+
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::datagen::{build_dataset_with, GenOptions};
+use dsi::dpp::{Master, SessionSpec, WorkerCore};
+use dsi::dwrf::WriterOptions;
+use dsi::filter::RowPredicate;
+use dsi::metrics::{EtlMetrics, Table};
+use dsi::schema::{FeatureId, FeatureKind};
+use dsi::tectonic::{Cluster, ClusterConfig};
+use dsi::transforms::{Op, TransformDag};
+use dsi::util::json::Json;
+use dsi::util::rng::Pcg32;
+use dsi::warehouse::Catalog;
+use std::sync::Arc;
+use std::time::Instant;
+
+const SEED: u64 = 29;
+
+struct World {
+    cluster: Arc<Cluster>,
+    catalog: Catalog,
+    spec: SessionSpec,
+    total_rows: u64,
+    /// (min_ts, max_ts, rows) per stripe, all partitions.
+    stripe_spans: Vec<(u64, u64, u32)>,
+}
+
+fn build() -> World {
+    let rm = RmConfig::get(RmId::Rm1);
+    let scale = SimScale {
+        rows_per_partition: 2048,
+        materialized_features: 128,
+        partitions: 2,
+    };
+    let cluster = Arc::new(Cluster::new(ClusterConfig {
+        chunk_bytes: 256 << 10,
+        ..Default::default()
+    }));
+    let catalog = Catalog::new();
+    let h = build_dataset_with(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions {
+            stripe_rows: 128,
+            ..Default::default()
+        },
+        SEED,
+        &GenOptions {
+            tick_max: 40, // spread timestamps so recency windows bite
+            ..Default::default()
+        },
+    )
+    .expect("build dataset");
+
+    // A normalization session over ~25% of the features.
+    let mut rng = Pcg32::new(SEED ^ 0xF11E);
+    let take = (h.schema.features.len() / 4).max(4);
+    let proj: Vec<FeatureId> = h.schema.sample_projection(&mut rng, take, 1.0);
+    let mut dag = TransformDag::default();
+    for &fid in &proj {
+        match h.schema.by_id(fid).map(|d| d.kind) {
+            Some(FeatureKind::Dense) => {
+                let i = dag.input_dense(fid);
+                let c = dag.apply(Op::Clamp { lo: -3.0, hi: 3.0 }, vec![i]);
+                dag.output(fid, c);
+            }
+            _ => {
+                let i = dag.input_sparse(fid);
+                let s = dag.apply(
+                    Op::SigridHash {
+                        salt: 7,
+                        modulus: 1 << 16,
+                    },
+                    vec![i],
+                );
+                dag.output(fid, s);
+            }
+        }
+    }
+    let spec = SessionSpec::from_dag(&h.table_name, 0, u32::MAX, dag, 64);
+
+    let table = catalog.get(&h.table_name).unwrap();
+    let mut stripe_spans = Vec::new();
+    for p in &table.partitions {
+        let meta = Master::fetch_meta(&cluster, p.file).expect("footer");
+        for s in &meta.stripes {
+            stripe_spans.push((
+                s.stats.min_timestamp,
+                s.stats.max_timestamp,
+                s.rows,
+            ));
+        }
+    }
+    World {
+        cluster,
+        catalog,
+        spec,
+        total_rows: table.total_rows(),
+        stripe_spans,
+    }
+}
+
+/// Approximate row-weighted timestamp quantile from stripe spans
+/// (rows assumed uniform within a stripe).
+fn ts_quantile(spans: &[(u64, u64, u32)], q: f64) -> u64 {
+    let mut sorted = spans.to_vec();
+    sorted.sort_by_key(|s| s.0);
+    let total: u64 = sorted.iter().map(|s| s.2 as u64).sum();
+    let want = (q * total as f64).round() as u64;
+    let mut cum = 0u64;
+    for &(min, max, rows) in &sorted {
+        if cum + rows as u64 >= want {
+            let frac = want.saturating_sub(cum) as f64 / rows.max(1) as f64;
+            return min + ((max - min) as f64 * frac) as u64;
+        }
+        cum += rows as u64;
+    }
+    sorted.iter().map(|s| s.1).max().unwrap_or(u64::MAX)
+}
+
+struct Out {
+    read_bytes: u64,
+    decoded_rows: u64,
+    decoded_bytes: u64,
+    delivered: u64,
+    skipped_stripes: u64,
+    skipped_bytes: u64,
+    wall_secs: f64,
+}
+
+fn run(world: &World, predicate: RowPredicate, pushdown: bool) -> Out {
+    let mut spec = world.spec.clone().with_predicate(predicate);
+    spec.pipeline.pushdown = pushdown;
+    let spec = Arc::new(spec);
+    let master = Master::new(&world.catalog, &world.cluster, (*spec).clone())
+        .expect("master");
+    let w = master.register_worker();
+    let metrics = Arc::new(EtlMetrics::default());
+    let mut core = WorkerCore::new(spec, world.cluster.clone(), metrics.clone());
+    world.cluster.reset_stats();
+    let t = Instant::now();
+    while let Some(split) = master.fetch_split(w) {
+        core.process_split(&split).expect("process split");
+        master.complete_split(w, split.id);
+    }
+    Out {
+        read_bytes: metrics.storage_rx_bytes.get(),
+        decoded_rows: metrics.decoded_rows.get(),
+        decoded_bytes: metrics.extract_out_bytes.get(),
+        delivered: metrics.samples.get(),
+        skipped_stripes: metrics.skipped_stripes.get()
+            + master.skipped_split_stripes() as u64,
+        skipped_bytes: metrics.skipped_bytes.get(),
+        wall_secs: t.elapsed().as_secs_f64(),
+    }
+}
+
+fn main() {
+    let world = build();
+    let tmin = ts_quantile(&world.stripe_spans, 0.0);
+    let mut table = Table::new(
+        "Filter pushdown vs decode-then-filter (RM1, 4096 rows, \
+         timestamp-recency predicate)",
+        &[
+            "sel",
+            "realized",
+            "read MB (base/push)",
+            "read x",
+            "decoded rows (base/push)",
+            "decoded x",
+            "skipped stripes",
+            "rows/s x",
+        ],
+    );
+    let mut arr = Vec::new();
+    let mut crit_decoded_x = 0.0;
+    let mut crit_bytes_x = 0.0;
+    let mut crit_rows_reduced = false;
+    for sel in [1.0f64, 0.5, 0.1, 0.01] {
+        let cut = if sel >= 1.0 {
+            u64::MAX
+        } else {
+            ts_quantile(&world.stripe_spans, sel)
+        };
+        let pred = RowPredicate::TimestampRange {
+            min: tmin,
+            max: cut,
+        };
+        let base = run(&world, pred.clone(), false);
+        let push = run(&world, pred, true);
+        assert_eq!(
+            base.delivered, push.delivered,
+            "pushdown must be lossless"
+        );
+        let realized = push.delivered as f64 / world.total_rows as f64;
+        let read_x = base.read_bytes as f64 / push.read_bytes.max(1) as f64;
+        let dec_x =
+            base.decoded_rows as f64 / push.decoded_rows.max(1) as f64;
+        let bytes_x =
+            base.decoded_bytes as f64 / push.decoded_bytes.max(1) as f64;
+        let sps_x = (push.delivered as f64 / push.wall_secs.max(1e-9))
+            / (base.delivered as f64 / base.wall_secs.max(1e-9)).max(1e-9);
+        if (sel - 0.1).abs() < 1e-9 {
+            crit_decoded_x = dec_x;
+            crit_bytes_x = bytes_x;
+            crit_rows_reduced = push.decoded_rows < base.decoded_rows;
+        }
+        table.row(&[
+            format!("{sel}"),
+            format!("{realized:.3}"),
+            format!(
+                "{:.2}/{:.2}",
+                base.read_bytes as f64 / 1e6,
+                push.read_bytes as f64 / 1e6
+            ),
+            format!("{read_x:.2}"),
+            format!("{}/{}", base.decoded_rows, push.decoded_rows),
+            format!("{dec_x:.2}"),
+            format!("{}", push.skipped_stripes),
+            format!("{sps_x:.2}"),
+        ]);
+        let mut j = Json::obj();
+        j.set("target_selectivity", sel)
+            .set("realized_selectivity", realized)
+            .set("base_read_bytes", base.read_bytes)
+            .set("push_read_bytes", push.read_bytes)
+            .set("read_reduction", read_x)
+            .set("base_decoded_rows", base.decoded_rows)
+            .set("push_decoded_rows", push.decoded_rows)
+            .set("decoded_rows_reduction", dec_x)
+            .set("base_decoded_bytes", base.decoded_bytes)
+            .set("push_decoded_bytes", push.decoded_bytes)
+            .set("decoded_bytes_reduction", bytes_x)
+            .set("delivered_rows", push.delivered)
+            .set("skipped_stripes", push.skipped_stripes)
+            .set("skipped_bytes", push.skipped_bytes)
+            .set("base_wall_secs", base.wall_secs)
+            .set("push_wall_secs", push.wall_secs);
+        arr.push(j);
+    }
+    table.print();
+
+    // Fully-filtered session: every stripe pruned from footer stats —
+    // zero data I/Os issued.
+    let disjoint = RowPredicate::TimestampRange {
+        min: u64::MAX - 1,
+        max: u64::MAX,
+    };
+    let none = run(&world, disjoint, true);
+    let zero_io = none.read_bytes == 0 && none.delivered == 0;
+    println!(
+        "\nfully-filtered session: {} bytes read, {} rows delivered, \
+         {} stripes skipped ({})",
+        none.read_bytes,
+        none.delivered,
+        none.skipped_stripes,
+        if zero_io { "zero-I/O PASS" } else { "FAIL" }
+    );
+
+    let pass = crit_decoded_x >= 2.0
+        && crit_bytes_x >= 2.0
+        && crit_rows_reduced
+        && zero_io;
+    println!(
+        "\ncriterion @ sel=0.1: decoded-rows reduction {crit_decoded_x:.2}x, \
+         decoded-bytes reduction {crit_bytes_x:.2}x (targets >= 2x), \
+         zero-I/O on fully-filtered: {zero_io}: {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+    let mut out = Json::obj();
+    out.set("table", Json::Arr(arr));
+    out.set("zero_io_fully_filtered", zero_io);
+    out.set("criterion_pass", pass);
+    let _ = std::fs::create_dir_all("target");
+    let path = "target/filter_results.json";
+    if std::fs::write(path, out.to_string_pretty()).is_ok() {
+        println!("wrote {path}");
+    }
+    // CI smoke: regressions that erode pushdown below the acceptance
+    // criterion fail the bench step.
+    if !pass {
+        std::process::exit(1);
+    }
+}

@@ -116,6 +116,17 @@ impl Bitmap {
         self.bits.iter().map(|w| w.count_ones() as usize).sum()
     }
 
+    /// Indices of set bits, ascending — the selection-vector form.
+    pub fn ones(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.count_ones());
+        for i in 0..self.len {
+            if self.get(i) {
+                out.push(i as u32);
+            }
+        }
+        out
+    }
+
     pub fn words(&self) -> &[u64] {
         &self.bits
     }
@@ -193,6 +204,14 @@ pub struct ColumnarBatch {
     pub sparse: Vec<SparseColumn>,
     pub labels: Vec<f32>,
     pub timestamps: Vec<u64>,
+    /// Predicate-driven selection vector: ascending indices of the rows
+    /// that survive the session's row filter. `None` ⇒ every row. A
+    /// partially-matching stripe decodes **once** and carries its
+    /// survivors here; the holder must [`ColumnarBatch::compact`]
+    /// before handing the batch to consumers that read rows positionally
+    /// (`to_samples`, DAG execution, tensorization) — those treat every
+    /// physical row as live and ignore this field.
+    pub selection: Option<Vec<u32>>,
 }
 
 impl ColumnarBatch {
@@ -307,6 +326,7 @@ impl ColumnarBatch {
             sparse,
             labels: samples.iter().map(|s| s.label).collect(),
             timestamps: samples.iter().map(|s| s.timestamp).collect(),
+            selection: None,
         }
     }
 
@@ -377,6 +397,33 @@ impl ColumnarBatch {
             timestamps: (0..rows)
                 .map(|i| self.timestamps.get(pick(i)).copied().unwrap_or(0))
                 .collect(),
+            selection: None,
+        }
+    }
+
+    /// Rows surviving the selection (`num_rows` when unfiltered).
+    pub fn live_rows(&self) -> usize {
+        self.selection.as_ref().map_or(self.num_rows, |s| s.len())
+    }
+
+    /// Attach a predicate-driven selection vector (ascending row indices).
+    pub fn with_selection(mut self, selection: Vec<u32>) -> ColumnarBatch {
+        debug_assert!(selection.windows(2).all(|w| w[0] < w[1]));
+        debug_assert!(match selection.last() {
+            Some(&r) => (r as usize) < self.num_rows,
+            None => true,
+        });
+        self.selection = Some(selection);
+        self
+    }
+
+    /// Materialize only the surviving rows as a dense batch (selection
+    /// applied and cleared) — the compact-on-ship step at the tensor
+    /// boundary. A no-op clone when no selection is attached.
+    pub fn compact(&self) -> ColumnarBatch {
+        match &self.selection {
+            None => self.clone(),
+            Some(sel) => self.gather(sel),
         }
     }
 
@@ -498,6 +545,39 @@ mod tests {
         );
         let idx: Vec<u32> = (0..6).collect();
         assert_eq!(batch.gather(&idx), batch);
+    }
+
+    #[test]
+    fn selection_compacts_to_surviving_rows() {
+        let samples: Vec<Sample> = (0..6).map(sample).collect();
+        let batch = ColumnarBatch::from_samples(
+            &samples,
+            &[FeatureId(0), FeatureId(2)],
+            &[FeatureId(10), FeatureId(11)],
+        );
+        assert_eq!(batch.live_rows(), 6);
+        let sel = batch.clone().with_selection(vec![1, 4, 5]);
+        assert_eq!(sel.live_rows(), 3);
+        let compacted = sel.compact();
+        assert_eq!(compacted.num_rows, 3);
+        assert!(compacted.selection.is_none());
+        let want: Vec<Sample> = [1usize, 4, 5]
+            .iter()
+            .map(|&i| samples[i].clone())
+            .collect();
+        assert_eq!(compacted.to_samples(), want);
+        // Compacting an unselected batch is the identity.
+        assert_eq!(batch.compact(), batch);
+    }
+
+    #[test]
+    fn bitmap_ones_lists_set_bits() {
+        let mut b = Bitmap::new(70);
+        b.set(0);
+        b.set(63);
+        b.set(69);
+        assert_eq!(b.ones(), vec![0, 63, 69]);
+        assert_eq!(Bitmap::new(0).ones(), Vec::<u32>::new());
     }
 
     #[test]

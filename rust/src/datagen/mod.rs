@@ -47,6 +47,11 @@ pub struct ServingSim {
     pub schema: Schema,
     zipf_ids: Zipf,
     ctr: f64,
+    /// Upper bound of the random inter-arrival tick (seconds): larger
+    /// values spread a partition's event timestamps across more of the
+    /// day, which is what makes timestamp-recency predicates select
+    /// realistic row fractions.
+    tick_max: u64,
     next_request: u64,
     clock: u64,
 }
@@ -57,16 +62,23 @@ impl ServingSim {
             schema,
             zipf_ids: Zipf::new(4096, 1.05),
             ctr,
+            tick_max: 5,
             next_request: 0,
             clock: epoch,
         }
+    }
+
+    /// Override the inter-arrival tick bound (default 5s).
+    pub fn with_tick_max(mut self, tick_max: u64) -> ServingSim {
+        self.tick_max = tick_max.max(1);
+        self
     }
 
     /// Serve one request: emit the feature log and the (monitored) event.
     pub fn serve(&mut self, rng: &mut Pcg32) -> (FeatureLog, EventLog) {
         let request_id = self.next_request;
         self.next_request += 1;
-        self.clock += 1 + rng.below(5);
+        self.clock += 1 + rng.below(self.tick_max);
         let mut dense = Vec::new();
         let mut sparse = Vec::new();
         let mut scored = Vec::new();
@@ -136,7 +148,7 @@ impl ServingSim {
         for _ in 1..copies.max(1) {
             let request_id = self.next_request;
             self.next_request += 1;
-            self.clock += 1 + rng.below(5);
+            self.clock += 1 + rng.below(self.tick_max);
             let base = &out[0].0;
             let flog = FeatureLog {
                 request_id,
@@ -156,6 +168,32 @@ impl ServingSim {
     }
 }
 
+/// Knobs for the partition generator — the statistics that determine
+/// how selective pushed-down predicates are against the produced
+/// warehouse.
+#[derive(Clone, Debug)]
+pub struct GenOptions {
+    /// Mean session fan-out (payload-identical impressions); `<= 1` is
+    /// the duplication-free path.
+    pub dup_factor: usize,
+    /// Positive-label rate — the label skew negative downsampling
+    /// filters against.
+    pub ctr: f64,
+    /// Inter-arrival tick bound (seconds): spreads event timestamps so
+    /// recency windows select stripe subsets instead of all-or-nothing.
+    pub tick_max: u64,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        GenOptions {
+            dup_factor: 1,
+            ctr: 0.12,
+            tick_max: 5,
+        }
+    }
+}
+
 /// Generate one day-partition worth of labeled samples through the real
 /// offline path: serving sim → Scribe streams → ETL batch join.
 pub fn generate_partition_samples(
@@ -164,17 +202,7 @@ pub fn generate_partition_samples(
     rows: usize,
     day: u32,
 ) -> Vec<Sample> {
-    let scribe = Scribe::new();
-    let mut sim = ServingSim::new(schema.clone(), 0.12, day as u64 * 86_400);
-    let fstream = "features";
-    let estream = "events";
-    for _ in 0..rows {
-        let (f, e) = sim.serve(rng);
-        scribe.publish(fstream, Record::Feature(f));
-        // Events arrive on their own stream (order independent of features).
-        scribe.publish(estream, Record::Event(e));
-    }
-    etl::batch_join(&scribe, fstream, estream)
+    generate_partition_samples_with(rng, schema, rows, day, &GenOptions::default())
 }
 
 /// [`generate_partition_samples`] with a duplication factor: sessions fan
@@ -189,16 +217,47 @@ pub fn generate_partition_samples_dup(
     day: u32,
     dup_factor: usize,
 ) -> Vec<Sample> {
-    if dup_factor <= 1 {
-        return generate_partition_samples(rng, schema, rows, day);
-    }
+    generate_partition_samples_with(
+        rng,
+        schema,
+        rows,
+        day,
+        &GenOptions {
+            dup_factor,
+            ..Default::default()
+        },
+    )
+}
+
+/// The fully-parameterized partition generator: timestamps are stamped
+/// from the day's epoch with `tick_max`-bounded inter-arrival gaps and
+/// labels skewed to `ctr`, so generated warehouses expose realistic
+/// selectivity to timestamp-recency and label predicates.
+pub fn generate_partition_samples_with(
+    rng: &mut Pcg32,
+    schema: &Schema,
+    rows: usize,
+    day: u32,
+    opts: &GenOptions,
+) -> Vec<Sample> {
     let scribe = Scribe::new();
-    let mut sim = ServingSim::new(schema.clone(), 0.12, day as u64 * 86_400);
+    let mut sim = ServingSim::new(schema.clone(), opts.ctr, day as u64 * 86_400)
+        .with_tick_max(opts.tick_max);
     let fstream = "features";
     let estream = "events";
+    if opts.dup_factor <= 1 {
+        for _ in 0..rows {
+            let (f, e) = sim.serve(rng);
+            scribe.publish(fstream, Record::Feature(f));
+            // Events arrive on their own stream (order independent of
+            // features).
+            scribe.publish(estream, Record::Event(e));
+        }
+        return etl::batch_join(&scribe, fstream, estream);
+    }
     let mut pairs = Vec::with_capacity(rows);
     while pairs.len() < rows {
-        let copies = (rng.geometric(dup_factor as f64) as usize)
+        let copies = (rng.geometric(opts.dup_factor as f64) as usize)
             .min(rows - pairs.len())
             .max(1);
         pairs.extend(sim.serve_session(rng, copies));
@@ -246,6 +305,31 @@ pub fn build_dataset_dup(
     seed: u64,
     dup_factor: usize,
 ) -> Result<DatasetHandle> {
+    build_dataset_with(
+        cluster,
+        catalog,
+        rm,
+        scale,
+        writer_opts,
+        seed,
+        &GenOptions {
+            dup_factor,
+            ..Default::default()
+        },
+    )
+}
+
+/// [`build_dataset`] with full [`GenOptions`] control: duplication,
+/// label skew (CTR), and timestamp spread.
+pub fn build_dataset_with(
+    cluster: &Cluster,
+    catalog: &Catalog,
+    rm: &RmConfig,
+    scale: &SimScale,
+    writer_opts: WriterOptions,
+    seed: u64,
+    opts: &GenOptions,
+) -> Result<DatasetHandle> {
     let mut rng = Pcg32::new(seed);
     let schema = materialized_schema(&mut rng, rm, scale);
     let table_name = format!("{}_table", rm.id.name().to_lowercase());
@@ -258,12 +342,12 @@ pub fn build_dataset_dup(
     });
     for day in 0..scale.partitions as u32 {
         let mut part_rng = rng.fork(day as u64);
-        let samples = generate_partition_samples_dup(
+        let samples = generate_partition_samples_with(
             &mut part_rng,
             &schema,
             scale.rows_per_partition,
             day,
-            dup_factor,
+            opts,
         );
         let mut writer = DwrfWriter::new(
             &table_name,
@@ -405,6 +489,56 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), 5);
+    }
+
+    #[test]
+    fn gen_options_control_skew_and_spread() {
+        let mut rng = Pcg32::new(12);
+        let schema = Schema::synthetic(&mut rng, 10, 5, 0.6, 8.0);
+        let n = 400;
+        let tight = generate_partition_samples_with(
+            &mut rng.fork(1),
+            &schema,
+            n,
+            0,
+            &GenOptions {
+                tick_max: 2,
+                ..Default::default()
+            },
+        );
+        let spread = generate_partition_samples_with(
+            &mut rng.fork(2),
+            &schema,
+            n,
+            0,
+            &GenOptions {
+                tick_max: 200,
+                ctr: 0.5,
+                ..Default::default()
+            },
+        );
+        let span = |xs: &[Sample]| {
+            let min = xs.iter().map(|s| s.timestamp).min().unwrap();
+            let max = xs.iter().map(|s| s.timestamp).max().unwrap();
+            max - min
+        };
+        assert!(
+            span(&spread) > span(&tight) * 10,
+            "tick_max must spread timestamps: {} vs {}",
+            span(&spread),
+            span(&tight)
+        );
+        // CTR controls the label skew selectivity works against.
+        let pos = |xs: &[Sample]| {
+            xs.iter().filter(|s| s.label == 1.0).count() as f64
+                / xs.len() as f64
+        };
+        assert!(pos(&tight) < 0.25, "default ctr ~0.12, got {}", pos(&tight));
+        assert!(
+            (pos(&spread) - 0.5).abs() < 0.12,
+            "ctr 0.5, got {}",
+            pos(&spread)
+        );
     }
 
     #[test]

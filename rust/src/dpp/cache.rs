@@ -17,6 +17,7 @@ use super::spec::SessionSpec;
 use super::split::Split;
 use super::worker::WireBatch;
 use crate::dedup::Fnv64;
+use crate::filter::RowPredicate;
 use crate::metrics::Counter;
 use crate::transforms::dag::InputKind;
 use crate::transforms::{Node, Op};
@@ -41,8 +42,18 @@ pub fn session_fingerprint(spec: &SessionSpec) -> u64 {
     h.write_u8(spec.pipeline.fast_decode as u8);
     h.write_u8(spec.pipeline.flatmap as u8);
     h.write_u8(spec.pipeline.dedup_aware as u8);
+    h.write_u8(spec.pipeline.pushdown as u8);
     h.write_u8(spec.pipeline.coalesce.is_some() as u8);
     h.write_u64(spec.pipeline.coalesce.unwrap_or(0));
+    // Row predicate: filtered and unfiltered sessions (or two different
+    // filters) must never share cached tensors.
+    match &spec.predicate {
+        None => h.write_u8(0),
+        Some(p) => {
+            h.write_u8(1);
+            eat_pred(&mut h, p);
+        }
+    }
     // Full DAG structure: node kinds, op parameters, wiring, outputs.
     h.write_u64(spec.dag.nodes.len() as u64);
     for node in &spec.dag.nodes {
@@ -72,6 +83,39 @@ pub fn session_fingerprint(spec: &SessionSpec) -> u64 {
         h.write_u64(*node as u64);
     }
     h.finish()
+}
+
+/// Hash one predicate with all its parameters (exhaustive on purpose,
+/// like [`eat_op`]).
+fn eat_pred(h: &mut Fnv64, p: &RowPredicate) {
+    match p {
+        RowPredicate::TimestampRange { min, max } => {
+            h.write_u8(0);
+            h.write_u64(*min);
+            h.write_u64(*max);
+        }
+        RowPredicate::NegativeDownsample { rate, seed } => {
+            h.write_u8(1);
+            h.write_u64(rate.to_bits());
+            h.write_u64(*seed);
+        }
+        RowPredicate::FeaturePresent { feature } => {
+            h.write_u8(2);
+            h.write_u32(feature.0);
+        }
+        RowPredicate::SampleRate { rate, seed } => {
+            h.write_u8(3);
+            h.write_u64(rate.to_bits());
+            h.write_u64(*seed);
+        }
+        RowPredicate::And(ps) => {
+            h.write_u8(4);
+            h.write_u64(ps.len() as u64);
+            for q in ps {
+                eat_pred(h, q);
+            }
+        }
+    }
 }
 
 /// Hash one op with all its parameters (exhaustive on purpose: adding an
@@ -367,6 +411,33 @@ mod tests {
         let mut d = mk(Op::FirstX { x: 5 });
         d.pipeline.dedup_aware = !d.pipeline.dedup_aware;
         assert_ne!(session_fingerprint(&c), session_fingerprint(&d));
+    }
+
+    #[test]
+    fn fingerprint_covers_row_predicate() {
+        let base = spec("t", &[1, 2], 32);
+        let a = base.clone().with_predicate(RowPredicate::SampleRate {
+            rate: 0.5,
+            seed: 1,
+        });
+        let b = base.clone().with_predicate(RowPredicate::SampleRate {
+            rate: 0.5,
+            seed: 2,
+        });
+        let c = base.clone().with_predicate(RowPredicate::And(vec![
+            RowPredicate::TimestampRange { min: 0, max: 9 },
+            RowPredicate::FeaturePresent {
+                feature: FeatureId(1),
+            },
+        ]));
+        let f0 = session_fingerprint(&base);
+        let fa = session_fingerprint(&a);
+        let fb = session_fingerprint(&b);
+        let fc = session_fingerprint(&c);
+        assert_ne!(f0, fa, "predicate must change the fingerprint");
+        assert_ne!(fa, fb, "predicate seed matters");
+        assert_ne!(fa, fc);
+        assert_eq!(fa, session_fingerprint(&a.clone()), "deterministic");
     }
 
     #[test]

@@ -76,6 +76,13 @@ impl Client {
         }
         let start = Instant::now();
         let mut disconnected = vec![false; self.rxs.len()];
+        // Bounded parked wait between polling sweeps: an idle trainer
+        // client must not burn a full core spinning on `yield_now`. The
+        // park slice doubles from 10µs up to 1ms (staying responsive to
+        // bursts while capping wake-ups at ~1k/s when drained) and never
+        // overshoots the caller's timeout.
+        let mut park = Duration::from_micros(10);
+        const PARK_MAX: Duration = Duration::from_millis(1);
         loop {
             let mut all_dead = true;
             for k in 0..self.rxs.len() {
@@ -122,12 +129,14 @@ impl Client {
             if all_dead {
                 return Ok(None);
             }
-            if start.elapsed() > timeout {
-                *self.stall_secs.lock().unwrap() +=
-                    start.elapsed().as_secs_f64();
+            let elapsed = start.elapsed();
+            if elapsed > timeout {
+                *self.stall_secs.lock().unwrap() += elapsed.as_secs_f64();
                 return Ok(None);
             }
-            std::thread::yield_now();
+            let remaining = timeout - elapsed;
+            std::thread::park_timeout(park.min(remaining));
+            park = (park * 2).min(PARK_MAX);
         }
     }
 
@@ -242,6 +251,42 @@ mod tests {
         assert_eq!(got.sparse[0].1, vec![0, 2, 3, 5, 7]);
         assert_eq!(got.sparse[0].2, vec![6, 7, 5, 6, 7, 6, 7]);
         assert_eq!(client.dedup_expanded.get(), 1);
+    }
+
+    #[test]
+    fn parked_wait_still_receives_late_batches() {
+        let (tx, rx) = sync_channel(1);
+        let cipher = StreamCipher::for_table("t");
+        let tb = TensorBatch {
+            rows: 1,
+            dense: vec![7.0],
+            dense_names: vec![crate::schema::FeatureId(0)],
+            sparse: vec![],
+            labels: vec![1.0],
+        };
+        let bytes = tb.to_wire(&cipher, 0);
+        let sender = std::thread::spawn(move || {
+            // Arrive mid-wait, after the client has started parking.
+            std::thread::sleep(Duration::from_millis(30));
+            tx.send(WireBatch {
+                seq: 0,
+                rows: 1,
+                dedup: false,
+                bytes,
+            })
+            .unwrap();
+        });
+        let mut client = Client::new("t", vec![rx]);
+        let got = client
+            .next_batch(Duration::from_secs(5))
+            .unwrap()
+            .expect("late batch delivered");
+        assert_eq!(got, tb);
+        sender.join().unwrap();
+        // The wait was recorded as stall, and we did not sleep anywhere
+        // near the full timeout.
+        assert!(client.stalled() >= 0.02);
+        assert!(client.stalled() < 2.0);
     }
 
     #[test]

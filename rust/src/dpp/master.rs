@@ -48,6 +48,11 @@ impl Default for WorkerHealth {
 #[derive(Clone, Debug, PartialEq)]
 pub struct MasterCheckpoint {
     pub completed: Vec<u64>,
+    /// Splits pruned by stripe-stat pushdown: never queued, recorded
+    /// explicitly (not silently absent) so a restore with different
+    /// stats or predicate still treats them as settled — restore stays
+    /// idempotent.
+    pub skipped: Vec<u64>,
 }
 
 struct MasterState {
@@ -55,6 +60,9 @@ struct MasterState {
     all: HashMap<SplitId, Split>,
     in_flight: HashMap<SplitId, (WorkerId, Instant)>,
     completed: BTreeSet<SplitId>,
+    /// Splits whose every stripe the footer stats prove row-free under
+    /// the session predicate — skipped without any worker touching them.
+    skipped: BTreeSet<SplitId>,
     workers: HashMap<WorkerId, WorkerHealth>,
     next_worker: WorkerId,
 }
@@ -115,6 +123,15 @@ impl Master {
         let mut next_id = 0u64;
         let mut all = HashMap::new();
         let mut queue = VecDeque::new();
+        let mut skipped = BTreeSet::new();
+        // Stats-aware split pruning: with pushdown on, a split whose
+        // every stripe the footer stats prove row-free never reaches the
+        // queue — fully-filtered files contribute zero live splits.
+        let predicate = if spec.pipeline.pushdown {
+            spec.predicate.as_ref()
+        } else {
+            None
+        };
         for p in parts {
             let meta = Self::fetch_meta(cluster, p.file)?;
             let stripe_rows: Vec<u32> =
@@ -126,7 +143,21 @@ impl Master {
                 &stripe_rows,
                 spec.stripes_per_split,
             ) {
-                queue.push_back(split.id);
+                let pruned = match predicate {
+                    Some(pr) => {
+                        let s = split.stripe_start;
+                        let e = s + split.stripe_count;
+                        meta.stripes[s..e]
+                            .iter()
+                            .all(|st| pr.prunes_stripe(&st.stats, st.rows))
+                    }
+                    None => false,
+                };
+                if pruned {
+                    skipped.insert(split.id);
+                } else {
+                    queue.push_back(split.id);
+                }
                 all.insert(split.id, split);
             }
         }
@@ -137,6 +168,7 @@ impl Master {
                 all,
                 in_flight: HashMap::new(),
                 completed: BTreeSet::new(),
+                skipped,
                 workers: HashMap::new(),
                 next_worker: 0,
             }),
@@ -282,15 +314,44 @@ impl Master {
         st.queue.is_empty() && st.in_flight.is_empty()
     }
 
-    /// (completed, total) splits.
+    /// (settled, total) splits — settled counts completed *and* splits
+    /// pruned by stripe stats (they are work that will never be queued,
+    /// not silently-missing work).
     pub fn progress(&self) -> (usize, usize) {
         let st = self.state.lock().unwrap();
-        (st.completed.len(), st.all.len())
+        (st.completed.len() + st.skipped.len(), st.all.len())
+    }
+
+    /// Splits pruned at enumeration time by stripe-stat pushdown.
+    pub fn skipped_splits(&self) -> usize {
+        self.state.lock().unwrap().skipped.len()
+    }
+
+    /// Stripes contained in those pruned splits (exact — the tail split
+    /// of a file may hold fewer than `stripes_per_split`).
+    pub fn skipped_split_stripes(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.all
+            .values()
+            .filter(|s| st.skipped.contains(&s.id))
+            .map(|s| s.stripe_count)
+            .sum()
     }
 
     pub fn total_rows(&self) -> u64 {
         let st = self.state.lock().unwrap();
         st.all.values().map(|s| s.rows).sum()
+    }
+
+    /// Rows in splits that will actually be served (skipped splits'
+    /// rows excluded).
+    pub fn scheduled_rows(&self) -> u64 {
+        let st = self.state.lock().unwrap();
+        st.all
+            .values()
+            .filter(|s| !st.skipped.contains(&s.id))
+            .map(|s| s.rows)
+            .sum()
     }
 
     // ---- Fault tolerance: checkpoint / restore ----
@@ -299,11 +360,14 @@ impl Master {
         let st = self.state.lock().unwrap();
         MasterCheckpoint {
             completed: st.completed.iter().map(|s| s.0).collect(),
+            skipped: st.skipped.iter().map(|s| s.0).collect(),
         }
     }
 
     /// Rebuild a Master from a checkpoint: completed splits are not
-    /// re-queued (restores reader state after a Master failover).
+    /// re-queued, and splits the checkpoint recorded as skipped stay
+    /// skipped even if stats or the predicate since changed — restoring
+    /// twice (or from a stale checkpoint) never re-serves settled work.
     pub fn restore(
         catalog: &Catalog,
         cluster: &Cluster,
@@ -315,8 +379,12 @@ impl Master {
             let mut st = m.state.lock().unwrap();
             let done: BTreeSet<SplitId> =
                 ckpt.completed.iter().map(|&i| SplitId(i)).collect();
-            st.queue.retain(|id| !done.contains(id));
+            let skipped: BTreeSet<SplitId> =
+                ckpt.skipped.iter().map(|&i| SplitId(i)).collect();
+            st.queue
+                .retain(|id| !done.contains(id) && !skipped.contains(id));
             st.completed = done;
+            st.skipped.extend(skipped);
         }
         Ok(m)
     }
@@ -401,6 +469,7 @@ mod tests {
             from_day: 0,
             to_day: 10,
             projection: Projection::new(proj),
+            predicate: None,
             dag,
             batch_size: 16,
             stripes_per_split: 2,
@@ -516,6 +585,61 @@ mod tests {
         let w = m.register_worker();
         m.heartbeat(w, 4, 0.8, 0.5, 0.5);
         assert_eq!(m.autoscale(2), 2);
+    }
+
+    #[test]
+    fn predicate_prunes_fully_filtered_splits() {
+        use crate::filter::RowPredicate;
+        let (cluster, catalog, spec) = setup();
+        // A timestamp window before every event: all splits prune away.
+        let spec = spec.with_predicate(RowPredicate::TimestampRange {
+            min: u64::MAX - 1,
+            max: u64::MAX,
+        });
+        let m = Master::new(&catalog, &cluster, spec.clone()).unwrap();
+        let w = m.register_worker();
+        assert!(m.fetch_split(w).is_none(), "nothing to serve");
+        assert!(m.is_done());
+        assert_eq!(m.skipped_splits(), 4);
+        assert_eq!(m.skipped_split_stripes(), 8);
+        assert_eq!(m.progress(), (4, 4), "skipped counts as settled");
+        assert_eq!(m.scheduled_rows(), 0);
+        assert_eq!(m.total_rows(), 128, "accounting still sees all rows");
+        // The baseline (pushdown off) still queues everything.
+        let mut base = spec;
+        base.pipeline.pushdown = false;
+        let mb = Master::new(&catalog, &cluster, base).unwrap();
+        assert_eq!(mb.skipped_splits(), 0);
+        assert_eq!(mb.scheduled_rows(), 128);
+    }
+
+    #[test]
+    fn checkpoint_records_skipped_and_restore_is_idempotent() {
+        use crate::filter::RowPredicate;
+        let (cluster, catalog, spec) = setup();
+        let spec = spec.with_predicate(RowPredicate::TimestampRange {
+            min: u64::MAX - 1,
+            max: u64::MAX,
+        });
+        let m = Master::new(&catalog, &cluster, spec.clone()).unwrap();
+        let ckpt = m.checkpoint();
+        assert_eq!(ckpt.skipped.len(), 4);
+        assert!(ckpt.completed.is_empty());
+
+        // Restore with the *same* spec: skipped stays settled.
+        let m2 =
+            Master::restore(&catalog, &cluster, spec.clone(), &ckpt).unwrap();
+        assert!(m2.is_done());
+        assert_eq!(m2.checkpoint(), ckpt, "restore round-trips");
+
+        // Restore with a spec that no longer prunes (predicate dropped):
+        // the checkpoint's skipped record still keeps those splits
+        // settled instead of silently re-queuing them.
+        let mut plain = spec;
+        plain.predicate = None;
+        let m3 = Master::restore(&catalog, &cluster, plain, &ckpt).unwrap();
+        assert!(m3.is_done(), "previously-skipped work is not re-served");
+        assert_eq!(m3.skipped_splits(), 4);
     }
 
     #[test]

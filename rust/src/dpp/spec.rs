@@ -6,6 +6,7 @@
 
 use crate::dwrf::plan::COALESCE_WINDOW;
 use crate::dwrf::Projection;
+use crate::filter::RowPredicate;
 use crate::schema::FeatureId;
 use crate::transforms::TransformDag;
 
@@ -29,6 +30,12 @@ pub struct PipelineOptions {
     /// checks `TransformDag::row_index_sensitive` (true for `Sampling`)
     /// and falls back to the oblivious path when it would be unsound.
     pub dedup_aware: bool,
+    /// Predicate pushdown: prune provably-empty stripes from read plans
+    /// and splits via footer stats, and filter surviving stripes through
+    /// selection vectors right after decode. `false` = the
+    /// decode-then-filter baseline: every stripe is fetched and decoded,
+    /// and the predicate only applies at the tensor boundary.
+    pub pushdown: bool,
 }
 
 impl Default for PipelineOptions {
@@ -39,6 +46,7 @@ impl Default for PipelineOptions {
             fast_decode: true,
             flatmap: true,
             dedup_aware: true,
+            pushdown: true,
         }
     }
 }
@@ -51,6 +59,7 @@ impl PipelineOptions {
             fast_decode: false,
             flatmap: false,
             dedup_aware: false,
+            pushdown: false,
         }
     }
 }
@@ -64,6 +73,14 @@ pub struct SessionSpec {
     pub to_day: u32,
     /// Column filter: raw features to read.
     pub projection: Projection,
+    /// Row filter: the predicate pushed down the read path (stripe
+    /// pruning + selection vectors). Applied losslessly whether or not
+    /// `pipeline.pushdown` is on — pushdown only moves *where* the rows
+    /// are dropped. Decisions are content-keyed (label / timestamp /
+    /// feature presence), never row-position-keyed, so filtered
+    /// sessions stay dedup-compatible — unlike the legacy `Sampling`
+    /// transform op, whose position-hash mask forces the oblivious path.
+    pub predicate: Option<RowPredicate>,
     /// Per-feature transformation program.
     pub dag: TransformDag,
     /// Rows per output tensor batch.
@@ -89,11 +106,29 @@ impl SessionSpec {
             from_day,
             to_day,
             projection: Projection::new(inputs),
+            predicate: None,
             dag,
             batch_size,
             stripes_per_split: 2,
             pipeline: PipelineOptions::default(),
         }
+    }
+
+    /// Attach a row predicate (builder style). Features the predicate
+    /// inspects (`FeaturePresent`) are pulled into the projection:
+    /// presence is evaluated over *decoded* columns, so filtering on an
+    /// undecoded feature would silently drop every row — while the
+    /// writer's stripe stats (computed over all features) would never
+    /// prune, quietly decoding everything just to discard it.
+    pub fn with_predicate(mut self, predicate: RowPredicate) -> SessionSpec {
+        let extra = predicate.features();
+        if !extra.is_empty() {
+            self.projection = Projection::new(
+                self.projection.iter().copied().chain(extra),
+            );
+        }
+        self.predicate = Some(predicate);
+        self
     }
 }
 
@@ -123,10 +158,46 @@ mod tests {
         assert!(p.fast_decode);
         assert!(p.flatmap);
         assert!(p.dedup_aware);
+        assert!(p.pushdown);
         let b = PipelineOptions::baseline();
         assert!(b.coalesce.is_none());
         assert!(!b.fast_decode);
         assert!(!b.flatmap);
         assert!(!b.dedup_aware);
+        assert!(!b.pushdown);
+    }
+
+    #[test]
+    fn with_predicate_attaches_row_filter() {
+        let mut dag = TransformDag::default();
+        let a = dag.input(FeatureId(1));
+        dag.output(FeatureId(1), a);
+        let spec = SessionSpec::from_dag("t", 0, 1, dag, 8);
+        assert!(spec.predicate.is_none());
+        let spec = spec.with_predicate(RowPredicate::SampleRate {
+            rate: 0.5,
+            seed: 3,
+        });
+        assert!(spec.predicate.is_some());
+    }
+
+    #[test]
+    fn with_predicate_projects_presence_features() {
+        let mut dag = TransformDag::default();
+        let a = dag.input(FeatureId(1));
+        dag.output(FeatureId(1), a);
+        let spec = SessionSpec::from_dag("t", 0, 1, dag, 8);
+        assert!(!spec.projection.contains(FeatureId(7)));
+        // A presence filter on a feature outside the DAG's inputs must
+        // force that feature into the read projection, or the decoded
+        // batch could never answer it.
+        let spec = spec.with_predicate(RowPredicate::And(vec![
+            RowPredicate::FeaturePresent {
+                feature: FeatureId(7),
+            },
+            RowPredicate::SampleRate { rate: 0.9, seed: 0 },
+        ]));
+        assert!(spec.projection.contains(FeatureId(7)));
+        assert!(spec.projection.contains(FeatureId(1)));
     }
 }

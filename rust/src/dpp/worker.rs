@@ -116,14 +116,25 @@ impl WorkerCore {
         }
 
         // ---- read: plan + fetch raw extents from storage ----
+        // With pushdown on, the predicate prunes provably-empty stripes
+        // here — before any I/O is issued. The baseline plans every
+        // stripe and filters after decode.
         let t = Instant::now();
         let reader = self.reader_for(split.file)?;
-        let plan = reader.plan_stripes(
+        let pushdown_pred = if spec.pipeline.pushdown {
+            spec.predicate.as_ref()
+        } else {
+            None
+        };
+        let plan = reader.plan_stripes_filtered(
             &spec.projection,
             spec.pipeline.coalesce,
             split.stripe_start,
             split.stripe_count,
+            pushdown_pred,
         );
+        m.skipped_stripes.add(plan.skipped_stripes.len() as u64);
+        m.skipped_bytes.add(plan.skipped_bytes);
         let mut bufs_per_stripe = Vec::new();
         for sp in &plan.stripes {
             let bufs = self.cluster.execute_ios(split.file, &sp.ios)?;
@@ -188,8 +199,26 @@ impl WorkerCore {
                 sparse_ids.dedup();
                 ColumnarBatch::from_samples(&rows, &dense_ids, &sparse_ids)
             };
+            m.decoded_rows.add(batch.num_rows as u64);
             m.extract_out_bytes.add(batch.approx_bytes() as u64);
-            batches.push(batch);
+            // Row filter: a partially-matching stripe decodes once; the
+            // predicate yields a selection vector and only surviving
+            // rows flow into transform + load.
+            let batch = match spec.predicate.as_ref() {
+                Some(p) => {
+                    let keep = p.select_batch(&batch).ones();
+                    m.filtered_rows.add((batch.num_rows - keep.len()) as u64);
+                    if keep.len() == batch.num_rows {
+                        batch
+                    } else {
+                        batch.with_selection(keep).compact()
+                    }
+                }
+                None => batch,
+            };
+            if batch.num_rows > 0 {
+                batches.push(batch);
+            }
         }
         m.t_extract.add(t.elapsed());
 
@@ -260,8 +289,36 @@ impl WorkerCore {
                 &spec.projection,
                 mode,
             )?;
+            m.decoded_rows.add(ds.rows() as u64);
             m.extract_out_bytes.add(ds.unique.approx_bytes() as u64);
-            stripes.push(ds);
+            // Row filter without expansion: the predicate reads per-row
+            // labels/timestamps and answers feature presence through the
+            // inverse index — content-keyed, so it composes with dedup.
+            // Unreferenced unique payloads are compacted away before the
+            // transform stage ever sees them.
+            let ds = match spec.predicate.as_ref() {
+                Some(p) => {
+                    let keep = p
+                        .select_rows(&ds.labels, &ds.timestamps, &|f, r| {
+                            crate::filter::batch_presence(
+                                &ds.unique,
+                                f,
+                                ds.inverse[r] as usize,
+                            )
+                        })
+                        .ones();
+                    m.filtered_rows.add((ds.rows() - keep.len()) as u64);
+                    if keep.len() == ds.rows() {
+                        ds
+                    } else {
+                        ds.filter_rows(&keep)
+                    }
+                }
+                None => ds,
+            };
+            if ds.rows() > 0 {
+                stripes.push(ds);
+            }
         }
         m.t_extract.add(t.elapsed());
 

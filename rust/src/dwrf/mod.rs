@@ -3,7 +3,10 @@
 //!
 //! A file is a sequence of *stripes* (a run of table rows); each stripe is
 //! a set of compressed + encrypted *streams*; a footer indexes every
-//! stream's file extent. Two row encodings are supported:
+//! stream's file extent and (since footer v2) carries per-stripe
+//! [`StripeStats`] — min/max timestamp, label positives, and a hashed
+//! feature-presence filter — which predicate pushdown consults to skip
+//! whole stripes before issuing any I/O. Two row encodings are supported:
 //!
 //! * [`Encoding::Map`] — the pre-optimization baseline: per-stripe dense
 //!   and sparse *map* streams holding every feature of every row. Readers
@@ -38,7 +41,79 @@ pub use writer::{DwrfWriter, Encoding, WriterOptions};
 use anyhow::{bail, Result};
 
 pub const MAGIC: u32 = 0x4457_5246; // "DWRF"
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
+
+/// Per-stripe row statistics recorded in the footer (v2): the metadata
+/// predicate pushdown consults to skip whole stripes — and all their
+/// I/Os — before a single data byte is fetched. Every field is
+/// conservative: a pruning decision based on it can never drop a
+/// matching row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StripeStats {
+    /// Smallest / largest event timestamp among the stripe's rows.
+    pub min_timestamp: u64,
+    pub max_timestamp: u64,
+    /// Rows with label > 0 (positives).
+    pub label_positives: u32,
+    /// 128-bit hashed feature-presence filter: the bit for feature `f`
+    /// is set iff some row carries `f`. No false negatives ⇒ an unset
+    /// bit proves the feature absent from the whole stripe.
+    pub presence: [u64; 2],
+}
+
+impl Default for StripeStats {
+    fn default() -> Self {
+        StripeStats {
+            min_timestamp: u64::MAX,
+            max_timestamp: 0,
+            label_positives: 0,
+            presence: [0; 2],
+        }
+    }
+}
+
+impl StripeStats {
+    fn presence_slot(feature: u32) -> (usize, u64) {
+        let h = crate::transforms::hash64(feature as u64 ^ 0xD5F7_57A7);
+        (((h >> 6) & 1) as usize, 1u64 << (h & 63))
+    }
+
+    pub fn mark_present(&mut self, feature: u32) {
+        let (w, bit) = Self::presence_slot(feature);
+        self.presence[w] |= bit;
+    }
+
+    /// `false` proves no row of the stripe has the feature; `true` is
+    /// only "maybe" (hash collisions make it one-sided).
+    pub fn maybe_present(&self, feature: u32) -> bool {
+        let (w, bit) = Self::presence_slot(feature);
+        self.presence[w] & bit != 0
+    }
+
+    pub fn observe(&mut self, sample: &crate::data::Sample) {
+        self.min_timestamp = self.min_timestamp.min(sample.timestamp);
+        self.max_timestamp = self.max_timestamp.max(sample.timestamp);
+        if sample.label > 0.0 {
+            self.label_positives += 1;
+        }
+        for (fid, _) in &sample.dense {
+            self.mark_present(fid.0);
+        }
+        for (fid, v) in &sample.sparse {
+            if !v.is_empty() {
+                self.mark_present(fid.0);
+            }
+        }
+    }
+
+    pub fn from_samples(samples: &[crate::data::Sample]) -> StripeStats {
+        let mut st = StripeStats::default();
+        for s in samples {
+            st.observe(s);
+        }
+        st
+    }
+}
 
 /// Index entry for one stream within a stripe.
 #[derive(Clone, Debug)]
@@ -62,6 +137,8 @@ pub struct StreamInfo {
 pub struct StripeInfo {
     pub row_start: u64,
     pub rows: u32,
+    /// Row statistics for predicate pushdown (footer v2).
+    pub stats: StripeStats,
     pub streams: Vec<StreamInfo>,
 }
 
@@ -100,6 +177,11 @@ impl FileMeta {
         for s in &self.stripes {
             put_u64(&mut out, s.row_start);
             put_u32(&mut out, s.rows);
+            put_u64(&mut out, s.stats.min_timestamp);
+            put_u64(&mut out, s.stats.max_timestamp);
+            put_u32(&mut out, s.stats.label_positives);
+            put_u64(&mut out, s.stats.presence[0]);
+            put_u64(&mut out, s.stats.presence[1]);
             put_varint(&mut out, s.streams.len() as u64);
             for st in &s.streams {
                 out.push(st.kind as u8);
@@ -135,6 +217,17 @@ impl FileMeta {
         for _ in 0..n_stripes {
             let row_start = r.u64().ok_or_else(|| anyhow::anyhow!("row_start"))?;
             let rows = r.u32().ok_or_else(|| anyhow::anyhow!("stripe rows"))?;
+            let stats = StripeStats {
+                min_timestamp: r.u64().ok_or_else(|| anyhow::anyhow!("min_ts"))?,
+                max_timestamp: r.u64().ok_or_else(|| anyhow::anyhow!("max_ts"))?,
+                label_positives: r
+                    .u32()
+                    .ok_or_else(|| anyhow::anyhow!("positives"))?,
+                presence: [
+                    r.u64().ok_or_else(|| anyhow::anyhow!("presence0"))?,
+                    r.u64().ok_or_else(|| anyhow::anyhow!("presence1"))?,
+                ],
+            };
             let n_streams =
                 r.varint().ok_or_else(|| anyhow::anyhow!("n_streams"))? as usize;
             let mut streams = Vec::with_capacity(n_streams);
@@ -161,6 +254,7 @@ impl FileMeta {
             stripes.push(StripeInfo {
                 row_start,
                 rows,
+                stats,
                 streams,
             });
         }

@@ -43,6 +43,12 @@ pub struct ReadPlan {
     pub useful_bytes: u64,
     /// Bytes actually fetched (>= useful when coalescing over-reads gaps).
     pub read_bytes: u64,
+    /// Stripes the predicate proved row-free from footer stats: no
+    /// [`StripePlan`] entry exists for them and no I/O is issued.
+    pub skipped_stripes: Vec<usize>,
+    /// Wanted-stream bytes the projection would have fetched from the
+    /// skipped stripes (the pushdown's saved I/O volume).
+    pub skipped_bytes: u64,
 }
 
 impl ReadPlan {

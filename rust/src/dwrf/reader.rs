@@ -9,6 +9,7 @@ use super::stream::{
 };
 use super::{Encoding, FileMeta};
 use crate::data::{ColumnarBatch, DenseColumn, Sample, SparseColumn};
+use crate::filter::RowPredicate;
 use crate::schema::FeatureId;
 use anyhow::{bail, Context, Result};
 use std::collections::HashSet;
@@ -50,6 +51,34 @@ impl DedupStripe {
         batch.labels = self.labels.clone();
         batch.timestamps = self.timestamps.clone();
         batch
+    }
+
+    /// Restrict to the surviving rows of a predicate selection (`keep` =
+    /// ascending row indices): row meta and inverse are gathered, and the
+    /// unique payloads are compacted to the ones still referenced — so
+    /// the dedup-aware transform stage never touches a filtered-out
+    /// payload.
+    pub fn filter_rows(&self, keep: &[u32]) -> DedupStripe {
+        let mut slot: Vec<u32> = vec![u32::MAX; self.unique.num_rows];
+        let mut used: Vec<u32> = Vec::new();
+        let mut inverse = Vec::with_capacity(keep.len());
+        for &r in keep {
+            let u = self.inverse[r as usize] as usize;
+            if slot[u] == u32::MAX {
+                slot[u] = used.len() as u32;
+                used.push(u as u32);
+            }
+            inverse.push(slot[u]);
+        }
+        DedupStripe {
+            unique: self.unique.gather(&used),
+            inverse,
+            labels: keep.iter().map(|&r| self.labels[r as usize]).collect(),
+            timestamps: keep
+                .iter()
+                .map(|&r| self.timestamps[r as usize])
+                .collect(),
+        }
     }
 }
 
@@ -172,6 +201,23 @@ impl DwrfReader {
         self.plan_stripes(projection, coalesce_window, 0, self.meta.stripes.len())
     }
 
+    /// [`DwrfReader::plan`] with a row predicate pushed down: stripes the
+    /// footer stats prove row-free are skipped outright.
+    pub fn plan_filtered(
+        &self,
+        projection: &Projection,
+        coalesce_window: Option<u64>,
+        predicate: Option<&RowPredicate>,
+    ) -> ReadPlan {
+        self.plan_stripes_filtered(
+            projection,
+            coalesce_window,
+            0,
+            self.meta.stripes.len(),
+            predicate,
+        )
+    }
+
     /// Plan only stripes `[start, start+count)` — the unit a DPP split
     /// covers.
     pub fn plan_stripes(
@@ -180,6 +226,22 @@ impl DwrfReader {
         coalesce_window: Option<u64>,
         start: usize,
         count: usize,
+    ) -> ReadPlan {
+        self.plan_stripes_filtered(projection, coalesce_window, start, count, None)
+    }
+
+    /// [`DwrfReader::plan_stripes`] with predicate pushdown: before any
+    /// extent is considered, each stripe's footer [`super::StripeStats`]
+    /// are tested against the predicate; provably-empty stripes produce
+    /// **no** I/O and are recorded in [`ReadPlan::skipped_stripes`] with
+    /// their forgone bytes in [`ReadPlan::skipped_bytes`].
+    pub fn plan_stripes_filtered(
+        &self,
+        projection: &Projection,
+        coalesce_window: Option<u64>,
+        start: usize,
+        count: usize,
+        predicate: Option<&RowPredicate>,
     ) -> ReadPlan {
         let mut plan = ReadPlan::default();
         let end = (start + count).min(self.meta.stripes.len());
@@ -191,6 +253,8 @@ impl DwrfReader {
             .take(end)
             .skip(start)
         {
+            let pruned = predicate
+                .is_some_and(|p| p.prunes_stripe(&stripe.stats, stripe.rows));
             let mut wanted = Vec::new();
             for (i, st) in stripe.streams.iter().enumerate() {
                 let take = match st.kind {
@@ -216,7 +280,13 @@ impl DwrfReader {
                     }
                 })
                 .collect();
-            plan.useful_bytes += extents.iter().map(|e| e.len).sum::<u64>();
+            let wanted_bytes = extents.iter().map(|e| e.len).sum::<u64>();
+            if pruned {
+                plan.skipped_stripes.push(si);
+                plan.skipped_bytes += wanted_bytes;
+                continue;
+            }
+            plan.useful_bytes += wanted_bytes;
             let ios = coalesce(extents, coalesce_window);
             plan.read_bytes += ios.iter().map(|e| e.len).sum::<u64>();
             plan.stripes.push(StripePlan {
@@ -481,6 +551,7 @@ impl DwrfReader {
                 sparse,
                 labels: Vec::new(),
                 timestamps: Vec::new(),
+                selection: None,
             },
             inverse,
             labels,
@@ -854,6 +925,63 @@ mod tests {
         };
         let (d, f) = (raw_sparse(&dedup), raw_sparse(&flat));
         assert!(d * 2 < f, "dedup {d} raw bytes !< half of flat {f}");
+    }
+
+    #[test]
+    fn filtered_plan_skips_disjoint_stripes_with_zero_ios() {
+        // mk_samples stamps timestamps 5000..5020 over stripes of 8.
+        let (_, bytes) = build(Encoding::Flattened);
+        let r = DwrfReader::open_table(&bytes, "t").unwrap();
+        let proj = full_projection();
+        // Window covering only the first stripe's rows.
+        let pred = RowPredicate::TimestampRange {
+            min: 5000,
+            max: 5007,
+        };
+        let plan = r.plan_filtered(&proj, None, Some(&pred));
+        assert_eq!(plan.stripes.len(), 1);
+        assert_eq!(plan.stripes[0].stripe, 0);
+        assert_eq!(plan.skipped_stripes, vec![1, 2]);
+        assert!(plan.skipped_bytes > 0);
+        // A window beyond every row issues no I/O at all.
+        let none = RowPredicate::TimestampRange { min: 0, max: 10 };
+        let empty = r.plan_filtered(&proj, None, Some(&none));
+        assert_eq!(empty.num_ios(), 0);
+        assert_eq!(empty.read_bytes, 0);
+        assert_eq!(empty.skipped_stripes.len(), r.meta.stripes.len());
+        // No predicate ⇒ identical to the unfiltered plan.
+        let a = r.plan(&proj, None);
+        let b = r.plan_filtered(&proj, None, None);
+        assert_eq!(a.num_ios(), b.num_ios());
+        assert_eq!(a.read_bytes, b.read_bytes);
+        assert!(b.skipped_stripes.is_empty());
+    }
+
+    #[test]
+    fn dedup_filter_rows_compacts_uniques() {
+        let samples = mk_dup_samples(12); // payload runs of 3
+        let bytes = build_dedup(&samples, 12);
+        let r = DwrfReader::open_table(&bytes, "t").unwrap();
+        let proj = full_projection();
+        let plan = r.plan(&proj, None);
+        let bufs = r.fetch_local(&bytes, &plan);
+        let ds = r
+            .decode_stripe_dedup(0, &bufs, &proj, DecodeMode::default())
+            .unwrap();
+        // Keep only the rows of one payload run plus one stray row.
+        let all = ds.expand().to_samples();
+        let keep: Vec<u32> = (0..ds.rows() as u32)
+            .filter(|&i| all[i as usize].timestamp % 2 == 0)
+            .collect();
+        let filtered = ds.filter_rows(&keep);
+        assert_eq!(filtered.rows(), keep.len());
+        assert!(filtered.unique.num_rows <= ds.unique.num_rows);
+        let got = filtered.expand().to_samples();
+        let want: Vec<Sample> = keep
+            .iter()
+            .map(|&i| all[i as usize].clone())
+            .collect();
+        assert_eq!(got, want);
     }
 
     #[test]

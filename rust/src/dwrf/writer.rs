@@ -13,7 +13,7 @@ use super::stream::{
     encode_dedup_index, encode_flat_dense, encode_flat_sparse,
     encode_map_dense, encode_map_sparse, encode_row_meta, StreamKind,
 };
-use super::{FileMeta, StreamInfo, StripeInfo};
+use super::{FileMeta, StreamInfo, StripeInfo, StripeStats};
 use crate::data::{ColumnarBatch, Sample};
 use crate::dedup::DedupIndex;
 use crate::schema::FeatureId;
@@ -262,6 +262,11 @@ impl DwrfWriter {
         }
         let rows = samples.len();
         let mut streams = Vec::new();
+        // Footer statistics for predicate pushdown: computed over the
+        // stripe's *rows* (for Dedup stripes, rows and unique payloads
+        // carry the same feature-presence set, so row-level stats stay
+        // conservative for both read paths).
+        let stats = StripeStats::from_samples(samples);
 
         // Row meta first (labels + timestamps) — always read. Under the
         // Dedup encoding this stays per-*row*: duplicate payloads keep
@@ -324,6 +329,7 @@ impl DwrfWriter {
         self.stripes.push(StripeInfo {
             row_start: self.rows_written,
             rows: rows as u32,
+            stats,
             streams,
         });
         self.rows_written += rows as u64;
@@ -442,6 +448,40 @@ mod tests {
         let offs: Vec<u64> =
             meta.stripes[0].streams.iter().map(|s| s.offset).collect();
         assert!(offs.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn stripe_stats_recorded_in_footer() {
+        let mut w = writer(Encoding::Flattened, 10);
+        w.write_all(mk_samples(25)); // timestamps 0..25, labels all 1.0
+        let bytes = w.finish();
+        let meta = crate::dwrf::reader::DwrfReader::open(&bytes).unwrap().meta;
+        assert_eq!(meta.stripes.len(), 3);
+        let s0 = &meta.stripes[0].stats;
+        assert_eq!(s0.min_timestamp, 0);
+        assert_eq!(s0.max_timestamp, 9);
+        assert_eq!(s0.label_positives, 10);
+        assert!(s0.maybe_present(0));
+        assert!(s0.maybe_present(100));
+        let s2 = &meta.stripes[2].stats;
+        assert_eq!(s2.min_timestamp, 20);
+        assert_eq!(s2.max_timestamp, 24);
+        assert_eq!(s2.label_positives, 5);
+    }
+
+    #[test]
+    fn presence_filter_is_one_sided() {
+        // A feature never written must read "absent" unless a hash
+        // collision with a written feature flips its bit — check a batch
+        // of ids so at least the written set is always "maybe present".
+        let mut st = StripeStats::default();
+        for f in [3u32, 900, 77] {
+            st.mark_present(f);
+        }
+        for f in [3u32, 900, 77] {
+            assert!(st.maybe_present(f));
+        }
+        assert!(!StripeStats::default().maybe_present(3));
     }
 
     #[test]

@@ -59,6 +59,7 @@ fn outputs_to_batch(
         sparse,
         labels,
         timestamps,
+        selection: None,
     }
 }
 

@@ -1,0 +1,508 @@
+//! Row predicates and their pushdown machinery.
+//!
+//! The paper's central workload observation is that training jobs "read
+//! and *heavily filter* massive and evolving datasets" (§5.1): recency
+//! windows for continuous training, negative downsampling, feature
+//! checks, and deterministic sampling. Before this module, rust_pallas
+//! applied those filters *last* — inside the transform DAG, after
+//! Tectonic I/O, decryption, decompression, and full stripe decode had
+//! paid for every discarded row. A [`RowPredicate`] instead travels in
+//! the session spec and is evaluated at three descending levels:
+//!
+//! 1. **stripe pruning** — [`RowPredicate::prunes_stripe`] consults the
+//!    footer's [`StripeStats`] so provably-empty stripes issue **zero**
+//!    I/Os (and the Master never turns fully-filtered files into
+//!    splits);
+//! 2. **row selection** — partially-matching stripes decode once, and
+//!    [`RowPredicate::select_rows`] produces a selection vector
+//!    ([`crate::data::ColumnarBatch::selection`]) so transforms and
+//!    tensorization touch only surviving rows;
+//! 3. **selectivity estimation** — [`RowPredicate::selectivity`] gives
+//!    pipeline tuners (InTune-style DPP right-sizing) the expected
+//!    surviving fraction before any byte is read.
+//!
+//! Every decision is a pure function of row *content* (label, event
+//! timestamp, feature presence) — never of the row's physical position.
+//! That makes filtered sessions dedup-compatible: the old `Sampling`
+//! transform op hashed the row index and forced Dedup-encoded reads
+//! back onto the duplication-oblivious path; [`RowPredicate::SampleRate`]
+//! hashes the timestamp instead and composes with the dedup-aware path.
+
+use crate::data::{Bitmap, ColumnarBatch, Sample};
+use crate::dwrf::StripeStats;
+use crate::schema::FeatureId;
+use crate::transforms::hash64;
+
+/// Prior positive-label rate used when estimating the selectivity of
+/// label predicates without data statistics (the generator's CTR).
+pub const POSITIVE_RATE_PRIOR: f64 = 0.12;
+
+/// Prior row-coverage of an arbitrary feature (Table 4-ish average),
+/// used when estimating feature-presence selectivity without stats.
+pub const PRESENCE_PRIOR: f64 = 0.5;
+
+/// A row filter a training session pushes down the read path.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RowPredicate {
+    /// Keep rows with `min <= timestamp <= max` (inclusive) — the
+    /// continuous-training recency read.
+    TimestampRange { min: u64, max: u64 },
+    /// Label-based negative downsampling: keep every positive
+    /// (label > 0) row; keep a negative with probability `rate`,
+    /// decided deterministically from `(seed, timestamp)`.
+    NegativeDownsample { rate: f64, seed: u64 },
+    /// Keep rows where the feature is present (non-absent dense value /
+    /// non-empty sparse list).
+    FeaturePresent { feature: FeatureId },
+    /// Deterministic row sampling at `rate`, keyed on
+    /// `(seed, timestamp)` — content-addressed, so the decision is
+    /// independent of row order and of duplication layout.
+    SampleRate { rate: f64, seed: u64 },
+    /// Conjunction: a row survives iff every conjunct keeps it.
+    And(Vec<RowPredicate>),
+}
+
+/// Deterministic keep decision: uniform in [0,1) from a 64-bit mix of
+/// the seed and the row's event timestamp.
+#[inline]
+fn keep(seed: u64, timestamp: u64, rate: f64) -> bool {
+    let h = hash64(seed ^ timestamp.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    ((h >> 11) as f64 / (1u64 << 53) as f64) < rate
+}
+
+impl RowPredicate {
+    /// Conjunction constructor that flattens trivial cases.
+    pub fn and(mut preds: Vec<RowPredicate>) -> RowPredicate {
+        if preds.len() == 1 {
+            preds.pop().unwrap()
+        } else {
+            RowPredicate::And(preds)
+        }
+    }
+
+    /// Features the predicate inspects (recursively). Presence can only
+    /// be evaluated over *decoded* columns, so these must be part of the
+    /// read projection — [`crate::dpp::SessionSpec::with_predicate`]
+    /// extends the projection with them automatically.
+    pub fn features(&self) -> Vec<FeatureId> {
+        fn walk(p: &RowPredicate, out: &mut Vec<FeatureId>) {
+            match p {
+                RowPredicate::FeaturePresent { feature } => {
+                    out.push(*feature)
+                }
+                RowPredicate::And(ps) => {
+                    for q in ps {
+                        walk(q, out);
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut out = Vec::new();
+        walk(self, &mut out);
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    /// Estimated fraction of rows that survive, without data stats
+    /// (documented priors; conjuncts assumed independent).
+    pub fn selectivity(&self) -> f64 {
+        match self {
+            RowPredicate::TimestampRange { min, max } => {
+                if min > max {
+                    0.0
+                } else {
+                    1.0 // unknown data range: conservative full estimate
+                }
+            }
+            RowPredicate::NegativeDownsample { rate, .. } => {
+                let rate = rate.clamp(0.0, 1.0);
+                POSITIVE_RATE_PRIOR + (1.0 - POSITIVE_RATE_PRIOR) * rate
+            }
+            RowPredicate::FeaturePresent { .. } => PRESENCE_PRIOR,
+            RowPredicate::SampleRate { rate, .. } => rate.clamp(0.0, 1.0),
+            RowPredicate::And(ps) => ps
+                .iter()
+                .map(|p| p.selectivity())
+                .product::<f64>()
+                .clamp(0.0, 1.0),
+        }
+    }
+
+    /// Stats-aware estimate for one stripe (the InTune-style signal):
+    /// refines the priors with the stripe's footer statistics.
+    pub fn stripe_selectivity(&self, stats: &StripeStats, rows: u32) -> f64 {
+        match self {
+            RowPredicate::TimestampRange { min, max } => {
+                if *min > *max
+                    || stats.min_timestamp > *max
+                    || stats.max_timestamp < *min
+                {
+                    return 0.0;
+                }
+                let span = (stats.max_timestamp - stats.min_timestamp) as f64;
+                if span == 0.0 {
+                    return 1.0;
+                }
+                let lo = stats.min_timestamp.max(*min);
+                let hi = stats.max_timestamp.min(*max);
+                ((hi - lo) as f64 / span).clamp(0.0, 1.0)
+            }
+            RowPredicate::NegativeDownsample { rate, .. } => {
+                let rows = rows.max(1) as f64;
+                let pos = stats.label_positives as f64 / rows;
+                (pos + (1.0 - pos) * rate.clamp(0.0, 1.0)).clamp(0.0, 1.0)
+            }
+            RowPredicate::FeaturePresent { feature } => {
+                if stats.maybe_present(feature.0) {
+                    PRESENCE_PRIOR
+                } else {
+                    0.0
+                }
+            }
+            RowPredicate::SampleRate { rate, .. } => rate.clamp(0.0, 1.0),
+            RowPredicate::And(ps) => ps
+                .iter()
+                .map(|p| p.stripe_selectivity(stats, rows))
+                .product::<f64>()
+                .clamp(0.0, 1.0),
+        }
+    }
+
+    /// `true` proves that **no** row of a stripe with these statistics
+    /// can match — the stripe (and all its I/Os) is skippable. One-sided:
+    /// `false` only means "must decode to decide".
+    pub fn prunes_stripe(&self, stats: &StripeStats, rows: u32) -> bool {
+        match self {
+            RowPredicate::TimestampRange { min, max } => {
+                *min > *max
+                    || stats.min_timestamp > *max
+                    || stats.max_timestamp < *min
+            }
+            RowPredicate::NegativeDownsample { rate, .. } => {
+                // Only provably empty when no positives exist and every
+                // negative is dropped.
+                stats.label_positives == 0 && *rate <= 0.0
+            }
+            RowPredicate::FeaturePresent { feature } => {
+                !stats.maybe_present(feature.0)
+            }
+            RowPredicate::SampleRate { rate, .. } => *rate <= 0.0,
+            RowPredicate::And(ps) => {
+                ps.iter().any(|p| p.prunes_stripe(stats, rows))
+            }
+        }
+    }
+
+    /// Does one row survive? `present` answers feature-presence for this
+    /// row (over whatever columns the caller decoded).
+    pub fn matches_row(
+        &self,
+        label: f32,
+        timestamp: u64,
+        present: &dyn Fn(FeatureId) -> bool,
+    ) -> bool {
+        match self {
+            RowPredicate::TimestampRange { min, max } => {
+                (*min..=*max).contains(&timestamp)
+            }
+            RowPredicate::NegativeDownsample { rate, seed } => {
+                label > 0.0 || keep(*seed, timestamp, *rate)
+            }
+            RowPredicate::FeaturePresent { feature } => present(*feature),
+            RowPredicate::SampleRate { rate, seed } => {
+                keep(*seed, timestamp, *rate)
+            }
+            RowPredicate::And(ps) => ps
+                .iter()
+                .all(|p| p.matches_row(label, timestamp, present)),
+        }
+    }
+
+    /// Row-level convenience over a row-map [`Sample`] (the non-flatmap
+    /// decode path) — agrees bit-for-bit with the columnar evaluation.
+    pub fn matches_sample(&self, s: &Sample) -> bool {
+        self.matches_row(s.label, s.timestamp, &|f| {
+            s.get_dense(f).is_some()
+                || s.get_sparse(f).is_some_and(|v| !v.is_empty())
+        })
+    }
+
+    /// Evaluate over parallel row metadata, with presence answered by
+    /// `present(feature, row)`. Returns the surviving-row bitmap.
+    pub fn select_rows(
+        &self,
+        labels: &[f32],
+        timestamps: &[u64],
+        present: &dyn Fn(FeatureId, usize) -> bool,
+    ) -> Bitmap {
+        let n = labels.len();
+        debug_assert_eq!(n, timestamps.len());
+        let mut bm = Bitmap::new(n);
+        for r in 0..n {
+            if self.matches_row(labels[r], timestamps[r], &|f| present(f, r)) {
+                bm.set(r);
+            }
+        }
+        bm
+    }
+
+    /// Evaluate over a decoded per-row columnar batch (presence looked
+    /// up in the batch's decoded columns).
+    pub fn select_batch(&self, batch: &ColumnarBatch) -> Bitmap {
+        self.select_rows(&batch.labels, &batch.timestamps, &|f, r| {
+            batch_presence(batch, f, r)
+        })
+    }
+}
+
+/// Is feature `f` present on row `row` of the batch? Dense: presence
+/// bit; sparse: non-empty id list; undecoded/unknown features: absent.
+pub fn batch_presence(batch: &ColumnarBatch, f: FeatureId, row: usize) -> bool {
+    if let Some(c) = batch.dense.iter().find(|c| c.id == f) {
+        return c.present.get(row);
+    }
+    if let Some(c) = batch.sparse.iter().find(|c| c.id == f) {
+        return !c.row(row).is_empty();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SparseValue;
+
+    fn sample(ts: u64, label: f32, with_feat: bool) -> Sample {
+        let mut s = Sample {
+            dense: vec![(FeatureId(0), ts as f32)],
+            label,
+            timestamp: ts,
+            ..Default::default()
+        };
+        if with_feat {
+            s.sparse
+                .push((FeatureId(10), SparseValue::ids(vec![ts, ts + 1])));
+        }
+        s.sort_features();
+        s
+    }
+
+    fn batch(samples: &[Sample]) -> ColumnarBatch {
+        ColumnarBatch::from_samples(samples, &[FeatureId(0)], &[FeatureId(10)])
+    }
+
+    #[test]
+    fn timestamp_range_selects_window() {
+        let samples: Vec<Sample> =
+            (0..10).map(|i| sample(100 + i, 0.0, true)).collect();
+        let p = RowPredicate::TimestampRange { min: 103, max: 106 };
+        let sel = p.select_batch(&batch(&samples));
+        assert_eq!(sel.ones(), vec![3, 4, 5, 6]);
+        // Sample path agrees.
+        for (i, s) in samples.iter().enumerate() {
+            assert_eq!(p.matches_sample(s), sel.get(i));
+        }
+    }
+
+    #[test]
+    fn negative_downsample_keeps_every_positive() {
+        let samples: Vec<Sample> = (0..200)
+            .map(|i| sample(i, (i % 5 == 0) as u64 as f32, false))
+            .collect();
+        let p = RowPredicate::NegativeDownsample {
+            rate: 0.25,
+            seed: 9,
+        };
+        let sel = p.select_batch(&batch(&samples));
+        let mut kept_pos = 0;
+        let mut kept_neg = 0;
+        for (i, s) in samples.iter().enumerate() {
+            if s.label > 0.0 {
+                assert!(sel.get(i), "positive row {i} must survive");
+                kept_pos += 1;
+            } else if sel.get(i) {
+                kept_neg += 1;
+            }
+        }
+        assert_eq!(kept_pos, 40);
+        // ~25% of the 160 negatives, with slack.
+        assert!((15..=70).contains(&kept_neg), "kept {kept_neg} negatives");
+    }
+
+    #[test]
+    fn feature_presence_tracks_columns_and_samples() {
+        let samples: Vec<Sample> =
+            (0..8).map(|i| sample(i, 0.0, i % 2 == 0)).collect();
+        let p = RowPredicate::FeaturePresent {
+            feature: FeatureId(10),
+        };
+        let sel = p.select_batch(&batch(&samples));
+        assert_eq!(sel.ones(), vec![0, 2, 4, 6]);
+        for (i, s) in samples.iter().enumerate() {
+            assert_eq!(p.matches_sample(s), sel.get(i));
+        }
+        // An unknown feature is absent everywhere.
+        let q = RowPredicate::FeaturePresent {
+            feature: FeatureId(777),
+        };
+        assert_eq!(q.select_batch(&batch(&samples)).count_ones(), 0);
+    }
+
+    #[test]
+    fn sample_rate_is_deterministic_and_order_free() {
+        let samples: Vec<Sample> =
+            (0..500).map(|i| sample(i * 7, 0.0, false)).collect();
+        let p = RowPredicate::SampleRate { rate: 0.3, seed: 4 };
+        let a = p.select_batch(&batch(&samples));
+        let b = p.select_batch(&batch(&samples));
+        assert_eq!(a, b);
+        let frac = a.count_ones() as f64 / 500.0;
+        assert!((frac - 0.3).abs() < 0.08, "{frac}");
+        // Decision keys on content (timestamp), not position: reversing
+        // the rows keeps the same per-row outcome.
+        let mut rev = samples.clone();
+        rev.reverse();
+        let c = p.select_batch(&batch(&rev));
+        for i in 0..500 {
+            assert_eq!(a.get(i), c.get(499 - i));
+        }
+    }
+
+    #[test]
+    fn conjunction_intersects() {
+        let samples: Vec<Sample> =
+            (0..50).map(|i| sample(i, (i % 2) as f32, i < 25)).collect();
+        let p = RowPredicate::and(vec![
+            RowPredicate::TimestampRange { min: 10, max: 40 },
+            RowPredicate::FeaturePresent {
+                feature: FeatureId(10),
+            },
+        ]);
+        let sel = p.select_batch(&batch(&samples));
+        assert_eq!(sel.ones(), (10u32..25).collect::<Vec<_>>());
+        // Single-element and() unwraps.
+        assert_eq!(
+            RowPredicate::and(vec![RowPredicate::SampleRate {
+                rate: 1.0,
+                seed: 0
+            }]),
+            RowPredicate::SampleRate { rate: 1.0, seed: 0 }
+        );
+    }
+
+    #[test]
+    fn features_collects_presence_features_recursively() {
+        let p = RowPredicate::And(vec![
+            RowPredicate::FeaturePresent {
+                feature: FeatureId(9),
+            },
+            RowPredicate::SampleRate { rate: 0.5, seed: 0 },
+            RowPredicate::And(vec![
+                RowPredicate::FeaturePresent {
+                    feature: FeatureId(3),
+                },
+                RowPredicate::FeaturePresent {
+                    feature: FeatureId(9),
+                },
+            ]),
+        ]);
+        assert_eq!(p.features(), vec![FeatureId(3), FeatureId(9)]);
+        assert!(RowPredicate::SampleRate { rate: 1.0, seed: 0 }
+            .features()
+            .is_empty());
+    }
+
+    #[test]
+    fn stripe_pruning_is_sound_and_effective() {
+        let samples: Vec<Sample> =
+            (0..32).map(|i| sample(1000 + i, 0.0, true)).collect();
+        let stats = StripeStats::from_samples(&samples);
+        let rows = samples.len() as u32;
+
+        // Disjoint window prunes; overlapping window does not.
+        let gone = RowPredicate::TimestampRange { min: 0, max: 999 };
+        assert!(gone.prunes_stripe(&stats, rows));
+        let hit = RowPredicate::TimestampRange {
+            min: 1010,
+            max: 1015,
+        };
+        assert!(!hit.prunes_stripe(&stats, rows));
+
+        // No positives + rate 0 prunes; any rate > 0 does not.
+        assert!(RowPredicate::NegativeDownsample { rate: 0.0, seed: 1 }
+            .prunes_stripe(&stats, rows));
+        assert!(!RowPredicate::NegativeDownsample { rate: 0.1, seed: 1 }
+            .prunes_stripe(&stats, rows));
+
+        // Absent feature prunes; present feature does not.
+        assert!(RowPredicate::FeaturePresent {
+            feature: FeatureId(55_555)
+        }
+        .prunes_stripe(&stats, rows));
+        assert!(!RowPredicate::FeaturePresent {
+            feature: FeatureId(10)
+        }
+        .prunes_stripe(&stats, rows));
+
+        // A conjunction prunes when any conjunct prunes.
+        assert!(RowPredicate::And(vec![hit.clone(), gone.clone()])
+            .prunes_stripe(&stats, rows));
+
+        // Soundness: a non-pruned stripe may be empty, but a pruned
+        // stripe can never contain a matching row.
+        for p in [
+            gone,
+            RowPredicate::NegativeDownsample { rate: 0.0, seed: 1 },
+            RowPredicate::SampleRate { rate: 0.0, seed: 2 },
+        ] {
+            assert!(samples.iter().all(|s| !p.matches_sample(s)));
+        }
+    }
+
+    #[test]
+    fn selectivity_estimates_are_probabilities() {
+        let preds = [
+            RowPredicate::TimestampRange { min: 5, max: 1 },
+            RowPredicate::TimestampRange { min: 0, max: 100 },
+            RowPredicate::NegativeDownsample { rate: 0.5, seed: 0 },
+            RowPredicate::FeaturePresent {
+                feature: FeatureId(1),
+            },
+            RowPredicate::SampleRate { rate: 0.1, seed: 0 },
+        ];
+        for p in &preds {
+            let s = p.selectivity();
+            assert!((0.0..=1.0).contains(&s), "{p:?} -> {s}");
+        }
+        assert_eq!(preds[0].selectivity(), 0.0);
+        let conj = RowPredicate::And(vec![
+            RowPredicate::SampleRate { rate: 0.5, seed: 0 },
+            RowPredicate::SampleRate { rate: 0.5, seed: 1 },
+        ]);
+        assert!((conj.selectivity() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stripe_selectivity_refines_with_stats() {
+        let samples: Vec<Sample> = (0..100)
+            .map(|i| sample(i, (i < 10) as u64 as f32, false))
+            .collect();
+        let stats = StripeStats::from_samples(&samples);
+        // Half-open overlap of the ts span ≈ 0.5.
+        let p = RowPredicate::TimestampRange { min: 0, max: 49 };
+        let s = p.stripe_selectivity(&stats, 100);
+        assert!((s - 0.49).abs() < 0.05, "{s}");
+        // Downsample: 10% positives + 50% of negatives ≈ 0.55.
+        let d = RowPredicate::NegativeDownsample { rate: 0.5, seed: 0 }
+            .stripe_selectivity(&stats, 100);
+        assert!((d - 0.55).abs() < 1e-9, "{d}");
+        // Absent feature → 0.
+        let f = RowPredicate::FeaturePresent {
+            feature: FeatureId(424_242),
+        }
+        .stripe_selectivity(&stats, 100);
+        assert_eq!(f, 0.0);
+    }
+}

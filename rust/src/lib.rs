@@ -25,6 +25,13 @@
 //!   payload once (plus an inverse index), and a dedup-aware DPP path
 //!   that preprocesses each unique payload once and expands batches on
 //!   the Client — cutting storage, read I/O, and preprocessing together;
+//! * **predicate pushdown** ([`filter`]): session row predicates
+//!   (timestamp recency, negative downsampling, feature presence,
+//!   deterministic sampling) flow from the spec down to physical I/O —
+//!   DWRF footers carry per-stripe statistics that let the planner and
+//!   the DPP Master skip provably-empty stripes before any byte is
+//!   fetched, and partially-matching stripes decode once into
+//!   selection-vector batches so transforms touch only surviving rows;
 //! * a PJRT runtime that executes the AOT-compiled JAX/Pallas DLRM
 //!   artifacts from the Rust hot path ([`runtime`]);
 //! * drivers that regenerate every table and figure of the paper
@@ -37,6 +44,7 @@ pub mod dedup;
 pub mod dpp;
 pub mod dwrf;
 pub mod etl;
+pub mod filter;
 pub mod metrics;
 pub mod paper;
 pub mod popularity;

@@ -88,6 +88,15 @@ pub struct EtlMetrics {
     pub transform_rows: Counter,
     /// Rows whose preprocessing was skipped thanks to dedup.
     pub dedup_saved_rows: Counter,
+    /// Rows decoded out of storage (post stripe-pruning, pre row
+    /// selection) — the quantity predicate pushdown shrinks.
+    pub decoded_rows: Counter,
+    /// Rows dropped by the session's row predicate after decode.
+    pub filtered_rows: Counter,
+    /// Stripes skipped whole by footer-stat pruning (zero I/Os issued).
+    pub skipped_stripes: Counter,
+    /// Wanted-stream bytes never fetched thanks to stripe pruning.
+    pub skipped_bytes: Counter,
     pub t_read: StageClock,
     pub t_extract: StageClock,
     pub t_transform: StageClock,
@@ -120,6 +129,18 @@ impl EtlMetrics {
             1.0
         } else {
             self.samples.get() as f64 / t as f64
+        }
+    }
+
+    /// Observed predicate selectivity: delivered / (decoded + pruned-away
+    /// would-be rows are excluded — this is the post-pruning survival
+    /// rate). 1.0 when nothing was decoded or no filter ran.
+    pub fn observed_selectivity(&self) -> f64 {
+        let d = self.decoded_rows.get();
+        if d == 0 {
+            1.0
+        } else {
+            (d - self.filtered_rows.get().min(d)) as f64 / d as f64
         }
     }
 }

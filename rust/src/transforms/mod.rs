@@ -139,6 +139,12 @@ pub enum Op {
     /// std::clamp on a dense feature.
     Clamp { lo: f32, hi: f32 },
     /// Random row sampling: zero out rows pseudorandomly below `rate`.
+    ///
+    /// Legacy: the keep-mask hashes the *row position*, which makes the
+    /// DAG row-index-sensitive and forces Dedup-encoded reads onto the
+    /// oblivious path. New sessions should push sampling down as
+    /// [`crate::filter::RowPredicate::SampleRate`], whose decision is
+    /// content-keyed and also prunes stripes/bytes before decode.
     Sampling { rate: f32, seed: u64 },
 }
 

@@ -248,6 +248,38 @@ fn oblivious_worker_on_dedup_file_matches_dedup_aware_exactly() {
 }
 
 #[test]
+fn row_index_sensitive_dag_on_dedup_stripes_falls_back_losslessly() {
+    // A DAG containing the legacy `Sampling` op (position-hash keep
+    // mask) is row-index-sensitive: evaluating it over unique payloads
+    // would be unsound, so the dedup-aware worker must silently fall
+    // back to the oblivious path — and produce *identical* output to a
+    // worker with dedup awareness disabled.
+    let mut world = build(Encoding::Dedup);
+    let fid = *world
+        .spec
+        .projection
+        .iter()
+        .min_by_key(|f| f.0)
+        .expect("projected feature");
+    let mut dag = world.spec.dag.clone();
+    let i = dag.input(fid);
+    let mask = dag.apply(Op::Sampling { rate: 0.5, seed: 9 }, vec![i]);
+    dag.output(dsi::schema::FeatureId(999_999), mask);
+    assert!(dag.row_index_sensitive());
+    world.spec.dag = dag;
+
+    let (aware, aware_m) = drain(&world, true);
+    let (oblivious, oblivious_m) = drain(&world, false);
+    // Same file, same split order → batch-for-batch identical tensors.
+    assert_eq!(aware, oblivious);
+    let rows: usize = aware.iter().map(|b| b.rows).sum();
+    assert_eq!(rows as u64, world.total_rows);
+    // Fallback really engaged: no dedup savings on either side.
+    assert_eq!(aware_m.transform_rows.get(), oblivious_m.transform_rows.get());
+    assert_eq!(aware_m.dedup_saved_rows.get(), 0);
+}
+
+#[test]
 fn dedup_halves_storage_read_and_preproc_at_factor_4() {
     let flat = build(Encoding::Flattened);
     let dedup = build(Encoding::Dedup);

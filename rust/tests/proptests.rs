@@ -467,3 +467,171 @@ fn prop_columnar_row_conversion_is_lossless() {
         Ok(())
     });
 }
+
+fn random_predicate(g: &mut Gen) -> dsi::filter::RowPredicate {
+    use dsi::filter::RowPredicate;
+    fn leaf(g: &mut Gen) -> RowPredicate {
+        match g.usize(0..4) {
+            0 => {
+                let a = g.u64(0..1 << 40);
+                let b = g.u64(0..1 << 40);
+                RowPredicate::TimestampRange {
+                    min: a.min(b),
+                    max: a.max(b),
+                }
+            }
+            1 => RowPredicate::NegativeDownsample {
+                rate: g.usize(0..5) as f64 / 4.0,
+                seed: g.u64(0..1000),
+            },
+            2 => RowPredicate::FeaturePresent {
+                feature: FeatureId(g.usize(0..16) as u32),
+            },
+            _ => RowPredicate::SampleRate {
+                rate: g.usize(0..5) as f64 / 4.0,
+                seed: g.u64(0..1000),
+            },
+        }
+    }
+    if g.bool() {
+        leaf(g)
+    } else {
+        let n = g.usize(1..4);
+        RowPredicate::And((0..n).map(|_| leaf(g)).collect())
+    }
+}
+
+#[test]
+fn prop_filtered_plan_covers_surviving_stripes_exactly() {
+    use std::collections::HashSet;
+    check("filtered plan coverage", 60, |g| {
+        let samples = random_samples(g);
+        let dense_ids: Vec<FeatureId> = (0..6).map(FeatureId).collect();
+        let sparse_ids: Vec<FeatureId> = (10..15).map(FeatureId).collect();
+        let stripe_rows = g.usize(1..16);
+        let mut w = DwrfWriter::new(
+            "prop",
+            dense_ids.clone(),
+            sparse_ids.clone(),
+            WriterOptions {
+                encoding: Encoding::Flattened,
+                stripe_rows,
+                ..Default::default()
+            },
+        );
+        w.write_all(samples.clone());
+        let bytes = w.finish();
+        let r = DwrfReader::open_table(&bytes, "prop")
+            .map_err(|e| e.to_string())?;
+        // Arbitrary projection subset, coalesce window, and predicate.
+        let all_ids: Vec<FeatureId> = dense_ids
+            .iter()
+            .chain(sparse_ids.iter())
+            .copied()
+            .collect();
+        let picked: Vec<FeatureId> =
+            all_ids.iter().copied().filter(|_| g.bool()).collect();
+        let proj = Projection::new(picked);
+        let window = if g.bool() {
+            Some(g.u64(1..1 << 21))
+        } else {
+            None
+        };
+        let pred = random_predicate(g);
+        let plan = r.plan_filtered(&proj, window, Some(&pred));
+
+        // Accounting invariant.
+        if plan.useful_bytes > plan.read_bytes {
+            return Err(format!(
+                "useful {} > read {}",
+                plan.useful_bytes, plan.read_bytes
+            ));
+        }
+        // Planned and skipped stripes partition the stripe set.
+        let planned: HashSet<usize> =
+            plan.stripes.iter().map(|s| s.stripe).collect();
+        let skipped: HashSet<usize> =
+            plan.skipped_stripes.iter().copied().collect();
+        if !planned.is_disjoint(&skipped) {
+            return Err("stripe both planned and skipped".into());
+        }
+        if planned.len() + skipped.len() != r.meta.stripes.len() {
+            return Err("stripes lost from the plan".into());
+        }
+        // Every wanted stream extent of every surviving stripe is
+        // covered by exactly that stripe's I/Os; skipped stripes issue
+        // none at all.
+        for sp in &plan.stripes {
+            for &wi in &sp.wanted_streams {
+                let st = &r.meta.stripes[sp.stripe].streams[wi];
+                let inside = sp.ios.iter().any(|io| {
+                    st.offset >= io.offset
+                        && st.offset + st.len <= io.end()
+                });
+                if !inside {
+                    return Err(format!(
+                        "stream extent uncovered (stripe {})",
+                        sp.stripe
+                    ));
+                }
+            }
+        }
+        // Pruning soundness: a skipped stripe contains no matching row.
+        if !skipped.is_empty() {
+            let full_proj = Projection::new(all_ids.iter().copied());
+            let full_plan = r.plan(&full_proj, None);
+            let bufs = r.fetch_local(&bytes, &full_plan);
+            for &si in &skipped {
+                let rows = r
+                    .decode_stripe_rows(
+                        si,
+                        &bufs,
+                        &full_proj,
+                        DecodeMode::default(),
+                    )
+                    .map_err(|e| e.to_string())?;
+                if let Some(hit) =
+                    rows.iter().find(|s| pred.matches_sample(s))
+                {
+                    return Err(format!(
+                        "pruned stripe {si} had a matching row ts={}",
+                        hit.timestamp
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_selection_compact_matches_row_filtering() {
+    check("selection compaction", 120, |g| {
+        let samples = random_samples(g);
+        let dense_ids: Vec<FeatureId> = (0..6).map(FeatureId).collect();
+        let sparse_ids: Vec<FeatureId> = (10..15).map(FeatureId).collect();
+        let batch =
+            ColumnarBatch::from_samples(&samples, &dense_ids, &sparse_ids);
+        let pred = random_predicate(g);
+        let keep = pred.select_batch(&batch).ones();
+        let compacted = batch.with_selection(keep.clone()).compact();
+        let want: Vec<_> = samples
+            .iter()
+            .filter(|s| pred.matches_sample(s))
+            .cloned()
+            .collect();
+        if compacted.num_rows != want.len() {
+            return Err(format!(
+                "kept {} rows, want {}",
+                compacted.num_rows,
+                want.len()
+            ));
+        }
+        if compacted.to_samples() != want {
+            return Err("selection-compacted rows diverge from \
+                        sample-level filtering"
+                .into());
+        }
+        Ok(())
+    });
+}
