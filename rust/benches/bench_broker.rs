@@ -1,0 +1,238 @@
+//! Cross-job read-broker benchmark: N fully-overlapping sessions scan
+//! the same table, independently vs through one shared [`ReadBroker`].
+//! Reports total storage bytes read, broker hit rate, coalesced I/Os,
+//! and saved bytes for N ∈ {1, 2, 4, 8}, verifies every brokered
+//! session's wire output is byte-identical to the private-scan path,
+//! and emits `target/broker_results.json`. CI criterion: 4 overlapping
+//! sessions must cut total storage bytes read by >= 3x.
+
+use dsi::broker::{MemoryBudget, ReadBroker};
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::datagen::{build_dataset_with, GenOptions};
+use dsi::dpp::{Master, SessionSpec, WorkerCore};
+use dsi::dwrf::WriterOptions;
+use dsi::metrics::{EtlMetrics, Table};
+use dsi::schema::{FeatureId, FeatureKind};
+use dsi::tectonic::{Cluster, ClusterConfig};
+use dsi::transforms::{Op, TransformDag};
+use dsi::util::json::Json;
+use dsi::util::rng::Pcg32;
+use dsi::warehouse::Catalog;
+use std::sync::Arc;
+
+const SEED: u64 = 41;
+
+struct World {
+    cluster: Arc<Cluster>,
+    catalog: Catalog,
+    spec: SessionSpec,
+}
+
+fn build() -> World {
+    let rm = RmConfig::get(RmId::Rm1);
+    let scale = SimScale {
+        rows_per_partition: 2048,
+        materialized_features: 128,
+        partitions: 2,
+    };
+    let cluster = Arc::new(Cluster::new(ClusterConfig {
+        chunk_bytes: 256 << 10,
+        ..Default::default()
+    }));
+    let catalog = Catalog::new();
+    let h = build_dataset_with(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions {
+            stripe_rows: 128,
+            ..Default::default()
+        },
+        SEED,
+        &GenOptions::default(),
+    )
+    .expect("build dataset");
+
+    // A normalization session over ~25% of the features — the shape
+    // every one of the N overlapping jobs runs.
+    let mut rng = Pcg32::new(SEED ^ 0xB40C);
+    let take = (h.schema.features.len() / 4).max(4);
+    let proj: Vec<FeatureId> = h.schema.sample_projection(&mut rng, take, 1.0);
+    let mut dag = TransformDag::default();
+    for &fid in &proj {
+        match h.schema.by_id(fid).map(|d| d.kind) {
+            Some(FeatureKind::Dense) => {
+                let i = dag.input_dense(fid);
+                let c = dag.apply(Op::Clamp { lo: -3.0, hi: 3.0 }, vec![i]);
+                dag.output(fid, c);
+            }
+            _ => {
+                let i = dag.input_sparse(fid);
+                let s = dag.apply(
+                    Op::SigridHash {
+                        salt: 11,
+                        modulus: 1 << 16,
+                    },
+                    vec![i],
+                );
+                dag.output(fid, s);
+            }
+        }
+    }
+    let spec = SessionSpec::from_dag(&h.table_name, 0, u32::MAX, dag, 64);
+    World {
+        cluster,
+        catalog,
+        spec,
+    }
+}
+
+struct SessionRun {
+    master: Master,
+    core: WorkerCore,
+}
+
+/// (seq, rows, dedup, bytes) per wire batch — enough to prove
+/// byte-identity across paths.
+type Wire = Vec<(u64, usize, bool, Vec<u8>)>;
+
+fn new_session(world: &World, broker: Option<&Arc<ReadBroker>>) -> SessionRun {
+    let mut spec = world.spec.clone();
+    spec.pipeline.shared_reads = broker.is_some();
+    let master = match broker {
+        Some(b) => Master::new_shared(
+            &world.catalog,
+            &world.cluster,
+            spec.clone(),
+            b,
+        ),
+        None => Master::new(&world.catalog, &world.cluster, spec.clone()),
+    }
+    .expect("master");
+    let metrics = Arc::new(EtlMetrics::default());
+    let mut core =
+        WorkerCore::new(Arc::new(spec), world.cluster.clone(), metrics);
+    if let Some(h) = master.broker_handle() {
+        core = core.with_broker(h);
+    }
+    SessionRun { master, core }
+}
+
+fn drain(run: &mut SessionRun) -> Wire {
+    let w = run.master.register_worker();
+    let mut wire = Wire::new();
+    while let Some(split) = run.master.fetch_split(w) {
+        for b in run.core.process_split(&split).expect("process split") {
+            wire.push((b.seq, b.rows, b.dedup, b.bytes));
+        }
+        run.master.complete_split(w, split.id);
+    }
+    wire
+}
+
+fn main() {
+    let world = build();
+
+    // The private-scan reference output every brokered session must
+    // reproduce byte-for-byte.
+    let baseline_wire = drain(&mut new_session(&world, None));
+    let total_rows: usize = baseline_wire.iter().map(|b| b.1).sum();
+
+    let mut table = Table::new(
+        "Cross-job shared reads: N fully-overlapping sessions \
+         (RM1, 4096 rows), independent vs one ReadBroker",
+        &[
+            "N",
+            "indep MB",
+            "broker MB",
+            "reduction",
+            "hit rate",
+            "coalesced I/Os",
+            "saved MB",
+            "identical",
+        ],
+    );
+    let mut arr = Vec::new();
+    let mut crit_reduction = 0.0;
+    let mut all_identical = true;
+    for n in [1usize, 2, 4, 8] {
+        // Independent: each session plans and fetches privately.
+        world.cluster.reset_stats();
+        for _ in 0..n {
+            let wire = drain(&mut new_session(&world, None));
+            assert_eq!(wire.len(), baseline_wire.len());
+        }
+        let indep_bytes = world.cluster.stats().bytes_read;
+
+        // Brokered: all sessions registered up front (the concurrent-
+        // jobs shape), then drained; each popular stripe is fetched and
+        // decoded once.
+        world.cluster.reset_stats();
+        let broker =
+            ReadBroker::new(world.cluster.clone(), MemoryBudget::new(1 << 30));
+        let mut sessions: Vec<SessionRun> = (0..n)
+            .map(|_| new_session(&world, Some(&broker)))
+            .collect();
+        let mut identical = true;
+        for s in sessions.iter_mut() {
+            let wire = drain(s);
+            identical &= wire == baseline_wire;
+        }
+        let broker_bytes = world.cluster.stats().bytes_read;
+        all_identical &= identical;
+
+        let reduction = indep_bytes as f64 / broker_bytes.max(1) as f64;
+        if n == 4 {
+            crit_reduction = reduction;
+        }
+        let hit_rate = broker.metrics.hit_rate();
+        table.row(&[
+            format!("{n}"),
+            format!("{:.2}", indep_bytes as f64 / 1e6),
+            format!("{:.2}", broker_bytes as f64 / 1e6),
+            format!("{reduction:.2}x"),
+            format!("{hit_rate:.2}"),
+            format!("{}", broker.metrics.coalesced_ios.get()),
+            format!("{:.2}", broker.metrics.saved_bytes.get() as f64 / 1e6),
+            format!("{identical}"),
+        ]);
+        let mut j = Json::obj();
+        j.set("sessions", n as u64)
+            .set("independent_bytes", indep_bytes)
+            .set("broker_bytes", broker_bytes)
+            .set("reduction", reduction)
+            .set("broker_hit_rate", hit_rate)
+            .set("shared_reads", broker.metrics.shared_reads.get())
+            .set("broker_misses", broker.metrics.broker_misses.get())
+            .set("saved_bytes", broker.metrics.saved_bytes.get())
+            .set("coalesced_ios", broker.metrics.coalesced_ios.get())
+            .set("outputs_identical", identical)
+            .set("rows_per_session", total_rows as u64);
+        arr.push(j);
+    }
+    table.print();
+
+    let pass = crit_reduction >= 3.0 && all_identical;
+    println!(
+        "\ncriterion @ N=4: storage-bytes reduction {crit_reduction:.2}x \
+         (target >= 3x), per-session outputs byte-identical to the \
+         non-broker path: {all_identical}: {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+    let mut out = Json::obj();
+    out.set("table", Json::Arr(arr));
+    out.set("criterion_reduction_4x_sessions", crit_reduction);
+    out.set("outputs_identical", all_identical);
+    out.set("criterion_pass", pass);
+    let _ = std::fs::create_dir_all("target");
+    let path = "target/broker_results.json";
+    if std::fs::write(path, out.to_string_pretty()).is_ok() {
+        println!("wrote {path}");
+    }
+    // CI smoke: regressions that erode cross-job sharing below the
+    // acceptance criterion fail the bench step.
+    if !pass {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,470 @@
+//! The broker's decode-once stripe buffer: ref-counted shared stripe
+//! payloads held under a [`MemoryBudget`] that other in-memory consumers
+//! (the worker [`crate::dpp::TensorCache`]) can share, with single-flight
+//! fetches so concurrent sessions never duplicate a storage read.
+
+use super::SharedStripe;
+use crate::metrics::Counter;
+use crate::schema::FeatureId;
+use crate::tectonic::FileId;
+use anyhow::Result;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One byte pool shared by every cache that pins decoded training data in
+/// memory (broker stripe buffers, the preprocessed-tensor cache): each
+/// consumer reserves before holding and releases on eviction, so the
+/// *sum* stays bounded no matter which layer is hot.
+pub struct MemoryBudget {
+    total: u64,
+    used: AtomicU64,
+}
+
+impl MemoryBudget {
+    pub fn new(total: u64) -> Arc<MemoryBudget> {
+        Arc::new(MemoryBudget {
+            total,
+            used: AtomicU64::new(0),
+        })
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    /// Reserve `bytes` if the pool has room.
+    pub fn try_reserve(&self, bytes: u64) -> bool {
+        let mut cur = self.used.load(Ordering::Relaxed);
+        loop {
+            let Some(next) = cur.checked_add(bytes) else {
+                return false;
+            };
+            if next > self.total {
+                return false;
+            }
+            match self.used.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    pub fn release(&self, bytes: u64) {
+        let mut cur = self.used.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(bytes);
+            match self.used.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+/// Buffer key: one decoded stripe of one file.
+pub type StripeKey = (FileId, usize);
+
+/// What a fetch produced, before the buffer takes ownership.
+pub struct FetchedStripe {
+    pub stripe: SharedStripe,
+    /// Features the payload was decoded with (a superset of every
+    /// registered session's projection at fetch time).
+    pub proj: HashSet<FeatureId>,
+    /// Storage bytes fetched.
+    pub fetched_bytes: u64,
+    /// Stream extents wanted / physical I/Os issued after coalescing.
+    pub extents: usize,
+    pub ios: usize,
+}
+
+/// How one serve was satisfied.
+pub enum ServeOutcome {
+    /// Another session already paid the fetch + decode.
+    Hit {
+        payload: Arc<SharedStripe>,
+        /// Storage bytes this hit avoided re-reading.
+        saved_bytes: u64,
+    },
+    /// This serve fetched and decoded the stripe.
+    Fetched {
+        payload: Arc<SharedStripe>,
+        fetched_bytes: u64,
+        extents: usize,
+        ios: usize,
+    },
+}
+
+struct ReadyEntry {
+    payload: Arc<SharedStripe>,
+    proj: HashSet<FeatureId>,
+    fetched_bytes: u64,
+    mem_bytes: u64,
+    last_used: u64,
+    /// Whether `mem_bytes` is reserved against the budget.
+    charged: bool,
+}
+
+enum Slot {
+    /// A fetch is in flight; waiters block on the condvar.
+    Loading,
+    Ready(ReadyEntry),
+}
+
+struct BufState {
+    entries: HashMap<StripeKey, Slot>,
+    tick: u64,
+}
+
+/// Budget-bounded map of decoded stripes. Entries are dropped eagerly
+/// once the last registered session consumes them (`remaining == 0`) and
+/// lazily (LRU, unreferenced first) under budget pressure.
+pub struct StripeBuffer {
+    state: Mutex<BufState>,
+    cv: Condvar,
+    budget: Arc<MemoryBudget>,
+    pub evictions: Counter,
+}
+
+impl StripeBuffer {
+    pub fn new(budget: Arc<MemoryBudget>) -> StripeBuffer {
+        StripeBuffer {
+            state: Mutex::new(BufState {
+                entries: HashMap::new(),
+                tick: 0,
+            }),
+            cv: Condvar::new(),
+            budget,
+            evictions: Counter::new(),
+        }
+    }
+
+    pub fn budget(&self) -> &Arc<MemoryBudget> {
+        &self.budget
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serve one stripe: a buffered payload decoded with a sufficient
+    /// projection is returned directly; otherwise `fetch` runs exactly
+    /// once (concurrent callers for the same key wait instead of
+    /// duplicating the storage read). `remaining` is the number of
+    /// *other* registered serves still expected for this key — the entry
+    /// is released as soon as it reaches zero, and never cached when the
+    /// caller was the last one interested.
+    pub fn serve<F>(
+        &self,
+        key: StripeKey,
+        needed: &[FeatureId],
+        remaining: usize,
+        fetch: F,
+    ) -> Result<ServeOutcome>
+    where
+        F: FnOnce() -> Result<FetchedStripe>,
+    {
+        enum Action {
+            Hit,
+            Refetch,
+            Wait,
+            Load,
+        }
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let action = match st.entries.get(&key) {
+                Some(Slot::Ready(e)) => {
+                    if needed.iter().all(|f| e.proj.contains(f)) {
+                        Action::Hit
+                    } else {
+                        Action::Refetch
+                    }
+                }
+                Some(Slot::Loading) => Action::Wait,
+                None => Action::Load,
+            };
+            match action {
+                Action::Hit => {
+                    st.tick += 1;
+                    let tick = st.tick;
+                    let (payload, saved) = match st.entries.get_mut(&key) {
+                        Some(Slot::Ready(e)) => {
+                            e.last_used = tick;
+                            (e.payload.clone(), e.fetched_bytes)
+                        }
+                        _ => unreachable!("checked Ready above"),
+                    };
+                    if remaining == 0 {
+                        // Last interested session: free the memory now.
+                        if let Some(Slot::Ready(e)) = st.entries.remove(&key) {
+                            if e.charged {
+                                self.budget.release(e.mem_bytes);
+                            }
+                        }
+                    }
+                    return Ok(ServeOutcome::Hit {
+                        payload,
+                        saved_bytes: saved,
+                    });
+                }
+                Action::Refetch => {
+                    // Decoded with an insufficient projection (an earlier,
+                    // narrower registration): drop it and refetch with the
+                    // wider union.
+                    if let Some(Slot::Ready(e)) = st.entries.remove(&key) {
+                        if e.charged {
+                            self.budget.release(e.mem_bytes);
+                        }
+                    }
+                    break;
+                }
+                Action::Wait => {
+                    st = self.cv.wait(st).unwrap();
+                }
+                Action::Load => break,
+            }
+        }
+        st.entries.insert(key, Slot::Loading);
+        drop(st);
+
+        let fetched = match fetch() {
+            Ok(f) => f,
+            Err(e) => {
+                let mut st = self.state.lock().unwrap();
+                st.entries.remove(&key);
+                self.cv.notify_all();
+                return Err(e);
+            }
+        };
+        let payload = Arc::new(fetched.stripe);
+        let mem = payload.mem_bytes();
+        let mut st = self.state.lock().unwrap();
+        let charged = remaining > 0 && self.reserve_evicting(&mut st, mem);
+        if charged {
+            st.tick += 1;
+            let tick = st.tick;
+            st.entries.insert(
+                key,
+                Slot::Ready(ReadyEntry {
+                    payload: payload.clone(),
+                    proj: fetched.proj,
+                    fetched_bytes: fetched.fetched_bytes,
+                    mem_bytes: mem,
+                    last_used: tick,
+                    charged: true,
+                }),
+            );
+        } else {
+            // Nobody else wants it, or the budget is pinned solid: serve
+            // this caller without caching.
+            st.entries.remove(&key);
+        }
+        drop(st);
+        self.cv.notify_all();
+        Ok(ServeOutcome::Fetched {
+            payload,
+            fetched_bytes: fetched.fetched_bytes,
+            extents: fetched.extents,
+            ios: fetched.ios,
+        })
+    }
+
+    /// Drop a buffered stripe (e.g. its last registered session went
+    /// away without consuming it). In-flight loads are left alone.
+    pub fn release(&self, key: StripeKey) {
+        let mut st = self.state.lock().unwrap();
+        if matches!(st.entries.get(&key), Some(Slot::Ready(_))) {
+            if let Some(Slot::Ready(e)) = st.entries.remove(&key) {
+                if e.charged {
+                    self.budget.release(e.mem_bytes);
+                }
+            }
+        }
+    }
+
+    /// Reserve `bytes`, evicting least-recently-used entries that no
+    /// session currently holds a handle to. Returns false when the pool
+    /// cannot fit the reservation even after evicting everything
+    /// evictable (entries pinned by live `Arc` handles stay).
+    fn reserve_evicting(&self, st: &mut BufState, bytes: u64) -> bool {
+        loop {
+            if self.budget.try_reserve(bytes) {
+                return true;
+            }
+            let victim = st
+                .entries
+                .iter()
+                .filter_map(|(k, slot)| match slot {
+                    Slot::Ready(e)
+                        if e.charged
+                            && Arc::strong_count(&e.payload) == 1 =>
+                    {
+                        Some((*k, e.last_used))
+                    }
+                    _ => None,
+                })
+                .min_by_key(|&(_, t)| t)
+                .map(|(k, _)| k);
+            let Some(k) = victim else {
+                return false;
+            };
+            if let Some(Slot::Ready(e)) = st.entries.remove(&k) {
+                self.budget.release(e.mem_bytes);
+                self.evictions.inc();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ColumnarBatch;
+
+    fn stripe_of(bytes: usize) -> SharedStripe {
+        // approx_bytes counts labels at 4 bytes each.
+        SharedStripe::Columnar(ColumnarBatch {
+            num_rows: bytes / 4,
+            labels: vec![0.0; bytes / 4],
+            ..Default::default()
+        })
+    }
+
+    fn fetched(bytes: usize) -> FetchedStripe {
+        FetchedStripe {
+            stripe: stripe_of(bytes),
+            proj: HashSet::new(),
+            fetched_bytes: bytes as u64,
+            extents: 4,
+            ios: 1,
+        }
+    }
+
+    fn key(f: u64, s: usize) -> StripeKey {
+        (FileId(f), s)
+    }
+
+    #[test]
+    fn budget_reserve_release() {
+        let b = MemoryBudget::new(100);
+        assert!(b.try_reserve(60));
+        assert!(!b.try_reserve(50));
+        assert!(b.try_reserve(40));
+        assert_eq!(b.used(), 100);
+        b.release(70);
+        assert_eq!(b.used(), 30);
+        // Over-release saturates instead of wrapping.
+        b.release(1000);
+        assert_eq!(b.used(), 0);
+        assert!(!b.try_reserve(101), "never exceeds total");
+        assert_eq!(b.total(), 100);
+    }
+
+    #[test]
+    fn serve_caches_then_hits_then_releases() {
+        let buf = StripeBuffer::new(MemoryBudget::new(1 << 20));
+        let out = buf
+            .serve(key(1, 0), &[], 1, || Ok(fetched(400)))
+            .unwrap();
+        assert!(matches!(out, ServeOutcome::Fetched { .. }));
+        assert_eq!(buf.len(), 1);
+        assert_eq!(buf.budget().used(), 400);
+        // Second (last) interested serve hits and frees the entry.
+        let out = buf
+            .serve(key(1, 0), &[], 0, || panic!("must not refetch"))
+            .unwrap();
+        match out {
+            ServeOutcome::Hit { saved_bytes, .. } => {
+                assert_eq!(saved_bytes, 400)
+            }
+            _ => panic!("expected hit"),
+        }
+        assert!(buf.is_empty());
+        assert_eq!(buf.budget().used(), 0);
+    }
+
+    #[test]
+    fn last_consumer_not_cached() {
+        let buf = StripeBuffer::new(MemoryBudget::new(1 << 20));
+        let out = buf
+            .serve(key(1, 0), &[], 0, || Ok(fetched(400)))
+            .unwrap();
+        assert!(matches!(out, ServeOutcome::Fetched { .. }));
+        assert!(buf.is_empty(), "no other session wants it");
+        assert_eq!(buf.budget().used(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_under_pressure_skips_pinned() {
+        let buf = StripeBuffer::new(MemoryBudget::new(1000));
+        // A: cached and immediately dropped by the caller (unpinned).
+        let a = buf
+            .serve(key(1, 0), &[], 2, || Ok(fetched(600)))
+            .unwrap();
+        drop(a);
+        // B: would not fit next to A → A is evicted.
+        let _b = buf
+            .serve(key(1, 1), &[], 2, || Ok(fetched(600)))
+            .unwrap();
+        assert_eq!(buf.evictions.get(), 1);
+        assert_eq!(buf.len(), 1);
+        assert_eq!(buf.budget().used(), 600);
+        // C: B's payload is still held by `_b` (pinned) → nothing to
+        // evict, C is served uncached.
+        let c = buf
+            .serve(key(1, 2), &[], 2, || Ok(fetched(600)))
+            .unwrap();
+        assert!(matches!(c, ServeOutcome::Fetched { .. }));
+        assert_eq!(buf.len(), 1, "pinned entry survives, C uncached");
+        assert_eq!(buf.budget().used(), 600);
+    }
+
+    #[test]
+    fn fetch_error_clears_loading_slot() {
+        let buf = StripeBuffer::new(MemoryBudget::new(1 << 20));
+        let err = buf.serve(key(2, 0), &[], 1, || {
+            anyhow::bail!("storage down")
+        });
+        assert!(err.is_err());
+        assert!(buf.is_empty());
+        // A later serve retries cleanly.
+        let ok = buf
+            .serve(key(2, 0), &[], 1, || Ok(fetched(40)))
+            .unwrap();
+        assert!(matches!(ok, ServeOutcome::Fetched { .. }));
+        assert_eq!(buf.len(), 1);
+    }
+
+    #[test]
+    fn release_frees_budget() {
+        let buf = StripeBuffer::new(MemoryBudget::new(1 << 20));
+        let out = buf
+            .serve(key(3, 0), &[], 5, || Ok(fetched(800)))
+            .unwrap();
+        drop(out);
+        assert_eq!(buf.budget().used(), 800);
+        buf.release(key(3, 0));
+        assert_eq!(buf.budget().used(), 0);
+        assert!(buf.is_empty());
+        // Releasing a missing key is a no-op.
+        buf.release(key(3, 1));
+    }
+}

@@ -1,0 +1,615 @@
+//! **ReadBroker** — cross-job shared storage scans (§7.5; OneAccess /
+//! RecD-style cross-layer reuse): hundreds of continuous training jobs
+//! re-read overlapping partitions and popular features, yet each session
+//! privately pays the full Tectonic I/O, decryption, and stripe decode.
+//! The broker sits between Master plans and the Tectonic cluster:
+//! sessions register their planned (file, stripe) interest, overlapping
+//! ranges are coalesced, and each popular stripe is fetched and decoded
+//! **once** into a ref-counted, budget-bounded buffer
+//! ([`StripeBuffer`]), then served to every session as a shared handle.
+//! Per-session semantics — projection, predicate / selection vectors,
+//! transform DAG — apply *after* the shared decode, so outputs are
+//! byte-identical to private scans while the storage cost is paid once.
+
+pub mod buffer;
+
+pub use buffer::{FetchedStripe, MemoryBudget, ServeOutcome, StripeBuffer};
+use buffer::StripeKey;
+
+use crate::data::ColumnarBatch;
+use crate::dwrf::plan::COALESCE_WINDOW;
+use crate::dwrf::{
+    DecodeMode, DedupStripe, DwrfReader, Encoding, FileMeta, IoRange,
+    Projection,
+};
+use crate::metrics::Counter;
+use crate::schema::FeatureId;
+use crate::tectonic::{Cluster, FileId};
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+pub type BrokerSessionId = u64;
+
+/// A stripe decoded once and shared across sessions.
+#[derive(Clone, Debug)]
+pub enum SharedStripe {
+    /// Flattened / Map encodings: the full per-row columnar batch.
+    Columnar(ColumnarBatch),
+    /// Dedup encoding: unique payloads + inverse index, *before*
+    /// expansion, so dedup-aware sessions keep their per-unique
+    /// transform savings.
+    Dedup(DedupStripe),
+}
+
+impl SharedStripe {
+    /// Approximate resident bytes (budget accounting).
+    pub fn mem_bytes(&self) -> u64 {
+        match self {
+            SharedStripe::Columnar(b) => b.approx_bytes() as u64,
+            SharedStripe::Dedup(d) => {
+                (d.unique.approx_bytes()
+                    + d.inverse.len() * 4
+                    + d.labels.len() * 4
+                    + d.timestamps.len() * 8) as u64
+            }
+        }
+    }
+
+    /// Materialize this session's per-row view: restrict to the session
+    /// projection (the shared decode may carry a wider union of every
+    /// registrant's features) and expand Dedup payloads.
+    pub fn to_columnar(&self, projection: &Projection) -> ColumnarBatch {
+        match self {
+            SharedStripe::Columnar(b) => {
+                b.retain_features(|f| projection.contains(f))
+            }
+            SharedStripe::Dedup(d) => d.project(projection).expand(),
+        }
+    }
+
+    /// This session's unexpanded dedup view (the dedup-aware worker
+    /// path). Errors on non-Dedup payloads.
+    pub fn to_dedup(&self, projection: &Projection) -> Result<DedupStripe> {
+        match self {
+            SharedStripe::Dedup(d) => Ok(d.project(projection)),
+            SharedStripe::Columnar(_) => {
+                bail!("shared stripe is not Dedup-encoded")
+            }
+        }
+    }
+}
+
+/// Result of one stripe serve.
+pub struct Served {
+    pub stripe: Arc<SharedStripe>,
+    /// Whether the payload came from the shared buffer (another session
+    /// already paid the fetch + decode).
+    pub from_buffer: bool,
+    /// Storage bytes this serve fetched (0 on buffer hits).
+    pub fetched_bytes: u64,
+}
+
+/// Broker-level counters: the cross-job reuse the paper's §7.5 sharing
+/// discussion is after.
+#[derive(Default)]
+pub struct BrokerMetrics {
+    /// Stripe serves satisfied from the shared buffer.
+    pub shared_reads: Counter,
+    /// Stripe serves that had to fetch + decode.
+    pub broker_misses: Counter,
+    /// Storage bytes buffer hits avoided re-reading.
+    pub saved_bytes: Counter,
+    /// Storage bytes actually fetched through the broker.
+    pub fetched_bytes: Counter,
+    /// Physical I/Os avoided by per-file read coalescing.
+    pub coalesced_ios: Counter,
+}
+
+impl BrokerMetrics {
+    /// Fraction of stripe serves satisfied without touching storage.
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.shared_reads.get() as f64;
+        let m = self.broker_misses.get() as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+struct SessionState {
+    projection: HashSet<FeatureId>,
+    /// (file → stripes) registered but not yet consumed.
+    remaining: HashMap<FileId, BTreeSet<usize>>,
+}
+
+#[derive(Default)]
+struct BrokerState {
+    next_session: u64,
+    sessions: HashMap<BrokerSessionId, SessionState>,
+    /// Outstanding registered serves per (file, stripe) — how long a
+    /// buffered stripe stays wanted.
+    interest: HashMap<StripeKey, usize>,
+    /// Union of every registered session's projection, per file: shared
+    /// decodes use it so any registrant's view is a restriction of the
+    /// buffered payload.
+    union_proj: HashMap<FileId, HashSet<FeatureId>>,
+    /// Encryption domain (table name) per file, from registration.
+    tables: HashMap<FileId, String>,
+}
+
+/// The cross-job read broker. One instance serves any number of
+/// concurrent sessions over one [`Cluster`].
+pub struct ReadBroker {
+    cluster: Arc<Cluster>,
+    /// One cached footer per file across *all* sessions.
+    footers: Mutex<HashMap<FileId, Arc<FileMeta>>>,
+    state: Mutex<BrokerState>,
+    buffer: StripeBuffer,
+    pub metrics: BrokerMetrics,
+}
+
+/// The `(broker, session id)` pair a [`crate::dpp::Master`] hands its
+/// workers so the data plane fetches through the shared path.
+#[derive(Clone)]
+pub struct BrokerHandle {
+    pub broker: Arc<ReadBroker>,
+    pub session: BrokerSessionId,
+}
+
+impl ReadBroker {
+    pub fn new(
+        cluster: Arc<Cluster>,
+        budget: Arc<MemoryBudget>,
+    ) -> Arc<ReadBroker> {
+        Arc::new(ReadBroker {
+            cluster,
+            footers: Mutex::new(HashMap::new()),
+            state: Mutex::new(BrokerState::default()),
+            buffer: StripeBuffer::new(budget),
+            metrics: BrokerMetrics::default(),
+        })
+    }
+
+    /// A broker with its own private stripe-buffer budget. To share one
+    /// pool with a [`crate::dpp::TensorCache`], build the
+    /// [`MemoryBudget`] first and pass it to both.
+    pub fn with_budget_bytes(
+        cluster: Arc<Cluster>,
+        bytes: u64,
+    ) -> Arc<ReadBroker> {
+        Self::new(cluster, MemoryBudget::new(bytes))
+    }
+
+    /// The budget broker buffers charge against.
+    pub fn budget(&self) -> Arc<MemoryBudget> {
+        self.buffer.budget().clone()
+    }
+
+    /// Stripes currently resident in the shared buffer.
+    pub fn buffered_stripes(&self) -> usize {
+        self.buffer.len()
+    }
+
+    /// Fetch-once footer cache: control-plane I/O is shared across
+    /// sessions exactly like data-plane stripes.
+    pub fn footer(&self, file: FileId) -> Result<Arc<FileMeta>> {
+        if let Some(m) = self.footers.lock().unwrap().get(&file) {
+            return Ok(m.clone());
+        }
+        let meta =
+            Arc::new(crate::dpp::Master::fetch_meta(&self.cluster, file)?);
+        let mut cached = self.footers.lock().unwrap();
+        Ok(cached.entry(file).or_insert(meta).clone())
+    }
+
+    /// Register a session's planned interest: its projection joins the
+    /// per-file union the shared decode uses, and each (file, stripe)
+    /// interest count decides how long buffered stripes stay resident.
+    pub fn register(
+        &self,
+        table: &str,
+        projection: &Projection,
+        interest: HashMap<FileId, Vec<usize>>,
+    ) -> BrokerSessionId {
+        let mut st = self.state.lock().unwrap();
+        let id = st.next_session;
+        st.next_session += 1;
+        let proj: HashSet<FeatureId> = projection.iter().copied().collect();
+        let mut remaining: HashMap<FileId, BTreeSet<usize>> = HashMap::new();
+        for (file, stripes) in interest {
+            st.tables.insert(file, table.to_string());
+            st.union_proj
+                .entry(file)
+                .or_default()
+                .extend(proj.iter().copied());
+            let set: BTreeSet<usize> = stripes.into_iter().collect();
+            for &s in &set {
+                *st.interest.entry((file, s)).or_insert(0) += 1;
+            }
+            remaining.insert(file, set);
+        }
+        st.sessions.insert(
+            id,
+            SessionState {
+                projection: proj,
+                remaining,
+            },
+        );
+        id
+    }
+
+    /// Drop a session's outstanding interest; stripes nobody else wants
+    /// any more are released from the buffer immediately.
+    pub fn unregister(&self, session: BrokerSessionId) {
+        let mut st = self.state.lock().unwrap();
+        let Some(sess) = st.sessions.remove(&session) else {
+            return;
+        };
+        let mut freed = Vec::new();
+        for (file, stripes) in sess.remaining {
+            for s in stripes {
+                let key = (file, s);
+                if let Some(n) = st.interest.get_mut(&key) {
+                    *n = n.saturating_sub(1);
+                    if *n == 0 {
+                        st.interest.remove(&key);
+                        freed.push(key);
+                    }
+                }
+            }
+        }
+        drop(st);
+        for key in freed {
+            self.buffer.release(key);
+        }
+    }
+
+    /// Serve one stripe to a registered session: fetched + decoded once
+    /// (with the union projection, through coalesced per-file I/O) on
+    /// first demand, then served from memory to every later session.
+    /// The caller applies its own predicate / selection / transforms
+    /// downstream.
+    pub fn get_stripe(
+        &self,
+        session: BrokerSessionId,
+        file: FileId,
+        stripe: usize,
+    ) -> Result<Served> {
+        let key: StripeKey = (file, stripe);
+        let (needed, union, table, consumed, others) = {
+            let mut st = self.state.lock().unwrap();
+            let sess = st
+                .sessions
+                .get_mut(&session)
+                .context("unknown broker session")?;
+            let needed: Vec<FeatureId> =
+                sess.projection.iter().copied().collect();
+            let consumed = sess
+                .remaining
+                .get_mut(&file)
+                .is_some_and(|s| s.remove(&stripe));
+            // The union must cover this serve even for stripes the
+            // session never registered (e.g. a requeued split).
+            let u = st.union_proj.entry(file).or_default();
+            u.extend(needed.iter().copied());
+            let union: Vec<FeatureId> = u.iter().copied().collect();
+            // Registered serves still expected from *other* sessions.
+            // The interest count is decremented only after the serve
+            // completes, so concurrent sessions racing on the same
+            // stripe all see each other as outstanding — whichever one
+            // loads caches the payload for the rest (single-flight
+            // holds no matter how the lock acquisitions interleave).
+            let count = st.interest.get(&key).copied().unwrap_or(0);
+            let others = if consumed {
+                count.saturating_sub(1)
+            } else {
+                count
+            };
+            let table = st
+                .tables
+                .get(&file)
+                .cloned()
+                .unwrap_or_else(|| "default".to_string());
+            (needed, union, table, consumed, others)
+        };
+
+        let meta = self.footer(file)?;
+        if stripe >= meta.stripes.len() {
+            bail!("stripe {stripe} out of range for {file:?}");
+        }
+        let union_proj = Projection::new(union);
+        let fetch = || -> Result<FetchedStripe> {
+            let reader = DwrfReader::from_meta((*meta).clone(), &table);
+            // Plan one I/O per wanted stream; the cluster merges them
+            // (per-file read coalescing) before touching devices.
+            let plan = reader.plan_stripes(&union_proj, None, stripe, 1);
+            let extents: Vec<IoRange> = plan
+                .stripes
+                .iter()
+                .flat_map(|sp| sp.ios.iter().copied())
+                .collect();
+            let n_extents = extents.len();
+            let (bufs, n_ios) = self.cluster.execute_ios_merged(
+                file,
+                &extents,
+                Some(COALESCE_WINDOW),
+            )?;
+            let fetched_bytes = bufs.bytes();
+            let mode = DecodeMode { fast: true };
+            let payload = match reader.meta.encoding {
+                Encoding::Dedup => SharedStripe::Dedup(
+                    reader
+                        .decode_stripe_dedup(stripe, &bufs, &union_proj, mode)?,
+                ),
+                _ => SharedStripe::Columnar(reader.decode_stripe_columnar(
+                    stripe,
+                    &bufs,
+                    &union_proj,
+                    mode,
+                )?),
+            };
+            Ok(FetchedStripe {
+                stripe: payload,
+                proj: union_proj.iter().copied().collect(),
+                fetched_bytes,
+                extents: n_extents,
+                ios: n_ios,
+            })
+        };
+        let outcome = match self.buffer.serve(key, &needed, others, fetch) {
+            Ok(o) => o,
+            Err(e) => {
+                if consumed {
+                    // Roll back the consumption so a retried (requeued)
+                    // split serves — and settles its interest — like a
+                    // normal registered serve, and unregistration still
+                    // accounts for this stripe.
+                    let mut st = self.state.lock().unwrap();
+                    if let Some(sess) = st.sessions.get_mut(&session) {
+                        sess.remaining
+                            .entry(file)
+                            .or_default()
+                            .insert(stripe);
+                    }
+                }
+                return Err(e);
+            }
+        };
+        // Settle interest now that the serve is done: the consumer that
+        // takes the count to zero releases the buffered entry, however
+        // the concurrent serves interleaved.
+        {
+            let mut st = self.state.lock().unwrap();
+            if consumed {
+                if let Some(n) = st.interest.get_mut(&key) {
+                    *n = n.saturating_sub(1);
+                    if *n == 0 {
+                        st.interest.remove(&key);
+                    }
+                }
+            }
+            let wanted = st.interest.contains_key(&key);
+            drop(st);
+            if !wanted {
+                self.buffer.release(key);
+            }
+        }
+        match outcome {
+            ServeOutcome::Hit {
+                payload,
+                saved_bytes,
+            } => {
+                self.metrics.shared_reads.inc();
+                self.metrics.saved_bytes.add(saved_bytes);
+                Ok(Served {
+                    stripe: payload,
+                    from_buffer: true,
+                    fetched_bytes: 0,
+                })
+            }
+            ServeOutcome::Fetched {
+                payload,
+                fetched_bytes,
+                extents,
+                ios,
+            } => {
+                self.metrics.broker_misses.inc();
+                self.metrics.fetched_bytes.add(fetched_bytes);
+                self.metrics
+                    .coalesced_ios
+                    .add(extents.saturating_sub(ios) as u64);
+                Ok(Served {
+                    stripe: payload,
+                    from_buffer: false,
+                    fetched_bytes,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{RmConfig, RmId, SimScale};
+    use crate::datagen::build_dataset;
+    use crate::dpp::Master;
+    use crate::dwrf::WriterOptions;
+    use crate::tectonic::ClusterConfig;
+    use crate::warehouse::Catalog;
+
+    fn setup() -> (Arc<Cluster>, String, Vec<FileId>, Vec<FeatureId>) {
+        let cluster = Arc::new(Cluster::new(ClusterConfig {
+            chunk_bytes: 64 << 10,
+            ..Default::default()
+        }));
+        let catalog = Catalog::new();
+        let rm = RmConfig::get(RmId::Rm3);
+        let scale = SimScale::tiny();
+        let h = build_dataset(
+            &cluster,
+            &catalog,
+            &rm,
+            &scale,
+            WriterOptions {
+                stripe_rows: 16,
+                ..Default::default()
+            },
+            7,
+        )
+        .unwrap();
+        let files: Vec<FileId> = catalog
+            .get(&h.table_name)
+            .unwrap()
+            .partitions
+            .iter()
+            .map(|p| p.file)
+            .collect();
+        let feats: Vec<FeatureId> =
+            h.schema.features.iter().map(|f| f.id).collect();
+        (cluster, h.table_name, files, feats)
+    }
+
+    fn interest_for(file: FileId, stripes: &[usize]) -> HashMap<FileId, Vec<usize>> {
+        let mut m = HashMap::new();
+        m.insert(file, stripes.to_vec());
+        m
+    }
+
+    /// The private (non-broker) decode of one stripe under `proj`.
+    fn private_decode(
+        cluster: &Cluster,
+        table: &str,
+        file: FileId,
+        stripe: usize,
+        proj: &Projection,
+    ) -> ColumnarBatch {
+        let meta = Master::fetch_meta(cluster, file).unwrap();
+        let reader = DwrfReader::from_meta(meta, table);
+        let plan = reader.plan_stripes(proj, None, stripe, 1);
+        let bufs = cluster
+            .execute_ios(file, &plan.stripes[0].ios)
+            .unwrap();
+        reader
+            .decode_stripe_columnar(stripe, &bufs, proj, DecodeMode::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn footer_cached_once_across_sessions() {
+        let (cluster, _, files, _) = setup();
+        let broker = ReadBroker::with_budget_bytes(cluster.clone(), 1 << 20);
+        cluster.reset_stats();
+        let m1 = broker.footer(files[0]).unwrap();
+        let reads = cluster.stats().reads;
+        assert!(reads > 0, "first footer fetch hits storage");
+        let m2 = broker.footer(files[0]).unwrap();
+        assert_eq!(cluster.stats().reads, reads, "second fetch is cached");
+        assert!(Arc::ptr_eq(&m1, &m2));
+    }
+
+    #[test]
+    fn stripe_fetched_once_then_served_shared_and_released() {
+        let (cluster, table, files, feats) = setup();
+        let broker = ReadBroker::with_budget_bytes(cluster.clone(), 64 << 20);
+        let proj = Projection::new(feats.iter().copied());
+        let s1 = broker.register(&table, &proj, interest_for(files[0], &[0]));
+        let s2 = broker.register(&table, &proj, interest_for(files[0], &[0]));
+        let a = broker.get_stripe(s1, files[0], 0).unwrap();
+        assert!(!a.from_buffer);
+        assert!(a.fetched_bytes > 0);
+        assert_eq!(broker.buffered_stripes(), 1);
+        let b = broker.get_stripe(s2, files[0], 0).unwrap();
+        assert!(b.from_buffer);
+        assert_eq!(b.fetched_bytes, 0);
+        // Last interested session consumed it: memory released.
+        drop((a, b));
+        assert_eq!(broker.buffered_stripes(), 0);
+        assert_eq!(broker.budget().used(), 0);
+        assert_eq!(broker.metrics.shared_reads.get(), 1);
+        assert_eq!(broker.metrics.broker_misses.get(), 1);
+        assert!(broker.metrics.saved_bytes.get() > 0);
+        assert!((broker.metrics.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn session_views_match_private_decodes() {
+        let (cluster, table, files, feats) = setup();
+        let broker = ReadBroker::with_budget_bytes(cluster.clone(), 64 << 20);
+        let full = Projection::new(feats.iter().copied());
+        let narrow = Projection::new(feats.iter().take(4).copied());
+        // Register the wide session first so the union covers both.
+        let s1 = broker.register(&table, &full, interest_for(files[0], &[0]));
+        let s2 =
+            broker.register(&table, &narrow, interest_for(files[0], &[0]));
+        let a = broker.get_stripe(s1, files[0], 0).unwrap();
+        let b = broker.get_stripe(s2, files[0], 0).unwrap();
+        assert!(b.from_buffer, "narrow view restricts the shared decode");
+        assert_eq!(
+            a.stripe.to_columnar(&full),
+            private_decode(&cluster, &table, files[0], 0, &full)
+        );
+        assert_eq!(
+            b.stripe.to_columnar(&narrow),
+            private_decode(&cluster, &table, files[0], 0, &narrow)
+        );
+    }
+
+    #[test]
+    fn projection_widening_refetches() {
+        let (cluster, table, files, feats) = setup();
+        let broker = ReadBroker::with_budget_bytes(cluster.clone(), 64 << 20);
+        let narrow = Projection::new(feats.iter().take(2).copied());
+        let full = Projection::new(feats.iter().copied());
+        // Two narrow sessions keep the narrow decode buffered...
+        let s1 =
+            broker.register(&table, &narrow, interest_for(files[0], &[0]));
+        let _s1b =
+            broker.register(&table, &narrow, interest_for(files[0], &[0]));
+        let a = broker.get_stripe(s1, files[0], 0).unwrap();
+        assert!(!a.from_buffer);
+        assert_eq!(broker.buffered_stripes(), 1);
+        // ...then a wider session registers: the buffered narrow decode
+        // cannot serve it — the broker refetches with the new union.
+        let s2 = broker.register(&table, &full, interest_for(files[0], &[0]));
+        let b = broker.get_stripe(s2, files[0], 0).unwrap();
+        assert!(!b.from_buffer, "narrow payload insufficient; refetched");
+        assert_eq!(
+            b.stripe.to_columnar(&full),
+            private_decode(&cluster, &table, files[0], 0, &full)
+        );
+        // The refetched (wide) payload now serves the remaining narrow
+        // session from the buffer.
+        let c = broker.get_stripe(_s1b, files[0], 0).unwrap();
+        assert!(c.from_buffer);
+        assert_eq!(
+            c.stripe.to_columnar(&narrow),
+            private_decode(&cluster, &table, files[0], 0, &narrow)
+        );
+    }
+
+    #[test]
+    fn unknown_session_errors() {
+        let (cluster, _, files, _) = setup();
+        let broker = ReadBroker::with_budget_bytes(cluster, 1 << 20);
+        assert!(broker.get_stripe(999, files[0], 0).is_err());
+    }
+
+    #[test]
+    fn unregister_releases_unconsumed_interest() {
+        let (cluster, table, files, feats) = setup();
+        let broker = ReadBroker::with_budget_bytes(cluster.clone(), 64 << 20);
+        let proj = Projection::new(feats.iter().copied());
+        let s1 = broker.register(&table, &proj, interest_for(files[0], &[0]));
+        let s2 = broker.register(&table, &proj, interest_for(files[0], &[0]));
+        let a = broker.get_stripe(s1, files[0], 0).unwrap();
+        drop(a);
+        assert_eq!(broker.buffered_stripes(), 1, "kept for s2");
+        broker.unregister(s2);
+        assert_eq!(broker.buffered_stripes(), 0, "s2 gone, buffer freed");
+        assert_eq!(broker.budget().used(), 0);
+    }
+}

@@ -427,6 +427,36 @@ impl ColumnarBatch {
         }
     }
 
+    /// Restrict to the feature columns `keep` accepts; row meta,
+    /// selection, and row count are preserved. This is how a session
+    /// narrows a batch decoded once with a wider *shared* projection
+    /// (the read broker's union across registered sessions) down to its
+    /// own view — column order is preserved, so the result is identical
+    /// to having decoded with the narrow projection directly.
+    pub fn retain_features(
+        &self,
+        keep: impl Fn(FeatureId) -> bool,
+    ) -> ColumnarBatch {
+        ColumnarBatch {
+            num_rows: self.num_rows,
+            dense: self
+                .dense
+                .iter()
+                .filter(|c| keep(c.id))
+                .cloned()
+                .collect(),
+            sparse: self
+                .sparse
+                .iter()
+                .filter(|c| keep(c.id))
+                .cloned()
+                .collect(),
+            labels: self.labels.clone(),
+            timestamps: self.timestamps.clone(),
+            selection: self.selection.clone(),
+        }
+    }
+
     pub fn approx_bytes(&self) -> usize {
         let d: usize = self
             .dense
@@ -497,6 +527,28 @@ mod tests {
         assert_eq!(batch.num_rows, 17);
         let back = batch.to_samples();
         assert_eq!(back, samples);
+    }
+
+    #[test]
+    fn retain_features_matches_narrow_build() {
+        let samples: Vec<Sample> = (0..17).map(sample).collect();
+        let wide = ColumnarBatch::from_samples(
+            &samples,
+            &[FeatureId(0), FeatureId(2)],
+            &[FeatureId(10), FeatureId(11)],
+        );
+        let keep = [FeatureId(0), FeatureId(10)];
+        let narrow = ColumnarBatch::from_samples(
+            &samples,
+            &[FeatureId(0)],
+            &[FeatureId(10)],
+        );
+        assert_eq!(wide.retain_features(|f| keep.contains(&f)), narrow);
+        // Row meta survives a projection that keeps nothing.
+        let none = wide.retain_features(|_| false);
+        assert_eq!(none.num_rows, 17);
+        assert_eq!(none.labels, wide.labels);
+        assert!(none.dense.is_empty() && none.sparse.is_empty());
     }
 
     #[test]

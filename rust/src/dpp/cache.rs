@@ -16,6 +16,7 @@
 use super::spec::SessionSpec;
 use super::split::Split;
 use super::worker::WireBatch;
+use crate::broker::MemoryBudget;
 use crate::dedup::Fnv64;
 use crate::filter::RowPredicate;
 use crate::metrics::Counter;
@@ -43,6 +44,7 @@ pub fn session_fingerprint(spec: &SessionSpec) -> u64 {
     h.write_u8(spec.pipeline.flatmap as u8);
     h.write_u8(spec.pipeline.dedup_aware as u8);
     h.write_u8(spec.pipeline.pushdown as u8);
+    h.write_u8(spec.pipeline.shared_reads as u8);
     h.write_u8(spec.pipeline.coalesce.is_some() as u8);
     h.write_u64(spec.pipeline.coalesce.unwrap_or(0));
     // Row predicate: filtered and unfiltered sessions (or two different
@@ -210,9 +212,13 @@ struct Inner {
 }
 
 /// Bounded shared cache of preprocessed wire batches with LRU eviction.
+/// The byte budget may be private ([`TensorCache::new`]) or a
+/// [`MemoryBudget`] shared with other consumers — notably the read
+/// broker's stripe buffers ([`TensorCache::with_budget`]) — so tensors
+/// and shared stripes coexist under one bound.
 pub struct TensorCache {
     inner: Mutex<Inner>,
-    pub budget_bytes: u64,
+    budget: Arc<MemoryBudget>,
     pub hits: Counter,
     pub misses: Counter,
     pub inserted_bytes: Counter,
@@ -221,20 +227,34 @@ pub struct TensorCache {
 }
 
 impl TensorCache {
+    /// A cache with its own private budget of `budget_bytes`.
     pub fn new(budget_bytes: u64) -> Arc<TensorCache> {
+        Self::with_budget(MemoryBudget::new(budget_bytes))
+    }
+
+    /// A cache charging a (possibly shared) [`MemoryBudget`]. Under
+    /// pressure it evicts its *own* entries; bytes held by the other
+    /// consumers of the pool can squeeze inserts out entirely (`put`
+    /// returns false), never the other way around.
+    pub fn with_budget(budget: Arc<MemoryBudget>) -> Arc<TensorCache> {
         Arc::new(TensorCache {
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 used: 0,
                 tick: 0,
             }),
-            budget_bytes,
+            budget,
             hits: Counter::new(),
             misses: Counter::new(),
             inserted_bytes: Counter::new(),
             evictions: Counter::new(),
             evicted_bytes: Counter::new(),
         })
+    }
+
+    /// Total bytes of the budget pool this cache charges.
+    pub fn budget_total(&self) -> u64 {
+        self.budget.total()
     }
 
     fn key(fingerprint: u64, split: &Split) -> Key {
@@ -273,23 +293,28 @@ impl TensorCache {
         batches: Arc<Vec<WireBatch>>,
     ) -> bool {
         let bytes: u64 = batches.iter().map(|b| b.bytes.len() as u64).sum();
-        if bytes > self.budget_bytes {
+        if bytes > self.budget.total() {
             return false;
         }
         let key = Self::key(fingerprint, split);
         let mut inner = self.inner.lock().unwrap();
         if let Some(old) = inner.map.remove(&key) {
             inner.used -= old.bytes;
+            self.budget.release(old.bytes);
         }
-        while inner.used + bytes > self.budget_bytes {
+        while !self.budget.try_reserve(bytes) {
+            // Shed our own LRU entries until the pool fits us; if the
+            // shortfall is bytes held elsewhere (shared stripes), give
+            // up once we have nothing left to evict.
             let victim = inner
                 .map
                 .iter()
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| *k);
-            let Some(victim) = victim else { break };
+            let Some(victim) = victim else { return false };
             let e = inner.map.remove(&victim).expect("victim present");
             inner.used -= e.bytes;
+            self.budget.release(e.bytes);
             self.evictions.inc();
             self.evicted_bytes.add(e.bytes);
         }
@@ -504,6 +529,34 @@ mod tests {
         assert!(cache.put(1, &split(1, 0), wire(vec![0; 6])));
         assert_eq!(cache.used_bytes(), 6);
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn shared_budget_with_external_consumer() {
+        // Broker stripe buffers and the tensor cache charge one pool:
+        // the cache sheds its own entries under pressure, and external
+        // reservations can squeeze it out entirely — the sum of both
+        // consumers never exceeds the budget.
+        let budget = MemoryBudget::new(10);
+        let cache = TensorCache::with_budget(budget.clone());
+        assert_eq!(cache.budget_total(), 10);
+        assert!(cache.put(1, &split(1, 0), wire(vec![0; 4])));
+        // An external consumer (a shared stripe) takes the rest.
+        assert!(budget.try_reserve(6));
+        assert_eq!(budget.used(), 10);
+        // The cache evicts its own entry to fit a new one...
+        assert!(cache.put(1, &split(1, 2), wire(vec![0; 4])));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.evictions.get(), 1);
+        // ...but cannot fit 5 bytes next to the external 6: it ends up
+        // empty and the insert fails rather than over-committing.
+        assert!(!cache.put(1, &split(1, 4), wire(vec![0; 5])));
+        assert_eq!(cache.used_bytes(), 0);
+        assert_eq!(budget.used(), 6);
+        // Once the external consumer releases, inserts fit again.
+        budget.release(6);
+        assert!(cache.put(1, &split(1, 4), wire(vec![0; 5])));
+        assert_eq!(budget.used(), 5);
     }
 
     #[test]

@@ -6,12 +6,13 @@
 
 use super::spec::SessionSpec;
 use super::split::{splits_for_partition, Split, SplitId};
+use crate::broker::{BrokerHandle, ReadBroker};
 use crate::dwrf::{FileMeta, IoRange};
 use crate::tectonic::{Cluster, FileId};
 use crate::warehouse::Catalog;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeSet, HashMap, VecDeque};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 pub type WorkerId = usize;
@@ -97,6 +98,9 @@ pub struct Master {
     pub spec: SessionSpec,
     state: Mutex<MasterState>,
     pub policy: AutoscalePolicy,
+    /// Present when this session's reads flow through a shared
+    /// [`ReadBroker`] (see [`Master::new_shared`]).
+    broker: Option<BrokerHandle>,
 }
 
 impl Master {
@@ -107,6 +111,30 @@ impl Master {
         catalog: &Catalog,
         cluster: &Cluster,
         spec: SessionSpec,
+    ) -> Result<Master> {
+        Self::build(catalog, cluster, spec, None)
+    }
+
+    /// [`Master::new`] with this session attached to a shared
+    /// [`ReadBroker`]: footers come from the broker's cross-session
+    /// cache (one fetch per file no matter how many sessions), and the
+    /// session's planned (file, stripe) interest is registered so
+    /// overlapping sessions fetch and decode each popular stripe once.
+    /// Workers pick the shared path up via [`Master::broker_handle`].
+    pub fn new_shared(
+        catalog: &Catalog,
+        cluster: &Cluster,
+        spec: SessionSpec,
+        broker: &Arc<ReadBroker>,
+    ) -> Result<Master> {
+        Self::build(catalog, cluster, spec, Some(broker))
+    }
+
+    fn build(
+        catalog: &Catalog,
+        cluster: &Cluster,
+        spec: SessionSpec,
+        broker: Option<&Arc<ReadBroker>>,
     ) -> Result<Master> {
         let table = catalog
             .get(&spec.table)
@@ -132,8 +160,19 @@ impl Master {
         } else {
             None
         };
+        // Planned (file, stripe) interest for broker registration: only
+        // stripes a worker will actually fetch — whole-split prunes and
+        // per-stripe prunes (the worker's plan applies the same
+        // predicate to the same stats) are both excluded, so shared
+        // buffers are never pinned waiting for a consumer that the
+        // pushdown already proved will never come.
+        let mut interest: HashMap<FileId, Vec<usize>> = HashMap::new();
         for p in parts {
-            let meta = Self::fetch_meta(cluster, p.file)?;
+            let meta: Arc<FileMeta> = match broker {
+                // One cached footer per file across *all* sessions.
+                Some(b) => b.footer(p.file)?,
+                None => Arc::new(Self::fetch_meta(cluster, p.file)?),
+            };
             let stripe_rows: Vec<u32> =
                 meta.stripes.iter().map(|s| s.rows).collect();
             for split in splits_for_partition(
@@ -143,24 +182,39 @@ impl Master {
                 &stripe_rows,
                 spec.stripes_per_split,
             ) {
+                let s = split.stripe_start;
+                let e = s + split.stripe_count;
                 let pruned = match predicate {
-                    Some(pr) => {
-                        let s = split.stripe_start;
-                        let e = s + split.stripe_count;
-                        meta.stripes[s..e]
-                            .iter()
-                            .all(|st| pr.prunes_stripe(&st.stats, st.rows))
-                    }
+                    Some(pr) => meta.stripes[s..e]
+                        .iter()
+                        .all(|st| pr.prunes_stripe(&st.stats, st.rows)),
                     None => false,
                 };
                 if pruned {
                     skipped.insert(split.id);
                 } else {
                     queue.push_back(split.id);
+                    if broker.is_some() {
+                        let live = interest.entry(p.file).or_default();
+                        for (si, st) in
+                            meta.stripes[s..e].iter().enumerate()
+                        {
+                            let stripe_pruned = predicate.is_some_and(
+                                |pr| pr.prunes_stripe(&st.stats, st.rows),
+                            );
+                            if !stripe_pruned {
+                                live.push(s + si);
+                            }
+                        }
+                    }
                 }
                 all.insert(split.id, split);
             }
         }
+        let broker = broker.map(|b| BrokerHandle {
+            broker: b.clone(),
+            session: b.register(&spec.table, &spec.projection, interest),
+        });
         Ok(Master {
             spec,
             state: Mutex::new(MasterState {
@@ -173,7 +227,14 @@ impl Master {
                 next_worker: 0,
             }),
             policy: AutoscalePolicy::default(),
+            broker,
         })
+    }
+
+    /// The shared-read handle workers attach to their cores (present
+    /// only for [`Master::new_shared`] sessions).
+    pub fn broker_handle(&self) -> Option<BrokerHandle> {
+        self.broker.clone()
     }
 
     /// Fetch and parse a file's footer via ranged tail reads (doubling
@@ -197,7 +258,13 @@ impl Master {
             }
             let footer_len =
                 u64::from_le_bytes(bytes[n - 12..n - 4].try_into().unwrap());
-            if footer_len + 12 <= tail {
+            // `footer_len` comes straight off storage: a corrupt value
+            // near u64::MAX wraps `footer_len + 12` past this guard and
+            // then underflows the start offset below.
+            let Some(total) = footer_len.checked_add(12) else {
+                bail!("corrupt footer length {footer_len}");
+            };
+            if total <= tail {
                 let start = n - 12 - footer_len as usize;
                 return FileMeta::decode_footer(
                     &bytes[start..n - 12],
@@ -221,31 +288,39 @@ impl Master {
     }
 
     /// Worker requests the next split. `None` ⇒ no work remains *right
-    /// now* (the session is done once `is_done`).
+    /// now* (the session is done once `is_done`), or the caller is not a
+    /// live registered worker — a worker already marked dead must never
+    /// lease a split, or a requeued split can bounce straight back to
+    /// the crashed worker id.
     pub fn fetch_split(&self, worker: WorkerId) -> Option<Split> {
         let mut st = self.state.lock().unwrap();
+        if !st.workers.get(&worker).is_some_and(|h| h.alive) {
+            return None;
+        }
         let id = st.queue.pop_front()?;
         st.in_flight.insert(id, (worker, Instant::now()));
         Some(st.all[&id].clone())
     }
 
-    pub fn complete_split(&self, worker: WorkerId, id: SplitId) {
+    /// Record a split completion. The first completion wins and is
+    /// final, no matter who reports it: the lease (if any) is cleared —
+    /// so a stale completion from a presumed-dead worker makes the
+    /// current leaseholder's later report an idempotent no-op — and a
+    /// pending requeue of the same split is cancelled, so settled work
+    /// is never served twice.
+    pub fn complete_split(&self, _worker: WorkerId, id: SplitId) {
         let mut st = self.state.lock().unwrap();
-        match st.in_flight.remove(&id) {
-            Some((w, _)) if w == worker => {
-                st.completed.insert(id);
-            }
-            Some((w, t)) => {
-                // Split was reassigned (we thought this worker died);
-                // first completion wins.
-                st.in_flight.insert(id, (w, t));
-                st.completed.insert(id);
-                st.in_flight.remove(&id);
-            }
-            None => {
-                // Already completed elsewhere — idempotent.
-                st.completed.insert(id);
-            }
+        let had_lease = st.in_flight.remove(&id).is_some();
+        if !st.completed.insert(id) {
+            return; // already settled — idempotent
+        }
+        // A stale completion can race the requeue that assumed its
+        // worker died; the split is settled now, don't re-serve it. A
+        // split with a live lease cannot also sit in the queue (leases
+        // pop it; requeues drop the lease first), so the O(queue) scan
+        // only runs on lease-less stale completions.
+        if !had_lease {
+            st.queue.retain(|&q| q != id);
         }
     }
 
@@ -424,6 +499,16 @@ impl Master {
             desired = current.saturating_sub(1);
         }
         desired.clamp(self.policy.min_workers, self.policy.max_workers)
+    }
+}
+
+impl Drop for Master {
+    fn drop(&mut self) {
+        // Release any broker interest this session never consumed so
+        // shared stripe buffers aren't pinned by finished sessions.
+        if let Some(h) = &self.broker {
+            h.broker.unregister(h.session);
+        }
     }
 }
 
@@ -647,5 +732,119 @@ mod tests {
         let (cluster, catalog, mut spec) = setup();
         spec.table = "nope".into();
         assert!(Master::new(&catalog, &cluster, spec).is_err());
+    }
+
+    #[test]
+    fn corrupt_footer_len_is_error_not_panic() {
+        let (cluster, catalog, spec) = setup();
+        // Craft a tail whose footer_len sits near u64::MAX: the old
+        // `footer_len + 12 <= tail` guard wrapped and the start-offset
+        // subtraction panicked on underflow.
+        let table = catalog.get(&spec.table).unwrap();
+        let src = table.partitions[0].file;
+        let len = cluster.file_len(src).unwrap();
+        let mut bytes = cluster
+            .read_range(src, IoRange { offset: 0, len })
+            .unwrap();
+        let n = bytes.len();
+        bytes[n - 12..n - 4].copy_from_slice(&(u64::MAX - 5).to_le_bytes());
+        let bad = cluster.create("crafted/corrupt-footer.dwrf");
+        cluster.append(bad, &bytes).unwrap();
+        let err = Master::fetch_meta(&cluster, bad);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err())
+            .contains("corrupt footer length"));
+    }
+
+    #[test]
+    fn dead_or_unregistered_workers_cannot_lease() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        assert!(m.fetch_split(999).is_none(), "unregistered id refused");
+        let w1 = m.register_worker();
+        let s = m.fetch_split(w1).unwrap();
+        m.worker_failed(w1); // requeues s
+        // The dead worker must not lease the requeued split back.
+        assert!(m.fetch_split(w1).is_none());
+        let w2 = m.register_worker();
+        let mut served = Vec::new();
+        while let Some(sp) = m.fetch_split(w2) {
+            served.push(sp.id);
+            m.complete_split(w2, sp.id);
+        }
+        assert!(
+            served.contains(&s.id),
+            "requeued split goes to the live worker"
+        );
+        assert_eq!(served.len(), 4);
+        assert!(m.is_done());
+    }
+
+    #[test]
+    fn completion_after_reassignment_is_unambiguous() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        let w1 = m.register_worker();
+        let s = m.fetch_split(w1).unwrap();
+        m.worker_failed(w1); // presumed dead; split requeued
+        let w2 = m.register_worker();
+        let s2 = m.fetch_split(w2).unwrap();
+        assert_eq!(s.id, s2.id, "split reassigned to the live worker");
+        // The stale worker finished after all: first completion wins...
+        m.complete_split(w1, s.id);
+        let settled = m.progress().0;
+        // ...and the leaseholder's later report is an idempotent no-op.
+        m.complete_split(w2, s.id);
+        assert_eq!(m.progress().0, settled, "recorded exactly once");
+        let mut rest = 0;
+        while let Some(sp) = m.fetch_split(w2) {
+            assert_ne!(sp.id, s.id, "settled split never re-served");
+            m.complete_split(w2, sp.id);
+            rest += 1;
+        }
+        assert_eq!(rest, 3);
+        assert!(m.is_done());
+    }
+
+    #[test]
+    fn stale_completion_cancels_requeue() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        let w1 = m.register_worker();
+        let s = m.fetch_split(w1).unwrap();
+        m.worker_failed(w1); // split back on the queue
+        m.complete_split(w1, s.id); // the "dead" worker had finished it
+        let w2 = m.register_worker();
+        let mut count = 0;
+        while let Some(sp) = m.fetch_split(w2) {
+            assert_ne!(sp.id, s.id, "completed split must not re-run");
+            m.complete_split(w2, sp.id);
+            count += 1;
+        }
+        assert_eq!(count, 3);
+        assert!(m.is_done());
+        assert_eq!(m.progress(), (4, 4));
+    }
+
+    #[test]
+    fn shared_masters_reuse_cached_footers() {
+        use crate::broker::ReadBroker;
+        let (cluster, catalog, spec) = setup();
+        let cluster = Arc::new(cluster);
+        let broker =
+            ReadBroker::with_budget_bytes(cluster.clone(), 64 << 20);
+        let m1 =
+            Master::new_shared(&catalog, &cluster, spec.clone(), &broker)
+                .unwrap();
+        cluster.reset_stats();
+        let m2 = Master::new_shared(&catalog, &cluster, spec, &broker)
+            .unwrap();
+        assert_eq!(
+            cluster.stats().reads,
+            0,
+            "second session plans from cached footers"
+        );
+        assert_eq!(m1.progress(), m2.progress());
+        assert!(m1.broker_handle().is_some());
     }
 }

@@ -12,6 +12,12 @@
 //! loop over real bytes (tectonic I/O → DWRF decode → transform DAGs →
 //! tensor batches); [`Client`] — the trainer-side hook with partitioned
 //! round-robin routing to a bounded set of workers.
+//!
+//! Cross-job sharing: a Master built with [`Master::new_shared`]
+//! attaches the session to a [`crate::broker::ReadBroker`] so workers
+//! fetch stripes through the shared decode-once path
+//! (`PipelineOptions::shared_reads`), and the [`TensorCache`] can charge
+//! the same [`crate::broker::MemoryBudget`] as the broker's buffers.
 
 pub mod cache;
 pub mod client;

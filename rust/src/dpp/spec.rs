@@ -36,6 +36,14 @@ pub struct PipelineOptions {
     /// decode-then-filter baseline: every stripe is fetched and decoded,
     /// and the predicate only applies at the tensor boundary.
     pub pushdown: bool,
+    /// Cross-job shared reads: when the session's Master is attached to
+    /// a [`crate::broker::ReadBroker`], workers fetch stripes through it
+    /// so concurrent sessions over overlapping partitions pay each
+    /// storage fetch + stripe decode once. Per-session predicates,
+    /// selection vectors, and transforms apply after the shared decode —
+    /// outputs are byte-identical either way. No effect without an
+    /// attached broker.
+    pub shared_reads: bool,
 }
 
 impl Default for PipelineOptions {
@@ -47,6 +55,7 @@ impl Default for PipelineOptions {
             flatmap: true,
             dedup_aware: true,
             pushdown: true,
+            shared_reads: true,
         }
     }
 }
@@ -60,6 +69,7 @@ impl PipelineOptions {
             flatmap: false,
             dedup_aware: false,
             pushdown: false,
+            shared_reads: false,
         }
     }
 }
@@ -159,12 +169,14 @@ mod tests {
         assert!(p.flatmap);
         assert!(p.dedup_aware);
         assert!(p.pushdown);
+        assert!(p.shared_reads);
         let b = PipelineOptions::baseline();
         assert!(b.coalesce.is_none());
         assert!(!b.fast_decode);
         assert!(!b.flatmap);
         assert!(!b.dedup_aware);
         assert!(!b.pushdown);
+        assert!(!b.shared_reads);
     }
 
     #[test]

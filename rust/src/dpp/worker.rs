@@ -17,9 +17,10 @@ use super::master::{Master, WorkerId};
 use super::spec::SessionSpec;
 use super::split::Split;
 use super::tensor::{DedupTensorBatch, TensorBatch};
+use crate::broker::BrokerHandle;
 use crate::data::ColumnarBatch;
 use crate::dwrf::crypto::StreamCipher;
-use crate::dwrf::{DecodeMode, DwrfReader, Encoding, FileMeta};
+use crate::dwrf::{DecodeMode, DedupStripe, DwrfReader, Encoding, FileMeta};
 use crate::metrics::EtlMetrics;
 use crate::tectonic::{Cluster, FileId};
 use anyhow::Result;
@@ -52,6 +53,9 @@ pub struct WorkerCore {
     pub metrics: Arc<EtlMetrics>,
     /// Optional shared preprocessed-tensor cache (§7.5).
     tensor_cache: Option<Arc<TensorCache>>,
+    /// Optional cross-job read broker (shared storage scans); used when
+    /// `PipelineOptions::shared_reads` is on.
+    broker: Option<BrokerHandle>,
     fingerprint: u64,
     seq: u64,
 }
@@ -70,6 +74,7 @@ impl WorkerCore {
             meta_cache: HashMap::new(),
             metrics,
             tensor_cache: None,
+            broker: None,
             seq: 0,
         }
     }
@@ -82,11 +87,24 @@ impl WorkerCore {
         self
     }
 
+    /// Attach the session's read-broker handle (from
+    /// [`Master::broker_handle`]): stripes are fetched and decoded once
+    /// across every attached session, then filtered / transformed
+    /// per-session downstream.
+    pub fn with_broker(mut self, handle: BrokerHandle) -> WorkerCore {
+        self.broker = Some(handle);
+        self
+    }
+
     fn reader_for(&mut self, file: FileId) -> Result<DwrfReader> {
         let meta = match self.meta_cache.get(&file) {
             Some(m) => m.clone(),
             None => {
-                let m = Arc::new(Master::fetch_meta(&self.cluster, file)?);
+                let m = match &self.broker {
+                    // Cross-session footer cache.
+                    Some(h) => h.broker.footer(file)?,
+                    None => Arc::new(Master::fetch_meta(&self.cluster, file)?),
+                };
                 self.meta_cache.insert(file, m.clone());
                 m
             }
@@ -135,24 +153,66 @@ impl WorkerCore {
         );
         m.skipped_stripes.add(plan.skipped_stripes.len() as u64);
         m.skipped_bytes.add(plan.skipped_bytes);
-        let mut bufs_per_stripe = Vec::new();
-        for sp in &plan.stripes {
-            let bufs = self.cluster.execute_ios(split.file, &sp.ios)?;
-            m.storage_rx_bytes.add(bufs.bytes());
-            bufs_per_stripe.push((sp.stripe, bufs));
-        }
-        m.t_read.add(t.elapsed());
 
         // The dedup path evaluates the DAG once per unique payload, which
         // is only sound when no op reads the row index (`Sampling` does);
         // such sessions silently fall back to the oblivious path.
-        let wire = if spec.pipeline.dedup_aware
+        let use_dedup = spec.pipeline.dedup_aware
             && reader.meta.encoding == Encoding::Dedup
-            && !spec.dag.row_index_sensitive()
-        {
-            self.process_dedup(&reader, &bufs_per_stripe)?
+            && !spec.dag.row_index_sensitive();
+
+        let shared = if spec.pipeline.shared_reads {
+            self.broker.clone()
         } else {
-            self.process_oblivious(&reader, &bufs_per_stripe)?
+            None
+        };
+        let wire = if let Some(h) = shared {
+            // ---- shared-read path: fetch through the broker. Each
+            // surviving stripe is fetched + decoded once across all
+            // attached sessions; this session's projection, predicate,
+            // and transforms apply to its own view downstream.
+            let mut handles = Vec::new();
+            for sp in &plan.stripes {
+                let served =
+                    h.broker.get_stripe(h.session, split.file, sp.stripe)?;
+                if served.from_buffer {
+                    m.shared_reads.inc();
+                } else {
+                    m.storage_rx_bytes.add(served.fetched_bytes);
+                }
+                handles.push(served.stripe);
+            }
+            m.t_read.add(t.elapsed());
+            if use_dedup {
+                let stripes = handles
+                    .iter()
+                    .map(|s| s.to_dedup(&spec.projection))
+                    .collect::<Result<Vec<DedupStripe>>>()?;
+                self.finish_dedup(stripes)?
+            } else {
+                let batches: Vec<ColumnarBatch> = handles
+                    .iter()
+                    .map(|s| s.to_columnar(&spec.projection))
+                    .collect();
+                self.finish_oblivious(batches)?
+            }
+        } else {
+            // ---- private path: per-session I/O + decode.
+            let mut bufs_per_stripe = Vec::new();
+            for sp in &plan.stripes {
+                let bufs = self.cluster.execute_ios(split.file, &sp.ios)?;
+                m.storage_rx_bytes.add(bufs.bytes());
+                bufs_per_stripe.push((sp.stripe, bufs));
+            }
+            m.t_read.add(t.elapsed());
+            if use_dedup {
+                let stripes = self.decode_dedup(&reader, &bufs_per_stripe)?;
+                self.finish_dedup(stripes)?
+            } else {
+                let batches =
+                    self.decode_oblivious(&reader, &bufs_per_stripe)?;
+                self.finish_oblivious(batches)?
+            }
         };
         if let Some(cache) = &self.tensor_cache {
             cache.put(self.fingerprint, split, Arc::new(wire.clone()));
@@ -160,17 +220,15 @@ impl WorkerCore {
         Ok(wire)
     }
 
-    /// The duplication-oblivious extract→transform→load stages (every
-    /// encoding; Dedup stripes are expanded during extract).
-    fn process_oblivious(
+    /// Private-path decode: decrypt + decompress + decode each fetched
+    /// stripe into a columnar batch (the shared path gets these from the
+    /// broker's decode-once buffer instead).
+    fn decode_oblivious(
         &mut self,
         reader: &DwrfReader,
         bufs_per_stripe: &[(usize, crate::dwrf::IoBuffers)],
-    ) -> Result<Vec<WireBatch>> {
+    ) -> Result<Vec<ColumnarBatch>> {
         let spec = self.spec.clone();
-        let m = self.metrics.clone();
-
-        // ---- extract: decrypt + decompress + decode + filter ----
         let t = Instant::now();
         let mode = DecodeMode {
             fast: spec.pipeline.fast_decode,
@@ -199,6 +257,26 @@ impl WorkerCore {
                 sparse_ids.dedup();
                 ColumnarBatch::from_samples(&rows, &dense_ids, &sparse_ids)
             };
+            batches.push(batch);
+        }
+        self.metrics.t_extract.add(t.elapsed());
+        Ok(batches)
+    }
+
+    /// The duplication-oblivious filter→transform→load stages over
+    /// decoded stripe batches (every encoding; Dedup stripes arrive
+    /// already expanded).
+    fn finish_oblivious(
+        &mut self,
+        raw: Vec<ColumnarBatch>,
+    ) -> Result<Vec<WireBatch>> {
+        let spec = self.spec.clone();
+        let m = self.metrics.clone();
+
+        // ---- filter: selection vectors over decoded rows ----
+        let t = Instant::now();
+        let mut batches: Vec<ColumnarBatch> = Vec::new();
+        for batch in raw {
             m.decoded_rows.add(batch.num_rows as u64);
             m.extract_out_bytes.add(batch.approx_bytes() as u64);
             // Row filter: a partially-matching stripe decodes once; the
@@ -264,31 +342,46 @@ impl WorkerCore {
         Ok(wire)
     }
 
-    /// The dedup-aware stages (RecD): decode unique payloads + inverse,
-    /// transform each unique payload **once**, and ship inverse-keyed
-    /// wire batches the Client expands — per-row extract/transform/wire
-    /// cost collapses by the stripe's duplication factor.
-    fn process_dedup(
+    /// Private-path dedup decode: unique payloads + inverse, without
+    /// expansion (the shared path gets these from the broker instead).
+    fn decode_dedup(
         &mut self,
         reader: &DwrfReader,
         bufs_per_stripe: &[(usize, crate::dwrf::IoBuffers)],
-    ) -> Result<Vec<WireBatch>> {
+    ) -> Result<Vec<DedupStripe>> {
         let spec = self.spec.clone();
-        let m = self.metrics.clone();
-
-        // ---- extract: unique payloads only ----
         let t = Instant::now();
         let mode = DecodeMode {
             fast: spec.pipeline.fast_decode,
         };
         let mut stripes = Vec::new();
         for (stripe, bufs) in bufs_per_stripe {
-            let ds = reader.decode_stripe_dedup(
+            stripes.push(reader.decode_stripe_dedup(
                 *stripe,
                 bufs,
                 &spec.projection,
                 mode,
-            )?;
+            )?);
+        }
+        self.metrics.t_extract.add(t.elapsed());
+        Ok(stripes)
+    }
+
+    /// The dedup-aware stages (RecD): filter rows without expansion,
+    /// transform each unique payload **once**, and ship inverse-keyed
+    /// wire batches the Client expands — per-row extract/transform/wire
+    /// cost collapses by the stripe's duplication factor.
+    fn finish_dedup(
+        &mut self,
+        raw: Vec<DedupStripe>,
+    ) -> Result<Vec<WireBatch>> {
+        let spec = self.spec.clone();
+        let m = self.metrics.clone();
+
+        // ---- filter: unique payloads only ----
+        let t = Instant::now();
+        let mut stripes = Vec::new();
+        for ds in raw {
             m.decoded_rows.add(ds.rows() as u64);
             m.extract_out_bytes.add(ds.unique.approx_bytes() as u64);
             // Row filter without expansion: the predicate reads per-row
@@ -417,11 +510,27 @@ impl Worker {
             .name(format!("dpp-worker-{id}"))
             .spawn(move || {
                 let mut core = WorkerCore::new(spec, cluster, metrics);
+                if let Some(h) = master.broker_handle() {
+                    // Shared-read session: fetch through the broker.
+                    core = core.with_broker(h);
+                }
                 while !stop2.load(Ordering::Relaxed) {
                     let Some(split) = master.fetch_split(id) else {
                         if master.is_done() {
                             break;
                         }
+                        // Idle workers are alive: heartbeat so the
+                        // reaper never fences a worker that is merely
+                        // waiting (a requeued split must always find a
+                        // live leaseholder), and a reaped-but-running
+                        // worker revives instead of spinning forever.
+                        master.heartbeat(
+                            id,
+                            buffered_estimate(&produced2),
+                            0.05,
+                            0.3,
+                            0.1,
+                        );
                         std::thread::sleep(std::time::Duration::from_millis(1));
                         continue;
                     };
@@ -643,6 +752,46 @@ mod tests {
             let tb = TensorBatch::from_wire(&cipher, b.seq, &b.bytes).unwrap();
             assert_eq!(ta, tb);
         }
+    }
+
+    #[test]
+    fn broker_path_produces_identical_wire() {
+        use crate::broker::ReadBroker;
+        let (cluster, catalog, spec) = setup(true);
+        // Private baseline.
+        let master = Master::new(&catalog, &cluster, (*spec).clone()).unwrap();
+        let w = master.register_worker();
+        let m1 = Arc::new(EtlMetrics::default());
+        let mut base_core =
+            WorkerCore::new(spec.clone(), cluster.clone(), m1);
+        let mut base = Vec::new();
+        while let Some(split) = master.fetch_split(w) {
+            base.extend(base_core.process_split(&split).unwrap());
+            master.complete_split(w, split.id);
+        }
+        // Broker path over the same session spec.
+        let broker = ReadBroker::with_budget_bytes(cluster.clone(), 64 << 20);
+        let sspec = (*spec).clone();
+        let sm = Master::new_shared(&catalog, &cluster, sspec.clone(), &broker)
+            .unwrap();
+        let sw = sm.register_worker();
+        let m2 = Arc::new(EtlMetrics::default());
+        let mut core =
+            WorkerCore::new(Arc::new(sspec), cluster.clone(), m2.clone());
+        core = core.with_broker(sm.broker_handle().unwrap());
+        let mut got = Vec::new();
+        while let Some(split) = sm.fetch_split(sw) {
+            got.extend(core.process_split(&split).unwrap());
+            sm.complete_split(sw, split.id);
+        }
+        assert_eq!(base.len(), got.len());
+        for (a, b) in base.iter().zip(got.iter()) {
+            assert_eq!(a.seq, b.seq);
+            assert_eq!(a.rows, b.rows);
+            assert_eq!(a.dedup, b.dedup);
+            assert_eq!(a.bytes, b.bytes, "wire must be byte-identical");
+        }
+        assert!(m2.storage_rx_bytes.get() > 0, "single session still reads");
     }
 
     #[test]

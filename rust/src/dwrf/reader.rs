@@ -53,6 +53,22 @@ impl DedupStripe {
         batch
     }
 
+    /// Restrict the unique payload columns to `projection`; the inverse
+    /// index and per-row meta are untouched. This is a session's view of
+    /// a stripe decoded **once** with a wider shared projection (the
+    /// read broker's union across registered sessions) — identical to
+    /// having decoded with `projection` directly.
+    pub fn project(&self, projection: &Projection) -> DedupStripe {
+        DedupStripe {
+            unique: self
+                .unique
+                .retain_features(|f| projection.contains(f)),
+            inverse: self.inverse.clone(),
+            labels: self.labels.clone(),
+            timestamps: self.timestamps.clone(),
+        }
+    }
+
     /// Restrict to the surviving rows of a predicate selection (`keep` =
     /// ascending row indices): row meta and inverse are gathered, and the
     /// unique payloads are compacted to the ones still referenced — so
@@ -169,8 +185,13 @@ impl DwrfReader {
             bail!("bad DWRF magic {magic:#x}");
         }
         let flen = u64::from_le_bytes(bytes[n - 12..n - 4].try_into().unwrap());
-        let foff = n as u64 - 12 - flen;
-        Ok((foff, flen))
+        // `flen` comes straight off disk: a corrupt value near u64::MAX
+        // would wrap `flen + 12` and underflow the offset — reject it.
+        let total = flen.checked_add(12).filter(|&t| t <= n as u64);
+        let Some(total) = total else {
+            bail!("corrupt footer length {flen}");
+        };
+        Ok((n as u64 - total, flen))
     }
 
     /// I/O ranges a remote reader needs to bootstrap: the trailer, then the
@@ -982,6 +1003,47 @@ mod tests {
             .map(|&i| all[i as usize].clone())
             .collect();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn corrupt_footer_len_rejected_without_panicking() {
+        // A trailer advertising footer_len near u64::MAX used to wrap
+        // the `flen + 12` bound check and underflow the offset.
+        let (_, mut bytes) = build(Encoding::Flattened);
+        let n = bytes.len();
+        bytes[n - 12..n - 4].copy_from_slice(&(u64::MAX - 5).to_le_bytes());
+        assert!(DwrfReader::open(&bytes).is_err());
+        // Oversized-but-not-overflowing is rejected too, not a panic.
+        let (_, mut bytes2) = build(Encoding::Flattened);
+        let n2 = bytes2.len();
+        bytes2[n2 - 12..n2 - 4]
+            .copy_from_slice(&(n2 as u64).to_le_bytes());
+        assert!(DwrfReader::open(&bytes2).is_err());
+    }
+
+    #[test]
+    fn dedup_project_matches_narrow_decode() {
+        let samples = mk_dup_samples(12);
+        let bytes = build_dedup(&samples, 12);
+        let r = DwrfReader::open_table(&bytes, "t").unwrap();
+        let full = full_projection();
+        let narrow = Projection::new([FeatureId(0), FeatureId(100)]);
+        let plan = r.plan(&full, None);
+        let bufs = r.fetch_local(&bytes, &plan);
+        let wide = r
+            .decode_stripe_dedup(0, &bufs, &full, DecodeMode::default())
+            .unwrap();
+        let direct = r
+            .decode_stripe_dedup(0, &bufs, &narrow, DecodeMode::default())
+            .unwrap();
+        let projected = wide.project(&narrow);
+        assert_eq!(projected.unique, direct.unique);
+        assert_eq!(projected.inverse, direct.inverse);
+        assert_eq!(projected.labels, direct.labels);
+        assert_eq!(
+            projected.expand().to_samples(),
+            direct.expand().to_samples()
+        );
     }
 
     #[test]

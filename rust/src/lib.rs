@@ -32,11 +32,19 @@
 //!   the DPP Master skip provably-empty stripes before any byte is
 //!   fetched, and partially-matching stripes decode once into
 //!   selection-vector batches so transforms touch only surviving rows;
+//! * **cross-job shared reads** ([`broker`]): a ReadBroker between
+//!   Master plans and the cluster — concurrent sessions register their
+//!   planned (file, stripe) interest, and each popular stripe is fetched
+//!   and decoded once into a ref-counted, budget-bounded buffer, with
+//!   per-session predicates, selection vectors, and transforms applied
+//!   after the shared decode (outputs stay byte-identical to private
+//!   scans);
 //! * a PJRT runtime that executes the AOT-compiled JAX/Pallas DLRM
 //!   artifacts from the Rust hot path ([`runtime`]);
 //! * drivers that regenerate every table and figure of the paper
 //!   ([`paper`]).
 
+pub mod broker;
 pub mod config;
 pub mod data;
 pub mod datagen;

@@ -93,6 +93,10 @@ pub struct EtlMetrics {
     pub decoded_rows: Counter,
     /// Rows dropped by the session's row predicate after decode.
     pub filtered_rows: Counter,
+    /// Stripes this session received from the cross-job read broker's
+    /// shared buffer — another session already paid the storage read,
+    /// decryption, and decode.
+    pub shared_reads: Counter,
     /// Stripes skipped whole by footer-stat pruning (zero I/Os issued).
     pub skipped_stripes: Counter,
     /// Wanted-stream bytes never fetched thanks to stripe pruning.

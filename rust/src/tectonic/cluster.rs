@@ -208,6 +208,26 @@ impl Cluster {
         Ok(bufs)
     }
 
+    /// Execute planned stream extents with per-file read coalescing:
+    /// sorted extents within `window` merge into one physical I/O (gap
+    /// bytes are over-read) — the read broker's batched-fetch path,
+    /// where one shared fetch covers a whole stripe's wanted streams.
+    /// Returns the decode-ready buffers plus the number of physical
+    /// I/Os actually issued (callers account `extents - ios` as saved).
+    pub fn execute_ios_merged(
+        &self,
+        file: FileId,
+        extents: &[IoRange],
+        window: Option<u64>,
+    ) -> Result<(IoBuffers, usize)> {
+        let ios = crate::dwrf::plan::coalesce(extents.to_vec(), window);
+        let mut bufs = IoBuffers::new();
+        for &io in &ios {
+            bufs.insert(io, self.read_range(file, io)?);
+        }
+        Ok((bufs, ios.len()))
+    }
+
     /// Aggregate I/O stats across nodes.
     pub fn stats(&self) -> IoStats {
         let mut s = IoStats::default();
@@ -359,6 +379,33 @@ mod tests {
         assert_eq!(bufs.bytes(), 600);
         assert_eq!(bufs.slice(2010, 4).unwrap(), &data[2010..2014]);
         assert!(bufs.slice(1000, 4).is_none());
+    }
+
+    #[test]
+    fn merged_ios_coalesce_and_slice() {
+        let c = small_cluster();
+        let f = c.create("m");
+        let data: Vec<u8> = (0..4000u32).map(|i| i as u8).collect();
+        c.append(f, &data).unwrap();
+        let extents = vec![
+            IoRange { offset: 0, len: 100 },
+            IoRange {
+                offset: 150,
+                len: 100,
+            },
+            IoRange {
+                offset: 3000,
+                len: 100,
+            },
+        ];
+        let (bufs, ios) =
+            c.execute_ios_merged(f, &extents, Some(1024)).unwrap();
+        assert_eq!(ios, 2, "nearby extents merge; the distant one stays");
+        assert!(bufs.bytes() >= 350, "gap bytes are over-read");
+        assert_eq!(bufs.slice(150, 4).unwrap(), &data[150..154]);
+        assert_eq!(bufs.slice(3000, 100).unwrap(), &data[3000..3100]);
+        let (_, n) = c.execute_ios_merged(f, &extents, None).unwrap();
+        assert_eq!(n, 3, "no window = one I/O per extent");
     }
 
     #[test]

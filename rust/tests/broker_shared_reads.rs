@@ -1,0 +1,241 @@
+//! Cross-job shared reads must be lossless: concurrent sessions with
+//! *different* predicates (and projections) over the same files must
+//! each receive exactly the wire bytes the single-session private-scan
+//! path produces — for Flattened and Dedup encodings — while the broker
+//! actually shares fetched stripes between them.
+
+use dsi::broker::ReadBroker;
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::datagen::{build_dataset_with, GenOptions};
+use dsi::dpp::{Master, SessionSpec, WorkerCore};
+use dsi::dwrf::{Encoding, WriterOptions};
+use dsi::filter::RowPredicate;
+use dsi::metrics::EtlMetrics;
+use dsi::schema::FeatureKind;
+use dsi::tectonic::{Cluster, ClusterConfig};
+use dsi::transforms::{Op, TransformDag};
+use dsi::warehouse::Catalog;
+use std::sync::Arc;
+
+struct World {
+    cluster: Arc<Cluster>,
+    catalog: Catalog,
+    /// Sessions over two features / one feature (nested projections).
+    spec_wide: SessionSpec,
+    spec_narrow: SessionSpec,
+    /// A timestamp cut that splits the stripes (some pruned, some kept).
+    ts_cut: u64,
+}
+
+fn build(encoding: Encoding, dup_factor: usize) -> World {
+    let cluster = Arc::new(Cluster::new(ClusterConfig {
+        chunk_bytes: 64 << 10,
+        ..Default::default()
+    }));
+    let catalog = Catalog::new();
+    let rm = RmConfig::get(RmId::Rm3);
+    let scale = SimScale::tiny();
+    let h = build_dataset_with(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions {
+            encoding,
+            stripe_rows: 16,
+            ..Default::default()
+        },
+        31,
+        &GenOptions {
+            dup_factor,
+            tick_max: 40, // spread timestamps so recency windows bite
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let dense = h
+        .schema
+        .features
+        .iter()
+        .find(|f| matches!(f.kind, FeatureKind::Dense))
+        .unwrap()
+        .id;
+    let sparse = h
+        .schema
+        .features
+        .iter()
+        .find(|f| !matches!(f.kind, FeatureKind::Dense))
+        .unwrap()
+        .id;
+    let mut wide_dag = TransformDag::default();
+    let d = wide_dag.input_dense(dense);
+    let c = wide_dag.apply(Op::Clamp { lo: -3.0, hi: 3.0 }, vec![d]);
+    wide_dag.output(dense, c);
+    let s = wide_dag.input_sparse(sparse);
+    let hh = wide_dag.apply(
+        Op::SigridHash {
+            salt: 5,
+            modulus: 1 << 12,
+        },
+        vec![s],
+    );
+    wide_dag.output(sparse, hh);
+    let spec_wide = SessionSpec::from_dag(&h.table_name, 0, 10, wide_dag, 8);
+
+    let mut narrow_dag = TransformDag::default();
+    let d2 = narrow_dag.input_dense(dense);
+    let c2 = narrow_dag.apply(Op::Clamp { lo: -1.0, hi: 1.0 }, vec![d2]);
+    narrow_dag.output(dense, c2);
+    let spec_narrow =
+        SessionSpec::from_dag(&h.table_name, 0, 10, narrow_dag, 8);
+
+    // A cut splitting stripes: the median stripe max-timestamp.
+    let mut maxes: Vec<u64> = Vec::new();
+    for p in &catalog.get(&h.table_name).unwrap().partitions {
+        let meta = Master::fetch_meta(&cluster, p.file).unwrap();
+        for st in &meta.stripes {
+            maxes.push(st.stats.max_timestamp);
+        }
+    }
+    maxes.sort_unstable();
+    let ts_cut = maxes[maxes.len() / 2];
+
+    World {
+        cluster,
+        catalog,
+        spec_wide,
+        spec_narrow,
+        ts_cut,
+    }
+}
+
+type Wire = Vec<(u64, usize, bool, Vec<u8>)>;
+
+fn drain(
+    world: &World,
+    spec: SessionSpec,
+    broker: Option<&Arc<ReadBroker>>,
+) -> (Master, WorkerCore) {
+    let mut spec = spec;
+    spec.pipeline.shared_reads = broker.is_some();
+    let master = match broker {
+        Some(b) => Master::new_shared(
+            &world.catalog,
+            &world.cluster,
+            spec.clone(),
+            b,
+        ),
+        None => Master::new(&world.catalog, &world.cluster, spec.clone()),
+    }
+    .unwrap();
+    let metrics = Arc::new(EtlMetrics::default());
+    let mut core =
+        WorkerCore::new(Arc::new(spec), world.cluster.clone(), metrics);
+    if let Some(h) = master.broker_handle() {
+        core = core.with_broker(h);
+    }
+    (master, core)
+}
+
+fn run_to_end(master: Master, mut core: WorkerCore) -> Wire {
+    let w = master.register_worker();
+    let mut wire = Wire::new();
+    while let Some(split) = master.fetch_split(w) {
+        for b in core.process_split(&split).unwrap() {
+            wire.push((b.seq, b.rows, b.dedup, b.bytes));
+        }
+        master.complete_split(w, split.id);
+    }
+    wire
+}
+
+fn lossless_two_sessions(encoding: Encoding, dup_factor: usize) {
+    let world = build(encoding, dup_factor);
+    // Session 1: recency window over the wide projection (prunes some
+    // stripes). Session 2: deterministic sample over the narrow
+    // projection (touches every stripe).
+    let spec1 = world.spec_wide.clone().with_predicate(
+        RowPredicate::TimestampRange {
+            min: 0,
+            max: world.ts_cut,
+        },
+    );
+    let spec2 = world
+        .spec_narrow
+        .clone()
+        .with_predicate(RowPredicate::SampleRate { rate: 0.5, seed: 9 });
+
+    // Private baselines.
+    let (m1, c1) = drain(&world, spec1.clone(), None);
+    let base1 = run_to_end(m1, c1);
+    let (m2, c2) = drain(&world, spec2.clone(), None);
+    let base2 = run_to_end(m2, c2);
+    assert!(!base1.is_empty() && !base2.is_empty());
+
+    // Brokered, concurrent: both sessions registered before either
+    // runs, then drained on separate threads.
+    let broker = ReadBroker::with_budget_bytes(world.cluster.clone(), 64 << 20);
+    let (sm1, sc1) = drain(&world, spec1, Some(&broker));
+    let (sm2, sc2) = drain(&world, spec2, Some(&broker));
+    let t1 = std::thread::spawn(move || run_to_end(sm1, sc1));
+    let t2 = std::thread::spawn(move || run_to_end(sm2, sc2));
+    let got1 = t1.join().unwrap();
+    let got2 = t2.join().unwrap();
+
+    assert_eq!(got1, base1, "session 1 wire must be byte-identical");
+    assert_eq!(got2, base2, "session 2 wire must be byte-identical");
+    assert!(
+        broker.metrics.shared_reads.get() > 0,
+        "overlapping stripes must actually be shared"
+    );
+    // Every serve is either a hit or a miss; misses never exceed the
+    // distinct stripe population.
+    let serves = broker.metrics.shared_reads.get()
+        + broker.metrics.broker_misses.get();
+    assert!(serves > broker.metrics.broker_misses.get());
+    // Once both sessions finish, no stripe stays pinned.
+    assert_eq!(broker.buffered_stripes(), 0);
+    assert_eq!(broker.budget().used(), 0);
+}
+
+#[test]
+fn two_predicated_sessions_lossless_flattened() {
+    lossless_two_sessions(Encoding::Flattened, 1);
+}
+
+#[test]
+fn two_predicated_sessions_lossless_dedup() {
+    lossless_two_sessions(Encoding::Dedup, 3);
+}
+
+#[test]
+fn dedup_wire_actually_uses_dedup_path() {
+    let world = build(Encoding::Dedup, 3);
+    let broker = ReadBroker::with_budget_bytes(world.cluster.clone(), 64 << 20);
+    let (m, c) = drain(&world, world.spec_wide.clone(), Some(&broker));
+    let wire = run_to_end(m, c);
+    assert!(
+        wire.iter().any(|b| b.2),
+        "shared path must preserve dedup-aware wire batches"
+    );
+}
+
+#[test]
+fn table_scoped_sessions_share_footers() {
+    let world = build(Encoding::Flattened, 1);
+    let broker = ReadBroker::with_budget_bytes(world.cluster.clone(), 64 << 20);
+    let (m1, c1) = drain(&world, world.spec_wide.clone(), Some(&broker));
+    let _w1 = run_to_end(m1, c1);
+    // A second session over the same table issues no footer I/O at all
+    // at plan time (stripe data was consumed already by session 1, so
+    // its own reads are data only).
+    world.cluster.reset_stats();
+    let (m2, _c2) = drain(&world, world.spec_narrow.clone(), Some(&broker));
+    assert_eq!(
+        world.cluster.stats().reads,
+        0,
+        "planning a shared session reuses cached footers"
+    );
+    drop(m2);
+}
