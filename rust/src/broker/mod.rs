@@ -123,6 +123,12 @@ struct SessionState {
     projection: HashSet<FeatureId>,
     /// (file → stripes) registered but not yet consumed.
     remaining: HashMap<FileId, BTreeSet<usize>>,
+    /// Per-session reuse accounting: serves from the shared buffer vs
+    /// serves that had to fetch + decode. This is the per-session hit
+    /// rate the Master's autoscaler fuses — a mostly-hitting session
+    /// skips fetch+decode and needs fewer workers.
+    shared_reads: u64,
+    broker_misses: u64,
 }
 
 #[derive(Default)]
@@ -157,6 +163,14 @@ pub struct ReadBroker {
 pub struct BrokerHandle {
     pub broker: Arc<ReadBroker>,
     pub session: BrokerSessionId,
+}
+
+impl BrokerHandle {
+    /// This session's shared-buffer hit rate (the Master autoscaler's
+    /// broker signal).
+    pub fn hit_rate(&self) -> f64 {
+        self.broker.session_hit_rate(self.session)
+    }
 }
 
 impl ReadBroker {
@@ -236,9 +250,27 @@ impl ReadBroker {
             SessionState {
                 projection: proj,
                 remaining,
+                shared_reads: 0,
+                broker_misses: 0,
             },
         );
         id
+    }
+
+    /// Fraction of this session's stripe serves satisfied from the
+    /// shared buffer (0.0 before any serve, or for unknown sessions).
+    /// Unlike [`BrokerMetrics::hit_rate`], which aggregates across every
+    /// attached session, this is the per-session scaling signal.
+    pub fn session_hit_rate(&self, session: BrokerSessionId) -> f64 {
+        let st = self.state.lock().unwrap();
+        st.sessions.get(&session).map_or(0.0, |s| {
+            let total = s.shared_reads + s.broker_misses;
+            if total == 0 {
+                0.0
+            } else {
+                s.shared_reads as f64 / total as f64
+            }
+        })
     }
 
     /// Drop a session's outstanding interest; stripes nobody else wants
@@ -381,8 +413,16 @@ impl ReadBroker {
         // Settle interest now that the serve is done: the consumer that
         // takes the count to zero releases the buffered entry, however
         // the concurrent serves interleaved.
+        let was_hit = matches!(outcome, ServeOutcome::Hit { .. });
         {
             let mut st = self.state.lock().unwrap();
+            if let Some(sess) = st.sessions.get_mut(&session) {
+                if was_hit {
+                    sess.shared_reads += 1;
+                } else {
+                    sess.broker_misses += 1;
+                }
+            }
             if consumed {
                 if let Some(n) = st.interest.get_mut(&key) {
                     *n = n.saturating_sub(1);
@@ -533,6 +573,10 @@ mod tests {
         assert_eq!(broker.metrics.broker_misses.get(), 1);
         assert!(broker.metrics.saved_bytes.get() > 0);
         assert!((broker.metrics.hit_rate() - 0.5).abs() < 1e-9);
+        // Per-session attribution: s1 paid the miss, s2 rode the buffer.
+        assert!((broker.session_hit_rate(s1) - 0.0).abs() < 1e-9);
+        assert!((broker.session_hit_rate(s2) - 1.0).abs() < 1e-9);
+        assert_eq!(broker.session_hit_rate(9999), 0.0, "unknown session");
     }
 
     #[test]

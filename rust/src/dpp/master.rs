@@ -7,7 +7,7 @@
 use super::spec::SessionSpec;
 use super::split::{splits_for_partition, Split, SplitId};
 use crate::broker::{BrokerHandle, ReadBroker};
-use crate::dwrf::{FileMeta, IoRange};
+use crate::dwrf::{FileMeta, IoRange, StripeStats};
 use crate::tectonic::{Cluster, FileId};
 use crate::warehouse::Catalog;
 use anyhow::{bail, Context, Result};
@@ -29,6 +29,10 @@ pub struct WorkerHealth {
     pub mem_util: f64,
     pub net_util: f64,
     pub alive: bool,
+    /// Retired by the autoscaler: still alive and draining its current
+    /// lease, but never handed a new split, and excluded from the
+    /// controller's live-pool base.
+    pub draining: bool,
 }
 
 impl Default for WorkerHealth {
@@ -40,6 +44,7 @@ impl Default for WorkerHealth {
             mem_util: 0.0,
             net_util: 0.0,
             alive: true,
+            draining: false,
         }
     }
 }
@@ -68,18 +73,60 @@ struct MasterState {
     next_worker: WorkerId,
 }
 
-/// Auto-scaler targets.
+impl MasterState {
+    /// Requeue every split leased to `worker` (at the queue front —
+    /// they were already being worked). Returns how many requeued.
+    fn requeue_leases(&mut self, worker: WorkerId) -> usize {
+        let orphaned: Vec<SplitId> = self
+            .in_flight
+            .iter()
+            .filter(|(_, (w, _))| *w == worker)
+            .map(|(id, _)| *id)
+            .collect();
+        let n = orphaned.len();
+        for id in orphaned {
+            self.in_flight.remove(&id);
+            self.queue.push_front(id);
+        }
+        n
+    }
+}
+
+/// Auto-scaler targets and controller knobs.
 #[derive(Clone, Debug)]
 pub struct AutoscalePolicy {
-    /// Scale up while average buffered tensors per worker is below this
-    /// (buffer empty ⇒ trainers are at risk of stalling).
+    /// Below this average buffered-tensor depth the pool counts as
+    /// starved (trainers are at risk of stalling).
     pub min_buffered: f64,
-    /// Scale down when buffers exceed this *and* CPUs are underutilized
-    /// (wasted preprocessing capacity).
+    /// Above this depth — with CPUs also underutilized — the pool
+    /// counts as glutted (wasted preprocessing capacity).
     pub max_buffered: f64,
+    /// Provisioning assumes a worker sustains at most this busy share.
     pub target_cpu: f64,
     pub min_workers: usize,
     pub max_workers: usize,
+    /// Demand headroom: provision for `headroom ×` the smoothed drain
+    /// rate so transient bursts don't immediately starve trainers.
+    pub headroom: f64,
+    /// Controller decisions to hold after a scaling action before the
+    /// next one (hysteresis in time: the pipeline's response to a
+    /// change is observed before acting again, so the controller
+    /// converges instead of flapping).
+    pub cooldown_ticks: u32,
+    /// Workers added per decision at most. Growth is bounded — the old
+    /// controller grew proportionally to `current`, which doubled an
+    /// empty-buffered pool on every tick.
+    pub max_step_up: usize,
+    /// Workers retired per decision at most.
+    pub max_step_down: usize,
+    /// EMA weight of each new rate observation (0..1).
+    pub alpha: f64,
+    /// Dead workers older than this are pruned from the health map: the
+    /// controller's base is the live pool, and the map must not grow
+    /// with every crash. The grace window keeps the reaped-but-
+    /// actually-alive revival path (heartbeat after a false reap)
+    /// working.
+    pub dead_grace: Duration,
 }
 
 impl Default for AutoscalePolicy {
@@ -90,8 +137,138 @@ impl Default for AutoscalePolicy {
             target_cpu: 0.85,
             min_workers: 1,
             max_workers: 64,
+            headroom: 1.25,
+            cooldown_ticks: 4,
+            max_step_up: 2,
+            max_step_down: 1,
+            alpha: 0.35,
+            dead_grace: Duration::from_secs(30),
         }
     }
+}
+
+/// Cumulative pipeline observations the session loop feeds the
+/// controller each tick (deltas between successive snapshots drive the
+/// rate estimates; cumulative form keeps the call side trivial — hand
+/// over the current counter values and wall clock).
+#[derive(Clone, Debug, Default)]
+pub struct ScaleSignals {
+    /// Wall seconds since the session started.
+    pub wall_secs: f64,
+    /// Rows trainer-side clients have drained (demand).
+    pub drained_rows: u64,
+    /// Rows workers have delivered into buffers (supply).
+    pub produced_rows: u64,
+    /// Rows decoded out of storage (selectivity correction, numerator
+    /// base).
+    pub decoded_rows: u64,
+    /// Rows the session predicate dropped after decode.
+    pub filtered_rows: u64,
+    /// Total worker busy seconds across all pipeline stages.
+    pub busy_secs: f64,
+    /// Busy seconds spent in fetch + decode (the share a broker buffer
+    /// hit skips).
+    pub fetch_decode_secs: f64,
+}
+
+/// What one controller evaluation decided, with the fused signals that
+/// produced it (reported by benches and asserted by tests).
+#[derive(Clone, Debug)]
+pub struct ScaleDecision {
+    pub desired: usize,
+    /// Live (alive, non-draining) workers the decision was based on.
+    pub alive: usize,
+    /// Smoothed trainer drain rate, rows/s.
+    pub demand_rows_per_sec: f64,
+    /// Effective per-worker capacity (delivered rows per busy second)
+    /// after the hit-rate / selectivity drift rescale.
+    pub capacity_rows_per_busy_sec: f64,
+    /// Online-corrected predicate selectivity estimate.
+    pub selectivity: f64,
+    /// This session's broker-buffer hit rate (0.0 without a broker).
+    pub broker_hit_rate: f64,
+    pub reason: &'static str,
+}
+
+/// Controller memory between ticks.
+#[derive(Debug)]
+struct ControllerState {
+    prev: Option<ScaleSignals>,
+    /// EMA trainer drain rate (rows/s).
+    demand: f64,
+    /// EMA per-worker capacity: delivered rows per busy second.
+    capacity: f64,
+    /// Broker hit rate, selectivity, and fetch+decode busy-share under
+    /// which `capacity` was learned (the rescale basis).
+    basis_hit: f64,
+    basis_sel: f64,
+    basis_fetch_share: f64,
+    /// Selectivity estimate: seeded from stripe-stat priors, corrected
+    /// online from `filtered_rows / decoded_rows`.
+    selectivity: f64,
+    cooldown: u32,
+}
+
+impl ControllerState {
+    fn new(prior_selectivity: f64) -> ControllerState {
+        ControllerState {
+            prev: None,
+            demand: 0.0,
+            capacity: 0.0,
+            basis_hit: 0.0,
+            basis_sel: prior_selectivity,
+            basis_fetch_share: 0.0,
+            selectivity: prior_selectivity,
+            cooldown: 0,
+        }
+    }
+}
+
+/// Rescale a per-worker capacity (delivered rows per busy second)
+/// learned at broker hit rate `basis_hit` and decoded-survival fraction
+/// `basis_sel` — with `fetch_share` of busy time then spent in
+/// fetch+decode — to the current estimates: a stripe served from the
+/// shared buffer skips fetch+decode entirely, and a narrower surviving
+/// fraction decodes more rows per delivered row. Model: busy cost per
+/// delivered row is `D·(1−hit)/sel + P`; at the basis the fetch+decode
+/// term is the observed `fetch_share` of the total, so capacity scales
+/// by `1 / (o·(s₀/s₁)·(1−h₁)/(1−h₀) + (1−o))`. No drift from the
+/// basis ⇒ ratio 1 (no double counting of what the EMA absorbed).
+pub fn rescale_worker_capacity(
+    capacity: f64,
+    fetch_share: f64,
+    basis_hit: f64,
+    basis_sel: f64,
+    hit_now: f64,
+    sel_now: f64,
+) -> f64 {
+    let o = fetch_share.clamp(0.0, 0.99);
+    let h0 = basis_hit.clamp(0.0, 0.99);
+    let h1 = hit_now.clamp(0.0, 1.0);
+    let s0 = basis_sel.clamp(1e-3, 1.0);
+    let s1 = sel_now.clamp(1e-3, 1.0);
+    let fetch = o * (s0 / s1) * ((1.0 - h1) / (1.0 - h0));
+    capacity / (fetch + (1.0 - o)).max(1e-9)
+}
+
+/// Feed-forward planning estimate: worker busy-seconds to preprocess
+/// `rows` rows when the predicate keeps a `selectivity` fraction and
+/// stripe-stat pushdown proves a `pruned_frac` fraction row-free
+/// without decoding it. Decode cost is paid per decoded row,
+/// transform+load cost per delivered row — so the estimate is monotone
+/// non-increasing as selectivity drops (a narrower predicate can only
+/// prune more and deliver less).
+pub fn estimate_worker_seconds(
+    rows: u64,
+    selectivity: f64,
+    pruned_frac: f64,
+    decode_secs_per_row: f64,
+    process_secs_per_row: f64,
+) -> f64 {
+    let sel = selectivity.clamp(0.0, 1.0);
+    let pruned = pruned_frac.clamp(0.0, 1.0);
+    rows as f64 * (1.0 - pruned) * decode_secs_per_row.max(0.0)
+        + rows as f64 * sel * process_secs_per_row.max(0.0)
 }
 
 pub struct Master {
@@ -101,6 +278,10 @@ pub struct Master {
     /// Present when this session's reads flow through a shared
     /// [`ReadBroker`] (see [`Master::new_shared`]).
     broker: Option<BrokerHandle>,
+    /// Row-weighted predicate selectivity over planned stripe stats
+    /// (1.0 unfiltered) — the controller's feed-forward prior.
+    prior_selectivity: f64,
+    controller: Mutex<ControllerState>,
 }
 
 impl Master {
@@ -167,6 +348,11 @@ impl Master {
         // buffers are never pinned waiting for a consumer that the
         // pushdown already proved will never come.
         let mut interest: HashMap<FileId, Vec<usize>> = HashMap::new();
+        // Stripes that will actually decode (the pushdown prunes the
+        // rest without I/O) — the population the controller's
+        // selectivity prior must describe, because the online
+        // correction it converges to is `filtered / decoded`.
+        let mut decoded_pairs: Vec<(StripeStats, u32)> = Vec::new();
         for p in parts {
             let meta: Arc<FileMeta> = match broker {
                 // One cached footer per file across *all* sessions.
@@ -175,6 +361,11 @@ impl Master {
             };
             let stripe_rows: Vec<u32> =
                 meta.stripes.iter().map(|s| s.rows).collect();
+            decoded_pairs.extend(meta.stripes.iter().filter_map(|s| {
+                let pruned = predicate
+                    .is_some_and(|pr| pr.prunes_stripe(&s.stats, s.rows));
+                (!pruned).then_some((s.stats, s.rows))
+            }));
             for split in splits_for_partition(
                 &mut next_id,
                 p.file,
@@ -215,6 +406,18 @@ impl Master {
             broker: b.clone(),
             session: b.register(&spec.table, &spec.projection, interest),
         });
+        // Feed-forward selectivity prior for the autoscaler, over
+        // exactly the stripes that will decode — the same quantity the
+        // online `filtered / decoded` correction converges to.
+        let prior_selectivity = match spec.predicate.as_ref() {
+            Some(p) if !decoded_pairs.is_empty() => p.dataset_selectivity(
+                decoded_pairs.iter().map(|(s, r)| (s, *r)),
+            ),
+            // Everything pruned: nothing will be decoded or delivered.
+            Some(_) => 0.0,
+            // Unfiltered: the spec-level prior (1.0).
+            None => spec.estimated_selectivity(),
+        };
         Ok(Master {
             spec,
             state: Mutex::new(MasterState {
@@ -228,6 +431,8 @@ impl Master {
             }),
             policy: AutoscalePolicy::default(),
             broker,
+            prior_selectivity,
+            controller: Mutex::new(ControllerState::new(prior_selectivity)),
         })
     }
 
@@ -291,10 +496,15 @@ impl Master {
     /// now* (the session is done once `is_done`), or the caller is not a
     /// live registered worker — a worker already marked dead must never
     /// lease a split, or a requeued split can bounce straight back to
-    /// the crashed worker id.
+    /// the crashed worker id. Draining (retired) workers are likewise
+    /// refused: they finish their current lease and exit.
     pub fn fetch_split(&self, worker: WorkerId) -> Option<Split> {
         let mut st = self.state.lock().unwrap();
-        if !st.workers.get(&worker).is_some_and(|h| h.alive) {
+        if !st
+            .workers
+            .get(&worker)
+            .is_some_and(|h| h.alive && !h.draining)
+        {
             return None;
         }
         let id = st.queue.pop_front()?;
@@ -336,6 +546,97 @@ impl Master {
         }
     }
 
+    /// Gracefully retire a worker (the autoscaler's scale-down path):
+    /// it is never handed another split, drains its current lease to
+    /// completion, and exits — unlike [`Master::worker_failed`], nothing
+    /// is requeued, so retirement costs zero duplicated work. Returns
+    /// `false` for unknown or already-dead workers.
+    pub fn retire_worker(&self, worker: WorkerId) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match st.workers.get_mut(&worker) {
+            Some(h) if h.alive => {
+                h.draining = true;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Has this worker been asked to retire?
+    pub fn is_draining(&self, worker: WorkerId) -> bool {
+        let st = self.state.lock().unwrap();
+        st.workers.get(&worker).is_some_and(|h| h.draining)
+    }
+
+    /// A retiring worker finished (its lease completed) and exited: drop
+    /// it from the health map. Defensive: anything still leased to it —
+    /// which a clean drain never leaves behind — goes back on the queue.
+    pub fn worker_drained(&self, worker: WorkerId) {
+        let mut st = self.state.lock().unwrap();
+        st.workers.remove(&worker);
+        st.requeue_leases(worker);
+    }
+
+    /// Alive, non-draining workers — the controller's base.
+    pub fn live_workers(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.workers
+            .values()
+            .filter(|h| h.alive && !h.draining)
+            .count()
+    }
+
+    /// Worker entries still tracked in the health map (live, draining,
+    /// and dead-within-grace).
+    pub fn tracked_workers(&self) -> usize {
+        self.state.lock().unwrap().workers.len()
+    }
+
+    /// Splits not yet settled (queued or leased) — the controller never
+    /// provisions more workers than there is work left to hand out.
+    pub fn pending_splits(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.queue.len() + st.in_flight.len()
+    }
+
+    /// This session's broker-buffer hit rate (0.0 when the session is
+    /// not broker-attached or nothing has been served yet).
+    pub fn broker_hit_rate(&self) -> f64 {
+        self.broker.as_ref().map_or(0.0, |h| h.hit_rate())
+    }
+
+    /// The plan-time selectivity prior the controller was seeded with.
+    pub fn prior_selectivity(&self) -> f64 {
+        self.prior_selectivity
+    }
+
+    /// Feed-forward plan cost: estimated worker busy-seconds for this
+    /// session given per-row stage costs — prune fraction from the
+    /// enumerated plan, survival from the stripe-stat prior
+    /// (`bench_autoscale` reports this next to the measured pool cost).
+    pub fn planned_worker_seconds(
+        &self,
+        decode_secs_per_row: f64,
+        process_secs_per_row: f64,
+    ) -> f64 {
+        let total = self.total_rows();
+        let pruned = if total == 0 {
+            0.0
+        } else {
+            1.0 - self.scheduled_rows() as f64 / total as f64
+        };
+        // `estimate_worker_seconds` takes delivered fraction of *all*
+        // rows; the prior is survival among decoded rows.
+        let overall_sel = self.prior_selectivity * (1.0 - pruned);
+        estimate_worker_seconds(
+            total,
+            overall_sel,
+            pruned,
+            decode_secs_per_row,
+            process_secs_per_row,
+        )
+    }
+
     /// Mark a worker dead (crash detected / drained); its in-flight splits
     /// go back on the queue — no checkpoint restore needed because
     /// Workers are stateless.
@@ -344,16 +645,7 @@ impl Master {
         if let Some(h) = st.workers.get_mut(&worker) {
             h.alive = false;
         }
-        let orphaned: Vec<SplitId> = st
-            .in_flight
-            .iter()
-            .filter(|(_, (w, _))| *w == worker)
-            .map(|(id, _)| *id)
-            .collect();
-        for id in orphaned {
-            st.in_flight.remove(&id);
-            st.queue.push_front(id);
-        }
+        st.requeue_leases(worker);
     }
 
     /// Requeue splits whose worker missed heartbeats past `timeout`.
@@ -369,17 +661,7 @@ impl Master {
         let mut requeued = 0;
         for w in dead {
             st.workers.get_mut(&w).unwrap().alive = false;
-            let orphaned: Vec<SplitId> = st
-                .in_flight
-                .iter()
-                .filter(|(_, (wk, _))| *wk == w)
-                .map(|(id, _)| *id)
-                .collect();
-            for id in orphaned {
-                st.in_flight.remove(&id);
-                st.queue.push_front(id);
-                requeued += 1;
-            }
+            requeued += st.requeue_leases(w);
         }
         requeued
     }
@@ -466,39 +748,193 @@ impl Master {
 
     // ---- Auto-scaling controller ----
 
-    /// Evaluate a scaling decision: returns the desired worker count given
-    /// live worker count and health reports. Goal (§3.2.1): maintain a
-    /// non-zero number of buffered tensors with maximum utilization.
-    pub fn autoscale(&self, current: usize) -> usize {
-        let st = self.state.lock().unwrap();
-        let alive: Vec<&WorkerHealth> =
-            st.workers.values().filter(|h| h.alive).collect();
-        drop_guard(&alive);
-        if alive.is_empty() {
-            return current.max(self.policy.min_workers);
+    /// Evaluate one scaling decision from the live pool and this tick's
+    /// cumulative pipeline signals. Goal (§3.2.1): "maintain a non-zero
+    /// number of buffered tensors with maximum utilization" — at the
+    /// *smallest* pool that does so.
+    ///
+    /// The controller is a throughput model with buffer-depth safety
+    /// nets: the smoothed trainer drain rate (demand, with headroom) is
+    /// divided by the effective per-worker capacity — delivered rows
+    /// per busy second, learned online, rescaled when the broker hit
+    /// rate drifts from its learning basis (a mostly-hitting session
+    /// skips fetch+decode, so each worker goes further), with the
+    /// predicate-selectivity estimate seeded from stripe stats and
+    /// corrected from `filtered_rows / decoded_rows`. Hysteresis: steps
+    /// are bounded (`max_step_up` / `max_step_down`), a cooldown holds
+    /// after every action, growth never exceeds the remaining work, and
+    /// the pool never shrinks while buffers are starved.
+    pub fn autoscale(&self, sig: &ScaleSignals) -> ScaleDecision {
+        let p = self.policy.clone();
+        let (alive, avg_buf, avg_cpu, pending) = {
+            let mut st = self.state.lock().unwrap();
+            // Prune long-dead entries: the controller's base is the
+            // live pool (a killed worker must not inflate proportional
+            // sizing), and the map must not grow with every crash.
+            let now = Instant::now();
+            st.workers.retain(|_, h| {
+                h.alive || now.duration_since(h.last_heartbeat) <= p.dead_grace
+            });
+            let live: Vec<&WorkerHealth> = st
+                .workers
+                .values()
+                .filter(|h| h.alive && !h.draining)
+                .collect();
+            let n = live.len();
+            let (avg_buf, avg_cpu) = if n == 0 {
+                (0.0, 0.0)
+            } else {
+                (
+                    live.iter()
+                        .map(|h| h.buffered_tensors as f64)
+                        .sum::<f64>()
+                        / n as f64,
+                    live.iter().map(|h| h.cpu_util).sum::<f64>() / n as f64,
+                )
+            };
+            let pending = st.queue.len() + st.in_flight.len();
+            (n, avg_buf, avg_cpu, pending)
+        };
+        let hit = self.broker_hit_rate();
+
+        let mut c = self.controller.lock().unwrap();
+        // ---- update estimates from cumulative signal deltas ----
+        if let Some(prev) = c.prev.clone() {
+            let dt = sig.wall_secs - prev.wall_secs;
+            if dt > 1e-6 {
+                let drained =
+                    sig.drained_rows.saturating_sub(prev.drained_rows);
+                let rate = drained as f64 / dt;
+                c.demand = if c.demand <= 0.0 {
+                    rate
+                } else {
+                    p.alpha * rate + (1.0 - p.alpha) * c.demand
+                };
+                let ddec = sig.decoded_rows.saturating_sub(prev.decoded_rows);
+                if ddec > 0 {
+                    let dfil = sig
+                        .filtered_rows
+                        .saturating_sub(prev.filtered_rows)
+                        .min(ddec);
+                    let observed = (ddec - dfil) as f64 / ddec as f64;
+                    c.selectivity = p.alpha * observed
+                        + (1.0 - p.alpha) * c.selectivity;
+                }
+                let dbusy = sig.busy_secs - prev.busy_secs;
+                let dprod =
+                    sig.produced_rows.saturating_sub(prev.produced_rows);
+                if dbusy > 1e-6 && dprod > 0 {
+                    let cap = dprod as f64 / dbusy;
+                    let share = ((sig.fetch_decode_secs
+                        - prev.fetch_decode_secs)
+                        / dbusy)
+                        .clamp(0.0, 1.0);
+                    let sel = c.selectivity;
+                    if c.capacity <= 0.0 {
+                        c.capacity = cap;
+                        c.basis_hit = hit;
+                        c.basis_sel = sel;
+                        c.basis_fetch_share = share;
+                    } else {
+                        c.capacity =
+                            p.alpha * cap + (1.0 - p.alpha) * c.capacity;
+                        c.basis_hit =
+                            p.alpha * hit + (1.0 - p.alpha) * c.basis_hit;
+                        c.basis_sel =
+                            p.alpha * sel + (1.0 - p.alpha) * c.basis_sel;
+                        c.basis_fetch_share = p.alpha * share
+                            + (1.0 - p.alpha) * c.basis_fetch_share;
+                    }
+                }
+            }
         }
-        let avg_buf: f64 = alive
-            .iter()
-            .map(|h| h.buffered_tensors as f64)
-            .sum::<f64>()
-            / alive.len() as f64;
-        let avg_cpu: f64 =
-            alive.iter().map(|h| h.cpu_util).sum::<f64>() / alive.len() as f64;
-        let mut desired = current;
-        if avg_buf < self.policy.min_buffered {
-            // Trainers draining faster than workers fill: scale up
-            // proportionally to the shortfall.
-            let grow = ((self.policy.min_buffered - avg_buf)
-                / self.policy.min_buffered
-                * current as f64)
-                .ceil() as usize;
-            desired = current + grow.max(1);
-        } else if avg_buf > self.policy.max_buffered
-            && avg_cpu < self.policy.target_cpu * 0.5
-        {
-            desired = current.saturating_sub(1);
+        c.prev = Some(sig.clone());
+
+        // ---- throughput model ----
+        let eff_cap = if c.capacity > 0.0 {
+            // The learned capacity, corrected for how far the broker
+            // hit rate and the selectivity estimate have drifted from
+            // the conditions it was learned under.
+            rescale_worker_capacity(
+                c.capacity,
+                c.basis_fetch_share,
+                c.basis_hit,
+                c.basis_sel,
+                hit,
+                c.selectivity,
+            )
+        } else {
+            0.0
+        };
+        let model = if eff_cap > 0.0 && c.demand > 0.0 {
+            // Workers needed so `target_cpu`-busy workers cover the
+            // drained-rate demand with headroom.
+            Some(
+                (((c.demand * p.headroom) / (eff_cap * p.target_cpu)).ceil()
+                    as usize)
+                    .max(1),
+            )
+        } else {
+            None
+        };
+
+        // ---- fuse with buffer-depth safety nets + hysteresis ----
+        let starved = avg_buf < p.min_buffered;
+        let glutted =
+            avg_buf > p.max_buffered && avg_cpu < p.target_cpu * 0.5;
+        let mut desired = alive;
+        let mut reason = "hold";
+        match model {
+            Some(m) if m > alive && pending > 0 => {
+                desired = (alive + p.max_step_up).min(m);
+                reason = "model-up";
+            }
+            _ if starved && pending > 0 && alive < p.max_workers => {
+                // Buffers starving (or no observations yet): grow by
+                // one, bounded — never proportionally.
+                desired = alive + 1;
+                reason = "starved-up";
+            }
+            Some(m) if m < alive => {
+                desired = alive - (alive - m).min(p.max_step_down);
+                reason = "model-down";
+            }
+            None if glutted => {
+                desired = alive.saturating_sub(1);
+                reason = "glutted-down";
+            }
+            _ => {}
         }
-        desired.clamp(self.policy.min_workers, self.policy.max_workers)
+        // Never provision beyond the work that remains.
+        desired = desired
+            .min(pending.max(p.min_workers))
+            .clamp(p.min_workers, p.max_workers);
+
+        // Cooldown: after an action, hold for `cooldown_ticks`
+        // decisions so the pipeline's response is observed before
+        // acting again (the anti-flap half of the hysteresis).
+        let cooling = c.cooldown > 0;
+        if cooling {
+            c.cooldown -= 1;
+        }
+        if desired != alive {
+            if cooling {
+                desired = alive;
+                reason = "cooldown";
+            } else {
+                c.cooldown = p.cooldown_ticks;
+            }
+        }
+
+        ScaleDecision {
+            desired,
+            alive,
+            demand_rows_per_sec: c.demand,
+            capacity_rows_per_busy_sec: eff_cap,
+            selectivity: c.selectivity,
+            broker_hit_rate: hit,
+            reason,
+        }
     }
 }
 
@@ -511,8 +947,6 @@ impl Drop for Master {
         }
     }
 }
-
-fn drop_guard<T>(_: &T) {}
 
 #[cfg(test)]
 mod tests {
@@ -649,7 +1083,10 @@ mod tests {
         let m = Master::new(&catalog, &cluster, spec).unwrap();
         let w = m.register_worker();
         m.heartbeat(w, 0, 0.95, 0.4, 0.3);
-        assert!(m.autoscale(1) > 1, "empty buffer must scale up");
+        let d = m.autoscale(&ScaleSignals::default());
+        assert_eq!(d.alive, 1);
+        assert_eq!(d.desired, 2, "starved growth is +1, not proportional");
+        assert_eq!(d.reason, "starved-up");
     }
 
     #[test]
@@ -660,7 +1097,9 @@ mod tests {
             let w = m.register_worker();
             m.heartbeat(w, 20, 0.1, 0.2, 0.1);
         }
-        assert_eq!(m.autoscale(4), 3);
+        let d = m.autoscale(&ScaleSignals::default());
+        assert_eq!(d.desired, 3);
+        assert_eq!(d.reason, "glutted-down");
     }
 
     #[test]
@@ -669,7 +1108,219 @@ mod tests {
         let m = Master::new(&catalog, &cluster, spec).unwrap();
         let w = m.register_worker();
         m.heartbeat(w, 4, 0.8, 0.5, 0.5);
-        assert_eq!(m.autoscale(2), 2);
+        let d = m.autoscale(&ScaleSignals::default());
+        assert_eq!(d.desired, 1);
+        assert_eq!(d.reason, "hold");
+    }
+
+    #[test]
+    fn autoscale_bases_on_alive_count_and_prunes_dead() {
+        // Regression: the old controller was fed `workers.len()` from
+        // the session loop, which still counted killed workers, so
+        // proportional growth computed from an inflated base.
+        let (cluster, catalog, spec) = setup();
+        let mut m = Master::new(&catalog, &cluster, spec).unwrap();
+        m.policy.dead_grace = Duration::from_millis(0);
+        let ids: Vec<WorkerId> =
+            (0..4).map(|_| m.register_worker()).collect();
+        for &id in &ids {
+            m.heartbeat(id, 0, 0.9, 0.4, 0.3);
+        }
+        m.worker_failed(ids[3]);
+        assert_eq!(m.live_workers(), 3);
+        let d = m.autoscale(&ScaleSignals::default());
+        assert_eq!(d.alive, 3, "controller base excludes the dead worker");
+        assert_eq!(d.desired, 4, "bounded +1 growth from the live base");
+        assert_eq!(m.tracked_workers(), 3, "dead entry pruned after grace");
+        // The pruned worker can no longer lease.
+        assert!(m.fetch_split(ids[3]).is_none());
+    }
+
+    #[test]
+    fn retired_worker_drains_lease_then_exits() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        let w = m.register_worker();
+        let s = m.fetch_split(w).unwrap();
+        assert!(m.retire_worker(w));
+        assert!(m.is_draining(w));
+        assert!(m.fetch_split(w).is_none(), "draining workers lease nothing");
+        assert_eq!(m.live_workers(), 0);
+        // The leased split still completes (drained, not requeued)...
+        m.complete_split(w, s.id);
+        m.worker_drained(w);
+        assert_eq!(m.tracked_workers(), 0);
+        // ...and the rest goes to a fresh worker; the drained split is
+        // never re-served.
+        let w2 = m.register_worker();
+        let mut served = 0;
+        while let Some(sp) = m.fetch_split(w2) {
+            assert_ne!(sp.id, s.id);
+            m.complete_split(w2, sp.id);
+            served += 1;
+        }
+        assert_eq!(served, 3);
+        assert!(m.is_done());
+        assert!(!m.retire_worker(999), "unknown workers can't retire");
+    }
+
+    /// Synthetic plant for controller convergence: demand `demand`
+    /// rows/s, per-worker capacity `cap` rows per busy second, the live
+    /// pool tracking every decision instantly. Returns the desired-size
+    /// history.
+    fn run_plant(
+        m: &Master,
+        start_workers: usize,
+        demand: f64,
+        cap: f64,
+        ticks: usize,
+    ) -> Vec<usize> {
+        let mut ids: Vec<WorkerId> =
+            (0..start_workers).map(|_| m.register_worker()).collect();
+        let mut sig = ScaleSignals::default();
+        let mut history = Vec::new();
+        for _ in 0..ticks {
+            let capacity_total = ids.len() as f64 * cap;
+            let produced_rate = capacity_total.min(demand);
+            let dt = 0.1;
+            sig.wall_secs += dt;
+            let rows = (produced_rate * dt) as u64;
+            sig.drained_rows += rows;
+            sig.produced_rows += rows;
+            sig.decoded_rows += rows;
+            let dbusy = produced_rate * dt / cap;
+            sig.busy_secs += dbusy;
+            sig.fetch_decode_secs += 0.5 * dbusy;
+            // Overshooting pools back up (deep buffers, idle CPUs);
+            // undershooting ones starve.
+            let (buf, cpu) = if capacity_total > demand * 1.05 {
+                (12usize, demand / capacity_total.max(1e-9))
+            } else {
+                (0usize, 1.0)
+            };
+            for &id in &ids {
+                m.heartbeat(id, buf, cpu, 0.4, 0.3);
+            }
+            let d = m.autoscale(&sig);
+            while ids.len() < d.desired {
+                ids.push(m.register_worker());
+            }
+            while ids.len() > d.desired {
+                let id = ids.pop().unwrap();
+                m.retire_worker(id);
+                m.worker_drained(id);
+            }
+            history.push(d.desired);
+        }
+        history
+    }
+
+    #[test]
+    fn controller_converges_from_below_without_flapping() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        // demand 1000 rows/s, 500 rows/busy-sec per worker:
+        // ceil(1000 × 1.25 / (500 × 0.85)) = 3 workers.
+        let history = run_plant(&m, 1, 1000.0, 500.0, 100);
+        let settle = &history[40..];
+        assert!(
+            settle.iter().all(|&d| d == 3),
+            "settled at 3, no oscillation: {history:?}"
+        );
+    }
+
+    #[test]
+    fn controller_converges_from_above_without_flapping() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        let history = run_plant(&m, 4, 1000.0, 500.0, 100);
+        let settle = &history[40..];
+        assert!(
+            settle.iter().all(|&d| d == 3),
+            "settled at 3 from above: {history:?}"
+        );
+        // Hysteresis bound along the way: desired never moves by more
+        // than the policy step between consecutive ticks.
+        for w in history.windows(2) {
+            assert!(
+                w[1] as i64 - w[0] as i64 <= 2 && w[0] as i64 - w[1] as i64 <= 1,
+                "step bound violated: {history:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn controller_never_outprovisions_remaining_work() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        // Only 4 splits exist: however starved the pool looks, desired
+        // never exceeds the pending work.
+        let history = run_plant(&m, 1, 1e9, 1.0, 60);
+        assert!(
+            history.iter().all(|&d| d <= 4),
+            "desired capped at pending splits: {history:?}"
+        );
+    }
+
+    #[test]
+    fn capacity_rescale_tracks_hit_rate_and_selectivity() {
+        // Learned cold with half the busy time in fetch+decode: a
+        // fully-hitting session doubles per-worker capacity.
+        let eff = rescale_worker_capacity(100.0, 0.5, 0.0, 1.0, 1.0, 1.0);
+        assert!((eff - 200.0).abs() < 1e-6, "{eff}");
+        // No drift ⇒ no rescale (the EMA already absorbed it).
+        let same = rescale_worker_capacity(100.0, 0.5, 0.3, 0.7, 0.3, 0.7);
+        assert!((same - 100.0).abs() < 1e-6, "{same}");
+        // Monotone in the current hit rate.
+        let mut last = 0.0;
+        for i in 0..=10 {
+            let h = i as f64 / 10.0;
+            let e = rescale_worker_capacity(100.0, 0.5, 0.0, 1.0, h, 1.0);
+            assert!(e >= last, "capacity must grow with hit rate");
+            last = e;
+        }
+        // Losing a warm cache (learned hot, now cold) shrinks capacity.
+        let colder = rescale_worker_capacity(100.0, 0.2, 0.9, 1.0, 0.0, 1.0);
+        assert!(colder < 100.0, "{colder}");
+        // A narrowing selectivity estimate (more decode per delivered
+        // row) shrinks capacity; a widening one grows it.
+        let narrower = rescale_worker_capacity(100.0, 0.5, 0.0, 1.0, 0.0, 0.5);
+        assert!((narrower - 100.0 / 1.5).abs() < 1e-6, "{narrower}");
+        let wider = rescale_worker_capacity(100.0, 0.5, 0.0, 0.5, 0.0, 1.0);
+        assert!((wider - 100.0 / 0.75).abs() < 1e-6, "{wider}");
+    }
+
+    #[test]
+    fn planned_worker_seconds_follows_prune_and_selectivity() {
+        use crate::filter::RowPredicate;
+        let (cluster, catalog, spec) = setup();
+        let full = Master::new(&catalog, &cluster, spec.clone()).unwrap();
+        // Unfiltered: every row decodes and delivers.
+        let base = full.planned_worker_seconds(1e-3, 1e-3);
+        assert!((base - 128.0 * 2e-3).abs() < 1e-9, "{base}");
+        // Fully pruned: nothing decodes, nothing delivers — zero cost.
+        let none = spec.with_predicate(RowPredicate::TimestampRange {
+            min: u64::MAX - 1,
+            max: u64::MAX,
+        });
+        let pruned = Master::new(&catalog, &cluster, none).unwrap();
+        assert_eq!(pruned.planned_worker_seconds(1e-3, 1e-3), 0.0);
+    }
+
+    #[test]
+    fn prior_selectivity_seeds_from_stripe_stats() {
+        use crate::filter::RowPredicate;
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec.clone()).unwrap();
+        assert_eq!(m.prior_selectivity(), 1.0, "unfiltered prior");
+        // A disjoint window's stats-aware prior is 0 — far sharper than
+        // the stats-free TimestampRange prior of 1.0.
+        let narrow = spec.with_predicate(RowPredicate::TimestampRange {
+            min: u64::MAX - 1,
+            max: u64::MAX,
+        });
+        let mn = Master::new(&catalog, &cluster, narrow).unwrap();
+        assert!(mn.prior_selectivity() < 1e-9, "{}", mn.prior_selectivity());
     }
 
     #[test]

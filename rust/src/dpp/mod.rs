@@ -31,8 +31,13 @@ pub mod worker;
 
 pub use cache::{session_fingerprint, TensorCache};
 pub use client::Client;
-pub use master::{Master, MasterCheckpoint, WorkerHealth};
-pub use service::{run_session, Session, SessionConfig, SessionReport};
+pub use master::{
+    estimate_worker_seconds, rescale_worker_capacity, AutoscalePolicy,
+    Master, MasterCheckpoint, ScaleDecision, ScaleSignals, WorkerHealth,
+};
+pub use service::{
+    run_session, run_session_on, Session, SessionConfig, SessionReport,
+};
 pub use spec::{PipelineOptions, SessionSpec};
 pub use split::{Split, SplitId};
 pub use tensor::{DedupTensorBatch, TensorBatch};

@@ -3,7 +3,7 @@
 //! auto-scaling loop and fault injection used by the experiments.
 
 use super::client::{partition_round_robin, Client};
-use super::master::Master;
+use super::master::{Master, ScaleSignals};
 use super::spec::SessionSpec;
 use super::worker::{WireBatch, Worker};
 use crate::metrics::EtlMetrics;
@@ -58,6 +58,19 @@ pub struct SessionReport {
     /// Seconds clients spent stalled waiting on tensors.
     pub client_stall_secs: f64,
     pub peak_workers: usize,
+    /// ∫ pool-size dt over the session (live + still-draining workers)
+    /// — the provisioning cost the autoscaler minimizes. A fixed pool
+    /// pays `workers × wall_secs`.
+    pub worker_pool_secs: f64,
+    /// Scale-down retirements the control loop executed.
+    pub workers_retired: u64,
+    /// Splits the reaper requeued during the session — a retirement
+    /// that lost its lease (it must not) would show up here.
+    pub splits_requeued: u64,
+    /// Live workers when the last split settled.
+    pub final_workers: usize,
+    /// This session's broker-buffer hit rate (0.0 without a broker).
+    pub broker_hit_rate: f64,
     /// Merged worker pipeline metrics snapshot.
     pub storage_rx_bytes: u64,
     pub tensor_tx_bytes: u64,
@@ -88,20 +101,34 @@ pub fn run_session(
     spec: SessionSpec,
     cfg: &SessionConfig,
 ) -> Result<SessionReport> {
+    let master = Arc::new(Master::new(catalog, cluster, spec)?);
+    run_session_on(master, cluster, cfg)
+}
+
+/// [`run_session`] on a pre-built Master — the entry point for sessions
+/// attached to a [`crate::broker::ReadBroker`] via
+/// [`Master::new_shared`], or with a customized
+/// [`crate::dpp::AutoscalePolicy`].
+pub fn run_session_on(
+    master: Arc<Master>,
+    cluster: &Arc<Cluster>,
+    cfg: &SessionConfig,
+) -> Result<SessionReport> {
     assert!(cfg.initial_workers >= 1);
     assert!(cfg.max_workers >= cfg.initial_workers);
-    let master = Arc::new(Master::new(catalog, cluster, spec.clone())?);
-    let spec = Arc::new(spec);
+    let spec = Arc::new(master.spec.clone());
     let metrics = Arc::new(EtlMetrics::default());
     cluster.reset_stats();
 
-    // Pre-create channel pairs for the maximum pool so clients' connection
-    // sets are fixed while workers scale dynamically.
-    let mut txs: Vec<Option<SyncSender<WireBatch>>> = Vec::new();
+    // One channel per pool slot, created up front so clients' connection
+    // sets are fixed while workers scale dynamically. The loop keeps a
+    // sender clone per slot, so a slot whose worker retired can host a
+    // later spawn on the same still-open channel.
+    let mut txs: Vec<SyncSender<WireBatch>> = Vec::new();
     let mut rxs = Vec::new();
     for _ in 0..cfg.max_workers {
         let (tx, rx) = sync_channel(cfg.buffer_per_worker);
-        txs.push(Some(tx));
+        txs.push(tx);
         rxs.push(Some(rx));
     }
     let parts = partition_round_robin(cfg.max_workers, cfg.clients);
@@ -114,6 +141,7 @@ pub fn run_session(
             part.iter().map(|&w| rxs[w].take().unwrap()).collect();
         let table = table.clone();
         let pace = cfg.client_rows_per_sec;
+        let drained = metrics.clone();
         client_handles.push(std::thread::spawn(move || {
             let mut client = Client::new(&table, client_rxs);
             let mut rows = 0u64;
@@ -123,6 +151,8 @@ pub fn run_session(
             {
                 rows += tb.rows as u64;
                 batches += 1;
+                // Demand signal for the autoscaler's throughput model.
+                drained.drained_rows.add(tb.rows as u64);
                 if let Some(rate) = pace {
                     // Trainer demand model: don't consume faster than the
                     // GPUs would.
@@ -139,60 +169,129 @@ pub fn run_session(
         }));
     }
 
-    // Spawn initial workers.
+    // Spawn initial workers. `workers` holds the live pool as
+    // (worker, slot); `draining` holds retired or killed workers until
+    // their threads exit (a retiring worker still drains its lease).
     let start = Instant::now();
-    let mut workers: Vec<Worker> = Vec::new();
+    let mut free_slots: Vec<usize> = (0..cfg.max_workers).rev().collect();
+    let mut workers: Vec<(Worker, usize)> = Vec::new();
+    let mut draining: Vec<(Worker, usize)> = Vec::new();
     for _ in 0..cfg.initial_workers {
-        let tx = txs[workers.len()].take().unwrap();
-        workers.push(Worker::spawn(
-            master.clone(),
-            cluster.clone(),
-            spec.clone(),
-            metrics.clone(),
-            tx,
+        let slot = free_slots.pop().expect("initial <= max");
+        workers.push((
+            Worker::spawn(
+                master.clone(),
+                cluster.clone(),
+                spec.clone(),
+                metrics.clone(),
+                txs[slot].clone(),
+            ),
+            slot,
         ));
     }
     let mut peak_workers = workers.len();
     let mut killed = false;
+    let mut workers_retired = 0u64;
+    let mut splits_requeued = 0u64;
+    let mut worker_pool_secs = 0.0f64;
+    let mut last_tick = start;
+    let mut last_scale = start;
 
-    // Control loop: autoscale + fault injection + completion watch.
+    // Control loop: autoscale (both directions) + fault injection +
+    // completion watch.
     loop {
         if master.is_done() {
             break;
         }
         std::thread::sleep(Duration::from_millis(2));
-        master.reap_expired(Duration::from_secs(5));
+        let now = Instant::now();
+        worker_pool_secs += (workers.len() + draining.len()) as f64
+            * now.duration_since(last_tick).as_secs_f64();
+        last_tick = now;
+        splits_requeued +=
+            master.reap_expired(Duration::from_secs(5)) as u64;
+        // Collect threads that exited on their own (crash, disconnect,
+        // finished drain): their slots return to the free pool.
+        for pool in [&mut workers, &mut draining] {
+            let mut i = 0;
+            while i < pool.len() {
+                if pool[i].0.is_finished() {
+                    let (w, slot) = pool.remove(i);
+                    w.join();
+                    free_slots.push(slot);
+                } else {
+                    i += 1;
+                }
+            }
+        }
         if let Some(n) = cfg.kill_worker_after_batches {
             if !killed && metrics.batches.get() >= n && workers.len() > 1 {
-                workers[0].kill();
-                master.worker_failed(workers[0].id);
+                // Fault injection: the killed worker leaves the live
+                // pool immediately — the controller must not count it.
+                let (w, slot) = workers.remove(0);
+                w.kill();
+                master.worker_failed(w.id);
+                draining.push((w, slot));
                 killed = true;
             }
         }
-        if cfg.autoscale_every.is_some() {
-            let desired = master
-                .autoscale(workers.len())
-                .min(cfg.max_workers);
-            while workers.len() < desired {
-                let Some(tx) = txs[workers.len()].take() else { break };
-                workers.push(Worker::spawn(
-                    master.clone(),
-                    cluster.clone(),
-                    spec.clone(),
-                    metrics.clone(),
-                    tx,
-                ));
+        if let Some(every) = cfg.autoscale_every {
+            if now.duration_since(last_scale) >= every {
+                last_scale = now;
+                let sig = ScaleSignals {
+                    wall_secs: start.elapsed().as_secs_f64(),
+                    drained_rows: metrics.drained_rows.get(),
+                    produced_rows: metrics.samples.get(),
+                    decoded_rows: metrics.decoded_rows.get(),
+                    filtered_rows: metrics.filtered_rows.get(),
+                    busy_secs: metrics.total_secs(),
+                    fetch_decode_secs: metrics.fetch_decode_secs(),
+                };
+                let desired =
+                    master.autoscale(&sig).desired.min(cfg.max_workers);
+                while workers.len() < desired {
+                    let Some(slot) = free_slots.pop() else { break };
+                    workers.push((
+                        Worker::spawn(
+                            master.clone(),
+                            cluster.clone(),
+                            spec.clone(),
+                            metrics.clone(),
+                            txs[slot].clone(),
+                        ),
+                        slot,
+                    ));
+                }
+                while workers.len() > desired {
+                    // Scale-down executes: retire the most recently
+                    // spawned worker — it stops leasing new splits,
+                    // drains its current one, and exits (joined by the
+                    // sweep above once finished).
+                    let (w, slot) = workers.pop().expect("len > desired");
+                    if master.retire_worker(w.id) {
+                        workers_retired += 1;
+                    } else {
+                        // The master presumes it dead (reaped mid-split,
+                        // its work already requeued) so it can't drain
+                        // gracefully — stop it outright, or a later
+                        // heartbeat would revive an untracked worker
+                        // that keeps leasing splits.
+                        w.kill();
+                    }
+                    draining.push((w, slot));
+                }
+                peak_workers = peak_workers.max(workers.len());
             }
-            peak_workers = peak_workers.max(workers.len());
         }
     }
+    let final_workers = workers.len();
+    let broker_hit_rate = master.broker_hit_rate();
 
-    // Drain: drop unspawned senders so clients observe end-of-stream,
-    // then join workers (dropping their senders).
-    for t in txs.iter_mut() {
-        t.take();
-    }
-    for w in workers {
+    // Drain: drop the loop's sender clones so clients observe
+    // end-of-stream once workers exit, then join workers (dropping
+    // their senders).
+    drop(txs);
+    for (w, _) in workers.into_iter().chain(draining) {
         w.join();
     }
     let mut rows = 0u64;
@@ -216,6 +315,11 @@ pub fn run_session(
         client_rx_bytes: rx_bytes,
         client_stall_secs: stalls,
         peak_workers,
+        worker_pool_secs,
+        workers_retired,
+        splits_requeued,
+        final_workers,
+        broker_hit_rate,
         storage_rx_bytes: metrics.storage_rx_bytes.get(),
         tensor_tx_bytes: metrics.tensor_tx_bytes.get(),
         worker_busy_secs: metrics.total_secs(),
@@ -365,6 +469,54 @@ mod tests {
         .unwrap();
         assert!(report.peak_workers >= 1);
         assert_eq!(report.rows_delivered, 128);
+    }
+
+    #[test]
+    fn control_loop_retires_overprovisioned_workers() {
+        // Regression: the old loop only grew the pool
+        // (`while workers.len() < desired`), so an over-provisioned
+        // session never released workers. A slow paced trainer against
+        // six workers must now shrink the live pool, with every retired
+        // lease drained (no rows lost) and no reaper requeues.
+        let (cluster, catalog, spec) = setup();
+        let report = Session::run(
+            &catalog,
+            &cluster,
+            spec,
+            &SessionConfig {
+                initial_workers: 6,
+                max_workers: 6,
+                clients: 1,
+                buffer_per_worker: 1,
+                autoscale_every: Some(Duration::from_millis(1)),
+                client_rows_per_sec: Some(200.0),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            report.rows_delivered, 128,
+            "retired leases drain — no rows lost"
+        );
+        assert!(
+            report.workers_retired >= 1,
+            "scale-down must actually execute: {report:?}"
+        );
+        assert!(
+            report.final_workers < 6,
+            "live pool shrinks: {}",
+            report.final_workers
+        );
+        assert_eq!(
+            report.splits_requeued, 0,
+            "retirement must not look like worker death to the reaper"
+        );
+        assert!(
+            report.worker_pool_secs < 6.0 * report.wall_secs,
+            "pool cost under a fixed six-worker pool: {:.3} vs {:.3}",
+            report.worker_pool_secs,
+            6.0 * report.wall_secs
+        );
     }
 
     #[test]

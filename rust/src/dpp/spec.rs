@@ -124,6 +124,14 @@ impl SessionSpec {
         }
     }
 
+    /// Stats-free prior for the fraction of rows this session's
+    /// predicate keeps (1.0 when unfiltered) — the autoscaler's
+    /// feed-forward selectivity signal before any stripe stats or
+    /// decoded-row observations exist.
+    pub fn estimated_selectivity(&self) -> f64 {
+        self.predicate.as_ref().map_or(1.0, |p| p.selectivity())
+    }
+
     /// Attach a row predicate (builder style). Features the predicate
     /// inspects (`FeaturePresent`) are pulled into the projection:
     /// presence is evaluated over *decoded* columns, so filtering on an
@@ -191,6 +199,20 @@ mod tests {
             seed: 3,
         });
         assert!(spec.predicate.is_some());
+    }
+
+    #[test]
+    fn estimated_selectivity_follows_predicate() {
+        let mut dag = TransformDag::default();
+        let a = dag.input(FeatureId(1));
+        dag.output(FeatureId(1), a);
+        let spec = SessionSpec::from_dag("t", 0, 1, dag, 8);
+        assert_eq!(spec.estimated_selectivity(), 1.0, "unfiltered");
+        let spec = spec.with_predicate(RowPredicate::SampleRate {
+            rate: 0.2,
+            seed: 11,
+        });
+        assert!((spec.estimated_selectivity() - 0.2).abs() < 1e-9);
     }
 
     #[test]

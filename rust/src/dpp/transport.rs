@@ -16,27 +16,60 @@ use std::net::{TcpListener, TcpStream};
 
 const FRAME_MAGIC: u32 = 0xD51_F00D;
 
-/// Send one batch over a stream.
+/// Largest frame payload accepted off the wire (64 MiB — far above any
+/// real tensor batch). The length field comes from an untrusted peer: a
+/// corrupt header must bound the receive allocation, not choose it.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+fn invalid(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Send one batch over a stream. Errors (instead of silently truncating
+/// through `as u32`) when the batch can't be represented in the frame
+/// header.
 pub fn send_batch(stream: &mut TcpStream, b: &WireBatch) -> std::io::Result<()> {
+    if b.bytes.len() > MAX_FRAME_BYTES {
+        return Err(invalid(format!(
+            "frame payload {} exceeds cap {MAX_FRAME_BYTES}",
+            b.bytes.len()
+        )));
+    }
+    let rows: u32 = b
+        .rows
+        .try_into()
+        .map_err(|_| invalid(format!("row count {} overflows frame header", b.rows)))?;
     let mut header = [0u8; 21];
     header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
     header[4..12].copy_from_slice(&b.seq.to_le_bytes());
-    header[12..16].copy_from_slice(&(b.rows as u32).to_le_bytes());
+    header[12..16].copy_from_slice(&rows.to_le_bytes());
     header[16..20].copy_from_slice(&(b.bytes.len() as u32).to_le_bytes());
     header[20] = b.dedup as u8;
     stream.write_all(&header)?;
     stream.write_all(&b.bytes)
 }
 
-/// Receive one batch; `Ok(None)` on clean end-of-stream.
+/// Receive one batch; `Ok(None)` on clean end-of-stream. Only a
+/// connection closed *between* frames is clean — a cut mid-header (or
+/// mid-payload) is an error, never a silent truncation of the stream.
 pub fn recv_batch(stream: &mut TcpStream) -> std::io::Result<Option<WireBatch>> {
     let mut header = [0u8; 21];
-    match stream.read_exact(&mut header) {
-        Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
-            return Ok(None)
+    let mut filled = 0usize;
+    while filled < header.len() {
+        match stream.read(&mut header[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(None); // closed on a frame boundary
+                }
+                return Err(invalid(format!(
+                    "connection closed mid-header ({filled} of {} bytes)",
+                    header.len()
+                )));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
         }
-        Err(e) => return Err(e),
     }
     let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
     if magic != FRAME_MAGIC {
@@ -48,6 +81,13 @@ pub fn recv_batch(stream: &mut TcpStream) -> std::io::Result<Option<WireBatch>> 
     let seq = u64::from_le_bytes(header[4..12].try_into().unwrap());
     let rows = u32::from_le_bytes(header[12..16].try_into().unwrap()) as usize;
     let len = u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BYTES {
+        // A corrupt frame must not demand an attacker-chosen (up to
+        // 4 GiB) allocation before a single payload byte arrives.
+        return Err(invalid(format!(
+            "frame length {len} exceeds cap {MAX_FRAME_BYTES}"
+        )));
+    }
     let dedup = header[20] & 1 == 1;
     let mut bytes = vec![0u8; len];
     stream.read_exact(&mut bytes)?;
@@ -201,16 +241,129 @@ mod tests {
     }
 
     #[test]
+    fn oversized_length_header_rejected_before_allocation() {
+        // A valid-magic frame claiming a ~4 GiB payload must be refused
+        // from the header alone — no allocation, no read.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut header = [0u8; 21];
+            header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+            header[12..16].copy_from_slice(&4u32.to_le_bytes());
+            header[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+            s.write_all(&header).unwrap();
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let err = recv_batch(&mut stream).unwrap_err();
+        h.join().unwrap();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
+    }
+
+    #[test]
+    fn send_refuses_wire_truncation() {
+        // Row counts beyond u32 and payloads beyond the frame cap must
+        // error out instead of truncating through `as u32` (a receiver
+        // would otherwise get a silently-wrong frame).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accepter = std::thread::spawn(move || listener.accept().unwrap());
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let _held = accepter.join().unwrap();
+        let big_rows = WireBatch {
+            seq: 0,
+            rows: u32::MAX as usize + 1,
+            dedup: false,
+            bytes: Vec::new(),
+        };
+        let err = send_batch(&mut stream, &big_rows).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("row count"), "{err}");
+        let big_payload = WireBatch {
+            seq: 0,
+            rows: 1,
+            dedup: false,
+            bytes: vec![0u8; MAX_FRAME_BYTES + 1],
+        };
+        let err = send_batch(&mut stream, &big_payload).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("payload"), "{err}");
+    }
+
+    #[test]
+    fn max_size_boundary_frame_roundtrips() {
+        // Exactly-at-cap frames stay legal (the guard is off-by-one
+        // sensitive in both directions). Use a small real payload but a
+        // header-boundary row count.
+        let tb = TensorBatch {
+            rows: 4,
+            dense: vec![1.0; 8],
+            dense_names: vec![FeatureId(0), FeatureId(1)],
+            sparse: vec![],
+            labels: vec![0.0; 4],
+        };
+        let cipher = StreamCipher::for_table("tcp");
+        let b = WireBatch {
+            seq: 7,
+            rows: u32::MAX as usize,
+            dedup: false,
+            bytes: tb.to_wire(&cipher, 7),
+        };
+        let (addr, server) = serve_batches(vec![b.clone()]).unwrap();
+        let got = fetch_all(addr).unwrap();
+        server.join().unwrap().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].rows, u32::MAX as usize);
+        assert_eq!(got[0].bytes, b.bytes);
+    }
+
+    #[test]
     fn corrupt_frame_rejected() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let h = std::thread::spawn(move || {
             let (mut s, _) = listener.accept().unwrap();
-            s.write_all(&[0u8; 20]).unwrap(); // zero magic
+            // One full header of zeros: bad magic (a 20-byte write —
+            // the pre-dedup-flag header size — only exercised the
+            // clean-EOF path and asserted nothing).
+            s.write_all(&[0u8; 21]).unwrap();
         });
         let mut stream = TcpStream::connect(addr).unwrap();
         let err = recv_batch(&mut stream);
         h.join().unwrap();
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn mid_header_close_is_error_not_silent_truncation() {
+        // A peer that dies 20 bytes into a 21-byte header lost data:
+        // that must surface as an error, not as clean end-of-stream
+        // (which would silently under-deliver training rows).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            s.write_all(&[0u8; 20]).unwrap();
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let err = recv_batch(&mut stream).unwrap_err();
+        h.join().unwrap();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("mid-header"), "{err}");
+    }
+
+    #[test]
+    fn close_on_frame_boundary_is_clean_end_of_stream() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            drop(s); // close without writing anything
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let got = recv_batch(&mut stream).unwrap();
+        h.join().unwrap();
+        assert!(got.is_none());
     }
 }

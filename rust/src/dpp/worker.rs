@@ -519,6 +519,15 @@ impl Worker {
                         if master.is_done() {
                             break;
                         }
+                        if master.is_draining(id) {
+                            // Retired by the autoscaler. Any lease this
+                            // worker held was completed above (the
+                            // split loop is synchronous), so exiting
+                            // here drains cleanly: nothing requeues,
+                            // no rows are lost.
+                            master.worker_drained(id);
+                            break;
+                        }
                         // Idle workers are alive: heartbeat so the
                         // reaper never fences a worker that is merely
                         // waiting (a requeued split must always find a
@@ -610,6 +619,16 @@ impl Worker {
     /// Simulate a crash: the thread stops without completing its split.
     pub fn kill(&self) {
         self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether the worker thread has exited (completed, drained after
+    /// retirement, or crashed) — joining a finished worker can't block
+    /// the session control loop.
+    pub fn is_finished(&self) -> bool {
+        match &self.handle {
+            Some(h) => h.is_finished(),
+            None => true,
+        }
     }
 
     pub fn join(mut self) {
@@ -792,6 +811,57 @@ mod tests {
             assert_eq!(a.bytes, b.bytes, "wire must be byte-identical");
         }
         assert!(m2.storage_rx_bytes.get() > 0, "single session still reads");
+    }
+
+    #[test]
+    fn retired_threaded_worker_exits_and_loses_no_rows() {
+        let (cluster, catalog, spec) = setup(true);
+        let master = Arc::new(
+            Master::new(&catalog, &cluster, (*spec).clone()).unwrap(),
+        );
+        let metrics = Arc::new(EtlMetrics::default());
+        let (tx, rx) = std::sync::mpsc::sync_channel(64);
+        let worker = Worker::spawn(
+            master.clone(),
+            cluster.clone(),
+            spec.clone(),
+            metrics.clone(),
+            tx,
+        );
+        // Retire right away: whatever lease it holds drains to
+        // completion, then the thread exits — without the session being
+        // done and without a requeue.
+        master.retire_worker(worker.id);
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(10);
+        while !worker.is_finished() && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(worker.is_finished(), "retired worker must exit");
+        worker.join();
+        assert_eq!(master.live_workers(), 0);
+        // A replacement finishes whatever remains; between the two
+        // channels every row arrives exactly once.
+        let (tx2, rx2) = std::sync::mpsc::sync_channel(64);
+        let w2 = Worker::spawn(master.clone(), cluster, spec, metrics, tx2);
+        let mut rows = 0usize;
+        while let Ok(b) =
+            rx.recv_timeout(std::time::Duration::from_millis(200))
+        {
+            rows += b.rows;
+        }
+        while let Ok(b) = rx2.recv_timeout(std::time::Duration::from_secs(10))
+        {
+            rows += b.rows;
+        }
+        w2.join();
+        assert!(master.is_done());
+        assert_eq!(
+            rows as u64,
+            master.total_rows(),
+            "retirement drains leases: no rows lost, none duplicated"
+        );
     }
 
     #[test]

@@ -170,6 +170,29 @@ impl RowPredicate {
         }
     }
 
+    /// Row-weighted selectivity estimate across a whole set of stripes —
+    /// the feed-forward signal the Master's autoscaler starts from
+    /// before a single row has been decoded (online correction from
+    /// `filtered_rows / decoded_rows` takes over as observations
+    /// arrive). Falls back to the stats-free prior when the set is
+    /// empty.
+    pub fn dataset_selectivity<'a>(
+        &self,
+        stripes: impl IntoIterator<Item = (&'a StripeStats, u32)>,
+    ) -> f64 {
+        let mut rows = 0u64;
+        let mut surviving = 0.0f64;
+        for (stats, n) in stripes {
+            rows += n as u64;
+            surviving += self.stripe_selectivity(stats, n) * n as f64;
+        }
+        if rows == 0 {
+            self.selectivity()
+        } else {
+            (surviving / rows as f64).clamp(0.0, 1.0)
+        }
+    }
+
     /// `true` proves that **no** row of a stripe with these statistics
     /// can match — the stripe (and all its I/Os) is skippable. One-sided:
     /// `false` only means "must decode to decide".
@@ -412,6 +435,26 @@ mod tests {
         assert!(RowPredicate::SampleRate { rate: 1.0, seed: 0 }
             .features()
             .is_empty());
+    }
+
+    #[test]
+    fn dataset_selectivity_is_row_weighted() {
+        // Stripe A (32 rows) fully inside the window, stripe B (96 rows)
+        // fully outside: the dataset-wide estimate is the row-weighted
+        // blend, not the per-stripe average.
+        let a: Vec<Sample> =
+            (0..32).map(|i| sample(1000 + i, 0.0, true)).collect();
+        let b: Vec<Sample> =
+            (0..96).map(|i| sample(5000 + i, 0.0, true)).collect();
+        let sa = StripeStats::from_samples(&a);
+        let sb = StripeStats::from_samples(&b);
+        let p = RowPredicate::TimestampRange { min: 0, max: 2000 };
+        let est = p.dataset_selectivity([(&sa, 32u32), (&sb, 96u32)]);
+        assert!((est - 0.25).abs() < 1e-9, "{est}");
+        // Empty stripe set falls back to the stats-free prior.
+        let q = RowPredicate::SampleRate { rate: 0.4, seed: 1 };
+        let none: [(&StripeStats, u32); 0] = [];
+        assert!((q.dataset_selectivity(none) - 0.4).abs() < 1e-9);
     }
 
     #[test]

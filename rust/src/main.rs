@@ -146,6 +146,10 @@ fn cmd_session(args: &Args) -> Result<()> {
     println!("worker QPS (busy)  : {:.0} rows/s", report.worker_qps);
     println!("peak workers       : {}", report.peak_workers);
     println!(
+        "worker pool        : {:.2} worker-secs ({} retired, {} final)",
+        report.worker_pool_secs, report.workers_retired, report.final_workers
+    );
+    println!(
         "client loading     : {:.2} MB ({:.1} MB/s)",
         report.client_rx_bytes as f64 / 1e6,
         report.client_rx_bytes as f64 / 1e6 / report.wall_secs

@@ -101,6 +101,10 @@ pub struct EtlMetrics {
     pub skipped_stripes: Counter,
     /// Wanted-stream bytes never fetched thanks to stripe pruning.
     pub skipped_bytes: Counter,
+    /// Rows drained by trainer-side clients (bumped by the session loop,
+    /// not by workers) — the demand half of the autoscaler's throughput
+    /// model.
+    pub drained_rows: Counter,
     pub t_read: StageClock,
     pub t_extract: StageClock,
     pub t_transform: StageClock,
@@ -134,6 +138,14 @@ impl EtlMetrics {
         } else {
             self.samples.get() as f64 / t as f64
         }
+    }
+
+    /// Busy seconds spent fetching + decoding (the read and extract
+    /// stages) — exactly the work a broker buffer hit skips. The
+    /// autoscaler's throughput model uses its share of total busy time
+    /// to rescale per-worker capacity as the hit rate drifts.
+    pub fn fetch_decode_secs(&self) -> f64 {
+        self.t_read.secs() + self.t_extract.secs()
     }
 
     /// Observed predicate selectivity: delivered / (decoded + pruned-away
@@ -340,6 +352,19 @@ mod tests {
         m.samples.add(500);
         m.t_transform.add(Duration::from_millis(500));
         assert!((m.qps() - 1000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn fetch_decode_share_of_busy_time() {
+        let m = EtlMetrics::default();
+        m.t_read.add(Duration::from_millis(300));
+        m.t_extract.add(Duration::from_millis(200));
+        m.t_transform.add(Duration::from_millis(400));
+        m.t_load.add(Duration::from_millis(100));
+        assert!((m.fetch_decode_secs() - 0.5).abs() < 1e-9);
+        assert!((m.total_secs() - 1.0).abs() < 1e-9);
+        m.drained_rows.add(7);
+        assert_eq!(m.drained_rows.get(), 7);
     }
 
     #[test]

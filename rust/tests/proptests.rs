@@ -5,7 +5,7 @@ use dsi::data::{ColumnarBatch, Sample, SparseValue};
 use dsi::dedup::DedupIndex;
 use dsi::dpp::client::partition_round_robin;
 use dsi::dpp::split::splits_for_partition;
-use dsi::dpp::{DedupTensorBatch, TensorBatch};
+use dsi::dpp::{estimate_worker_seconds, DedupTensorBatch, TensorBatch};
 use dsi::dwrf::plan::{coalesce, IoRange};
 use dsi::dwrf::{DecodeMode, DwrfReader, DwrfWriter, Encoding, Projection, WriterOptions};
 use dsi::schema::FeatureId;
@@ -13,6 +13,36 @@ use dsi::tectonic::FileId;
 use dsi::transforms::{Op, Value};
 use dsi::util::bytes::{get_varint, put_varint, unzigzag, zigzag};
 use dsi::util::prop::{check, Gen};
+
+#[test]
+fn prop_estimated_worker_seconds_monotone_as_selectivity_drops() {
+    // The autoscaler's planning model: narrowing a predicate (lower
+    // selectivity, and stripe pruning that can only grow) never raises
+    // the estimated worker-seconds for the session.
+    check("worker-seconds monotone in selectivity", 400, |g| {
+        let rows = g.u64(1..1_000_000);
+        let unit = |g: &mut Gen| g.u64(0..1_000_001) as f64 / 1e6;
+        let decode = unit(g) * 1e-3;
+        let process = unit(g) * 1e-3;
+        let sel_hi = unit(g);
+        let sel_lo = sel_hi * unit(g);
+        // Pruning can cover at most the filtered-away fraction, and the
+        // narrower predicate prunes at least as much as the wider one.
+        let prune_hi = (1.0 - sel_hi) * unit(g);
+        let prune_lo =
+            prune_hi + ((1.0 - sel_lo) - prune_hi).max(0.0) * unit(g);
+        let hi = estimate_worker_seconds(rows, sel_hi, prune_hi, decode, process);
+        let lo = estimate_worker_seconds(rows, sel_lo, prune_lo, decode, process);
+        if lo <= hi + 1e-9 {
+            Ok(())
+        } else {
+            Err(format!(
+                "sel {sel_lo:.4} (prune {prune_lo:.4}) cost {lo} > \
+                 sel {sel_hi:.4} (prune {prune_hi:.4}) cost {hi}"
+            ))
+        }
+    });
+}
 
 #[test]
 fn prop_varint_roundtrip() {
