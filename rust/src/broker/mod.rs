@@ -60,11 +60,32 @@ impl SharedStripe {
     /// projection (the shared decode may carry a wider union of every
     /// registrant's features) and expand Dedup payloads.
     pub fn to_columnar(&self, projection: &Projection) -> ColumnarBatch {
-        match self {
-            SharedStripe::Columnar(b) => {
+        self.to_columnar_masked(projection, None)
+    }
+
+    /// [`SharedStripe::to_columnar`] restricted to `keep` rows (a
+    /// session's row-group pruning mask, as stripe-local row indices).
+    /// The broker decodes whole stripes — it serves sessions with
+    /// *different* predicates — so zone-map pruning applies here, on
+    /// each session's own view: pruned rows are dropped at the gather /
+    /// expansion step and never materialize into this session's
+    /// batches.
+    pub fn to_columnar_masked(
+        &self,
+        projection: &Projection,
+        keep: Option<&[u32]>,
+    ) -> ColumnarBatch {
+        match (self, keep) {
+            (SharedStripe::Columnar(b), None) => {
                 b.retain_features(|f| projection.contains(f))
             }
-            SharedStripe::Dedup(d) => d.project(projection).expand(),
+            (SharedStripe::Columnar(b), Some(k)) => {
+                b.retain_features(|f| projection.contains(f)).gather(k)
+            }
+            (SharedStripe::Dedup(d), None) => d.project(projection).expand(),
+            (SharedStripe::Dedup(d), Some(k)) => {
+                d.project(projection).filter_rows(k).expand()
+            }
         }
     }
 

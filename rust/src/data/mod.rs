@@ -10,6 +10,7 @@
 //!   (the paper's +FM optimization, +15% worker throughput).
 
 use crate::schema::FeatureId;
+use anyhow::{bail, Result};
 
 /// Variable-length sparse value: categorical ids, optionally scored.
 #[derive(Clone, Debug, PartialEq)]
@@ -135,6 +136,41 @@ impl Bitmap {
         assert!(words.len() == len.div_ceil(64));
         Bitmap { bits: words, len }
     }
+
+    /// Append `other`'s bits after this bitmap's (bit-shifted splice) —
+    /// the concatenation step when a stripe is decoded as independent
+    /// row-group chunks. Tail bits beyond either length are masked off,
+    /// so bitmaps deserialized from untrusted words stay well-formed.
+    pub fn append(&mut self, other: &Bitmap) {
+        let old_len = self.len;
+        // Clear any garbage above our own length before splicing.
+        let tail = old_len % 64;
+        if tail != 0 {
+            if let Some(w) = self.bits.get_mut(old_len / 64) {
+                *w &= (1u64 << tail) - 1;
+            }
+        }
+        self.len = old_len + other.len;
+        self.bits.resize(self.len.div_ceil(64), 0);
+        if other.len == 0 {
+            return;
+        }
+        let shift = old_len % 64;
+        let base = old_len / 64;
+        let last = other.bits.len() - 1;
+        let other_tail = other.len % 64;
+        for (i, &raw) in other.bits.iter().enumerate() {
+            let w = if i == last && other_tail != 0 {
+                raw & ((1u64 << other_tail) - 1)
+            } else {
+                raw
+            };
+            self.bits[base + i] |= w << shift;
+            if shift != 0 && base + i + 1 < self.bits.len() {
+                self.bits[base + i + 1] |= w >> (64 - shift);
+            }
+        }
+    }
 }
 
 /// One dense feature column: compact values for present rows + presence.
@@ -192,6 +228,31 @@ impl SparseColumn {
             ids: Vec::new(),
             scores: None,
         }
+    }
+
+    /// Append `other`'s rows after this column's (CSR splice). Scores
+    /// must cover all ids or none on both sides; a scored/unscored
+    /// mismatch with actual ids present is a format inconsistency.
+    pub fn append(&mut self, other: &SparseColumn) -> Result<()> {
+        match (&self.scores, &other.scores) {
+            (Some(_), None) if !other.ids.is_empty() => {
+                bail!("appending unscored ids to scored column {:?}", self.id)
+            }
+            (None, Some(_)) if !self.ids.is_empty() => {
+                bail!("appending scored ids to unscored column {:?}", self.id)
+            }
+            _ => {}
+        }
+        let base = self.offsets.last().copied().unwrap_or(0);
+        self.offsets
+            .extend(other.offsets[1..].iter().map(|&o| o + base));
+        self.ids.extend_from_slice(&other.ids);
+        if let Some(b) = &other.scores {
+            self.scores
+                .get_or_insert_with(Vec::new)
+                .extend_from_slice(b);
+        }
+        Ok(())
     }
 }
 
@@ -427,6 +488,48 @@ impl ColumnarBatch {
         }
     }
 
+    /// Append `other`'s rows after this batch's — the concatenation step
+    /// when a stripe is decoded as independent row-group chunks (only
+    /// surviving groups are ever decoded; their batches splice back into
+    /// one stripe batch in row order). Column sets must match exactly
+    /// and neither side may carry a selection; both hold by construction
+    /// for group chunks of one stripe, and violations (a corrupt footer
+    /// indexing inconsistent group streams) error instead of silently
+    /// misaligning columns.
+    pub fn append_rows(&mut self, other: &ColumnarBatch) -> Result<()> {
+        if self.selection.is_some() || other.selection.is_some() {
+            bail!("append_rows on a batch with a pending selection");
+        }
+        if self.dense.len() != other.dense.len()
+            || self.sparse.len() != other.sparse.len()
+        {
+            bail!(
+                "append_rows column-set mismatch: {}+{} vs {}+{}",
+                self.dense.len(),
+                self.sparse.len(),
+                other.dense.len(),
+                other.sparse.len()
+            );
+        }
+        for (a, b) in self.dense.iter_mut().zip(other.dense.iter()) {
+            if a.id != b.id {
+                bail!("append_rows dense column {:?} vs {:?}", a.id, b.id);
+            }
+            a.present.append(&b.present);
+            a.values.extend_from_slice(&b.values);
+        }
+        for (a, b) in self.sparse.iter_mut().zip(other.sparse.iter()) {
+            if a.id != b.id {
+                bail!("append_rows sparse column {:?} vs {:?}", a.id, b.id);
+            }
+            a.append(b)?;
+        }
+        self.labels.extend_from_slice(&other.labels);
+        self.timestamps.extend_from_slice(&other.timestamps);
+        self.num_rows += other.num_rows;
+        Ok(())
+    }
+
     /// Restrict to the feature columns `keep` accepts; row meta,
     /// selection, and row count are preserved. This is how a session
     /// narrows a batch decoded once with a wider *shared* projection
@@ -630,6 +733,57 @@ mod tests {
         b.set(69);
         assert_eq!(b.ones(), vec![0, 63, 69]);
         assert_eq!(Bitmap::new(0).ones(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn bitmap_append_splices_across_word_boundaries() {
+        for (a_len, b_len) in [(0usize, 5usize), (5, 0), (60, 10), (64, 64), (70, 3), (1, 130)] {
+            let mut a = Bitmap::new(a_len);
+            let mut b = Bitmap::new(b_len);
+            for i in (0..a_len).step_by(3) {
+                a.set(i);
+            }
+            for i in (0..b_len).step_by(2) {
+                b.set(i);
+            }
+            let mut joined = a.clone();
+            joined.append(&b);
+            assert_eq!(joined.len(), a_len + b_len);
+            for i in 0..a_len {
+                assert_eq!(joined.get(i), a.get(i), "{a_len}+{b_len} @ {i}");
+            }
+            for i in 0..b_len {
+                assert_eq!(
+                    joined.get(a_len + i),
+                    b.get(i),
+                    "{a_len}+{b_len} @ tail {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn append_rows_equals_single_build() {
+        let samples: Vec<Sample> = (0..13).map(sample).collect();
+        let dense_ids = [FeatureId(0), FeatureId(2)];
+        let sparse_ids = [FeatureId(10), FeatureId(11)];
+        let whole =
+            ColumnarBatch::from_samples(&samples, &dense_ids, &sparse_ids);
+        let mut acc =
+            ColumnarBatch::from_samples(&samples[..5], &dense_ids, &sparse_ids);
+        let mid =
+            ColumnarBatch::from_samples(&samples[5..9], &dense_ids, &sparse_ids);
+        let tail =
+            ColumnarBatch::from_samples(&samples[9..], &dense_ids, &sparse_ids);
+        acc.append_rows(&mid).unwrap();
+        acc.append_rows(&tail).unwrap();
+        assert_eq!(acc, whole);
+        // Mismatched column sets error instead of misaligning.
+        let narrow =
+            ColumnarBatch::from_samples(&samples[..2], &dense_ids, &[]);
+        assert!(acc.append_rows(&narrow).is_err());
+        let sel = whole.clone().with_selection(vec![0]);
+        assert!(acc.append_rows(&sel).is_err());
     }
 
     #[test]

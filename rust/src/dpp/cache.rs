@@ -44,6 +44,7 @@ pub fn session_fingerprint(spec: &SessionSpec) -> u64 {
     h.write_u8(spec.pipeline.flatmap as u8);
     h.write_u8(spec.pipeline.dedup_aware as u8);
     h.write_u8(spec.pipeline.pushdown as u8);
+    h.write_u8(spec.pipeline.row_group_pruning as u8);
     h.write_u8(spec.pipeline.shared_reads as u8);
     h.write_u8(spec.pipeline.coalesce.is_some() as u8);
     h.write_u64(spec.pipeline.coalesce.unwrap_or(0));

@@ -7,7 +7,8 @@
 use super::spec::SessionSpec;
 use super::split::{splits_for_partition, Split, SplitId};
 use crate::broker::{BrokerHandle, ReadBroker};
-use crate::dwrf::{FileMeta, IoRange, StripeStats};
+use crate::dwrf::{DwrfReader, FileMeta, IoRange, StripeInfo, StripeStats};
+use crate::filter::RowPredicate;
 use crate::tectonic::{Cluster, FileId};
 use crate::warehouse::Catalog;
 use anyhow::{bail, Context, Result};
@@ -341,6 +342,14 @@ impl Master {
         } else {
             None
         };
+        // Stripe-level prune decision — the same `StripeInfo::pruned_at`
+        // the worker's planner evaluates, so split enumeration and
+        // broker interest registration cannot drift from the plans
+        // workers actually execute.
+        let use_groups = spec.pipeline.row_group_pruning;
+        let stripe_pruned = |pr: &RowPredicate, st: &StripeInfo| -> bool {
+            st.pruned_at(pr, use_groups)
+        };
         // Planned (file, stripe) interest for broker registration: only
         // stripes a worker will actually fetch — whole-split prunes and
         // per-stripe prunes (the worker's plan applies the same
@@ -361,11 +370,28 @@ impl Master {
             };
             let stripe_rows: Vec<u32> =
                 meta.stripes.iter().map(|s| s.rows).collect();
-            decoded_pairs.extend(meta.stripes.iter().filter_map(|s| {
-                let pruned = predicate
-                    .is_some_and(|pr| pr.prunes_stripe(&s.stats, s.rows));
-                (!pruned).then_some((s.stats, s.rows))
-            }));
+            // The population the controller's selectivity prior must
+            // describe is what will actually *decode*: with row-group
+            // stats present, that's the surviving groups of surviving
+            // stripes — a sharper prior than stripe-level stats,
+            // because pruned groups neither decode nor deliver.
+            for s in meta.stripes.iter() {
+                if predicate.is_some_and(|pr| stripe_pruned(pr, s)) {
+                    continue;
+                }
+                if use_groups && !s.groups.is_empty() {
+                    for g in &s.groups {
+                        let g_pruned = predicate.is_some_and(|pr| {
+                            pr.prunes_stripe(&g.stats, g.rows)
+                        });
+                        if !g_pruned {
+                            decoded_pairs.push((g.stats, g.rows));
+                        }
+                    }
+                } else {
+                    decoded_pairs.push((s.stats, s.rows));
+                }
+            }
             for split in splits_for_partition(
                 &mut next_id,
                 p.file,
@@ -378,7 +404,7 @@ impl Master {
                 let pruned = match predicate {
                     Some(pr) => meta.stripes[s..e]
                         .iter()
-                        .all(|st| pr.prunes_stripe(&st.stats, st.rows)),
+                        .all(|st| stripe_pruned(pr, st)),
                     None => false,
                 };
                 if pruned {
@@ -390,10 +416,9 @@ impl Master {
                         for (si, st) in
                             meta.stripes[s..e].iter().enumerate()
                         {
-                            let stripe_pruned = predicate.is_some_and(
-                                |pr| pr.prunes_stripe(&st.stats, st.rows),
-                            );
-                            if !stripe_pruned {
+                            let dead = predicate
+                                .is_some_and(|pr| stripe_pruned(pr, st));
+                            if !dead {
                                 live.push(s + si);
                             }
                         }
@@ -442,11 +467,14 @@ impl Master {
         self.broker.clone()
     }
 
-    /// Fetch and parse a file's footer via ranged tail reads (doubling
-    /// until the whole footer fits).
+    /// Fetch and parse a file's footer via ranged tail reads: the
+    /// initial probe is [`DwrfReader::footer_ios`]'s tail estimate, then
+    /// the read doubles until the whole footer fits — v3 footers grow
+    /// with stripes × row groups, so the re-read path is load-bearing,
+    /// not theoretical.
     pub fn fetch_meta(cluster: &Cluster, file: FileId) -> Result<FileMeta> {
         let flen = cluster.file_len(file).context("file length")?;
-        let mut tail = flen.min(64 * 1024);
+        let mut tail = DwrfReader::footer_ios(flen).len;
         loop {
             let io = IoRange {
                 offset: flen - tail,

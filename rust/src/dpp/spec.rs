@@ -36,6 +36,14 @@ pub struct PipelineOptions {
     /// decode-then-filter baseline: every stripe is fetched and decoded,
     /// and the predicate only applies at the tensor boundary.
     pub pushdown: bool,
+    /// Sub-stripe zone-map pruning (requires `pushdown`): evaluate the
+    /// predicate against footer v3 row-group stats too, pre-seed the
+    /// stripe plan with a group survival mask, and — on
+    /// row-group-split flattened files — drop pruned groups' byte
+    /// ranges from the I/O plan. `false` limits pushdown to stripe
+    /// granularity (the pre-zone-map behavior, kept for ablation
+    /// benches). Lossless either way.
+    pub row_group_pruning: bool,
     /// Cross-job shared reads: when the session's Master is attached to
     /// a [`crate::broker::ReadBroker`], workers fetch stripes through it
     /// so concurrent sessions over overlapping partitions pay each
@@ -55,6 +63,7 @@ impl Default for PipelineOptions {
             flatmap: true,
             dedup_aware: true,
             pushdown: true,
+            row_group_pruning: true,
             shared_reads: true,
         }
     }
@@ -69,6 +78,7 @@ impl PipelineOptions {
             flatmap: false,
             dedup_aware: false,
             pushdown: false,
+            row_group_pruning: false,
             shared_reads: false,
         }
     }
@@ -177,6 +187,7 @@ mod tests {
         assert!(p.flatmap);
         assert!(p.dedup_aware);
         assert!(p.pushdown);
+        assert!(p.row_group_pruning);
         assert!(p.shared_reads);
         let b = PipelineOptions::baseline();
         assert!(b.coalesce.is_none());
@@ -184,6 +195,7 @@ mod tests {
         assert!(!b.flatmap);
         assert!(!b.dedup_aware);
         assert!(!b.pushdown);
+        assert!(!b.row_group_pruning);
         assert!(!b.shared_reads);
     }
 

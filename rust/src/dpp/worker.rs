@@ -30,6 +30,10 @@ use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::Instant;
 
+/// One fetched stripe on the private decode path: (stripe index,
+/// fetched buffers, row-group survival mask from the plan).
+type PlannedStripeBufs = (usize, crate::dwrf::IoBuffers, Option<Vec<bool>>);
+
 /// A serialized tensor batch on the worker→client wire.
 #[derive(Clone, Debug)]
 pub struct WireBatch {
@@ -135,8 +139,12 @@ impl WorkerCore {
 
         // ---- read: plan + fetch raw extents from storage ----
         // With pushdown on, the predicate prunes provably-empty stripes
-        // here — before any I/O is issued. The baseline plans every
-        // stripe and filters after decode.
+        // here — before any I/O is issued — and, one level down,
+        // provably-empty *row groups* inside surviving stripes (footer
+        // v3 zone maps): their rows never decode, and on
+        // row-group-split flattened files their byte ranges are dropped
+        // from the I/O plan outright. The baseline plans every stripe
+        // and filters after decode.
         let t = Instant::now();
         let reader = self.reader_for(split.file)?;
         let pushdown_pred = if spec.pipeline.pushdown {
@@ -144,15 +152,19 @@ impl WorkerCore {
         } else {
             None
         };
-        let plan = reader.plan_stripes_filtered(
+        let plan = reader.plan_stripes_granular(
             &spec.projection,
             spec.pipeline.coalesce,
             split.stripe_start,
             split.stripe_count,
             pushdown_pred,
+            spec.pipeline.row_group_pruning,
         );
         m.skipped_stripes.add(plan.skipped_stripes.len() as u64);
         m.skipped_bytes.add(plan.skipped_bytes);
+        m.pruned_groups.add(plan.pruned_groups);
+        m.pruned_group_rows.add(plan.pruned_group_rows);
+        m.pruned_group_bytes.add(plan.pruned_group_bytes);
 
         // The dedup path evaluates the DAG once per unique payload, which
         // is only sound when no op reads the row index (`Sampling` does);
@@ -169,8 +181,11 @@ impl WorkerCore {
         let wire = if let Some(h) = shared {
             // ---- shared-read path: fetch through the broker. Each
             // surviving stripe is fetched + decoded once across all
-            // attached sessions; this session's projection, predicate,
-            // and transforms apply to its own view downstream.
+            // attached sessions (the broker cannot apply any one
+            // session's predicate); this session's row-group mask,
+            // projection, predicate, and transforms apply to its own
+            // view downstream — pruned groups are dropped before their
+            // rows are ever materialized into this session's batches.
             let mut handles = Vec::new();
             for sp in &plan.stripes {
                 let served =
@@ -180,29 +195,46 @@ impl WorkerCore {
                 } else {
                     m.storage_rx_bytes.add(served.fetched_bytes);
                 }
-                handles.push(served.stripe);
+                let keep = sp.group_mask.as_ref().map(|mask| {
+                    reader.meta.stripes[sp.stripe].keep_rows(mask)
+                });
+                handles.push((served.stripe, keep));
             }
             m.t_read.add(t.elapsed());
             if use_dedup {
                 let stripes = handles
                     .iter()
-                    .map(|s| s.to_dedup(&spec.projection))
+                    .map(|(s, keep)| {
+                        let ds = s.to_dedup(&spec.projection)?;
+                        Ok(match keep {
+                            Some(k) => ds.filter_rows(k),
+                            None => ds,
+                        })
+                    })
                     .collect::<Result<Vec<DedupStripe>>>()?;
                 self.finish_dedup(stripes)?
             } else {
                 let batches: Vec<ColumnarBatch> = handles
                     .iter()
-                    .map(|s| s.to_columnar(&spec.projection))
+                    .map(|(s, keep)| {
+                        s.to_columnar_masked(&spec.projection, keep.as_deref())
+                    })
                     .collect();
                 self.finish_oblivious(batches)?
             }
         } else {
-            // ---- private path: per-session I/O + decode.
+            // ---- private path: per-session I/O + decode. The plan's
+            // I/O set already excludes pruned row groups' stream
+            // extents where the layout permits.
             let mut bufs_per_stripe = Vec::new();
             for sp in &plan.stripes {
                 let bufs = self.cluster.execute_ios(split.file, &sp.ios)?;
                 m.storage_rx_bytes.add(bufs.bytes());
-                bufs_per_stripe.push((sp.stripe, bufs));
+                bufs_per_stripe.push((
+                    sp.stripe,
+                    bufs,
+                    sp.group_mask.clone(),
+                ));
             }
             m.t_read.add(t.elapsed());
             if use_dedup {
@@ -222,11 +254,12 @@ impl WorkerCore {
 
     /// Private-path decode: decrypt + decompress + decode each fetched
     /// stripe into a columnar batch (the shared path gets these from the
-    /// broker's decode-once buffer instead).
+    /// broker's decode-once buffer instead). The per-stripe row-group
+    /// mask is honored: pruned groups never become batch rows.
     fn decode_oblivious(
         &mut self,
         reader: &DwrfReader,
-        bufs_per_stripe: &[(usize, crate::dwrf::IoBuffers)],
+        bufs_per_stripe: &[PlannedStripeBufs],
     ) -> Result<Vec<ColumnarBatch>> {
         let spec = self.spec.clone();
         let t = Instant::now();
@@ -234,15 +267,27 @@ impl WorkerCore {
             fast: spec.pipeline.fast_decode,
         };
         let mut batches: Vec<ColumnarBatch> = Vec::new();
-        for (stripe, bufs) in bufs_per_stripe {
+        for (stripe, bufs, mask) in bufs_per_stripe {
+            let mask = mask.as_deref();
             let batch = if spec.pipeline.flatmap {
                 // Flatmap path: storage → columnar directly.
-                reader.decode_stripe_columnar(*stripe, bufs, &spec.projection, mode)?
+                reader.decode_stripe_columnar_masked(
+                    *stripe,
+                    bufs,
+                    &spec.projection,
+                    mode,
+                    mask,
+                )?
             } else {
                 // Baseline path: storage → row maps → columnar (the extra
                 // format conversions +FM removes).
-                let rows =
-                    reader.decode_stripe_rows(*stripe, bufs, &spec.projection, mode)?;
+                let rows = reader.decode_stripe_rows_masked(
+                    *stripe,
+                    bufs,
+                    &spec.projection,
+                    mode,
+                    mask,
+                )?;
                 let mut dense_ids: Vec<_> = rows
                     .iter()
                     .flat_map(|s| s.dense.iter().map(|(f, _)| *f))
@@ -344,10 +389,12 @@ impl WorkerCore {
 
     /// Private-path dedup decode: unique payloads + inverse, without
     /// expansion (the shared path gets these from the broker instead).
+    /// Row-group masks prune at the expansion index: dropped rows leave
+    /// the inverse, and payloads only they referenced compact away.
     fn decode_dedup(
         &mut self,
         reader: &DwrfReader,
-        bufs_per_stripe: &[(usize, crate::dwrf::IoBuffers)],
+        bufs_per_stripe: &[PlannedStripeBufs],
     ) -> Result<Vec<DedupStripe>> {
         let spec = self.spec.clone();
         let t = Instant::now();
@@ -355,12 +402,13 @@ impl WorkerCore {
             fast: spec.pipeline.fast_decode,
         };
         let mut stripes = Vec::new();
-        for (stripe, bufs) in bufs_per_stripe {
-            stripes.push(reader.decode_stripe_dedup(
+        for (stripe, bufs, mask) in bufs_per_stripe {
+            stripes.push(reader.decode_stripe_dedup_masked(
                 *stripe,
                 bufs,
                 &spec.projection,
                 mode,
+                mask.as_deref(),
             )?);
         }
         self.metrics.t_extract.add(t.elapsed());

@@ -6,7 +6,12 @@
 //! stream's file extent and (since footer v2) carries per-stripe
 //! [`StripeStats`] — min/max timestamp, label positives, and a hashed
 //! feature-presence filter — which predicate pushdown consults to skip
-//! whole stripes before issuing any I/O. Two row encodings are supported:
+//! whole stripes before issuing any I/O. Footer v3 refines the same
+//! zone-map idea one level down: each stripe is tiled into fixed-size
+//! *row groups* (`WriterOptions::rows_per_group`) with their own
+//! [`RowGroupStats`], and flattened stripes additionally split their
+//! row-meta and feature streams per row group so a pruned group's bytes
+//! are never even fetched. Two row encodings are supported:
 //!
 //! * [`Encoding::Map`] — the pre-optimization baseline: per-stripe dense
 //!   and sparse *map* streams holding every feature of every row. Readers
@@ -41,7 +46,20 @@ pub use writer::{DwrfWriter, Encoding, WriterOptions};
 use anyhow::{bail, Result};
 
 pub const MAGIC: u32 = 0x4457_5246; // "DWRF"
-pub const VERSION: u32 = 2;
+/// Current footer version. v2 added per-stripe [`StripeStats`]; v3 adds
+/// per-row-group zone maps ([`RowGroupStats`]) and per-row-group stream
+/// scoping. The reader parses both: a v2 footer simply has no group
+/// stats, so pruning falls back to stripe granularity.
+pub const VERSION: u32 = 3;
+/// Oldest footer version the reader still parses.
+pub const MIN_VERSION: u32 = 2;
+/// `StreamInfo::row_group` value for streams that cover the whole stripe.
+pub const WHOLE_STRIPE: u32 = u32::MAX;
+/// Upper bound on any stream's decompressed size. Footer-derived
+/// `raw_len` values size the decompression buffer, so an unvalidated
+/// corrupt footer could demand a near-`u64::MAX` allocation before a
+/// single content check runs; real streams are a few MB at most.
+pub const MAX_STREAM_RAW_LEN: u64 = 1 << 30;
 
 /// Per-stripe row statistics recorded in the footer (v2): the metadata
 /// predicate pushdown consults to skip whole stripes — and all their
@@ -73,6 +91,15 @@ impl Default for StripeStats {
 }
 
 impl StripeStats {
+    /// `min_timestamp > max_timestamp` can only arise from a stats
+    /// record that observed **no** rows (the `Default` sentinel — an
+    /// empty or fully-deduped stripe serializes exactly this). Pruning
+    /// and selectivity estimation treat it as "no rows" explicitly
+    /// instead of relying on accidental comparison behavior.
+    pub fn is_empty_domain(&self) -> bool {
+        self.min_timestamp > self.max_timestamp
+    }
+
     fn presence_slot(feature: u32) -> (usize, u64) {
         let h = crate::transforms::hash64(feature as u64 ^ 0xD5F7_57A7);
         (((h >> 6) & 1) as usize, 1u64 << (h & 63))
@@ -115,12 +142,26 @@ impl StripeStats {
     }
 }
 
+/// Zone map for one row group — a fixed-size run of consecutive rows
+/// inside a stripe (footer v3). Same conservative shape as the stripe
+/// stats, so the identical pruning logic applies one level down.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowGroupStats {
+    pub rows: u32,
+    pub stats: StripeStats,
+}
+
 /// Index entry for one stream within a stripe.
 #[derive(Clone, Debug)]
 pub struct StreamInfo {
     pub kind: StreamKind,
     /// Feature id for flattened streams; `u32::MAX` otherwise.
     pub feature: u32,
+    /// Row group this stream covers (footer v3, row-group-split stripes
+    /// only); [`WHOLE_STRIPE`] for streams spanning every row. A stream
+    /// scoped to a pruned row group is never fetched — this is what lets
+    /// the planner shrink I/O ranges below stripe granularity.
+    pub row_group: u32,
     /// Absolute file offset of the (compressed, encrypted) bytes.
     pub offset: u64,
     pub len: u64,
@@ -139,7 +180,86 @@ pub struct StripeInfo {
     pub rows: u32,
     /// Row statistics for predicate pushdown (footer v2).
     pub stats: StripeStats,
+    /// Per-row-group zone maps (footer v3). Empty on v2 files — pruning
+    /// then falls back to stripe granularity. When present, the groups'
+    /// row counts sum to `rows` (validated at decode).
+    pub groups: Vec<RowGroupStats>,
     pub streams: Vec<StreamInfo>,
+}
+
+impl StripeInfo {
+    /// Stripe-local `[start, end)` row ranges of the row groups, in
+    /// order (empty when the stripe has no group stats).
+    pub fn group_row_ranges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.groups.len());
+        let mut start = 0usize;
+        for g in &self.groups {
+            let end = start + g.rows as usize;
+            out.push((start, end));
+            start = end;
+        }
+        out
+    }
+
+    /// `true` proves no row of this stripe can match `p`: either the
+    /// stripe-level stats prune it, or — one level down — every row
+    /// group's zone map does.
+    pub fn pruned_by(&self, p: &crate::filter::RowPredicate) -> bool {
+        self.pruned_at(p, true)
+    }
+
+    /// [`StripeInfo::pruned_by`] with the row-group granularity
+    /// switchable. This is the **single** prune decision both the
+    /// Master's split enumeration / broker interest registration and
+    /// the reader's planner call — one implementation, so they cannot
+    /// drift apart (a stripe the Master records as skipped must be one
+    /// no worker plan would ever fetch).
+    pub fn pruned_at(
+        &self,
+        p: &crate::filter::RowPredicate,
+        row_groups: bool,
+    ) -> bool {
+        if p.prunes_stripe(&self.stats, self.rows) {
+            return true;
+        }
+        row_groups
+            && !self.groups.is_empty()
+            && self
+                .groups
+                .iter()
+                .all(|g| p.prunes_stripe(&g.stats, g.rows))
+    }
+
+    /// Per-row-group survival mask under `p` (`true` = must decode).
+    /// `None` when the footer carries no group stats (v2 fallback).
+    pub fn surviving_groups(
+        &self,
+        p: &crate::filter::RowPredicate,
+    ) -> Option<Vec<bool>> {
+        if self.groups.is_empty() {
+            return None;
+        }
+        Some(
+            self.groups
+                .iter()
+                .map(|g| !p.prunes_stripe(&g.stats, g.rows))
+                .collect(),
+        )
+    }
+
+    /// Stripe-local indices of the rows inside surviving groups — the
+    /// pre-seeded selection the decode paths honor so pruned groups are
+    /// never materialized.
+    pub fn keep_rows(&self, mask: &[bool]) -> Vec<u32> {
+        let mut out = Vec::new();
+        for (g, (start, end)) in self.group_row_ranges().into_iter().enumerate()
+        {
+            if mask.get(g).copied().unwrap_or(true) {
+                out.extend((start as u32)..(end as u32));
+            }
+        }
+        out
+    }
 }
 
 /// Parsed file footer.
@@ -162,10 +282,18 @@ impl FileMeta {
             .sum()
     }
 
-    pub(crate) fn encode_footer(&self) -> Vec<u8> {
+    /// Encode the footer at a specific version. `version == 2` emits the
+    /// legacy layout (no row-group stats, no per-group stream scoping) —
+    /// kept so compatibility tests can produce byte-real old files; the
+    /// writer refuses to combine it with row-group-split stripes.
+    pub(crate) fn encode_footer_versioned(&self, version: u32) -> Vec<u8> {
         use crate::util::bytes::{put_u32, put_u64, put_varint};
+        assert!(
+            (MIN_VERSION..=VERSION).contains(&version),
+            "unwritable DWRF footer version {version}"
+        );
         let mut out = Vec::new();
-        put_u32(&mut out, VERSION);
+        put_u32(&mut out, version);
         out.push(match self.encoding {
             Encoding::Map => 0,
             Encoding::Flattened => 1,
@@ -174,18 +302,36 @@ impl FileMeta {
         out.push(self.encrypted as u8);
         put_u64(&mut out, self.total_rows);
         put_varint(&mut out, self.stripes.len() as u64);
+        let put_stats = |out: &mut Vec<u8>, st: &StripeStats| {
+            put_u64(out, st.min_timestamp);
+            put_u64(out, st.max_timestamp);
+            put_u32(out, st.label_positives);
+            put_u64(out, st.presence[0]);
+            put_u64(out, st.presence[1]);
+        };
         for s in &self.stripes {
             put_u64(&mut out, s.row_start);
             put_u32(&mut out, s.rows);
-            put_u64(&mut out, s.stats.min_timestamp);
-            put_u64(&mut out, s.stats.max_timestamp);
-            put_u32(&mut out, s.stats.label_positives);
-            put_u64(&mut out, s.stats.presence[0]);
-            put_u64(&mut out, s.stats.presence[1]);
+            put_stats(&mut out, &s.stats);
+            if version >= 3 {
+                put_varint(&mut out, s.groups.len() as u64);
+                for g in &s.groups {
+                    put_u32(&mut out, g.rows);
+                    put_stats(&mut out, &g.stats);
+                }
+            } else {
+                assert!(
+                    s.streams.iter().all(|st| st.row_group == WHOLE_STRIPE),
+                    "v2 footers cannot index row-group-scoped streams"
+                );
+            }
             put_varint(&mut out, s.streams.len() as u64);
             for st in &s.streams {
                 out.push(st.kind as u8);
                 put_u32(&mut out, st.feature);
+                if version >= 3 {
+                    put_u32(&mut out, st.row_group);
+                }
                 put_u64(&mut out, st.offset);
                 put_u64(&mut out, st.len);
                 put_u64(&mut out, st.raw_len);
@@ -200,7 +346,7 @@ impl FileMeta {
         use crate::util::bytes::ByteReader;
         let mut r = ByteReader::new(buf);
         let version = r.u32().ok_or_else(|| anyhow::anyhow!("short footer"))?;
-        if version != VERSION {
+        if !(MIN_VERSION..=VERSION).contains(&version) {
             bail!("unsupported DWRF version {version}");
         }
         let enc = r.bytes(1).ok_or_else(|| anyhow::anyhow!("enc"))?[0];
@@ -213,11 +359,8 @@ impl FileMeta {
         let encrypted = r.bytes(1).ok_or_else(|| anyhow::anyhow!("encflag"))?[0] == 1;
         let total_rows = r.u64().ok_or_else(|| anyhow::anyhow!("rows"))?;
         let n_stripes = r.varint().ok_or_else(|| anyhow::anyhow!("n_stripes"))? as usize;
-        let mut stripes = Vec::with_capacity(n_stripes);
-        for _ in 0..n_stripes {
-            let row_start = r.u64().ok_or_else(|| anyhow::anyhow!("row_start"))?;
-            let rows = r.u32().ok_or_else(|| anyhow::anyhow!("stripe rows"))?;
-            let stats = StripeStats {
+        let read_stats = |r: &mut ByteReader<'_>| -> Result<StripeStats> {
+            Ok(StripeStats {
                 min_timestamp: r.u64().ok_or_else(|| anyhow::anyhow!("min_ts"))?,
                 max_timestamp: r.u64().ok_or_else(|| anyhow::anyhow!("max_ts"))?,
                 label_positives: r
@@ -227,23 +370,90 @@ impl FileMeta {
                     r.u64().ok_or_else(|| anyhow::anyhow!("presence0"))?,
                     r.u64().ok_or_else(|| anyhow::anyhow!("presence1"))?,
                 ],
-            };
+            })
+        };
+        // Counts come straight off disk: clamp pre-allocations so a
+        // fuzzed footer can't trigger a huge reservation before the
+        // per-entry reads run out of bytes and error.
+        let cap = |n: usize| n.min(4096);
+        let mut stripes = Vec::with_capacity(cap(n_stripes));
+        for _ in 0..n_stripes {
+            let row_start = r.u64().ok_or_else(|| anyhow::anyhow!("row_start"))?;
+            let rows = r.u32().ok_or_else(|| anyhow::anyhow!("stripe rows"))?;
+            let stats = read_stats(&mut r)?;
+            let mut groups = Vec::new();
+            if version >= 3 {
+                let n_groups =
+                    r.varint().ok_or_else(|| anyhow::anyhow!("n_groups"))? as usize;
+                groups.reserve(cap(n_groups));
+                for _ in 0..n_groups {
+                    let g_rows =
+                        r.u32().ok_or_else(|| anyhow::anyhow!("group rows"))?;
+                    let g_stats = read_stats(&mut r)?;
+                    groups.push(RowGroupStats {
+                        rows: g_rows,
+                        stats: g_stats,
+                    });
+                }
+                // Zone maps must tile the stripe exactly, or a pruning
+                // mask could silently drop live rows.
+                if !groups.is_empty() {
+                    let sum: u64 = groups.iter().map(|g| g.rows as u64).sum();
+                    if sum != rows as u64 {
+                        bail!(
+                            "row groups cover {sum} rows, stripe has {rows}"
+                        );
+                    }
+                }
+            }
             let n_streams =
                 r.varint().ok_or_else(|| anyhow::anyhow!("n_streams"))? as usize;
-            let mut streams = Vec::with_capacity(n_streams);
+            let mut streams = Vec::with_capacity(cap(n_streams));
             for _ in 0..n_streams {
                 let kind = StreamKind::from_u8(
                     r.bytes(1).ok_or_else(|| anyhow::anyhow!("kind"))?[0],
                 )?;
                 let feature = r.u32().ok_or_else(|| anyhow::anyhow!("feature"))?;
+                let row_group = if version >= 3 {
+                    r.u32().ok_or_else(|| anyhow::anyhow!("row_group"))?
+                } else {
+                    WHOLE_STRIPE
+                };
                 let offset = r.u64().ok_or_else(|| anyhow::anyhow!("offset"))?;
                 let len = r.u64().ok_or_else(|| anyhow::anyhow!("len"))?;
                 let raw_len = r.u64().ok_or_else(|| anyhow::anyhow!("raw_len"))?;
                 let nonce = r.u64().ok_or_else(|| anyhow::anyhow!("nonce"))?;
                 let crc = r.u32().ok_or_else(|| anyhow::anyhow!("crc"))?;
+                // Every stream extent is footer-derived and therefore
+                // untrusted: validate against the real file length here,
+                // once, so no read path can slice out of bounds (or
+                // overflow `offset + len`) on a corrupt footer.
+                let end = offset.checked_add(len).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "stream extent overflows: offset {offset} + len {len}"
+                    )
+                })?;
+                if end > file_len {
+                    bail!(
+                        "stream extent [{offset}, {end}) exceeds file \
+                         length {file_len}"
+                    );
+                }
+                if raw_len > MAX_STREAM_RAW_LEN {
+                    bail!("stream raw_len {raw_len} exceeds sanity cap");
+                }
+                if row_group != WHOLE_STRIPE
+                    && row_group as usize >= groups.len()
+                {
+                    bail!(
+                        "stream scoped to row group {row_group} of {}",
+                        groups.len()
+                    );
+                }
                 streams.push(StreamInfo {
                     kind,
                     feature,
+                    row_group,
                     offset,
                     len,
                     raw_len,
@@ -255,6 +465,7 @@ impl FileMeta {
                 row_start,
                 rows,
                 stats,
+                groups,
                 streams,
             });
         }
@@ -265,5 +476,179 @@ impl FileMeta {
             stripes,
             file_len,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(min: u64, max: u64) -> StripeStats {
+        StripeStats {
+            min_timestamp: min,
+            max_timestamp: max,
+            label_positives: 3,
+            presence: [5, 9],
+        }
+    }
+
+    fn stream(
+        kind: StreamKind,
+        row_group: u32,
+        offset: u64,
+        len: u64,
+    ) -> StreamInfo {
+        StreamInfo {
+            kind,
+            feature: 7,
+            row_group,
+            offset,
+            len,
+            raw_len: len * 2,
+            nonce: 11,
+            crc: 22,
+        }
+    }
+
+    fn meta_with(stripes: Vec<StripeInfo>) -> FileMeta {
+        FileMeta {
+            encoding: Encoding::Flattened,
+            encrypted: true,
+            total_rows: stripes.iter().map(|s| s.rows as u64).sum(),
+            stripes,
+            file_len: 0,
+        }
+    }
+
+    fn grouped_stripe() -> StripeInfo {
+        StripeInfo {
+            row_start: 0,
+            rows: 10,
+            stats: stats(100, 199),
+            groups: vec![
+                RowGroupStats {
+                    rows: 6,
+                    stats: stats(100, 149),
+                },
+                RowGroupStats {
+                    rows: 4,
+                    stats: stats(150, 199),
+                },
+            ],
+            streams: vec![
+                stream(StreamKind::RowMeta, 0, 0, 10),
+                stream(StreamKind::RowMeta, 1, 10, 10),
+                stream(StreamKind::FlatDense, 0, 20, 30),
+                stream(StreamKind::FlatDense, 1, 50, 30),
+            ],
+        }
+    }
+
+    #[test]
+    fn footer_v3_roundtrips_groups_and_stream_scoping() {
+        let meta = meta_with(vec![grouped_stripe()]);
+        let buf = meta.encode_footer_versioned(VERSION);
+        let back = FileMeta::decode_footer(&buf, 1 << 20).unwrap();
+        assert_eq!(back.total_rows, 10);
+        let s = &back.stripes[0];
+        assert_eq!(s.groups.len(), 2);
+        assert_eq!(s.groups[0].rows, 6);
+        assert_eq!(s.groups[1].stats, stats(150, 199));
+        assert_eq!(s.group_row_ranges(), vec![(0, 6), (6, 10)]);
+        let rgs: Vec<u32> = s.streams.iter().map(|st| st.row_group).collect();
+        assert_eq!(rgs, vec![0, 1, 0, 1]);
+        assert_eq!(s.keep_rows(&[false, true]), vec![6, 7, 8, 9]);
+        assert_eq!(s.keep_rows(&[true, false]), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn footer_v2_roundtrips_without_groups_and_v3_reader_accepts() {
+        // A v2 footer (the legacy layout real old files carry) must
+        // parse under the current reader with empty group stats — the
+        // stats-less fallback that keeps pruning at stripe granularity.
+        let mut st = grouped_stripe();
+        st.groups.clear();
+        for s in &mut st.streams {
+            s.row_group = WHOLE_STRIPE;
+        }
+        let meta = meta_with(vec![st]);
+        let buf = meta.encode_footer_versioned(2);
+        let back = FileMeta::decode_footer(&buf, 1 << 20).unwrap();
+        assert!(back.stripes[0].groups.is_empty());
+        assert!(back.stripes[0]
+            .streams
+            .iter()
+            .all(|s| s.row_group == WHOLE_STRIPE));
+        // And the same logical content encodes differently but decodes
+        // identically-shaped under v3.
+        let v3 = FileMeta::decode_footer(
+            &meta.encode_footer_versioned(VERSION),
+            1 << 20,
+        )
+        .unwrap();
+        assert_eq!(v3.stripes[0].streams.len(), back.stripes[0].streams.len());
+    }
+
+    #[test]
+    fn corrupt_footer_extents_error_instead_of_panicking() {
+        // Out-of-range extent: offset + len past the file end.
+        let mut st = grouped_stripe();
+        st.streams[2] = stream(StreamKind::FlatDense, 0, 100, 100);
+        let buf = meta_with(vec![st]).encode_footer_versioned(VERSION);
+        let err = FileMeta::decode_footer(&buf, 150).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds file length"));
+
+        // Overflowing extent: offset + len wraps u64.
+        let mut st = grouped_stripe();
+        st.streams[3] = stream(StreamKind::FlatDense, 1, u64::MAX - 4, 16);
+        let buf = meta_with(vec![st]).encode_footer_versioned(VERSION);
+        let err = FileMeta::decode_footer(&buf, 1 << 20).unwrap_err();
+        assert!(format!("{err:#}").contains("overflows"));
+
+        // Row groups that don't tile the stripe.
+        let mut st = grouped_stripe();
+        st.groups[1].rows = 5; // 6 + 5 != 10
+        let buf = meta_with(vec![st]).encode_footer_versioned(VERSION);
+        assert!(FileMeta::decode_footer(&buf, 1 << 20).is_err());
+
+        // A stream scoped to a group that doesn't exist.
+        let mut st = grouped_stripe();
+        st.streams[3].row_group = 9;
+        let buf = meta_with(vec![st]).encode_footer_versioned(VERSION);
+        assert!(FileMeta::decode_footer(&buf, 1 << 20).is_err());
+
+        // Truncations error at every cut point.
+        let buf = meta_with(vec![grouped_stripe()])
+            .encode_footer_versioned(VERSION);
+        for cut in [0, 1, 4, buf.len() / 2, buf.len() - 1] {
+            assert!(
+                FileMeta::decode_footer(&buf[..cut], 1 << 20).is_err(),
+                "cut at {cut} must error"
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_group_stats_prune_and_helpers_agree() {
+        use crate::filter::RowPredicate;
+        let mut st = grouped_stripe();
+        // Second group's stats degenerate (min > max): treated as "no
+        // rows" — pruned under any predicate.
+        st.groups[1].stats = StripeStats::default();
+        let keep_all = RowPredicate::SampleRate { rate: 1.0, seed: 0 };
+        assert!(!st.pruned_by(&keep_all), "first group still live");
+        assert_eq!(
+            st.surviving_groups(&keep_all),
+            Some(vec![true, false]),
+            "degenerate group masked out"
+        );
+        // Both groups degenerate ⇒ the stripe itself is provably dead
+        // even though its stripe-level stats look alive.
+        st.groups[0].stats = StripeStats::default();
+        assert!(st.pruned_by(&keep_all));
+        // v2 fallback: no groups ⇒ no mask, stripe-level only.
+        st.groups.clear();
+        assert!(st.surviving_groups(&keep_all).is_none());
+        assert!(!st.pruned_by(&keep_all));
     }
 }

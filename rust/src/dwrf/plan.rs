@@ -33,6 +33,13 @@ pub struct StripePlan {
     /// Indices into `StripeInfo::streams` that the projection needs.
     pub wanted_streams: Vec<usize>,
     pub ios: Vec<IoRange>,
+    /// Pre-seeded row-group survival mask (`true` = group must decode),
+    /// present only when the footer carries row-group zone maps and the
+    /// predicate proved at least one group row-free. The decode paths
+    /// honor it: pruned groups are never materialized into batch rows,
+    /// and — where the stream layout is row-group-split — their byte
+    /// ranges were already excluded from `ios`.
+    pub group_mask: Option<Vec<bool>>,
 }
 
 /// Plan for a whole file.
@@ -49,6 +56,16 @@ pub struct ReadPlan {
     /// Wanted-stream bytes the projection would have fetched from the
     /// skipped stripes (the pushdown's saved I/O volume).
     pub skipped_bytes: u64,
+    /// Row groups pruned inside surviving stripes (sub-stripe zone-map
+    /// hits; fully-pruned stripes count under `skipped_stripes` instead).
+    pub pruned_groups: u64,
+    /// Rows inside those pruned groups — rows that will never be
+    /// decoded or materialized.
+    pub pruned_group_rows: u64,
+    /// Stream bytes the pruned groups' row-group-scoped streams would
+    /// have cost (zero when the layout is whole-stripe and pruning can
+    /// only save decode, not I/O).
+    pub pruned_group_bytes: u64,
 }
 
 impl ReadPlan {

@@ -7,7 +7,7 @@ use super::stream::{
     decode_dedup_index, decode_flat_dense, decode_flat_sparse,
     decode_map_dense, decode_map_sparse, decode_row_meta, StreamKind,
 };
-use super::{Encoding, FileMeta};
+use super::{Encoding, FileMeta, WHOLE_STRIPE};
 use crate::data::{ColumnarBatch, DenseColumn, Sample, SparseColumn};
 use crate::filter::RowPredicate;
 use crate::schema::FeatureId;
@@ -194,12 +194,17 @@ impl DwrfReader {
         Ok((n as u64 - total, flen))
     }
 
-    /// I/O ranges a remote reader needs to bootstrap: the trailer, then the
-    /// footer (two small reads at file tail; the paper's readers likewise
-    /// fetch per-feature metadata before data).
+    /// The bootstrap tail read a remote reader starts from: one I/O
+    /// covering the trailer plus a generous footer estimate (the
+    /// paper's readers likewise fetch per-feature metadata before
+    /// data). **Contract: the footer may be larger than this probe** —
+    /// v3 footers grow with stripes × row groups — so every caller must
+    /// re-read with a bigger tail when the trailer's `footer_len` says
+    /// the probe fell short. [`crate::dpp::Master::fetch_meta`] (which
+    /// the broker's footer cache and the worker path go through) is the
+    /// canonical loop: it starts from this probe and doubles until the
+    /// footer fits.
     pub fn footer_ios(file_len: u64) -> IoRange {
-        // One tail read covering trailer + a generous footer estimate; the
-        // caller re-reads if the footer is larger.
         let len = file_len.min(256 * 1024);
         IoRange {
             offset: file_len - len,
@@ -255,7 +260,11 @@ impl DwrfReader {
     /// extent is considered, each stripe's footer [`super::StripeStats`]
     /// are tested against the predicate; provably-empty stripes produce
     /// **no** I/O and are recorded in [`ReadPlan::skipped_stripes`] with
-    /// their forgone bytes in [`ReadPlan::skipped_bytes`].
+    /// their forgone bytes in [`ReadPlan::skipped_bytes`]. Surviving
+    /// stripes are then pruned one level down against their row-group
+    /// zone maps (footer v3): the plan carries the per-group survival
+    /// mask, and streams scoped to pruned groups are dropped from the
+    /// I/O set outright.
     pub fn plan_stripes_filtered(
         &self,
         projection: &Projection,
@@ -263,6 +272,28 @@ impl DwrfReader {
         start: usize,
         count: usize,
         predicate: Option<&RowPredicate>,
+    ) -> ReadPlan {
+        self.plan_stripes_granular(
+            projection,
+            coalesce_window,
+            start,
+            count,
+            predicate,
+            true,
+        )
+    }
+
+    /// [`DwrfReader::plan_stripes_filtered`] with row-group pruning
+    /// switchable (`row_groups = false` limits pushdown to stripe
+    /// granularity — the pre-zone-map behavior, kept for ablation).
+    pub fn plan_stripes_granular(
+        &self,
+        projection: &Projection,
+        coalesce_window: Option<u64>,
+        start: usize,
+        count: usize,
+        predicate: Option<&RowPredicate>,
+        row_groups: bool,
     ) -> ReadPlan {
         let mut plan = ReadPlan::default();
         let end = (start + count).min(self.meta.stripes.len());
@@ -274,9 +305,20 @@ impl DwrfReader {
             .take(end)
             .skip(start)
         {
-            let pruned = predicate
-                .is_some_and(|p| p.prunes_stripe(&stripe.stats, stripe.rows));
+            let pruned =
+                predicate.is_some_and(|p| stripe.pruned_at(p, row_groups));
+            // Sub-stripe zone maps: survival mask per row group, kept
+            // only when it actually prunes something (an all-true mask
+            // plans and decodes exactly like no mask).
+            let mask: Option<Vec<bool>> = if pruned || !row_groups {
+                None
+            } else {
+                predicate
+                    .and_then(|p| stripe.surviving_groups(p))
+                    .filter(|m| m.iter().any(|&keep| !keep))
+            };
             let mut wanted = Vec::new();
+            let mut pruned_group_bytes = 0u64;
             for (i, st) in stripe.streams.iter().enumerate() {
                 let take = match st.kind {
                     StreamKind::RowMeta
@@ -287,9 +329,24 @@ impl DwrfReader {
                         projection.contains(FeatureId(st.feature))
                     }
                 };
-                if take {
-                    wanted.push(i);
+                if !take {
+                    continue;
                 }
+                // A stream scoped to a pruned row group is never
+                // fetched — this is where the I/O ranges shrink below
+                // stripe granularity.
+                if let Some(m) = &mask {
+                    if st.row_group != WHOLE_STRIPE
+                        && !m
+                            .get(st.row_group as usize)
+                            .copied()
+                            .unwrap_or(true)
+                    {
+                        pruned_group_bytes += st.len;
+                        continue;
+                    }
+                }
+                wanted.push(i);
             }
             let extents: Vec<IoRange> = wanted
                 .iter()
@@ -307,6 +364,18 @@ impl DwrfReader {
                 plan.skipped_bytes += wanted_bytes;
                 continue;
             }
+            if let Some(m) = &mask {
+                for (g, &keep) in m.iter().enumerate() {
+                    if !keep {
+                        plan.pruned_groups += 1;
+                        plan.pruned_group_rows += stripe
+                            .groups
+                            .get(g)
+                            .map_or(0, |rg| rg.rows as u64);
+                    }
+                }
+                plan.pruned_group_bytes += pruned_group_bytes;
+            }
             plan.useful_bytes += wanted_bytes;
             let ios = coalesce(extents, coalesce_window);
             plan.read_bytes += ios.iter().map(|e| e.len).sum::<u64>();
@@ -314,6 +383,7 @@ impl DwrfReader {
                 stripe: si,
                 wanted_streams: wanted,
                 ios,
+                group_mask: mask,
             });
         }
         plan
@@ -360,12 +430,30 @@ impl DwrfReader {
         projection: &Projection,
         mode: DecodeMode,
     ) -> Result<Vec<Sample>> {
+        self.decode_stripe_rows_masked(stripe, bufs, projection, mode, None)
+    }
+
+    /// [`DwrfReader::decode_stripe_rows`] honoring a row-group survival
+    /// mask (from [`StripePlan::group_mask`]): rows of pruned groups are
+    /// never materialized. Sound by construction — the zone maps prove
+    /// those rows cannot match the predicate that produced the mask.
+    pub fn decode_stripe_rows_masked(
+        &self,
+        stripe: usize,
+        bufs: &IoBuffers,
+        projection: &Projection,
+        mode: DecodeMode,
+        mask: Option<&[bool]>,
+    ) -> Result<Vec<Sample>> {
         match self.meta.encoding {
-            Encoding::Map => self.decode_map_stripe(stripe, bufs, projection),
+            Encoding::Map => {
+                self.decode_map_stripe(stripe, bufs, projection, mask)
+            }
             Encoding::Flattened | Encoding::Dedup => {
                 // Decode columnar then materialize rows (format conversion).
-                let batch =
-                    self.decode_stripe_columnar(stripe, bufs, projection, mode)?;
+                let batch = self.decode_stripe_columnar_masked(
+                    stripe, bufs, projection, mode, mask,
+                )?;
                 Ok(batch.to_samples())
             }
         }
@@ -376,6 +464,7 @@ impl DwrfReader {
         stripe: usize,
         bufs: &IoBuffers,
         projection: &Projection,
+        mask: Option<&[bool]>,
     ) -> Result<Vec<Sample>> {
         let info = &self.meta.stripes[stripe];
         let mut meta_raw = None;
@@ -404,8 +493,26 @@ impl DwrfReader {
         if dense.len() != rows || sparse.len() != rows {
             bail!("stripe row-count mismatch");
         }
+        // Map streams are variable-width row blobs: every row must be
+        // *decoded* to find the next, but rows of pruned groups are
+        // dropped here — before any Sample is materialized.
+        let live = mask.map(|m| {
+            let kept = info.keep_rows(m);
+            let mut live = vec![false; rows];
+            for &r in &kept {
+                if let Some(slot) = live.get_mut(r as usize) {
+                    *slot = true;
+                }
+            }
+            live
+        });
         let mut out = Vec::with_capacity(rows);
         for i in 0..rows {
+            if let Some(live) = &live {
+                if !live.get(i).copied().unwrap_or(true) {
+                    continue;
+                }
+            }
             let mut s = Sample {
                 dense: dense[i].clone(),
                 sparse: sparse[i].clone(),
@@ -427,11 +534,29 @@ impl DwrfReader {
         projection: &Projection,
         mode: DecodeMode,
     ) -> Result<ColumnarBatch> {
+        self.decode_stripe_columnar_masked(stripe, bufs, projection, mode, None)
+    }
+
+    /// [`DwrfReader::decode_stripe_columnar`] honoring a row-group
+    /// survival mask: pruned groups are never materialized into batch
+    /// rows. On row-group-split flattened stripes their streams aren't
+    /// even touched (the plan excluded those byte ranges); on
+    /// whole-stripe layouts (Map, Dedup, v2 files) the streams decode
+    /// but the pruned rows are dropped before materialization.
+    pub fn decode_stripe_columnar_masked(
+        &self,
+        stripe: usize,
+        bufs: &IoBuffers,
+        projection: &Projection,
+        mode: DecodeMode,
+        mask: Option<&[bool]>,
+    ) -> Result<ColumnarBatch> {
         match self.meta.encoding {
             Encoding::Map => {
                 // Map files can only produce rows; converting to columnar is
                 // an extra format change (costed honestly).
-                let rows = self.decode_map_stripe(stripe, bufs, projection)?;
+                let rows =
+                    self.decode_map_stripe(stripe, bufs, projection, mask)?;
                 let mut dense_ids: Vec<FeatureId> = rows
                     .iter()
                     .flat_map(|s| s.dense.iter().map(|(f, _)| *f))
@@ -448,6 +573,11 @@ impl DwrfReader {
             }
             Encoding::Flattened => {
                 let info = &self.meta.stripes[stripe];
+                if info.streams.iter().any(|s| s.row_group != WHOLE_STRIPE) {
+                    return self.decode_flattened_grouped(
+                        stripe, bufs, projection, mode, mask,
+                    );
+                }
                 let mut batch = ColumnarBatch {
                     num_rows: info.rows as usize,
                     ..Default::default()
@@ -481,24 +611,141 @@ impl DwrfReader {
                         _ => bail!("map stream in flattened stripe"),
                     }
                 }
-                let c = batch.clone();
-                let _ = c; // keep clippy quiet about unused in non-test
-                Ok(batch)
+                // Whole-stripe layout + mask (possible only on files
+                // whose stripes weren't group-split): drop pruned rows
+                // by gathering the survivors.
+                match mask {
+                    Some(m) => Ok(batch.gather(&info.keep_rows(m))),
+                    None => Ok(batch),
+                }
             }
             Encoding::Dedup => {
                 // Duplication-oblivious path: decode unique payloads +
-                // inverse, then expand to the full per-row batch.
-                let ds =
-                    self.decode_stripe_dedup(stripe, bufs, projection, mode)?;
+                // inverse (pruned-group rows dropped at the expansion
+                // index, their unreferenced payloads compacted away),
+                // then expand to the per-row batch.
+                let ds = self.decode_stripe_dedup_masked(
+                    stripe, bufs, projection, mode, mask,
+                )?;
                 Ok(ds.expand())
             }
         }
+    }
+
+    /// Decode a row-group-split flattened stripe: each surviving group's
+    /// row-meta and feature streams decode independently and splice back
+    /// into one batch in row order. Pruned groups' streams are never
+    /// read — their extents weren't fetched in the first place.
+    fn decode_flattened_grouped(
+        &self,
+        stripe: usize,
+        bufs: &IoBuffers,
+        projection: &Projection,
+        mode: DecodeMode,
+        mask: Option<&[bool]>,
+    ) -> Result<ColumnarBatch> {
+        let info = &self.meta.stripes[stripe];
+        let n_groups = info.groups.len();
+        if n_groups == 0 {
+            bail!("group-scoped streams but no row-group stats");
+        }
+        let mut out: Option<ColumnarBatch> = None;
+        for g in 0..n_groups {
+            if let Some(m) = mask {
+                if !m.get(g).copied().unwrap_or(true) {
+                    continue;
+                }
+            }
+            let mut batch = ColumnarBatch {
+                num_rows: info.groups[g].rows as usize,
+                ..Default::default()
+            };
+            for (i, st) in info.streams.iter().enumerate() {
+                if st.row_group != g as u32 {
+                    continue;
+                }
+                match st.kind {
+                    StreamKind::RowMeta => {
+                        let raw = self.stream_bytes(stripe, i, bufs)?;
+                        let (labels, ts) = decode_row_meta(&raw)?;
+                        batch.labels = labels;
+                        batch.timestamps = ts;
+                    }
+                    StreamKind::FlatDense => {
+                        let fid = FeatureId(st.feature);
+                        if projection.contains(fid) {
+                            let raw = self.stream_bytes(stripe, i, bufs)?;
+                            batch
+                                .dense
+                                .push(decode_flat_dense(&raw, fid, mode.fast)?);
+                        }
+                    }
+                    StreamKind::FlatSparse => {
+                        let fid = FeatureId(st.feature);
+                        if projection.contains(fid) {
+                            let raw = self.stream_bytes(stripe, i, bufs)?;
+                            batch.sparse.push(decode_flat_sparse(
+                                &raw, fid, mode.fast,
+                            )?);
+                        }
+                    }
+                    _ => bail!("unexpected stream kind in grouped stripe"),
+                }
+            }
+            if batch.labels.len() != batch.num_rows {
+                bail!(
+                    "row group {g} meta covers {} rows, expected {}",
+                    batch.labels.len(),
+                    batch.num_rows
+                );
+            }
+            match &mut out {
+                None => out = Some(batch),
+                Some(acc) => acc.append_rows(&batch)?,
+            }
+        }
+        Ok(out.unwrap_or_default())
     }
 
     /// Decode a Dedup-encoded stripe *without* expanding duplicates: the
     /// dedup-aware DPP worker path (§RecD) — preprocess `unique` once,
     /// ship the inverse.
     pub fn decode_stripe_dedup(
+        &self,
+        stripe: usize,
+        bufs: &IoBuffers,
+        projection: &Projection,
+        mode: DecodeMode,
+    ) -> Result<DedupStripe> {
+        self.decode_stripe_dedup_masked(stripe, bufs, projection, mode, None)
+    }
+
+    /// [`DwrfReader::decode_stripe_dedup`] honoring a row-group survival
+    /// mask. Dedup streams stay stripe-wide (feature streams cover
+    /// stripe-level *unique* payloads, which don't tile into row runs),
+    /// so pruning applies at the unique-row expansion step:
+    /// pruned-group rows are dropped from the inverse index and the
+    /// unique payloads they alone referenced are compacted away — the
+    /// transform stage never touches them.
+    pub fn decode_stripe_dedup_masked(
+        &self,
+        stripe: usize,
+        bufs: &IoBuffers,
+        projection: &Projection,
+        mode: DecodeMode,
+        mask: Option<&[bool]>,
+    ) -> Result<DedupStripe> {
+        let ds = self.decode_stripe_dedup_inner(stripe, bufs, projection, mode)?;
+        match mask {
+            Some(m) => {
+                let keep = self.meta.stripes[stripe].keep_rows(m);
+                Ok(ds.filter_rows(&keep))
+            }
+            None => Ok(ds),
+        }
+    }
+
+    fn decode_stripe_dedup_inner(
         &self,
         stripe: usize,
         bufs: &IoBuffers,

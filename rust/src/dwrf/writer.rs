@@ -13,7 +13,10 @@ use super::stream::{
     encode_dedup_index, encode_flat_dense, encode_flat_sparse,
     encode_map_dense, encode_map_sparse, encode_row_meta, StreamKind,
 };
-use super::{FileMeta, StreamInfo, StripeInfo, StripeStats};
+use super::{
+    FileMeta, RowGroupStats, StreamInfo, StripeInfo, StripeStats, VERSION,
+    WHOLE_STRIPE,
+};
 use crate::data::{ColumnarBatch, Sample};
 use crate::dedup::DedupIndex;
 use crate::schema::FeatureId;
@@ -46,6 +49,19 @@ pub struct WriterOptions {
     /// within `stripe_rows * dedup_window_stripes` rows of each other are
     /// guaranteed to land in the same stripe (Dedup encoding only).
     pub dedup_window_stripes: usize,
+    /// Rows per zone-map row group (footer v3): every stripe is tiled
+    /// into `rows_per_group`-sized runs, each with its own min/max
+    /// timestamp / label / presence stats for sub-stripe pruning.
+    /// Flattened stripes wider than one group additionally split their
+    /// row-meta and per-feature streams at group boundaries, so a pruned
+    /// group's bytes are never fetched. Values `>= stripe_rows` degrade
+    /// gracefully to one group per stripe (whole-stripe streams).
+    pub rows_per_group: usize,
+    /// Footer version to emit ([`VERSION`] normally). `2` writes the
+    /// legacy pre-row-group layout — used by compatibility tests to
+    /// produce byte-real old files that current readers must still
+    /// parse.
+    pub footer_version: u32,
 }
 
 impl Default for WriterOptions {
@@ -57,6 +73,8 @@ impl Default for WriterOptions {
             encrypt: true,
             feature_order: None,
             dedup_window_stripes: 8,
+            rows_per_group: 1024,
+            footer_version: VERSION,
         }
     }
 }
@@ -124,10 +142,13 @@ impl DwrfWriter {
     }
 
     /// Compress + encrypt + append one stream; record its index entry.
+    /// `row_group` scopes the stream to one zone-map group
+    /// ([`WHOLE_STRIPE`] = covers every row of the stripe).
     fn put_stream(
         &mut self,
         kind: StreamKind,
         feature: u32,
+        row_group: u32,
         raw: Vec<u8>,
         out: &mut Vec<StreamInfo>,
     ) {
@@ -142,6 +163,7 @@ impl DwrfWriter {
         out.push(StreamInfo {
             kind,
             feature,
+            row_group,
             offset: self.buf.len() as u64,
             len: data.len() as u64,
             raw_len,
@@ -210,11 +232,17 @@ impl DwrfWriter {
         }
     }
 
-    /// Emit the per-feature streams of a columnar batch in the configured
-    /// write order (shared by the Flattened and Dedup encodings).
+    /// Emit the per-feature streams of one or more columnar batches in
+    /// the configured write order (shared by the Flattened and Dedup
+    /// encodings). `batches` is `[(row_group, batch)]`: a single
+    /// `(WHOLE_STRIPE, batch)` entry for whole-stripe layout, or one
+    /// entry per zone-map group for row-group-split stripes. The layout
+    /// is feature-major (a feature's group chunks are adjacent on disk),
+    /// so feature reordering keeps its locality win and surviving
+    /// groups of one feature coalesce into contiguous reads.
     fn put_feature_streams(
         &mut self,
-        batch: &ColumnarBatch,
+        batches: &[(u32, ColumnarBatch)],
         streams: &mut Vec<StreamInfo>,
     ) {
         // Order the feature streams. Default: interleaved arrival
@@ -231,25 +259,35 @@ impl DwrfWriter {
         };
         // Index columns by feature id (a linear `find` per ordered
         // feature is O(F^2) — ~10% of write CPU at 1k features).
-        let dense_idx: std::collections::HashMap<_, _> =
-            batch.dense.iter().map(|c| (c.id, c)).collect();
-        let sparse_idx: std::collections::HashMap<_, _> =
-            batch.sparse.iter().map(|c| (c.id, c)).collect();
+        let idx: Vec<_> = batches
+            .iter()
+            .map(|(g, batch)| {
+                let dense: std::collections::HashMap<_, _> =
+                    batch.dense.iter().map(|c| (c.id, c)).collect();
+                let sparse: std::collections::HashMap<_, _> =
+                    batch.sparse.iter().map(|c| (c.id, c)).collect();
+                (*g, dense, sparse)
+            })
+            .collect();
         for fid in order {
-            if let Some(col) = dense_idx.get(&fid) {
-                self.put_stream(
-                    StreamKind::FlatDense,
-                    fid.0,
-                    encode_flat_dense(col),
-                    streams,
-                );
-            } else if let Some(col) = sparse_idx.get(&fid) {
-                self.put_stream(
-                    StreamKind::FlatSparse,
-                    fid.0,
-                    encode_flat_sparse(col),
-                    streams,
-                );
+            for (g, dense_idx, sparse_idx) in &idx {
+                if let Some(col) = dense_idx.get(&fid) {
+                    self.put_stream(
+                        StreamKind::FlatDense,
+                        fid.0,
+                        *g,
+                        encode_flat_dense(col),
+                        streams,
+                    );
+                } else if let Some(col) = sparse_idx.get(&fid) {
+                    self.put_stream(
+                        StreamKind::FlatSparse,
+                        fid.0,
+                        *g,
+                        encode_flat_sparse(col),
+                        streams,
+                    );
+                }
             }
         }
     }
@@ -267,47 +305,110 @@ impl DwrfWriter {
         // carry the same feature-presence set, so row-level stats stay
         // conservative for both read paths).
         let stats = StripeStats::from_samples(samples);
+        // Per-row-group zone maps (footer v3): fixed-size row runs with
+        // their own stats, same conservative shape one level down.
+        let rpg = self.opts.rows_per_group.max(1);
+        let groups: Vec<RowGroupStats> = if self.opts.footer_version >= 3 {
+            samples
+                .chunks(rpg)
+                .map(|c| RowGroupStats {
+                    rows: c.len() as u32,
+                    stats: StripeStats::from_samples(c),
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        // Row-group stream splitting: only the Flattened encoding has a
+        // layout where fixed row runs map to independent streams (Map
+        // rows are variable-width blobs; Dedup feature streams cover
+        // stripe-level *unique* payloads, not row runs) — those
+        // encodings keep whole-stripe streams and prune at decode via
+        // the group mask instead.
+        let split_groups =
+            self.opts.encoding == Encoding::Flattened && groups.len() > 1;
 
-        // Row meta first (labels + timestamps) — always read. Under the
-        // Dedup encoding this stays per-*row*: duplicate payloads keep
-        // their own outcomes and event times (losslessness).
-        let labels: Vec<f32> = samples.iter().map(|s| s.label).collect();
-        let ts: Vec<u64> = samples.iter().map(|s| s.timestamp).collect();
-        self.put_stream(
-            StreamKind::RowMeta,
-            u32::MAX,
-            encode_row_meta(&labels, &ts),
-            &mut streams,
-        );
+        // Row meta (labels + timestamps) — always read. Under the Dedup
+        // encoding this stays per-*row*: duplicate payloads keep their
+        // own outcomes and event times (losslessness). Split per row
+        // group when the stripe is, so pruned groups skip their row-meta
+        // bytes too.
+        if split_groups {
+            for (g, chunk) in samples.chunks(rpg).enumerate() {
+                let labels: Vec<f32> = chunk.iter().map(|s| s.label).collect();
+                let ts: Vec<u64> =
+                    chunk.iter().map(|s| s.timestamp).collect();
+                self.put_stream(
+                    StreamKind::RowMeta,
+                    u32::MAX,
+                    g as u32,
+                    encode_row_meta(&labels, &ts),
+                    &mut streams,
+                );
+            }
+        } else {
+            let labels: Vec<f32> = samples.iter().map(|s| s.label).collect();
+            let ts: Vec<u64> = samples.iter().map(|s| s.timestamp).collect();
+            self.put_stream(
+                StreamKind::RowMeta,
+                u32::MAX,
+                WHOLE_STRIPE,
+                encode_row_meta(&labels, &ts),
+                &mut streams,
+            );
+        }
 
         match self.opts.encoding {
             Encoding::Map => {
                 self.put_stream(
                     StreamKind::MapDense,
                     u32::MAX,
+                    WHOLE_STRIPE,
                     encode_map_dense(samples),
                     &mut streams,
                 );
                 self.put_stream(
                     StreamKind::MapSparse,
                     u32::MAX,
+                    WHOLE_STRIPE,
                     encode_map_sparse(samples),
                     &mut streams,
                 );
             }
             Encoding::Flattened => {
-                let batch = ColumnarBatch::from_samples(
-                    samples,
-                    &self.dense_ids,
-                    &self.sparse_ids,
-                );
-                self.put_feature_streams(&batch, &mut streams);
+                let batches: Vec<(u32, ColumnarBatch)> = if split_groups {
+                    samples
+                        .chunks(rpg)
+                        .enumerate()
+                        .map(|(g, chunk)| {
+                            (
+                                g as u32,
+                                ColumnarBatch::from_samples(
+                                    chunk,
+                                    &self.dense_ids,
+                                    &self.sparse_ids,
+                                ),
+                            )
+                        })
+                        .collect()
+                } else {
+                    vec![(
+                        WHOLE_STRIPE,
+                        ColumnarBatch::from_samples(
+                            samples,
+                            &self.dense_ids,
+                            &self.sparse_ids,
+                        ),
+                    )]
+                };
+                self.put_feature_streams(&batches, &mut streams);
             }
             Encoding::Dedup => {
                 let idx = dedup.expect("dedup stripe requires its index");
                 self.put_stream(
                     StreamKind::DedupIndex,
                     u32::MAX,
+                    WHOLE_STRIPE,
                     encode_dedup_index(&idx.inverse, idx.unique_count()),
                     &mut streams,
                 );
@@ -322,7 +423,10 @@ impl DwrfWriter {
                     &self.dense_ids,
                     &self.sparse_ids,
                 );
-                self.put_feature_streams(&batch, &mut streams);
+                self.put_feature_streams(
+                    &[(WHOLE_STRIPE, batch)],
+                    &mut streams,
+                );
             }
         }
 
@@ -330,6 +434,7 @@ impl DwrfWriter {
             row_start: self.rows_written,
             rows: rows as u32,
             stats,
+            groups,
             streams,
         });
         self.rows_written += rows as u64;
@@ -345,7 +450,7 @@ impl DwrfWriter {
             stripes: std::mem::take(&mut self.stripes),
             file_len: 0, // filled by reader from actual length
         };
-        let footer = meta.encode_footer();
+        let footer = meta.encode_footer_versioned(self.opts.footer_version);
         let mut out = std::mem::take(&mut self.buf);
         let flen = footer.len() as u64;
         out.extend_from_slice(&footer);

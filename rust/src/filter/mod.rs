@@ -130,9 +130,16 @@ impl RowPredicate {
         }
     }
 
-    /// Stats-aware estimate for one stripe (the InTune-style signal):
-    /// refines the priors with the stripe's footer statistics.
+    /// Stats-aware estimate for one stripe or row group (the
+    /// InTune-style signal): refines the priors with the footer
+    /// statistics. Degenerate stats (`min_timestamp > max_timestamp` —
+    /// the `Default` sentinel a rows-free stripe serializes) mean "no
+    /// rows": zero selectivity contribution, handled explicitly rather
+    /// than through accidental comparison behavior.
     pub fn stripe_selectivity(&self, stats: &StripeStats, rows: u32) -> f64 {
+        if stats.is_empty_domain() || rows == 0 {
+            return 0.0;
+        }
         match self {
             RowPredicate::TimestampRange { min, max } => {
                 if *min > *max
@@ -193,10 +200,19 @@ impl RowPredicate {
         }
     }
 
-    /// `true` proves that **no** row of a stripe with these statistics
-    /// can match — the stripe (and all its I/Os) is skippable. One-sided:
-    /// `false` only means "must decode to decide".
+    /// `true` proves that **no** row of a stripe (or row group) with
+    /// these statistics can match — the unit (and all its I/Os) is
+    /// skippable. One-sided: `false` only means "must decode to decide".
+    ///
+    /// Degenerate stats (`min_timestamp > max_timestamp`) can only come
+    /// from a stats record that observed zero rows — an empty or
+    /// fully-deduped stripe serializing `StripeStats::default()` — so
+    /// they prune under *every* predicate, explicitly, instead of
+    /// depending on how each arm's comparisons happen to fall out.
     pub fn prunes_stripe(&self, stats: &StripeStats, rows: u32) -> bool {
+        if stats.is_empty_domain() {
+            return true;
+        }
         match self {
             RowPredicate::TimestampRange { min, max } => {
                 *min > *max
@@ -525,6 +541,74 @@ mod tests {
             RowPredicate::SampleRate { rate: 0.5, seed: 1 },
         ]);
         assert!((conj.selectivity() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_stats_prune_as_no_rows_under_every_predicate() {
+        // An empty / fully-deduped stripe serializes
+        // `StripeStats::default()`: min_timestamp = u64::MAX >
+        // max_timestamp = 0. That must read as "no rows" — pruned by
+        // every predicate, zero selectivity contribution — not as
+        // whatever each arm's comparisons happen to do.
+        let empty = StripeStats::default();
+        assert!(empty.is_empty_domain());
+        let preds = [
+            RowPredicate::TimestampRange { min: 0, max: u64::MAX },
+            RowPredicate::NegativeDownsample { rate: 1.0, seed: 0 },
+            RowPredicate::SampleRate { rate: 1.0, seed: 0 },
+            RowPredicate::FeaturePresent {
+                feature: FeatureId(0),
+            },
+            RowPredicate::And(vec![RowPredicate::SampleRate {
+                rate: 1.0,
+                seed: 0,
+            }]),
+        ];
+        for p in &preds {
+            assert!(
+                p.prunes_stripe(&empty, 0),
+                "{p:?} must prune degenerate stats"
+            );
+            assert_eq!(
+                p.stripe_selectivity(&empty, 0),
+                0.0,
+                "{p:?} must contribute zero selectivity"
+            );
+        }
+        // Even with a presence bit set (a half-written record), min > max
+        // still proves zero rows.
+        let mut weird = StripeStats::default();
+        weird.mark_present(3);
+        assert!(RowPredicate::FeaturePresent {
+            feature: FeatureId(3)
+        }
+        .prunes_stripe(&weird, 0));
+        // And a non-degenerate stripe is unaffected.
+        let live = StripeStats {
+            min_timestamp: 10,
+            max_timestamp: 20,
+            label_positives: 1,
+            presence: [0; 2],
+        };
+        assert!(!RowPredicate::SampleRate { rate: 1.0, seed: 0 }
+            .prunes_stripe(&live, 8));
+    }
+
+    #[test]
+    fn degenerate_stats_contribute_zero_to_dataset_selectivity() {
+        let samples: Vec<Sample> =
+            (0..64).map(|i| sample(1000 + i, 0.0, true)).collect();
+        let live = StripeStats::from_samples(&samples);
+        let empty = StripeStats::default();
+        let p = RowPredicate::TimestampRange { min: 0, max: u64::MAX };
+        // The empty stripe advertises rows (a corrupt footer could) but
+        // its degenerate stats still contribute nothing: the estimate is
+        // diluted by the claimed rows, never inflated by them.
+        let est = p.dataset_selectivity([(&live, 64u32), (&empty, 64u32)]);
+        assert!((est - 0.5).abs() < 1e-9, "{est}");
+        // With zero claimed rows it's invisible.
+        let est2 = p.dataset_selectivity([(&live, 64u32), (&empty, 0u32)]);
+        assert!((est2 - 1.0).abs() < 1e-9, "{est2}");
     }
 
     #[test]

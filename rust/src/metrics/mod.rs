@@ -101,6 +101,15 @@ pub struct EtlMetrics {
     pub skipped_stripes: Counter,
     /// Wanted-stream bytes never fetched thanks to stripe pruning.
     pub skipped_bytes: Counter,
+    /// Row groups pruned *inside* surviving stripes by footer v3 zone
+    /// maps (sub-stripe granularity; fully-pruned stripes count under
+    /// `skipped_stripes`).
+    pub pruned_groups: Counter,
+    /// Rows in those pruned groups — never decoded into batch rows.
+    pub pruned_group_rows: Counter,
+    /// Stream bytes pruned groups' group-scoped streams would have
+    /// fetched (row-group-split layouts only).
+    pub pruned_group_bytes: Counter,
     /// Rows drained by trainer-side clients (bumped by the session loop,
     /// not by workers) — the demand half of the autoscaler's throughput
     /// model.

@@ -665,3 +665,168 @@ fn prop_selection_compact_matches_row_filtering() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_row_group_pruning_is_sound_and_lossless() {
+    // For random datasets and predicates, on both the Flattened and
+    // Dedup encodings: the rows surviving the *group-pruned* plan +
+    // masked decode + row filter are exactly the rows surviving
+    // decode-everything-then-filter. Timestamps are made unique so the
+    // (window-permuted) dedup output has a canonical order.
+    check("row-group pruning soundness", 40, |g| {
+        let mut rows = Vec::new();
+        for s in &random_samples(g) {
+            for _ in 0..g.usize(1..3) {
+                let mut c = s.clone();
+                c.label = if g.bool() { 1.0 } else { 0.0 };
+                rows.push(c);
+            }
+        }
+        for (i, r) in rows.iter_mut().enumerate() {
+            r.timestamp = i as u64 * 40 + g.u64(0..40);
+        }
+        let span = rows.len() as u64 * 40 + 40;
+        let dense_ids: Vec<FeatureId> = (0..6).map(FeatureId).collect();
+        let sparse_ids: Vec<FeatureId> = (10..15).map(FeatureId).collect();
+        let stripe_rows = g.usize(4..24);
+        let rows_per_group = g.usize(1..8);
+        // A timestamp window scaled to the data (the generic 2^40-range
+        // generator almost always selects all-or-nothing here), plus
+        // the other kinds via conjunction sometimes.
+        let a = g.u64(0..span);
+        let b = g.u64(0..span);
+        let mut pred = dsi::filter::RowPredicate::TimestampRange {
+            min: a.min(b),
+            max: a.max(b),
+        };
+        if g.bool() {
+            pred = dsi::filter::RowPredicate::And(vec![pred, random_predicate(g)]);
+        }
+        for encoding in [Encoding::Flattened, Encoding::Dedup] {
+            let mut w = DwrfWriter::new(
+                "prop",
+                dense_ids.clone(),
+                sparse_ids.clone(),
+                WriterOptions {
+                    encoding,
+                    stripe_rows,
+                    rows_per_group,
+                    dedup_window_stripes: 2,
+                    ..Default::default()
+                },
+            );
+            w.write_all(rows.clone());
+            let bytes = w.finish();
+            let r = DwrfReader::open_table(&bytes, "prop")
+                .map_err(|e| e.to_string())?;
+            let proj = Projection::new(
+                dense_ids.iter().chain(sparse_ids.iter()).copied(),
+            );
+            // Group-pruned path: fetch only the planned extents, honor
+            // the per-stripe mask, then row-filter.
+            let plan = r.plan_filtered(&proj, None, Some(&pred));
+            let bufs = r.fetch_local(&bytes, &plan);
+            let mut got = Vec::new();
+            for sp in &plan.stripes {
+                let decoded = r
+                    .decode_stripe_rows_masked(
+                        sp.stripe,
+                        &bufs,
+                        &proj,
+                        DecodeMode::default(),
+                        sp.group_mask.as_deref(),
+                    )
+                    .map_err(|e| e.to_string())?;
+                got.extend(
+                    decoded.into_iter().filter(|s| pred.matches_sample(s)),
+                );
+            }
+            // Baseline: decode everything, then filter.
+            let full = r.plan(&proj, None);
+            let full_bufs = r.fetch_local(&bytes, &full);
+            let mut want = Vec::new();
+            for si in 0..r.meta.stripes.len() {
+                let decoded = r
+                    .decode_stripe_rows(
+                        si,
+                        &full_bufs,
+                        &proj,
+                        DecodeMode::default(),
+                    )
+                    .map_err(|e| e.to_string())?;
+                want.extend(
+                    decoded.into_iter().filter(|s| pred.matches_sample(s)),
+                );
+            }
+            got.sort_by_key(|s| s.timestamp);
+            want.sort_by_key(|s| s.timestamp);
+            if got != want {
+                return Err(format!(
+                    "row-group pruning lost/invented rows: {} vs {} \
+                     ({encoding:?}, stripe {stripe_rows}, group \
+                     {rows_per_group})",
+                    got.len(),
+                    want.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_group_masked_plan_never_reads_more() {
+    // The group-aware plan's I/O accounting: never more bytes than the
+    // stripe-granular plan, and pruned-group rows are consistent with
+    // the mask.
+    check("group plan accounting", 60, |g| {
+        let samples = random_samples(g);
+        let dense_ids: Vec<FeatureId> = (0..6).map(FeatureId).collect();
+        let sparse_ids: Vec<FeatureId> = (10..15).map(FeatureId).collect();
+        let mut w = DwrfWriter::new(
+            "prop",
+            dense_ids.clone(),
+            sparse_ids.clone(),
+            WriterOptions {
+                encoding: Encoding::Flattened,
+                stripe_rows: g.usize(4..20),
+                rows_per_group: g.usize(1..6),
+                ..Default::default()
+            },
+        );
+        w.write_all(samples.clone());
+        let bytes = w.finish();
+        let r = DwrfReader::open_table(&bytes, "prop")
+            .map_err(|e| e.to_string())?;
+        let proj = Projection::new(
+            dense_ids.iter().chain(sparse_ids.iter()).copied(),
+        );
+        let pred = random_predicate(g);
+        let n = r.meta.stripes.len();
+        let grouped =
+            r.plan_stripes_granular(&proj, None, 0, n, Some(&pred), true);
+        let striped =
+            r.plan_stripes_granular(&proj, None, 0, n, Some(&pred), false);
+        if grouped.read_bytes > striped.read_bytes {
+            return Err(format!(
+                "grouped plan read {} > stripe-only {}",
+                grouped.read_bytes, striped.read_bytes
+            ));
+        }
+        if grouped.skipped_stripes.len() < striped.skipped_stripes.len() {
+            return Err("group granularity must prune at least as much".into());
+        }
+        for sp in &grouped.stripes {
+            if let Some(mask) = &sp.group_mask {
+                let info = &r.meta.stripes[sp.stripe];
+                if mask.len() != info.groups.len() {
+                    return Err("mask length != group count".into());
+                }
+                if mask.iter().all(|&k| k) {
+                    return Err("all-true mask should have been dropped".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}

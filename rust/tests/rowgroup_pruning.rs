@@ -1,0 +1,460 @@
+//! Row-group zone maps, end to end: sub-stripe pruning must cut decoded
+//! rows with **byte-identical** client output vs stripe-only pruning, on
+//! the private and broker read paths and on both Flattened and Dedup
+//! encodings; v2 (pre-row-group) files must keep reading via the
+//! stats-less fallback; corrupt and oversized footers must error / read
+//! correctly instead of panicking.
+
+use dsi::broker::ReadBroker;
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::datagen::{build_dataset_with, GenOptions};
+use dsi::dpp::{Master, SessionSpec, WorkerCore};
+use dsi::dwrf::{
+    DecodeMode, DwrfReader, DwrfWriter, Encoding, Projection, WriterOptions,
+};
+use dsi::filter::RowPredicate;
+use dsi::metrics::EtlMetrics;
+use dsi::schema::{FeatureId, FeatureKind};
+use dsi::tectonic::{Cluster, ClusterConfig, FileId};
+use dsi::transforms::{Op, TransformDag};
+use dsi::util::rng::Pcg32;
+use dsi::warehouse::Catalog;
+use std::sync::Arc;
+
+const SEED: u64 = 47;
+
+/// One wire batch as shipped to the client: (seq, rows, dedup, bytes).
+type WireRecord = (u64, usize, bool, Vec<u8>);
+
+struct World {
+    cluster: Arc<Cluster>,
+    catalog: Catalog,
+    spec: SessionSpec,
+    total_rows: u64,
+}
+
+/// A dataset whose stripes are wide (256 rows) but whose zone maps are
+/// fine (32-row groups): recency windows prune most of a stripe's
+/// groups while the stripe itself survives.
+fn build(encoding: Encoding) -> World {
+    let rm = RmConfig::get(RmId::Rm1);
+    let scale = SimScale {
+        rows_per_partition: 1024,
+        materialized_features: 48,
+        partitions: 2,
+    };
+    let cluster = Arc::new(Cluster::new(ClusterConfig {
+        chunk_bytes: 128 << 10,
+        ..Default::default()
+    }));
+    let catalog = Catalog::new();
+    let h = build_dataset_with(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions {
+            encoding,
+            stripe_rows: 256,
+            rows_per_group: 32,
+            ..Default::default()
+        },
+        SEED,
+        &GenOptions {
+            // Even the Dedup world keeps dup_factor 1 here: the
+            // generator scatters a session's duplicates across the
+            // whole partition, so after clustering every row group
+            // spans the full day and timestamp zone maps (correctly)
+            // prune nothing. Locally-duplicated data — where Dedup
+            // group pruning does bite — is covered by
+            // `prop_row_group_pruning_is_sound_and_lossless`.
+            dup_factor: 1,
+            tick_max: 30,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut dag = TransformDag::default();
+    let picked: Vec<&dsi::schema::FeatureDef> = h
+        .schema
+        .dense()
+        .take(3)
+        .chain(h.schema.sparse().take(4))
+        .collect();
+    for f in &picked {
+        match f.kind {
+            FeatureKind::Dense => {
+                let i = dag.input_dense(f.id);
+                let c = dag.apply(Op::Clamp { lo: -4.0, hi: 4.0 }, vec![i]);
+                dag.output(f.id, c);
+            }
+            _ => {
+                let i = dag.input_sparse(f.id);
+                let s = dag.apply(
+                    Op::SigridHash {
+                        salt: 5,
+                        modulus: 1 << 14,
+                    },
+                    vec![i],
+                );
+                dag.output(f.id, s);
+            }
+        }
+    }
+    let spec = SessionSpec::from_dag(&h.table_name, 0, 10, dag, 32);
+    let t = catalog.get(&h.table_name).unwrap();
+    World {
+        cluster,
+        catalog,
+        spec,
+        total_rows: t.total_rows(),
+    }
+}
+
+/// Run one single-worker session; return the raw wire batches and
+/// metrics. `row_groups = false` limits pushdown to stripe granularity.
+fn run(
+    world: &World,
+    predicate: RowPredicate,
+    pushdown: bool,
+    row_groups: bool,
+) -> (Vec<WireRecord>, Arc<EtlMetrics>) {
+    let mut spec = world.spec.clone().with_predicate(predicate);
+    spec.pipeline.pushdown = pushdown;
+    spec.pipeline.row_group_pruning = row_groups;
+    // No read coalescing: the byte assertions below compare exactly the
+    // planned stream extents (the default 1.25 MiB window would absorb
+    // a pruned group's gap as over-read at this scale and mask the
+    // saving).
+    spec.pipeline.coalesce = None;
+    let spec = Arc::new(spec);
+    let master =
+        Master::new(&world.catalog, &world.cluster, (*spec).clone()).unwrap();
+    let w = master.register_worker();
+    let metrics = Arc::new(EtlMetrics::default());
+    let mut core =
+        WorkerCore::new(spec, world.cluster.clone(), metrics.clone());
+    let mut wire = Vec::new();
+    while let Some(split) = master.fetch_split(w) {
+        for b in core.process_split(&split).unwrap() {
+            wire.push((b.seq, b.rows, b.dedup, b.bytes));
+        }
+        master.complete_split(w, split.id);
+    }
+    (wire, metrics)
+}
+
+/// A recency window over roughly the newest `frac` of day-0 rows (day 1
+/// prunes whole; day 0 prunes per group).
+fn narrow_window(frac: f64) -> RowPredicate {
+    // Day 0 timestamps: ~1024 rows × mean tick 15.5 ≈ [0, 16k].
+    let span = 16_000.0;
+    RowPredicate::TimestampRange {
+        min: 0,
+        max: (span * frac) as u64,
+    }
+}
+
+#[test]
+fn row_groups_cut_decoded_rows_with_identical_wire_flattened() {
+    let world = build(Encoding::Flattened);
+    let pred = narrow_window(0.05);
+    let (base_wire, base_m) = run(&world, pred.clone(), false, false);
+    let (stripe_wire, stripe_m) = run(&world, pred.clone(), true, false);
+    let (group_wire, group_m) = run(&world, pred, true, true);
+    // Byte-identical client output across all three paths.
+    assert_eq!(base_wire, stripe_wire, "stripe pushdown must be lossless");
+    assert_eq!(stripe_wire, group_wire, "row-group pruning must be lossless");
+    assert!(!group_wire.is_empty(), "window should keep some rows");
+    // The zone maps bite below stripe granularity: strictly fewer rows
+    // decoded than stripe-only pruning, and fewer bytes fetched (the
+    // pruned groups' streams never left storage).
+    assert!(
+        group_m.decoded_rows.get() * 2 <= stripe_m.decoded_rows.get(),
+        "group {} !<< stripe-only {} decoded rows",
+        group_m.decoded_rows.get(),
+        stripe_m.decoded_rows.get()
+    );
+    assert!(
+        group_m.storage_rx_bytes.get() < stripe_m.storage_rx_bytes.get(),
+        "group-pruned plan must fetch fewer bytes"
+    );
+    assert!(group_m.pruned_groups.get() > 0);
+    assert!(group_m.pruned_group_rows.get() > 0);
+    assert!(group_m.pruned_group_bytes.get() > 0);
+    assert_eq!(stripe_m.pruned_groups.get(), 0, "ablation leaves groups off");
+    assert!(base_m.decoded_rows.get() >= world.total_rows / 2);
+}
+
+#[test]
+fn row_groups_cut_decoded_rows_with_identical_wire_dedup() {
+    let world = build(Encoding::Dedup);
+    let pred = narrow_window(0.08);
+    let (stripe_wire, stripe_m) = run(&world, pred.clone(), true, false);
+    let (group_wire, group_m) = run(&world, pred, true, true);
+    assert_eq!(
+        stripe_wire, group_wire,
+        "dedup row-group pruning must be byte-identical"
+    );
+    assert!(!group_wire.is_empty());
+    assert!(group_wire.iter().any(|(_, _, dedup, _)| *dedup));
+    // Dedup streams stay whole-stripe (no byte shrink), but the pruned
+    // groups' rows never expand: decoded rows drop.
+    assert!(
+        group_m.decoded_rows.get() < stripe_m.decoded_rows.get(),
+        "group {} !< stripe {} decoded rows",
+        group_m.decoded_rows.get(),
+        stripe_m.decoded_rows.get()
+    );
+    assert!(group_m.pruned_group_rows.get() > 0);
+    // Transforms ran on (at most) the surviving uniques.
+    assert!(group_m.transform_rows.get() <= group_m.decoded_rows.get());
+}
+
+#[test]
+fn broker_path_honors_group_mask_with_identical_wire() {
+    let world = build(Encoding::Flattened);
+    let pred = narrow_window(0.05);
+    // Private group-pruned baseline.
+    let (private_wire, _) = run(&world, pred.clone(), true, true);
+    // Broker-attached session, same spec: the broker decodes whole
+    // stripes (it serves many predicates), the session's mask applies
+    // downstream — wire must not change.
+    let mut spec = world.spec.clone().with_predicate(pred);
+    spec.pipeline.pushdown = true;
+    spec.pipeline.row_group_pruning = true;
+    let broker = ReadBroker::with_budget_bytes(world.cluster.clone(), 64 << 20);
+    let master =
+        Master::new_shared(&world.catalog, &world.cluster, spec.clone(), &broker)
+            .unwrap();
+    let w = master.register_worker();
+    let metrics = Arc::new(EtlMetrics::default());
+    let mut core = WorkerCore::new(
+        Arc::new(spec),
+        world.cluster.clone(),
+        metrics.clone(),
+    );
+    core = core.with_broker(master.broker_handle().unwrap());
+    let mut wire = Vec::new();
+    while let Some(split) = master.fetch_split(w) {
+        for b in core.process_split(&split).unwrap() {
+            wire.push((b.seq, b.rows, b.dedup, b.bytes));
+        }
+        master.complete_split(w, split.id);
+    }
+    assert_eq!(wire, private_wire, "broker path must be byte-identical");
+    assert!(metrics.pruned_group_rows.get() > 0);
+}
+
+#[test]
+fn v2_files_round_trip_through_the_current_reader() {
+    // Byte-real old files: footer v2, no zone maps. The current reader
+    // must parse them, plan at stripe granularity (stats-less
+    // fallback), and decode losslessly — with or without a predicate.
+    let samples: Vec<dsi::data::Sample> = (0..96u64)
+        .map(|i| {
+            let mut s = dsi::data::Sample {
+                dense: vec![(FeatureId(0), i as f32)],
+                sparse: vec![(
+                    FeatureId(100),
+                    dsi::data::SparseValue::ids(vec![i, i + 1]),
+                )],
+                label: (i % 3 == 0) as u64 as f32,
+                timestamp: 1000 + i,
+            };
+            s.sort_features();
+            s
+        })
+        .collect();
+    let build = |version: u32| -> Vec<u8> {
+        let mut w = DwrfWriter::new(
+            "t",
+            vec![FeatureId(0)],
+            vec![FeatureId(100)],
+            WriterOptions {
+                encoding: Encoding::Flattened,
+                stripe_rows: 32,
+                rows_per_group: 8,
+                footer_version: version,
+                ..Default::default()
+            },
+        );
+        w.write_all(samples.clone());
+        w.finish()
+    };
+    let v2 = build(2);
+    let v3 = build(3);
+    let r2 = DwrfReader::open_table(&v2, "t").unwrap();
+    let r3 = DwrfReader::open_table(&v3, "t").unwrap();
+    assert!(r2.meta.stripes.iter().all(|s| s.groups.is_empty()));
+    assert!(r3.meta.stripes.iter().all(|s| s.groups.len() == 4));
+    let proj = Projection::new([FeatureId(0), FeatureId(100)]);
+    let pred = RowPredicate::TimestampRange {
+        min: 1000,
+        max: 1009,
+    };
+    let decode = |r: &DwrfReader, bytes: &[u8]| -> Vec<dsi::data::Sample> {
+        let plan = r.plan_filtered(&proj, None, Some(&pred));
+        let bufs = r.fetch_local(bytes, &plan);
+        let mut out = Vec::new();
+        for sp in &plan.stripes {
+            out.extend(
+                r.decode_stripe_rows_masked(
+                    sp.stripe,
+                    &bufs,
+                    &proj,
+                    DecodeMode::default(),
+                    sp.group_mask.as_deref(),
+                )
+                .unwrap()
+                .into_iter()
+                .filter(|s| pred.matches_sample(s)),
+            );
+        }
+        out
+    };
+    let from_v2 = decode(&r2, &v2);
+    let from_v3 = decode(&r3, &v3);
+    assert_eq!(from_v2, from_v3, "v2 and v3 reads agree row-for-row");
+    assert_eq!(from_v2.len(), 10);
+    // The v2 plan has no masks (stats-less fallback); the v3 plan does.
+    let p2 = r2.plan_filtered(&proj, None, Some(&pred));
+    let p3 = r3.plan_filtered(&proj, None, Some(&pred));
+    assert!(p2.stripes.iter().all(|s| s.group_mask.is_none()));
+    assert_eq!(p2.pruned_groups, 0);
+    assert!(p3.pruned_groups > 0);
+    assert!(
+        p3.pruned_group_bytes > 0,
+        "pruned groups' scoped streams leave the v3 I/O plan"
+    );
+    // Full-scan roundtrip of the v2 file is untouched by all of this.
+    let full = r2.plan(&proj, None);
+    let bufs = r2.fetch_local(&v2, &full);
+    let mut back = Vec::new();
+    for si in 0..r2.meta.stripes.len() {
+        back.extend(
+            r2.decode_stripe_rows(si, &bufs, &proj, DecodeMode::default())
+                .unwrap(),
+        );
+    }
+    assert_eq!(back, samples);
+}
+
+#[test]
+fn fuzzed_footers_error_without_panicking() {
+    // Random byte corruption anywhere in the footer region must produce
+    // Ok or Err — never a panic, never an out-of-bounds slice when the
+    // file is subsequently read.
+    let mut w = DwrfWriter::new(
+        "t",
+        vec![FeatureId(0), FeatureId(1)],
+        vec![FeatureId(100)],
+        WriterOptions {
+            encoding: Encoding::Flattened,
+            stripe_rows: 16,
+            rows_per_group: 4,
+            ..Default::default()
+        },
+    );
+    w.write_all((0..64u64).map(|i| {
+        let mut s = dsi::data::Sample {
+            dense: vec![(FeatureId(0), i as f32), (FeatureId(1), -(i as f32))],
+            sparse: vec![(
+                FeatureId(100),
+                dsi::data::SparseValue::ids(vec![i]),
+            )],
+            label: 0.0,
+            timestamp: i,
+        };
+        s.sort_features();
+        s
+    }));
+    let bytes = w.finish();
+    let n = bytes.len();
+    let flen =
+        u64::from_le_bytes(bytes[n - 12..n - 4].try_into().unwrap()) as usize;
+    let footer_start = n - 12 - flen;
+    let proj = Projection::new([FeatureId(0), FeatureId(1), FeatureId(100)]);
+    let mut rng = Pcg32::new(SEED);
+    for _ in 0..300 {
+        let mut corrupt = bytes.clone();
+        // 1–4 byte flips inside the footer (not the trailer, which has
+        // its own dedicated guards and tests).
+        for _ in 0..(1 + rng.below(4)) {
+            let at = footer_start + rng.below(flen as u64) as usize;
+            corrupt[at] ^= (1 + rng.below(255)) as u8;
+        }
+        let Ok(r) = DwrfReader::open_table(&corrupt, "t") else {
+            continue; // rejected at parse — the common, correct case
+        };
+        // If the corrupt footer happened to parse, every planned extent
+        // was validated against the file length, so fetching and
+        // decoding may fail (crc, lengths) but must not panic.
+        let plan = r.plan(&proj, None);
+        let bufs = r.fetch_local(&corrupt, &plan);
+        for sp in &plan.stripes {
+            let _ = r.decode_stripe_rows(
+                sp.stripe,
+                &bufs,
+                &proj,
+                DecodeMode::default(),
+            );
+        }
+    }
+}
+
+#[test]
+fn oversized_footer_reads_through_fetch_meta_reread_loop() {
+    // Many stripes × row groups inflate the v3 footer past the 256 KiB
+    // bootstrap probe of `DwrfReader::footer_ios` — the caller contract
+    // ("re-read if the footer is larger") is now load-bearing. Build
+    // such a file and prove the doubling loop in `Master::fetch_meta`
+    // (which the broker's footer cache also uses) parses it.
+    let cluster = Cluster::new(ClusterConfig {
+        chunk_bytes: 256 << 10,
+        ..Default::default()
+    });
+    let mut w = DwrfWriter::new(
+        "t",
+        vec![FeatureId(0), FeatureId(1)],
+        vec![FeatureId(100), FeatureId(101)],
+        WriterOptions {
+            encoding: Encoding::Flattened,
+            stripe_rows: 4,
+            rows_per_group: 1,
+            encrypt: false,
+            ..Default::default()
+        },
+    );
+    let rows = 2600u64;
+    w.write_all((0..rows).map(|i| {
+        let mut s = dsi::data::Sample {
+            dense: vec![(FeatureId(0), i as f32), (FeatureId(1), 1.0)],
+            sparse: vec![
+                (FeatureId(100), dsi::data::SparseValue::ids(vec![i])),
+                (FeatureId(101), dsi::data::SparseValue::ids(vec![i + 1])),
+            ],
+            label: 0.0,
+            timestamp: i,
+        };
+        s.sort_features();
+        s
+    }));
+    let bytes = w.finish();
+    let n = bytes.len();
+    let flen = u64::from_le_bytes(bytes[n - 12..n - 4].try_into().unwrap());
+    assert!(
+        flen > 256 * 1024,
+        "footer must exceed the bootstrap probe (got {flen} bytes)"
+    );
+    let file: FileId = cluster.create("warehouse/oversized/part-0.dwrf");
+    cluster.append(file, &bytes).unwrap();
+    cluster.seal(file);
+    let meta = Master::fetch_meta(&cluster, file).unwrap();
+    assert_eq!(meta.total_rows, rows);
+    assert_eq!(meta.stripes.len(), (rows as usize).div_ceil(4));
+    assert!(meta.stripes.iter().all(|s| s.groups.len() == s.rows as usize));
+    // The in-memory open path agrees.
+    let r = DwrfReader::open_table(&bytes, "t").unwrap();
+    assert_eq!(r.meta.total_rows, rows);
+}
