@@ -155,6 +155,10 @@ fn cfg(fixed: bool, pace: Option<f64>) -> SessionConfig {
         },
         client_rows_per_sec: pace,
         kill_worker_after_batches: None,
+        // Cheap time-series sampling so the bench emits a telemetry
+        // artifact alongside its results JSON.
+        telemetry_every: Some(Duration::from_millis(10)),
+        ..Default::default()
     }
 }
 
@@ -188,7 +192,8 @@ fn row_json(label: &str, sel: f64, r: &SessionReport) -> Json {
         .set("workers_retired", r.workers_retired)
         .set("splits_requeued", r.splits_requeued)
         .set("client_stall_secs", r.client_stall_secs)
-        .set("broker_hit_rate", r.broker_hit_rate);
+        .set("broker_hit_rate", r.broker_hit_rate)
+        .set("stall_attribution", r.stall_attribution.to_json());
     j
 }
 
@@ -216,6 +221,7 @@ fn main() {
                 autoscale_every: None,
                 client_rows_per_sec: None,
                 kill_worker_after_batches: None,
+                ..Default::default()
             },
         )
         .expect("calibration session")
@@ -376,6 +382,18 @@ fn main() {
     let path = "target/autoscale_results.json";
     if std::fs::write(path, out.to_string_pretty()).is_ok() {
         println!("wrote {path}");
+    }
+    // Telemetry artifact from the broker-hit session: attribution plus
+    // the sampled pool / broker / drain time-series.
+    let mut tel = Json::obj();
+    tel.set("session", "broker-hit")
+        .set("stall_attribution", hit.stall_attribution.to_json());
+    if let Some(t) = &hit.telemetry {
+        tel.set("telemetry", t.to_json());
+    }
+    let tpath = "target/autoscale_telemetry.json";
+    if std::fs::write(tpath, tel.to_string_pretty()).is_ok() {
+        println!("wrote {tpath}");
     }
     // CI smoke: a controller regression that stops saving
     // worker-seconds (or trades them for stalls) fails the build.

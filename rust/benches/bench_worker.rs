@@ -7,7 +7,9 @@ use dsi::dwrf::{Projection, WriterOptions};
 use dsi::paper::harness::{build_world, measure_pipeline};
 use dsi::resources::saturation;
 use dsi::transforms::dag::session_dag;
+use dsi::util::json::Json;
 use dsi::util::rng::Pcg32;
+use std::time::Duration;
 
 fn main() {
     let scale = SimScale {
@@ -62,5 +64,61 @@ fn main() {
             report.rows_delivered,
             report.client_stall_secs
         );
+    }
+
+    // Tracing overhead: the same 2-worker session once plain, once with
+    // spans + telemetry on (informational — the acceptance bar for the
+    // *untraced* path is held by the scaling runs above staying flat).
+    println!("\n=== tracing overhead (RM3, 2 workers) ===");
+    let run_rm3 = |tracing: bool| {
+        let mut rng = Pcg32::new(17);
+        let dag = session_dag(&mut rng, &rm, &world.schema, &world.projection);
+        let mut spec =
+            SessionSpec::from_dag(&world.table, 0, u32::MAX, dag, 64);
+        spec.projection = Projection::new(world.projection.iter().copied());
+        spec.pipeline.tracing = tracing;
+        Session::run(
+            &world.catalog,
+            &world.cluster,
+            spec,
+            &SessionConfig {
+                initial_workers: 2,
+                max_workers: 2,
+                clients: 1,
+                telemetry_every: tracing
+                    .then_some(Duration::from_millis(10)),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let plain = run_rm3(false);
+    let traced = run_rm3(true);
+    let overhead = 1.0 - traced.rows_per_sec / plain.rows_per_sec.max(1e-9);
+    println!(
+        "plain {:>8.0} rows/s | traced {:>8.0} rows/s | overhead {:+.1}% | \
+         {} spans | stall: {}",
+        plain.rows_per_sec,
+        traced.rows_per_sec,
+        overhead * 100.0,
+        traced.obs.as_ref().map_or(0, |o| o.trace.len()),
+        traced.stall_attribution.dominant(),
+    );
+    let obs = traced.obs.as_ref().expect("traced run has a sink");
+    let mut out = Json::obj();
+    out.set("stage_histograms", obs.histograms_json())
+        .set("stall_attribution", traced.stall_attribution.to_json())
+        .set("rows_per_sec_plain", plain.rows_per_sec)
+        .set("rows_per_sec_traced", traced.rows_per_sec)
+        .set("tracing_overhead_frac", overhead)
+        .set("spans", obs.trace.len() as u64)
+        .set("spans_dropped", obs.trace.dropped());
+    if let Some(t) = &traced.telemetry {
+        out.set("telemetry", t.to_json());
+    }
+    let _ = std::fs::create_dir_all("target");
+    let path = "target/worker_telemetry.json";
+    if std::fs::write(path, out.to_string_pretty()).is_ok() {
+        println!("wrote {path}");
     }
 }

@@ -23,11 +23,19 @@ use crate::dwrf::{
     Projection,
 };
 use crate::metrics::Counter;
+use crate::obs::{ObsHandle, Stage};
 use crate::schema::FeatureId;
 use crate::tectonic::{Cluster, FileId};
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeSet, HashMap, HashSet};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Trace lane for broker-side storage fetches: they run on whichever
+/// worker thread lost the single-flight race, so they get their own
+/// lane instead of inheriting a worker id (`u32::MAX` is the Master's
+/// control-plane lane).
+const BROKER_TRACE_LANE: u32 = u32::MAX - 1;
 
 pub type BrokerSessionId = u64;
 
@@ -176,6 +184,11 @@ pub struct ReadBroker {
     state: Mutex<BrokerState>,
     buffer: StripeBuffer,
     pub metrics: BrokerMetrics,
+    /// Observability sink for traced sessions: cold-path storage
+    /// fetch + decode work records `fetch` spans here. One handle —
+    /// the latest traced session to attach wins; buffer hits record
+    /// nothing (that's the point of a hit).
+    obs: Mutex<Option<ObsHandle>>,
 }
 
 /// The `(broker, session id)` pair a [`crate::dpp::Master`] hands its
@@ -205,7 +218,14 @@ impl ReadBroker {
             state: Mutex::new(BrokerState::default()),
             buffer: StripeBuffer::new(budget),
             metrics: BrokerMetrics::default(),
+            obs: Mutex::new(None),
         })
+    }
+
+    /// Attach an observability sink: subsequent cold-path stripe
+    /// fetches record `fetch` spans against it.
+    pub fn attach_obs(&self, h: ObsHandle) {
+        *self.obs.lock().unwrap() = Some(h);
     }
 
     /// A broker with its own private stripe-buffer budget. To share one
@@ -374,7 +394,9 @@ impl ReadBroker {
             bail!("stripe {stripe} out of range for {file:?}");
         }
         let union_proj = Projection::new(union);
+        let obs = self.obs.lock().unwrap().clone();
         let fetch = || -> Result<FetchedStripe> {
+            let t_fetch = Instant::now();
             let reader = DwrfReader::from_meta((*meta).clone(), &table);
             // Plan one I/O per wanted stream; the cluster merges them
             // (per-file read coalescing) before touching devices.
@@ -404,6 +426,14 @@ impl ReadBroker {
                     mode,
                 )?),
             };
+            if let Some(h) = &obs {
+                h.span(
+                    BROKER_TRACE_LANE,
+                    stripe as u64,
+                    Stage::Fetch,
+                    t_fetch,
+                );
+            }
             Ok(FetchedStripe {
                 stripe: payload,
                 proj: union_proj.iter().copied().collect(),

@@ -48,6 +48,9 @@ pub fn session_fingerprint(spec: &SessionSpec) -> u64 {
     h.write_u8(spec.pipeline.shared_reads as u8);
     h.write_u8(spec.pipeline.coalesce.is_some() as u8);
     h.write_u64(spec.pipeline.coalesce.unwrap_or(0));
+    // `pipeline.tracing` is deliberately NOT hashed: span emission is
+    // diagnostic-only and never changes the preprocessed output, so a
+    // traced session may share cached tensors with an untraced twin.
     // Row predicate: filtered and unfiltered sessions (or two different
     // filters) must never share cached tensors.
     match &spec.predicate {

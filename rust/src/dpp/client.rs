@@ -8,7 +8,8 @@
 use super::tensor::{DedupTensorBatch, TensorBatch};
 use super::worker::WireBatch;
 use crate::dwrf::crypto::StreamCipher;
-use crate::metrics::Counter;
+use crate::metrics::{Counter, StageClock};
+use crate::obs::{ObsHandle, Stage};
 use anyhow::Result;
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
@@ -47,7 +48,12 @@ pub struct Client {
     /// Dedup wire batches expanded on this client.
     pub dedup_expanded: Counter,
     /// Time spent blocked waiting for a batch (data-stall signal).
-    pub stall_secs: std::sync::Mutex<f64>,
+    /// An atomic nanosecond accumulator — this sits on the hot recv
+    /// path, bumped on every poll sweep, so no mutex. Shared (`Arc`) so
+    /// the session control loop reads stall *while* the client drains.
+    pub stall: Arc<StageClock>,
+    /// Span sink + this client's trace lane (`tid`), when tracing.
+    obs: Option<(ObsHandle, u32)>,
 }
 
 impl Client {
@@ -59,8 +65,22 @@ impl Client {
             rx_bytes: Counter::new(),
             batches: Counter::new(),
             dedup_expanded: Counter::new(),
-            stall_secs: std::sync::Mutex::new(0.0),
+            stall: Arc::new(StageClock::default()),
+            obs: None,
         }
+    }
+
+    /// Share the stall accumulator (builder style): the session control
+    /// loop keeps a clone to attribute stalls live, mid-run.
+    pub fn with_stall_clock(mut self, clock: Arc<StageClock>) -> Client {
+        self.stall = clock;
+        self
+    }
+
+    /// Emit `WireRecv`/`Drain` spans on `handle`, lane `tid`.
+    pub fn with_obs(mut self, handle: ObsHandle, tid: u32) -> Client {
+        self.obs = Some((handle, tid));
+        self
     }
 
     pub fn num_connections(&self) -> usize {
@@ -96,8 +116,11 @@ impl Client {
                         self.next = (i + 1) % self.rxs.len();
                         self.rx_bytes.add(wire.bytes.len() as u64);
                         self.batches.inc();
-                        let stalled = start.elapsed().as_secs_f64();
-                        *self.stall_secs.lock().unwrap() += stalled;
+                        self.stall.add(start.elapsed());
+                        if let Some((h, tid)) = &self.obs {
+                            h.span(*tid, wire.seq, Stage::WireRecv, start);
+                        }
+                        let t_drain = Instant::now();
                         // TLS decrypt + Thrift-like deserialize: the
                         // trainer-side datacenter tax (§6.2). Dedup wire
                         // batches additionally expand (gather unique rows
@@ -118,6 +141,9 @@ impl Client {
                                 &wire.bytes,
                             )?
                         };
+                        if let Some((h, tid)) = &self.obs {
+                            h.span(*tid, wire.seq, Stage::Drain, t_drain);
+                        }
                         return Ok(Some(tb));
                     }
                     Err(std::sync::mpsc::TryRecvError::Empty) => {}
@@ -131,7 +157,7 @@ impl Client {
             }
             let elapsed = start.elapsed();
             if elapsed > timeout {
-                *self.stall_secs.lock().unwrap() += elapsed.as_secs_f64();
+                self.stall.add(elapsed);
                 return Ok(None);
             }
             let remaining = timeout - elapsed;
@@ -141,7 +167,7 @@ impl Client {
     }
 
     pub fn stalled(&self) -> f64 {
-        *self.stall_secs.lock().unwrap()
+        self.stall.secs()
     }
 }
 
@@ -296,5 +322,51 @@ mod tests {
         let got = c.next_batch(Duration::from_millis(20)).unwrap();
         assert!(got.is_none());
         assert!(c.stalled() >= 0.02);
+    }
+
+    #[test]
+    fn shared_stall_clock_is_readable_mid_drain() {
+        let (_tx, rx) = sync_channel::<WireBatch>(1);
+        let clock = Arc::new(StageClock::default());
+        let mut c =
+            Client::new("t", vec![rx]).with_stall_clock(clock.clone());
+        c.next_batch(Duration::from_millis(20)).unwrap();
+        // The external handle sees the same accumulator.
+        assert!((clock.secs() - c.stalled()).abs() < 1e-12);
+        assert!(clock.secs() >= 0.02);
+    }
+
+    #[test]
+    fn client_emits_recv_and_drain_spans() {
+        use crate::obs::Obs;
+        let (tx, rx) = sync_channel(1);
+        let cipher = StreamCipher::for_table("t");
+        let tb = TensorBatch {
+            rows: 1,
+            dense: vec![3.0],
+            dense_names: vec![crate::schema::FeatureId(0)],
+            sparse: vec![],
+            labels: vec![1.0],
+        };
+        tx.send(WireBatch {
+            seq: 5,
+            rows: 1,
+            dedup: false,
+            bytes: tb.to_wire(&cipher, 5),
+        })
+        .unwrap();
+        drop(tx);
+        let obs = Obs::with_capacity(8);
+        let h = ObsHandle::for_session(obs.clone(), "t");
+        let mut client = Client::new("t", vec![rx]).with_obs(h, 1000);
+        client.next_batch(Duration::from_secs(1)).unwrap().unwrap();
+        let evs = obs.trace.events();
+        assert!(evs
+            .iter()
+            .any(|e| e.stage == Stage::WireRecv && e.split == 5));
+        assert!(evs
+            .iter()
+            .any(|e| e.stage == Stage::Drain && e.tid == 1000));
+        assert_eq!(obs.hist(Stage::WireRecv).count(), 1);
     }
 }

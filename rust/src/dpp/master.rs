@@ -9,6 +9,7 @@ use super::split::{splits_for_partition, Split, SplitId};
 use crate::broker::{BrokerHandle, ReadBroker};
 use crate::dwrf::{DwrfReader, FileMeta, IoRange, StripeInfo, StripeStats};
 use crate::filter::RowPredicate;
+use crate::obs::{ObsHandle, SpanEvent, Stage};
 use crate::tectonic::{Cluster, FileId};
 use crate::warehouse::Catalog;
 use anyhow::{bail, Context, Result};
@@ -122,6 +123,12 @@ pub struct AutoscalePolicy {
     pub max_step_down: usize,
     /// EMA weight of each new rate observation (0..1).
     pub alpha: f64,
+    /// When more than this fraction of the tick's new client-stall time
+    /// is attributed to the worker-starved bucket, the pool counts as
+    /// starved even if buffer depths look healthy on average — stall
+    /// attribution sees the stalls buffer averages hide (one empty
+    /// worker behind several deep ones).
+    pub max_starved_stall_frac: f64,
     /// Dead workers older than this are pruned from the health map: the
     /// controller's base is the live pool, and the map must not grow
     /// with every crash. The grace window keeps the reaped-but-
@@ -143,6 +150,7 @@ impl Default for AutoscalePolicy {
             max_step_up: 2,
             max_step_down: 1,
             alpha: 0.35,
+            max_starved_stall_frac: 0.2,
             dead_grace: Duration::from_secs(30),
         }
     }
@@ -170,6 +178,14 @@ pub struct ScaleSignals {
     /// Busy seconds spent in fetch + decode (the share a broker buffer
     /// hit skips).
     pub fetch_decode_secs: f64,
+    /// Client data-stall seconds so far (cumulative, summed over
+    /// trainer-side clients).
+    pub stall_secs: f64,
+    /// Share of `stall_secs` the attributor has assigned to the
+    /// worker-starved bucket so far (cumulative). Both default to 0 —
+    /// sessions without stall attribution feed the pre-existing
+    /// buffer-depth signal only.
+    pub stall_starved_secs: f64,
 }
 
 /// What one controller evaluation decided, with the fused signals that
@@ -283,6 +299,13 @@ pub struct Master {
     /// (1.0 unfiltered) — the controller's feed-forward prior.
     prior_selectivity: f64,
     controller: Mutex<ControllerState>,
+    /// Observability sink for traced sessions (set by
+    /// [`Master::attach_obs`]); workers pick it up via
+    /// [`Master::obs_handle`] when they spawn.
+    obs: Mutex<Option<ObsHandle>>,
+    /// How long split enumeration (footer fetch + planning) took — the
+    /// session's control-plane `plan` span.
+    build_dur: Duration,
 }
 
 impl Master {
@@ -318,6 +341,7 @@ impl Master {
         spec: SessionSpec,
         broker: Option<&Arc<ReadBroker>>,
     ) -> Result<Master> {
+        let t_build = Instant::now();
         let table = catalog
             .get(&spec.table)
             .with_context(|| format!("unknown table {}", spec.table))?;
@@ -458,6 +482,8 @@ impl Master {
             broker,
             prior_selectivity,
             controller: Mutex::new(ControllerState::new(prior_selectivity)),
+            obs: Mutex::new(None),
+            build_dur: t_build.elapsed(),
         })
     }
 
@@ -465,6 +491,58 @@ impl Master {
     /// only for [`Master::new_shared`] sessions).
     pub fn broker_handle(&self) -> Option<BrokerHandle> {
         self.broker.clone()
+    }
+
+    /// Attach an observability sink to this session. Retroactively
+    /// records the split-enumeration time as the session's `plan` span
+    /// (sentinel lane `u32::MAX` / split `u64::MAX` — control-plane
+    /// work, not tied to any split), anchored at the trace epoch since
+    /// enumeration predates the sink.
+    pub fn attach_obs(&self, h: ObsHandle) {
+        h.obs.trace.record(SpanEvent {
+            session: h.session,
+            tid: u32::MAX,
+            split: u64::MAX,
+            stage: Stage::Plan,
+            t0_ns: 0,
+            dur_ns: self.build_dur.as_nanos() as u64,
+        });
+        h.obs.hist(Stage::Plan).record(self.build_dur);
+        *self.obs.lock().unwrap() = Some(h);
+    }
+
+    /// The observability handle workers and clients attach to (present
+    /// only after [`Master::attach_obs`] — i.e. for traced sessions).
+    pub fn obs_handle(&self) -> Option<ObsHandle> {
+        self.obs.lock().unwrap().clone()
+    }
+
+    /// (live workers, average buffered-tensor depth) — the telemetry
+    /// sampler's pool view, one lock hold for a consistent pair.
+    pub fn pool_snapshot(&self) -> (usize, f64) {
+        let st = self.state.lock().unwrap();
+        let live: Vec<&WorkerHealth> = st
+            .workers
+            .values()
+            .filter(|h| h.alive && !h.draining)
+            .collect();
+        let n = live.len();
+        let avg = if n == 0 {
+            0.0
+        } else {
+            live.iter().map(|h| h.buffered_tensors as f64).sum::<f64>()
+                / n as f64
+        };
+        (n, avg)
+    }
+
+    /// Bytes currently held by the shared broker buffer (0 without a
+    /// broker) — a telemetry gauge; the buffer is cross-session, so
+    /// concurrent traced sessions each report the same pool.
+    pub fn broker_mem_bytes(&self) -> u64 {
+        self.broker
+            .as_ref()
+            .map_or(0, |h| h.broker.budget().used())
     }
 
     /// Fetch and parse a file's footer via ranged tail reads: the
@@ -826,10 +904,22 @@ impl Master {
         let hit = self.broker_hit_rate();
 
         let mut c = self.controller.lock().unwrap();
+        // Fraction of this tick's fresh client-stall time the attributor
+        // blamed on worker starvation (0 when nothing stalled, or when
+        // the caller doesn't feed attribution).
+        let mut starved_stall_frac = 0.0;
         // ---- update estimates from cumulative signal deltas ----
         if let Some(prev) = c.prev.clone() {
             let dt = sig.wall_secs - prev.wall_secs;
             if dt > 1e-6 {
+                let dstall = sig.stall_secs - prev.stall_secs;
+                if dstall > 1e-6 {
+                    let dstarved = (sig.stall_starved_secs
+                        - prev.stall_starved_secs)
+                        .max(0.0);
+                    starved_stall_frac =
+                        (dstarved / dstall).clamp(0.0, 1.0);
+                }
                 let drained =
                     sig.drained_rows.saturating_sub(prev.drained_rows);
                 let rate = drained as f64 / dt;
@@ -907,7 +997,12 @@ impl Master {
         };
 
         // ---- fuse with buffer-depth safety nets + hysteresis ----
-        let starved = avg_buf < p.min_buffered;
+        // Starved when average buffer depth is low, *or* when stall
+        // attribution says trainers are losing real wall time to
+        // worker starvation — the attribution path catches skew that
+        // pool-wide buffer averages hide.
+        let starved = avg_buf < p.min_buffered
+            || starved_stall_frac > p.max_starved_stall_frac;
         let glutted =
             avg_buf > p.max_buffered && avg_cpu < p.target_cpu * 0.5;
         let mut desired = alive;
@@ -1139,6 +1234,26 @@ mod tests {
         let d = m.autoscale(&ScaleSignals::default());
         assert_eq!(d.desired, 1);
         assert_eq!(d.reason, "hold");
+    }
+
+    #[test]
+    fn starved_stall_attribution_triggers_scale_up() {
+        let (cluster, catalog, spec) = setup();
+        let m = Master::new(&catalog, &cluster, spec).unwrap();
+        let w = m.register_worker();
+        // Healthy average buffer depth: the depth safety net is silent.
+        m.heartbeat(w, 4, 0.8, 0.5, 0.5);
+        let mut sig = ScaleSignals::default();
+        let d0 = m.autoscale(&sig);
+        assert_eq!(d0.reason, "hold", "no stall history yet");
+        // Next tick: 80% of the fresh client-stall time is attributed
+        // to worker starvation — above the 20% policy threshold.
+        sig.wall_secs = 1.0;
+        sig.stall_secs = 0.5;
+        sig.stall_starved_secs = 0.4;
+        let d1 = m.autoscale(&sig);
+        assert_eq!(d1.reason, "starved-up", "attribution overrides depth");
+        assert_eq!(d1.desired, 2);
     }
 
     #[test]

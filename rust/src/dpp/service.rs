@@ -6,13 +6,21 @@ use super::client::{partition_round_robin, Client};
 use super::master::{Master, ScaleSignals};
 use super::spec::SessionSpec;
 use super::worker::{WireBatch, Worker};
-use crate::metrics::EtlMetrics;
+use crate::metrics::{EtlMetrics, StageClock};
+use crate::obs::{
+    Obs, ObsHandle, SessionTelemetry, StallAttribution, StallAttributor,
+    StallSnapshot, TelemetrySample,
+};
 use crate::tectonic::Cluster;
 use crate::warehouse::Catalog;
 use anyhow::Result;
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Trace lane base for clients (workers use their pool ids, which stay
+/// far below this).
+const CLIENT_TID_BASE: u32 = 1000;
 
 /// Session runtime knobs.
 #[derive(Clone, Debug)]
@@ -30,6 +38,13 @@ pub struct SessionConfig {
     /// Fault injection: kill one worker after this many batches have been
     /// delivered (session must still complete).
     pub kill_worker_after_batches: Option<u64>,
+    /// Observability sink to record into. `None` + `pipeline.tracing`
+    /// on ⇒ the session allocates a private one (returned in the
+    /// report); supplying a shared sink puts several concurrent
+    /// sessions on one trace timeline.
+    pub obs: Option<Arc<Obs>>,
+    /// Sample [`SessionTelemetry`] at this cadence (`None` = off).
+    pub telemetry_every: Option<Duration>,
 }
 
 impl Default for SessionConfig {
@@ -42,6 +57,8 @@ impl Default for SessionConfig {
             autoscale_every: None,
             client_rows_per_sec: None,
             kill_worker_after_batches: None,
+            obs: None,
+            telemetry_every: None,
         }
     }
 }
@@ -75,12 +92,23 @@ pub struct SessionReport {
     pub storage_rx_bytes: u64,
     pub tensor_tx_bytes: u64,
     pub worker_busy_secs: f64,
+    /// Wall-clock delivery rate (rows / wall second) — worker-pool
+    /// parallelism included, unlike the per-busy-second efficiency in
+    /// [`EtlMetrics::rows_per_busy_sec`].
     pub worker_qps: f64,
     /// Storage-device accounting for the session's reads.
     pub storage_device_secs: f64,
     pub storage_reads: u64,
     pub storage_seeks: u64,
     pub storage_bytes_read: u64,
+    /// Where `client_stall_secs` went (buckets sum to it).
+    pub stall_attribution: StallAttribution,
+    /// Sampled time-series (present iff `telemetry_every` was set).
+    pub telemetry: Option<SessionTelemetry>,
+    /// The observability sink this session recorded into (present iff
+    /// traced) — export via [`Obs::chrome_trace`] /
+    /// [`Obs::histograms_json`].
+    pub obs: Option<Arc<Obs>>,
 }
 
 impl SessionReport {
@@ -120,6 +148,25 @@ pub fn run_session_on(
     let metrics = Arc::new(EtlMetrics::default());
     cluster.reset_stats();
 
+    // Observability: a caller-supplied sink (shared trace timeline
+    // across sessions) or a private one when the spec asks for tracing.
+    let obs = cfg.obs.clone().or_else(|| {
+        if spec.pipeline.tracing {
+            Some(Obs::new())
+        } else {
+            None
+        }
+    });
+    let oh = obs
+        .as_ref()
+        .map(|o| ObsHandle::for_session(o.clone(), &spec.table));
+    if let Some(h) = &oh {
+        master.attach_obs(h.clone());
+        if let Some(bh) = master.broker_handle() {
+            bh.broker.attach_obs(h.clone());
+        }
+    }
+
     // One channel per pool slot, created up front so clients' connection
     // sets are fixed while workers scale dynamically. The loop keeps a
     // sender clone per slot, so a slot whose worker retired can host a
@@ -133,17 +180,26 @@ pub fn run_session_on(
     }
     let parts = partition_round_robin(cfg.max_workers, cfg.clients);
 
-    // Spawn clients.
+    // Spawn clients. The loop keeps each client's stall clock so stall
+    // attribution and the autoscaler read stalls live, mid-drain.
     let table = spec.table.clone();
     let mut client_handles = Vec::new();
-    for part in parts {
+    let mut stall_clocks: Vec<Arc<StageClock>> = Vec::new();
+    for (ci, part) in parts.into_iter().enumerate() {
         let client_rxs: Vec<_> =
             part.iter().map(|&w| rxs[w].take().unwrap()).collect();
         let table = table.clone();
         let pace = cfg.client_rows_per_sec;
         let drained = metrics.clone();
+        let stall = Arc::new(StageClock::default());
+        stall_clocks.push(stall.clone());
+        let c_obs = oh.clone();
         client_handles.push(std::thread::spawn(move || {
-            let mut client = Client::new(&table, client_rxs);
+            let mut client =
+                Client::new(&table, client_rxs).with_stall_clock(stall);
+            if let Some(h) = c_obs {
+                client = client.with_obs(h, CLIENT_TID_BASE + ci as u32);
+            }
             let mut rows = 0u64;
             let mut batches = 0u64;
             let start = Instant::now();
@@ -196,9 +252,20 @@ pub fn run_session_on(
     let mut worker_pool_secs = 0.0f64;
     let mut last_tick = start;
     let mut last_scale = start;
+    let mut attributor = StallAttributor::default();
+    let mut telemetry = cfg.telemetry_every.map(|_| SessionTelemetry::new());
+    let mut last_telemetry = start;
+    let stall_snapshot = |stall_now: f64, live: usize| StallSnapshot {
+        t_secs: start.elapsed().as_secs_f64(),
+        stall_secs: stall_now,
+        read_secs: metrics.t_read.secs(),
+        decode_secs: metrics.t_extract.secs(),
+        transform_secs: metrics.t_transform.secs() + metrics.t_load.secs(),
+        live_workers: live,
+    };
 
     // Control loop: autoscale (both directions) + fault injection +
-    // completion watch.
+    // stall attribution + telemetry + completion watch.
     loop {
         if master.is_done() {
             break;
@@ -210,6 +277,31 @@ pub fn run_session_on(
         last_tick = now;
         splits_requeued +=
             master.reap_expired(Duration::from_secs(5)) as u64;
+        // Attribute this tick's fresh client-stall time to whatever the
+        // worker pool was concurrently doing (or failing to do).
+        let stall_now: f64 = stall_clocks.iter().map(|c| c.secs()).sum();
+        attributor.observe(stall_snapshot(stall_now, workers.len()));
+        if let (Some(tel), Some(every)) =
+            (telemetry.as_mut(), cfg.telemetry_every)
+        {
+            if now.duration_since(last_telemetry) >= every {
+                last_telemetry = now;
+                let (live, avg_buf) = master.pool_snapshot();
+                tel.observe(TelemetrySample {
+                    t_secs: start.elapsed().as_secs_f64(),
+                    live_workers: live,
+                    avg_buffered: avg_buf,
+                    broker_hit_rate: master.broker_hit_rate(),
+                    broker_mem_bytes: master.broker_mem_bytes(),
+                    // The session loop owns no tensor cache; sessions
+                    // running under a cache-sharing driver overwrite
+                    // this gauge there.
+                    cache_bytes: 0,
+                    drained_rows: metrics.drained_rows.get(),
+                    stall_secs: stall_now,
+                });
+            }
+        }
         // Collect threads that exited on their own (crash, disconnect,
         // finished drain): their slots return to the free pool.
         for pool in [&mut workers, &mut draining] {
@@ -246,6 +338,8 @@ pub fn run_session_on(
                     filtered_rows: metrics.filtered_rows.get(),
                     busy_secs: metrics.total_secs(),
                     fetch_decode_secs: metrics.fetch_decode_secs(),
+                    stall_secs: stall_now,
+                    stall_starved_secs: attributor.so_far().starved_secs,
                 };
                 let desired =
                     master.autoscale(&sig).desired.min(cfg.max_workers);
@@ -306,6 +400,12 @@ pub fn run_session_on(
         stalls += stall;
     }
     let wall = start.elapsed().as_secs_f64();
+    // Final attribution interval (covers stall accrued since the last
+    // control-loop tick, with the pool now gone), then rescale so the
+    // buckets sum exactly to the clients' measured stall time.
+    let final_stall: f64 = stall_clocks.iter().map(|c| c.secs()).sum();
+    attributor.observe(stall_snapshot(final_stall, 0));
+    let stall_attribution = attributor.finish(stalls);
     let st = cluster.stats();
     Ok(SessionReport {
         rows_delivered: rows,
@@ -323,11 +423,14 @@ pub fn run_session_on(
         storage_rx_bytes: metrics.storage_rx_bytes.get(),
         tensor_tx_bytes: metrics.tensor_tx_bytes.get(),
         worker_busy_secs: metrics.total_secs(),
-        worker_qps: metrics.qps(),
+        worker_qps: metrics.qps_wall(wall),
         storage_device_secs: st.device_secs,
         storage_reads: st.reads,
         storage_seeks: st.seeks,
         storage_bytes_read: st.bytes_read,
+        stall_attribution,
+        telemetry,
+        obs,
     })
 }
 
@@ -516,6 +619,55 @@ mod tests {
             "pool cost under a fixed six-worker pool: {:.3} vs {:.3}",
             report.worker_pool_secs,
             6.0 * report.wall_secs
+        );
+    }
+
+    #[test]
+    fn traced_session_attributes_stalls_and_exports_spans() {
+        let (cluster, catalog, mut spec) = setup();
+        spec.pipeline.tracing = true;
+        let report = Session::run(
+            &catalog,
+            &cluster,
+            spec,
+            &SessionConfig {
+                telemetry_every: Some(Duration::from_millis(2)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let obs = report.obs.as_ref().expect("traced session keeps its sink");
+        assert!(!obs.trace.is_empty(), "spans were recorded");
+        assert!(obs.hist(crate::obs::Stage::Drain).count() > 0);
+        // Acceptance: buckets sum to the measured client stall (±1%).
+        let att = report.stall_attribution;
+        assert!(
+            (att.total() - report.client_stall_secs).abs()
+                <= 0.01 * report.client_stall_secs + 1e-6,
+            "{att:?} vs stall {}",
+            report.client_stall_secs
+        );
+        let tel = report.telemetry.as_ref().expect("telemetry sampled");
+        assert!(tel.samples() > 0);
+    }
+
+    #[test]
+    fn untraced_session_carries_no_obs() {
+        let (cluster, catalog, spec) = setup();
+        let report =
+            Session::run(&catalog, &cluster, spec, &SessionConfig::default())
+                .unwrap();
+        assert!(report.obs.is_none());
+        assert!(report.telemetry.is_none());
+        // Attribution runs even untraced (it costs a few atomic reads
+        // per 2ms tick) and always reconciles with the measured stall.
+        assert!(
+            (report.stall_attribution.total() - report.client_stall_secs)
+                .abs()
+                <= 0.01 * report.client_stall_secs + 1e-6,
+            "{:?} vs stall {}",
+            report.stall_attribution,
+            report.client_stall_secs
         );
     }
 

@@ -52,6 +52,13 @@ pub struct PipelineOptions {
     /// outputs are byte-identical either way. No effect without an
     /// attached broker.
     pub shared_reads: bool,
+    /// Emit observability spans ([`crate::obs`]): when on, `run_session`
+    /// allocates an `Obs` sink (unless the caller supplied one) and
+    /// Master/workers/broker/clients record per-stage spans + latency
+    /// histograms, exportable as Chrome-trace JSON. Diagnostic only — it
+    /// never changes pipeline output, so it is deliberately *excluded*
+    /// from the tensor-cache session fingerprint.
+    pub tracing: bool,
 }
 
 impl Default for PipelineOptions {
@@ -65,6 +72,9 @@ impl Default for PipelineOptions {
             pushdown: true,
             row_group_pruning: true,
             shared_reads: true,
+            // Off by default: tracing is opt-in (CLI `--trace`, benches,
+            // tests) so the hot path stays span-free out of the box.
+            tracing: false,
         }
     }
 }
@@ -80,6 +90,7 @@ impl PipelineOptions {
             pushdown: false,
             row_group_pruning: false,
             shared_reads: false,
+            tracing: false,
         }
     }
 }
@@ -189,6 +200,7 @@ mod tests {
         assert!(p.pushdown);
         assert!(p.row_group_pruning);
         assert!(p.shared_reads);
+        assert!(!p.tracing, "tracing is opt-in, not a default");
         let b = PipelineOptions::baseline();
         assert!(b.coalesce.is_none());
         assert!(!b.fast_decode);
@@ -197,6 +209,7 @@ mod tests {
         assert!(!b.pushdown);
         assert!(!b.row_group_pruning);
         assert!(!b.shared_reads);
+        assert!(!b.tracing);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use crate::data::ColumnarBatch;
 use crate::dwrf::crypto::StreamCipher;
 use crate::dwrf::{DecodeMode, DedupStripe, DwrfReader, Encoding, FileMeta};
 use crate::metrics::EtlMetrics;
+use crate::obs::{ObsHandle, Stage};
 use crate::tectonic::{Cluster, FileId};
 use anyhow::Result;
 use std::collections::HashMap;
@@ -62,6 +63,11 @@ pub struct WorkerCore {
     broker: Option<BrokerHandle>,
     fingerprint: u64,
     seq: u64,
+    /// Optional span sink; `tid` is this worker's trace lane and
+    /// `cur_split` labels spans with the split being processed.
+    obs: Option<ObsHandle>,
+    tid: u32,
+    cur_split: u64,
 }
 
 impl WorkerCore {
@@ -80,6 +86,9 @@ impl WorkerCore {
             tensor_cache: None,
             broker: None,
             seq: 0,
+            obs: None,
+            tid: 0,
+            cur_split: 0,
         }
     }
 
@@ -98,6 +107,21 @@ impl WorkerCore {
     pub fn with_broker(mut self, handle: BrokerHandle) -> WorkerCore {
         self.broker = Some(handle);
         self
+    }
+
+    /// Emit per-stage spans + histogram records on `handle`, lane `tid`
+    /// (the worker id). A `None` handle costs one branch per stage.
+    pub fn with_obs(mut self, handle: ObsHandle, tid: u32) -> WorkerCore {
+        self.obs = Some(handle);
+        self.tid = tid;
+        self
+    }
+
+    #[inline]
+    fn span(&self, stage: Stage, t0: Instant) {
+        if let Some(h) = &self.obs {
+            h.span(self.tid, self.cur_split, stage, t0);
+        }
     }
 
     fn reader_for(&mut self, file: FileId) -> Result<DwrfReader> {
@@ -123,6 +147,7 @@ impl WorkerCore {
     pub fn process_split(&mut self, split: &Split) -> Result<Vec<WireBatch>> {
         let spec = self.spec.clone();
         let m = self.metrics.clone();
+        self.cur_split = split.id.0;
 
         // ---- tensor cache: a prior identical job/epoch already did this
         // split's work (§7.5) ----
@@ -165,6 +190,7 @@ impl WorkerCore {
         m.pruned_groups.add(plan.pruned_groups);
         m.pruned_group_rows.add(plan.pruned_group_rows);
         m.pruned_group_bytes.add(plan.pruned_group_bytes);
+        self.span(Stage::Plan, t);
 
         // The dedup path evaluates the DAG once per unique payload, which
         // is only sound when no op reads the row index (`Sampling` does);
@@ -186,6 +212,7 @@ impl WorkerCore {
             // projection, predicate, and transforms apply to its own
             // view downstream — pruned groups are dropped before their
             // rows are ever materialized into this session's batches.
+            let t_fetch = Instant::now();
             let mut handles = Vec::new();
             for sp in &plan.stripes {
                 let served =
@@ -201,7 +228,9 @@ impl WorkerCore {
                 handles.push((served.stripe, keep));
             }
             m.t_read.add(t.elapsed());
+            self.span(Stage::Fetch, t_fetch);
             if use_dedup {
+                let t_dec = Instant::now();
                 let stripes = handles
                     .iter()
                     .map(|(s, keep)| {
@@ -212,20 +241,24 @@ impl WorkerCore {
                         })
                     })
                     .collect::<Result<Vec<DedupStripe>>>()?;
+                self.span(Stage::Decode, t_dec);
                 self.finish_dedup(stripes)?
             } else {
+                let t_dec = Instant::now();
                 let batches: Vec<ColumnarBatch> = handles
                     .iter()
                     .map(|(s, keep)| {
                         s.to_columnar_masked(&spec.projection, keep.as_deref())
                     })
                     .collect();
+                self.span(Stage::Decode, t_dec);
                 self.finish_oblivious(batches)?
             }
         } else {
             // ---- private path: per-session I/O + decode. The plan's
             // I/O set already excludes pruned row groups' stream
             // extents where the layout permits.
+            let t_fetch = Instant::now();
             let mut bufs_per_stripe = Vec::new();
             for sp in &plan.stripes {
                 let bufs = self.cluster.execute_ios(split.file, &sp.ios)?;
@@ -237,6 +270,7 @@ impl WorkerCore {
                 ));
             }
             m.t_read.add(t.elapsed());
+            self.span(Stage::Fetch, t_fetch);
             if use_dedup {
                 let stripes = self.decode_dedup(&reader, &bufs_per_stripe)?;
                 self.finish_dedup(stripes)?
@@ -305,6 +339,7 @@ impl WorkerCore {
             batches.push(batch);
         }
         self.metrics.t_extract.add(t.elapsed());
+        self.span(Stage::Decode, t);
         Ok(batches)
     }
 
@@ -344,6 +379,7 @@ impl WorkerCore {
             }
         }
         m.t_extract.add(t.elapsed());
+        self.span(Stage::Decode, t);
 
         // ---- transform: run the DAG per stripe batch ----
         let t = Instant::now();
@@ -359,6 +395,7 @@ impl WorkerCore {
             transformed.push((outputs, batch.labels.clone(), batch.num_rows));
         }
         m.t_transform.add(t.elapsed());
+        self.span(Stage::Transform, t);
 
         // ---- load: batch into tensors, serialize + encrypt ----
         let t = Instant::now();
@@ -384,6 +421,7 @@ impl WorkerCore {
             }
         }
         m.t_load.add(t.elapsed());
+        self.span(Stage::Load, t);
         Ok(wire)
     }
 
@@ -412,6 +450,7 @@ impl WorkerCore {
             )?);
         }
         self.metrics.t_extract.add(t.elapsed());
+        self.span(Stage::Decode, t);
         Ok(stripes)
     }
 
@@ -462,6 +501,7 @@ impl WorkerCore {
             }
         }
         m.t_extract.add(t.elapsed());
+        self.span(Stage::Decode, t);
 
         // ---- transform: each unique payload exactly once ----
         let t = Instant::now();
@@ -477,6 +517,7 @@ impl WorkerCore {
             transformed.push((outputs, ds));
         }
         m.t_transform.add(t.elapsed());
+        self.span(Stage::Transform, t);
 
         // ---- load: inverse-keyed wire batches over the full rows ----
         let t = Instant::now();
@@ -526,6 +567,7 @@ impl WorkerCore {
             }
         }
         m.t_load.add(t.elapsed());
+        self.span(Stage::Load, t);
         Ok(wire)
     }
 }
@@ -562,6 +604,10 @@ impl Worker {
                     // Shared-read session: fetch through the broker.
                     core = core.with_broker(h);
                 }
+                if let Some(h) = master.obs_handle() {
+                    // Traced session: worker id is the trace lane.
+                    core = core.with_obs(h, id as u32);
+                }
                 while !stop2.load(Ordering::Relaxed) {
                     let Some(split) = master.fetch_split(id) else {
                         if master.is_done() {
@@ -597,6 +643,7 @@ impl Worker {
                             for b in batches {
                                 // Bounded buffer: block until the client
                                 // drains (backpressure).
+                                let t_send = Instant::now();
                                 let mut item = b;
                                 loop {
                                     match tx.try_send(item) {
@@ -633,6 +680,9 @@ impl Worker {
                                 if !ok {
                                     break;
                                 }
+                                // Send span covers backpressure waits —
+                                // the wire/loading tax of Table 9.
+                                core.span(Stage::WireSend, t_send);
                             }
                             if ok {
                                 master.complete_split(id, split.id);

@@ -39,6 +39,11 @@
 //!   per-session predicates, selection vectors, and transforms applied
 //!   after the shared decode (outputs stay byte-identical to private
 //!   scans);
+//! * **end-to-end observability** ([`obs`]): per-stage latency
+//!   histograms, span tracing exportable as Chrome trace-event JSON
+//!   (Perfetto-loadable), periodic session telemetry time-series, and
+//!   client data-stall attribution (storage- / decode- /
+//!   transform-bound / worker-starved) feeding the autoscaler;
 //! * a PJRT runtime that executes the AOT-compiled JAX/Pallas DLRM
 //!   artifacts from the Rust hot path ([`runtime`]);
 //! * drivers that regenerate every table and figure of the paper
@@ -54,6 +59,7 @@ pub mod dwrf;
 pub mod etl;
 pub mod filter;
 pub mod metrics;
+pub mod obs;
 pub mod paper;
 pub mod popularity;
 pub mod power;

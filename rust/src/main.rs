@@ -5,6 +5,7 @@
 //! dsi paper --exp table12 [--seed 42] [--scale tiny|standard|bench] [--json out.json]
 //! dsi paper --exp all
 //! dsi session --rm rm1 --workers 4 --clients 2 [--autoscale]
+//!             [--trace trace.json] [--telemetry telemetry.json]
 //! dsi train --steps 200 [--seed 7]
 //! dsi info
 //! ```
@@ -121,8 +122,14 @@ fn cmd_session(args: &Args) -> Result<()> {
             .schema
             .sample_projection(&mut rng, take, rm.popularity_zipf_s);
     let dag = session_dag(&mut rng, &rm, &handle.schema, &projection);
-    let spec = SessionSpec::from_dag(&handle.table_name, 0, u32::MAX, dag, 64);
+    let mut spec =
+        SessionSpec::from_dag(&handle.table_name, 0, u32::MAX, dag, 64);
 
+    let trace_path = args.get("trace").filter(|s| !s.is_empty());
+    let telemetry_path = args.get("telemetry").filter(|s| !s.is_empty());
+    if trace_path.is_some() || telemetry_path.is_some() {
+        spec.pipeline.tracing = true;
+    }
     let cfg = SessionConfig {
         initial_workers: args.get_u64("workers", 2) as usize,
         max_workers: args.get_u64("max-workers", 8) as usize,
@@ -132,6 +139,8 @@ fn cmd_session(args: &Args) -> Result<()> {
         } else {
             None
         },
+        telemetry_every: telemetry_path
+            .map(|_| std::time::Duration::from_millis(20)),
         ..Default::default()
     };
     println!(
@@ -143,7 +152,7 @@ fn cmd_session(args: &Args) -> Result<()> {
     println!("batches delivered  : {}", report.batches_delivered);
     println!("wall time          : {:.3}s", report.wall_secs);
     println!("throughput         : {:.0} rows/s", report.rows_per_sec);
-    println!("worker QPS (busy)  : {:.0} rows/s", report.worker_qps);
+    println!("worker QPS (wall)  : {:.0} rows/s", report.worker_qps);
     println!("peak workers       : {}", report.peak_workers);
     println!(
         "worker pool        : {:.2} worker-secs ({} retired, {} final)",
@@ -162,6 +171,59 @@ fn cmd_session(args: &Args) -> Result<()> {
         report.storage_bytes_read as f64 / 1e6,
         report.storage_mbps()
     );
+    let att = &report.stall_attribution;
+    println!(
+        "client stall       : {:.3}s [{}] storage {:.3}s / decode {:.3}s \
+         / transform {:.3}s / starved {:.3}s",
+        report.client_stall_secs,
+        att.dominant(),
+        att.storage_secs,
+        att.decode_secs,
+        att.transform_secs,
+        att.starved_secs
+    );
+    if let Some(path) = trace_path {
+        let obs = report.obs.as_ref().expect("traced session has a sink");
+        write_chrome_trace(obs, path)?;
+        println!("trace              : wrote {path}");
+    }
+    if let Some(path) = telemetry_path {
+        let obs = report.obs.as_ref().expect("traced session has a sink");
+        let mut j = dsi::util::json::Json::obj();
+        j.set("stage_histograms", obs.histograms_json())
+            .set("stall_attribution", report.stall_attribution.to_json());
+        if let Some(tel) = &report.telemetry {
+            j.set("telemetry", tel.to_json());
+        }
+        std::fs::write(path, j.to_string_pretty())
+            .with_context(|| format!("write {path}"))?;
+        println!("telemetry          : wrote {path}");
+    }
+    Ok(())
+}
+
+/// Export + self-check: serialize the Chrome trace, re-parse it, and
+/// require at least one complete (`"ph": "X"`) span before writing —
+/// an empty or malformed trace is an error, not a silent artifact.
+fn write_chrome_trace(obs: &dsi::obs::Obs, path: &str) -> Result<()> {
+    use dsi::util::json::Json;
+    let text = obs.chrome_trace().to_string_pretty();
+    let parsed = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("trace JSON malformed: {e}"))?;
+    let spans = parsed
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .map_or(0, |evs| {
+            evs.iter()
+                .filter(|ev| {
+                    ev.get("ph").and_then(|p| p.as_str()) == Some("X")
+                })
+                .count()
+        });
+    if spans == 0 {
+        bail!("trace contains no spans — nothing was recorded");
+    }
+    std::fs::write(path, text).with_context(|| format!("write {path}"))?;
     Ok(())
 }
 

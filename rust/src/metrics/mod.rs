@@ -130,12 +130,28 @@ impl EtlMetrics {
             + self.t_misc.secs()
     }
 
-    pub fn qps(&self) -> f64 {
+    /// Delivered rows per summed busy-second — a per-worker *efficiency*
+    /// number, NOT wall-clock throughput: stage clocks accumulate across
+    /// overlapping worker threads, so this understates throughput the
+    /// moment two workers run concurrently. Use [`qps_wall`](Self::qps_wall)
+    /// for throughput.
+    pub fn rows_per_busy_sec(&self) -> f64 {
         let t = self.total_secs();
         if t == 0.0 {
             0.0
         } else {
             self.samples.get() as f64 / t
+        }
+    }
+
+    /// Wall-clock throughput: delivered rows per elapsed second. The
+    /// caller supplies the wall time (metrics can't know it — clocks
+    /// here only accumulate busy time).
+    pub fn qps_wall(&self, wall_secs: f64) -> f64 {
+        if wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.samples.get() as f64 / wall_secs
         }
     }
 
@@ -360,7 +376,24 @@ mod tests {
         let m = EtlMetrics::default();
         m.samples.add(500);
         m.t_transform.add(Duration::from_millis(500));
-        assert!((m.qps() - 1000.0).abs() < 1.0);
+        assert!((m.rows_per_busy_sec() - 1000.0).abs() < 1.0);
+        assert!((m.qps_wall(0.5) - 1000.0).abs() < 1.0);
+        assert_eq!(m.qps_wall(0.0), 0.0);
+    }
+
+    #[test]
+    fn busy_sec_rate_understates_overlapped_throughput() {
+        // Two workers, each 1s busy over the same 1s of wall time,
+        // delivering 1000 rows total: true throughput is 1000 rows/s,
+        // but summed busy-seconds is 2 — the regression qps() had.
+        let m = EtlMetrics::default();
+        m.samples.add(1000);
+        m.t_read.add(Duration::from_millis(600));
+        m.t_transform.add(Duration::from_millis(400));
+        m.t_read.add(Duration::from_millis(500));
+        m.t_transform.add(Duration::from_millis(500));
+        assert!((m.qps_wall(1.0) - 1000.0).abs() < 1e-9);
+        assert!((m.rows_per_busy_sec() - 500.0).abs() < 1e-9);
     }
 
     #[test]

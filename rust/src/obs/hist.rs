@@ -1,0 +1,223 @@
+//! Log-bucketed latency histogram (HDR-lite): lock-free recording via
+//! relaxed atomics, mergeable across workers/sessions, quantiles with a
+//! bounded ~12% relative error.
+//!
+//! Buckets are 8 linear sub-buckets per power-of-two octave
+//! (`SUB_BITS = 3`), covering 1 ns up to ~2.4 h; anything longer clamps
+//! into the last bucket. Bucketing is deterministic per value, so
+//! merging two histograms is exactly equivalent to recording both
+//! streams into one (`merge == concat`, proven in `tests/proptests.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+const SUB_BITS: u32 = 3;
+const SUBS: usize = 1 << SUB_BITS;
+/// Octaves above the linear 0..SUBS range; the top bucket absorbs
+/// everything past ~2^43 ns (~2.4 h).
+const OCTAVES: usize = 40;
+const BUCKETS: usize = (OCTAVES + 1) * SUBS;
+
+/// Map a nanosecond value to its bucket index.
+#[inline]
+fn bucket_index(ns: u64) -> usize {
+    if ns < SUBS as u64 {
+        return ns as usize;
+    }
+    let octave = 63 - ns.leading_zeros();
+    let shift = octave - SUB_BITS;
+    let sub = ((ns >> shift) & (SUBS as u64 - 1)) as usize;
+    (((octave - SUB_BITS + 1) as usize) * SUBS + sub).min(BUCKETS - 1)
+}
+
+/// Inclusive upper bound (in ns) of the values a bucket holds — what
+/// quantiles report, so they never understate the true value (except in
+/// the clamped top bucket).
+#[inline]
+fn bucket_upper_ns(idx: usize) -> u64 {
+    if idx < SUBS {
+        return idx as u64;
+    }
+    let octave = (idx / SUBS - 1) as u32 + SUB_BITS;
+    let sub = (idx % SUBS) as u64;
+    let shift = octave - SUB_BITS;
+    (1u64 << octave) + (sub << shift) + (1u64 << shift) - 1
+}
+
+/// Thread-safe log-bucketed histogram of durations.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.counts[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Total recorded time in seconds (exact, not bucket-quantized).
+    pub fn total_secs(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_secs() / n as f64
+        }
+    }
+
+    /// Quantile in seconds: the upper bound of the bucket holding the
+    /// rank-`ceil(q * count)` observation. 0.0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64)
+            .clamp(1, total);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_upper_ns(i) as f64 / 1e9;
+            }
+        }
+        // Racy concurrent records can leave `seen` short; report the max.
+        bucket_upper_ns(BUCKETS - 1) as f64 / 1e9
+    }
+
+    /// Fold `other` into `self`. Bucket-exact: the result is identical
+    /// to having recorded both streams into one histogram.
+    pub fn merge(&self, other: &Histogram) {
+        for (a, b) in self.counts.iter().zip(other.counts.iter()) {
+            a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// `{count, p50, p95, p99, mean_secs, total_secs}` for report JSON.
+    pub fn summary_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("count", self.count())
+            .set("p50_secs", self.quantile(0.50))
+            .set("p95_secs", self.quantile(0.95))
+            .set("p99_secs", self.quantile(0.99))
+            .set("mean_secs", self.mean_secs())
+            .set("total_secs", self.total_secs());
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_continuous_at_octaves() {
+        // 0..SUBS map to themselves; 8..15 stay continuous.
+        for ns in 0..64u64 {
+            assert!(bucket_index(ns + 1) >= bucket_index(ns));
+            assert!(bucket_upper_ns(bucket_index(ns)) >= ns);
+        }
+        assert_eq!(bucket_index(7), 7);
+        assert_eq!(bucket_index(8), 8);
+        assert_eq!(bucket_index(15), 15);
+        assert_eq!(bucket_index(16), 16);
+        // Huge values clamp instead of indexing out of range.
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_upper_bounds_are_strictly_increasing() {
+        for i in 1..BUCKETS {
+            assert!(bucket_upper_ns(i) > bucket_upper_ns(i - 1), "idx {i}");
+        }
+    }
+
+    #[test]
+    fn quantiles_bracket_recorded_values() {
+        let h = Histogram::new();
+        for ms in 1..=100u64 {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        // p50 of 1..=100 ms is ~50ms, within one bucket (~12%).
+        assert!((0.045..=0.060).contains(&p50), "p50 {p50}");
+        assert!((0.095..=0.120).contains(&p99), "p99 {p99}");
+        assert!(h.quantile(0.0) <= p50 && p50 <= p99);
+        assert!((h.total_secs() - 5.050).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_equals_concat() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let all = Histogram::new();
+        for ns in [3u64, 900, 1_000_000, 17, 42_000_000_000] {
+            a.record_ns(ns);
+            all.record_ns(ns);
+        }
+        for ns in [5u64, 5, 123_456, 7_000_000_000] {
+            b.record_ns(ns);
+            all.record_ns(ns);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.total_secs(), all.total_secs());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), all.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean_secs(), 0.0);
+        let j = h.summary_json();
+        assert_eq!(j.get("count").unwrap().as_f64(), Some(0.0));
+    }
+}

@@ -1,0 +1,159 @@
+//! Observability for the DSI pipeline: per-stage latency histograms,
+//! span tracing (Chrome trace-event export), periodic session
+//! telemetry, and client data-stall attribution.
+//!
+//! One [`Obs`] instance can span multiple concurrent sessions (each
+//! [`register_session`](Obs::register_session) gets its own Chrome
+//! trace `pid` track); Master, workers, broker, and clients emit spans
+//! through cheap [`ObsHandle`]s — a histogram record plus one bounded
+//! ring-buffer push per span, nothing on the hot path when tracing is
+//! off (the handle is simply absent).
+
+pub mod hist;
+pub mod stall;
+pub mod telemetry;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use stall::{StallAttribution, StallAttributor, StallSnapshot};
+pub use telemetry::{SessionTelemetry, TelemetrySample};
+pub use trace::{SpanEvent, Stage, TraceRecorder};
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default span ring-buffer capacity (~4 MB of spans).
+pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 16;
+
+/// Shared observability sink: one per run, shared across sessions.
+#[derive(Debug)]
+pub struct Obs {
+    epoch: Instant,
+    pub trace: TraceRecorder,
+    hists: [Histogram; Stage::COUNT],
+    sessions: Mutex<Vec<String>>,
+}
+
+impl Obs {
+    pub fn new() -> Arc<Obs> {
+        Self::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Arc<Obs> {
+        Arc::new(Obs {
+            epoch: Instant::now(),
+            trace: TraceRecorder::new(capacity),
+            hists: std::array::from_fn(|_| Histogram::new()),
+            sessions: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Register a session by name; the returned index is its Chrome
+    /// trace `pid` and the `session` field of its spans.
+    pub fn register_session(&self, name: &str) -> u32 {
+        let mut s = self.sessions.lock().unwrap();
+        s.push(name.to_string());
+        (s.len() - 1) as u32
+    }
+
+    /// The latency histogram for one pipeline stage (all sessions).
+    pub fn hist(&self, stage: Stage) -> &Histogram {
+        &self.hists[stage.index()]
+    }
+
+    /// Record a span that started at `t0` and ends now: bumps the
+    /// stage histogram and appends a trace event.
+    pub fn span(&self, session: u32, tid: u32, split: u64, stage: Stage, t0: Instant) {
+        let dur = t0.elapsed();
+        self.hists[stage.index()].record(dur);
+        let t0_ns = t0.saturating_duration_since(self.epoch).as_nanos() as u64;
+        self.trace.record(SpanEvent {
+            session,
+            tid,
+            split,
+            stage,
+            t0_ns,
+            dur_ns: dur.as_nanos() as u64,
+        });
+    }
+
+    /// Chrome trace-event JSON for every registered session's spans.
+    pub fn chrome_trace(&self) -> Json {
+        let sessions = self.sessions.lock().unwrap().clone();
+        self.trace.chrome_trace(&sessions)
+    }
+
+    /// `{stage name: histogram summary}` across all stages.
+    pub fn histograms_json(&self) -> Json {
+        let mut j = Json::obj();
+        for stage in Stage::ALL {
+            j.set(stage.name(), self.hist(stage).summary_json());
+        }
+        j
+    }
+}
+
+/// Cheap per-session handle: the [`Obs`] sink plus this session's id.
+#[derive(Clone, Debug)]
+pub struct ObsHandle {
+    pub obs: Arc<Obs>,
+    pub session: u32,
+}
+
+impl ObsHandle {
+    /// Register `name` as a new session on `obs` and return its handle.
+    pub fn for_session(obs: Arc<Obs>, name: &str) -> ObsHandle {
+        let session = obs.register_session(name);
+        ObsHandle { obs, session }
+    }
+
+    #[inline]
+    pub fn span(&self, tid: u32, split: u64, stage: Stage, t0: Instant) {
+        self.obs.span(self.session, tid, split, stage, t0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_land_in_histogram_and_trace() {
+        let obs = Obs::with_capacity(8);
+        let h = ObsHandle::for_session(obs.clone(), "rm1");
+        assert_eq!(h.session, 0);
+        let t0 = Instant::now();
+        h.span(3, 42, Stage::Transform, t0);
+        assert_eq!(obs.hist(Stage::Transform).count(), 1);
+        assert_eq!(obs.trace.len(), 1);
+        let ev = obs.trace.events()[0];
+        assert_eq!(ev.session, 0);
+        assert_eq!(ev.tid, 3);
+        assert_eq!(ev.split, 42);
+        assert_eq!(ev.stage, Stage::Transform);
+    }
+
+    #[test]
+    fn sessions_get_distinct_pids() {
+        let obs = Obs::new();
+        let a = ObsHandle::for_session(obs.clone(), "a");
+        let b = ObsHandle::for_session(obs.clone(), "b");
+        assert_ne!(a.session, b.session);
+        let j = obs.chrome_trace();
+        match j.get("traceEvents").unwrap() {
+            Json::Arr(xs) => assert_eq!(xs.len(), 2), // two metadata records
+            _ => panic!("traceEvents not an array"),
+        }
+    }
+
+    #[test]
+    fn histograms_json_covers_every_stage() {
+        let obs = Obs::new();
+        let j = obs.histograms_json();
+        for stage in Stage::ALL {
+            assert!(j.get(stage.name()).is_some(), "{}", stage.name());
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Data-stall attribution: split the client's stall seconds into
+//! storage-bound / decode-bound / transform-bound / worker-starved
+//! buckets by looking at what the worker pool was doing *while* the
+//! client waited (the paper's Fig 9 / Table 7 diagnostic, per session).
+//!
+//! The attributor consumes cumulative snapshots from the session
+//! control loop. For each interval where stall time grew, the stall
+//! delta is apportioned over the concurrent per-stage busy-time deltas;
+//! worker idle time (live-worker wall capacity minus busy time) maps to
+//! "worker-starved" — the pool had nothing leased or was too small.
+
+use crate::util::json::Json;
+
+/// Stall seconds attributed per cause. Buckets sum to the session's
+/// `client_stall_secs` after [`StallAttributor::finish`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StallAttribution {
+    /// Waiting on Tectonic reads (the fetch stage dominated).
+    pub storage_secs: f64,
+    /// Waiting on decrypt + decode.
+    pub decode_secs: f64,
+    /// Waiting on transforms + tensor load.
+    pub transform_secs: f64,
+    /// Workers were idle or absent while the client starved — a pool
+    /// sizing / scheduling problem, not a stage bottleneck.
+    pub starved_secs: f64,
+}
+
+impl StallAttribution {
+    pub fn total(&self) -> f64 {
+        self.storage_secs + self.decode_secs + self.transform_secs
+            + self.starved_secs
+    }
+
+    /// Rescale the buckets so they sum exactly to `total` (the
+    /// authoritative `client_stall_secs`). Zero/negative totals clear
+    /// the attribution; an empty accumulator books everything as
+    /// starved (stall with no observed concurrent work).
+    pub fn scaled_to(&self, total: f64) -> StallAttribution {
+        if total <= 0.0 {
+            return StallAttribution::default();
+        }
+        let t = self.total();
+        if t <= 1e-12 {
+            return StallAttribution {
+                starved_secs: total,
+                ..StallAttribution::default()
+            };
+        }
+        let k = total / t;
+        StallAttribution {
+            storage_secs: self.storage_secs * k,
+            decode_secs: self.decode_secs * k,
+            transform_secs: self.transform_secs * k,
+            starved_secs: self.starved_secs * k,
+        }
+    }
+
+    /// The heaviest bucket's label, for one-line reports.
+    pub fn dominant(&self) -> &'static str {
+        let buckets = [
+            (self.storage_secs, "storage-bound"),
+            (self.decode_secs, "decode-bound"),
+            (self.transform_secs, "transform-bound"),
+            (self.starved_secs, "worker-starved"),
+        ];
+        let mut best = (0.0f64, "none");
+        for (v, name) in buckets {
+            if v > best.0 {
+                best = (v, name);
+            }
+        }
+        best.1
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("storage_secs", self.storage_secs)
+            .set("decode_secs", self.decode_secs)
+            .set("transform_secs", self.transform_secs)
+            .set("starved_secs", self.starved_secs)
+            .set("dominant", self.dominant());
+        j
+    }
+}
+
+/// One cumulative observation from the session control loop.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StallSnapshot {
+    /// Session wall clock, seconds since start.
+    pub t_secs: f64,
+    /// Cumulative client stall seconds (all clients summed).
+    pub stall_secs: f64,
+    /// Cumulative worker storage-read busy seconds (`t_read`).
+    pub read_secs: f64,
+    /// Cumulative decrypt+decode busy seconds (`t_extract`).
+    pub decode_secs: f64,
+    /// Cumulative transform + tensor-load busy seconds.
+    pub transform_secs: f64,
+    /// Live workers at snapshot time.
+    pub live_workers: usize,
+}
+
+/// Incremental attributor: feed it cumulative [`StallSnapshot`]s,
+/// read partial attribution via [`so_far`](Self::so_far), and close
+/// with [`finish`](Self::finish) once the final stall total is known.
+#[derive(Debug, Default)]
+pub struct StallAttributor {
+    prev: Option<StallSnapshot>,
+    acc: StallAttribution,
+}
+
+impl StallAttributor {
+    pub fn observe(&mut self, snap: StallSnapshot) {
+        let Some(prev) = self.prev.replace(snap) else {
+            return;
+        };
+        let dstall = snap.stall_secs - prev.stall_secs;
+        if dstall <= 0.0 {
+            return;
+        }
+        let dt = (snap.t_secs - prev.t_secs).max(0.0);
+        let dread = (snap.read_secs - prev.read_secs).max(0.0);
+        let ddecode = (snap.decode_secs - prev.decode_secs).max(0.0);
+        let dxform = (snap.transform_secs - prev.transform_secs).max(0.0);
+        let busy = dread + ddecode + dxform;
+        let pool = snap.live_workers.max(prev.live_workers) as f64;
+        let idle = (pool * dt - busy).max(0.0);
+        let weight = busy + idle;
+        if weight <= 1e-12 {
+            // No workers and no work observed: the client starved.
+            self.acc.starved_secs += dstall;
+            return;
+        }
+        self.acc.storage_secs += dstall * dread / weight;
+        self.acc.decode_secs += dstall * ddecode / weight;
+        self.acc.transform_secs += dstall * dxform / weight;
+        self.acc.starved_secs += dstall * idle / weight;
+    }
+
+    /// Attribution accumulated so far (unscaled).
+    pub fn so_far(&self) -> StallAttribution {
+        self.acc
+    }
+
+    /// Final attribution, rescaled so buckets sum exactly to `total`
+    /// (the joined clients' stall seconds).
+    pub fn finish(&self, total: f64) -> StallAttribution {
+        self.acc.scaled_to(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(
+        t: f64,
+        stall: f64,
+        read: f64,
+        decode: f64,
+        xform: f64,
+        live: usize,
+    ) -> StallSnapshot {
+        StallSnapshot {
+            t_secs: t,
+            stall_secs: stall,
+            read_secs: read,
+            decode_secs: decode,
+            transform_secs: xform,
+            live_workers: live,
+        }
+    }
+
+    #[test]
+    fn attributes_to_the_busy_stage() {
+        let mut a = StallAttributor::default();
+        a.observe(snap(0.0, 0.0, 0.0, 0.0, 0.0, 1));
+        // One worker fully busy reading while the client stalled 0.5s.
+        a.observe(snap(1.0, 0.5, 1.0, 0.0, 0.0, 1));
+        let got = a.finish(0.5);
+        assert!((got.storage_secs - 0.5).abs() < 1e-9, "{got:?}");
+        assert!((got.total() - 0.5).abs() < 1e-9);
+        assert_eq!(got.dominant(), "storage-bound");
+    }
+
+    #[test]
+    fn idle_pool_reads_as_starved() {
+        let mut a = StallAttributor::default();
+        a.observe(snap(0.0, 0.0, 0.0, 0.0, 0.0, 2));
+        // Two live workers, zero busy time: all stall is starvation.
+        a.observe(snap(1.0, 1.0, 0.0, 0.0, 0.0, 2));
+        let got = a.finish(1.0);
+        assert!((got.starved_secs - 1.0).abs() < 1e-9, "{got:?}");
+        assert_eq!(got.dominant(), "worker-starved");
+    }
+
+    #[test]
+    fn splits_proportionally_and_rescales() {
+        let mut a = StallAttributor::default();
+        a.observe(snap(0.0, 0.0, 0.0, 0.0, 0.0, 1));
+        // 1 worker over 1s: 0.25 read, 0.25 decode, 0.5 transform.
+        a.observe(snap(1.0, 0.8, 0.25, 0.5, 1.0, 1));
+        // finish() rescales to the authoritative total.
+        let got = a.finish(1.6);
+        assert!((got.total() - 1.6).abs() < 1e-9);
+        assert!((got.storage_secs - 0.4).abs() < 1e-9, "{got:?}");
+        assert!((got.decode_secs - 0.4).abs() < 1e-9);
+        assert!((got.transform_secs - 0.8).abs() < 1e-9);
+        assert_eq!(got.dominant(), "transform-bound");
+    }
+
+    #[test]
+    fn no_observations_books_everything_as_starved() {
+        let a = StallAttributor::default();
+        let got = a.finish(2.0);
+        assert!((got.starved_secs - 2.0).abs() < 1e-12);
+        assert_eq!(a.finish(0.0), StallAttribution::default());
+        assert_eq!(StallAttribution::default().dominant(), "none");
+    }
+
+    #[test]
+    fn stall_free_intervals_accumulate_nothing() {
+        let mut a = StallAttributor::default();
+        a.observe(snap(0.0, 0.0, 0.0, 0.0, 0.0, 1));
+        a.observe(snap(1.0, 0.0, 0.9, 0.0, 0.0, 1));
+        assert_eq!(a.so_far(), StallAttribution::default());
+    }
+}

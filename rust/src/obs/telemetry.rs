@@ -1,0 +1,158 @@
+//! Periodic session telemetry: the control loop samples pool, buffer,
+//! broker, and drain state into [`Series`] time-series — the per-session
+//! inputs the ROADMAP's fleet-level scheduler arbitrates on.
+
+use crate::metrics::Series;
+use crate::util::json::Json;
+
+/// One sampled snapshot. `drained_rows` / `stall_secs` are cumulative;
+/// the telemetry turns them into rates between samples.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TelemetrySample {
+    pub t_secs: f64,
+    pub live_workers: usize,
+    /// Mean buffered tensor batches per live worker.
+    pub avg_buffered: f64,
+    pub broker_hit_rate: f64,
+    pub broker_mem_bytes: u64,
+    pub cache_bytes: u64,
+    pub drained_rows: u64,
+    pub stall_secs: f64,
+}
+
+/// Time-series telemetry for one session run.
+#[derive(Clone, Debug)]
+pub struct SessionTelemetry {
+    pub live_workers: Series,
+    pub avg_buffered: Series,
+    pub broker_hit_rate: Series,
+    pub broker_mem_mb: Series,
+    pub cache_mb: Series,
+    pub drain_rows_per_sec: Series,
+    /// Stall seconds accrued per wall second; can exceed 1.0 when
+    /// several clients stall concurrently.
+    pub stall_frac: Series,
+    last: Option<TelemetrySample>,
+}
+
+impl Default for SessionTelemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SessionTelemetry {
+    pub fn new() -> Self {
+        Self {
+            live_workers: Series::new("live_workers"),
+            avg_buffered: Series::new("avg_buffered_tensors"),
+            broker_hit_rate: Series::new("broker_hit_rate"),
+            broker_mem_mb: Series::new("broker_mem_mb"),
+            cache_mb: Series::new("cache_mb"),
+            drain_rows_per_sec: Series::new("drain_rows_per_sec"),
+            stall_frac: Series::new("stall_secs_per_sec"),
+            last: None,
+        }
+    }
+
+    pub fn observe(&mut self, s: TelemetrySample) {
+        let t = s.t_secs;
+        self.live_workers.push(t, s.live_workers as f64);
+        self.avg_buffered.push(t, s.avg_buffered);
+        self.broker_hit_rate.push(t, s.broker_hit_rate);
+        self.broker_mem_mb.push(t, s.broker_mem_bytes as f64 / 1e6);
+        self.cache_mb.push(t, s.cache_bytes as f64 / 1e6);
+        if let Some(prev) = self.last {
+            let dt = (t - prev.t_secs).max(1e-9);
+            let drained = s.drained_rows.saturating_sub(prev.drained_rows);
+            self.drain_rows_per_sec.push(t, drained as f64 / dt);
+            let dstall = (s.stall_secs - prev.stall_secs).max(0.0);
+            self.stall_frac.push(t, dstall / dt);
+        }
+        self.last = Some(s);
+    }
+
+    pub fn samples(&self) -> usize {
+        self.live_workers.points.len()
+    }
+
+    fn all_series(&self) -> [&Series; 7] {
+        [
+            &self.live_workers,
+            &self.avg_buffered,
+            &self.broker_hit_rate,
+            &self.broker_mem_mb,
+            &self.cache_mb,
+            &self.drain_rows_per_sec,
+            &self.stall_frac,
+        ]
+    }
+
+    /// `{"series": [{"name", "points": [[t, y], ...]}, ...]}`.
+    pub fn to_json(&self) -> Json {
+        let series: Vec<Json> = self
+            .all_series()
+            .iter()
+            .map(|s| {
+                let pts: Vec<Json> = s
+                    .points
+                    .iter()
+                    .map(|&(x, y)| Json::Arr(vec![x.into(), y.into()]))
+                    .collect();
+                let mut j = Json::obj();
+                j.set("name", s.name.as_str()).set("points", Json::Arr(pts));
+                j
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("series", Json::Arr(series));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_come_from_cumulative_deltas() {
+        let mut t = SessionTelemetry::new();
+        t.observe(TelemetrySample {
+            t_secs: 0.0,
+            live_workers: 2,
+            drained_rows: 0,
+            stall_secs: 0.0,
+            ..Default::default()
+        });
+        t.observe(TelemetrySample {
+            t_secs: 2.0,
+            live_workers: 3,
+            drained_rows: 500,
+            stall_secs: 0.4,
+            ..Default::default()
+        });
+        assert_eq!(t.samples(), 2);
+        // Rate series only start at the second sample.
+        assert_eq!(t.drain_rows_per_sec.points.len(), 1);
+        let (_, rps) = t.drain_rows_per_sec.points[0];
+        assert!((rps - 250.0).abs() < 1e-9);
+        let (_, sf) = t.stall_frac.points[0];
+        assert!((sf - 0.2).abs() < 1e-9);
+        assert_eq!(t.live_workers.points[1].1, 3.0);
+    }
+
+    #[test]
+    fn json_has_all_series() {
+        let mut t = SessionTelemetry::new();
+        t.observe(TelemetrySample::default());
+        let j = t.to_json();
+        let series = match j.get("series").unwrap() {
+            Json::Arr(xs) => xs,
+            _ => panic!("series not an array"),
+        };
+        assert_eq!(series.len(), 7);
+        assert!(series
+            .iter()
+            .any(|s| s.get("name") == Some(&Json::Str("stall_secs_per_sec".into()))));
+    }
+}

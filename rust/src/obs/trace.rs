@@ -1,0 +1,226 @@
+//! Span tracing: a bounded ring buffer of `(session, split, stage, t0,
+//! dur)` events, exportable as Chrome trace-event JSON that loads in
+//! `chrome://tracing` or Perfetto.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// The DSI pipeline stages a span can belong to, in pipeline order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Master split enumeration + footer planning.
+    Plan,
+    /// Storage I/O: Tectonic reads (private or through the broker).
+    Fetch,
+    /// Decrypt + decode fetched streams into columnar rows, and apply
+    /// the session's predicate/selection.
+    Decode,
+    /// The per-feature transform DAG.
+    Transform,
+    /// Tensorization: surviving rows into wire-ready tensor batches.
+    Load,
+    /// Worker-side channel send (includes backpressure waits).
+    WireSend,
+    /// Client-side receive, including any stall waiting for a batch.
+    WireRecv,
+    /// Client-side drain: decrypt + deserialize (+ dedup expansion).
+    Drain,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 8] = [
+        Stage::Plan,
+        Stage::Fetch,
+        Stage::Decode,
+        Stage::Transform,
+        Stage::Load,
+        Stage::WireSend,
+        Stage::WireRecv,
+        Stage::Drain,
+    ];
+    pub const COUNT: usize = Self::ALL.len();
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Plan => "plan",
+            Stage::Fetch => "fetch",
+            Stage::Decode => "decode",
+            Stage::Transform => "transform",
+            Stage::Load => "load",
+            Stage::WireSend => "wire_send",
+            Stage::WireRecv => "wire_recv",
+            Stage::Drain => "drain",
+        }
+    }
+
+    #[inline]
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// One completed span. `t0_ns` is relative to the recorder's epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    /// Session index from [`super::Obs::register_session`] — the Chrome
+    /// trace `pid`, so each session renders as its own process track.
+    pub session: u32,
+    /// Lane within the session (worker id, or client id offset past the
+    /// workers) — the Chrome trace `tid`.
+    pub tid: u32,
+    pub split: u64,
+    pub stage: Stage,
+    pub t0_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// Bounded ring buffer of spans. When full, the oldest span is dropped
+/// (and counted) so a long session keeps its most recent window.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    events: Mutex<VecDeque<SpanEvent>>,
+    capacity: usize,
+    dropped: AtomicU64,
+}
+
+impl TraceRecorder {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            events: Mutex::new(VecDeque::with_capacity(capacity.min(4096))),
+            capacity: capacity.max(1),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, ev: SpanEvent) {
+        let mut q = self.events.lock().unwrap();
+        if q.len() == self.capacity {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans evicted to keep the buffer bounded.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn events(&self) -> Vec<SpanEvent> {
+        self.events.lock().unwrap().iter().copied().collect()
+    }
+
+    /// Export as Chrome trace-event JSON: one `"M"` process-name record
+    /// per session in `sessions` (index == pid), then one `"ph": "X"`
+    /// complete event per span (ts/dur in microseconds).
+    pub fn chrome_trace(&self, sessions: &[String]) -> Json {
+        let mut events = Vec::new();
+        for (pid, name) in sessions.iter().enumerate() {
+            let mut args = Json::obj();
+            args.set("name", format!("session {name}"));
+            let mut m = Json::obj();
+            m.set("ph", "M")
+                .set("name", "process_name")
+                .set("pid", pid)
+                .set("tid", 0u64)
+                .set("args", args);
+            events.push(m);
+        }
+        for ev in self.events() {
+            let mut args = Json::obj();
+            args.set("split", ev.split);
+            let mut x = Json::obj();
+            x.set("ph", "X")
+                .set("name", ev.stage.name())
+                .set("cat", "dsi")
+                .set("ts", ev.t0_ns as f64 / 1e3)
+                .set("dur", ev.dur_ns.max(1) as f64 / 1e3)
+                .set("pid", ev.session)
+                .set("tid", ev.tid)
+                .set("args", args);
+            events.push(x);
+        }
+        let mut j = Json::obj();
+        j.set("traceEvents", Json::Arr(events))
+            .set("displayTimeUnit", "ms");
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(session: u32, split: u64, stage: Stage, t0: u64, dur: u64) -> SpanEvent {
+        SpanEvent {
+            session,
+            tid: 0,
+            split,
+            stage,
+            t0_ns: t0,
+            dur_ns: dur,
+        }
+    }
+
+    #[test]
+    fn stage_all_covers_every_variant() {
+        assert_eq!(Stage::ALL.len(), Stage::COUNT);
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+        }
+    }
+
+    #[test]
+    fn ring_buffer_drops_oldest() {
+        let t = TraceRecorder::new(3);
+        for i in 0..5u64 {
+            t.record(ev(0, i, Stage::Fetch, i * 100, 10));
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dropped(), 2);
+        let splits: Vec<u64> = t.events().iter().map(|e| e.split).collect();
+        assert_eq!(splits, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let t = TraceRecorder::new(16);
+        t.record(ev(0, 7, Stage::Decode, 2_000, 1_500));
+        let j = t.chrome_trace(&["rm1".to_string()]);
+        let evs = match j.get("traceEvents").unwrap() {
+            Json::Arr(xs) => xs,
+            _ => panic!("traceEvents not an array"),
+        };
+        assert_eq!(evs.len(), 2); // metadata + span
+        let span = &evs[1];
+        assert_eq!(span.get("name"), Some(&Json::Str("decode".into())));
+        assert_eq!(span.get("ts").unwrap().as_f64(), Some(2.0));
+        assert_eq!(span.get("dur").unwrap().as_f64(), Some(1.5));
+        let args = span.get("args").unwrap();
+        assert_eq!(args.get("split").unwrap().as_f64(), Some(7.0));
+    }
+
+    #[test]
+    fn zero_duration_spans_render_visible() {
+        let t = TraceRecorder::new(4);
+        t.record(ev(0, 1, Stage::Load, 0, 0));
+        let j = t.chrome_trace(&[]);
+        let evs = match j.get("traceEvents").unwrap() {
+            Json::Arr(xs) => xs,
+            _ => unreachable!(),
+        };
+        // 0 ns floors to 1 ns = 0.001 us so viewers draw the slice.
+        assert_eq!(evs[0].get("dur").unwrap().as_f64(), Some(0.001));
+    }
+}

@@ -1,7 +1,10 @@
-//! Minimal JSON value model + serializer (no serde in the offline env).
+//! Minimal JSON value model + serializer + parser (no serde in the
+//! offline env).
 //!
 //! Only what the experiment reports need: objects, arrays, strings,
-//! numbers, bools. Output is deterministic (insertion-ordered objects).
+//! numbers, bools. Output is deterministic (insertion-ordered objects);
+//! [`Json::parse`] round-trips anything the serializer emits (used to
+//! self-validate trace exports before they are written to disk).
 
 use std::fmt::Write as _;
 
@@ -50,6 +53,36 @@ impl Json {
             Json::Num(x) => Some(*x),
             _ => None,
         }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON document. Handles everything the serializer emits
+    /// (and standard JSON generally: escapes, `\uXXXX` with surrogate
+    /// pairs, nested containers); errors carry a byte offset.
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let mut p = Parser {
+            b: s.as_bytes(),
+            i: 0,
+        };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing data at byte {}", p.i));
+        }
+        Ok(v)
     }
 
     pub fn to_string_pretty(&self) -> String {
@@ -127,6 +160,215 @@ impl Json {
                     out.push_str(&"  ".repeat(indent));
                 }
                 out.push('}');
+            }
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(&c) = self.b.get(self.i) {
+            if matches!(c, b' ' | b'\t' | b'\n' | b'\r') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at byte {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected input at byte {}", self.i)),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            let numeric = c.is_ascii_digit()
+                || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E');
+            if numeric {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        self.utf8(start, self.i)?
+            .parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        let mut run = self.i;
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    out.push_str(self.utf8(run, self.i)?);
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    out.push_str(self.utf8(run, self.i)?);
+                    self.i += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => out.push(self.unicode_escape()?),
+                        _ => {
+                            return Err(format!(
+                                "bad escape at byte {}",
+                                self.i - 1
+                            ));
+                        }
+                    }
+                    run = self.i;
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+
+    /// The four hex digits after `\u`, combining surrogate pairs.
+    fn unicode_escape(&mut self) -> Result<char, String> {
+        let hi = self.hex4()?;
+        let c = if (0xD800..0xDC00).contains(&hi) {
+            if self.b[self.i..].starts_with(b"\\u") {
+                self.i += 2;
+                let lo = self.hex4()?;
+                if (0xDC00..0xE000).contains(&lo) {
+                    let cp =
+                        0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                    char::from_u32(cp)
+                } else {
+                    None
+                }
+            } else {
+                None
+            }
+        } else {
+            char::from_u32(hi)
+        };
+        c.ok_or_else(|| format!("bad \\u escape before byte {}", self.i))
+    }
+
+    fn utf8(&self, from: usize, to: usize) -> Result<&'a str, String> {
+        std::str::from_utf8(&self.b[from..to])
+            .map_err(|_| format!("invalid utf-8 at byte {from}"))
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.i + 4 > self.b.len() {
+            return Err("truncated \\u escape".into());
+        }
+        let t = self.utf8(self.i, self.i + 4)?;
+        let v = u32::from_str_radix(t, 16)
+            .map_err(|_| format!("bad hex at byte {}", self.i))?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => {
+                    return Err(format!(
+                        "expected ',' or ']' at byte {}",
+                        self.i
+                    ));
+                }
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut entries = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(entries));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let v = self.value()?;
+            entries.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(entries));
+                }
+                _ => {
+                    return Err(format!(
+                        "expected ',' or '}}' at byte {}",
+                        self.i
+                    ));
+                }
             }
         }
     }
@@ -216,5 +458,48 @@ mod tests {
         j.set("k", 1u64);
         j.set("k", 2u64);
         assert_eq!(j.get("k").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn parse_roundtrips_serializer_output() {
+        let mut inner = Json::obj();
+        inner.set("quote\"back\\slash\nnl", "é 中 ok");
+        inner.set("neg", -12.75);
+        inner.set("big", 1e300);
+        inner.set("tiny", 4.9e-10);
+        let mut j = Json::obj();
+        j.set("name", "RM1")
+            .set("none", Json::Null)
+            .set("flag", false)
+            .set("n", 18_446_744_073_709u64)
+            .set("xs", vec![1u64, 2, 3])
+            .set("nested", Json::Arr(vec![inner, Json::Arr(vec![])]))
+            .set("empty_obj", Json::obj());
+        let s = j.to_string_pretty();
+        assert_eq!(Json::parse(&s), Ok(j));
+    }
+
+    #[test]
+    fn parse_handles_compact_and_escapes() {
+        let j = Json::parse(
+            "{\"a\":[1,2.5,null,true],\"s\":\"x\\u0041\\n\\ud83d\\ude00\"}",
+        )
+        .unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("xA\n\u{1F600}"));
+        let xs = j.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(xs.len(), 4);
+        assert_eq!(xs[1].as_f64(), Some(2.5));
+        assert_eq!(xs[2], Json::Null);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{\"a\": }").is_err());
+        assert!(Json::parse("[1, 2").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("nul").is_err());
+        assert!(Json::parse("{} trailing").is_err());
+        assert!(Json::parse("\"bad \\q escape\"").is_err());
     }
 }

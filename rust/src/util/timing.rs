@@ -86,11 +86,22 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Default per-case budget; `BENCH_BUDGET_MS` overrides it so CI
+    /// smoke steps can run every bench in seconds instead of minutes.
+    const DEFAULT_BUDGET: Duration = Duration::from_millis(700);
+
     pub fn new() -> Self {
+        let budget = std::env::var("BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .map(Duration::from_millis)
+            .unwrap_or(Self::DEFAULT_BUDGET);
+        let warmup = (budget / 5)
+            .max(Duration::from_millis(10))
+            .min(Duration::from_millis(150));
         Self {
-            budget: Duration::from_millis(700),
-            warmup: Duration::from_millis(150),
-            // Honor `cargo bench -- --quick`-style env for CI.
+            budget,
+            warmup,
             results: Vec::new(),
         }
     }
@@ -98,6 +109,10 @@ impl Bench {
     pub fn with_budget(mut self, budget: Duration) -> Self {
         self.budget = budget;
         self
+    }
+
+    pub fn budget(&self) -> Duration {
+        self.budget
     }
 
     /// Run `f` repeatedly; `f` returns the number of bytes it processed
@@ -170,5 +185,19 @@ mod tests {
         let (v, d) = measure_once(|| 41 + 1);
         assert_eq!(v, 42);
         assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn bench_budget_env_override() {
+        // Serialized via the env var itself: this is the only test that
+        // touches it, and cargo runs tests in one process.
+        std::env::set_var("BENCH_BUDGET_MS", "25");
+        let b = Bench::new();
+        assert_eq!(b.budget(), Duration::from_millis(25));
+        assert_eq!(b.warmup, Duration::from_millis(10));
+        std::env::set_var("BENCH_BUDGET_MS", "not-a-number");
+        assert_eq!(Bench::new().budget(), Bench::DEFAULT_BUDGET);
+        std::env::remove_var("BENCH_BUDGET_MS");
+        assert_eq!(Bench::new().budget(), Bench::DEFAULT_BUDGET);
     }
 }

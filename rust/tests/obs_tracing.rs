@@ -1,0 +1,226 @@
+//! End-to-end observability: two broker-attached sessions tracing into
+//! one shared [`Obs`] timeline, span coverage for every completed
+//! split, stall-attribution reconciliation, and the Chrome trace JSON
+//! export round-tripping through `util::json`.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+use dsi::broker::ReadBroker;
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::datagen::build_dataset;
+use dsi::dpp::{
+    run_session_on, Master, Session, SessionConfig, SessionSpec,
+};
+use dsi::dwrf::{Projection, WriterOptions};
+use dsi::obs::{Obs, Stage};
+use dsi::tectonic::{Cluster, ClusterConfig};
+use dsi::transforms::dag::session_dag;
+use dsi::util::json::Json;
+use dsi::util::rng::Pcg32;
+use dsi::warehouse::Catalog;
+
+/// Client trace lanes start here (worker lanes are pool slots from 0).
+const CLIENT_TID_BASE: u32 = 1000;
+/// Broker fetch lane (`u32::MAX` is the Master's control-plane lane).
+const BROKER_LANE: u32 = u32::MAX - 1;
+
+fn fixture(seed: u64) -> (Arc<Cluster>, Catalog, SessionSpec, u64) {
+    let rm = RmConfig::get(RmId::Rm3);
+    let scale = SimScale {
+        rows_per_partition: 192,
+        materialized_features: 48,
+        partitions: 4,
+    };
+    let mut rng = Pcg32::new(seed);
+    let cluster = Arc::new(Cluster::new(ClusterConfig {
+        chunk_bytes: 128 << 10,
+        ..Default::default()
+    }));
+    let catalog = Catalog::new();
+    let h = build_dataset(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions {
+            stripe_rows: 48,
+            ..Default::default()
+        },
+        seed,
+    )
+    .unwrap();
+    let projection = h.schema.sample_projection(&mut rng, 10, 1.0);
+    let dag = session_dag(&mut rng, &rm, &h.schema, &projection);
+    let mut spec = SessionSpec::from_dag(&h.table_name, 0, u32::MAX, dag, 24);
+    spec.projection = Projection::new(projection);
+    let rows = catalog.get(&h.table_name).unwrap().total_rows();
+    (cluster, catalog, spec, rows)
+}
+
+#[test]
+fn two_traced_sessions_share_one_timeline() {
+    let (cluster, catalog, mut spec, rows) = fixture(71);
+    spec.pipeline.shared_reads = true;
+    let broker = ReadBroker::with_budget_bytes(cluster.clone(), 256 << 20);
+    let obs = Obs::new();
+    let cfg = SessionConfig {
+        initial_workers: 2,
+        max_workers: 2,
+        clients: 1,
+        obs: Some(obs.clone()),
+        telemetry_every: Some(Duration::from_millis(2)),
+        ..Default::default()
+    };
+
+    let mut expected_splits = Vec::new();
+    let mut reports = Vec::new();
+    for _ in 0..2 {
+        let master = Arc::new(
+            Master::new_shared(&catalog, &cluster, spec.clone(), &broker)
+                .unwrap(),
+        );
+        let report = run_session_on(master.clone(), &cluster, &cfg).unwrap();
+        assert_eq!(report.rows_delivered, rows);
+        let (done, total) = master.progress();
+        assert_eq!(done, total);
+        // Enumeration-pruned splits never reach a worker, so they
+        // never produce data-plane spans.
+        expected_splits.push(total - master.skipped_splits());
+        reports.push(report);
+    }
+
+    let events = obs.trace.events();
+    assert_eq!(obs.trace.dropped(), 0, "ring buffer overflowed");
+    for pid in 0..2u32 {
+        let mine: Vec<_> =
+            events.iter().filter(|e| e.session == pid).collect();
+        // Worker lanes: every completed split carries the full
+        // per-split stage ladder, including the backpressured send.
+        let mut by_split: HashMap<u64, HashSet<&'static str>> =
+            HashMap::new();
+        for e in mine.iter().filter(|e| e.tid < CLIENT_TID_BASE) {
+            by_split.entry(e.split).or_default().insert(e.stage.name());
+        }
+        assert_eq!(
+            by_split.len(),
+            expected_splits[pid as usize],
+            "session {pid}: traced splits"
+        );
+        for (split, stages) in &by_split {
+            for want in
+                ["plan", "fetch", "decode", "transform", "load", "wire_send"]
+            {
+                assert!(
+                    stages.contains(want),
+                    "session {pid} split {split} missing {want} span"
+                );
+            }
+        }
+        // The Master's control-plane planning span.
+        assert!(
+            mine.iter()
+                .any(|e| e.tid == u32::MAX && e.stage == Stage::Plan),
+            "session {pid} missing master plan span"
+        );
+        // Client lanes drain the stream.
+        let clients: Vec<_> = mine
+            .iter()
+            .filter(|e| e.tid >= CLIENT_TID_BASE && e.tid < BROKER_LANE)
+            .collect();
+        assert!(
+            clients.iter().any(|e| e.stage == Stage::WireRecv),
+            "session {pid} missing wire_recv span"
+        );
+        assert!(
+            clients.iter().any(|e| e.stage == Stage::Drain),
+            "session {pid} missing drain span"
+        );
+    }
+    // The cold session's storage reads flow through the broker lane.
+    assert!(
+        events
+            .iter()
+            .any(|e| e.tid == BROKER_LANE && e.stage == Stage::Fetch),
+        "no broker fetch spans"
+    );
+
+    // Stall attribution reconciles for both sessions (the ISSUE's ±1%
+    // acceptance bar), and telemetry sampled something.
+    for (i, r) in reports.iter().enumerate() {
+        let total = r.stall_attribution.total();
+        assert!(
+            (total - r.client_stall_secs).abs()
+                <= 0.01 * r.client_stall_secs + 1e-6,
+            "session {i}: attribution {total} vs stall {}",
+            r.client_stall_secs
+        );
+        let tel = r.telemetry.as_ref().expect("telemetry enabled");
+        assert!(tel.samples() > 0, "session {i}: no samples");
+    }
+    // Shared-stage histograms cover both sessions' stage ladder.
+    for stage in [Stage::Fetch, Stage::Decode, Stage::Transform, Stage::Load]
+    {
+        assert!(
+            obs.hist(stage).count() >= 2 * expected_splits[0] as u64,
+            "{} histogram undercounts",
+            stage.name()
+        );
+    }
+}
+
+#[test]
+fn chrome_trace_export_roundtrips_through_util_json() {
+    let (cluster, catalog, mut spec, rows) = fixture(72);
+    spec.pipeline.tracing = true;
+    let report = Session::run(
+        &catalog,
+        &cluster,
+        spec,
+        &SessionConfig {
+            initial_workers: 2,
+            max_workers: 2,
+            clients: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(report.rows_delivered, rows);
+    let obs = report.obs.as_ref().expect("traced session has a sink");
+
+    let text = obs.chrome_trace().to_string_pretty();
+    let parsed = Json::parse(&text).expect("trace JSON parses");
+    assert_eq!(
+        parsed.get("displayTimeUnit").and_then(|u| u.as_str()),
+        Some("ms")
+    );
+    let evs = parsed
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    let metas: Vec<_> = evs
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+        .collect();
+    assert_eq!(metas.len(), 1, "one session registered");
+    assert_eq!(metas[0].get("pid").and_then(|p| p.as_f64()), Some(0.0));
+    let spans = evs
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .count();
+    assert_eq!(spans, obs.trace.len(), "every span exported");
+    assert!(spans > 0);
+    // Every span has positive duration and a split label in its args.
+    for ev in evs
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+    {
+        assert!(ev.get("dur").and_then(|d| d.as_f64()).unwrap() > 0.0);
+        assert!(ev.get("args").and_then(|a| a.get("split")).is_some());
+    }
+
+    // util::json round-trip: parse(serialize(parsed)) == parsed.
+    let again = Json::parse(&parsed.to_string_pretty()).unwrap();
+    assert_eq!(again, parsed);
+}

@@ -7,6 +7,7 @@ use dsi::dpp::client::partition_round_robin;
 use dsi::dpp::split::splits_for_partition;
 use dsi::dpp::{estimate_worker_seconds, DedupTensorBatch, TensorBatch};
 use dsi::dwrf::plan::{coalesce, IoRange};
+use dsi::obs::Histogram;
 use dsi::dwrf::{DecodeMode, DwrfReader, DwrfWriter, Encoding, Projection, WriterOptions};
 use dsi::schema::FeatureId;
 use dsi::tectonic::FileId;
@@ -41,6 +42,78 @@ fn prop_estimated_worker_seconds_monotone_as_selectivity_drops() {
                  sel {sel_hi:.4} (prune {prune_hi:.4}) cost {hi}"
             ))
         }
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_ordered_and_bracket_max() {
+    // Quantiles are monotone in q, and q=1.0 reports the max's bucket
+    // upper bound: never below the true max, and at most one
+    // sub-bucket (12.5%) above it.
+    check("histogram quantile order", 200, |g| {
+        let h = Histogram::new();
+        let n = g.usize(1..200);
+        let mut max = 0u64;
+        for _ in 0..n {
+            // Stay below the clamped top bucket (~2^43 ns).
+            let ns = g.u64(0..1 << 42);
+            max = max.max(ns);
+            h.record_ns(ns);
+        }
+        let qs = [0.5, 0.95, 0.99, 1.0].map(|q| h.quantile(q));
+        for w in qs.windows(2) {
+            if w[0] > w[1] {
+                return Err(format!("unordered quantiles: {qs:?}"));
+            }
+        }
+        let max_secs = max as f64 / 1e9;
+        let p100 = qs[3];
+        if p100 < max_secs {
+            return Err(format!("p100 {p100} under max {max_secs}"));
+        }
+        if p100 > max_secs * 1.125 + 1e-9 {
+            return Err(format!(
+                "p100 {p100} above bucket bound of max {max_secs}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_merge_equals_concat() {
+    // Bucketing is deterministic per value, so folding two histograms
+    // together is indistinguishable from recording both streams into
+    // one — counts, total time, and every quantile agree exactly.
+    check("histogram merge == concat", 200, |g| {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let all = Histogram::new();
+        for ns in g.vec_u64(0..1 << 42, 60) {
+            a.record_ns(ns);
+            all.record_ns(ns);
+        }
+        for ns in g.vec_u64(0..1 << 42, 60) {
+            b.record_ns(ns);
+            all.record_ns(ns);
+        }
+        a.merge(&b);
+        if a.count() != all.count() {
+            return Err(format!("count {} != {}", a.count(), all.count()));
+        }
+        if a.total_secs() != all.total_secs() {
+            return Err("total time diverged".into());
+        }
+        for q in [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            if a.quantile(q) != all.quantile(q) {
+                return Err(format!(
+                    "q={q}: {} != {}",
+                    a.quantile(q),
+                    all.quantile(q)
+                ));
+            }
+        }
+        Ok(())
     });
 }
 
