@@ -1,14 +1,27 @@
 //! End-to-end DPP worker pipeline benchmark per RM (Table 9's kQPS and
-//! byte-rate columns) and the threaded-session throughput scaling.
+//! byte-rate columns), the threaded-session throughput scaling, and the
+//! wire-compression sweep (levels x duplication) with its CI gate:
+//! zstd level 3 must cut dup=4 wire bytes >= 2x with byte-identical
+//! decoded batches.
 
-use dsi::config::{NodeSpec, RmConfig, SimScale};
-use dsi::dpp::{PipelineOptions, Session, SessionConfig, SessionSpec};
+use dsi::config::{NodeSpec, RmConfig, RmId, SimScale};
+use dsi::datagen::build_dataset_dup;
+use dsi::dpp::{
+    Master, PipelineOptions, Session, SessionConfig, SessionSpec,
+    TensorBatch, WireCompression, WorkerCore,
+};
+use dsi::dwrf::crypto::StreamCipher;
 use dsi::dwrf::{Projection, WriterOptions};
+use dsi::metrics::EtlMetrics;
 use dsi::paper::harness::{build_world, measure_pipeline};
 use dsi::resources::saturation;
+use dsi::tectonic::{Cluster, ClusterConfig};
 use dsi::transforms::dag::session_dag;
+use dsi::transforms::TransformDag;
 use dsi::util::json::Json;
 use dsi::util::rng::Pcg32;
+use dsi::warehouse::Catalog;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -121,4 +134,163 @@ fn main() {
     if std::fs::write(path, out.to_string_pretty()).is_ok() {
         println!("wrote {path}");
     }
+
+    // Wire compression sweep: duplication {1,4} x zstd level {off,1,3,9}.
+    // Batches span a whole partition (stripe = batch = 512 rows) so the
+    // zstd window sees every scattered copy of a duplicated session —
+    // the RecD observation that dup-heavy payloads are unusually
+    // compressible, applied at the transport instead of the file.
+    println!("\n=== wire compression sweep (RM1 flattened, dup x level) ===");
+    let mut sweep = Vec::new();
+    let mut gate_ratio = 0.0f64;
+    for dup in [1usize, 4] {
+        let (cluster, catalog, spec) = build_dup_world(dup);
+        for level in [0i32, 1, 3, 9] {
+            let mut s = spec.clone();
+            s.pipeline.wire_compression = if level == 0 {
+                WireCompression::Off
+            } else {
+                WireCompression::zstd(level)
+            };
+            let r = Session::run(
+                &catalog,
+                &cluster,
+                s,
+                &SessionConfig::default(),
+            )
+            .unwrap();
+            let ratio = r.wire_compression_ratio();
+            let lvl = if level == 0 {
+                "off".to_string()
+            } else {
+                level.to_string()
+            };
+            println!(
+                "dup {dup} | level {lvl:>3} | {:>8.0} rows/s | wire \
+                 {:>7.1} KB (raw {:>7.1} KB, {ratio:.2}x) | stall {:.3}s",
+                r.rows_per_sec,
+                r.tensor_tx_bytes as f64 / 1e3,
+                r.wire_raw_bytes as f64 / 1e3,
+                r.client_stall_secs,
+            );
+            if dup == 4 && level == 3 {
+                gate_ratio = ratio;
+            }
+            let mut e = Json::obj();
+            e.set("dup", dup as u64)
+                .set("zstd_level", level as u64)
+                .set("rows_per_sec", r.rows_per_sec)
+                .set("wire_bytes", r.tensor_tx_bytes)
+                .set("wire_raw_bytes", r.wire_raw_bytes)
+                .set("compression_ratio", ratio)
+                .set("client_stall_secs", r.client_stall_secs)
+                .set("worker_compress_secs", r.worker_compress_secs)
+                .set("client_decode_secs", r.client_decode_secs);
+            sweep.push(e);
+        }
+    }
+
+    // Correctness half of the gate: the compressed wire must decode to
+    // exactly the batches the uncompressed wire carries.
+    let (cluster, catalog, spec) = build_dup_world(4);
+    let mut off_spec = spec.clone();
+    off_spec.pipeline.wire_compression = WireCompression::Off;
+    let mut zstd_spec = spec;
+    zstd_spec.pipeline.wire_compression = WireCompression::zstd(3);
+    let base = drain_decoded(&cluster, &catalog, off_spec);
+    let comp = drain_decoded(&cluster, &catalog, zstd_spec);
+    let identical = base == comp;
+    println!("decoded batches identical across off/zstd-3: {identical}");
+
+    let mut res = Json::obj();
+    res.set("sweep", Json::Arr(sweep))
+        .set("gate_ratio_dup4_level3", gate_ratio)
+        .set("gate_min_ratio", 2.0)
+        .set("decoded_identical", identical);
+    let path = "target/worker_results.json";
+    if std::fs::write(path, res.to_string_pretty()).is_ok() {
+        println!("wrote {path}");
+    }
+    if gate_ratio < 2.0 || !identical {
+        eprintln!(
+            "FAIL: wire compression gate: zstd-3 dup=4 ratio {gate_ratio:.2} \
+             (need >= 2.0), decoded identical: {identical}"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "PASS: zstd-3 cuts dup=4 wire bytes {gate_ratio:.2}x with \
+         byte-identical decoded batches"
+    );
+}
+
+/// RM1 dataset with `dup`-factor sample duplication, written Flattened
+/// (duplicates physically materialized, scattered through the log) and a
+/// pass-through session whose batches cover a whole partition.
+fn build_dup_world(dup: usize) -> (Arc<Cluster>, Catalog, SessionSpec) {
+    let rm = RmConfig::get(RmId::Rm1);
+    let scale = SimScale {
+        rows_per_partition: 512,
+        materialized_features: 64,
+        partitions: 2,
+    };
+    let cluster = Arc::new(Cluster::new(ClusterConfig {
+        chunk_bytes: 128 << 10,
+        ..Default::default()
+    }));
+    let catalog = Catalog::new();
+    let h = build_dataset_dup(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions {
+            stripe_rows: 512,
+            ..Default::default()
+        },
+        9,
+        dup,
+    )
+    .unwrap();
+    let mut dag = TransformDag::default();
+    for f in h.schema.dense().take(4) {
+        let i = dag.input_dense(f.id);
+        dag.output(f.id, i);
+    }
+    for f in h.schema.sparse().take(8) {
+        let i = dag.input_sparse(f.id);
+        dag.output(f.id, i);
+    }
+    let spec = SessionSpec::from_dag(&h.table_name, 0, 10, dag, 512);
+    (cluster, catalog, spec)
+}
+
+/// Drain a single worker over the whole session, decoding every wire
+/// batch client-side (dedup frames expanded).
+fn drain_decoded(
+    cluster: &Arc<Cluster>,
+    catalog: &Catalog,
+    spec: SessionSpec,
+) -> Vec<TensorBatch> {
+    let cipher = StreamCipher::for_table(&spec.table);
+    let spec = Arc::new(spec);
+    let master = Master::new(catalog, cluster, (*spec).clone()).unwrap();
+    let w = master.register_worker();
+    let metrics = Arc::new(EtlMetrics::default());
+    let mut core = WorkerCore::new(spec.clone(), cluster.clone(), metrics);
+    let mut out = Vec::new();
+    while let Some(split) = master.fetch_split(w) {
+        for wire in core.process_split(&split).unwrap() {
+            let tb = if wire.dedup {
+                dsi::dpp::codec::decode_wire_dedup(&cipher, &wire)
+                    .unwrap()
+                    .expand()
+            } else {
+                dsi::dpp::codec::decode_wire(&cipher, &wire).unwrap()
+            };
+            out.push(tb);
+        }
+        master.complete_split(w, split.id);
+    }
+    out
 }

@@ -13,7 +13,7 @@
 //! cache entry. Entries are evicted least-recently-used under budget
 //! pressure.
 
-use super::spec::SessionSpec;
+use super::spec::{SessionSpec, WireCompression};
 use super::split::Split;
 use super::worker::WireBatch;
 use crate::broker::MemoryBudget;
@@ -48,6 +48,28 @@ pub fn session_fingerprint(spec: &SessionSpec) -> u64 {
     h.write_u8(spec.pipeline.shared_reads as u8);
     h.write_u8(spec.pipeline.coalesce.is_some() as u8);
     h.write_u64(spec.pipeline.coalesce.unwrap_or(0));
+    // Wire compression changes the cached bytes themselves (cache entries
+    // hold *encoded* wire batches): level, codec on/off, and the exact
+    // dictionary contents are all part of the entry's identity, so an
+    // Off session can never decode a Zstd twin's entries (or vice versa).
+    match &spec.pipeline.wire_compression {
+        WireCompression::Off => h.write_u8(0),
+        WireCompression::Zstd { level, dict } => {
+            h.write_u8(1);
+            h.write_u64(*level as u64);
+            match dict {
+                None => h.write_u8(0),
+                Some(d) => {
+                    h.write_u8(1);
+                    h.write_u64(d.len() as u64);
+                    h.write(d);
+                }
+            }
+        }
+    }
+    // `pipeline.max_frame_bytes` is deliberately NOT hashed: it is a
+    // transport cap, not an encoding choice — identical sessions with
+    // different caps produce byte-identical wire batches.
     // `pipeline.tracing` is deliberately NOT hashed: span emission is
     // diagnostic-only and never changes the preprocessed output, so a
     // traced session may share cached tensors with an untraced twin.
@@ -391,12 +413,7 @@ mod tests {
     }
 
     fn wire(bytes: Vec<u8>) -> Arc<Vec<WireBatch>> {
-        Arc::new(vec![WireBatch {
-            seq: 0,
-            rows: 8,
-            dedup: false,
-            bytes,
-        }])
+        Arc::new(vec![WireBatch::plain(0, 8, false, bytes)])
     }
 
     #[test]
@@ -440,6 +457,41 @@ mod tests {
         let mut d = mk(Op::FirstX { x: 5 });
         d.pipeline.dedup_aware = !d.pipeline.dedup_aware;
         assert_ne!(session_fingerprint(&c), session_fingerprint(&d));
+    }
+
+    #[test]
+    fn fingerprint_covers_wire_compression() {
+        // Cache entries hold *encoded* wire bytes, so every knob that
+        // changes the encoding must split the key space: on/off, level,
+        // and the dictionary contents must all be pairwise distinct.
+        let mk = |wc: WireCompression| {
+            let mut s = spec("t", &[1, 2], 32);
+            s.pipeline.wire_compression = wc;
+            session_fingerprint(&s)
+        };
+        let off = mk(WireCompression::Off);
+        let z3 = mk(WireCompression::zstd(3));
+        let z9 = mk(WireCompression::zstd(9));
+        let z3d = mk(WireCompression::Zstd {
+            level: 3,
+            dict: Some(Arc::new(vec![7u8; 32])),
+        });
+        let z3d2 = mk(WireCompression::Zstd {
+            level: 3,
+            dict: Some(Arc::new(vec![9u8; 32])),
+        });
+        let all = [off, z3, z9, z3d, z3d2];
+        for i in 0..all.len() {
+            for j in (i + 1)..all.len() {
+                assert_ne!(all[i], all[j], "entries {i} and {j} collide");
+            }
+        }
+        assert_eq!(z3, mk(WireCompression::zstd(3)), "deterministic");
+        // The frame cap is a transport bound, not an encoding choice:
+        // two sessions differing only in cap share cache entries.
+        let mut a = spec("t", &[1, 2], 32);
+        a.pipeline.max_frame_bytes = crate::dpp::spec::MIN_FRAME_BYTES;
+        assert_eq!(session_fingerprint(&a), session_fingerprint(&spec("t", &[1, 2], 32)));
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //! "capping the number of connections that Clients and Workers need to
 //! maintain".
 
-use super::tensor::{DedupTensorBatch, TensorBatch};
+use super::codec::WireUnpacker;
+use super::spec::PipelineOptions;
+use super::tensor::TensorBatch;
+use super::transport::{max_raw_bytes, MAX_FRAME_BYTES};
 use super::worker::WireBatch;
 use crate::dwrf::crypto::StreamCipher;
 use crate::metrics::{Counter, StageClock};
@@ -41,12 +44,21 @@ pub struct Client {
     /// Receiving ends of this client's partition of workers.
     rxs: Vec<Receiver<WireBatch>>,
     cipher: StreamCipher,
+    /// Wire decoder (zstd contexts + scratch, reused across batches);
+    /// decrypts each frame's owned bytes in place — no receive copy.
+    unpacker: WireUnpacker,
     next: usize,
     /// Datacenter-tax accounting: wire bytes received and deserialized.
     pub rx_bytes: Counter,
+    /// Declared pre-compression bytes of the received frames (equals
+    /// `rx_bytes` for uncompressed sessions, modulo section framing).
+    pub raw_rx_bytes: Counter,
     pub batches: Counter,
     /// Dedup wire batches expanded on this client.
     pub dedup_expanded: Counter,
+    /// Time spent decrypting + decompressing + deserializing frames
+    /// (the trainer-side share of the wire tax).
+    pub decode_clock: StageClock,
     /// Time spent blocked waiting for a batch (data-stall signal).
     /// An atomic nanosecond accumulator — this sits on the hot recv
     /// path, bumped on every poll sweep, so no mutex. Shared (`Arc`) so
@@ -61,13 +73,29 @@ impl Client {
         Client {
             rxs,
             cipher: StreamCipher::for_table(table),
+            unpacker: WireUnpacker::new(max_raw_bytes(MAX_FRAME_BYTES)),
             next: 0,
             rx_bytes: Counter::new(),
+            raw_rx_bytes: Counter::new(),
             batches: Counter::new(),
             dedup_expanded: Counter::new(),
+            decode_clock: StageClock::default(),
             stall: Arc::new(StageClock::default()),
             obs: None,
         }
+    }
+
+    /// Adopt the session's wire options (builder style): the decode
+    /// bound follows `max_frame_bytes` and the session dictionary — the
+    /// same bytes the workers compress with — is attached, so worker and
+    /// client always agree.
+    pub fn with_wire(mut self, pipeline: &PipelineOptions) -> Client {
+        let mut u = WireUnpacker::new(max_raw_bytes(pipeline.max_frame_bytes));
+        if let Some(d) = pipeline.wire_compression.dict() {
+            u = u.with_dict(d);
+        }
+        self.unpacker = u;
+        self
     }
 
     /// Share the stall accumulator (builder style): the session control
@@ -115,34 +143,31 @@ impl Client {
                     Ok(wire) => {
                         self.next = (i + 1) % self.rxs.len();
                         self.rx_bytes.add(wire.bytes.len() as u64);
+                        self.raw_rx_bytes.add(wire.raw_len as u64);
                         self.batches.inc();
                         self.stall.add(start.elapsed());
+                        let seq = wire.seq;
                         if let Some((h, tid)) = &self.obs {
-                            h.span(*tid, wire.seq, Stage::WireRecv, start);
+                            h.span(*tid, seq, Stage::WireRecv, start);
                         }
                         let t_drain = Instant::now();
-                        // TLS decrypt + Thrift-like deserialize: the
-                        // trainer-side datacenter tax (§6.2). Dedup wire
-                        // batches additionally expand (gather unique rows
-                        // through the inverse index) so the trainer only
-                        // ever sees ordinary full batches.
+                        // TLS decrypt + zstd + deserialize: the
+                        // trainer-side datacenter tax (§6.2). The frame
+                        // is consumed — its payload decrypts in place.
+                        // Dedup wire batches additionally expand (gather
+                        // unique rows through the inverse index) so the
+                        // trainer only ever sees ordinary full batches.
                         let tb = if wire.dedup {
                             self.dedup_expanded.inc();
-                            DedupTensorBatch::from_wire(
-                                &self.cipher,
-                                wire.seq,
-                                &wire.bytes,
-                            )?
-                            .expand()
+                            self.unpacker
+                                .decode_dedup(&self.cipher, wire)?
+                                .expand()
                         } else {
-                            TensorBatch::from_wire(
-                                &self.cipher,
-                                wire.seq,
-                                &wire.bytes,
-                            )?
+                            self.unpacker.decode_tensor(&self.cipher, wire)?
                         };
+                        self.decode_clock.add(t_drain.elapsed());
                         if let Some((h, tid)) = &self.obs {
-                            h.span(*tid, wire.seq, Stage::Drain, t_drain);
+                            h.span(*tid, seq, Stage::Drain, t_drain);
                         }
                         return Ok(Some(tb));
                     }
@@ -210,13 +235,8 @@ mod tests {
             labels: vec![0.0, 1.0],
         };
         for (seq, tx) in [(0u64, &tx1), (1u64, &tx2)] {
-            tx.send(WireBatch {
-                seq,
-                rows: 2,
-                dedup: false,
-                bytes: tb.to_wire(&cipher, seq),
-            })
-            .unwrap();
+            tx.send(WireBatch::plain(seq, 2, false, tb.to_wire(&cipher, seq)))
+                .unwrap();
         }
         drop(tx1);
         drop(tx2);
@@ -241,6 +261,32 @@ mod tests {
     }
 
     #[test]
+    fn client_decodes_compressed_frames() {
+        use crate::dpp::codec::WirePacker;
+        let (tx, rx) = sync_channel(4);
+        let cipher = StreamCipher::for_table("t");
+        let tb = TensorBatch {
+            rows: 64,
+            dense: (0..64).map(|i| (i % 5) as f32).collect(),
+            dense_names: vec![crate::schema::FeatureId(0)],
+            sparse: vec![],
+            labels: (0..64).map(|i| (i % 2) as f32).collect(),
+        };
+        let pipeline = PipelineOptions::default();
+        let mut packer = WirePacker::new(&pipeline).unwrap();
+        let wb = packer.encode_tensor(&cipher, 0, &tb).unwrap();
+        assert!(wb.compressed);
+        tx.send(wb).unwrap();
+        drop(tx);
+        let mut client =
+            Client::new("t", vec![rx]).with_wire(&pipeline);
+        let got = client.next_batch(Duration::from_secs(1)).unwrap().unwrap();
+        assert_eq!(got, tb);
+        assert!(client.raw_rx_bytes.get() >= client.rx_bytes.get());
+        assert!(client.decode_clock.secs() >= 0.0);
+    }
+
+    #[test]
     fn client_expands_dedup_wire_batches() {
         use crate::dpp::tensor::DedupTensorBatch;
         let (tx, rx) = sync_channel(4);
@@ -261,13 +307,8 @@ mod tests {
             labels: vec![1.0, 0.0, 0.0, 1.0],
             unique,
         };
-        tx.send(WireBatch {
-            seq: 0,
-            rows: 4,
-            dedup: true,
-            bytes: db.to_wire(&cipher, 0),
-        })
-        .unwrap();
+        tx.send(WireBatch::plain(0, 4, true, db.to_wire(&cipher, 0)))
+            .unwrap();
         drop(tx);
         let mut client = Client::new("t", vec![rx]);
         let got = client.next_batch(Duration::from_secs(1)).unwrap().unwrap();
@@ -294,13 +335,7 @@ mod tests {
         let sender = std::thread::spawn(move || {
             // Arrive mid-wait, after the client has started parking.
             std::thread::sleep(Duration::from_millis(30));
-            tx.send(WireBatch {
-                seq: 0,
-                rows: 1,
-                dedup: false,
-                bytes,
-            })
-            .unwrap();
+            tx.send(WireBatch::plain(0, 1, false, bytes)).unwrap();
         });
         let mut client = Client::new("t", vec![rx]);
         let got = client
@@ -348,13 +383,8 @@ mod tests {
             sparse: vec![],
             labels: vec![1.0],
         };
-        tx.send(WireBatch {
-            seq: 5,
-            rows: 1,
-            dedup: false,
-            bytes: tb.to_wire(&cipher, 5),
-        })
-        .unwrap();
+        tx.send(WireBatch::plain(5, 1, false, tb.to_wire(&cipher, 5)))
+            .unwrap();
         drop(tx);
         let obs = Obs::with_capacity(8);
         let h = ObsHandle::for_session(obs.clone(), "t");

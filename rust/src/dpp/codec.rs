@@ -1,0 +1,943 @@
+//! Wire codec: per-feature zstd framing for the worker→client tensor
+//! stream (the "loading tax" lever of Table 9).
+//!
+//! With compression on, a [`WireBatch`] payload is no longer the plain
+//! [`TensorBatch`] serialization; it is a small uncompressed header
+//! (kind, row counts, feature table) followed by one framed *section*
+//! per feature stream:
+//!
+//! ```text
+//! [varint raw_len][varint enc_len][u8 method][enc_len bytes]
+//! ```
+//!
+//! `method` is 0 = stored, 1 = zstd, 2 = zstd with the session
+//! dictionary. Framing each dense column, sparse stream, and label
+//! vector independently keeps the columnar layout's redundancy visible
+//! to the compressor (RecD: duplication-heavy recommendation payloads
+//! compress disproportionately well) and makes every stream
+//! independently decodable and checkable. Sections that do not shrink —
+//! or are smaller than [`MIN_COMPRESS_SECTION`] — are stored verbatim,
+//! so compression can never inflate a frame by more than the framing
+//! bytes.
+//!
+//! The whole payload (header + sections) is encrypted *after* assembly:
+//! compression must see plaintext, because AES-CTR output does not
+//! compress. The declared `raw_len` (header bytes + Σ section raw
+//! lengths) travels in the frame header so the receive side can bound
+//! every decompression allocation *before* it happens — a lying frame
+//! is rejected from its lengths alone.
+//!
+//! [`WirePacker`] (worker side) and [`WireUnpacker`] (client side) own
+//! the zstd contexts and scratch buffers, so the steady-state encode and
+//! decode paths reuse allocations instead of rebuilding them per batch.
+
+use super::spec::{PipelineOptions, WireCompression};
+use super::tensor::{DedupTensorBatch, TensorBatch};
+use super::transport::{max_raw_bytes, MAX_FRAME_BYTES};
+use super::worker::WireBatch;
+use crate::dwrf::crypto::StreamCipher;
+use crate::schema::FeatureId;
+use crate::util::bytes::{put_f32, put_u32, put_varint, ByteReader};
+use anyhow::{anyhow, bail, Context, Result};
+use zstd::bulk::{Compressor, Decompressor};
+
+/// Payload kind byte: a plain [`TensorBatch`].
+const KIND_PLAIN: u8 = 0;
+/// Payload kind byte: a [`DedupTensorBatch`] (inverse-keyed uniques).
+const KIND_DEDUP: u8 = 1;
+
+/// Section stored verbatim (`enc_len == raw_len`).
+const METHOD_STORED: u8 = 0;
+/// Section is a zstd frame (no dictionary).
+const METHOD_ZSTD: u8 = 1;
+/// Section is a zstd frame using the session dictionary.
+const METHOD_ZSTD_DICT: u8 = 2;
+
+/// Sections below this size are always stored: zstd's frame overhead
+/// (~13 bytes) plus the entropy of a handful of floats makes compressing
+/// them a net loss in both bytes and cycles.
+const MIN_COMPRESS_SECTION: usize = 64;
+
+/// Train a per-session wire dictionary from sample payload sections
+/// (serialized feature streams of representative batches). Falls back to
+/// a raw-content dictionary — the concatenated sample bytes, which zstd
+/// loads as a content prefix on both sides — when ZDICT declines to
+/// train (it does on tiny or too-uniform sample sets), so sessions with
+/// little warmup data still get a deterministic dictionary.
+pub fn train_wire_dict(samples: &[Vec<u8>], max_bytes: usize) -> Result<Vec<u8>> {
+    if let Ok(d) = zstd::dict::from_samples(samples, max_bytes) {
+        if !d.is_empty() {
+            return Ok(d);
+        }
+    }
+    let mut d = Vec::new();
+    for s in samples {
+        if d.len() >= max_bytes {
+            break;
+        }
+        let take = (max_bytes - d.len()).min(s.len());
+        d.extend_from_slice(&s[..take]);
+    }
+    if d.is_empty() {
+        bail!("no sample bytes to train a wire dictionary from");
+    }
+    Ok(d)
+}
+
+/// Worker-side encoder: serializes tensor batches straight into one
+/// output buffer (no intermediate `serialize()` + `to_vec()` copies),
+/// compressing each feature stream as its own framed section, then
+/// encrypts the assembled payload in place.
+pub struct WirePacker {
+    /// `None` = compression off: emit the legacy byte-identical wire.
+    cctx: Option<Compressor<'static>>,
+    has_dict: bool,
+    max_frame: usize,
+    /// Scratch: the current section's raw bytes.
+    sec: Vec<u8>,
+    /// Scratch: the current section's compressed bytes.
+    comp: Vec<u8>,
+}
+
+impl WirePacker {
+    /// Build from the session's pipeline options. Errors on options
+    /// [`PipelineOptions::validate`] would reject (bad level, broken
+    /// dictionary) — real sessions validate at Master intake, so a
+    /// failure here means the caller skipped that.
+    pub fn new(opts: &PipelineOptions) -> Result<WirePacker> {
+        let (cctx, has_dict) = match &opts.wire_compression {
+            WireCompression::Off => (None, false),
+            WireCompression::Zstd { level, dict } => {
+                let c = match dict {
+                    Some(d) => Compressor::with_dictionary(*level, d),
+                    None => Compressor::new(*level),
+                }
+                .context("zstd compression context")?;
+                (Some(c), dict.is_some())
+            }
+        };
+        Ok(WirePacker {
+            cctx,
+            has_dict,
+            max_frame: opts.max_frame_bytes,
+            sec: Vec::new(),
+            comp: Vec::new(),
+        })
+    }
+
+    /// Encode + encrypt one plain tensor batch.
+    pub fn encode_tensor(
+        &mut self,
+        cipher: &StreamCipher,
+        seq: u64,
+        tb: &TensorBatch,
+    ) -> Result<WireBatch> {
+        if self.cctx.is_none() {
+            // Ablation path: byte-identical to the pre-compression wire.
+            let bytes = tb.to_wire(cipher, seq);
+            self.check_frame(bytes.len(), bytes.len())?;
+            return Ok(WireBatch::plain(seq, tb.rows, false, bytes));
+        }
+        let mut out = Vec::with_capacity(tb.bytes() / 2 + 64);
+        out.push(KIND_PLAIN);
+        put_varint(&mut out, tb.rows as u64);
+        Self::write_feature_table(&mut out, tb);
+        let mut raw = out.len();
+        raw += self.pack_tensor_sections(&mut out, tb)?;
+        self.check_frame(out.len(), raw)?;
+        cipher.apply(seq, &mut out);
+        Ok(WireBatch {
+            seq,
+            rows: tb.rows,
+            dedup: false,
+            compressed: true,
+            raw_len: raw,
+            bytes: out,
+        })
+    }
+
+    /// Encode + encrypt one dedup (inverse-keyed) batch.
+    pub fn encode_dedup(
+        &mut self,
+        cipher: &StreamCipher,
+        seq: u64,
+        db: &DedupTensorBatch,
+    ) -> Result<WireBatch> {
+        if self.cctx.is_none() {
+            let bytes = db.to_wire(cipher, seq);
+            self.check_frame(bytes.len(), bytes.len())?;
+            return Ok(WireBatch::plain(seq, db.rows(), true, bytes));
+        }
+        let rows = db.rows();
+        let mut out = Vec::with_capacity(db.bytes() / 2 + 64);
+        out.push(KIND_DEDUP);
+        put_varint(&mut out, rows as u64);
+        put_varint(&mut out, db.unique.rows as u64);
+        Self::write_feature_table(&mut out, &db.unique);
+        let mut raw = out.len();
+        // Inverse index: the stream dedup makes disproportionately
+        // compressible (repeated small varints).
+        self.sec.clear();
+        for &u in &db.inverse {
+            put_varint(&mut self.sec, u as u64);
+        }
+        raw += self.pack_section(&mut out)?;
+        // True per-row labels (row identity, never deduplicated).
+        self.sec.clear();
+        for &l in &db.labels {
+            put_f32(&mut self.sec, l);
+        }
+        raw += self.pack_section(&mut out)?;
+        raw += self.pack_tensor_sections(&mut out, &db.unique)?;
+        self.check_frame(out.len(), raw)?;
+        cipher.apply(seq, &mut out);
+        Ok(WireBatch {
+            seq,
+            rows,
+            dedup: true,
+            compressed: true,
+            raw_len: raw,
+            bytes: out,
+        })
+    }
+
+    fn write_feature_table(out: &mut Vec<u8>, tb: &TensorBatch) {
+        put_varint(out, tb.dense_names.len() as u64);
+        for f in &tb.dense_names {
+            put_u32(out, f.0);
+        }
+        put_varint(out, tb.sparse.len() as u64);
+        for (f, _, _) in &tb.sparse {
+            put_u32(out, f.0);
+        }
+    }
+
+    /// One section per dense column, per sparse stream, then labels.
+    /// Returns the summed raw section bytes.
+    fn pack_tensor_sections(
+        &mut self,
+        out: &mut Vec<u8>,
+        tb: &TensorBatch,
+    ) -> Result<usize> {
+        let nd = tb.dense_names.len();
+        let mut raw = 0usize;
+        for j in 0..nd {
+            // Gather the column out of the row-major matrix: columnar
+            // sections keep one feature's distribution contiguous.
+            self.sec.clear();
+            for i in 0..tb.rows {
+                put_f32(&mut self.sec, tb.dense[i * nd + j]);
+            }
+            raw += self.pack_section(out)?;
+        }
+        for (_, offsets, ids) in &tb.sparse {
+            self.sec.clear();
+            let mut prev = 0u32;
+            for &o in &offsets[1..] {
+                put_varint(&mut self.sec, (o - prev) as u64);
+                prev = o;
+            }
+            put_varint(&mut self.sec, ids.len() as u64);
+            for &id in ids {
+                put_varint(&mut self.sec, id);
+            }
+            raw += self.pack_section(out)?;
+        }
+        self.sec.clear();
+        for &l in &tb.labels {
+            put_f32(&mut self.sec, l);
+        }
+        raw += self.pack_section(out)?;
+        Ok(raw)
+    }
+
+    /// Frame `self.sec` into `out`, compressed when that actually
+    /// shrinks it. Returns the section's raw length.
+    fn pack_section(&mut self, out: &mut Vec<u8>) -> Result<usize> {
+        let raw = self.sec.len();
+        put_varint(out, raw as u64);
+        let mut method = METHOD_STORED;
+        let mut payload: &[u8] = &self.sec;
+        if raw >= MIN_COMPRESS_SECTION {
+            if let Some(c) = self.cctx.as_mut() {
+                self.comp.clear();
+                // Strictly above ZSTD_compressBound, so the bulk call
+                // never fails for capacity.
+                self.comp.reserve(raw + (raw >> 7) + 512);
+                if let Ok(n) = c.compress_to_buffer(&self.sec, &mut self.comp)
+                {
+                    if n < raw {
+                        method = if self.has_dict {
+                            METHOD_ZSTD_DICT
+                        } else {
+                            METHOD_ZSTD
+                        };
+                        payload = &self.comp;
+                    }
+                }
+            }
+        }
+        put_varint(out, payload.len() as u64);
+        out.push(method);
+        out.extend_from_slice(payload);
+        Ok(raw)
+    }
+
+    /// Enforce the session frame cap on the post-compression payload and
+    /// the declared raw size the receiver will be asked to allocate.
+    fn check_frame(&self, enc_len: usize, raw_len: usize) -> Result<()> {
+        if enc_len > self.max_frame {
+            bail!(
+                "encoded wire batch ({enc_len} bytes) exceeds the session \
+                 frame cap ({} bytes) — shrink batch_size",
+                self.max_frame
+            );
+        }
+        if raw_len > max_raw_bytes(self.max_frame) {
+            bail!(
+                "wire batch raw size {raw_len} exceeds the decode bound {}",
+                max_raw_bytes(self.max_frame)
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Client-side decoder. Owns the zstd contexts and a reusable raw
+/// scratch buffer; decrypts the frame's owned bytes in place (no
+/// `to_vec()` copy) and bounds every allocation against the frame's
+/// declared raw size before making it.
+pub struct WireUnpacker {
+    plain_dctx: Decompressor<'static>,
+    dict_dctx: Option<Decompressor<'static>>,
+    /// Largest declared raw payload this decoder will touch.
+    max_raw: usize,
+    /// Scratch: the current section's decompressed bytes.
+    raw: Vec<u8>,
+}
+
+impl WireUnpacker {
+    pub fn new(max_raw: usize) -> WireUnpacker {
+        WireUnpacker {
+            plain_dctx: Decompressor::new().expect("zstd dctx"),
+            dict_dctx: None,
+            max_raw,
+            raw: Vec::new(),
+        }
+    }
+
+    /// Attach the session dictionary (must be the same bytes the worker
+    /// compresses with — it is part of the session fingerprint).
+    pub fn with_dict(mut self, dict: &[u8]) -> WireUnpacker {
+        self.dict_dctx =
+            Some(Decompressor::with_dictionary(dict).expect("zstd dctx"));
+        self
+    }
+
+    /// Decrypt + decode one frame into a trainer-ready batch, expanding
+    /// dedup frames.
+    pub fn decode(
+        &mut self,
+        cipher: &StreamCipher,
+        wire: WireBatch,
+    ) -> Result<TensorBatch> {
+        if wire.dedup {
+            Ok(self.decode_dedup(cipher, wire)?.expand())
+        } else {
+            self.decode_tensor(cipher, wire)
+        }
+    }
+
+    /// Decrypt + decode a plain frame. Takes the frame by value: the
+    /// payload decrypts in place in the buffer that crossed the wire.
+    pub fn decode_tensor(
+        &mut self,
+        cipher: &StreamCipher,
+        wire: WireBatch,
+    ) -> Result<TensorBatch> {
+        if wire.dedup {
+            bail!("dedup frame passed to decode_tensor (use decode_dedup)");
+        }
+        let (hdr_rows, raw_len, compressed) =
+            (wire.rows, wire.raw_len, wire.compressed);
+        let buf = self.decrypt(cipher, wire)?;
+        if !compressed {
+            return TensorBatch::deserialize(&buf);
+        }
+        let mut r = ByteReader::new(&buf);
+        let kind = r.bytes(1).context("wire kind")?[0];
+        if kind != KIND_PLAIN {
+            bail!("payload kind {kind} in a frame not flagged dedup");
+        }
+        let rows = r.varint().context("rows")? as usize;
+        // The labels section alone is rows×4 raw bytes: a row count the
+        // declared raw size cannot carry is a lie — reject it before any
+        // rows-sized allocation below.
+        if (rows as u64).saturating_mul(4) > raw_len as u64 {
+            bail!(
+                "row count {rows} inconsistent with declared raw size \
+                 {raw_len}"
+            );
+        }
+        let (dense_names, sparse_ids) = Self::read_feature_table(&mut r)?;
+        let mut budget = raw_len.saturating_sub(r.pos());
+        let tb = self.read_tensor_sections(
+            &mut r,
+            &mut budget,
+            rows,
+            dense_names,
+            sparse_ids,
+        )?;
+        if r.remaining() != 0 {
+            bail!("{} trailing bytes after the last section", r.remaining());
+        }
+        if tb.rows != hdr_rows {
+            bail!(
+                "frame header claims {hdr_rows} rows, payload has {}",
+                tb.rows
+            );
+        }
+        Ok(tb)
+    }
+
+    /// Decrypt + decode a dedup frame (unexpanded).
+    pub fn decode_dedup(
+        &mut self,
+        cipher: &StreamCipher,
+        wire: WireBatch,
+    ) -> Result<DedupTensorBatch> {
+        if !wire.dedup {
+            bail!("plain frame passed to decode_dedup (use decode_tensor)");
+        }
+        let (hdr_rows, raw_len, compressed) =
+            (wire.rows, wire.raw_len, wire.compressed);
+        let buf = self.decrypt(cipher, wire)?;
+        if !compressed {
+            return DedupTensorBatch::deserialize(&buf);
+        }
+        let mut r = ByteReader::new(&buf);
+        let kind = r.bytes(1).context("wire kind")?[0];
+        if kind != KIND_DEDUP {
+            bail!("payload kind {kind} in a dedup-flagged frame");
+        }
+        let rows = r.varint().context("rows")? as usize;
+        let urows = r.varint().context("unique rows")? as usize;
+        // Per-row labels are rows×4 raw bytes and unique labels are
+        // urows×4: bound both counts by the declared raw size before any
+        // allocation sized by them.
+        if (rows as u64).saturating_mul(4) > raw_len as u64
+            || (urows as u64).saturating_mul(4) > raw_len as u64
+        {
+            bail!(
+                "row counts {rows}/{urows} inconsistent with declared raw \
+                 size {raw_len}"
+            );
+        }
+        let (dense_names, sparse_ids) = Self::read_feature_table(&mut r)?;
+        let mut budget = raw_len.saturating_sub(r.pos());
+        // Inverse index.
+        let sec = self.read_section(&mut r, &mut budget)?;
+        let mut sr = ByteReader::new(sec);
+        let mut inverse = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            let u = sr.varint().context("inverse")?;
+            if u >= urows as u64 {
+                bail!("dedup inverse {u} out of range ({urows} uniques)");
+            }
+            inverse.push(u as u32);
+        }
+        if sr.remaining() != 0 {
+            bail!("trailing bytes in inverse section");
+        }
+        // True per-row labels.
+        let sec = self.read_section(&mut r, &mut budget)?;
+        let labels = read_f32_section(sec, rows, "labels")?;
+        let unique = self.read_tensor_sections(
+            &mut r,
+            &mut budget,
+            urows,
+            dense_names,
+            sparse_ids,
+        )?;
+        if r.remaining() != 0 {
+            bail!("{} trailing bytes after the last section", r.remaining());
+        }
+        let db = DedupTensorBatch {
+            inverse,
+            labels,
+            unique,
+        };
+        if db.rows() != hdr_rows {
+            bail!(
+                "frame header claims {hdr_rows} rows, payload has {}",
+                db.rows()
+            );
+        }
+        Ok(db)
+    }
+
+    /// Consume the frame and decrypt its payload in place — no copy; the
+    /// buffer that crossed the wire is the one decoded. The raw-size
+    /// bound check precedes *everything*: a frame with a lying raw size
+    /// is rejected before any work.
+    fn decrypt(&self, cipher: &StreamCipher, wire: WireBatch) -> Result<Vec<u8>> {
+        if wire.raw_len > self.max_raw {
+            bail!(
+                "frame declares {} raw bytes, decode bound is {} — \
+                 rejecting before allocation",
+                wire.raw_len,
+                self.max_raw
+            );
+        }
+        if !wire.compressed && wire.raw_len != wire.bytes.len() {
+            bail!(
+                "uncompressed frame declares raw {} but carries {} bytes",
+                wire.raw_len,
+                wire.bytes.len()
+            );
+        }
+        let mut buf = wire.bytes;
+        cipher.apply(wire.seq, &mut buf);
+        Ok(buf)
+    }
+
+    fn read_feature_table(
+        r: &mut ByteReader,
+    ) -> Result<(Vec<FeatureId>, Vec<FeatureId>)> {
+        let nd = r.varint().context("nd")? as usize;
+        if nd > r.remaining() / 4 {
+            bail!("dense feature table truncated ({nd} declared)");
+        }
+        let mut dense_names = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            dense_names.push(FeatureId(r.u32().context("dense id")?));
+        }
+        let ns = r.varint().context("ns")? as usize;
+        if ns > r.remaining() / 4 {
+            bail!("sparse feature table truncated ({ns} declared)");
+        }
+        let mut sparse_ids = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            sparse_ids.push(FeatureId(r.u32().context("sparse id")?));
+        }
+        Ok((dense_names, sparse_ids))
+    }
+
+    /// Decode the per-feature sections of one tensor batch (shared by
+    /// the plain path and the dedup path's embedded unique batch).
+    fn read_tensor_sections<'b>(
+        &mut self,
+        r: &mut ByteReader<'b>,
+        budget: &mut usize,
+        rows: usize,
+        dense_names: Vec<FeatureId>,
+        sparse_ids: Vec<FeatureId>,
+    ) -> Result<TensorBatch> {
+        let nd = dense_names.len();
+        if (rows as u64)
+            .saturating_mul(nd as u64)
+            .saturating_mul(4)
+            > *budget as u64
+        {
+            bail!(
+                "dense plane {rows}x{nd} exceeds the remaining raw budget \
+                 {budget} — rejecting before allocation"
+            );
+        }
+        let mut dense = vec![0f32; rows * nd];
+        for j in 0..nd {
+            let sec = self.read_section(r, budget)?;
+            if sec.len() != rows * 4 {
+                bail!(
+                    "dense column {j}: {} bytes for {rows} rows",
+                    sec.len()
+                );
+            }
+            for (i, c) in sec.chunks_exact(4).enumerate() {
+                dense[i * nd + j] =
+                    f32::from_le_bytes(c.try_into().unwrap());
+            }
+        }
+        let mut sparse = Vec::with_capacity(sparse_ids.len());
+        for f in sparse_ids {
+            let sec = self.read_section(r, budget)?;
+            let mut sr = ByteReader::new(sec);
+            let mut offsets = Vec::with_capacity(rows + 1);
+            offsets.push(0u32);
+            let mut acc = 0u32;
+            for _ in 0..rows {
+                acc += sr.varint().context("sparse offset")? as u32;
+                offsets.push(acc);
+            }
+            let n = sr.varint().context("sparse id count")? as usize;
+            if n != acc as usize {
+                bail!("sparse length mismatch: {n} vs {acc}");
+            }
+            if n > sr.remaining() {
+                // Every id is at least one varint byte.
+                bail!("sparse ids truncated ({n} declared)");
+            }
+            let mut ids = Vec::with_capacity(n);
+            for _ in 0..n {
+                ids.push(sr.varint().context("sparse id")?);
+            }
+            if sr.remaining() != 0 {
+                bail!("trailing bytes in sparse stream");
+            }
+            sparse.push((f, offsets, ids));
+        }
+        let sec = self.read_section(r, budget)?;
+        let labels = read_f32_section(sec, rows, "labels")?;
+        Ok(TensorBatch {
+            rows,
+            dense,
+            dense_names,
+            sparse,
+            labels,
+        })
+    }
+
+    /// Read one framed section, returning its raw bytes — zero-copy from
+    /// the payload for stored sections, from the reusable scratch buffer
+    /// for compressed ones. The declared raw length is charged against
+    /// the frame's remaining raw budget *before* any allocation.
+    fn read_section<'s, 'b: 's>(
+        &'s mut self,
+        r: &mut ByteReader<'b>,
+        budget: &mut usize,
+    ) -> Result<&'s [u8]> {
+        let raw_len = r.varint().context("section raw len")? as usize;
+        let enc_len = r.varint().context("section enc len")? as usize;
+        let method = r.bytes(1).context("section method")?[0];
+        if raw_len > *budget {
+            bail!(
+                "section claims {raw_len} raw bytes with only {budget} left \
+                 in the frame's declared budget — rejecting before \
+                 allocation"
+            );
+        }
+        *budget -= raw_len;
+        let enc = r.bytes(enc_len).with_context(|| {
+            format!("section truncated ({enc_len} bytes declared)")
+        })?;
+        match method {
+            METHOD_STORED => {
+                if enc_len != raw_len {
+                    bail!(
+                        "stored section: {enc_len} encoded vs {raw_len} raw"
+                    );
+                }
+                Ok(enc)
+            }
+            METHOD_ZSTD | METHOD_ZSTD_DICT => {
+                let d = if method == METHOD_ZSTD_DICT {
+                    self.dict_dctx.as_mut().ok_or_else(|| {
+                        anyhow!(
+                            "frame uses a session dictionary this decoder \
+                             does not have"
+                        )
+                    })?
+                } else {
+                    &mut self.plain_dctx
+                };
+                self.raw.clear();
+                self.raw.reserve(raw_len);
+                let n = d
+                    .decompress_to_buffer(enc, &mut self.raw)
+                    .context("zstd decompress")?;
+                if n != raw_len {
+                    bail!("section decompressed to {n}, declared {raw_len}");
+                }
+                Ok(&self.raw)
+            }
+            m => bail!("unknown section method {m}"),
+        }
+    }
+}
+
+fn read_f32_section(sec: &[u8], rows: usize, what: &str) -> Result<Vec<f32>> {
+    if sec.len() != rows * 4 {
+        bail!("{what} section: {} bytes for {rows} rows", sec.len());
+    }
+    Ok(sec
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// One-shot decode with a transient decoder at the transport-wide bound
+/// (tests/benches; hot paths hold a [`WireUnpacker`]). Expands dedup
+/// frames.
+pub fn decode_wire(cipher: &StreamCipher, wire: &WireBatch) -> Result<TensorBatch> {
+    WireUnpacker::new(max_raw_bytes(MAX_FRAME_BYTES))
+        .decode(cipher, wire.clone())
+}
+
+/// One-shot decode of a dedup frame, unexpanded.
+pub fn decode_wire_dedup(
+    cipher: &StreamCipher,
+    wire: &WireBatch,
+) -> Result<DedupTensorBatch> {
+    WireUnpacker::new(max_raw_bytes(MAX_FRAME_BYTES))
+        .decode_dedup(cipher, wire.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transforms::Value;
+    use std::sync::Arc;
+
+    fn opts(wc: WireCompression) -> PipelineOptions {
+        PipelineOptions {
+            wire_compression: wc,
+            ..PipelineOptions::default()
+        }
+    }
+
+    fn batch(rows: usize) -> TensorBatch {
+        let dense_a: Vec<f32> = (0..rows).map(|i| (i % 7) as f32).collect();
+        let dense_b: Vec<f32> = (0..rows).map(|i| -(i as f32) * 0.5).collect();
+        let mut offsets = vec![0u32];
+        let mut ids = Vec::new();
+        for i in 0..rows {
+            for k in 0..(i % 3) {
+                ids.push((i * 10 + k) as u64 % 97);
+            }
+            offsets.push(ids.len() as u32);
+        }
+        let outputs = vec![
+            (FeatureId(1), Value::Dense(dense_a)),
+            (FeatureId(2), Value::Dense(dense_b)),
+            (
+                FeatureId(10),
+                Value::Sparse {
+                    offsets,
+                    ids,
+                    scores: None,
+                },
+            ),
+        ];
+        let labels: Vec<f32> = (0..rows).map(|i| (i % 2) as f32).collect();
+        TensorBatch::from_outputs(&outputs, &labels, 0, rows)
+    }
+
+    fn dedup_batch(rows: usize, uniques: usize) -> DedupTensorBatch {
+        let u = batch(uniques);
+        DedupTensorBatch {
+            inverse: (0..rows).map(|i| (i % uniques) as u32).collect(),
+            labels: (0..rows).map(|i| (i % 2) as f32).collect(),
+            unique: TensorBatch {
+                // Placeholder labels, like from_outputs_gather produces.
+                labels: vec![0.0; uniques],
+                ..u
+            },
+        }
+    }
+
+    #[test]
+    fn compressed_plain_roundtrip() {
+        let tb = batch(64);
+        let cipher = StreamCipher::for_table("codec");
+        let mut p = WirePacker::new(&opts(WireCompression::zstd(3))).unwrap();
+        let wb = p.encode_tensor(&cipher, 7, &tb).unwrap();
+        assert!(wb.compressed);
+        assert!(!wb.dedup);
+        assert_eq!(wb.rows, 64);
+        assert!(wb.raw_len > 0);
+        let back = decode_wire(&cipher, &wb).unwrap();
+        assert_eq!(back, tb);
+        // A held unpacker (the client's steady state) agrees.
+        let mut u = WireUnpacker::new(max_raw_bytes(MAX_FRAME_BYTES));
+        let back2 = u.decode_tensor(&cipher, wb).unwrap();
+        assert_eq!(back2, tb);
+    }
+
+    #[test]
+    fn compressed_dedup_roundtrip() {
+        let db = dedup_batch(96, 8);
+        let cipher = StreamCipher::for_table("codec");
+        let mut p = WirePacker::new(&opts(WireCompression::zstd(3))).unwrap();
+        let wb = p.encode_dedup(&cipher, 3, &db).unwrap();
+        assert!(wb.compressed);
+        assert!(wb.dedup);
+        assert_eq!(wb.rows, 96);
+        let back = decode_wire_dedup(&cipher, &wb).unwrap();
+        assert_eq!(back, db);
+        assert_eq!(decode_wire(&cipher, &wb).unwrap(), db.expand());
+    }
+
+    #[test]
+    fn duplicated_content_compresses() {
+        // RecD's observation: dup-heavy payloads shrink a lot. 96 rows
+        // over 8 uniques: the raw wire repeats nothing (dedup already
+        // collapsed it), but columns and the inverse stream still
+        // compress well below raw.
+        let db = dedup_batch(96, 8);
+        let cipher = StreamCipher::for_table("codec");
+        let raw_wire = db.to_wire(&cipher, 0).len();
+        let mut p = WirePacker::new(&opts(WireCompression::zstd(3))).unwrap();
+        let wb = p.encode_dedup(&cipher, 0, &db).unwrap();
+        assert!(
+            wb.bytes.len() < raw_wire,
+            "{} vs raw {raw_wire}",
+            wb.bytes.len()
+        );
+        // And an *expanded* (duplication-oblivious) batch with repeated
+        // rows must compress even more dramatically.
+        let tb = db.expand();
+        let raw_wire = tb.to_wire(&cipher, 1).len();
+        let wb = p.encode_tensor(&cipher, 1, &tb).unwrap();
+        assert!(
+            wb.bytes.len() * 2 < raw_wire,
+            "{} vs raw {raw_wire}",
+            wb.bytes.len()
+        );
+    }
+
+    #[test]
+    fn off_mode_is_byte_identical_to_legacy_wire() {
+        let tb = batch(32);
+        let cipher = StreamCipher::for_table("codec");
+        let mut p = WirePacker::new(&opts(WireCompression::Off)).unwrap();
+        let wb = p.encode_tensor(&cipher, 5, &tb).unwrap();
+        assert!(!wb.compressed);
+        assert_eq!(wb.raw_len, wb.bytes.len());
+        assert_eq!(wb.bytes, tb.to_wire(&cipher, 5), "ablation parity");
+        assert_eq!(decode_wire(&cipher, &wb).unwrap(), tb);
+        let db = dedup_batch(16, 4);
+        let wb = p.encode_dedup(&cipher, 6, &db).unwrap();
+        assert!(!wb.compressed);
+        assert_eq!(wb.bytes, db.to_wire(&cipher, 6));
+        assert_eq!(decode_wire_dedup(&cipher, &wb).unwrap(), db);
+    }
+
+    #[test]
+    fn truncated_and_corrupt_frames_error_cleanly() {
+        let tb = batch(64);
+        let cipher = StreamCipher::for_table("codec");
+        let mut p = WirePacker::new(&opts(WireCompression::zstd(3))).unwrap();
+        let wb = p.encode_tensor(&cipher, 2, &tb).unwrap();
+        for cut in [0, 1, wb.bytes.len() / 2, wb.bytes.len() - 1] {
+            let mut t = wb.clone();
+            t.bytes.truncate(cut);
+            assert!(
+                decode_wire(&cipher, &t).is_err(),
+                "truncation at {cut} must error, not panic"
+            );
+        }
+        // Flip bytes all over the frame: every outcome must be a clean
+        // error or a decode (a flipped f32 still parses) — never a
+        // panic or an unbounded allocation.
+        for at in (0..wb.bytes.len()).step_by(7) {
+            let mut c = wb.clone();
+            c.bytes[at] ^= 0xA5;
+            let _ = decode_wire(&cipher, &c);
+        }
+    }
+
+    #[test]
+    fn lying_raw_length_rejected_before_allocation() {
+        let cipher = StreamCipher::for_table("codec");
+        // Header-level lie: declared raw size above the decode bound.
+        let tb = batch(8);
+        let mut p = WirePacker::new(&opts(WireCompression::zstd(3))).unwrap();
+        let mut wb = p.encode_tensor(&cipher, 0, &tb).unwrap();
+        wb.raw_len = max_raw_bytes(MAX_FRAME_BYTES) + 1;
+        let err = decode_wire(&cipher, &wb).unwrap_err();
+        assert!(err.to_string().contains("before allocation"), "{err}");
+        // Section-level lie: a hand-built frame whose section claims a
+        // terabyte of raw bytes against a tiny declared budget.
+        let mut payload = vec![KIND_PLAIN];
+        put_varint(&mut payload, 1); // rows
+        put_varint(&mut payload, 0); // nd
+        put_varint(&mut payload, 0); // ns
+        put_varint(&mut payload, 1 << 40); // lying section raw_len
+        put_varint(&mut payload, 4); // enc_len
+        payload.push(METHOD_ZSTD);
+        payload.extend_from_slice(&[0u8; 4]);
+        let mut bytes = payload;
+        cipher.apply(9, &mut bytes);
+        let wire = WireBatch {
+            seq: 9,
+            rows: 1,
+            dedup: false,
+            compressed: true,
+            raw_len: 64,
+            bytes,
+        };
+        let err = decode_wire(&cipher, &wire).unwrap_err();
+        assert!(err.to_string().contains("before allocation"), "{err}");
+    }
+
+    #[test]
+    fn session_dictionary_roundtrip_and_mismatch() {
+        // Train on representative payload sections, then pack with the
+        // dictionary: both sides must hold the same bytes.
+        let samples: Vec<Vec<u8>> =
+            (0..8).map(|i| batch(32 + i).serialize()).collect();
+        let dict = train_wire_dict(&samples, 4 << 10).unwrap();
+        assert!(!dict.is_empty());
+        let wc = WireCompression::Zstd {
+            level: 3,
+            dict: Some(Arc::new(dict.clone())),
+        };
+        let tb = TensorBatch {
+            rows: 64,
+            dense: vec![1.5; 64],
+            dense_names: vec![FeatureId(1)],
+            sparse: vec![],
+            labels: vec![1.0; 64],
+        };
+        let cipher = StreamCipher::for_table("codec");
+        let mut p = WirePacker::new(&opts(wc)).unwrap();
+        let wb = p.encode_tensor(&cipher, 11, &tb).unwrap();
+        let mut u = WireUnpacker::new(max_raw_bytes(MAX_FRAME_BYTES))
+            .with_dict(&dict);
+        assert_eq!(u.decode_tensor(&cipher, wb.clone()).unwrap(), tb);
+        // A decoder without the session dictionary must error cleanly
+        // (these sections are all-constant, so they provably compressed
+        // and carry the dict method byte).
+        let err = decode_wire(&cipher, &wb).unwrap_err();
+        assert!(err.to_string().contains("dictionary"), "{err}");
+    }
+
+    #[test]
+    fn dict_training_falls_back_on_tiny_samples() {
+        // ZDICT declines sets this small; the raw-content fallback must
+        // still produce a usable dictionary.
+        let samples = vec![vec![1u8, 2, 3], vec![4u8, 5]];
+        let d = train_wire_dict(&samples, 64).unwrap();
+        assert!(!d.is_empty());
+        assert!(train_wire_dict(&[], 64).is_err());
+    }
+
+    #[test]
+    fn frame_cap_enforced_at_encode() {
+        let mut o = opts(WireCompression::Off);
+        o.max_frame_bytes = super::super::spec::MIN_FRAME_BYTES;
+        let cipher = StreamCipher::for_table("codec");
+        let mut p = WirePacker::new(&o).unwrap();
+        // ~80 KiB of labels alone exceeds the 64 KiB cap.
+        let tb = TensorBatch {
+            rows: 20_000,
+            dense: vec![],
+            dense_names: vec![],
+            sparse: vec![],
+            labels: (0..20_000).map(|i| i as f32).collect(),
+        };
+        let err = p.encode_tensor(&cipher, 0, &tb).unwrap_err();
+        assert!(err.to_string().contains("frame cap"), "{err}");
+    }
+
+    #[test]
+    fn wrong_kind_routing_is_an_error() {
+        let cipher = StreamCipher::for_table("codec");
+        let mut p = WirePacker::new(&opts(WireCompression::zstd(1))).unwrap();
+        let plain = p.encode_tensor(&cipher, 0, &batch(16)).unwrap();
+        let dedup = p.encode_dedup(&cipher, 1, &dedup_batch(16, 4)).unwrap();
+        let mut u = WireUnpacker::new(max_raw_bytes(MAX_FRAME_BYTES));
+        assert!(u.decode_dedup(&cipher, plain).is_err());
+        assert!(u.decode_tensor(&cipher, dedup).is_err());
+    }
+}

@@ -342,6 +342,9 @@ impl Master {
         broker: Option<&Arc<ReadBroker>>,
     ) -> Result<Master> {
         let t_build = Instant::now();
+        spec.pipeline
+            .validate()
+            .context("invalid pipeline options")?;
         let table = catalog
             .get(&spec.table)
             .with_context(|| format!("unknown table {}", spec.table))?;

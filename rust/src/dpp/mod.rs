@@ -11,7 +11,10 @@
 //! Data plane: [`WorkerCore`]/[`Worker`] — the extract→transform→load
 //! loop over real bytes (tectonic I/O → DWRF decode → transform DAGs →
 //! tensor batches); [`Client`] — the trainer-side hook with partitioned
-//! round-robin routing to a bounded set of workers.
+//! round-robin routing to a bounded set of workers. The bytes between
+//! the two are produced by [`codec`]: per-feature-stream zstd framing
+//! (`PipelineOptions::wire_compression`) encrypted and decoded without
+//! intermediate copies.
 //!
 //! Cross-job sharing: a Master built with [`Master::new_shared`]
 //! attaches the session to a [`crate::broker::ReadBroker`] so workers
@@ -21,6 +24,7 @@
 
 pub mod cache;
 pub mod client;
+pub mod codec;
 pub mod master;
 pub mod service;
 pub mod spec;
@@ -31,6 +35,9 @@ pub mod worker;
 
 pub use cache::{session_fingerprint, TensorCache};
 pub use client::Client;
+pub use codec::{
+    decode_wire, decode_wire_dedup, train_wire_dict, WirePacker, WireUnpacker,
+};
 pub use master::{
     estimate_worker_seconds, rescale_worker_capacity, AutoscalePolicy,
     Master, MasterCheckpoint, ScaleDecision, ScaleSignals, WorkerHealth,
@@ -38,7 +45,7 @@ pub use master::{
 pub use service::{
     run_session, run_session_on, Session, SessionConfig, SessionReport,
 };
-pub use spec::{PipelineOptions, SessionSpec};
+pub use spec::{PipelineOptions, SessionSpec, WireCompression};
 pub use split::{Split, SplitId};
 pub use tensor::{DedupTensorBatch, TensorBatch};
 pub use worker::{Worker, WorkerCore};

@@ -72,6 +72,12 @@ pub struct SessionReport {
     pub rows_per_sec: f64,
     /// Total client wire bytes (loading throughput).
     pub client_rx_bytes: u64,
+    /// Pre-compression size of those wire bytes — what the clients would
+    /// have pulled with `wire_compression: Off`.
+    pub client_raw_rx_bytes: u64,
+    /// Seconds clients spent in the wire codec (decrypt + decompress +
+    /// tensor rebuild) — the trainer-side cost of transport compression.
+    pub client_decode_secs: f64,
     /// Seconds clients spent stalled waiting on tensors.
     pub client_stall_secs: f64,
     pub peak_workers: usize,
@@ -91,6 +97,11 @@ pub struct SessionReport {
     /// Merged worker pipeline metrics snapshot.
     pub storage_rx_bytes: u64,
     pub tensor_tx_bytes: u64,
+    /// Pre-compression size of the workers' tensor output (matches
+    /// `tensor_tx_bytes` exactly when compression is off).
+    pub wire_raw_bytes: u64,
+    /// Worker-side seconds inside the wire codec (subset of busy time).
+    pub worker_compress_secs: f64,
     pub worker_busy_secs: f64,
     /// Wall-clock delivery rate (rows / wall second) — worker-pool
     /// parallelism included, unlike the per-busy-second efficiency in
@@ -118,6 +129,16 @@ impl SessionReport {
             0.0
         } else {
             self.storage_bytes_read as f64 / 1e6 / self.storage_device_secs
+        }
+    }
+
+    /// Wire compression ratio achieved this session (1.0 when off or
+    /// when nothing shipped).
+    pub fn wire_compression_ratio(&self) -> f64 {
+        if self.tensor_tx_bytes == 0 {
+            1.0
+        } else {
+            self.wire_raw_bytes as f64 / self.tensor_tx_bytes as f64
         }
     }
 }
@@ -189,14 +210,16 @@ pub fn run_session_on(
         let client_rxs: Vec<_> =
             part.iter().map(|&w| rxs[w].take().unwrap()).collect();
         let table = table.clone();
+        let pipeline = spec.pipeline.clone();
         let pace = cfg.client_rows_per_sec;
         let drained = metrics.clone();
         let stall = Arc::new(StageClock::default());
         stall_clocks.push(stall.clone());
         let c_obs = oh.clone();
         client_handles.push(std::thread::spawn(move || {
-            let mut client =
-                Client::new(&table, client_rxs).with_stall_clock(stall);
+            let mut client = Client::new(&table, client_rxs)
+                .with_wire(&pipeline)
+                .with_stall_clock(stall);
             if let Some(h) = c_obs {
                 client = client.with_obs(h, CLIENT_TID_BASE + ci as u32);
             }
@@ -221,7 +244,14 @@ pub fn run_session_on(
                     }
                 }
             }
-            (rows, batches, client.rx_bytes.get(), client.stalled())
+            (
+                rows,
+                batches,
+                client.rx_bytes.get(),
+                client.raw_rx_bytes.get(),
+                client.decode_clock.secs(),
+                client.stalled(),
+            )
         }));
     }
 
@@ -391,12 +421,17 @@ pub fn run_session_on(
     let mut rows = 0u64;
     let mut batches = 0u64;
     let mut rx_bytes = 0u64;
+    let mut raw_rx_bytes = 0u64;
+    let mut decode_secs = 0.0f64;
     let mut stalls = 0.0f64;
     for h in client_handles {
-        let (r, b, bytes, stall) = h.join().expect("client thread");
+        let (r, b, bytes, raw, dec, stall) =
+            h.join().expect("client thread");
         rows += r;
         batches += b;
         rx_bytes += bytes;
+        raw_rx_bytes += raw;
+        decode_secs += dec;
         stalls += stall;
     }
     let wall = start.elapsed().as_secs_f64();
@@ -413,6 +448,8 @@ pub fn run_session_on(
         wall_secs: wall,
         rows_per_sec: rows as f64 / wall.max(1e-9),
         client_rx_bytes: rx_bytes,
+        client_raw_rx_bytes: raw_rx_bytes,
+        client_decode_secs: decode_secs,
         client_stall_secs: stalls,
         peak_workers,
         worker_pool_secs,
@@ -422,6 +459,8 @@ pub fn run_session_on(
         broker_hit_rate,
         storage_rx_bytes: metrics.storage_rx_bytes.get(),
         tensor_tx_bytes: metrics.tensor_tx_bytes.get(),
+        wire_raw_bytes: metrics.wire_raw_bytes.get(),
+        worker_compress_secs: metrics.t_compress.secs(),
         worker_busy_secs: metrics.total_secs(),
         worker_qps: metrics.qps_wall(wall),
         storage_device_secs: st.device_secs,
@@ -669,6 +708,36 @@ mod tests {
             report.stall_attribution,
             report.client_stall_secs
         );
+    }
+
+    #[test]
+    fn session_reports_wire_compression_accounting() {
+        let (cluster, catalog, spec) = setup();
+        let mut off = spec.clone();
+        off.pipeline.wire_compression =
+            crate::dpp::spec::WireCompression::Off;
+        let r_off =
+            Session::run(&catalog, &cluster, off, &SessionConfig::default())
+                .unwrap();
+        assert_eq!(r_off.rows_delivered, 128);
+        assert_eq!(
+            r_off.tensor_tx_bytes, r_off.wire_raw_bytes,
+            "off: wire bytes are the raw bytes"
+        );
+        assert!((r_off.wire_compression_ratio() - 1.0).abs() < 1e-12);
+        let r_on =
+            Session::run(&catalog, &cluster, spec, &SessionConfig::default())
+                .unwrap();
+        assert_eq!(
+            r_on.rows_delivered, 128,
+            "compression changes bytes, never rows"
+        );
+        assert!(r_on.wire_raw_bytes > 0);
+        assert_eq!(
+            r_on.client_raw_rx_bytes, r_on.wire_raw_bytes,
+            "every produced batch drained exactly once"
+        );
+        assert_eq!(r_on.client_rx_bytes, r_on.tensor_tx_bytes);
     }
 
     #[test]

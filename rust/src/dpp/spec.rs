@@ -4,11 +4,68 @@
 //! analogue — plus the pipeline-optimization toggles characterized in
 //! Table 12.
 
+use super::transport::MAX_FRAME_BYTES;
 use crate::dwrf::plan::COALESCE_WINDOW;
 use crate::dwrf::Projection;
 use crate::filter::RowPredicate;
 use crate::schema::FeatureId;
 use crate::transforms::TransformDag;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Default zstd level for the worker→client wire: level 3 is zstd's own
+/// default — a good ratio at a compression speed far above the wire
+/// rates a single worker produces.
+pub const DEFAULT_WIRE_ZSTD_LEVEL: i32 = 3;
+
+/// Smallest frame cap a session may configure (64 KiB). Below this even
+/// a single small tensor batch could exceed the cap and wedge the
+/// session; the floor keeps `max_frame_bytes` a throttle, not a foot-gun.
+pub const MIN_FRAME_BYTES: usize = 64 << 10;
+
+/// Transport compression for `WireBatch::bytes` (the tentpole knob of
+/// the leaner wire path). Compression runs *before* encryption — the
+/// AES-CTR pass turns the payload into noise, so the order is load-
+/// bearing, not a preference.
+#[derive(Clone, Debug)]
+pub enum WireCompression {
+    /// Ship raw serialized bytes (the ablation; byte-identical to the
+    /// pre-compression wire format).
+    Off,
+    /// Per-feature-stream zstd framing: each feature's column/stream is
+    /// an independently-framed zstd section, so the columnar layout
+    /// compresses well and a corrupt section is detected per stream.
+    Zstd {
+        /// zstd compression level (1..=19).
+        level: i32,
+        /// Optional per-session trained dictionary (see
+        /// [`crate::dpp::codec::train_wire_dict`]): small per-feature
+        /// sections share one sample-trained context. Both sides must
+        /// hold the same bytes — it is part of the session fingerprint.
+        dict: Option<Arc<Vec<u8>>>,
+    },
+}
+
+impl WireCompression {
+    /// Dictionary-less zstd at `level`.
+    pub fn zstd(level: i32) -> WireCompression {
+        WireCompression::Zstd { level, dict: None }
+    }
+
+    pub fn is_on(&self) -> bool {
+        !matches!(self, WireCompression::Off)
+    }
+
+    /// The session dictionary bytes, if any.
+    pub fn dict(&self) -> Option<&[u8]> {
+        match self {
+            WireCompression::Off => None,
+            WireCompression::Zstd { dict, .. } => {
+                dict.as_ref().map(|d| d.as_slice())
+            }
+        }
+    }
+}
 
 /// Worker-side pipeline toggles (the read/decode/format levers of
 /// Table 12; the write-side levers FF/FR/LS are fixed at dataset-build
@@ -59,6 +116,18 @@ pub struct PipelineOptions {
     /// never changes pipeline output, so it is deliberately *excluded*
     /// from the tensor-cache session fingerprint.
     pub tracing: bool,
+    /// Worker→client transport compression (zstd per-feature framing,
+    /// applied before encryption). Changes the wire bytes, so it *is*
+    /// part of the tensor-cache session fingerprint — compressed and
+    /// uncompressed sessions must never share cached wire batches.
+    pub wire_compression: WireCompression,
+    /// Frame cap both sides of the wire enforce (post-compression
+    /// payload size; the declared decompressed size is bounded against
+    /// it too). Validated into `[MIN_FRAME_BYTES, MAX_FRAME_BYTES]` at
+    /// spec build time so worker and client always agree. A cap, not an
+    /// encoding choice — it never changes the bytes produced, so it is
+    /// excluded from the session fingerprint.
+    pub max_frame_bytes: usize,
 }
 
 impl Default for PipelineOptions {
@@ -75,6 +144,8 @@ impl Default for PipelineOptions {
             // Off by default: tracing is opt-in (CLI `--trace`, benches,
             // tests) so the hot path stays span-free out of the box.
             tracing: false,
+            wire_compression: WireCompression::zstd(DEFAULT_WIRE_ZSTD_LEVEL),
+            max_frame_bytes: MAX_FRAME_BYTES,
         }
     }
 }
@@ -91,7 +162,42 @@ impl PipelineOptions {
             row_group_pruning: false,
             shared_reads: false,
             tracing: false,
+            wire_compression: WireCompression::Off,
+            max_frame_bytes: MAX_FRAME_BYTES,
         }
+    }
+
+    /// Reject configurations the wire path cannot honor. Called by
+    /// `Master::build` so a bad spec fails at session intake — before a
+    /// worker panics mid-split or a client silently disagrees with the
+    /// worker about the frame cap.
+    pub fn validate(&self) -> Result<()> {
+        if let WireCompression::Zstd { level, dict } = &self.wire_compression
+        {
+            if !(1..=19).contains(level) {
+                bail!(
+                    "wire_compression zstd level {level} outside 1..=19"
+                );
+            }
+            if let Some(d) = dict {
+                if d.is_empty() {
+                    bail!("wire_compression dictionary is empty");
+                }
+            }
+        }
+        if self.max_frame_bytes < MIN_FRAME_BYTES {
+            bail!(
+                "max_frame_bytes {} below floor {MIN_FRAME_BYTES}",
+                self.max_frame_bytes
+            );
+        }
+        if self.max_frame_bytes > MAX_FRAME_BYTES {
+            bail!(
+                "max_frame_bytes {} above transport cap {MAX_FRAME_BYTES}",
+                self.max_frame_bytes
+            );
+        }
+        Ok(())
     }
 }
 
@@ -201,6 +307,15 @@ mod tests {
         assert!(p.row_group_pruning);
         assert!(p.shared_reads);
         assert!(!p.tracing, "tracing is opt-in, not a default");
+        assert!(p.wire_compression.is_on());
+        assert!(matches!(
+            p.wire_compression,
+            WireCompression::Zstd {
+                level: DEFAULT_WIRE_ZSTD_LEVEL,
+                dict: None
+            }
+        ));
+        assert_eq!(p.max_frame_bytes, MAX_FRAME_BYTES);
         let b = PipelineOptions::baseline();
         assert!(b.coalesce.is_none());
         assert!(!b.fast_decode);
@@ -210,6 +325,44 @@ mod tests {
         assert!(!b.row_group_pruning);
         assert!(!b.shared_reads);
         assert!(!b.tracing);
+        assert!(!b.wire_compression.is_on());
+        assert_eq!(b.max_frame_bytes, MAX_FRAME_BYTES);
+    }
+
+    #[test]
+    fn validate_accepts_default_and_baseline() {
+        assert!(PipelineOptions::default().validate().is_ok());
+        assert!(PipelineOptions::baseline().validate().is_ok());
+        let p = PipelineOptions {
+            wire_compression: WireCompression::Zstd {
+                level: 19,
+                dict: Some(Arc::new(vec![1, 2, 3])),
+            },
+            max_frame_bytes: MIN_FRAME_BYTES,
+            ..PipelineOptions::default()
+        };
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_wire_options() {
+        let mut p = PipelineOptions {
+            wire_compression: WireCompression::zstd(0),
+            ..PipelineOptions::default()
+        };
+        assert!(p.validate().is_err(), "level 0 is out of range");
+        p.wire_compression = WireCompression::zstd(99);
+        assert!(p.validate().is_err(), "level 99 is out of range");
+        p.wire_compression = WireCompression::Zstd {
+            level: 3,
+            dict: Some(Arc::new(Vec::new())),
+        };
+        assert!(p.validate().is_err(), "empty dictionary");
+        p = PipelineOptions::default();
+        p.max_frame_bytes = MIN_FRAME_BYTES - 1;
+        assert!(p.validate().is_err(), "cap below floor");
+        p.max_frame_bytes = MAX_FRAME_BYTES + 1;
+        assert!(p.validate().is_err(), "cap above transport ceiling");
     }
 
     #[test]

@@ -4,34 +4,69 @@
 //! can live on different hosts (as in production, where each Client keeps
 //! a capped set of connections to its partition of Workers).
 //!
-//! Frame: `[magic u32][seq u64][rows u32][len u32][flags u8][payload]`,
-//! little endian (flags bit 0: payload is a dedup wire batch). The
-//! payload is the already-encrypted `WireBatch` body, so the transport
-//! adds framing only — TLS-equivalent protection is the payload
-//! encryption applied at serialization time.
+//! Frame: `[magic u32][seq u64][rows u32][len u32][raw u32][flags u8]
+//! [payload]`, little endian. `len` is the on-wire payload size
+//! (post-compression); `raw` is the declared pre-compression size, which
+//! the receiver uses to bound decompression allocations *before* making
+//! them. Flags: bit 0 = payload is a dedup wire batch, bit 1 = payload
+//! uses the section-framed compression codec. Uncompressed frames must
+//! declare `raw == len`. The payload is the already-encrypted
+//! `WireBatch` body, so the transport adds framing only — TLS-equivalent
+//! protection is the payload encryption applied at serialization time.
+//!
+//! Hot-path shape: `send_batch` issues header + payload as one vectored
+//! write (with a short-write continuation loop — `IoSlice::
+//! advance_slices` needs a newer MSRV); `recv_batch` reads the payload
+//! into reserved-but-unwritten capacity via `Read::take`, so a 64 MiB
+//! frame does not pay a zero-fill memset per receive.
 
 use super::worker::WireBatch;
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 
 const FRAME_MAGIC: u32 = 0xD51_F00D;
+
+const HEADER_LEN: usize = 25;
+
+const FLAG_DEDUP: u8 = 0b01;
+const FLAG_COMPRESSED: u8 = 0b10;
 
 /// Largest frame payload accepted off the wire (64 MiB — far above any
 /// real tensor batch). The length field comes from an untrusted peer: a
 /// corrupt header must bound the receive allocation, not choose it.
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
+/// Largest *declared uncompressed* payload accepted for a given frame
+/// cap. zstd on tensor sections rarely exceeds ~4x even on pathological
+/// duplication, so 4x bounds the decompression allocation a lying frame
+/// can demand while never rejecting a legitimate one.
+pub fn max_raw_bytes(frame_cap: usize) -> usize {
+    frame_cap.saturating_mul(4)
+}
+
 fn invalid(msg: String) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
 }
 
-/// Send one batch over a stream. Errors (instead of silently truncating
-/// through `as u32`) when the batch can't be represented in the frame
-/// header.
+/// Send one batch over a TCP stream at the transport-wide cap.
 pub fn send_batch(stream: &mut TcpStream, b: &WireBatch) -> std::io::Result<()> {
-    if b.bytes.len() > MAX_FRAME_BYTES {
+    send_batch_capped(stream, b, MAX_FRAME_BYTES)
+}
+
+/// Send one batch with a session frame cap (`PipelineOptions::
+/// max_frame_bytes`, itself bounded by [`MAX_FRAME_BYTES`]). Errors
+/// (instead of silently truncating through `as u32`) when the batch
+/// can't be represented in the frame header, and refuses to emit a
+/// frame the receive side would reject.
+pub fn send_batch_capped<W: Write>(
+    w: &mut W,
+    b: &WireBatch,
+    cap: usize,
+) -> std::io::Result<()> {
+    let cap = cap.min(MAX_FRAME_BYTES);
+    if b.bytes.len() > cap {
         return Err(invalid(format!(
-            "frame payload {} exceeds cap {MAX_FRAME_BYTES}",
+            "frame payload {} exceeds cap {cap}",
             b.bytes.len()
         )));
     }
@@ -39,24 +74,79 @@ pub fn send_batch(stream: &mut TcpStream, b: &WireBatch) -> std::io::Result<()> 
         .rows
         .try_into()
         .map_err(|_| invalid(format!("row count {} overflows frame header", b.rows)))?;
-    let mut header = [0u8; 21];
+    let raw: u32 = b.raw_len.try_into().map_err(|_| {
+        invalid(format!("raw size {} overflows frame header", b.raw_len))
+    })?;
+    if !b.compressed && b.raw_len != b.bytes.len() {
+        return Err(invalid(format!(
+            "uncompressed frame declares raw {} but carries {} bytes",
+            b.raw_len,
+            b.bytes.len()
+        )));
+    }
+    if b.compressed && b.raw_len > max_raw_bytes(cap) {
+        return Err(invalid(format!(
+            "declared raw size {} exceeds decompression cap {}",
+            b.raw_len,
+            max_raw_bytes(cap)
+        )));
+    }
+    let mut header = [0u8; HEADER_LEN];
     header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
     header[4..12].copy_from_slice(&b.seq.to_le_bytes());
     header[12..16].copy_from_slice(&rows.to_le_bytes());
     header[16..20].copy_from_slice(&(b.bytes.len() as u32).to_le_bytes());
-    header[20] = b.dedup as u8;
-    stream.write_all(&header)?;
-    stream.write_all(&b.bytes)
+    header[20..24].copy_from_slice(&raw.to_le_bytes());
+    header[24] = (b.dedup as u8) * FLAG_DEDUP
+        + (b.compressed as u8) * FLAG_COMPRESSED;
+    // One vectored write for header + payload (instead of two syscalls
+    // per frame), continuing through short writes: a partial vectored
+    // write must still yield a well-formed frame.
+    let total = HEADER_LEN + b.bytes.len();
+    let mut written = 0usize;
+    while written < total {
+        let res = if written < HEADER_LEN {
+            let bufs =
+                [IoSlice::new(&header[written..]), IoSlice::new(&b.bytes)];
+            w.write_vectored(&bufs)
+        } else {
+            w.write(&b.bytes[written - HEADER_LEN..])
+        };
+        match res {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "connection closed mid-frame",
+                ))
+            }
+            Ok(n) => written += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
-/// Receive one batch; `Ok(None)` on clean end-of-stream. Only a
-/// connection closed *between* frames is clean — a cut mid-header (or
-/// mid-payload) is an error, never a silent truncation of the stream.
+/// Receive one batch from a TCP stream at the transport-wide cap;
+/// `Ok(None)` on clean end-of-stream.
 pub fn recv_batch(stream: &mut TcpStream) -> std::io::Result<Option<WireBatch>> {
-    let mut header = [0u8; 21];
+    recv_batch_capped(stream, MAX_FRAME_BYTES)
+}
+
+/// Receive one batch with a session frame cap; `Ok(None)` on clean
+/// end-of-stream. Only a connection closed *between* frames is clean —
+/// a cut mid-header (or mid-payload) is an error, never a silent
+/// truncation of the stream. Every header field is validated before the
+/// payload allocation it sizes.
+pub fn recv_batch_capped<R: Read>(
+    r: &mut R,
+    cap: usize,
+) -> std::io::Result<Option<WireBatch>> {
+    let cap = cap.min(MAX_FRAME_BYTES);
+    let mut header = [0u8; HEADER_LEN];
     let mut filled = 0usize;
     while filled < header.len() {
-        match stream.read(&mut header[filled..]) {
+        match r.read(&mut header[filled..]) {
             Ok(0) => {
                 if filled == 0 {
                     return Ok(None); // closed on a frame boundary
@@ -73,28 +163,56 @@ pub fn recv_batch(stream: &mut TcpStream) -> std::io::Result<Option<WireBatch>> 
     }
     let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
     if magic != FRAME_MAGIC {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("bad frame magic {magic:#x}"),
-        ));
+        return Err(invalid(format!("bad frame magic {magic:#x}")));
     }
     let seq = u64::from_le_bytes(header[4..12].try_into().unwrap());
     let rows = u32::from_le_bytes(header[12..16].try_into().unwrap()) as usize;
     let len = u32::from_le_bytes(header[16..20].try_into().unwrap()) as usize;
-    if len > MAX_FRAME_BYTES {
+    let raw_len =
+        u32::from_le_bytes(header[20..24].try_into().unwrap()) as usize;
+    let flags = header[24];
+    if len > cap {
         // A corrupt frame must not demand an attacker-chosen (up to
         // 4 GiB) allocation before a single payload byte arrives.
+        return Err(invalid(format!("frame length {len} exceeds cap {cap}")));
+    }
+    if flags & !(FLAG_DEDUP | FLAG_COMPRESSED) != 0 {
+        return Err(invalid(format!("unknown frame flags {flags:#04x}")));
+    }
+    let dedup = flags & FLAG_DEDUP != 0;
+    let compressed = flags & FLAG_COMPRESSED != 0;
+    if compressed {
+        if raw_len > max_raw_bytes(cap) {
+            // Bound what the decoder will be asked to allocate from the
+            // header alone — a lying raw size dies here, before any
+            // payload byte is read or buffered.
+            return Err(invalid(format!(
+                "declared raw size {raw_len} exceeds decompression cap {}",
+                max_raw_bytes(cap)
+            )));
+        }
+    } else if raw_len != len {
         return Err(invalid(format!(
-            "frame length {len} exceeds cap {MAX_FRAME_BYTES}"
+            "uncompressed frame declares raw {raw_len} but carries {len} \
+             bytes"
         )));
     }
-    let dedup = header[20] & 1 == 1;
-    let mut bytes = vec![0u8; len];
-    stream.read_exact(&mut bytes)?;
+    // Read into reserved-but-unwritten capacity: `take` caps the read at
+    // the validated length and `read_to_end` appends without the
+    // `vec![0u8; len]` zero-fill pass.
+    let mut bytes = Vec::with_capacity(len);
+    let got = r.by_ref().take(len as u64).read_to_end(&mut bytes)?;
+    if got < len {
+        return Err(invalid(format!(
+            "connection closed mid-payload ({got} of {len} bytes)"
+        )));
+    }
     Ok(Some(WireBatch {
         seq,
         rows,
         dedup,
+        compressed,
+        raw_len,
         bytes,
     }))
 }
@@ -146,12 +264,8 @@ mod tests {
             labels: vec![0.0, 1.0, 1.0, 0.0],
         };
         let cipher = StreamCipher::for_table("tcp");
-        WireBatch {
-            seq,
-            rows: 4,
-            dedup: seq % 2 == 1, // flag must survive the framing
-            bytes: tb.to_wire(&cipher, seq),
-        }
+        // dedup flag must survive the framing
+        WireBatch::plain(seq, 4, seq % 2 == 1, tb.to_wire(&cipher, seq))
     }
 
     #[test]
@@ -165,6 +279,8 @@ mod tests {
         for (a, b) in got.iter().zip(batches.iter()) {
             assert_eq!(a.seq, b.seq);
             assert_eq!(a.dedup, b.dedup);
+            assert_eq!(a.compressed, b.compressed);
+            assert_eq!(a.raw_len, b.raw_len);
             assert_eq!(a.bytes, b.bytes);
             // Payload decrypts + deserializes on the far side.
             let tb = TensorBatch::from_wire(&cipher, a.seq, &a.bytes).unwrap();
@@ -175,8 +291,8 @@ mod tests {
 
     #[test]
     fn tcp_full_worker_stream() {
-        // End to end: a real WorkerCore's output shipped over TCP and
-        // consumed like a trainer would.
+        // End to end: a real WorkerCore's output (compressed by default)
+        // shipped over TCP and consumed like a trainer would.
         use crate::config::{RmConfig, RmId, SimScale};
         use crate::datagen::build_dataset;
         use crate::dpp::{Master, SessionSpec, WorkerCore};
@@ -224,6 +340,7 @@ mod tests {
             master.complete_split(w, split.id);
         }
         let n = all.len();
+        assert!(all.iter().all(|b| b.compressed), "default wire is zstd");
         let (addr, server) = serve_batches(all).unwrap();
         let got = fetch_all(addr).unwrap();
         server.join().unwrap().unwrap();
@@ -231,11 +348,7 @@ mod tests {
         let cipher = StreamCipher::for_table(&spec.table);
         let rows: usize = got
             .iter()
-            .map(|b| {
-                TensorBatch::from_wire(&cipher, b.seq, &b.bytes)
-                    .unwrap()
-                    .rows
-            })
+            .map(|b| crate::dpp::codec::decode_wire(&cipher, b).unwrap().rows)
             .sum();
         assert_eq!(rows, 128);
     }
@@ -248,7 +361,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let h = std::thread::spawn(move || {
             let (mut s, _) = listener.accept().unwrap();
-            let mut header = [0u8; 21];
+            let mut header = [0u8; HEADER_LEN];
             header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
             header[12..16].copy_from_slice(&4u32.to_le_bytes());
             header[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
@@ -262,33 +375,137 @@ mod tests {
     }
 
     #[test]
+    fn lying_raw_length_rejected_before_allocation() {
+        // Compressed flag + a ~4 GiB declared raw size: rejected from
+        // the header, before the payload is read or buffered.
+        let mut header = [0u8; HEADER_LEN];
+        header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        header[12..16].copy_from_slice(&4u32.to_le_bytes());
+        header[16..20].copy_from_slice(&8u32.to_le_bytes());
+        header[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        header[24] = FLAG_COMPRESSED;
+        let mut frame = header.to_vec();
+        frame.extend_from_slice(&[0u8; 8]);
+        let err =
+            recv_batch_capped(&mut &frame[..], MAX_FRAME_BYTES).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("decompression cap"), "{err}");
+        // An uncompressed frame whose raw field disagrees with len is
+        // equally malformed.
+        header[24] = 0;
+        let err =
+            recv_batch_capped(&mut &header[..], MAX_FRAME_BYTES).unwrap_err();
+        assert!(err.to_string().contains("declares raw"), "{err}");
+        // Unknown flag bits are a framing error, not silently ignored.
+        header[20..24].copy_from_slice(&8u32.to_le_bytes());
+        header[24] = 0b100;
+        let err =
+            recv_batch_capped(&mut &header[..], MAX_FRAME_BYTES).unwrap_err();
+        assert!(err.to_string().contains("unknown frame flags"), "{err}");
+    }
+
+    #[test]
     fn send_refuses_wire_truncation() {
         // Row counts beyond u32 and payloads beyond the frame cap must
         // error out instead of truncating through `as u32` (a receiver
         // would otherwise get a silently-wrong frame).
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let accepter = std::thread::spawn(move || listener.accept().unwrap());
-        let mut stream = TcpStream::connect(addr).unwrap();
-        let _held = accepter.join().unwrap();
-        let big_rows = WireBatch {
-            seq: 0,
-            rows: u32::MAX as usize + 1,
-            dedup: false,
-            bytes: Vec::new(),
-        };
-        let err = send_batch(&mut stream, &big_rows).unwrap_err();
+        let mut sink = Vec::new();
+        let big_rows = WireBatch::plain(
+            0,
+            u32::MAX as usize + 1,
+            false,
+            Vec::new(),
+        );
+        let err = send_batch_capped(&mut sink, &big_rows, MAX_FRAME_BYTES)
+            .unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
         assert!(err.to_string().contains("row count"), "{err}");
-        let big_payload = WireBatch {
-            seq: 0,
-            rows: 1,
-            dedup: false,
-            bytes: vec![0u8; MAX_FRAME_BYTES + 1],
-        };
-        let err = send_batch(&mut stream, &big_payload).unwrap_err();
+        let big_payload =
+            WireBatch::plain(0, 1, false, vec![0u8; MAX_FRAME_BYTES + 1]);
+        let err = send_batch_capped(&mut sink, &big_payload, MAX_FRAME_BYTES)
+            .unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
         assert!(err.to_string().contains("payload"), "{err}");
+        // A raw/len mismatch on an uncompressed frame never leaves the
+        // sender (the receiver would reject it anyway).
+        let mut lying = WireBatch::plain(0, 1, false, vec![0u8; 4]);
+        lying.raw_len = 5;
+        let err = send_batch_capped(&mut sink, &lying, MAX_FRAME_BYTES)
+            .unwrap_err();
+        assert!(err.to_string().contains("declares raw"), "{err}");
+        // Nor does a compressed frame whose raw size exceeds what the
+        // receiver will accept.
+        let mut inflated = WireBatch::plain(0, 1, false, vec![0u8; 4]);
+        inflated.compressed = true;
+        inflated.raw_len = max_raw_bytes(MAX_FRAME_BYTES) + 1;
+        let err = send_batch_capped(&mut sink, &inflated, MAX_FRAME_BYTES)
+            .unwrap_err();
+        assert!(err.to_string().contains("decompression cap"), "{err}");
+        assert!(sink.is_empty(), "no partial frames emitted");
+    }
+
+    /// A writer that accepts at most `chunk` bytes per call — including
+    /// across the slices of one vectored write — to force every
+    /// short-write continuation path.
+    struct Trickle {
+        out: Vec<u8>,
+        chunk: usize,
+    }
+
+    impl Write for Trickle {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(self.chunk);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn write_vectored(
+            &mut self,
+            bufs: &[IoSlice<'_>],
+        ) -> std::io::Result<usize> {
+            let mut left = self.chunk;
+            let mut wrote = 0usize;
+            for b in bufs {
+                if left == 0 {
+                    break;
+                }
+                let n = b.len().min(left);
+                self.out.extend_from_slice(&b[..n]);
+                wrote += n;
+                left -= n;
+            }
+            Ok(wrote)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn partial_vectored_writes_still_produce_well_formed_frames() {
+        // 3-byte writes split inside the header, across the
+        // header/payload boundary, and inside the payload; the frames
+        // must reassemble bit-exactly.
+        let batches = vec![batch(0), batch(1)];
+        let mut w = Trickle {
+            out: Vec::new(),
+            chunk: 3,
+        };
+        for b in &batches {
+            send_batch_capped(&mut w, b, MAX_FRAME_BYTES).unwrap();
+        }
+        let mut r: &[u8] = &w.out;
+        for b in &batches {
+            let got = recv_batch_capped(&mut r, MAX_FRAME_BYTES)
+                .unwrap()
+                .expect("frame present");
+            assert_eq!(got.seq, b.seq);
+            assert_eq!(got.rows, b.rows);
+            assert_eq!(got.dedup, b.dedup);
+            assert_eq!(got.compressed, b.compressed);
+            assert_eq!(got.raw_len, b.raw_len);
+            assert_eq!(got.bytes, b.bytes);
+        }
+        assert!(recv_batch_capped(&mut r, MAX_FRAME_BYTES).unwrap().is_none());
     }
 
     #[test]
@@ -304,12 +521,12 @@ mod tests {
             labels: vec![0.0; 4],
         };
         let cipher = StreamCipher::for_table("tcp");
-        let b = WireBatch {
-            seq: 7,
-            rows: u32::MAX as usize,
-            dedup: false,
-            bytes: tb.to_wire(&cipher, 7),
-        };
+        let b = WireBatch::plain(
+            7,
+            u32::MAX as usize,
+            false,
+            tb.to_wire(&cipher, 7),
+        );
         let (addr, server) = serve_batches(vec![b.clone()]).unwrap();
         let got = fetch_all(addr).unwrap();
         server.join().unwrap().unwrap();
@@ -324,10 +541,8 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let h = std::thread::spawn(move || {
             let (mut s, _) = listener.accept().unwrap();
-            // One full header of zeros: bad magic (a 20-byte write —
-            // the pre-dedup-flag header size — only exercised the
-            // clean-EOF path and asserted nothing).
-            s.write_all(&[0u8; 21]).unwrap();
+            // One full header of zeros: bad magic.
+            s.write_all(&[0u8; HEADER_LEN]).unwrap();
         });
         let mut stream = TcpStream::connect(addr).unwrap();
         let err = recv_batch(&mut stream);
@@ -337,20 +552,32 @@ mod tests {
 
     #[test]
     fn mid_header_close_is_error_not_silent_truncation() {
-        // A peer that dies 20 bytes into a 21-byte header lost data:
+        // A peer that dies 24 bytes into a 25-byte header lost data:
         // that must surface as an error, not as clean end-of-stream
         // (which would silently under-deliver training rows).
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let h = std::thread::spawn(move || {
             let (mut s, _) = listener.accept().unwrap();
-            s.write_all(&[0u8; 20]).unwrap();
+            s.write_all(&[0u8; HEADER_LEN - 1]).unwrap();
         });
         let mut stream = TcpStream::connect(addr).unwrap();
         let err = recv_batch(&mut stream).unwrap_err();
         h.join().unwrap();
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
         assert!(err.to_string().contains("mid-header"), "{err}");
+    }
+
+    #[test]
+    fn mid_payload_close_is_error() {
+        let b = batch(3);
+        let mut frame = Vec::new();
+        send_batch_capped(&mut frame, &b, MAX_FRAME_BYTES).unwrap();
+        frame.truncate(HEADER_LEN + b.bytes.len() / 2);
+        let err =
+            recv_batch_capped(&mut &frame[..], MAX_FRAME_BYTES).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("mid-payload"), "{err}");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! Master heartbeat loop.
 
 use super::cache::{session_fingerprint, TensorCache};
+use super::codec::WirePacker;
 use super::master::{Master, WorkerId};
 use super::spec::SessionSpec;
 use super::split::Split;
@@ -44,7 +45,29 @@ pub struct WireBatch {
     /// Payload is a [`DedupTensorBatch`] (inverse-keyed unique tensors)
     /// rather than a plain [`TensorBatch`]; the Client expands it.
     pub dedup: bool,
+    /// Payload uses the section-framed wire codec (zstd per feature
+    /// stream) rather than the plain serialization.
+    pub compressed: bool,
+    /// Declared pre-compression payload size. For uncompressed frames
+    /// this must equal `bytes.len()`; for compressed frames it bounds
+    /// every decode-side allocation before it is made.
+    pub raw_len: usize,
     pub bytes: Vec<u8>,
+}
+
+impl WireBatch {
+    /// An uncompressed frame (the legacy wire: plain serialization,
+    /// encrypted).
+    pub fn plain(seq: u64, rows: usize, dedup: bool, bytes: Vec<u8>) -> WireBatch {
+        WireBatch {
+            seq,
+            rows,
+            dedup,
+            compressed: false,
+            raw_len: bytes.len(),
+            bytes,
+        }
+    }
 }
 
 /// The synchronous extract→transform→load pipeline.
@@ -61,6 +84,9 @@ pub struct WorkerCore {
     /// Optional cross-job read broker (shared storage scans); used when
     /// `PipelineOptions::shared_reads` is on.
     broker: Option<BrokerHandle>,
+    /// Wire encoder (per-feature zstd framing, or the legacy plain wire
+    /// when compression is off); owns the zstd context + scratch.
+    packer: WirePacker,
     fingerprint: u64,
     seq: u64,
     /// Optional span sink; `tid` is this worker's trace lane and
@@ -79,6 +105,10 @@ impl WorkerCore {
         WorkerCore {
             cipher: StreamCipher::for_table(&spec.table),
             fingerprint: session_fingerprint(&spec),
+            // Real sessions validate options at Master intake; a bad
+            // level/dictionary here means the caller skipped that.
+            packer: WirePacker::new(&spec.pipeline)
+                .expect("valid wire_compression options"),
             spec,
             cluster,
             meta_cache: HashMap::new(),
@@ -155,6 +185,7 @@ impl WorkerCore {
             if let Some(batches) = cache.get(self.fingerprint, split) {
                 for b in batches.iter() {
                     m.tensor_tx_bytes.add(b.bytes.len() as u64);
+                    m.wire_raw_bytes.add(b.raw_len as u64);
                     m.samples.add(b.rows as u64);
                     m.batches.inc();
                 }
@@ -384,20 +415,22 @@ impl WorkerCore {
         // ---- transform: run the DAG per stripe batch ----
         let t = Instant::now();
         let mut transformed = Vec::new();
-        for batch in &batches {
-            let (outputs, _stats) = spec.dag.execute(batch)?;
+        for batch in batches {
+            let (outputs, _stats) = spec.dag.execute(&batch)?;
             let out_bytes: usize = outputs
                 .iter()
                 .map(|(_, v)| v.elements() * 8)
                 .sum();
             m.transform_out_bytes.add(out_bytes as u64);
             m.transform_rows.add(batch.num_rows as u64);
-            transformed.push((outputs, batch.labels.clone(), batch.num_rows));
+            let rows = batch.num_rows;
+            // Move the labels out — the batch is spent after the DAG ran.
+            transformed.push((outputs, batch.labels, rows));
         }
         m.t_transform.add(t.elapsed());
         self.span(Stage::Transform, t);
 
-        // ---- load: batch into tensors, serialize + encrypt ----
+        // ---- load: batch into tensors, encode + encrypt in one pass ----
         let t = Instant::now();
         let mut wire = Vec::new();
         for (outputs, labels, num_rows) in &transformed {
@@ -407,16 +440,14 @@ impl WorkerCore {
                 let tb = TensorBatch::from_outputs(outputs, labels, row, end);
                 let seq = self.seq;
                 self.seq += 1;
-                let bytes = tb.to_wire(&self.cipher, seq);
-                m.tensor_tx_bytes.add(bytes.len() as u64);
+                let t_enc = Instant::now();
+                let wb = self.packer.encode_tensor(&self.cipher, seq, &tb)?;
+                m.t_compress.add(t_enc.elapsed());
+                m.tensor_tx_bytes.add(wb.bytes.len() as u64);
+                m.wire_raw_bytes.add(wb.raw_len as u64);
                 m.samples.add((end - row) as u64);
                 m.batches.inc();
-                wire.push(WireBatch {
-                    seq,
-                    rows: end - row,
-                    dedup: false,
-                    bytes,
-                });
+                wire.push(wb);
                 row = end;
             }
         }
@@ -553,16 +584,14 @@ impl WorkerCore {
                 };
                 let seq = self.seq;
                 self.seq += 1;
-                let bytes = db.to_wire(&self.cipher, seq);
-                m.tensor_tx_bytes.add(bytes.len() as u64);
+                let t_enc = Instant::now();
+                let wb = self.packer.encode_dedup(&self.cipher, seq, &db)?;
+                m.t_compress.add(t_enc.elapsed());
+                m.tensor_tx_bytes.add(wb.bytes.len() as u64);
+                m.wire_raw_bytes.add(wb.raw_len as u64);
                 m.samples.add((end - row) as u64);
                 m.batches.inc();
-                wire.push(WireBatch {
-                    seq,
-                    rows: end - row,
-                    dedup: true,
-                    bytes,
-                });
+                wire.push(wb);
                 row = end;
             }
         }
@@ -834,10 +863,11 @@ mod tests {
         assert!(metrics.storage_rx_bytes.get() > 0);
         assert!(metrics.tensor_tx_bytes.get() > 0);
         assert_eq!(metrics.samples.get(), 32);
-        // Batches decode on the client side.
+        // Default options compress the wire; batches decode on the
+        // client side through the codec.
+        assert!(wire.iter().all(|b| b.compressed));
         let cipher = StreamCipher::for_table(&core.spec.table);
-        let tb =
-            TensorBatch::from_wire(&cipher, wire[0].seq, &wire[0].bytes).unwrap();
+        let tb = crate::dpp::codec::decode_wire(&cipher, &wire[0]).unwrap();
         assert_eq!(tb.rows, 8);
         assert_eq!(tb.dense_names.len(), 1);
         assert_eq!(tb.sparse.len(), 1);
@@ -865,8 +895,8 @@ mod tests {
         let w2 = c2.process_split(&split).unwrap();
         let cipher = StreamCipher::for_table(&spec_fm.table);
         for (a, b) in w1.iter().zip(w2.iter()) {
-            let ta = TensorBatch::from_wire(&cipher, a.seq, &a.bytes).unwrap();
-            let tb = TensorBatch::from_wire(&cipher, b.seq, &b.bytes).unwrap();
+            let ta = crate::dpp::codec::decode_wire(&cipher, a).unwrap();
+            let tb = crate::dpp::codec::decode_wire(&cipher, b).unwrap();
             assert_eq!(ta, tb);
         }
     }
@@ -906,9 +936,22 @@ mod tests {
             assert_eq!(a.seq, b.seq);
             assert_eq!(a.rows, b.rows);
             assert_eq!(a.dedup, b.dedup);
+            assert_eq!(a.raw_len, b.raw_len);
             assert_eq!(a.bytes, b.bytes, "wire must be byte-identical");
         }
         assert!(m2.storage_rx_bytes.get() > 0, "single session still reads");
+    }
+
+    #[test]
+    fn master_rejects_invalid_wire_options() {
+        use crate::dpp::spec::WireCompression;
+        let (cluster, catalog, spec) = setup(true);
+        let mut bad_cap = (*spec).clone();
+        bad_cap.pipeline.max_frame_bytes = 1024; // below the floor
+        assert!(Master::new(&catalog, &cluster, bad_cap).is_err());
+        let mut bad_level = (*spec).clone();
+        bad_level.pipeline.wire_compression = WireCompression::zstd(99);
+        assert!(Master::new(&catalog, &cluster, bad_level).is_err());
     }
 
     #[test]

@@ -192,9 +192,7 @@ mod tests {
         let mut out = Vec::new();
         while let Some(split) = master.fetch_split(w) {
             for b in core.process_split(&split).unwrap() {
-                out.push(
-                    TensorBatch::from_wire(&cipher, b.seq, &b.bytes).unwrap(),
-                );
+                out.push(crate::dpp::codec::decode_wire(&cipher, &b).unwrap());
             }
             master.complete_split(w, split.id);
         }

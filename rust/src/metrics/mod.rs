@@ -80,6 +80,9 @@ pub struct EtlMetrics {
     pub extract_out_bytes: Counter,  // decompressed/decoded bytes
     pub transform_out_bytes: Counter, // bytes after transforms
     pub tensor_tx_bytes: Counter,    // serialized tensor bytes to clients
+    /// Pre-compression (raw) size of the tensor bytes behind
+    /// `tensor_tx_bytes` — raw/tx is the wire compression ratio.
+    pub wire_raw_bytes: Counter,
     pub samples: Counter,
     pub batches: Counter,
     /// Rows actually pushed through the transform DAG (== `samples` on
@@ -119,6 +122,10 @@ pub struct EtlMetrics {
     pub t_transform: StageClock,
     pub t_load: StageClock,
     pub t_misc: StageClock,
+    /// Time inside the wire codec (compress + frame) — a *subset* of
+    /// `t_load`, kept separate so the compression tax is attributable
+    /// without double-counting in [`total_secs`](Self::total_secs).
+    pub t_compress: StageClock,
 }
 
 impl EtlMetrics {
@@ -171,6 +178,17 @@ impl EtlMetrics {
     /// to rescale per-worker capacity as the hit rate drifts.
     pub fn fetch_decode_secs(&self) -> f64 {
         self.t_read.secs() + self.t_extract.secs()
+    }
+
+    /// Wire compression ratio: raw tensor bytes per byte actually put on
+    /// the wire (1.0 with compression off or before any batch shipped).
+    pub fn wire_compression_ratio(&self) -> f64 {
+        let tx = self.tensor_tx_bytes.get();
+        if tx == 0 {
+            1.0
+        } else {
+            self.wire_raw_bytes.get() as f64 / tx as f64
+        }
     }
 
     /// Observed predicate selectivity: delivered / (decoded + pruned-away
@@ -407,6 +425,18 @@ mod tests {
         assert!((m.total_secs() - 1.0).abs() < 1e-9);
         m.drained_rows.add(7);
         assert_eq!(m.drained_rows.get(), 7);
+    }
+
+    #[test]
+    fn compress_clock_is_outside_total_and_ratio_tracks_bytes() {
+        let m = EtlMetrics::default();
+        assert_eq!(m.wire_compression_ratio(), 1.0);
+        m.t_load.add(Duration::from_millis(400));
+        m.t_compress.add(Duration::from_millis(300)); // subset of t_load
+        assert!((m.total_secs() - 0.4).abs() < 1e-9);
+        m.wire_raw_bytes.add(1000);
+        m.tensor_tx_bytes.add(250);
+        assert!((m.wire_compression_ratio() - 4.0).abs() < 1e-12);
     }
 
     #[test]

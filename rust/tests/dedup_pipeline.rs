@@ -8,8 +8,7 @@ use dsi::config::{RmConfig, RmId, SimScale};
 use dsi::datagen::build_dataset_dup;
 use dsi::dedup::scan_table;
 use dsi::dpp::{
-    DedupTensorBatch, Master, Session, SessionConfig, SessionSpec,
-    TensorBatch, WorkerCore,
+    Master, Session, SessionConfig, SessionSpec, TensorBatch, WorkerCore,
 };
 use dsi::dwrf::crypto::StreamCipher;
 use dsi::dwrf::{
@@ -148,12 +147,11 @@ fn drain(world: &World, dedup_aware: bool) -> (Vec<TensorBatch>, Arc<EtlMetrics>
         for wire in core.process_split(&split).unwrap() {
             let tb = if wire.dedup {
                 let db =
-                    DedupTensorBatch::from_wire(&cipher, wire.seq, &wire.bytes)
-                        .unwrap();
+                    dsi::dpp::codec::decode_wire_dedup(&cipher, &wire).unwrap();
                 assert_eq!(db.rows(), wire.rows);
                 db.expand()
             } else {
-                TensorBatch::from_wire(&cipher, wire.seq, &wire.bytes).unwrap()
+                dsi::dpp::codec::decode_wire(&cipher, &wire).unwrap()
             };
             assert_eq!(tb.rows, wire.rows);
             out.push(tb);

@@ -6,7 +6,7 @@
 
 use dsi::config::{RmConfig, RmId, SimScale};
 use dsi::datagen::{build_dataset_with, GenOptions};
-use dsi::dpp::{DedupTensorBatch, Master, SessionSpec, TensorBatch, WorkerCore};
+use dsi::dpp::{Master, SessionSpec, TensorBatch, WorkerCore};
 use dsi::dwrf::crypto::StreamCipher;
 use dsi::dwrf::{Encoding, WriterOptions};
 use dsi::filter::RowPredicate;
@@ -154,11 +154,11 @@ fn drain(
     while let Some(split) = master.fetch_split(w) {
         for wire in core.process_split(&split).unwrap() {
             let tb = if wire.dedup {
-                DedupTensorBatch::from_wire(&cipher, wire.seq, &wire.bytes)
+                dsi::dpp::codec::decode_wire_dedup(&cipher, &wire)
                     .unwrap()
                     .expand()
             } else {
-                TensorBatch::from_wire(&cipher, wire.seq, &wire.bytes).unwrap()
+                dsi::dpp::codec::decode_wire(&cipher, &wire).unwrap()
             };
             assert_eq!(tb.rows, wire.rows);
             rows.extend(row_keys(&tb));

@@ -160,8 +160,7 @@ fn labels_flow_through_to_tensors() {
     let mut total = 0usize;
     while let Some(split) = master.fetch_split(id) {
         for wire in core.process_split(&split).unwrap() {
-            let tb = dsi::dpp::TensorBatch::from_wire(&cipher, wire.seq, &wire.bytes)
-                .unwrap();
+            let tb = dsi::dpp::codec::decode_wire(&cipher, &wire).unwrap();
             pos += tb.labels.iter().filter(|&&l| l == 1.0).count();
             total += tb.labels.len();
             assert!(tb.labels.iter().all(|&l| l == 0.0 || l == 1.0));
