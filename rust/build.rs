@@ -1,0 +1,6 @@
+fn main() {
+    // `--cfg loom` swaps `dsi::sync` onto the instrumented shim for
+    // model checking (see src/sync). Declare it so `unexpected_cfgs`
+    // stays quiet on normal builds.
+    println!("cargo:rustc-check-cfg=cfg(loom)");
+}

@@ -6,11 +6,12 @@
 use super::SharedStripe;
 use crate::metrics::Counter;
 use crate::schema::FeatureId;
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{lock_or_recover, wait_or_recover, Condvar, Mutex};
 use crate::tectonic::FileId;
 use anyhow::Result;
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
 /// One byte pool shared by every cache that pins decoded training data in
 /// memory (broker stripe buffers, the preprocessed-tensor cache): each
@@ -59,6 +60,9 @@ impl MemoryBudget {
         }
     }
 
+    /// Return `bytes` to the pool. Saturates at zero: the pool can
+    /// never go negative, and a defensive over-release clamps instead
+    /// of wrapping (see `budget_reserve_release`).
     pub fn release(&self, bytes: u64) {
         let mut cur = self.used.load(Ordering::Relaxed);
         loop {
@@ -158,7 +162,7 @@ impl StripeBuffer {
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().entries.len()
+        lock_or_recover(&self.state, "stripe buffer").entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -188,7 +192,7 @@ impl StripeBuffer {
             Wait,
             Load,
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "stripe buffer");
         loop {
             let action = match st.entries.get(&key) {
                 Some(Slot::Ready(e)) => {
@@ -220,6 +224,7 @@ impl StripeBuffer {
                             }
                         }
                     }
+                    self.check_accounting(&st);
                     return Ok(ServeOutcome::Hit {
                         payload,
                         saved_bytes: saved,
@@ -237,7 +242,7 @@ impl StripeBuffer {
                     break;
                 }
                 Action::Wait => {
-                    st = self.cv.wait(st).unwrap();
+                    st = wait_or_recover(&self.cv, st, "stripe buffer");
                 }
                 Action::Load => break,
             }
@@ -245,18 +250,20 @@ impl StripeBuffer {
         st.entries.insert(key, Slot::Loading);
         drop(st);
 
-        let fetched = match fetch() {
-            Ok(f) => f,
-            Err(e) => {
-                let mut st = self.state.lock().unwrap();
-                st.entries.remove(&key);
-                self.cv.notify_all();
-                return Err(e);
-            }
+        // The guard clears the Loading slot and wakes waiters on *any*
+        // early exit — fetch error or fetch panic (a worker dying
+        // mid-decode) — so peers parked on the condvar retry instead of
+        // blocking forever on a slot no one will ever fill.
+        let mut cleanup = LoadGuard {
+            buf: self,
+            key,
+            armed: true,
         };
+        let fetched = fetch()?;
         let payload = Arc::new(fetched.stripe);
         let mem = payload.mem_bytes();
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "stripe buffer");
+        cleanup.armed = false;
         let charged = remaining > 0 && self.reserve_evicting(&mut st, mem);
         if charged {
             st.tick += 1;
@@ -277,6 +284,7 @@ impl StripeBuffer {
             // this caller without caching.
             st.entries.remove(&key);
         }
+        self.check_accounting(&st);
         drop(st);
         self.cv.notify_all();
         Ok(ServeOutcome::Fetched {
@@ -290,7 +298,7 @@ impl StripeBuffer {
     /// Drop a buffered stripe (e.g. its last registered session went
     /// away without consuming it). In-flight loads are left alone.
     pub fn release(&self, key: StripeKey) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "stripe buffer");
         if matches!(st.entries.get(&key), Some(Slot::Ready(_))) {
             if let Some(Slot::Ready(e)) = st.entries.remove(&key) {
                 if e.charged {
@@ -298,7 +306,38 @@ impl StripeBuffer {
                 }
             }
         }
+        self.check_accounting(&st);
     }
+
+    /// Debug/model invariant: bytes charged by Ready entries never
+    /// exceed the pool's `used` (the budget is shared with other
+    /// consumers — e.g. the tensor cache — so equality only holds when
+    /// this buffer is the sole consumer), and `used` never exceeds
+    /// `total`.
+    #[cfg(any(debug_assertions, loom))]
+    fn check_accounting(&self, st: &BufState) {
+        let charged: u64 = st
+            .entries
+            .values()
+            .map(|s| match s {
+                Slot::Ready(e) if e.charged => e.mem_bytes,
+                _ => 0,
+            })
+            .sum();
+        let used = self.budget.used();
+        assert!(
+            charged <= used,
+            "buffer charged {charged} bytes > budget used {used}"
+        );
+        assert!(
+            used <= self.budget.total(),
+            "budget used {used} > total {}",
+            self.budget.total()
+        );
+    }
+
+    #[cfg(not(any(debug_assertions, loom)))]
+    fn check_accounting(&self, _st: &BufState) {}
 
     /// Reserve `bytes`, evicting least-recently-used entries that no
     /// session currently holds a handle to. Returns false when the pool
@@ -330,6 +369,27 @@ impl StripeBuffer {
                 self.budget.release(e.mem_bytes);
                 self.evictions.inc();
             }
+        }
+    }
+}
+
+/// Unwind guard for the un-locked fetch window of [`StripeBuffer::serve`]:
+/// while armed, dropping it removes the `Loading` slot and wakes every
+/// waiter, so neither a fetch `Err` nor a fetch panic strands peers.
+struct LoadGuard<'a> {
+    buf: &'a StripeBuffer,
+    key: StripeKey,
+    armed: bool,
+}
+
+impl Drop for LoadGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            let mut st =
+                lock_or_recover(&self.buf.state, "stripe load cleanup");
+            st.entries.remove(&self.key);
+            drop(st);
+            self.buf.cv.notify_all();
         }
     }
 }
@@ -451,6 +511,36 @@ mod tests {
             .unwrap();
         assert!(matches!(ok, ServeOutcome::Fetched { .. }));
         assert_eq!(buf.len(), 1);
+    }
+
+    #[test]
+    fn fetch_panic_clears_loading_slot_and_wakes_waiters() {
+        use std::sync::Barrier;
+        let buf = Arc::new(StripeBuffer::new(MemoryBudget::new(1 << 20)));
+        let gate = Arc::new(Barrier::new(2));
+        // Loader: panics mid-fetch (a worker dying mid-decode) after a
+        // waiter has had time to park on the Loading slot.
+        let loader = {
+            let buf = buf.clone();
+            let gate = gate.clone();
+            std::thread::spawn(move || {
+                let _ = buf.serve(key(9, 0), &[], 1, || {
+                    gate.wait();
+                    panic!("decode blew up");
+                });
+            })
+        };
+        gate.wait();
+        // Waiter: without the unwind guard this serve would block
+        // forever on a Loading slot no one will ever fill; with it, the
+        // waiter retries and pays the fetch itself.
+        let out = buf
+            .serve(key(9, 0), &[], 1, || Ok(fetched(40)))
+            .unwrap();
+        assert!(matches!(out, ServeOutcome::Fetched { .. }));
+        assert!(loader.join().is_err(), "loader should have panicked");
+        assert_eq!(buf.len(), 1);
+        assert_eq!(buf.budget().used(), 40);
     }
 
     #[test]

@@ -25,10 +25,11 @@ use crate::dwrf::{
 use crate::metrics::Counter;
 use crate::obs::{ObsHandle, Stage};
 use crate::schema::FeatureId;
+use crate::sync::{lock_or_recover, Mutex};
 use crate::tectonic::{Cluster, FileId};
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeSet, HashMap, HashSet};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Trace lane for broker-side storage fetches: they run on whichever
@@ -225,7 +226,7 @@ impl ReadBroker {
     /// Attach an observability sink: subsequent cold-path stripe
     /// fetches record `fetch` spans against it.
     pub fn attach_obs(&self, h: ObsHandle) {
-        *self.obs.lock().unwrap() = Some(h);
+        *lock_or_recover(&self.obs, "broker obs") = Some(h);
     }
 
     /// A broker with its own private stripe-buffer budget. To share one
@@ -251,12 +252,14 @@ impl ReadBroker {
     /// Fetch-once footer cache: control-plane I/O is shared across
     /// sessions exactly like data-plane stripes.
     pub fn footer(&self, file: FileId) -> Result<Arc<FileMeta>> {
-        if let Some(m) = self.footers.lock().unwrap().get(&file) {
+        if let Some(m) =
+            lock_or_recover(&self.footers, "broker footers").get(&file)
+        {
             return Ok(m.clone());
         }
         let meta =
             Arc::new(crate::dpp::Master::fetch_meta(&self.cluster, file)?);
-        let mut cached = self.footers.lock().unwrap();
+        let mut cached = lock_or_recover(&self.footers, "broker footers");
         Ok(cached.entry(file).or_insert(meta).clone())
     }
 
@@ -269,7 +272,7 @@ impl ReadBroker {
         projection: &Projection,
         interest: HashMap<FileId, Vec<usize>>,
     ) -> BrokerSessionId {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "broker state");
         let id = st.next_session;
         st.next_session += 1;
         let proj: HashSet<FeatureId> = projection.iter().copied().collect();
@@ -303,7 +306,7 @@ impl ReadBroker {
     /// Unlike [`BrokerMetrics::hit_rate`], which aggregates across every
     /// attached session, this is the per-session scaling signal.
     pub fn session_hit_rate(&self, session: BrokerSessionId) -> f64 {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state, "broker state");
         st.sessions.get(&session).map_or(0.0, |s| {
             let total = s.shared_reads + s.broker_misses;
             if total == 0 {
@@ -317,7 +320,7 @@ impl ReadBroker {
     /// Drop a session's outstanding interest; stripes nobody else wants
     /// any more are released from the buffer immediately.
     pub fn unregister(&self, session: BrokerSessionId) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "broker state");
         let Some(sess) = st.sessions.remove(&session) else {
             return;
         };
@@ -353,7 +356,7 @@ impl ReadBroker {
     ) -> Result<Served> {
         let key: StripeKey = (file, stripe);
         let (needed, union, table, consumed, others) = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state, "broker state");
             let sess = st
                 .sessions
                 .get_mut(&session)
@@ -394,7 +397,7 @@ impl ReadBroker {
             bail!("stripe {stripe} out of range for {file:?}");
         }
         let union_proj = Projection::new(union);
-        let obs = self.obs.lock().unwrap().clone();
+        let obs = lock_or_recover(&self.obs, "broker obs").clone();
         let fetch = || -> Result<FetchedStripe> {
             let t_fetch = Instant::now();
             let reader = DwrfReader::from_meta((*meta).clone(), &table);
@@ -450,7 +453,7 @@ impl ReadBroker {
                     // split serves — and settles its interest — like a
                     // normal registered serve, and unregistration still
                     // accounts for this stripe.
-                    let mut st = self.state.lock().unwrap();
+                    let mut st = lock_or_recover(&self.state, "broker state");
                     if let Some(sess) = st.sessions.get_mut(&session) {
                         sess.remaining
                             .entry(file)
@@ -466,7 +469,7 @@ impl ReadBroker {
         // the concurrent serves interleaved.
         let was_hit = matches!(outcome, ServeOutcome::Hit { .. });
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state, "broker state");
             if let Some(sess) = st.sessions.get_mut(&session) {
                 if was_hit {
                     sess.shared_reads += 1;

@@ -20,10 +20,27 @@ use crate::broker::MemoryBudget;
 use crate::dedup::Fnv64;
 use crate::filter::RowPredicate;
 use crate::metrics::Counter;
+use crate::sync::{lock_or_recover, Mutex};
 use crate::transforms::dag::InputKind;
 use crate::transforms::{Node, Op};
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+/// [`crate::dpp::PipelineOptions`] fields deliberately *not* hashed by
+/// [`session_fingerprint`]. `dsi-lint` (tools/dsi-lint) fails the build
+/// if a `PipelineOptions` field is neither hashed below nor listed here,
+/// and requires a justification comment directly above each entry —
+/// adding a knob without deciding its cache identity is a CI error, not
+/// a latent cache-collision bug.
+pub const FINGERPRINT_EXEMPT: &[&str] = &[
+    // Span emission is diagnostic-only and never changes the
+    // preprocessed output, so a traced session may share cached
+    // tensors with an untraced twin.
+    "tracing",
+    // A transport cap, not an encoding choice: identical sessions with
+    // different frame caps produce byte-identical wire batches.
+    "max_frame_bytes",
+];
 
 /// Fingerprint of everything that affects a split's preprocessed output.
 pub fn session_fingerprint(spec: &SessionSpec) -> u64 {
@@ -293,7 +310,7 @@ impl TensorCache {
     }
 
     pub fn get(&self, fingerprint: u64, split: &Split) -> Option<Arc<Vec<WireBatch>>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_or_recover(&self.inner, "tensor cache");
         inner.tick += 1;
         let tick = inner.tick;
         match inner.map.get_mut(&Self::key(fingerprint, split)) {
@@ -323,7 +340,7 @@ impl TensorCache {
             return false;
         }
         let key = Self::key(fingerprint, split);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_or_recover(&self.inner, "tensor cache");
         if let Some(old) = inner.map.remove(&key) {
             inner.used -= old.bytes;
             self.budget.release(old.bytes);
@@ -360,11 +377,11 @@ impl TensorCache {
     }
 
     pub fn used_bytes(&self) -> u64 {
-        self.inner.lock().unwrap().used
+        lock_or_recover(&self.inner, "tensor cache").used
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        lock_or_recover(&self.inner, "tensor cache").map.len()
     }
 
     pub fn is_empty(&self) -> bool {

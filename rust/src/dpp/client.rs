@@ -62,7 +62,9 @@ pub struct Client {
     /// Time spent blocked waiting for a batch (data-stall signal).
     /// An atomic nanosecond accumulator — this sits on the hot recv
     /// path, bumped on every poll sweep, so no mutex. Shared (`Arc`) so
-    /// the session control loop reads stall *while* the client drains.
+    /// the session control loop reads stall *while* the client drains;
+    /// mid-run reads are relaxed lower bounds (see `StageClock`'s
+    /// ordering notes in `crate::metrics`).
     pub stall: Arc<StageClock>,
     /// Span sink + this client's trace lane (`tid`), when tracing.
     obs: Option<(ObsHandle, u32)>,
@@ -197,7 +199,7 @@ impl Client {
 }
 
 /// Shared handle bundle when one process hosts several clients.
-pub type Clients = Vec<Arc<std::sync::Mutex<Client>>>;
+pub type Clients = Vec<Arc<crate::sync::Mutex<Client>>>;
 
 #[cfg(test)]
 mod tests {

@@ -12,9 +12,10 @@ use crate::filter::RowPredicate;
 use crate::obs::{ObsHandle, SpanEvent, Stage};
 use crate::tectonic::{Cluster, FileId};
 use crate::warehouse::Catalog;
+use crate::sync::{lock_or_recover, Mutex};
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeSet, HashMap, VecDeque};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 pub type WorkerId = usize;
@@ -90,8 +91,35 @@ impl MasterState {
             self.in_flight.remove(&id);
             self.queue.push_front(id);
         }
+        self.check_invariants();
         n
     }
+
+    /// Lease/queue/completion disjointness — the state-machine
+    /// invariant the loom models drive: settled work is never leased or
+    /// queued, and a split is never both queued and leased.
+    #[cfg(any(debug_assertions, loom))]
+    fn check_invariants(&self) {
+        for id in self.in_flight.keys() {
+            assert!(
+                !self.completed.contains(id),
+                "split {id:?} both leased and completed"
+            );
+        }
+        for id in &self.queue {
+            assert!(
+                !self.completed.contains(id),
+                "split {id:?} both queued and completed"
+            );
+            assert!(
+                !self.in_flight.contains_key(id),
+                "split {id:?} both queued and leased"
+            );
+        }
+    }
+
+    #[cfg(not(any(debug_assertions, loom)))]
+    fn check_invariants(&self) {}
 }
 
 /// Auto-scaler targets and controller knobs.
@@ -496,6 +524,54 @@ impl Master {
         self.broker.clone()
     }
 
+    /// A minimal in-memory session — `n` queued two-stripe splits, no
+    /// storage, no broker — so the loom models and concurrency stress
+    /// tests can drive the lease state machine in isolation.
+    #[doc(hidden)]
+    pub fn synthetic(n: usize) -> Master {
+        let mut all = HashMap::new();
+        let mut queue = VecDeque::new();
+        for i in 0..n {
+            let id = SplitId(i as u64);
+            all.insert(
+                id,
+                Split {
+                    id,
+                    file: FileId(1),
+                    day: 0,
+                    stripe_start: i * 2,
+                    stripe_count: 2,
+                    rows: 64,
+                },
+            );
+            queue.push_back(id);
+        }
+        Master {
+            spec: SessionSpec::from_dag(
+                "synthetic",
+                0,
+                1,
+                crate::transforms::TransformDag::default(),
+                16,
+            ),
+            state: Mutex::new(MasterState {
+                queue,
+                all,
+                in_flight: HashMap::new(),
+                completed: BTreeSet::new(),
+                skipped: BTreeSet::new(),
+                workers: HashMap::new(),
+                next_worker: 0,
+            }),
+            policy: AutoscalePolicy::default(),
+            broker: None,
+            prior_selectivity: 1.0,
+            controller: Mutex::new(ControllerState::new(1.0)),
+            obs: Mutex::new(None),
+            build_dur: Duration::ZERO,
+        }
+    }
+
     /// Attach an observability sink to this session. Retroactively
     /// records the split-enumeration time as the session's `plan` span
     /// (sentinel lane `u32::MAX` / split `u64::MAX` — control-plane
@@ -511,19 +587,19 @@ impl Master {
             dur_ns: self.build_dur.as_nanos() as u64,
         });
         h.obs.hist(Stage::Plan).record(self.build_dur);
-        *self.obs.lock().unwrap() = Some(h);
+        *lock_or_recover(&self.obs, "master obs") = Some(h);
     }
 
     /// The observability handle workers and clients attach to (present
     /// only after [`Master::attach_obs`] — i.e. for traced sessions).
     pub fn obs_handle(&self) -> Option<ObsHandle> {
-        self.obs.lock().unwrap().clone()
+        lock_or_recover(&self.obs, "master obs").clone()
     }
 
     /// (live workers, average buffered-tensor depth) — the telemetry
     /// sampler's pool view, one lock hold for a consistent pair.
     pub fn pool_snapshot(&self) -> (usize, f64) {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state, "master state");
         let live: Vec<&WorkerHealth> = st
             .workers
             .values()
@@ -594,7 +670,7 @@ impl Master {
 
     /// Register a new Worker; returns its id.
     pub fn register_worker(&self) -> WorkerId {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "master state");
         let id = st.next_worker;
         st.next_worker += 1;
         st.workers.insert(id, WorkerHealth::default());
@@ -608,7 +684,7 @@ impl Master {
     /// the crashed worker id. Draining (retired) workers are likewise
     /// refused: they finish their current lease and exit.
     pub fn fetch_split(&self, worker: WorkerId) -> Option<Split> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "master state");
         if !st
             .workers
             .get(&worker)
@@ -618,6 +694,7 @@ impl Master {
         }
         let id = st.queue.pop_front()?;
         st.in_flight.insert(id, (worker, Instant::now()));
+        st.check_invariants();
         Some(st.all[&id].clone())
     }
 
@@ -628,23 +705,21 @@ impl Master {
     /// pending requeue of the same split is cancelled, so settled work
     /// is never served twice.
     pub fn complete_split(&self, _worker: WorkerId, id: SplitId) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "master state");
         let had_lease = st.in_flight.remove(&id).is_some();
-        if !st.completed.insert(id) {
-            return; // already settled — idempotent
-        }
         // A stale completion can race the requeue that assumed its
         // worker died; the split is settled now, don't re-serve it. A
         // split with a live lease cannot also sit in the queue (leases
         // pop it; requeues drop the lease first), so the O(queue) scan
-        // only runs on lease-less stale completions.
-        if !had_lease {
+        // only runs on lease-less, non-idempotent completions.
+        if st.completed.insert(id) && !had_lease {
             st.queue.retain(|&q| q != id);
         }
+        st.check_invariants();
     }
 
     pub fn heartbeat(&self, worker: WorkerId, buffered: usize, cpu: f64, mem: f64, net: f64) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "master state");
         if let Some(h) = st.workers.get_mut(&worker) {
             h.last_heartbeat = Instant::now();
             h.buffered_tensors = buffered;
@@ -661,7 +736,7 @@ impl Master {
     /// is requeued, so retirement costs zero duplicated work. Returns
     /// `false` for unknown or already-dead workers.
     pub fn retire_worker(&self, worker: WorkerId) -> bool {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "master state");
         match st.workers.get_mut(&worker) {
             Some(h) if h.alive => {
                 h.draining = true;
@@ -673,7 +748,7 @@ impl Master {
 
     /// Has this worker been asked to retire?
     pub fn is_draining(&self, worker: WorkerId) -> bool {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state, "master state");
         st.workers.get(&worker).is_some_and(|h| h.draining)
     }
 
@@ -681,14 +756,14 @@ impl Master {
     /// it from the health map. Defensive: anything still leased to it —
     /// which a clean drain never leaves behind — goes back on the queue.
     pub fn worker_drained(&self, worker: WorkerId) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "master state");
         st.workers.remove(&worker);
         st.requeue_leases(worker);
     }
 
     /// Alive, non-draining workers — the controller's base.
     pub fn live_workers(&self) -> usize {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state, "master state");
         st.workers
             .values()
             .filter(|h| h.alive && !h.draining)
@@ -698,13 +773,13 @@ impl Master {
     /// Worker entries still tracked in the health map (live, draining,
     /// and dead-within-grace).
     pub fn tracked_workers(&self) -> usize {
-        self.state.lock().unwrap().workers.len()
+        lock_or_recover(&self.state, "master state").workers.len()
     }
 
     /// Splits not yet settled (queued or leased) — the controller never
     /// provisions more workers than there is work left to hand out.
     pub fn pending_splits(&self) -> usize {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state, "master state");
         st.queue.len() + st.in_flight.len()
     }
 
@@ -750,7 +825,7 @@ impl Master {
     /// go back on the queue — no checkpoint restore needed because
     /// Workers are stateless.
     pub fn worker_failed(&self, worker: WorkerId) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "master state");
         if let Some(h) = st.workers.get_mut(&worker) {
             h.alive = false;
         }
@@ -759,7 +834,7 @@ impl Master {
 
     /// Requeue splits whose worker missed heartbeats past `timeout`.
     pub fn reap_expired(&self, timeout: Duration) -> usize {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "master state");
         let now = Instant::now();
         let dead: Vec<WorkerId> = st
             .workers
@@ -776,7 +851,7 @@ impl Master {
     }
 
     pub fn is_done(&self) -> bool {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state, "master state");
         st.queue.is_empty() && st.in_flight.is_empty()
     }
 
@@ -784,19 +859,19 @@ impl Master {
     /// pruned by stripe stats (they are work that will never be queued,
     /// not silently-missing work).
     pub fn progress(&self) -> (usize, usize) {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state, "master state");
         (st.completed.len() + st.skipped.len(), st.all.len())
     }
 
     /// Splits pruned at enumeration time by stripe-stat pushdown.
     pub fn skipped_splits(&self) -> usize {
-        self.state.lock().unwrap().skipped.len()
+        lock_or_recover(&self.state, "master state").skipped.len()
     }
 
     /// Stripes contained in those pruned splits (exact — the tail split
     /// of a file may hold fewer than `stripes_per_split`).
     pub fn skipped_split_stripes(&self) -> usize {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state, "master state");
         st.all
             .values()
             .filter(|s| st.skipped.contains(&s.id))
@@ -805,14 +880,14 @@ impl Master {
     }
 
     pub fn total_rows(&self) -> u64 {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state, "master state");
         st.all.values().map(|s| s.rows).sum()
     }
 
     /// Rows in splits that will actually be served (skipped splits'
     /// rows excluded).
     pub fn scheduled_rows(&self) -> u64 {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state, "master state");
         st.all
             .values()
             .filter(|s| !st.skipped.contains(&s.id))
@@ -823,7 +898,7 @@ impl Master {
     // ---- Fault tolerance: checkpoint / restore ----
 
     pub fn checkpoint(&self) -> MasterCheckpoint {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state, "master state");
         MasterCheckpoint {
             completed: st.completed.iter().map(|s| s.0).collect(),
             skipped: st.skipped.iter().map(|s| s.0).collect(),
@@ -842,7 +917,7 @@ impl Master {
     ) -> Result<Master> {
         let m = Master::new(catalog, cluster, spec)?;
         {
-            let mut st = m.state.lock().unwrap();
+            let mut st = lock_or_recover(&m.state, "master state");
             let done: BTreeSet<SplitId> =
                 ckpt.completed.iter().map(|&i| SplitId(i)).collect();
             let skipped: BTreeSet<SplitId> =
@@ -851,6 +926,7 @@ impl Master {
                 .retain(|id| !done.contains(id) && !skipped.contains(id));
             st.completed = done;
             st.skipped.extend(skipped);
+            st.check_invariants();
         }
         Ok(m)
     }
@@ -876,7 +952,7 @@ impl Master {
     pub fn autoscale(&self, sig: &ScaleSignals) -> ScaleDecision {
         let p = self.policy.clone();
         let (alive, avg_buf, avg_cpu, pending) = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state, "master state");
             // Prune long-dead entries: the controller's base is the
             // live pool (a killed worker must not inflate proportional
             // sizing), and the map must not grow with every crash.
@@ -906,7 +982,7 @@ impl Master {
         };
         let hit = self.broker_hit_rate();
 
-        let mut c = self.controller.lock().unwrap();
+        let mut c = lock_or_recover(&self.controller, "master controller");
         // Fraction of this tick's fresh client-stall time the attributor
         // blamed on worker starvation (0 when nothing stalled, or when
         // the caller doesn't feed attribution).

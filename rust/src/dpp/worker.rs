@@ -27,7 +27,7 @@ use crate::obs::{ObsHandle, Stage};
 use crate::tectonic::{Cluster, FileId};
 use anyhow::Result;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::Instant;

@@ -58,6 +58,7 @@ pub mod dpp;
 pub mod dwrf;
 pub mod etl;
 pub mod filter;
+pub mod lint;
 pub mod metrics;
 pub mod obs;
 pub mod paper;
@@ -68,6 +69,7 @@ pub mod runtime;
 pub mod sched;
 pub mod schema;
 pub mod scribe;
+pub mod sync;
 pub mod tectonic;
 pub mod trainer;
 pub mod transforms;

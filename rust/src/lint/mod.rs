@@ -1,0 +1,512 @@
+//! Repo-invariant lints — cheap textual checks that make "add a field,
+//! forget a site" a CI failure instead of a latent bug.
+//!
+//! Run via the `dsi-lint` binary (`cargo run --release --bin dsi-lint`)
+//! or in-process from `tests/lint.rs`. Checks:
+//!
+//! 1. **Fingerprint coverage** — every [`crate::dpp::PipelineOptions`]
+//!    field is either hashed by `session_fingerprint` (dpp/cache.rs) or
+//!    listed in `FINGERPRINT_EXEMPT` with a justification comment
+//!    directly above its entry. Stale (hashed *and* exempt) and dangling
+//!    (exempt but not a field) entries are errors too.
+//! 2. **Clock coverage** — every `StageClock` field of
+//!    [`crate::metrics::EtlMetrics`] is summed by `total_secs` or listed
+//!    in `TOTAL_SECS_EXEMPT` with a justification.
+//! 3. **Merge coverage** — for each mergeable stats struct
+//!    ([`MERGE_PAIRS`]), every field appears in its `merge` body, so a
+//!    counter added to the struct cannot silently vanish on aggregation.
+//!    (`EtlMetrics` and `SessionReport` have no merge site — their
+//!    cross-site invariant is the clock coverage above.)
+//!
+//! The scanner is deliberately small: comments are stripped (line
+//! comments only — the codebase uses no block comments), string literals
+//! are honored during brace matching, and "is this field handled" means
+//! "does its identifier appear in the body". That over-approximates
+//! coverage (a mention in dead code would pass), which is the right
+//! trade-off for a guard rail: no false alarms, and the common failure —
+//! a field nobody typed anywhere — is always caught.
+
+use anyhow::{Context, Result};
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+/// The mergeable stats structs: (file under `src/`, struct name). Each
+/// must have a `merge` fn in the same file covering every field.
+pub const MERGE_PAIRS: &[(&str, &str)] = &[
+    ("tectonic/node.rs", "IoStats"),
+    ("dedup/mod.rs", "DedupStats"),
+    ("transforms/dag.rs", "DagStats"),
+    ("util/stats.rs", "OnlineStats"),
+    ("obs/hist.rs", "Histogram"),
+];
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Drop `//` line comments (incl. doc comments), preserving newlines
+/// and the contents of string literals.
+pub fn strip_comments(src: &str) -> String {
+    let mut out = String::with_capacity(src.len());
+    let mut chars = src.chars().peekable();
+    let mut in_str = false;
+    let mut escape = false;
+    while let Some(c) = chars.next() {
+        if in_str {
+            out.push(c);
+            if escape {
+                escape = false;
+            } else if c == '\\' {
+                escape = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        if c == '"' {
+            in_str = true;
+            out.push(c);
+        } else if c == '/' && chars.peek() == Some(&'/') {
+            for n in chars.by_ref() {
+                if n == '\n' {
+                    out.push('\n');
+                    break;
+                }
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Offset just past `"{kw} {name}"` where `name` is a whole identifier.
+fn find_decl(src: &str, kw: &str, name: &str) -> Option<usize> {
+    let pat = format!("{kw} {name}");
+    let mut start = 0;
+    while let Some(i) = src[start..].find(&pat) {
+        let at = start + i;
+        let end = at + pat.len();
+        let before_ok = at == 0
+            || !is_ident_char(src[..at].chars().next_back().unwrap());
+        let after_ok = end >= src.len()
+            || !is_ident_char(src[end..].chars().next().unwrap());
+        if before_ok && after_ok {
+            return Some(end);
+        }
+        start = end;
+    }
+    None
+}
+
+/// Byte offsets of the first balanced `{...}` block at or after `from`.
+/// String-aware; expects comment-stripped input.
+fn find_block(src: &str, from: usize) -> Option<(usize, usize)> {
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut escape = false;
+    let mut open = None;
+    for (i, c) in src[from..].char_indices() {
+        let i = from + i;
+        if in_str {
+            if escape {
+                escape = false;
+            } else if c == '\\' {
+                escape = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' => {
+                if open.is_none() {
+                    open = Some(i);
+                }
+                depth += 1;
+            }
+            '}' if open.is_some() => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((open.unwrap(), i));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// `(field, type)` pairs of `struct name`, one field per line (the
+/// repo's style). Expects comment-stripped input.
+pub fn extract_struct_fields(src: &str, name: &str) -> Vec<(String, String)> {
+    let Some(at) = find_decl(src, "struct", name) else {
+        return Vec::new();
+    };
+    let Some((open, close)) = find_block(src, at) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for line in src[open + 1..close].lines() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let t = t.strip_prefix("pub ").unwrap_or(t);
+        let Some((field, ty)) = t.split_once(':') else {
+            continue;
+        };
+        let field = field.trim();
+        let valid = !field.is_empty()
+            && field.chars().all(is_ident_char)
+            && !field.starts_with(|c: char| c.is_ascii_digit());
+        if valid {
+            out.push((
+                field.to_string(),
+                ty.trim().trim_end_matches(',').trim().to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// Body text of `fn name` (between its braces). Expects comment-stripped
+/// input; returns the *first* fn of that name in the file.
+pub fn extract_fn_body(src: &str, name: &str) -> Option<String> {
+    let at = find_decl(src, "fn", name)?;
+    let (open, close) = find_block(src, at)?;
+    Some(src[open + 1..close].to_string())
+}
+
+/// Entries of a `const NAME: &[&str] = &[...]` list as
+/// `(entry, has_justification)`, where a justification is a `//` comment
+/// on the line(s) directly above the entry. Takes the *raw* source —
+/// the comments are the point.
+pub fn extract_const_entries(
+    src: &str,
+    name: &str,
+) -> Option<Vec<(String, bool)>> {
+    let at = find_decl(src, "const", name)?;
+    let eq = at + src[at..].find('=')?;
+    let open = eq + src[eq..].find('[')?;
+    let close = open + src[open..].find("];")?;
+    let mut out = Vec::new();
+    let mut prev_comment = false;
+    for line in src[open + 1..close].lines() {
+        let t = line.trim();
+        if t.is_empty() {
+            prev_comment = false;
+        } else if t.starts_with("//") {
+            prev_comment = true;
+        } else {
+            if let Some(rest) = t.strip_prefix('"') {
+                if let Some(entry) = rest.split('"').next() {
+                    out.push((entry.to_string(), prev_comment));
+                }
+            }
+            prev_comment = false;
+        }
+    }
+    Some(out)
+}
+
+/// All identifier-shaped tokens in `src`.
+fn idents(src: &str) -> HashSet<String> {
+    let mut out = HashSet::new();
+    let mut cur = String::new();
+    for c in src.chars() {
+        if is_ident_char(c) {
+            cur.push(c);
+        } else if !cur.is_empty() {
+            out.insert(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.insert(cur);
+    }
+    out
+}
+
+/// Shared field-vs-handler-vs-exemption logic for checks 1 and 2.
+fn check_coverage(
+    fields: &[String],
+    handled: &HashSet<String>,
+    exempt: &[(String, bool)],
+    what: &str,
+    site: &str,
+    exempt_name: &str,
+) -> Vec<String> {
+    let mut errs = Vec::new();
+    for f in fields {
+        let in_site = handled.contains(f.as_str());
+        match (in_site, exempt.iter().find(|(n, _)| n == f)) {
+            (true, Some(_)) => errs.push(format!(
+                "{what}.{f}: covered by {site} AND listed in \
+                 {exempt_name} — drop the stale exemption"
+            )),
+            (true, None) | (false, Some((_, true))) => {}
+            (false, Some((_, false))) => errs.push(format!(
+                "{exempt_name} entry \"{f}\" has no justification \
+                 comment directly above it"
+            )),
+            (false, None) => errs.push(format!(
+                "{what}.{f}: neither covered by {site} nor exempted in \
+                 {exempt_name}"
+            )),
+        }
+    }
+    for (n, _) in exempt {
+        if !fields.iter().any(|f| f == n) {
+            errs.push(format!(
+                "{exempt_name} entry \"{n}\" is not a {what} field — \
+                 dangling exemption"
+            ));
+        }
+    }
+    errs
+}
+
+/// Check 1: every `PipelineOptions` field (from `spec_src`) is hashed by
+/// `session_fingerprint` or exempted in `FINGERPRINT_EXEMPT` (both in
+/// `cache_src`).
+pub fn check_fingerprint_coverage(
+    spec_src: &str,
+    cache_src: &str,
+) -> Vec<String> {
+    let spec = strip_comments(spec_src);
+    let fields: Vec<String> = extract_struct_fields(&spec, "PipelineOptions")
+        .into_iter()
+        .map(|(f, _)| f)
+        .collect();
+    if fields.is_empty() {
+        return vec!["PipelineOptions: no fields parsed".to_string()];
+    }
+    let cache = strip_comments(cache_src);
+    let Some(body) = extract_fn_body(&cache, "session_fingerprint") else {
+        return vec!["session_fingerprint: fn not found".to_string()];
+    };
+    let exempt =
+        extract_const_entries(cache_src, "FINGERPRINT_EXEMPT")
+            .unwrap_or_default();
+    check_coverage(
+        &fields,
+        &idents(&body),
+        &exempt,
+        "PipelineOptions",
+        "session_fingerprint",
+        "FINGERPRINT_EXEMPT",
+    )
+}
+
+/// Check 2: every `StageClock` field of `EtlMetrics` is summed by
+/// `total_secs` or exempted in `TOTAL_SECS_EXEMPT`.
+pub fn check_clock_coverage(metrics_src: &str) -> Vec<String> {
+    let stripped = strip_comments(metrics_src);
+    let clocks: Vec<String> = extract_struct_fields(&stripped, "EtlMetrics")
+        .into_iter()
+        .filter(|(_, ty)| ty.contains("StageClock"))
+        .map(|(f, _)| f)
+        .collect();
+    if clocks.is_empty() {
+        return vec!["EtlMetrics: no StageClock fields parsed".to_string()];
+    }
+    let Some(body) = extract_fn_body(&stripped, "total_secs") else {
+        return vec!["EtlMetrics::total_secs: fn not found".to_string()];
+    };
+    let exempt = extract_const_entries(metrics_src, "TOTAL_SECS_EXEMPT")
+        .unwrap_or_default();
+    check_coverage(
+        &clocks,
+        &idents(&body),
+        &exempt,
+        "EtlMetrics",
+        "total_secs",
+        "TOTAL_SECS_EXEMPT",
+    )
+}
+
+/// Check 3: every field of `struct_name` appears in the `merge` body in
+/// the same file.
+pub fn check_merge_coverage(
+    src: &str,
+    struct_name: &str,
+    file: &str,
+) -> Vec<String> {
+    let stripped = strip_comments(src);
+    let fields = extract_struct_fields(&stripped, struct_name);
+    if fields.is_empty() {
+        return vec![format!("{file}: struct {struct_name} has no fields")];
+    }
+    let Some(body) = extract_fn_body(&stripped, "merge") else {
+        return vec![format!("{file}: {struct_name} has no merge fn")];
+    };
+    let ids = idents(&body);
+    fields
+        .iter()
+        .filter(|(f, _)| !ids.contains(f.as_str()))
+        .map(|(f, _)| {
+            format!("{file}: {struct_name}.{f} is not handled by merge")
+        })
+        .collect()
+}
+
+/// Run every check against the real sources under `manifest_dir/src`.
+/// `DSI_LINT_SPEC_PATH` overrides the `PipelineOptions` source file
+/// (used by the fixture test to prove the lint fails on a bad spec).
+pub fn run_repo_checks(manifest_dir: &str) -> Result<Vec<String>> {
+    let root = Path::new(manifest_dir).join("src");
+    let spec_path = std::env::var("DSI_LINT_SPEC_PATH")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| root.join("dpp/spec.rs"));
+    let read = |p: &Path| {
+        std::fs::read_to_string(p)
+            .with_context(|| format!("reading {}", p.display()))
+    };
+    let spec_src = read(&spec_path)?;
+    let cache_src = read(&root.join("dpp/cache.rs"))?;
+    let metrics_src = read(&root.join("metrics/mod.rs"))?;
+    let mut errs = check_fingerprint_coverage(&spec_src, &cache_src);
+    errs.extend(check_clock_coverage(&metrics_src));
+    for (file, name) in MERGE_PAIRS {
+        errs.extend(check_merge_coverage(&read(&root.join(file))?, name, file));
+    }
+    Ok(errs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC_FIXTURE: &str = r#"
+/// Doc comment mentioning fake_field should be ignored.
+pub struct PipelineOptions {
+    /// a knob
+    pub alpha: bool,
+    pub beta: Option<u64>,
+    pub gamma: usize,
+}
+"#;
+
+    #[test]
+    fn strip_comments_keeps_strings_and_lines() {
+        let s = "let x = \"a // not comment\"; // real\nnext";
+        let out = strip_comments(s);
+        assert!(out.contains("a // not comment"));
+        assert!(!out.contains("real"));
+        assert_eq!(out.lines().count(), 2, "newlines preserved");
+    }
+
+    #[test]
+    fn struct_fields_parse_with_docs_and_attrs() {
+        let fields =
+            extract_struct_fields(&strip_comments(SPEC_FIXTURE), "PipelineOptions");
+        let names: Vec<&str> =
+            fields.iter().map(|(f, _)| f.as_str()).collect();
+        assert_eq!(names, vec!["alpha", "beta", "gamma"]);
+        assert_eq!(fields[1].1, "Option<u64>");
+    }
+
+    #[test]
+    fn unhashed_unexempted_field_is_a_violation() {
+        let cache = r#"
+pub const FINGERPRINT_EXEMPT: &[&str] = &[
+    // gamma never changes output bytes.
+    "gamma",
+];
+pub fn session_fingerprint(o: &PipelineOptions) -> u64 {
+    hash(o.alpha)
+}
+"#;
+        let errs = check_fingerprint_coverage(SPEC_FIXTURE, cache);
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        assert!(errs[0].contains("beta"), "{errs:?}");
+    }
+
+    #[test]
+    fn exemption_without_justification_is_a_violation() {
+        let cache = r#"
+pub const FINGERPRINT_EXEMPT: &[&str] = &[
+    // beta is a transport cap.
+    "beta",
+    "gamma",
+];
+pub fn session_fingerprint(o: &PipelineOptions) -> u64 {
+    hash(o.alpha)
+}
+"#;
+        let errs = check_fingerprint_coverage(SPEC_FIXTURE, cache);
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        assert!(errs[0].contains("gamma"));
+        assert!(errs[0].contains("justification"));
+    }
+
+    #[test]
+    fn stale_and_dangling_exemptions_are_violations() {
+        let cache = r#"
+pub const FINGERPRINT_EXEMPT: &[&str] = &[
+    // alpha is hashed below: stale.
+    "alpha",
+    // not a field at all: dangling.
+    "delta",
+];
+pub fn session_fingerprint(o: &PipelineOptions) -> u64 {
+    hash(o.alpha, o.beta, o.gamma)
+}
+"#;
+        let errs = check_fingerprint_coverage(SPEC_FIXTURE, cache);
+        assert_eq!(errs.len(), 2, "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("stale")));
+        assert!(errs.iter().any(|e| e.contains("dangling")));
+    }
+
+    #[test]
+    fn comment_mentions_do_not_count_as_hashing() {
+        let cache = r#"
+pub fn session_fingerprint(o: &PipelineOptions) -> u64 {
+    // beta and gamma are deliberately not hashed (but this comment
+    // must not fool the lint).
+    hash(o.alpha)
+}
+"#;
+        let errs = check_fingerprint_coverage(SPEC_FIXTURE, cache);
+        assert_eq!(errs.len(), 2, "{errs:?}");
+    }
+
+    #[test]
+    fn merge_gap_is_a_violation() {
+        let src = r#"
+pub struct S {
+    pub a: u64,
+    pub b: u64,
+}
+impl S {
+    pub fn merge(&mut self, o: &S) {
+        self.a += o.a;
+    }
+}
+"#;
+        let errs = check_merge_coverage(src, "S", "x.rs");
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        assert!(errs[0].contains("S.b"));
+    }
+
+    #[test]
+    fn clock_gap_is_a_violation() {
+        let src = r#"
+pub struct EtlMetrics {
+    pub bytes: Counter,
+    pub t_a: StageClock,
+    pub t_b: StageClock,
+}
+impl EtlMetrics {
+    pub fn total_secs(&self) -> f64 {
+        self.t_a.secs()
+    }
+}
+"#;
+        let errs = check_clock_coverage(src);
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        assert!(errs[0].contains("t_b"), "{errs:?}");
+    }
+}

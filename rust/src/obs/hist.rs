@@ -8,7 +8,7 @@
 //! merging two histograms is exactly equivalent to recording both
 //! streams into one (`merge == concat`, proven in `tests/proptests.rs`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use crate::util::json::Json;
@@ -74,6 +74,12 @@ impl Histogram {
         self.record_ns(d.as_nanos() as u64);
     }
 
+    // Relaxed throughout: the three cells are independent monotone
+    // counters, never read back to make control decisions. A concurrent
+    // reader may observe the bucket bump without the total (or vice
+    // versa) — quantile() tolerates that skew explicitly — but no update
+    // is ever lost (fetch_add is an atomic RMW at every ordering), so
+    // quiescent reads are exact.
     #[inline]
     pub fn record_ns(&self, ns: u64) {
         self.counts[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
@@ -119,12 +125,18 @@ impl Histogram {
                 return bucket_upper_ns(i) as f64 / 1e9;
             }
         }
-        // Racy concurrent records can leave `seen` short; report the max.
+        // Racy concurrent records can leave `seen` short (Relaxed loads
+        // may see `count` bumped before its bucket); report the max.
         bucket_upper_ns(BUCKETS - 1) as f64 / 1e9
     }
 
     /// Fold `other` into `self`. Bucket-exact: the result is identical
     /// to having recorded both streams into one histogram.
+    //
+    // Relaxed is enough: each of `other`'s cells is read exactly once,
+    // so a quiescent `other` merges losslessly; a concurrently-recorded
+    // `other` may contribute a torn-but-valid prefix (some records
+    // missing, none duplicated), matching record_ns's own guarantee.
     pub fn merge(&self, other: &Histogram) {
         for (a, b) in self.counts.iter().zip(other.counts.iter()) {
             a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);

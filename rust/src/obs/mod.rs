@@ -19,7 +19,8 @@ pub use stall::{StallAttribution, StallAttributor, StallSnapshot};
 pub use telemetry::{SessionTelemetry, TelemetrySample};
 pub use trace::{SpanEvent, Stage, TraceRecorder};
 
-use std::sync::{Arc, Mutex};
+use crate::sync::{lock_or_recover, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::util::json::Json;
@@ -53,7 +54,7 @@ impl Obs {
     /// Register a session by name; the returned index is its Chrome
     /// trace `pid` and the `session` field of its spans.
     pub fn register_session(&self, name: &str) -> u32 {
-        let mut s = self.sessions.lock().unwrap();
+        let mut s = lock_or_recover(&self.sessions, "obs sessions");
         s.push(name.to_string());
         (s.len() - 1) as u32
     }
@@ -81,7 +82,7 @@ impl Obs {
 
     /// Chrome trace-event JSON for every registered session's spans.
     pub fn chrome_trace(&self) -> Json {
-        let sessions = self.sessions.lock().unwrap().clone();
+        let sessions = lock_or_recover(&self.sessions, "obs sessions").clone();
         self.trace.chrome_trace(&sessions)
     }
 

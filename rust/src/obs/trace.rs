@@ -2,9 +2,9 @@
 //! dur)` events, exportable as Chrome trace-event JSON that loads in
 //! `chrome://tracing` or Perfetto.
 
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{lock_or_recover, Mutex};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 use crate::util::json::Json;
 
@@ -96,16 +96,19 @@ impl TraceRecorder {
     }
 
     pub fn record(&self, ev: SpanEvent) {
-        let mut q = self.events.lock().unwrap();
+        let mut q = lock_or_recover(&self.events, "trace ring");
         if q.len() == self.capacity {
             q.pop_front();
+            // Relaxed: `dropped` is a monotone statistic bumped under
+            // the ring's mutex (so it can't race itself); readers only
+            // want an eventual total, not an ordering edge.
             self.dropped.fetch_add(1, Ordering::Relaxed);
         }
         q.push_back(ev);
     }
 
     pub fn len(&self) -> usize {
-        self.events.lock().unwrap().len()
+        lock_or_recover(&self.events, "trace ring").len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -113,12 +116,15 @@ impl TraceRecorder {
     }
 
     /// Spans evicted to keep the buffer bounded.
+    //
+    // Relaxed load: pairs with the Relaxed bump in `record`; a sampler
+    // may read a slightly stale drop count, never a torn one.
     pub fn dropped(&self) -> u64 {
         self.dropped.load(Ordering::Relaxed)
     }
 
     pub fn events(&self) -> Vec<SpanEvent> {
-        self.events.lock().unwrap().iter().copied().collect()
+        lock_or_recover(&self.events, "trace ring").iter().copied().collect()
     }
 
     /// Export as Chrome trace-event JSON: one `"M"` process-name record

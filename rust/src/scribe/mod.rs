@@ -8,8 +8,8 @@
 //! data leakage, §3.1.1); the ETL engine tails the streams and joins them
 //! into labeled samples.
 
+use crate::sync::{read_or_recover, write_or_recover, RwLock};
 use std::collections::HashMap;
-use std::sync::RwLock;
 
 /// A raw feature log: everything the model-serving framework computed for
 /// one (user, item) evaluation.
@@ -50,22 +50,20 @@ impl Scribe {
     }
 
     pub fn publish(&self, stream: &str, rec: Record) {
-        self.streams
-            .write()
-            .unwrap()
+        write_or_recover(&self.streams, "scribe streams")
             .entry(stream.to_string())
             .or_default()
             .push(rec);
     }
 
     pub fn publish_all(&self, stream: &str, recs: impl IntoIterator<Item = Record>) {
-        let mut s = self.streams.write().unwrap();
+        let mut s = write_or_recover(&self.streams, "scribe streams");
         s.entry(stream.to_string()).or_default().extend(recs);
     }
 
     /// Read records `[from, ..)` of a stream; returns the next cursor.
     pub fn tail(&self, stream: &str, from: usize) -> (Vec<Record>, usize) {
-        let s = self.streams.read().unwrap();
+        let s = read_or_recover(&self.streams, "scribe streams");
         match s.get(stream) {
             Some(recs) if from < recs.len() => (recs[from..].to_vec(), recs.len()),
             Some(recs) => (Vec::new(), recs.len()),
@@ -74,9 +72,7 @@ impl Scribe {
     }
 
     pub fn len(&self, stream: &str) -> usize {
-        self.streams
-            .read()
-            .unwrap()
+        read_or_recover(&self.streams, "scribe streams")
             .get(stream)
             .map_or(0, |r| r.len())
     }
@@ -87,7 +83,9 @@ impl Scribe {
 
     /// Trim a prefix (LogDevice streams are trimmable).
     pub fn trim(&self, stream: &str, upto: usize) {
-        if let Some(recs) = self.streams.write().unwrap().get_mut(stream) {
+        if let Some(recs) =
+            write_or_recover(&self.streams, "scribe streams").get_mut(stream)
+        {
             let upto = upto.min(recs.len());
             recs.drain(..upto);
         }

@@ -1,0 +1,131 @@
+//! Synchronization facade for the DSI control plane.
+//!
+//! Every concurrency-bearing module imports its primitives from here
+//! instead of `std::sync`. On a normal build this module is a pure
+//! re-export of `std::sync` — zero cost, byte-identical behavior. Under
+//! `--cfg loom` the same names resolve to instrumented wrappers
+//! ([`shim`]) that yield to a deterministic bounded-preemption
+//! scheduler ([`model`]), so the model tests in [`models`] can explore
+//! thread interleavings of the real production code paths: broker
+//! single-flight serves, `MemoryBudget` accounting, the Master lease
+//! state machine, and the lock-free observability counters.
+//!
+//! The checker explores sequentially-consistent interleavings only: it
+//! catches lock/CAS/condvar protocol bugs (lost wakeups, double frees,
+//! stranded loading slots, lease double-grants), not weak-memory
+//! reordering bugs. The non-blocking TSan CI job covers the latter.
+//!
+//! Run the models with:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --lib sync::
+//! ```
+//!
+//! `DSI_LOOM_ITERS` (default 128) and `DSI_LOOM_PREEMPTIONS`
+//! (default 8) bound the exploration.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+#[cfg(not(loom))]
+pub use std::sync::{
+    Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+#[cfg(loom)]
+mod shim;
+#[cfg(loom)]
+pub use shim::{
+    atomic, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard,
+    RwLockWriteGuard,
+};
+
+#[cfg(loom)]
+pub mod model;
+#[cfg(all(loom, test))]
+mod models;
+
+/// Lock a mutex, recovering from poisoning instead of propagating the
+/// panic. The protected state in this crate is counters, caches, and
+/// lease tables that stay internally consistent at every await point,
+/// so a panicking holder (e.g. one worker dying mid-decode) must not
+/// cascade panics through every other session sharing the broker.
+pub fn lock_or_recover<'a, T: ?Sized>(
+    m: &'a Mutex<T>,
+    ctx: &str,
+) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|poisoned| {
+        eprintln!("dsi: recovering poisoned lock ({ctx})");
+        poisoned.into_inner()
+    })
+}
+
+/// [`RwLock::read`] with the same poison-recovery policy as
+/// [`lock_or_recover`].
+pub fn read_or_recover<'a, T: ?Sized>(
+    l: &'a RwLock<T>,
+    ctx: &str,
+) -> RwLockReadGuard<'a, T> {
+    l.read().unwrap_or_else(|poisoned| {
+        eprintln!("dsi: recovering poisoned rwlock/read ({ctx})");
+        poisoned.into_inner()
+    })
+}
+
+/// [`RwLock::write`] with the same poison-recovery policy as
+/// [`lock_or_recover`].
+pub fn write_or_recover<'a, T: ?Sized>(
+    l: &'a RwLock<T>,
+    ctx: &str,
+) -> RwLockWriteGuard<'a, T> {
+    l.write().unwrap_or_else(|poisoned| {
+        eprintln!("dsi: recovering poisoned rwlock/write ({ctx})");
+        poisoned.into_inner()
+    })
+}
+
+/// [`Condvar::wait`] with the same poison-recovery policy as
+/// [`lock_or_recover`].
+pub fn wait_or_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    ctx: &str,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|poisoned| {
+        eprintln!("dsi: recovering poisoned lock after wait ({ctx})");
+        poisoned.into_inner()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_or_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(0u32));
+        let m2 = m.clone();
+        let t = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        });
+        assert!(t.join().is_err());
+        // A bare .lock().unwrap() would now panic; the helper recovers.
+        *lock_or_recover(&m, "test") += 1;
+        assert_eq!(*lock_or_recover(&m, "test"), 1);
+    }
+
+    #[test]
+    fn rw_recover_survives_poison() {
+        let l = Arc::new(RwLock::new(7u32));
+        let l2 = l.clone();
+        let t = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison the rwlock");
+        });
+        assert!(t.join().is_err());
+        assert_eq!(*read_or_recover(&l, "test"), 7);
+        *write_or_recover(&l, "test") = 8;
+        assert_eq!(*read_or_recover(&l, "test"), 8);
+    }
+}

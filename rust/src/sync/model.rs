@@ -1,0 +1,309 @@
+//! Deterministic bounded-preemption interleaving checker (loom-lite).
+//!
+//! [`check`] runs a closure many times; each iteration a single
+//! *execution token* is passed between the test thread and the threads
+//! it spawns via [`thread::spawn`]. Only the token holder runs. Every
+//! instrumented operation in [`super::shim`] calls [`yield_point`],
+//! where the scheduler may preempt (hand the token to a random peer,
+//! consuming one unit of a bounded preemption budget) — the classic
+//! bounded-preemption heuristic: almost all real concurrency bugs
+//! manifest within a handful of forced context switches. Blocked
+//! operations (contended `try_lock`, condvar spins) call
+//! [`yield_blocked`], which always hands the token over without
+//! consuming budget.
+//!
+//! Seeds are derived deterministically from the model name and
+//! iteration index, so a failure reproduces exactly. A step cap turns
+//! deadlocks and livelocks into panics instead of hangs.
+//!
+//! Knobs: `DSI_LOOM_ITERS` (iterations per model, default 128) and
+//! `DSI_LOOM_PREEMPTIONS` (budget per iteration, default 8).
+
+use crate::util::rng::Pcg32;
+use std::cell::RefCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex};
+
+/// Hard per-iteration bound on scheduling points: a model that spins
+/// this long is deadlocked or livelocked.
+const STEP_CAP: u64 = 200_000;
+
+thread_local! {
+    static CTX: RefCell<Option<(Arc<Scheduler>, usize)>> =
+        const { RefCell::new(None) };
+}
+
+struct SchedState {
+    /// Thread id currently holding the execution token.
+    current: usize,
+    finished: Vec<bool>,
+    rng: Pcg32,
+    preemptions_left: u32,
+    steps: u64,
+    failed: bool,
+}
+
+impl SchedState {
+    fn runnable_peers(&self, me: usize) -> Vec<usize> {
+        (0..self.finished.len())
+            .filter(|&i| i != me && !self.finished[i])
+            .collect()
+    }
+}
+
+pub struct Scheduler {
+    state: StdMutex<SchedState>,
+    cv: StdCondvar,
+}
+
+impl Scheduler {
+    /// The scheduler's own lock must keep working while a model thread
+    /// unwinds from a failed assertion.
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, SchedState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn fail_and_panic(
+        &self,
+        mut st: std::sync::MutexGuard<'_, SchedState>,
+        msg: &str,
+    ) -> ! {
+        st.failed = true;
+        self.cv.notify_all();
+        drop(st);
+        panic!("{msg}");
+    }
+
+    /// One scheduling point for thread `me`. `blocked` means the caller
+    /// cannot make progress until some other thread runs.
+    fn switch(&self, me: usize, blocked: bool) {
+        let mut st = self.lock_state();
+        if st.failed {
+            drop(st);
+            panic!("model iteration failed in another thread");
+        }
+        st.steps += 1;
+        if st.steps > STEP_CAP {
+            self.fail_and_panic(
+                st,
+                "model step cap exceeded (deadlock or livelock?)",
+            );
+        }
+        let peers = st.runnable_peers(me);
+        if blocked {
+            if peers.is_empty() {
+                self.fail_and_panic(
+                    st,
+                    "model deadlock: blocked with no runnable peers",
+                );
+            }
+            let pick = peers[st.rng.below(peers.len() as u64) as usize];
+            st.current = pick;
+            self.cv.notify_all();
+        } else if !peers.is_empty()
+            && st.preemptions_left > 0
+            && st.rng.chance(0.4)
+        {
+            st.preemptions_left -= 1;
+            let pick = peers[st.rng.below(peers.len() as u64) as usize];
+            st.current = pick;
+            self.cv.notify_all();
+        } else {
+            return; // keep the token
+        }
+        while st.current != me && !st.failed {
+            st = self
+                .cv
+                .wait(st)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+        if st.failed {
+            drop(st);
+            panic!("model iteration failed in another thread");
+        }
+    }
+}
+
+fn current_ctx() -> Option<(Arc<Scheduler>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// True inside an active model iteration on this thread.
+pub fn in_model() -> bool {
+    CTX.with(|c| c.borrow().is_some())
+}
+
+/// Voluntary scheduling point; no-op outside a model iteration.
+pub fn yield_point() {
+    if let Some((sched, me)) = current_ctx() {
+        sched.switch(me, false);
+    }
+}
+
+/// Mandatory hand-off: the caller is blocked until a peer runs.
+pub fn yield_blocked() {
+    if let Some((sched, me)) = current_ctx() {
+        sched.switch(me, true);
+    }
+}
+
+/// Marks a model thread finished (even on unwind) and passes the token
+/// on so the remaining threads keep running.
+struct FinishGuard {
+    sched: Arc<Scheduler>,
+    id: usize,
+}
+
+impl Drop for FinishGuard {
+    fn drop(&mut self) {
+        let mut st = self.sched.lock_state();
+        st.finished[self.id] = true;
+        if std::thread::panicking() {
+            st.failed = true;
+        }
+        let peers = st.runnable_peers(self.id);
+        if !peers.is_empty() {
+            let pick = peers[st.rng.below(peers.len() as u64) as usize];
+            st.current = pick;
+        }
+        drop(st);
+        self.sched.cv.notify_all();
+    }
+}
+
+/// Model-aware threads: spawned threads join the token-passing protocol
+/// of the current [`check`] iteration.
+pub mod thread {
+    use super::*;
+
+    pub struct JoinHandle<T> {
+        id: usize,
+        sched: Arc<Scheduler>,
+        inner: std::thread::JoinHandle<T>,
+    }
+
+    impl<T> JoinHandle<T> {
+        /// Spin (yielding the token) until the target thread finishes,
+        /// then reap it.
+        pub fn join(self) -> std::thread::Result<T> {
+            loop {
+                {
+                    let st = self.sched.lock_state();
+                    if st.finished[self.id] {
+                        break;
+                    }
+                }
+                super::yield_blocked();
+            }
+            self.inner.join()
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let (sched, _me) = current_ctx()
+            .expect("model::thread::spawn outside model::check");
+        // Register while holding the token: the id is fixed before any
+        // peer can observe the new thread.
+        let id = {
+            let mut st = sched.lock_state();
+            st.finished.push(false);
+            st.finished.len() - 1
+        };
+        let child_sched = sched.clone();
+        let inner = std::thread::spawn(move || {
+            CTX.with(|c| {
+                *c.borrow_mut() = Some((child_sched.clone(), id))
+            });
+            let _finish = FinishGuard {
+                sched: child_sched.clone(),
+                id,
+            };
+            // Wait for the token before touching shared state.
+            {
+                let mut st = child_sched.lock_state();
+                while st.current != id && !st.failed {
+                    st = child_sched
+                        .cv
+                        .wait(st)
+                        .unwrap_or_else(|p| p.into_inner());
+                }
+                if st.failed {
+                    drop(st);
+                    panic!("model iteration failed before thread start");
+                }
+            }
+            f()
+        });
+        JoinHandle { id, sched, inner }
+    }
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Explore interleavings of `f`. The closure runs once per iteration on
+/// the calling thread (model thread 0); it must join every thread it
+/// spawns before returning. Panics (with the failing iteration's seed
+/// in the message) as soon as any iteration fails.
+pub fn check(name: &str, f: impl Fn()) {
+    let iters = env_u64("DSI_LOOM_ITERS", 128);
+    let preemptions = env_u64("DSI_LOOM_PREEMPTIONS", 8) as u32;
+    for i in 0..iters {
+        let seed =
+            fnv1a(name) ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i + 1);
+        let sched = Arc::new(Scheduler {
+            state: StdMutex::new(SchedState {
+                current: 0,
+                finished: vec![false], // thread 0 = this test thread
+                rng: Pcg32::new(seed),
+                preemptions_left: preemptions,
+                steps: 0,
+                failed: false,
+            }),
+            cv: StdCondvar::new(),
+        });
+        CTX.with(|c| *c.borrow_mut() = Some((sched.clone(), 0)));
+        let result = catch_unwind(AssertUnwindSafe(&f));
+        CTX.with(|c| *c.borrow_mut() = None);
+        match result {
+            Ok(()) => {
+                let st = sched.lock_state();
+                assert!(
+                    st.finished.iter().skip(1).all(|&d| d),
+                    "model '{name}' iteration {i}: closure returned \
+                     with unjoined threads"
+                );
+            }
+            Err(e) => {
+                // Wake any stragglers so they unwind too, then re-raise.
+                {
+                    let mut st = sched.lock_state();
+                    st.failed = true;
+                }
+                sched.cv.notify_all();
+                eprintln!(
+                    "model '{name}' failed at iteration {i} \
+                     (seed {seed:#x})"
+                );
+                resume_unwind(e);
+            }
+        }
+    }
+}

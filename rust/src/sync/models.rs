@@ -1,0 +1,252 @@
+//! Loom-style model tests for the four riskiest DSI protocols.
+//!
+//! Each test runs the *production* code (no test doubles) under the
+//! bounded-preemption scheduler in [`super::model`], so every lock
+//! acquire, condvar wait, and atomic op is a potential context switch.
+//! Compiled only under `--cfg loom` (see the module doc in
+//! [`super`](crate::sync) for how to run them).
+
+use super::model;
+use super::model::thread;
+use crate::broker::{FetchedStripe, MemoryBudget, ServeOutcome, StripeBuffer};
+use crate::data::ColumnarBatch;
+use crate::dpp::Master;
+use crate::metrics::StageClock;
+use crate::obs::Histogram;
+use crate::tectonic::FileId;
+use std::collections::HashSet;
+use std::sync::Arc;
+// Model *bookkeeping* (e.g. counting how often a fetch closure ran) uses
+// raw std atomics on purpose: they assert on the model, they are not
+// part of the protocol under test, and must not add scheduling points.
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+fn stripe_of(bytes: usize) -> crate::broker::SharedStripe {
+    // approx_bytes counts labels at 4 bytes each.
+    crate::broker::SharedStripe::Columnar(ColumnarBatch {
+        num_rows: bytes / 4,
+        labels: vec![0.0; bytes / 4],
+        ..Default::default()
+    })
+}
+
+fn fetched(bytes: usize) -> FetchedStripe {
+    FetchedStripe {
+        stripe: stripe_of(bytes),
+        proj: HashSet::new(),
+        fetched_bytes: bytes as u64,
+        extents: 4,
+        ios: 1,
+    }
+}
+
+fn key(f: u64, s: usize) -> (FileId, usize) {
+    (FileId(f), s)
+}
+
+/// Protocol 1: lock-free `Histogram` record/merge. Two recorders and a
+/// concurrent merging reader — no record is ever lost, counts are
+/// monotone, and a snapshot never over-counts.
+#[test]
+fn model_histogram_record_merge() {
+    model::check("histogram_record_merge", || {
+        let h = Arc::new(Histogram::new());
+        let h1 = h.clone();
+        let t1 = thread::spawn(move || h1.record_ns(900));
+        let h2 = h.clone();
+        let t2 = thread::spawn(move || h2.record_ns(1_000_000));
+        // Concurrent snapshot: may observe 0, 1, or 2 records, never
+        // more (merge reads each bucket exactly once).
+        let snap = Histogram::new();
+        snap.merge(&h);
+        let seen = snap.count();
+        assert!(seen <= 2, "snapshot over-counted: {seen}");
+        t1.join().unwrap();
+        t2.join().unwrap();
+        // Quiescent merge sees everything: no lost records.
+        let total = Histogram::new();
+        total.merge(&h);
+        assert_eq!(total.count(), 2, "lost a record");
+        assert!(total.count() >= seen, "count not monotone");
+        assert_eq!(h.count(), 2);
+    });
+}
+
+/// Protocol 2: `StageClock` concurrent `add` — nanosecond accumulation
+/// never drops an update.
+#[test]
+fn model_stage_clock_concurrent_adds() {
+    model::check("stage_clock_adds", || {
+        let c = Arc::new(StageClock::default());
+        let c1 = c.clone();
+        let t1 = thread::spawn(move || c1.add(Duration::from_nanos(500)));
+        let c2 = c.clone();
+        let t2 = thread::spawn(move || c2.add(Duration::from_nanos(500)));
+        t1.join().unwrap();
+        t2.join().unwrap();
+        assert!(
+            (c.secs() - 1e-6).abs() < 1e-12,
+            "lost a StageClock add: {}",
+            c.secs()
+        );
+    });
+}
+
+/// Protocol 3a: broker `StripeBuffer` single-flight — two sessions
+/// racing on the same key pay exactly one fetch in every interleaving,
+/// and the last-consumer serve frees the entry and its budget.
+#[test]
+fn model_stripe_buffer_single_flight() {
+    model::check("stripe_buffer_single_flight", || {
+        let buf = Arc::new(StripeBuffer::new(MemoryBudget::new(1 << 20)));
+        let fetches = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let buf = buf.clone();
+            let fetches = fetches.clone();
+            handles.push(thread::spawn(move || {
+                // remaining = 1: one more registered serve is expected,
+                // so the entry is cached (budget is ample → charged).
+                let out = buf
+                    .serve(key(1, 0), &[], 1, || {
+                        fetches.fetch_add(1, Ordering::Relaxed);
+                        Ok(fetched(400))
+                    })
+                    .unwrap();
+                drop(out);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            fetches.load(Ordering::Relaxed),
+            1,
+            "single-flight violated: duplicated storage fetch"
+        );
+        // Last interested consumer: hit, then the entry + budget free.
+        let out = buf
+            .serve(key(1, 0), &[], 0, || panic!("must not refetch"))
+            .unwrap();
+        assert!(matches!(out, ServeOutcome::Hit { .. }));
+        drop(out);
+        assert_eq!(buf.len(), 0, "last-consumer entry not freed");
+        assert_eq!(buf.budget().used(), 0, "budget leaked");
+    });
+}
+
+/// Protocol 3b: `MemoryBudget` accounting under concurrent serves of
+/// *different* keys with eviction pressure — `used` never exceeds
+/// `total`, and releasing every key returns the pool to zero.
+#[test]
+fn model_stripe_buffer_eviction_accounting() {
+    model::check("stripe_buffer_eviction_accounting", || {
+        // Two 400-byte stripes against a 500-byte pool: at most one can
+        // be cached; the other serves uncached or evicts the first.
+        let buf = Arc::new(StripeBuffer::new(MemoryBudget::new(500)));
+        let mut handles = Vec::new();
+        for i in 0..2 {
+            let buf = buf.clone();
+            handles.push(thread::spawn(move || {
+                let out =
+                    buf.serve(key(1, i), &[], 1, || Ok(fetched(400)));
+                drop(out.unwrap());
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(
+            buf.budget().used() <= 500,
+            "budget overcommitted: {}",
+            buf.budget().used()
+        );
+        buf.release(key(1, 0));
+        buf.release(key(1, 1));
+        assert_eq!(buf.budget().used(), 0, "budget leaked after release");
+        assert_eq!(buf.len(), 0);
+    });
+}
+
+/// Protocol 3c: bare `MemoryBudget` reserve/release — concurrent
+/// balanced reserve/release pairs leave the pool empty and at full
+/// capacity (the CAS loops neither lose nor double-count bytes).
+#[test]
+fn model_memory_budget_reserve_release() {
+    model::check("memory_budget_reserve_release", || {
+        let b = MemoryBudget::new(1000);
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let b = b.clone();
+            handles.push(thread::spawn(move || {
+                // 600 + 600 > 1000: at most one reservation can be live
+                // at a time; each releases exactly what it reserved.
+                if b.try_reserve(600) {
+                    b.release(600);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(b.used(), 0, "budget leaked");
+        assert!(b.try_reserve(1000), "pool not back at full capacity");
+        b.release(1000);
+    });
+}
+
+/// Protocol 4a: Master lease lifecycle — two workers draining a queue
+/// concurrently: every split settles exactly once and the session
+/// reaches `is_done` (no lost or double-served splits).
+#[test]
+fn model_master_lease_lifecycle() {
+    model::check("master_lease_lifecycle", || {
+        let m = Arc::new(Master::synthetic(3));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let m = m.clone();
+            handles.push(thread::spawn(move || {
+                let w = m.register_worker();
+                while let Some(split) = m.fetch_split(w) {
+                    m.complete_split(w, split.id);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(m.is_done(), "splits stranded in queue or in flight");
+        assert_eq!(m.progress(), (3, 3), "lost or duplicated completions");
+    });
+}
+
+/// Protocol 4b: worker failure racing a completion — the split settles
+/// exactly once (first completion wins), a dead worker never leases,
+/// and a completed split is never requeued to a replacement worker.
+#[test]
+fn model_master_failure_requeues_only_incomplete() {
+    model::check("master_failure_vs_completion", || {
+        let m = Arc::new(Master::synthetic(1));
+        let w1 = m.register_worker();
+        let split = m.fetch_split(w1).expect("one split queued");
+        let id = split.id;
+        let mc = m.clone();
+        let completer = thread::spawn(move || mc.complete_split(w1, id));
+        let mf = m.clone();
+        let failer = thread::spawn(move || mf.worker_failed(w1));
+        completer.join().unwrap();
+        failer.join().unwrap();
+        // Dead workers never lease — even if the failure requeued.
+        assert!(m.fetch_split(w1).is_none(), "dead worker leased a split");
+        // A replacement worker must see nothing: the completion settled
+        // the split, so any requeue raced by the failure was cancelled.
+        let w2 = m.register_worker();
+        assert!(
+            m.fetch_split(w2).is_none(),
+            "completed split was requeued"
+        );
+        assert!(m.is_done());
+        assert_eq!(m.progress(), (1, 1));
+    });
+}

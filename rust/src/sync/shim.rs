@@ -1,0 +1,400 @@
+//! `cfg(loom)` instrumented primitives.
+//!
+//! Same surface as the `std::sync` types re-exported by
+//! [`super`](crate::sync), but every acquire, atomic op, and unlock is
+//! a scheduling point for [`model`](super::model). Outside an active
+//! model iteration (`model::in_model() == false`) every operation
+//! delegates to the real blocking `std` primitive, so the full normal
+//! test suite still runs correctly in a `--cfg loom` build.
+
+use super::model;
+use std::ops::{Deref, DerefMut};
+use std::sync::{LockResult, PoisonError, TryLockError};
+
+// ---------------------------------------------------------------- Mutex
+
+pub struct Mutex<T: ?Sized> {
+    inner: std::sync::Mutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(t: T) -> Mutex<T> {
+        Mutex {
+            inner: std::sync::Mutex::new(t),
+        }
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Mutex<T> {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T: ?Sized + std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if !model::in_model() {
+            return match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard {
+                    lock: self,
+                    inner: Some(g),
+                }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: Some(p.into_inner()),
+                })),
+            };
+        }
+        model::yield_point();
+        loop {
+            match self.inner.try_lock() {
+                Ok(g) => {
+                    return Ok(MutexGuard {
+                        lock: self,
+                        inner: Some(g),
+                    })
+                }
+                Err(TryLockError::Poisoned(p)) => {
+                    return Err(PoisonError::new(MutexGuard {
+                        lock: self,
+                        inner: Some(p.into_inner()),
+                    }))
+                }
+                Err(TryLockError::WouldBlock) => model::yield_blocked(),
+            }
+        }
+    }
+}
+
+pub struct MutexGuard<'a, T: ?Sized> {
+    lock: &'a Mutex<T>,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+}
+
+impl<T: ?Sized> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard taken")
+    }
+}
+
+impl<T: ?Sized> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard taken")
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        let released = self.inner.take().is_some();
+        // Unlock is a scheduling point: a freshly-released lock is
+        // exactly where a peer should get a chance to run. Skip while
+        // unwinding so a failed model assertion cannot double-panic.
+        if released && model::in_model() && !std::thread::panicking() {
+            model::yield_point();
+        }
+    }
+}
+
+// -------------------------------------------------------------- Condvar
+
+pub struct Condvar {
+    inner: std::sync::Condvar,
+    /// Notification epoch: model-mode waiters spin until it changes.
+    /// Snapshots are taken while holding the waited-on mutex, and the
+    /// single-token scheduler totally orders the snapshot against any
+    /// notify, so a wakeup can never be lost (spurious wakeups are
+    /// possible and allowed, exactly as with `std::sync::Condvar`).
+    gen: std::sync::atomic::AtomicU64,
+}
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        Condvar {
+            inner: std::sync::Condvar::new(),
+            gen: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    pub fn wait<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+    ) -> LockResult<MutexGuard<'a, T>> {
+        let lock = guard.lock;
+        if !model::in_model() {
+            let std_guard = guard.inner.take().expect("guard taken");
+            drop(guard); // inert: inner already taken
+            return match self.inner.wait(std_guard) {
+                Ok(g) => Ok(MutexGuard {
+                    lock,
+                    inner: Some(g),
+                }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock,
+                    inner: Some(p.into_inner()),
+                })),
+            };
+        }
+        use std::sync::atomic::Ordering;
+        // Snapshot while still holding the lock, then release it.
+        let seen = self.gen.load(Ordering::SeqCst);
+        drop(guard);
+        while self.gen.load(Ordering::SeqCst) == seen {
+            model::yield_blocked();
+        }
+        lock.lock()
+    }
+
+    pub fn notify_all(&self) {
+        if model::in_model() {
+            self.gen.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        }
+        self.inner.notify_all();
+    }
+
+    pub fn notify_one(&self) {
+        if model::in_model() {
+            // Model mode wakes every spinner (spurious wakeups are
+            // permitted by the condvar contract).
+            self.gen.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        }
+        self.inner.notify_one();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+impl std::fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Condvar").finish_non_exhaustive()
+    }
+}
+
+// --------------------------------------------------------------- RwLock
+
+pub struct RwLock<T: ?Sized> {
+    inner: std::sync::RwLock<T>,
+}
+
+impl<T> RwLock<T> {
+    pub fn new(t: T) -> RwLock<T> {
+        RwLock {
+            inner: std::sync::RwLock::new(t),
+        }
+    }
+}
+
+impl<T: Default> Default for RwLock<T> {
+    fn default() -> RwLock<T> {
+        RwLock::new(T::default())
+    }
+}
+
+impl<T: ?Sized + std::fmt::Debug> std::fmt::Debug for RwLock<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+impl<T: ?Sized> RwLock<T> {
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        if !model::in_model() {
+            return match self.inner.read() {
+                Ok(g) => Ok(RwLockReadGuard { inner: Some(g) }),
+                Err(p) => Err(PoisonError::new(RwLockReadGuard {
+                    inner: Some(p.into_inner()),
+                })),
+            };
+        }
+        model::yield_point();
+        loop {
+            match self.inner.try_read() {
+                Ok(g) => return Ok(RwLockReadGuard { inner: Some(g) }),
+                Err(TryLockError::Poisoned(p)) => {
+                    return Err(PoisonError::new(RwLockReadGuard {
+                        inner: Some(p.into_inner()),
+                    }))
+                }
+                Err(TryLockError::WouldBlock) => model::yield_blocked(),
+            }
+        }
+    }
+
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        if !model::in_model() {
+            return match self.inner.write() {
+                Ok(g) => Ok(RwLockWriteGuard { inner: Some(g) }),
+                Err(p) => Err(PoisonError::new(RwLockWriteGuard {
+                    inner: Some(p.into_inner()),
+                })),
+            };
+        }
+        model::yield_point();
+        loop {
+            match self.inner.try_write() {
+                Ok(g) => return Ok(RwLockWriteGuard { inner: Some(g) }),
+                Err(TryLockError::Poisoned(p)) => {
+                    return Err(PoisonError::new(RwLockWriteGuard {
+                        inner: Some(p.into_inner()),
+                    }))
+                }
+                Err(TryLockError::WouldBlock) => model::yield_blocked(),
+            }
+        }
+    }
+}
+
+pub struct RwLockReadGuard<'a, T: ?Sized> {
+    inner: Option<std::sync::RwLockReadGuard<'a, T>>,
+}
+
+impl<T: ?Sized> Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard taken")
+    }
+}
+
+impl<T: ?Sized> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        let released = self.inner.take().is_some();
+        if released && model::in_model() && !std::thread::panicking() {
+            model::yield_point();
+        }
+    }
+}
+
+pub struct RwLockWriteGuard<'a, T: ?Sized> {
+    inner: Option<std::sync::RwLockWriteGuard<'a, T>>,
+}
+
+impl<T: ?Sized> Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard taken")
+    }
+}
+
+impl<T: ?Sized> DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard taken")
+    }
+}
+
+impl<T: ?Sized> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        let released = self.inner.take().is_some();
+        if released && model::in_model() && !std::thread::panicking() {
+            model::yield_point();
+        }
+    }
+}
+
+// -------------------------------------------------------------- Atomics
+
+/// Instrumented atomics: each op is a scheduling point, then delegates
+/// to the real `std` atomic (interleavings are explored at sequential
+/// consistency regardless of the ordering argument).
+pub mod atomic {
+    use super::model;
+    pub use std::sync::atomic::Ordering;
+
+    macro_rules! shim_atomic {
+        ($name:ident, $std:ty, $prim:ty) => {
+            #[derive(Debug, Default)]
+            pub struct $name(pub(crate) $std);
+
+            impl $name {
+                pub fn new(v: $prim) -> $name {
+                    $name(<$std>::new(v))
+                }
+
+                pub fn load(&self, o: Ordering) -> $prim {
+                    model::yield_point();
+                    self.0.load(o)
+                }
+
+                pub fn store(&self, v: $prim, o: Ordering) {
+                    model::yield_point();
+                    self.0.store(v, o)
+                }
+
+                pub fn swap(&self, v: $prim, o: Ordering) -> $prim {
+                    model::yield_point();
+                    self.0.swap(v, o)
+                }
+
+                pub fn fetch_add(&self, v: $prim, o: Ordering) -> $prim {
+                    model::yield_point();
+                    self.0.fetch_add(v, o)
+                }
+
+                pub fn fetch_sub(&self, v: $prim, o: Ordering) -> $prim {
+                    model::yield_point();
+                    self.0.fetch_sub(v, o)
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    cur: $prim,
+                    new: $prim,
+                    ok: Ordering,
+                    err: Ordering,
+                ) -> Result<$prim, $prim> {
+                    model::yield_point();
+                    self.0.compare_exchange(cur, new, ok, err)
+                }
+
+                pub fn compare_exchange_weak(
+                    &self,
+                    cur: $prim,
+                    new: $prim,
+                    ok: Ordering,
+                    err: Ordering,
+                ) -> Result<$prim, $prim> {
+                    model::yield_point();
+                    // The strong variant underneath: the model explores
+                    // interleavings, not spurious CAS failures.
+                    self.0.compare_exchange(cur, new, ok, err)
+                }
+            }
+        };
+    }
+
+    shim_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    shim_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+    #[derive(Debug, Default)]
+    pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+    impl AtomicBool {
+        pub fn new(v: bool) -> AtomicBool {
+            AtomicBool(std::sync::atomic::AtomicBool::new(v))
+        }
+
+        pub fn load(&self, o: Ordering) -> bool {
+            model::yield_point();
+            self.0.load(o)
+        }
+
+        pub fn store(&self, v: bool, o: Ordering) {
+            model::yield_point();
+            self.0.store(v, o)
+        }
+
+        pub fn swap(&self, v: bool, o: Ordering) -> bool {
+            model::yield_point();
+            self.0.swap(v, o)
+        }
+    }
+}

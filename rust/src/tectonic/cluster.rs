@@ -5,9 +5,11 @@ use super::node::{IoStats, StorageNode};
 use crate::config::DeviceSpec;
 use crate::dwrf::{IoBuffers, IoRange};
 use anyhow::{bail, Context, Result};
+use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::sync::{
+    lock_or_recover, read_or_recover, write_or_recover, Mutex, RwLock,
+};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Mutex, RwLock};
 
 /// Opaque file handle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -78,8 +80,11 @@ impl Cluster {
     }
 
     pub fn create(&self, name: &str) -> FileId {
+        // Relaxed: a pure unique-ID ticket. Each fetch_add returns a
+        // distinct value at any ordering; nothing else is published
+        // through it (the metadata insert below is guarded by `files`).
         let id = FileId(self.next_file.fetch_add(1, Ordering::Relaxed));
-        self.files.write().unwrap().insert(
+        write_or_recover(&self.files, "cluster files").insert(
             id,
             FileMetaEntry {
                 chunks: Vec::new(),
@@ -87,18 +92,19 @@ impl Cluster {
                 sealed: false,
             },
         );
-        self.names.lock().unwrap().insert(name.to_string(), id);
+        lock_or_recover(&self.names, "cluster names")
+            .insert(name.to_string(), id);
         id
     }
 
     pub fn lookup(&self, name: &str) -> Option<FileId> {
-        self.names.lock().unwrap().get(name).copied()
+        lock_or_recover(&self.names, "cluster names").get(name).copied()
     }
 
     /// Append bytes (append-only, like Tectonic). Splits into chunks and
     /// places `replication` copies round-robin across nodes.
     pub fn append(&self, file: FileId, data: &[u8]) -> Result<()> {
-        let mut files = self.files.write().unwrap();
+        let mut files = write_or_recover(&self.files, "cluster files");
         let entry = files.get_mut(&file).context("no such file")?;
         if entry.sealed {
             bail!("file {file:?} is sealed (append-only store)");
@@ -111,6 +117,9 @@ impl Cluster {
                 None => true,
             };
             if need_new {
+                // Relaxed on both: `next_chunk` is another unique-ID
+                // ticket; `rr` is a best-effort round-robin cursor where
+                // placement only needs spread, not a total order.
                 let chunk_id = self.next_chunk.fetch_add(1, Ordering::Relaxed);
                 let start = self.rr.fetch_add(1, Ordering::Relaxed);
                 let replicas: Vec<usize> = (0..self.cfg.replication)
@@ -141,13 +150,17 @@ impl Cluster {
 
     /// Seal a file (no further appends; readers may cache layout).
     pub fn seal(&self, file: FileId) {
-        if let Some(e) = self.files.write().unwrap().get_mut(&file) {
+        if let Some(e) =
+            write_or_recover(&self.files, "cluster files").get_mut(&file)
+        {
             e.sealed = true;
         }
     }
 
     pub fn file_len(&self, file: FileId) -> Option<u64> {
-        self.files.read().unwrap().get(&file).map(|e| e.len)
+        read_or_recover(&self.files, "cluster files")
+            .get(&file)
+            .map(|e| e.len)
     }
 
     /// Total bytes stored across all nodes (includes replication).
@@ -157,14 +170,17 @@ impl Cluster {
 
     /// Logical bytes (pre-replication).
     pub fn logical_bytes(&self) -> u64 {
-        self.files.read().unwrap().values().map(|e| e.len).sum()
+        read_or_recover(&self.files, "cluster files")
+            .values()
+            .map(|e| e.len)
+            .sum()
     }
 
     /// Execute one logical read `[offset, offset+len)` of a file. The read
     /// is split at chunk boundaries; each piece goes to one replica
     /// (rotating for load spread).
     pub fn read_range(&self, file: FileId, io: IoRange) -> Result<Vec<u8>> {
-        let files = self.files.read().unwrap();
+        let files = read_or_recover(&self.files, "cluster files");
         let entry = files.get(&file).context("no such file")?;
         if io.offset + io.len > entry.len {
             bail!(

@@ -2,8 +2,8 @@
 //! service-time model and IOPS/bytes accounting.
 
 use crate::config::DeviceSpec;
+use crate::sync::{lock_or_recover, Mutex};
 use std::collections::HashMap;
-use std::sync::Mutex;
 
 /// Per-node I/O accounting. Times are *simulated device seconds*, which is
 /// what the storage-throughput experiments report; data movement itself is
@@ -77,23 +77,23 @@ impl StorageNode {
     }
 
     pub fn put_chunk(&self, chunk_id: u64, data: Vec<u8>) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "storage node");
         st.stats.bytes_written += data.len() as u64;
         st.chunks.insert(chunk_id, data);
     }
 
     pub fn has_chunk(&self, chunk_id: u64) -> bool {
-        self.state.lock().unwrap().chunks.contains_key(&chunk_id)
+        lock_or_recover(&self.state, "storage node")
+            .chunks
+            .contains_key(&chunk_id)
     }
 
     pub fn chunk_count(&self) -> usize {
-        self.state.lock().unwrap().chunks.len()
+        lock_or_recover(&self.state, "storage node").chunks.len()
     }
 
     pub fn stored_bytes(&self) -> u64 {
-        self.state
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.state, "storage node")
             .chunks
             .values()
             .map(|c| c.len() as u64)
@@ -107,7 +107,7 @@ impl StorageNode {
     /// is only exploitable *within* a request, which is precisely what
     /// coalesced reads buy (the +CR mechanism of §7.5).
     pub fn read(&self, chunk_id: u64, offset: u64, len: u64) -> Option<Vec<u8>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "storage node");
         let data = st.chunks.get(&chunk_id)?;
         if offset + len > data.len() as u64 {
             return None;
@@ -125,7 +125,7 @@ impl StorageNode {
     /// Append to a chunk in place (writer path; device write time is not
     /// modelled — offline data generation is off the critical path, §3.1.1).
     pub fn append_chunk(&self, chunk_id: u64, data: &[u8]) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "storage node");
         st.stats.bytes_written += data.len() as u64;
         st.chunks
             .entry(chunk_id)
@@ -134,11 +134,11 @@ impl StorageNode {
     }
 
     pub fn stats(&self) -> IoStats {
-        self.state.lock().unwrap().stats.clone()
+        lock_or_recover(&self.state, "storage node").stats.clone()
     }
 
     pub fn reset_stats(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state, "storage node");
         st.stats = IoStats::default();
         st.head = None;
     }

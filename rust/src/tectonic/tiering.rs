@@ -17,9 +17,9 @@ use super::node::IoStats;
 use crate::config::DeviceSpec;
 use crate::dwrf::{IoBuffers, IoRange};
 use crate::metrics::Counter;
+use crate::sync::{read_or_recover, write_or_recover, RwLock};
 use anyhow::Result;
 use std::collections::HashMap;
-use std::sync::RwLock;
 
 /// A cached extent of a file resident on the SSD tier.
 #[derive(Clone, Copy, Debug)]
@@ -68,14 +68,14 @@ impl TieredStore {
     }
 
     pub fn cached_bytes(&self) -> u64 {
-        *self.used.read().unwrap()
+        *read_or_recover(&self.used, "tier usage")
     }
 
     /// Admit `[range]` of `file` to the SSD tier (no-op when over budget
     /// or already cached). Returns whether it was admitted.
     pub fn admit(&self, file: FileId, range: IoRange) -> Result<bool> {
         {
-            let used = self.used.read().unwrap();
+            let used = read_or_recover(&self.used, "tier usage");
             if *used + range.len > self.budget_bytes {
                 return Ok(false);
             }
@@ -87,14 +87,14 @@ impl TieredStore {
         // promotion read).
         let data = self.hdd.read_range(file, range)?;
         let backing = {
-            let mut b = self.ssd_backing.write().unwrap();
+            let mut b = write_or_recover(&self.ssd_backing, "tier backing");
             *b.entry(file).or_insert_with(|| {
                 self.ssd.create(&format!("cache/{}", file.0))
             })
         };
         let ssd_offset = self.ssd.file_len(backing).unwrap_or(0);
         self.ssd.append(backing, &data)?;
-        let mut ex = self.extents.write().unwrap();
+        let mut ex = write_or_recover(&self.extents, "tier extents");
         let v = ex.entry(file).or_default();
         v.push(CachedExtent {
             range,
@@ -102,12 +102,12 @@ impl TieredStore {
             ssd_offset,
         });
         v.sort_by_key(|e| e.range.offset);
-        *self.used.write().unwrap() += range.len;
+        *write_or_recover(&self.used, "tier usage") += range.len;
         Ok(true)
     }
 
     fn lookup(&self, file: FileId, range: IoRange) -> Option<CachedExtent> {
-        let ex = self.extents.read().unwrap();
+        let ex = read_or_recover(&self.extents, "tier extents");
         let v = ex.get(&file)?;
         v.iter()
             .find(|e| {

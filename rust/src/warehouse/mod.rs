@@ -6,9 +6,9 @@
 
 use crate::dwrf::Projection;
 use crate::schema::Schema;
+use crate::sync::{read_or_recover, write_or_recover, RwLock};
 use crate::tectonic::FileId;
 use std::collections::HashMap;
-use std::sync::RwLock;
 
 /// One date partition of a table.
 #[derive(Clone, Debug)]
@@ -69,26 +69,30 @@ impl Catalog {
     }
 
     pub fn register(&self, table: Table) {
-        self.tables
-            .write()
-            .unwrap()
+        write_or_recover(&self.tables, "catalog tables")
             .insert(table.name.clone(), table);
     }
 
     pub fn get(&self, name: &str) -> Option<Table> {
-        self.tables.read().unwrap().get(name).cloned()
+        read_or_recover(&self.tables, "catalog tables")
+            .get(name)
+            .cloned()
     }
 
     pub fn add_partition(&self, table: &str, p: Partition) {
-        if let Some(t) = self.tables.write().unwrap().get_mut(table) {
+        if let Some(t) =
+            write_or_recover(&self.tables, "catalog tables").get_mut(table)
+        {
             t.partitions.push(p);
             t.partitions.sort_by_key(|p| p.day);
         }
     }
 
     pub fn table_names(&self) -> Vec<String> {
-        let mut v: Vec<String> =
-            self.tables.read().unwrap().keys().cloned().collect();
+        let mut v: Vec<String> = read_or_recover(&self.tables, "catalog tables")
+            .keys()
+            .cloned()
+            .collect();
         v.sort();
         v
     }

@@ -1,0 +1,235 @@
+//! Control-plane concurrency regressions: the `MemoryBudget` against a
+//! sequential oracle, Master lease races (failure / drain vs a late
+//! completion), and a broker that keeps serving other sessions after a
+//! worker thread dies mid-decode. The same protocols are model-checked
+//! exhaustively under `--cfg loom` (`dsi::sync::models`); these tests
+//! keep the real `std::sync` build honest.
+
+use dsi::broker::{MemoryBudget, ReadBroker};
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::datagen::build_dataset;
+use dsi::dpp::Master;
+use dsi::dwrf::{Projection, WriterOptions};
+use dsi::schema::FeatureId;
+use dsi::tectonic::{Cluster, ClusterConfig, FileId};
+use dsi::util::prop::check;
+use dsi::warehouse::Catalog;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Every reserve/release decision the pool makes must match a plain
+/// checked-arithmetic model replayed over the same script.
+#[test]
+fn budget_matches_sequential_oracle() {
+    check("memory budget vs sequential oracle", 200, |g| {
+        let total = g.u64(1..2000);
+        let budget = MemoryBudget::new(total);
+        let mut oracle: u64 = 0;
+        let mut held: Vec<u64> = Vec::new();
+        let ops = g.len(64);
+        for step in 0..ops {
+            if held.is_empty() || g.bool() {
+                let amt = g.u64(0..total + 50);
+                let want = oracle
+                    .checked_add(amt)
+                    .is_some_and(|next| next <= total);
+                let got = budget.try_reserve(amt);
+                if got != want {
+                    return Err(format!(
+                        "step {step}: reserve({amt}) -> {got}, oracle \
+                         expected {want} (used {oracle}/{total})"
+                    ));
+                }
+                if got {
+                    oracle += amt;
+                    held.push(amt);
+                }
+            } else {
+                let amt = held.swap_remove(g.usize(0..held.len()));
+                budget.release(amt);
+                oracle -= amt;
+            }
+            if budget.used() != oracle {
+                return Err(format!(
+                    "step {step}: used {} != oracle {oracle}",
+                    budget.used()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Threads hammer one pool, each releasing only what it reserved: the
+/// pool never exceeds its total mid-flight and drains back to zero.
+#[test]
+fn budget_concurrent_reserve_release_balances() {
+    let total = 10_000u64;
+    let budget = MemoryBudget::new(total);
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let b = budget.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut held: Vec<u64> = Vec::new();
+            let (mut reserved, mut released) = (0u64, 0u64);
+            for i in 0..2000u64 {
+                let amt = (t * 2711 + i * 37) % 400 + 1;
+                if i % 3 != 2 {
+                    if b.try_reserve(amt) {
+                        held.push(amt);
+                        reserved += amt;
+                    }
+                } else if let Some(amt) = held.pop() {
+                    b.release(amt);
+                    released += amt;
+                }
+                let used = b.used();
+                assert!(used <= total, "used {used} > total {total}");
+            }
+            for amt in held {
+                b.release(amt);
+                released += amt;
+            }
+            (reserved, released)
+        }));
+    }
+    let (mut reserved, mut released) = (0u64, 0u64);
+    for h in handles {
+        let (r, l) = h.join().unwrap();
+        reserved += r;
+        released += l;
+    }
+    assert_eq!(reserved, released, "threads release all they reserve");
+    assert_eq!(budget.used(), 0, "pool drains to zero");
+}
+
+/// Race a completion against the failure detector declaring its worker
+/// dead: whichever order the two locks interleave in, the settled split
+/// must never be served again.
+#[test]
+fn completed_split_never_requeued_by_worker_failure() {
+    for round in 0..100 {
+        let m = Arc::new(Master::synthetic(1));
+        let w1 = m.register_worker();
+        let id = m.fetch_split(w1).expect("one split queued").id;
+        let ma = Arc::clone(&m);
+        let mb = Arc::clone(&m);
+        let a = std::thread::spawn(move || ma.complete_split(w1, id));
+        let b = std::thread::spawn(move || mb.worker_failed(w1));
+        a.join().unwrap();
+        b.join().unwrap();
+        let w2 = m.register_worker();
+        assert!(
+            m.fetch_split(w2).is_none(),
+            "round {round}: completed split was requeued"
+        );
+        assert!(m.is_done(), "round {round}: leftover queue/lease");
+        assert_eq!(m.progress(), (1, 1), "round {round}");
+    }
+}
+
+/// Same race against a graceful retire + drain: draining requeues the
+/// retiree's leases, but a split that already completed stays settled.
+#[test]
+fn retired_worker_drain_never_requeues_completed_split() {
+    for round in 0..100 {
+        let m = Arc::new(Master::synthetic(1));
+        let w1 = m.register_worker();
+        let id = m.fetch_split(w1).expect("one split queued").id;
+        let ma = Arc::clone(&m);
+        let mb = Arc::clone(&m);
+        let a = std::thread::spawn(move || ma.complete_split(w1, id));
+        let b = std::thread::spawn(move || {
+            mb.retire_worker(w1);
+            mb.worker_drained(w1);
+        });
+        a.join().unwrap();
+        b.join().unwrap();
+        let w2 = m.register_worker();
+        assert!(
+            m.fetch_split(w2).is_none(),
+            "round {round}: completed split was requeued"
+        );
+        assert!(m.is_done(), "round {round}: leftover queue/lease");
+        assert_eq!(m.progress(), (1, 1), "round {round}");
+    }
+}
+
+fn tiny_world() -> (Arc<Cluster>, String, Vec<FileId>, Vec<FeatureId>) {
+    let cluster = Arc::new(Cluster::new(ClusterConfig {
+        chunk_bytes: 64 << 10,
+        ..Default::default()
+    }));
+    let catalog = Catalog::new();
+    let rm = RmConfig::get(RmId::Rm3);
+    let scale = SimScale::tiny();
+    let h = build_dataset(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions {
+            stripe_rows: 16,
+            ..Default::default()
+        },
+        7,
+    )
+    .unwrap();
+    let files: Vec<FileId> = catalog
+        .get(&h.table_name)
+        .unwrap()
+        .partitions
+        .iter()
+        .map(|p| p.file)
+        .collect();
+    let feats: Vec<FeatureId> =
+        h.schema.features.iter().map(|f| f.id).collect();
+    (cluster, h.table_name, files, feats)
+}
+
+/// A worker thread dying mid-decode (panicking while it holds a served
+/// stripe handle) must not wedge the broker: the other session still
+/// drains every stripe, and unregistering the dead session frees every
+/// byte it pinned.
+#[test]
+fn broker_keeps_serving_after_worker_panic() {
+    let (cluster, table, files, feats) = tiny_world();
+    let broker = ReadBroker::with_budget_bytes(cluster.clone(), 64 << 20);
+    let proj = Projection::new(feats.iter().copied());
+    let file = files[0];
+    let stripes =
+        Master::fetch_meta(&cluster, file).unwrap().stripes.len();
+    assert!(stripes >= 2, "need multiple stripes to share");
+    let all: Vec<usize> = (0..stripes).collect();
+    let interest = |stripes: &[usize]| -> HashMap<FileId, Vec<usize>> {
+        let mut m = HashMap::new();
+        m.insert(file, stripes.to_vec());
+        m
+    };
+    let s_dead = broker.register(&table, &proj, interest(&all));
+    let s_live = broker.register(&table, &proj, interest(&all));
+
+    let dead = {
+        let broker = Arc::clone(&broker);
+        std::thread::spawn(move || {
+            let served = broker.get_stripe(s_dead, file, 0).unwrap();
+            assert!(!served.from_buffer, "first serve pays the fetch");
+            panic!("worker died mid-decode");
+        })
+    };
+    assert!(dead.join().is_err(), "worker thread should have panicked");
+
+    // The surviving session is unaffected: every stripe still serves,
+    // and stripe 0 rides the buffer the dead worker already filled.
+    let first = broker.get_stripe(s_live, file, 0).unwrap();
+    assert!(first.from_buffer, "dead worker's fetch is still shared");
+    for &s in &all[1..] {
+        broker.get_stripe(s_live, file, s).unwrap();
+    }
+    // The dead session's unconsumed interest still pins stripes 1..n;
+    // unregistering it releases them.
+    broker.unregister(s_dead);
+    broker.unregister(s_live);
+    assert_eq!(broker.buffered_stripes(), 0, "nothing stays resident");
+    assert_eq!(broker.budget().used(), 0, "every byte released");
+}

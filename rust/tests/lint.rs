@@ -1,0 +1,77 @@
+//! dsi-lint against the real tree (must be clean) and against a
+//! doctored fixture (must fail) — proving the gate actually gates.
+
+use std::path::Path;
+use std::process::Command;
+
+#[test]
+fn real_sources_pass_every_repo_check() {
+    let errs = dsi::lint::run_repo_checks(env!("CARGO_MANIFEST_DIR"))
+        .expect("checker ran");
+    assert!(errs.is_empty(), "repo invariants violated: {errs:#?}");
+}
+
+#[test]
+fn lint_binary_exits_zero_on_real_tree() {
+    let out = Command::new(env!("CARGO_BIN_EXE_dsi-lint"))
+        .output()
+        .expect("spawn dsi-lint");
+    assert!(
+        out.status.success(),
+        "stdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+}
+
+/// Add an unfingerprinted, unexempted `PipelineOptions` field to a copy
+/// of the real spec and point the binary at it: it must exit non-zero
+/// and name the field.
+#[test]
+fn lint_binary_fails_on_unfingerprinted_field() {
+    let real = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/dpp/spec.rs");
+    let src = std::fs::read_to_string(&real).expect("read spec.rs");
+    let needle = "pub max_frame_bytes: usize,";
+    assert!(src.contains(needle), "spec.rs layout changed");
+    let doctored = src.replacen(
+        needle,
+        "pub max_frame_bytes: usize,\n    pub sneaky_knob: bool,",
+        1,
+    );
+    let dir = Path::new(env!("CARGO_TARGET_TMPDIR"));
+    std::fs::create_dir_all(dir).expect("tmpdir");
+    let path = dir.join("doctored_spec.rs");
+    std::fs::write(&path, doctored).expect("write fixture");
+
+    let out = Command::new(env!("CARGO_BIN_EXE_dsi-lint"))
+        .env("DSI_LINT_SPEC_PATH", &path)
+        .output()
+        .expect("spawn dsi-lint");
+    assert_eq!(
+        out.status.code(),
+        Some(1),
+        "stdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("sneaky_knob"), "stderr: {stderr}");
+}
+
+/// Same fixture, in-process: the violation is exactly the new field.
+#[test]
+fn doctored_spec_fails_fingerprint_coverage_in_process() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let spec =
+        std::fs::read_to_string(root.join("dpp/spec.rs")).expect("spec");
+    let cache =
+        std::fs::read_to_string(root.join("dpp/cache.rs")).expect("cache");
+    let doctored = spec.replacen(
+        "pub max_frame_bytes: usize,",
+        "pub max_frame_bytes: usize,\n    pub sneaky_knob: bool,",
+        1,
+    );
+    let errs = dsi::lint::check_fingerprint_coverage(&doctored, &cache);
+    assert_eq!(errs.len(), 1, "{errs:?}");
+    assert!(errs[0].contains("sneaky_knob"), "{errs:?}");
+}

@@ -1,0 +1,23 @@
+//! dsi-lint — repo-invariant gate (see `dsi::lint` for the checks).
+//!
+//! Exit codes: 0 = all invariants hold, 1 = violations, 2 = the checker
+//! itself failed (missing source file, bad `DSI_LINT_SPEC_PATH`, ...).
+
+fn main() {
+    match dsi::lint::run_repo_checks(env!("CARGO_MANIFEST_DIR")) {
+        Ok(errs) if errs.is_empty() => {
+            println!("dsi-lint: all repo invariants hold");
+        }
+        Ok(errs) => {
+            for e in &errs {
+                eprintln!("dsi-lint: {e}");
+            }
+            eprintln!("dsi-lint: {} violation(s)", errs.len());
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("dsi-lint: error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
