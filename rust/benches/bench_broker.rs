@@ -5,14 +5,23 @@
 //! session's wire output is byte-identical to the private-scan path,
 //! and emits `target/broker_results.json`. CI criterion: 4 overlapping
 //! sessions must cut total storage bytes read by >= 3x.
+//!
+//! A second, mixed-projection scenario runs 4 sessions whose
+//! projections pairwise overlap on a popular core but each add private
+//! features, with identical per-feature op chains (shared DAG
+//! *prefixes*, distinct DAGs). It compares column-grain sharing
+//! (`column_sharing = true` + a shared [`TransformCache`]) against the
+//! stripe-grain ablation, gating on (a) byte-identical outputs in both
+//! modes, (b) transform row-outputs actually skipped via cross-job
+//! reuse, and (c) a lower broker resident-memory peak at column grain.
 
 use dsi::broker::{MemoryBudget, ReadBroker};
 use dsi::config::{RmConfig, RmId, SimScale};
 use dsi::datagen::{build_dataset_with, GenOptions};
-use dsi::dpp::{Master, SessionSpec, WorkerCore};
+use dsi::dpp::{Master, SessionSpec, TransformCache, WorkerCore};
 use dsi::dwrf::WriterOptions;
 use dsi::metrics::{EtlMetrics, Table};
-use dsi::schema::{FeatureId, FeatureKind};
+use dsi::schema::{FeatureId, FeatureKind, Schema};
 use dsi::tectonic::{Cluster, ClusterConfig};
 use dsi::transforms::{Op, TransformDag};
 use dsi::util::json::Json;
@@ -26,6 +35,8 @@ struct World {
     cluster: Arc<Cluster>,
     catalog: Catalog,
     spec: SessionSpec,
+    /// Pairwise-overlapping sessions for the mixed-projection scenario.
+    mixed: Vec<SessionSpec>,
 }
 
 fn build() -> World {
@@ -59,9 +70,47 @@ fn build() -> World {
     let mut rng = Pcg32::new(SEED ^ 0xB40C);
     let take = (h.schema.features.len() / 4).max(4);
     let proj: Vec<FeatureId> = h.schema.sample_projection(&mut rng, take, 1.0);
+    let spec = SessionSpec::from_dag(
+        &h.table_name,
+        0,
+        u32::MAX,
+        norm_dag(&h.schema, &proj),
+        64,
+    );
+
+    // Mixed-projection sessions: a popular 8-feature core every session
+    // shares, plus a private 6-feature slice each — so all pairs
+    // overlap, but no projection contains another, and per-output
+    // transform prefixes are identical exactly on the shared features.
+    let pool: Vec<FeatureId> = h.schema.sample_projection(&mut rng, 32, 1.0);
+    let mixed = (0..4)
+        .map(|i| {
+            let mut p: Vec<FeatureId> = pool[..8].to_vec();
+            p.extend_from_slice(&pool[8 + 6 * i..8 + 6 * (i + 1)]);
+            SessionSpec::from_dag(
+                &h.table_name,
+                0,
+                u32::MAX,
+                norm_dag(&h.schema, &p),
+                64,
+            )
+        })
+        .collect();
+    World {
+        cluster,
+        catalog,
+        spec,
+        mixed,
+    }
+}
+
+/// The per-feature normalization chain every benchmark session runs:
+/// identical op parameters per feature, so two sessions projecting the
+/// same feature share that output's whole DAG prefix.
+fn norm_dag(schema: &Schema, proj: &[FeatureId]) -> TransformDag {
     let mut dag = TransformDag::default();
-    for &fid in &proj {
-        match h.schema.by_id(fid).map(|d| d.kind) {
+    for &fid in proj {
+        match schema.by_id(fid).map(|d| d.kind) {
             Some(FeatureKind::Dense) => {
                 let i = dag.input_dense(fid);
                 let c = dag.apply(Op::Clamp { lo: -3.0, hi: 3.0 }, vec![i]);
@@ -80,17 +129,13 @@ fn build() -> World {
             }
         }
     }
-    let spec = SessionSpec::from_dag(&h.table_name, 0, u32::MAX, dag, 64);
-    World {
-        cluster,
-        catalog,
-        spec,
-    }
+    dag
 }
 
 struct SessionRun {
     master: Master,
     core: WorkerCore,
+    metrics: Arc<EtlMetrics>,
 }
 
 /// (seq, rows, dedup, bytes) per wire batch — enough to prove
@@ -98,7 +143,15 @@ struct SessionRun {
 type Wire = Vec<(u64, usize, bool, Vec<u8>)>;
 
 fn new_session(world: &World, broker: Option<&Arc<ReadBroker>>) -> SessionRun {
-    let mut spec = world.spec.clone();
+    new_session_with(world, world.spec.clone(), broker, None)
+}
+
+fn new_session_with(
+    world: &World,
+    mut spec: SessionSpec,
+    broker: Option<&Arc<ReadBroker>>,
+    xform: Option<&Arc<TransformCache>>,
+) -> SessionRun {
     spec.pipeline.shared_reads = broker.is_some();
     let master = match broker {
         Some(b) => Master::new_shared(
@@ -111,12 +164,22 @@ fn new_session(world: &World, broker: Option<&Arc<ReadBroker>>) -> SessionRun {
     }
     .expect("master");
     let metrics = Arc::new(EtlMetrics::default());
-    let mut core =
-        WorkerCore::new(Arc::new(spec), world.cluster.clone(), metrics);
+    let mut core = WorkerCore::new(
+        Arc::new(spec),
+        world.cluster.clone(),
+        metrics.clone(),
+    );
     if let Some(h) = master.broker_handle() {
         core = core.with_broker(h);
     }
-    SessionRun { master, core }
+    if let Some(c) = xform {
+        core = core.with_transform_cache(c.clone());
+    }
+    SessionRun {
+        master,
+        core,
+        metrics,
+    }
 }
 
 fn drain(run: &mut SessionRun) -> Wire {
@@ -129,6 +192,63 @@ fn drain(run: &mut SessionRun) -> Wire {
         run.master.complete_split(w, split.id);
     }
     wire
+}
+
+/// One mixed-projection fleet run: the 4 pairwise-overlapping sessions
+/// drained through one broker, at either sharing grain.
+struct MixedRun {
+    wires: Vec<Wire>,
+    bytes_read: u64,
+    transform_secs: f64,
+    reuse_hits: u64,
+    reused_rows: u64,
+    column_hits: u64,
+    column_fetches: u64,
+    column_saved_bytes: u64,
+    peak_resident: u64,
+}
+
+fn run_mixed(world: &World, column_sharing: bool) -> MixedRun {
+    world.cluster.reset_stats();
+    let budget = MemoryBudget::new(1 << 30);
+    let broker = ReadBroker::new(world.cluster.clone(), budget.clone());
+    // One transform cache across the whole fleet. The stripe-grain
+    // ablation runs without it: that is the PR-3-era configuration the
+    // column grain is measured against.
+    let xform = if column_sharing {
+        Some(Arc::new(TransformCache::new(256 << 20)))
+    } else {
+        None
+    };
+    let mut runs: Vec<SessionRun> = world
+        .mixed
+        .iter()
+        .map(|s| {
+            let mut spec = s.clone();
+            spec.pipeline.column_sharing = column_sharing;
+            new_session_with(world, spec, Some(&broker), xform.as_ref())
+        })
+        .collect();
+    let wires: Vec<Wire> = runs.iter_mut().map(drain).collect();
+    let mut transform_secs = 0.0;
+    let mut reuse_hits = 0;
+    let mut reused_rows = 0;
+    for r in &runs {
+        transform_secs += r.metrics.t_transform.secs();
+        reuse_hits += r.metrics.transform_reuse_hits.get();
+        reused_rows += r.metrics.transform_reused_rows.get();
+    }
+    MixedRun {
+        wires,
+        bytes_read: world.cluster.stats().bytes_read,
+        transform_secs,
+        reuse_hits,
+        reused_rows,
+        column_hits: broker.metrics.column_hits.get(),
+        column_fetches: broker.metrics.column_fetches.get(),
+        column_saved_bytes: broker.metrics.column_saved_bytes.get(),
+        peak_resident: budget.peak(),
+    }
 }
 
 fn main() {
@@ -213,7 +333,71 @@ fn main() {
     }
     table.print();
 
-    let pass = crit_reduction >= 3.0 && all_identical;
+    // ---- Mixed projections with shared DAG prefixes: column grain vs
+    // the stripe-grain ablation. ----
+    // Per-spec private-scan references each brokered run must reproduce.
+    let mixed_base: Vec<Wire> = world
+        .mixed
+        .iter()
+        .map(|s| drain(&mut new_session_with(&world, s.clone(), None, None)))
+        .collect();
+    let col = run_mixed(&world, true);
+    let ablation = run_mixed(&world, false);
+    let col_identical = col.wires == mixed_base;
+    let ablation_identical = ablation.wires == mixed_base;
+    let transform_cut = col.reused_rows > 0 && col.column_hits > 0;
+    let resident_cut = col.peak_resident < ablation.peak_resident;
+    let mixed_pass =
+        col_identical && ablation_identical && transform_cut && resident_cut;
+
+    let mut mtable = Table::new(
+        "Mixed projections: 4 sessions, 8 shared + 6 private features \
+         each, identical per-feature op chains — column grain (+ shared \
+         transform cache) vs the stripe-grain ablation",
+        &[
+            "grain",
+            "MB read",
+            "col hits",
+            "col fetches",
+            "xform reused rows",
+            "xform s",
+            "peak MB",
+            "identical",
+        ],
+    );
+    mtable.row(&[
+        "column".to_string(),
+        format!("{:.2}", col.bytes_read as f64 / 1e6),
+        format!("{}", col.column_hits),
+        format!("{}", col.column_fetches),
+        format!("{}", col.reused_rows),
+        format!("{:.3}", col.transform_secs),
+        format!("{:.2}", col.peak_resident as f64 / 1e6),
+        format!("{col_identical}"),
+    ]);
+    mtable.row(&[
+        "stripe".to_string(),
+        format!("{:.2}", ablation.bytes_read as f64 / 1e6),
+        "-".to_string(),
+        "-".to_string(),
+        "0".to_string(),
+        format!("{:.3}", ablation.transform_secs),
+        format!("{:.2}", ablation.peak_resident as f64 / 1e6),
+        format!("{ablation_identical}"),
+    ]);
+    mtable.print();
+    println!(
+        "\nmixed criterion: outputs byte-identical (column {col_identical}, \
+         stripe ablation {ablation_identical}); transform row-outputs \
+         skipped via cross-job reuse {} > 0: {transform_cut}; peak broker \
+         resident bytes {} < {} (stripe grain): {resident_cut}: {}",
+        col.reused_rows,
+        col.peak_resident,
+        ablation.peak_resident,
+        if mixed_pass { "PASS" } else { "FAIL" }
+    );
+
+    let pass = crit_reduction >= 3.0 && all_identical && mixed_pass;
     println!(
         "\ncriterion @ N=4: storage-bytes reduction {crit_reduction:.2}x \
          (target >= 3x), per-session outputs byte-identical to the \
@@ -224,6 +408,23 @@ fn main() {
     out.set("table", Json::Arr(arr));
     out.set("criterion_reduction_4x_sessions", crit_reduction);
     out.set("outputs_identical", all_identical);
+    let mut mj = Json::obj();
+    mj.set("sessions", 4u64)
+        .set("column_bytes_read", col.bytes_read)
+        .set("stripe_bytes_read", ablation.bytes_read)
+        .set("column_hits", col.column_hits)
+        .set("column_fetches", col.column_fetches)
+        .set("column_saved_bytes", col.column_saved_bytes)
+        .set("transform_reuse_hits", col.reuse_hits)
+        .set("transform_reused_rows", col.reused_rows)
+        .set("transform_secs_column", col.transform_secs)
+        .set("transform_secs_stripe", ablation.transform_secs)
+        .set("peak_resident_bytes_column", col.peak_resident)
+        .set("peak_resident_bytes_stripe", ablation.peak_resident)
+        .set("outputs_identical_column", col_identical)
+        .set("outputs_identical_stripe_ablation", ablation_identical)
+        .set("criterion_pass", mixed_pass);
+    out.set("mixed_projection", mj);
     out.set("criterion_pass", pass);
     let _ = std::fs::create_dir_all("target");
     let path = "target/broker_results.json";

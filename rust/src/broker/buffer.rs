@@ -4,6 +4,7 @@
 //! fetches so concurrent sessions never duplicate a storage read.
 
 use super::SharedStripe;
+use crate::data::{DenseColumn, SparseColumn};
 use crate::metrics::Counter;
 use crate::schema::FeatureId;
 use crate::sync::atomic::{AtomicU64, Ordering};
@@ -20,6 +21,10 @@ use std::sync::Arc;
 pub struct MemoryBudget {
     total: u64,
     used: AtomicU64,
+    /// High-water mark of `used`, for resident-bytes reporting. Advisory
+    /// only (Relaxed; racing reservations may record a slightly stale
+    /// peak) — never consulted by admission decisions.
+    peak: AtomicU64,
 }
 
 impl MemoryBudget {
@@ -27,6 +32,7 @@ impl MemoryBudget {
         Arc::new(MemoryBudget {
             total,
             used: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
         })
     }
 
@@ -36,6 +42,11 @@ impl MemoryBudget {
 
     pub fn used(&self) -> u64 {
         self.used.load(Ordering::Relaxed)
+    }
+
+    /// Highest `used` ever observed by a successful reservation.
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
     }
 
     /// Reserve `bytes` if the pool has room.
@@ -54,7 +65,21 @@ impl MemoryBudget {
                 Ordering::Relaxed,
                 Ordering::Relaxed,
             ) {
-                Ok(_) => return true,
+                Ok(_) => {
+                    let mut p = self.peak.load(Ordering::Relaxed);
+                    while next > p {
+                        match self.peak.compare_exchange_weak(
+                            p,
+                            next,
+                            Ordering::Relaxed,
+                            Ordering::Relaxed,
+                        ) {
+                            Ok(_) => break,
+                            Err(now) => p = now,
+                        }
+                    }
+                    return true;
+                }
                 Err(now) => cur = now,
             }
         }
@@ -394,6 +419,421 @@ impl Drop for LoadGuard<'_> {
     }
 }
 
+/// Identity of one cacheable column slice within a stripe. `Meta` covers
+/// the row-level payload every projection needs (labels, timestamps, and
+/// the dedup inverse index when present); `Feature` is one feature's
+/// column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ColumnId {
+    Meta,
+    Feature(FeatureId),
+}
+
+/// One decoded column payload, shareable across every session whose
+/// projection includes it — regardless of what else each session
+/// projects.
+pub enum SharedColumn {
+    Dense(DenseColumn),
+    Sparse(SparseColumn),
+    /// Per-stripe row metadata. `inverse` is present iff the stripe is
+    /// `Encoding::Dedup`; `col_rows` is the row count the feature
+    /// columns carry (unique rows under dedup, total rows otherwise).
+    Meta {
+        labels: Vec<f32>,
+        timestamps: Vec<u64>,
+        inverse: Option<Vec<u32>>,
+        col_rows: usize,
+    },
+}
+
+impl SharedColumn {
+    pub fn mem_bytes(&self) -> u64 {
+        match self {
+            SharedColumn::Dense(c) => {
+                (c.present.words().len() * 8 + c.values.len() * 4) as u64
+            }
+            SharedColumn::Sparse(c) => (c.offsets.len() * 4
+                + c.ids.len() * 8
+                + c.scores.as_ref().map_or(0, |s| s.len() * 4))
+                as u64,
+            SharedColumn::Meta {
+                labels,
+                timestamps,
+                inverse,
+                ..
+            } => (labels.len() * 4
+                + timestamps.len() * 8
+                + inverse.as_ref().map_or(0, |i| i.len() * 4))
+                as u64,
+        }
+    }
+}
+
+/// What a column-grain fetch produced: each requested column's payload
+/// plus the storage bytes attributable to it (for hit-savings
+/// accounting), and the whole fetch's I/O stats.
+pub struct FetchedColumns {
+    pub cols: Vec<(ColumnId, SharedColumn, u64)>,
+    pub fetched_bytes: u64,
+    pub extents: usize,
+    pub ios: usize,
+}
+
+/// How one column-grain serve was satisfied: every needed column's
+/// payload, plus how many came from cache vs a fresh fetch.
+pub struct ColumnServe {
+    pub cols: Vec<(ColumnId, Arc<SharedColumn>)>,
+    pub hits: usize,
+    /// Storage bytes the cached columns avoided re-reading.
+    pub saved_bytes: u64,
+    pub fetched_cols: usize,
+    pub fetched_bytes: u64,
+    pub extents: usize,
+    pub ios: usize,
+}
+
+type ColKey = (StripeKey, ColumnId);
+
+struct ColEntry {
+    payload: Arc<SharedColumn>,
+    /// Storage bytes this column's fetch paid (a hit saves these).
+    io_bytes: u64,
+    mem_bytes: u64,
+    last_used: u64,
+    charged: bool,
+}
+
+enum ColSlot {
+    Loading,
+    Ready(ColEntry),
+}
+
+struct ColState {
+    entries: HashMap<ColKey, ColSlot>,
+    tick: u64,
+}
+
+/// Budget-bounded map of decoded *columns*: the column-grain sibling of
+/// [`StripeBuffer`]. A session's projection is served from any wider
+/// cached decode — sessions with different projections, predicates, or
+/// epochs hit the same column entries. Eviction is popularity-aware:
+/// victims are the coldest (lowest live per-feature demand) unpinned
+/// columns, LRU among equals, and a column never evicts one hotter than
+/// itself.
+pub struct ColumnBuffer {
+    state: Mutex<ColState>,
+    cv: Condvar,
+    budget: Arc<MemoryBudget>,
+    pub evictions: Counter,
+}
+
+impl ColumnBuffer {
+    pub fn new(budget: Arc<MemoryBudget>) -> ColumnBuffer {
+        ColumnBuffer {
+            state: Mutex::new(ColState {
+                entries: HashMap::new(),
+                tick: 0,
+            }),
+            cv: Condvar::new(),
+            budget,
+            evictions: Counter::new(),
+        }
+    }
+
+    pub fn budget(&self) -> &Arc<MemoryBudget> {
+        &self.budget
+    }
+
+    pub fn len(&self) -> usize {
+        lock_or_recover(&self.state, "column buffer").entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serve one stripe's `needed` columns: cached columns are returned
+    /// directly, missing ones are fetched exactly once fleet-wide (the
+    /// fetch closure receives only the still-missing subset, so a serve
+    /// overlapping an in-flight load fetches just its private columns
+    /// and waits for the shared ones). `remaining` counts the *other*
+    /// registered serves still expected for this stripe — at zero, all
+    /// of the stripe's cached columns are dropped after this serve.
+    /// `demand` supplies the live per-column popularity used for
+    /// admission and eviction order.
+    pub fn serve<F>(
+        &self,
+        key: StripeKey,
+        needed: &[ColumnId],
+        remaining: usize,
+        demand: &dyn Fn(ColumnId) -> f64,
+        mut fetch: F,
+    ) -> Result<ColumnServe>
+    where
+        F: FnMut(&[ColumnId]) -> Result<FetchedColumns>,
+    {
+        let mut acquired: HashMap<ColumnId, Arc<SharedColumn>> =
+            HashMap::new();
+        let mut hits = 0usize;
+        let mut saved_bytes = 0u64;
+        let mut fetched_cols = 0usize;
+        let mut fetched_bytes = 0u64;
+        let mut extents = 0usize;
+        let mut ios = 0usize;
+        let mut st = lock_or_recover(&self.state, "column buffer");
+        loop {
+            let mut missing: Vec<ColumnId> = Vec::new();
+            let mut loading = false;
+            st.tick += 1;
+            let tick = st.tick;
+            for &c in needed {
+                if acquired.contains_key(&c) {
+                    continue;
+                }
+                match st.entries.get_mut(&(key, c)) {
+                    Some(ColSlot::Ready(e)) => {
+                        e.last_used = tick;
+                        hits += 1;
+                        saved_bytes += e.io_bytes;
+                        acquired.insert(c, e.payload.clone());
+                    }
+                    Some(ColSlot::Loading) => loading = true,
+                    None => missing.push(c),
+                }
+            }
+            if !missing.is_empty() {
+                for &c in &missing {
+                    st.entries.insert((key, c), ColSlot::Loading);
+                }
+                drop(st);
+                // Same unwind discipline as the stripe path: the guard
+                // clears every Loading slot this serve claimed and wakes
+                // waiters on fetch error or panic.
+                let mut cleanup = ColLoadGuard {
+                    buf: self,
+                    key,
+                    cols: missing.clone(),
+                    armed: true,
+                };
+                let got = fetch(&missing)?;
+                let mut locked =
+                    lock_or_recover(&self.state, "column buffer");
+                cleanup.armed = false;
+                fetched_bytes += got.fetched_bytes;
+                extents += got.extents;
+                ios += got.ios;
+                for (c, col, io_bytes) in got.cols {
+                    let payload = Arc::new(col);
+                    let mem = payload.mem_bytes();
+                    let charged = remaining > 0
+                        && self.reserve_evicting(
+                            &mut locked,
+                            mem,
+                            demand(c),
+                            demand,
+                        );
+                    if charged {
+                        locked.tick += 1;
+                        let t = locked.tick;
+                        locked.entries.insert(
+                            (key, c),
+                            ColSlot::Ready(ColEntry {
+                                payload: payload.clone(),
+                                io_bytes,
+                                mem_bytes: mem,
+                                last_used: t,
+                                charged: true,
+                            }),
+                        );
+                    } else {
+                        locked.entries.remove(&(key, c));
+                    }
+                    fetched_cols += 1;
+                    acquired.insert(c, payload);
+                }
+                // Defensive: a fetch that returned fewer columns than
+                // asked must not strand Loading slots.
+                for &c in &missing {
+                    if matches!(
+                        locked.entries.get(&(key, c)),
+                        Some(ColSlot::Loading)
+                    ) {
+                        locked.entries.remove(&(key, c));
+                    }
+                }
+                self.check_accounting(&locked);
+                st = locked;
+                self.cv.notify_all();
+                continue;
+            }
+            if loading {
+                st = wait_or_recover(&self.cv, st, "column buffer");
+                continue;
+            }
+            break;
+        }
+        if remaining == 0 {
+            // Last registered session for this stripe: free all of its
+            // cached columns now (in-flight loads are left alone).
+            let gone: Vec<ColKey> = st
+                .entries
+                .iter()
+                .filter(|((sk, _), slot)| {
+                    *sk == key && matches!(slot, ColSlot::Ready(_))
+                })
+                .map(|(k, _)| *k)
+                .collect();
+            for k in gone {
+                if let Some(ColSlot::Ready(e)) = st.entries.remove(&k) {
+                    if e.charged {
+                        self.budget.release(e.mem_bytes);
+                    }
+                }
+            }
+        }
+        self.check_accounting(&st);
+        drop(st);
+        let cols = needed
+            .iter()
+            .filter_map(|c| acquired.get(c).map(|p| (*c, p.clone())))
+            .collect();
+        Ok(ColumnServe {
+            cols,
+            hits,
+            saved_bytes,
+            fetched_cols,
+            fetched_bytes,
+            extents,
+            ios,
+        })
+    }
+
+    /// Drop every cached column of one stripe (its last registered
+    /// session went away without consuming it).
+    pub fn release_stripe(&self, key: StripeKey) {
+        let mut st = lock_or_recover(&self.state, "column buffer");
+        let gone: Vec<ColKey> = st
+            .entries
+            .iter()
+            .filter(|((sk, _), slot)| {
+                *sk == key && matches!(slot, ColSlot::Ready(_))
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        for k in gone {
+            if let Some(ColSlot::Ready(e)) = st.entries.remove(&k) {
+                if e.charged {
+                    self.budget.release(e.mem_bytes);
+                }
+            }
+        }
+        self.check_accounting(&st);
+    }
+
+    /// Same invariant as [`StripeBuffer::check_accounting`], at column
+    /// grain.
+    #[cfg(any(debug_assertions, loom))]
+    fn check_accounting(&self, st: &ColState) {
+        let charged: u64 = st
+            .entries
+            .values()
+            .map(|s| match s {
+                ColSlot::Ready(e) if e.charged => e.mem_bytes,
+                _ => 0,
+            })
+            .sum();
+        let used = self.budget.used();
+        assert!(
+            charged <= used,
+            "column buffer charged {charged} bytes > budget used {used}"
+        );
+        assert!(
+            used <= self.budget.total(),
+            "budget used {used} > total {}",
+            self.budget.total()
+        );
+    }
+
+    #[cfg(not(any(debug_assertions, loom)))]
+    fn check_accounting(&self, _st: &ColState) {}
+
+    /// Reserve `bytes`, evicting the coldest unpinned columns first
+    /// (lowest live demand, LRU among equals). Stops — and declines the
+    /// reservation — when the cheapest victim is hotter than the column
+    /// being admitted: popular columns are never displaced by unpopular
+    /// ones.
+    fn reserve_evicting(
+        &self,
+        st: &mut ColState,
+        bytes: u64,
+        incoming_demand: f64,
+        demand: &dyn Fn(ColumnId) -> f64,
+    ) -> bool {
+        loop {
+            if self.budget.try_reserve(bytes) {
+                return true;
+            }
+            let victim = st
+                .entries
+                .iter()
+                .filter_map(|(k, slot)| match slot {
+                    ColSlot::Ready(e)
+                        if e.charged
+                            && Arc::strong_count(&e.payload) == 1 =>
+                    {
+                        Some((*k, demand(k.1), e.last_used))
+                    }
+                    _ => None,
+                })
+                .min_by(|a, b| {
+                    a.1.partial_cmp(&b.1)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.2.cmp(&b.2))
+                });
+            let Some((k, victim_demand, _)) = victim else {
+                return false;
+            };
+            if victim_demand > incoming_demand {
+                return false;
+            }
+            if let Some(ColSlot::Ready(e)) = st.entries.remove(&k) {
+                self.budget.release(e.mem_bytes);
+                self.evictions.inc();
+            }
+        }
+    }
+}
+
+/// Unwind guard for the un-locked fetch window of
+/// [`ColumnBuffer::serve`]: clears every Loading slot the serve claimed
+/// and wakes waiters, so neither a fetch `Err` nor a panic strands
+/// peers.
+struct ColLoadGuard<'a> {
+    buf: &'a ColumnBuffer,
+    key: StripeKey,
+    cols: Vec<ColumnId>,
+    armed: bool,
+}
+
+impl Drop for ColLoadGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            let mut st =
+                lock_or_recover(&self.buf.state, "column load cleanup");
+            for &c in &self.cols {
+                if matches!(
+                    st.entries.get(&(self.key, c)),
+                    Some(ColSlot::Loading)
+                ) {
+                    st.entries.remove(&(self.key, c));
+                }
+            }
+            drop(st);
+            self.buf.cv.notify_all();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -541,6 +981,178 @@ mod tests {
         assert!(loader.join().is_err(), "loader should have panicked");
         assert_eq!(buf.len(), 1);
         assert_eq!(buf.budget().used(), 40);
+    }
+
+    fn col_of(bytes: usize) -> SharedColumn {
+        // Meta counts labels at 4 bytes each.
+        SharedColumn::Meta {
+            labels: vec![0.0; bytes / 4],
+            timestamps: Vec::new(),
+            inverse: None,
+            col_rows: bytes / 4,
+        }
+    }
+
+    fn fetched_cols(
+        ids: &[ColumnId],
+        bytes_each: usize,
+    ) -> FetchedColumns {
+        FetchedColumns {
+            cols: ids
+                .iter()
+                .map(|&c| (c, col_of(bytes_each), bytes_each as u64))
+                .collect(),
+            fetched_bytes: (ids.len() * bytes_each) as u64,
+            extents: ids.len(),
+            ios: 1,
+        }
+    }
+
+    fn feat(id: u32) -> ColumnId {
+        ColumnId::Feature(crate::schema::FeatureId(id))
+    }
+
+    const FLAT: &dyn Fn(ColumnId) -> f64 = &|_| 1.0;
+
+    #[test]
+    fn budget_tracks_peak() {
+        let b = MemoryBudget::new(100);
+        assert!(b.try_reserve(60));
+        b.release(60);
+        assert!(b.try_reserve(30));
+        assert_eq!(b.used(), 30);
+        assert_eq!(b.peak(), 60, "peak survives release");
+    }
+
+    #[test]
+    fn column_serve_hits_wider_cached_decode() {
+        let buf = ColumnBuffer::new(MemoryBudget::new(1 << 20));
+        // Session A decodes Meta + features 1,2.
+        let wide = [ColumnId::Meta, feat(1), feat(2)];
+        let out = buf
+            .serve(key(1, 0), &wide, 2, FLAT, |miss| {
+                Ok(fetched_cols(miss, 400))
+            })
+            .unwrap();
+        assert_eq!(out.fetched_cols, 3);
+        assert_eq!(out.hits, 0);
+        assert_eq!(buf.len(), 3);
+        // Session B projects {2, 3}: hits Meta + 2 from A's wider
+        // decode, fetches only 3.
+        let narrow = [ColumnId::Meta, feat(2), feat(3)];
+        let out = buf
+            .serve(key(1, 0), &narrow, 1, FLAT, |miss| {
+                assert_eq!(miss, &[feat(3)]);
+                Ok(fetched_cols(miss, 400))
+            })
+            .unwrap();
+        assert_eq!(out.hits, 2);
+        assert_eq!(out.saved_bytes, 800);
+        assert_eq!(out.fetched_cols, 1);
+        assert_eq!(out.cols.len(), 3);
+    }
+
+    #[test]
+    fn column_last_consumer_frees_stripe() {
+        let buf = ColumnBuffer::new(MemoryBudget::new(1 << 20));
+        let cols = [ColumnId::Meta, feat(1)];
+        buf.serve(key(1, 0), &cols, 1, FLAT, |m| {
+            Ok(fetched_cols(m, 100))
+        })
+        .unwrap();
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf.budget().used(), 200);
+        // Last interested serve: the whole stripe's columns drop.
+        let out = buf
+            .serve(key(1, 0), &cols, 0, FLAT, |_| {
+                panic!("must not refetch")
+            })
+            .unwrap();
+        assert_eq!(out.hits, 2);
+        assert!(buf.is_empty());
+        assert_eq!(buf.budget().used(), 0);
+    }
+
+    #[test]
+    fn column_eviction_prefers_cold_columns() {
+        let buf = ColumnBuffer::new(MemoryBudget::new(1000));
+        let demand = |c: ColumnId| match c {
+            ColumnId::Feature(f) => f.0 as f64,
+            ColumnId::Meta => 100.0,
+        };
+        // Hot feature 9 and cold feature 1, both unpinned.
+        drop(
+            buf.serve(key(1, 0), &[feat(9)], 2, &demand, |m| {
+                Ok(fetched_cols(m, 400))
+            })
+            .unwrap(),
+        );
+        drop(
+            buf.serve(key(1, 0), &[feat(1)], 2, &demand, |m| {
+                Ok(fetched_cols(m, 400))
+            })
+            .unwrap(),
+        );
+        // Feature 5 needs room: the cold column (1) goes, the hot one
+        // (9) stays.
+        drop(
+            buf.serve(key(1, 1), &[feat(5)], 2, &demand, |m| {
+                Ok(fetched_cols(m, 400))
+            })
+            .unwrap(),
+        );
+        assert_eq!(buf.evictions.get(), 1);
+        let st = lock_or_recover(&buf.state, "test");
+        assert!(st.entries.contains_key(&(key(1, 0), feat(9))));
+        assert!(!st.entries.contains_key(&(key(1, 0), feat(1))));
+        drop(st);
+        // A colder column (0) cannot displace hotter residents: served
+        // uncached instead.
+        drop(
+            buf.serve(key(1, 2), &[feat(0)], 2, &demand, |m| {
+                Ok(fetched_cols(m, 400))
+            })
+            .unwrap(),
+        );
+        assert_eq!(buf.evictions.get(), 1, "no further eviction");
+        assert_eq!(buf.len(), 2, "feat 0 not admitted");
+    }
+
+    #[test]
+    fn column_release_stripe_frees_budget() {
+        let buf = ColumnBuffer::new(MemoryBudget::new(1 << 20));
+        buf.serve(key(3, 0), &[ColumnId::Meta, feat(1)], 5, FLAT, |m| {
+            Ok(fetched_cols(m, 800))
+        })
+        .unwrap();
+        buf.serve(key(3, 1), &[ColumnId::Meta], 5, FLAT, |m| {
+            Ok(fetched_cols(m, 800))
+        })
+        .unwrap();
+        assert_eq!(buf.budget().used(), 2400);
+        buf.release_stripe(key(3, 0));
+        assert_eq!(buf.budget().used(), 800, "other stripe survives");
+        assert_eq!(buf.len(), 1);
+        // Releasing a missing stripe is a no-op.
+        buf.release_stripe(key(3, 9));
+    }
+
+    #[test]
+    fn column_fetch_error_clears_loading_slots() {
+        let buf = ColumnBuffer::new(MemoryBudget::new(1 << 20));
+        let cols = [ColumnId::Meta, feat(1)];
+        let err = buf.serve(key(2, 0), &cols, 1, FLAT, |_| {
+            anyhow::bail!("storage down")
+        });
+        assert!(err.is_err());
+        assert!(buf.is_empty());
+        let ok = buf
+            .serve(key(2, 0), &cols, 1, FLAT, |m| {
+                Ok(fetched_cols(m, 40))
+            })
+            .unwrap();
+        assert_eq!(ok.fetched_cols, 2);
+        assert_eq!(buf.len(), 2);
     }
 
     #[test]

@@ -10,13 +10,26 @@
 //! Per-session semantics — projection, predicate / selection vectors,
 //! transform DAG — apply *after* the shared decode, so outputs are
 //! byte-identical to private scans while the storage cost is paid once.
+//!
+//! The default sharing grain is the **column** ([`ColumnBuffer`],
+//! served through [`ReadBroker::get_columns`]): the paper's §5–6
+//! observation is *feature-level* skew, so per-(file, stripe, column)
+//! [`SharedColumn`] payloads let sessions with different projections,
+//! predicates, and epochs hit the same cached columns, with live
+//! per-feature demand ([`crate::popularity::AccessStats`]) driving
+//! admission and eviction instead of pure LRU. The stripe-grain path
+//! remains as the `column_sharing = false` ablation.
 
 pub mod buffer;
 
-pub use buffer::{FetchedStripe, MemoryBudget, ServeOutcome, StripeBuffer};
+pub use buffer::{
+    ColumnBuffer, ColumnId, ColumnServe, FetchedColumns, FetchedStripe,
+    MemoryBudget, ServeOutcome, SharedColumn, StripeBuffer,
+};
 use buffer::StripeKey;
 
 use crate::data::ColumnarBatch;
+use crate::popularity::AccessStats;
 use crate::dwrf::plan::COALESCE_WINDOW;
 use crate::dwrf::{
     DecodeMode, DedupStripe, DwrfReader, Encoding, FileMeta, IoRange,
@@ -120,8 +133,8 @@ pub struct Served {
     pub fetched_bytes: u64,
 }
 
-/// Broker-level counters: the cross-job reuse the paper's §7.5 sharing
-/// discussion is after.
+/// Broker-level counters: the cross-job reuse the paper's §5–6 sharing
+/// observations are after.
 #[derive(Default)]
 pub struct BrokerMetrics {
     /// Stripe serves satisfied from the shared buffer.
@@ -134,6 +147,14 @@ pub struct BrokerMetrics {
     pub fetched_bytes: Counter,
     /// Physical I/Os avoided by per-file read coalescing.
     pub coalesced_ios: Counter,
+    /// Column-grain serves satisfied from the shared column cache —
+    /// including hits on columns some *wider* projection decoded.
+    pub column_hits: Counter,
+    /// Columns fetched + decoded through the column-grain path.
+    pub column_fetches: Counter,
+    /// Storage bytes column hits avoided re-reading (bytes served from
+    /// wider cached decodes).
+    pub column_saved_bytes: Counter,
 }
 
 impl BrokerMetrics {
@@ -184,6 +205,12 @@ pub struct ReadBroker {
     footers: Mutex<HashMap<FileId, Arc<FileMeta>>>,
     state: Mutex<BrokerState>,
     buffer: StripeBuffer,
+    /// Column-grain sibling of `buffer` (the `column_sharing` path);
+    /// both charge the same [`MemoryBudget`].
+    columns: ColumnBuffer,
+    /// Live per-feature demand, fed by column serves; drives the column
+    /// cache's admission and eviction order.
+    popularity: Arc<AccessStats>,
     pub metrics: BrokerMetrics,
     /// Observability sink for traced sessions: cold-path storage
     /// fetch + decode work records `fetch` spans here. One handle —
@@ -217,10 +244,17 @@ impl ReadBroker {
             cluster,
             footers: Mutex::new(HashMap::new()),
             state: Mutex::new(BrokerState::default()),
-            buffer: StripeBuffer::new(budget),
+            buffer: StripeBuffer::new(budget.clone()),
+            columns: ColumnBuffer::new(budget),
+            popularity: Arc::new(AccessStats::default()),
             metrics: BrokerMetrics::default(),
             obs: Mutex::new(None),
         })
+    }
+
+    /// The live per-feature demand tracker column serves feed.
+    pub fn popularity(&self) -> &Arc<AccessStats> {
+        &self.popularity
     }
 
     /// Attach an observability sink: subsequent cold-path stripe
@@ -247,6 +281,11 @@ impl ReadBroker {
     /// Stripes currently resident in the shared buffer.
     pub fn buffered_stripes(&self) -> usize {
         self.buffer.len()
+    }
+
+    /// Columns currently resident in the shared column cache.
+    pub fn buffered_columns(&self) -> usize {
+        self.columns.len()
     }
 
     /// Fetch-once footer cache: control-plane I/O is shared across
@@ -340,6 +379,7 @@ impl ReadBroker {
         drop(st);
         for key in freed {
             self.buffer.release(key);
+            self.columns.release_stripe(key);
         }
     }
 
@@ -523,6 +563,191 @@ impl ReadBroker {
             }
         }
     }
+
+    /// Serve one stripe to a registered session at *column* grain: each
+    /// of the session's projected columns (plus the stripe's row meta)
+    /// is fetched and decoded at most once fleet-wide, whatever wider or
+    /// narrower projections first brought it in. Cached columns from any
+    /// earlier decode are reused directly; only the still-missing
+    /// columns are fetched. The caller reassembles its batch with
+    /// [`DwrfReader::assemble_columnar`] / [`DwrfReader::assemble_dedup`]
+    /// and applies predicate / selection / transforms downstream —
+    /// byte-identical to a private scan. Not available for `Map`
+    /// encoding (row-wise layout; callers fall back to
+    /// [`ReadBroker::get_stripe`]).
+    pub fn get_columns(
+        &self,
+        session: BrokerSessionId,
+        file: FileId,
+        stripe: usize,
+    ) -> Result<ServedColumns> {
+        let key: StripeKey = (file, stripe);
+        let (feats, table, consumed, others) = {
+            let mut st = lock_or_recover(&self.state, "broker state");
+            let sess = st
+                .sessions
+                .get_mut(&session)
+                .context("unknown broker session")?;
+            let feats: Vec<FeatureId> =
+                sess.projection.iter().copied().collect();
+            let consumed = sess
+                .remaining
+                .get_mut(&file)
+                .is_some_and(|s| s.remove(&stripe));
+            // Same outstanding-interest rule as the stripe path: the
+            // count settles only after the serve, so racing sessions see
+            // each other and the loader caches for the rest.
+            let count = st.interest.get(&key).copied().unwrap_or(0);
+            let others = if consumed {
+                count.saturating_sub(1)
+            } else {
+                count
+            };
+            let table = st
+                .tables
+                .get(&file)
+                .cloned()
+                .unwrap_or_else(|| "default".to_string());
+            (feats, table, consumed, others)
+        };
+
+        let meta = self.footer(file)?;
+        if stripe >= meta.stripes.len() {
+            bail!("stripe {stripe} out of range for {file:?}");
+        }
+        if meta.encoding == Encoding::Map {
+            bail!("column-grain serve on Map-encoded {file:?}");
+        }
+        let reader = DwrfReader::from_meta((*meta).clone(), &table);
+        let proj = Projection::new(feats.iter().copied());
+        let (dense, sparse) = reader.projected_columns(stripe, &proj);
+        let mut needed: Vec<ColumnId> = vec![ColumnId::Meta];
+        needed.extend(dense.into_iter().map(ColumnId::Feature));
+        needed.extend(sparse.into_iter().map(ColumnId::Feature));
+
+        let obs = lock_or_recover(&self.obs, "broker obs").clone();
+        // Row meta backs every projection of the stripe: pin it above
+        // any feature column in the eviction order.
+        let demand = |c: ColumnId| match c {
+            ColumnId::Meta => f64::MAX,
+            ColumnId::Feature(f) => self.popularity.demand(f),
+        };
+        let fetch = |missing: &[ColumnId]| -> Result<FetchedColumns> {
+            let t_fetch = Instant::now();
+            let extents = reader.column_ios(stripe, missing)?;
+            let n_extents = extents.len();
+            let (bufs, n_ios) = self.cluster.execute_ios_merged(
+                file,
+                &extents,
+                Some(COALESCE_WINDOW),
+            )?;
+            let fetched_bytes = bufs.bytes();
+            let cols = reader.decode_columns(
+                stripe,
+                &bufs,
+                missing,
+                DecodeMode { fast: true },
+            )?;
+            if let Some(h) = &obs {
+                h.span(
+                    BROKER_TRACE_LANE,
+                    stripe as u64,
+                    Stage::Fetch,
+                    t_fetch,
+                );
+            }
+            Ok(FetchedColumns {
+                cols,
+                fetched_bytes,
+                extents: n_extents,
+                ios: n_ios,
+            })
+        };
+        let outcome =
+            match self.columns.serve(key, &needed, others, &demand, fetch) {
+                Ok(o) => o,
+                Err(e) => {
+                    if consumed {
+                        // Roll back the consumption (same retry contract
+                        // as the stripe path).
+                        let mut st =
+                            lock_or_recover(&self.state, "broker state");
+                        if let Some(sess) = st.sessions.get_mut(&session) {
+                            sess.remaining
+                                .entry(file)
+                                .or_default()
+                                .insert(stripe);
+                        }
+                    }
+                    return Err(e);
+                }
+            };
+        // Feed the live demand tracker: every column this session
+        // demanded counts, hit or miss — demand is about what sessions
+        // *read*, not what storage served.
+        for (c, payload) in &outcome.cols {
+            if let ColumnId::Feature(f) = c {
+                self.popularity.record_serve(*f, payload.mem_bytes());
+            }
+        }
+        let fully_cached = outcome.fetched_cols == 0;
+        {
+            let mut st = lock_or_recover(&self.state, "broker state");
+            if let Some(sess) = st.sessions.get_mut(&session) {
+                if fully_cached {
+                    sess.shared_reads += 1;
+                } else {
+                    sess.broker_misses += 1;
+                }
+            }
+            if consumed {
+                if let Some(n) = st.interest.get_mut(&key) {
+                    *n = n.saturating_sub(1);
+                    if *n == 0 {
+                        st.interest.remove(&key);
+                    }
+                }
+            }
+            let wanted = st.interest.contains_key(&key);
+            drop(st);
+            if !wanted {
+                self.columns.release_stripe(key);
+            }
+        }
+        self.metrics.column_hits.add(outcome.hits as u64);
+        self.metrics.column_fetches.add(outcome.fetched_cols as u64);
+        self.metrics.column_saved_bytes.add(outcome.saved_bytes);
+        if fully_cached {
+            self.metrics.shared_reads.inc();
+            self.metrics.saved_bytes.add(outcome.saved_bytes);
+        } else {
+            self.metrics.broker_misses.inc();
+            self.metrics.fetched_bytes.add(outcome.fetched_bytes);
+            self.metrics
+                .coalesced_ios
+                .add(outcome.extents.saturating_sub(outcome.ios) as u64);
+        }
+        Ok(ServedColumns {
+            cols: outcome.cols,
+            from_buffer: fully_cached,
+            hits: outcome.hits,
+            fetched_cols: outcome.fetched_cols,
+            fetched_bytes: outcome.fetched_bytes,
+        })
+    }
+}
+
+/// Result of one column-grain serve: the session's projected columns
+/// (plus row meta), each an `Arc` into the shared cache.
+pub struct ServedColumns {
+    pub cols: Vec<(ColumnId, Arc<SharedColumn>)>,
+    /// Whether *every* column came from the shared cache.
+    pub from_buffer: bool,
+    /// Columns served from cache / fetched by this serve.
+    pub hits: usize,
+    pub fetched_cols: usize,
+    /// Storage bytes this serve fetched (0 when fully cached).
+    pub fetched_bytes: u64,
 }
 
 #[cfg(test)]

@@ -17,12 +17,14 @@ use super::spec::{SessionSpec, WireCompression};
 use super::split::Split;
 use super::worker::WireBatch;
 use crate::broker::MemoryBudget;
+use crate::data::ColumnarBatch;
 use crate::dedup::Fnv64;
 use crate::filter::RowPredicate;
 use crate::metrics::Counter;
+use crate::schema::FeatureId;
 use crate::sync::{lock_or_recover, Mutex};
 use crate::transforms::dag::InputKind;
-use crate::transforms::{Node, Op};
+use crate::transforms::{Node, Op, TransformDag, Value};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -63,6 +65,7 @@ pub fn session_fingerprint(spec: &SessionSpec) -> u64 {
     h.write_u8(spec.pipeline.pushdown as u8);
     h.write_u8(spec.pipeline.row_group_pruning as u8);
     h.write_u8(spec.pipeline.shared_reads as u8);
+    h.write_u8(spec.pipeline.column_sharing as u8);
     h.write_u8(spec.pipeline.coalesce.is_some() as u8);
     h.write_u64(spec.pipeline.coalesce.unwrap_or(0));
     // Wire compression changes the cached bytes themselves (cache entries
@@ -399,6 +402,281 @@ impl TensorCache {
     }
 }
 
+/// Canonical per-node fingerprints of a DAG, indexed by node. Unlike the
+/// raw node encoding inside [`session_fingerprint`], these are
+/// node-index-*independent*: a node's fingerprint folds its own kind and
+/// parameters with its inputs' *fingerprints* (not their indices), so
+/// structurally identical prefixes built in different construction
+/// orders — or embedded in different sessions' DAGs — agree. That is the
+/// property the fleet-wide transform cache keys on: two jobs sharing a
+/// DAG prefix share the prefix's fingerprint no matter what else their
+/// DAGs contain.
+pub fn dag_node_fingerprints(dag: &TransformDag) -> Vec<u64> {
+    let mut fps: Vec<u64> = Vec::with_capacity(dag.nodes.len());
+    for node in &dag.nodes {
+        let mut h = Fnv64::new();
+        match node {
+            Node::Input { id, kind } => {
+                h.write_u8(0);
+                h.write_u32(id.0);
+                h.write_u8(match kind {
+                    InputKind::Auto => 0,
+                    InputKind::Dense => 1,
+                    InputKind::Sparse => 2,
+                });
+            }
+            Node::Apply { op, inputs } => {
+                h.write_u8(1);
+                eat_op(&mut h, op);
+                h.write_u64(inputs.len() as u64);
+                // Nodes are topological by construction, so every input's
+                // fingerprint is already computed.
+                for &i in inputs {
+                    h.write_u64(fps[i]);
+                }
+            }
+        }
+        fps.push(h.finish());
+    }
+    fps
+}
+
+/// The canonical fingerprint of the sub-DAG rooted at `node` — the
+/// DAG-prefix half of the transform-cache key, factored out of
+/// [`session_fingerprint`] so reuse works *across* sessions.
+pub fn dag_prefix_fingerprint(dag: &TransformDag, node: usize) -> u64 {
+    dag_node_fingerprints(dag)[node]
+}
+
+/// The raw input features the sub-DAG rooted at `node` reads, sorted and
+/// deduplicated — the columns whose bytes form the content half of the
+/// cache key (see [`batch_content_fingerprint`]).
+pub fn prefix_inputs(dag: &TransformDag, node: usize) -> Vec<FeatureId> {
+    let mut seen = vec![false; dag.nodes.len()];
+    let mut stack = vec![node];
+    let mut feats: Vec<FeatureId> = Vec::new();
+    while let Some(i) = stack.pop() {
+        if seen[i] {
+            continue;
+        }
+        seen[i] = true;
+        match &dag.nodes[i] {
+            Node::Input { id, .. } => feats.push(*id),
+            Node::Apply { inputs, .. } => {
+                stack.extend(inputs.iter().copied());
+            }
+        }
+    }
+    feats.sort_unstable();
+    feats.dedup();
+    feats
+}
+
+/// Content fingerprint of the columns `feats` in `batch` — exactly the
+/// domain [`TransformDag::execute`] reads for a sub-DAG over those
+/// inputs: `num_rows` plus each projected column's presence bitmap and
+/// payload bytes (absent columns hash a marker; the executor
+/// materializes them as typed defaults, which `num_rows` pins down).
+/// Every transform op is deterministic, so equal fingerprints under one
+/// DAG-prefix fingerprint mean byte-identical transform outputs.
+pub fn batch_content_fingerprint(
+    batch: &ColumnarBatch,
+    feats: &[FeatureId],
+) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(batch.num_rows as u64);
+    h.write_u64(feats.len() as u64);
+    for &f in feats {
+        h.write_u32(f.0);
+        if let Some(c) = batch.dense.iter().find(|c| c.id == f) {
+            h.write_u8(1);
+            for &w in c.present.words() {
+                h.write_u64(w);
+            }
+            for &v in &c.values {
+                h.write_f32(v);
+            }
+        } else if let Some(c) = batch.sparse.iter().find(|c| c.id == f) {
+            h.write_u8(2);
+            for &o in &c.offsets {
+                h.write_u32(o);
+            }
+            for &i in &c.ids {
+                h.write_u64(i);
+            }
+            match &c.scores {
+                None => h.write_u8(0),
+                Some(s) => {
+                    h.write_u8(1);
+                    for &v in s {
+                        h.write_f32(v);
+                    }
+                }
+            }
+        } else {
+            h.write_u8(0);
+        }
+    }
+    h.finish()
+}
+
+/// Heap bytes of one transform output column.
+fn value_bytes(v: &Value) -> u64 {
+    match v {
+        Value::Dense(d) => 4 * d.len() as u64,
+        Value::Sparse {
+            offsets,
+            ids,
+            scores,
+        } => {
+            4 * offsets.len() as u64
+                + 8 * ids.len() as u64
+                + scores.as_ref().map_or(0, |s| 4 * s.len() as u64)
+        }
+    }
+}
+
+struct XEntry {
+    value: Arc<Value>,
+    bytes: u64,
+    last_used: u64,
+}
+
+struct XInner {
+    map: HashMap<(u64, u64), XEntry>,
+    used: u64,
+    tick: u64,
+}
+
+/// Fleet-wide cache of transform *outputs*, keyed by
+/// (content fingerprint of the producing sub-DAG's input columns,
+/// canonical DAG-prefix fingerprint). Sessions sharing a DAG prefix —
+/// the common case when jobs iterate on a production baseline — run each
+/// unique payload through the prefix once, extending the dedup-aware
+/// within-session reuse of RecD across jobs. LRU under a byte budget,
+/// which may be private or a [`MemoryBudget`] shared with the broker and
+/// tensor cache.
+pub struct TransformCache {
+    inner: Mutex<XInner>,
+    budget: Arc<MemoryBudget>,
+    pub hits: Counter,
+    pub misses: Counter,
+    pub inserted_bytes: Counter,
+    pub evictions: Counter,
+    pub evicted_bytes: Counter,
+}
+
+impl TransformCache {
+    /// A cache with its own private budget of `budget_bytes`.
+    pub fn new(budget_bytes: u64) -> Arc<TransformCache> {
+        Self::with_budget(MemoryBudget::new(budget_bytes))
+    }
+
+    /// A cache charging a (possibly shared) [`MemoryBudget`]; under
+    /// pressure it evicts its own entries only, like [`TensorCache`].
+    pub fn with_budget(budget: Arc<MemoryBudget>) -> Arc<TransformCache> {
+        Arc::new(TransformCache {
+            inner: Mutex::new(XInner {
+                map: HashMap::new(),
+                used: 0,
+                tick: 0,
+            }),
+            budget,
+            hits: Counter::new(),
+            misses: Counter::new(),
+            inserted_bytes: Counter::new(),
+            evictions: Counter::new(),
+            evicted_bytes: Counter::new(),
+        })
+    }
+
+    /// Cached output for (input-content, DAG-prefix), if any.
+    pub fn get(&self, content_fp: u64, prefix_fp: u64) -> Option<Arc<Value>> {
+        let mut inner = lock_or_recover(&self.inner, "transform cache");
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(&(content_fp, prefix_fp)) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.inc();
+                Some(e.value.clone())
+            }
+            None => {
+                self.misses.inc();
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly computed output, evicting this cache's own LRU
+    /// entries to fit the budget. Returns whether it was stored.
+    pub fn put(
+        &self,
+        content_fp: u64,
+        prefix_fp: u64,
+        value: Arc<Value>,
+    ) -> bool {
+        let bytes = value_bytes(&value);
+        if bytes > self.budget.total() {
+            return false;
+        }
+        let key = (content_fp, prefix_fp);
+        let mut inner = lock_or_recover(&self.inner, "transform cache");
+        if let Some(old) = inner.map.remove(&key) {
+            inner.used -= old.bytes;
+            self.budget.release(old.bytes);
+        }
+        while !self.budget.try_reserve(bytes) {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let Some(victim) = victim else { return false };
+            let e = inner.map.remove(&victim).expect("victim present");
+            inner.used -= e.bytes;
+            self.budget.release(e.bytes);
+            self.evictions.inc();
+            self.evicted_bytes.add(e.bytes);
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(
+            key,
+            XEntry {
+                value,
+                bytes,
+                last_used: tick,
+            },
+        );
+        inner.used += bytes;
+        self.inserted_bytes.add(bytes);
+        true
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        lock_or_recover(&self.inner, "transform cache").used
+    }
+
+    pub fn len(&self) -> usize {
+        lock_or_recover(&self.inner, "transform cache").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.get() as f64;
+        let m = self.misses.get() as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -644,5 +922,150 @@ mod tests {
         assert_eq!(cache.hits.get(), 3);
         assert_eq!(cache.misses.get(), 1);
         assert!((cache.hit_rate() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fingerprint_covers_column_sharing() {
+        // The toggle changes which cached transform outputs a session may
+        // share, so twins differing only in it must not collide.
+        let a = spec("t", &[1, 2], 32);
+        let mut b = spec("t", &[1, 2], 32);
+        b.pipeline.column_sharing = !b.pipeline.column_sharing;
+        assert_ne!(session_fingerprint(&a), session_fingerprint(&b));
+    }
+
+    #[test]
+    fn dag_prefix_fingerprint_is_construction_order_independent() {
+        use crate::transforms::Op;
+        // Same logical prefix (FirstX over feature 5) embedded at
+        // different node indices in two different DAGs.
+        let mut a = TransformDag::default();
+        let ai = a.input(FeatureId(5));
+        let ax = a.apply(Op::FirstX { x: 3 }, vec![ai]);
+        a.output(FeatureId(5), ax);
+
+        let mut b = TransformDag::default();
+        let noise = b.input(FeatureId(9)); // shifts every later index
+        b.output(FeatureId(9), noise);
+        let bi = b.input(FeatureId(5));
+        let bx = b.apply(Op::FirstX { x: 3 }, vec![bi]);
+        b.output(FeatureId(5), bx);
+
+        assert_eq!(
+            dag_prefix_fingerprint(&a, ax),
+            dag_prefix_fingerprint(&b, bx),
+            "shared prefix must agree across sessions"
+        );
+        // Parameter change breaks the match.
+        let mut c = TransformDag::default();
+        let ci = c.input(FeatureId(5));
+        let cx = c.apply(Op::FirstX { x: 4 }, vec![ci]);
+        c.output(FeatureId(5), cx);
+        assert_ne!(
+            dag_prefix_fingerprint(&a, ax),
+            dag_prefix_fingerprint(&c, cx)
+        );
+        // A bare input differs from an op over it.
+        assert_ne!(
+            dag_prefix_fingerprint(&a, ai),
+            dag_prefix_fingerprint(&a, ax)
+        );
+    }
+
+    #[test]
+    fn prefix_inputs_walks_only_the_subdag() {
+        use crate::transforms::Op;
+        let mut dag = TransformDag::default();
+        let a = dag.input(FeatureId(1));
+        let b = dag.input(FeatureId(2));
+        let other = dag.input(FeatureId(7));
+        let x = dag.apply(Op::Cartesian, vec![a, b]);
+        dag.output(FeatureId(100), x);
+        dag.output(FeatureId(7), other);
+        assert_eq!(prefix_inputs(&dag, x), vec![FeatureId(1), FeatureId(2)]);
+        assert_eq!(prefix_inputs(&dag, other), vec![FeatureId(7)]);
+    }
+
+    #[test]
+    fn content_fingerprint_tracks_projected_columns_only() {
+        use crate::data::{Bitmap, DenseColumn, SparseColumn};
+        let mk = |val: f32, unrelated: u64| {
+            let mut present = Bitmap::new(4);
+            for i in 0..4 {
+                present.set(i);
+            }
+            ColumnarBatch {
+                num_rows: 4,
+                dense: vec![DenseColumn {
+                    id: FeatureId(1),
+                    present,
+                    values: vec![val; 4],
+                }],
+                sparse: vec![SparseColumn {
+                    id: FeatureId(2),
+                    offsets: vec![0, 1, 2, 3, 4],
+                    ids: vec![unrelated; 4],
+                    scores: None,
+                }],
+                labels: vec![0.0; 4],
+                timestamps: vec![0; 4],
+                selection: None,
+            }
+        };
+        let feats = [FeatureId(1)];
+        let a = batch_content_fingerprint(&mk(1.0, 10), &feats);
+        assert_eq!(a, batch_content_fingerprint(&mk(1.0, 99), &feats),
+            "columns outside the prefix's inputs must not matter");
+        assert_ne!(a, batch_content_fingerprint(&mk(2.0, 10), &feats),
+            "payload bytes must matter");
+        // Absent column hashes differently from any present one.
+        let both = [FeatureId(1), FeatureId(3)];
+        let c = batch_content_fingerprint(&mk(1.0, 10), &both);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn transform_cache_roundtrip_and_eviction() {
+        let cache = TransformCache::new(40);
+        assert!(cache.get(1, 1).is_none());
+        let v = Arc::new(Value::Dense(vec![1.0; 5])); // 20 bytes
+        assert!(cache.put(1, 1, v.clone()));
+        assert_eq!(cache.used_bytes(), 20);
+        assert_eq!(cache.get(1, 1).unwrap(), v);
+        // Same content under a different prefix is a different entry.
+        assert!(cache.get(1, 2).is_none());
+        assert!(cache.put(1, 2, Arc::new(Value::Dense(vec![2.0; 5]))));
+        assert_eq!(cache.len(), 2);
+        // Touch (1,1) so (1,2) is the LRU victim for the next insert.
+        assert!(cache.get(1, 1).is_some());
+        assert!(cache.put(3, 3, Arc::new(Value::Dense(vec![3.0; 5]))));
+        assert_eq!(cache.evictions.get(), 1);
+        assert!(cache.get(1, 2).is_none(), "LRU entry evicted");
+        assert!(cache.get(1, 1).is_some(), "hot entry survives");
+        // Oversized values are refused outright.
+        assert!(!cache.put(9, 9, Arc::new(Value::Dense(vec![0.0; 100]))));
+    }
+
+    #[test]
+    fn transform_cache_shares_budget() {
+        let budget = MemoryBudget::new(40);
+        let cache = TransformCache::with_budget(budget.clone());
+        assert!(budget.try_reserve(20)); // external consumer
+        assert!(cache.put(
+            1,
+            1,
+            Arc::new(Value::Sparse {
+                offsets: vec![0, 1], // 2×4 bytes
+                ids: vec![7],        // 1×8 bytes
+                scores: None,
+            })
+        ));
+        assert_eq!(budget.used(), 36, "20 external + 16 cached");
+        // A 24-byte value cannot fit next to the external 20 even after
+        // evicting every own entry: the insert fails, the cache empties,
+        // and the external reservation is untouched.
+        assert!(!cache.put(2, 2, Arc::new(Value::Dense(vec![0.0; 6]))));
+        assert_eq!(cache.used_bytes(), 0);
+        assert_eq!(budget.used(), 20);
     }
 }

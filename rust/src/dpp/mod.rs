@@ -19,8 +19,14 @@
 //! Cross-job sharing: a Master built with [`Master::new_shared`]
 //! attaches the session to a [`crate::broker::ReadBroker`] so workers
 //! fetch stripes through the shared decode-once path
-//! (`PipelineOptions::shared_reads`), and the [`TensorCache`] can charge
-//! the same [`crate::broker::MemoryBudget`] as the broker's buffers.
+//! (`PipelineOptions::shared_reads`) — at per-(file, stripe, column)
+//! grain when `PipelineOptions::column_sharing` is on, so overlapping
+//! projections serve from any wider cached decode — and the
+//! [`TensorCache`] / [`TransformCache`] can charge the same
+//! [`crate::broker::MemoryBudget`] as the broker's buffers. The
+//! [`TransformCache`] extends reuse into the transform stage: outputs
+//! keyed by (input-content, DAG-prefix) fingerprints are computed once
+//! across every session sharing a DAG prefix.
 
 pub mod cache;
 pub mod client;
@@ -33,7 +39,10 @@ pub mod tensor;
 pub mod transport;
 pub mod worker;
 
-pub use cache::{session_fingerprint, TensorCache};
+pub use cache::{
+    batch_content_fingerprint, dag_node_fingerprints, dag_prefix_fingerprint,
+    prefix_inputs, session_fingerprint, TensorCache, TransformCache,
+};
 pub use client::Client;
 pub use codec::{
     decode_wire, decode_wire_dedup, train_wire_dict, WirePacker, WireUnpacker,

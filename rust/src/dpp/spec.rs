@@ -109,6 +109,16 @@ pub struct PipelineOptions {
     /// outputs are byte-identical either way. No effect without an
     /// attached broker.
     pub shared_reads: bool,
+    /// Column-grain sharing (requires `shared_reads` + a broker): workers
+    /// fetch per-(file, stripe, column) payloads through the broker's
+    /// popularity-aware column cache, so sessions with overlapping — but
+    /// different — projections serve their columns from any wider cached
+    /// decode instead of holding whole private stripes. `false` falls
+    /// back to stripe-grain sharing (the PR 3 behavior, kept as the
+    /// ablation). Outputs are byte-identical either way, but the toggle
+    /// changes which cached transform outputs a session may legally
+    /// share, so it *is* part of the session fingerprint.
+    pub column_sharing: bool,
     /// Emit observability spans ([`crate::obs`]): when on, `run_session`
     /// allocates an `Obs` sink (unless the caller supplied one) and
     /// Master/workers/broker/clients record per-stage spans + latency
@@ -141,6 +151,7 @@ impl Default for PipelineOptions {
             pushdown: true,
             row_group_pruning: true,
             shared_reads: true,
+            column_sharing: true,
             // Off by default: tracing is opt-in (CLI `--trace`, benches,
             // tests) so the hot path stays span-free out of the box.
             tracing: false,
@@ -161,6 +172,7 @@ impl PipelineOptions {
             pushdown: false,
             row_group_pruning: false,
             shared_reads: false,
+            column_sharing: false,
             tracing: false,
             wire_compression: WireCompression::Off,
             max_frame_bytes: MAX_FRAME_BYTES,
@@ -306,6 +318,7 @@ mod tests {
         assert!(p.pushdown);
         assert!(p.row_group_pruning);
         assert!(p.shared_reads);
+        assert!(p.column_sharing);
         assert!(!p.tracing, "tracing is opt-in, not a default");
         assert!(p.wire_compression.is_on());
         assert!(matches!(
@@ -324,6 +337,7 @@ mod tests {
         assert!(!b.pushdown);
         assert!(!b.row_group_pruning);
         assert!(!b.shared_reads);
+        assert!(!b.column_sharing);
         assert!(!b.tracing);
         assert!(!b.wire_compression.is_on());
         assert_eq!(b.max_frame_bytes, MAX_FRAME_BYTES);

@@ -12,7 +12,10 @@
 //! [`Worker`] wraps it in a thread with a bounded tensor buffer and the
 //! Master heartbeat loop.
 
-use super::cache::{session_fingerprint, TensorCache};
+use super::cache::{
+    batch_content_fingerprint, dag_node_fingerprints, prefix_inputs,
+    session_fingerprint, TensorCache, TransformCache,
+};
 use super::codec::WirePacker;
 use super::master::{Master, WorkerId};
 use super::spec::SessionSpec;
@@ -24,7 +27,9 @@ use crate::dwrf::crypto::StreamCipher;
 use crate::dwrf::{DecodeMode, DedupStripe, DwrfReader, Encoding, FileMeta};
 use crate::metrics::EtlMetrics;
 use crate::obs::{ObsHandle, Stage};
+use crate::schema::FeatureId;
 use crate::tectonic::{Cluster, FileId};
+use crate::transforms::Value;
 use anyhow::Result;
 use std::collections::HashMap;
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -81,6 +86,14 @@ pub struct WorkerCore {
     pub metrics: Arc<EtlMetrics>,
     /// Optional shared preprocessed-tensor cache (§7.5).
     tensor_cache: Option<Arc<TensorCache>>,
+    /// Optional cross-job transform-output cache: per-output results
+    /// keyed by (input-content fingerprint, canonical DAG-prefix
+    /// fingerprint), so sessions sharing a DAG prefix transform each
+    /// unique payload once fleet-wide.
+    transform_cache: Option<Arc<TransformCache>>,
+    /// Per-output transform-cache plan, parallel to `spec.dag.outputs`:
+    /// (producing node, DAG-prefix fingerprint, sub-DAG input features).
+    xform_plan: Vec<(usize, u64, Vec<FeatureId>)>,
     /// Optional cross-job read broker (shared storage scans); used when
     /// `PipelineOptions::shared_reads` is on.
     broker: Option<BrokerHandle>,
@@ -102,6 +115,14 @@ impl WorkerCore {
         cluster: Arc<Cluster>,
         metrics: Arc<EtlMetrics>,
     ) -> WorkerCore {
+        let xform_plan = {
+            let fps = dag_node_fingerprints(&spec.dag);
+            spec.dag
+                .outputs
+                .iter()
+                .map(|&(_, n)| (n, fps[n], prefix_inputs(&spec.dag, n)))
+                .collect()
+        };
         WorkerCore {
             cipher: StreamCipher::for_table(&spec.table),
             fingerprint: session_fingerprint(&spec),
@@ -109,11 +130,13 @@ impl WorkerCore {
             // level/dictionary here means the caller skipped that.
             packer: WirePacker::new(&spec.pipeline)
                 .expect("valid wire_compression options"),
+            xform_plan,
             spec,
             cluster,
             meta_cache: HashMap::new(),
             metrics,
             tensor_cache: None,
+            transform_cache: None,
             broker: None,
             seq: 0,
             obs: None,
@@ -127,6 +150,19 @@ impl WorkerCore {
     /// extraction, and transformation.
     pub fn with_tensor_cache(mut self, cache: Arc<TensorCache>) -> WorkerCore {
         self.tensor_cache = Some(cache);
+        self
+    }
+
+    /// Attach a cross-job transform-output cache: outputs whose DAG
+    /// prefix and input bytes match an entry any session computed are
+    /// served from memory, and only the missing sub-DAGs run. Outputs
+    /// are byte-identical either way (every transform op is
+    /// deterministic).
+    pub fn with_transform_cache(
+        mut self,
+        cache: Arc<TransformCache>,
+    ) -> WorkerCore {
+        self.transform_cache = Some(cache);
         self
     }
 
@@ -237,53 +273,128 @@ impl WorkerCore {
         };
         let wire = if let Some(h) = shared {
             // ---- shared-read path: fetch through the broker. Each
-            // surviving stripe is fetched + decoded once across all
-            // attached sessions (the broker cannot apply any one
-            // session's predicate); this session's row-group mask,
+            // surviving stripe (or column) is fetched + decoded once
+            // across all attached sessions (the broker cannot apply any
+            // one session's predicate); this session's row-group mask,
             // projection, predicate, and transforms apply to its own
             // view downstream — pruned groups are dropped before their
             // rows are ever materialized into this session's batches.
-            let t_fetch = Instant::now();
-            let mut handles = Vec::new();
-            for sp in &plan.stripes {
-                let served =
-                    h.broker.get_stripe(h.session, split.file, sp.stripe)?;
-                if served.from_buffer {
-                    m.shared_reads.inc();
-                } else {
-                    m.storage_rx_bytes.add(served.fetched_bytes);
+            //
+            // Column grain serves this session's projection from any
+            // *wider* cached decode, per-(file, stripe, column). The
+            // stripe-grain path stays as the `column_sharing = false`
+            // ablation, and as the fallback for Map files (row-wise
+            // streams don't split into columns) and for oblivious scans
+            // of Dedup files (which need the broker's expanded view).
+            let use_columns = spec.pipeline.column_sharing
+                && (reader.meta.encoding == Encoding::Flattened
+                    || (reader.meta.encoding == Encoding::Dedup
+                        && use_dedup));
+            if use_columns {
+                let t_fetch = Instant::now();
+                let mut handles = Vec::new();
+                for sp in &plan.stripes {
+                    let served = h.broker.get_columns(
+                        h.session,
+                        split.file,
+                        sp.stripe,
+                    )?;
+                    if served.from_buffer {
+                        m.shared_reads.inc();
+                    } else {
+                        m.storage_rx_bytes.add(served.fetched_bytes);
+                    }
+                    let keep = sp.group_mask.as_ref().map(|mask| {
+                        reader.meta.stripes[sp.stripe].keep_rows(mask)
+                    });
+                    handles.push((sp.stripe, served, keep));
                 }
-                let keep = sp.group_mask.as_ref().map(|mask| {
-                    reader.meta.stripes[sp.stripe].keep_rows(mask)
-                });
-                handles.push((served.stripe, keep));
-            }
-            m.t_read.add(t.elapsed());
-            self.span(Stage::Fetch, t_fetch);
-            if use_dedup {
-                let t_dec = Instant::now();
-                let stripes = handles
-                    .iter()
-                    .map(|(s, keep)| {
-                        let ds = s.to_dedup(&spec.projection)?;
-                        Ok(match keep {
-                            Some(k) => ds.filter_rows(k),
-                            None => ds,
+                m.t_read.add(t.elapsed());
+                self.span(Stage::Fetch, t_fetch);
+                if use_dedup {
+                    let t_dec = Instant::now();
+                    let stripes = handles
+                        .iter()
+                        .map(|(stripe, served, keep)| {
+                            let ds = reader.assemble_dedup(
+                                *stripe,
+                                &spec.projection,
+                                &served.cols,
+                            )?;
+                            Ok(match keep {
+                                Some(k) => ds.filter_rows(k),
+                                None => ds,
+                            })
                         })
-                    })
-                    .collect::<Result<Vec<DedupStripe>>>()?;
-                self.span(Stage::Decode, t_dec);
-                self.finish_dedup(stripes)?
+                        .collect::<Result<Vec<DedupStripe>>>()?;
+                    self.span(Stage::Decode, t_dec);
+                    self.finish_dedup(stripes)?
+                } else {
+                    let t_dec = Instant::now();
+                    let batches = handles
+                        .iter()
+                        .map(|(stripe, served, keep)| {
+                            let b = reader.assemble_columnar(
+                                *stripe,
+                                &spec.projection,
+                                &served.cols,
+                            )?;
+                            Ok(match keep {
+                                Some(k) => b.gather(k),
+                                None => b,
+                            })
+                        })
+                        .collect::<Result<Vec<ColumnarBatch>>>()?;
+                    self.span(Stage::Decode, t_dec);
+                    self.finish_oblivious(batches)?
+                }
             } else {
-                let t_dec = Instant::now();
-                let batches: Vec<ColumnarBatch> = handles
-                    .iter()
-                    .map(|(s, keep)| {
-                        s.to_columnar_masked(&spec.projection, keep.as_deref())
-                    })
-                    .collect();
-                self.span(Stage::Decode, t_dec);
-                self.finish_oblivious(batches)?
+                let t_fetch = Instant::now();
+                let mut handles = Vec::new();
+                for sp in &plan.stripes {
+                    let served = h
+                        .broker
+                        .get_stripe(h.session, split.file, sp.stripe)?;
+                    if served.from_buffer {
+                        m.shared_reads.inc();
+                    } else {
+                        m.storage_rx_bytes.add(served.fetched_bytes);
+                    }
+                    let keep = sp.group_mask.as_ref().map(|mask| {
+                        reader.meta.stripes[sp.stripe].keep_rows(mask)
+                    });
+                    handles.push((served.stripe, keep));
+                }
+                m.t_read.add(t.elapsed());
+                self.span(Stage::Fetch, t_fetch);
+                if use_dedup {
+                    let t_dec = Instant::now();
+                    let stripes = handles
+                        .iter()
+                        .map(|(s, keep)| {
+                            let ds = s.to_dedup(&spec.projection)?;
+                            Ok(match keep {
+                                Some(k) => ds.filter_rows(k),
+                                None => ds,
+                            })
+                        })
+                        .collect::<Result<Vec<DedupStripe>>>()?;
+                    self.span(Stage::Decode, t_dec);
+                    self.finish_dedup(stripes)?
+                } else {
+                    let t_dec = Instant::now();
+                    let batches: Vec<ColumnarBatch> = handles
+                        .iter()
+                        .map(|(s, keep)| {
+                            s.to_columnar_masked(
+                                &spec.projection,
+                                keep.as_deref(),
+                            )
+                        })
+                        .collect();
+                    self.span(Stage::Decode, t_dec);
+                    self.finish_oblivious(batches)?
+                }
             }
         } else {
             // ---- private path: per-session I/O + decode. The plan's
@@ -374,6 +485,69 @@ impl WorkerCore {
         Ok(batches)
     }
 
+    /// Run the session DAG over one batch. With a transform cache
+    /// attached, each output is first looked up by (content fingerprint
+    /// of its sub-DAG's input columns, DAG-prefix fingerprint); only the
+    /// sub-DAGs of missing outputs execute, and their results are
+    /// published for other sessions. Without a cache this is exactly
+    /// [`TransformDag::execute`] — and with one, outputs are still
+    /// byte-identical, because every op is deterministic in its inputs.
+    fn transform_batch(
+        &self,
+        batch: &ColumnarBatch,
+    ) -> Result<Vec<(FeatureId, Value)>> {
+        let spec = &self.spec;
+        let Some(cache) = self.transform_cache.clone() else {
+            let (outputs, _stats) = spec.dag.execute(batch)?;
+            return Ok(outputs);
+        };
+        let mut keys = Vec::with_capacity(self.xform_plan.len());
+        let mut cached: Vec<Option<Arc<Value>>> =
+            Vec::with_capacity(self.xform_plan.len());
+        let mut missing_nodes: Vec<usize> = Vec::new();
+        for (node, prefix_fp, inputs) in &self.xform_plan {
+            let content_fp = batch_content_fingerprint(batch, inputs);
+            let hit = cache.get(content_fp, *prefix_fp);
+            if hit.is_none() {
+                missing_nodes.push(*node);
+            }
+            keys.push((content_fp, *prefix_fp));
+            cached.push(hit);
+        }
+        let hits = cached.iter().filter(|c| c.is_some()).count();
+        if hits > 0 {
+            self.metrics.transform_reuse_hits.add(hits as u64);
+            self.metrics
+                .transform_reused_rows
+                .add((hits * batch.num_rows) as u64);
+        }
+        let slots = if missing_nodes.is_empty() {
+            Vec::new()
+        } else {
+            missing_nodes.sort_unstable();
+            missing_nodes.dedup();
+            let (slots, _stats) =
+                spec.dag.execute_subset(batch, &missing_nodes)?;
+            slots
+        };
+        let mut outputs = Vec::with_capacity(spec.dag.outputs.len());
+        for (i, &(fid, node)) in spec.dag.outputs.iter().enumerate() {
+            let v = match &cached[i] {
+                Some(v) => (**v).clone(),
+                None => {
+                    let v = slots[node]
+                        .clone()
+                        .expect("missing output was computed");
+                    let (cfp, pfp) = keys[i];
+                    cache.put(cfp, pfp, Arc::new(v.clone()));
+                    v
+                }
+            };
+            outputs.push((fid, v));
+        }
+        Ok(outputs)
+    }
+
     /// The duplication-oblivious filter→transform→load stages over
     /// decoded stripe batches (every encoding; Dedup stripes arrive
     /// already expanded).
@@ -412,11 +586,12 @@ impl WorkerCore {
         m.t_extract.add(t.elapsed());
         self.span(Stage::Decode, t);
 
-        // ---- transform: run the DAG per stripe batch ----
+        // ---- transform: run the DAG per stripe batch (outputs served
+        // from the cross-job transform cache when one is attached) ----
         let t = Instant::now();
         let mut transformed = Vec::new();
         for batch in batches {
-            let (outputs, _stats) = spec.dag.execute(&batch)?;
+            let outputs = self.transform_batch(&batch)?;
             let out_bytes: usize = outputs
                 .iter()
                 .map(|(_, v)| v.elements() * 8)
@@ -538,7 +713,7 @@ impl WorkerCore {
         let t = Instant::now();
         let mut transformed = Vec::new();
         for ds in stripes {
-            let (outputs, _stats) = spec.dag.execute(&ds.unique)?;
+            let outputs = self.transform_batch(&ds.unique)?;
             let out_bytes: usize =
                 outputs.iter().map(|(_, v)| v.elements() * 8).sum();
             m.transform_out_bytes.add(out_bytes as u64);

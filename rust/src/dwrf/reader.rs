@@ -8,11 +8,13 @@ use super::stream::{
     decode_map_dense, decode_map_sparse, decode_row_meta, StreamKind,
 };
 use super::{Encoding, FileMeta, WHOLE_STRIPE};
+use crate::broker::{ColumnId, SharedColumn};
 use crate::data::{ColumnarBatch, DenseColumn, Sample, SparseColumn};
 use crate::filter::RowPredicate;
 use crate::schema::FeatureId;
 use anyhow::{bail, Context, Result};
 use std::collections::HashSet;
+use std::sync::Arc;
 
 /// A decoded Dedup-encoded stripe, *before* expansion: feature columns
 /// over unique payloads, the row→unique inverse index, and per-row
@@ -824,6 +826,377 @@ impl DwrfReader {
             inverse,
             labels,
             timestamps: ts,
+        })
+    }
+
+    /// The order a stripe-grain decode with `projection` would emit its
+    /// dense / sparse feature columns in (file stream order, first
+    /// occurrence). The column-grain path reassembles batches in this
+    /// order so its output stays byte-identical to the stripe-grain
+    /// decode. Features with no stream in this stripe are absent, just
+    /// as a stripe decode would omit them.
+    pub fn projected_columns(
+        &self,
+        stripe: usize,
+        projection: &Projection,
+    ) -> (Vec<FeatureId>, Vec<FeatureId>) {
+        let info = &self.meta.stripes[stripe];
+        let mut dense = Vec::new();
+        let mut sparse = Vec::new();
+        for st in &info.streams {
+            let f = FeatureId(st.feature);
+            match st.kind {
+                StreamKind::FlatDense => {
+                    if projection.contains(f) && !dense.contains(&f) {
+                        dense.push(f);
+                    }
+                }
+                StreamKind::FlatSparse => {
+                    if projection.contains(f) && !sparse.contains(&f) {
+                        sparse.push(f);
+                    }
+                }
+                _ => {}
+            }
+        }
+        (dense, sparse)
+    }
+
+    /// The I/O extents backing `cols` of one stripe — every group chunk
+    /// of each column, **unmasked**: a cached column must be whole so
+    /// sessions with different predicates can apply their own pruning
+    /// downstream. `Meta` covers the row-meta (and dedup-index) streams.
+    /// Errors on `Map` encoding, whose row-wise streams don't split into
+    /// columns.
+    pub fn column_ios(
+        &self,
+        stripe: usize,
+        cols: &[ColumnId],
+    ) -> Result<Vec<IoRange>> {
+        if self.meta.encoding == Encoding::Map {
+            bail!("column-grain reads unsupported on Map encoding");
+        }
+        let info = &self.meta.stripes[stripe];
+        let mut out = Vec::new();
+        for st in &info.streams {
+            let wanted = match st.kind {
+                StreamKind::RowMeta | StreamKind::DedupIndex => {
+                    cols.contains(&ColumnId::Meta)
+                }
+                StreamKind::FlatDense | StreamKind::FlatSparse => cols
+                    .contains(&ColumnId::Feature(FeatureId(st.feature))),
+                StreamKind::MapDense | StreamKind::MapSparse => {
+                    bail!("map stream in non-Map stripe")
+                }
+            };
+            if wanted {
+                out.push(IoRange {
+                    offset: st.offset,
+                    len: st.len,
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode the requested columns of one stripe independently of each
+    /// other: each column's group chunks decode and splice in group
+    /// order, exactly as the stripe-grain decode would produce them.
+    /// Returns `(column, payload, io_bytes)` per column, where
+    /// `io_bytes` is the storage footprint of the streams backing it
+    /// (what a later cache hit saves). A projected feature with no
+    /// stream in this stripe yields no entry.
+    pub fn decode_columns(
+        &self,
+        stripe: usize,
+        bufs: &IoBuffers,
+        cols: &[ColumnId],
+        mode: DecodeMode,
+    ) -> Result<Vec<(ColumnId, SharedColumn, u64)>> {
+        if self.meta.encoding == Encoding::Map {
+            bail!("column-grain decode unsupported on Map encoding");
+        }
+        let info = &self.meta.stripes[stripe];
+        let grouped =
+            info.streams.iter().any(|s| s.row_group != WHOLE_STRIPE);
+        // Stream indices backing one column, in the order a stripe-grain
+        // decode would consume them (group order when group-split).
+        let ordered = |pick: &dyn Fn(&super::StreamInfo) -> bool| -> Vec<usize> {
+            if grouped {
+                let whole: Vec<usize> = info
+                    .streams
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| {
+                        pick(s) && s.row_group == WHOLE_STRIPE
+                    })
+                    .map(|(i, _)| i)
+                    .collect();
+                let mut by_group: Vec<usize> = (0..info.groups.len())
+                    .filter_map(|g| {
+                        info.streams.iter().position(|s| {
+                            pick(s) && s.row_group == g as u32
+                        })
+                    })
+                    .collect();
+                let mut v = whole;
+                v.append(&mut by_group);
+                v
+            } else {
+                info.streams
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| pick(s))
+                    .map(|(i, _)| i)
+                    .collect()
+            }
+        };
+        let mut out = Vec::with_capacity(cols.len());
+        for &c in cols {
+            match c {
+                ColumnId::Meta => {
+                    let mut labels = Vec::new();
+                    let mut ts = Vec::new();
+                    let mut inverse: Option<Vec<u32>> = None;
+                    let mut unique_rows: Option<usize> = None;
+                    let mut io_bytes = 0u64;
+                    for i in
+                        ordered(&|s| s.kind == StreamKind::RowMeta)
+                    {
+                        io_bytes += info.streams[i].len;
+                        let raw = self.stream_bytes(stripe, i, bufs)?;
+                        let (l, t) = decode_row_meta(&raw)?;
+                        labels.extend(l);
+                        ts.extend(t);
+                    }
+                    for i in
+                        ordered(&|s| s.kind == StreamKind::DedupIndex)
+                    {
+                        io_bytes += info.streams[i].len;
+                        let raw = self.stream_bytes(stripe, i, bufs)?;
+                        let (inv, u) = decode_dedup_index(&raw)?;
+                        inverse = Some(inv);
+                        unique_rows = Some(u);
+                    }
+                    if labels.len() != info.rows as usize {
+                        bail!(
+                            "stripe {stripe} row meta covers {} rows, expected {}",
+                            labels.len(),
+                            info.rows
+                        );
+                    }
+                    if let Some(inv) = &inverse {
+                        if inv.len() != info.rows as usize {
+                            bail!("dedup index covers {} rows, stripe has {}",
+                                inv.len(), info.rows);
+                        }
+                    }
+                    let col_rows =
+                        unique_rows.unwrap_or(info.rows as usize);
+                    out.push((
+                        c,
+                        SharedColumn::Meta {
+                            labels,
+                            timestamps: ts,
+                            inverse,
+                            col_rows,
+                        },
+                        io_bytes,
+                    ));
+                }
+                ColumnId::Feature(f) => {
+                    let idxs = ordered(&|s| {
+                        matches!(
+                            s.kind,
+                            StreamKind::FlatDense
+                                | StreamKind::FlatSparse
+                        ) && s.feature == f.0
+                    });
+                    let Some(&first) = idxs.first() else {
+                        // Not materialized in this stripe.
+                        continue;
+                    };
+                    let mut io_bytes = 0u64;
+                    match info.streams[first].kind {
+                        StreamKind::FlatDense => {
+                            let mut acc: Option<DenseColumn> = None;
+                            for i in idxs {
+                                io_bytes += info.streams[i].len;
+                                let raw =
+                                    self.stream_bytes(stripe, i, bufs)?;
+                                let col = decode_flat_dense(
+                                    &raw, f, mode.fast,
+                                )?;
+                                match &mut acc {
+                                    None => acc = Some(col),
+                                    Some(a) => {
+                                        a.present.append(&col.present);
+                                        a.values.extend_from_slice(
+                                            &col.values,
+                                        );
+                                    }
+                                }
+                            }
+                            out.push((
+                                c,
+                                SharedColumn::Dense(acc.unwrap()),
+                                io_bytes,
+                            ));
+                        }
+                        StreamKind::FlatSparse => {
+                            let mut acc: Option<SparseColumn> = None;
+                            for i in idxs {
+                                io_bytes += info.streams[i].len;
+                                let raw =
+                                    self.stream_bytes(stripe, i, bufs)?;
+                                let col = decode_flat_sparse(
+                                    &raw, f, mode.fast,
+                                )?;
+                                match &mut acc {
+                                    None => acc = Some(col),
+                                    Some(a) => a.append(&col)?,
+                                }
+                            }
+                            out.push((
+                                c,
+                                SharedColumn::Sparse(acc.unwrap()),
+                                io_bytes,
+                            ));
+                        }
+                        _ => unreachable!("picked flat streams only"),
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Reassemble the `ColumnarBatch` a stripe-grain Flattened decode
+    /// with `projection` would have produced, from individually cached
+    /// columns (`cols` as returned by a column-grain serve).
+    pub fn assemble_columnar(
+        &self,
+        stripe: usize,
+        projection: &Projection,
+        cols: &[(ColumnId, Arc<SharedColumn>)],
+    ) -> Result<ColumnarBatch> {
+        let info = &self.meta.stripes[stripe];
+        let find = |c: ColumnId| {
+            cols.iter().find(|(k, _)| *k == c).map(|(_, p)| p)
+        };
+        let meta =
+            find(ColumnId::Meta).context("meta column missing")?;
+        let SharedColumn::Meta {
+            labels, timestamps, inverse, ..
+        } = &**meta
+        else {
+            bail!("meta column has a feature payload");
+        };
+        if inverse.is_some() {
+            bail!("dedup meta in flattened assembly");
+        }
+        let mut batch = ColumnarBatch {
+            num_rows: info.rows as usize,
+            labels: labels.clone(),
+            timestamps: timestamps.clone(),
+            ..Default::default()
+        };
+        let (dense_ids, sparse_ids) =
+            self.projected_columns(stripe, projection);
+        for f in dense_ids {
+            match find(ColumnId::Feature(f)).map(|p| &**p) {
+                Some(SharedColumn::Dense(col)) => {
+                    batch.dense.push(col.clone())
+                }
+                Some(_) => bail!("column {f:?} has a non-dense payload"),
+                None => bail!("dense column {f:?} missing"),
+            }
+        }
+        for f in sparse_ids {
+            match find(ColumnId::Feature(f)).map(|p| &**p) {
+                Some(SharedColumn::Sparse(col)) => {
+                    batch.sparse.push(col.clone())
+                }
+                Some(_) => {
+                    bail!("column {f:?} has a non-sparse payload")
+                }
+                None => bail!("sparse column {f:?} missing"),
+            }
+        }
+        Ok(batch)
+    }
+
+    /// Reassemble the [`DedupStripe`] a stripe-grain Dedup decode with
+    /// `projection` would have produced, from individually cached
+    /// columns.
+    pub fn assemble_dedup(
+        &self,
+        stripe: usize,
+        projection: &Projection,
+        cols: &[(ColumnId, Arc<SharedColumn>)],
+    ) -> Result<DedupStripe> {
+        let info = &self.meta.stripes[stripe];
+        let find = |c: ColumnId| {
+            cols.iter().find(|(k, _)| *k == c).map(|(_, p)| p)
+        };
+        let meta =
+            find(ColumnId::Meta).context("meta column missing")?;
+        let SharedColumn::Meta {
+            labels,
+            timestamps,
+            inverse,
+            col_rows,
+        } = &**meta
+        else {
+            bail!("meta column has a feature payload");
+        };
+        let Some(inverse) = inverse else {
+            bail!("flattened meta in dedup assembly");
+        };
+        if inverse.len() != info.rows as usize {
+            bail!(
+                "dedup index covers {} rows, stripe has {}",
+                inverse.len(),
+                info.rows
+            );
+        }
+        let mut unique = ColumnarBatch {
+            num_rows: *col_rows,
+            ..Default::default()
+        };
+        let (dense_ids, sparse_ids) =
+            self.projected_columns(stripe, projection);
+        for f in dense_ids {
+            match find(ColumnId::Feature(f)).map(|p| &**p) {
+                Some(SharedColumn::Dense(col)) => {
+                    if col.present.len() != *col_rows {
+                        bail!("dense column {f:?} rows != uniques");
+                    }
+                    unique.dense.push(col.clone());
+                }
+                Some(_) => bail!("column {f:?} has a non-dense payload"),
+                None => bail!("dense column {f:?} missing"),
+            }
+        }
+        for f in sparse_ids {
+            match find(ColumnId::Feature(f)).map(|p| &**p) {
+                Some(SharedColumn::Sparse(col)) => {
+                    if col.num_rows() != *col_rows {
+                        bail!("sparse column {f:?} rows != uniques");
+                    }
+                    unique.sparse.push(col.clone());
+                }
+                Some(_) => {
+                    bail!("column {f:?} has a non-sparse payload")
+                }
+                None => bail!("sparse column {f:?} missing"),
+            }
+        }
+        Ok(DedupStripe {
+            unique,
+            inverse: inverse.clone(),
+            labels: labels.clone(),
+            timestamps: timestamps.clone(),
         })
     }
 

@@ -115,6 +115,13 @@ pub struct EtlMetrics {
     /// shared buffer — another session already paid the storage read,
     /// decryption, and decode.
     pub shared_reads: Counter,
+    /// Transform outputs served from the cross-job transform cache:
+    /// another session (or an earlier batch) already ran this sub-DAG
+    /// over byte-identical input columns.
+    pub transform_reuse_hits: Counter,
+    /// Row-outputs those hits covered (hit outputs × batch rows) — the
+    /// per-row transform work the cache skipped.
+    pub transform_reused_rows: Counter,
     /// Stripes skipped whole by footer-stat pruning (zero I/Os issued).
     pub skipped_stripes: Counter,
     /// Wanted-stream bytes never fetched thanks to stripe pruning.

@@ -9,38 +9,169 @@
 
 use crate::config::RmConfig;
 use crate::schema::{FeatureId, Schema};
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{read_or_recover, write_or_recover, RwLock};
 use crate::util::rng::Pcg32;
 use crate::util::stats::{bytes_needed_for_io, popularity_cdf};
 use std::collections::HashMap;
+use std::fmt;
+use std::sync::Arc;
 
-/// Accumulated access statistics across jobs.
-#[derive(Clone, Debug, Default)]
+/// Live per-feature demand accumulator: stored-byte weight and a
+/// byte-weighted access counter, both lock-free. Broker serves feed it
+/// concurrently; the f64 accumulators live as bit-cast `AtomicU64`s
+/// (the sums are advisory popularity signals — Relaxed is enough, the
+/// CAS loop just keeps increments from being lost).
+#[derive(Default)]
+pub struct FeatureDemand {
+    /// Stored bytes-per-row weight, as f64 bits.
+    weight: AtomicU64,
+    /// Byte-weighted access accumulator, as f64 bits.
+    accessed: AtomicU64,
+}
+
+impl FeatureDemand {
+    fn set_weight(&self, w: f64) {
+        self.weight.store(w.to_bits(), Ordering::Relaxed);
+    }
+
+    fn weight(&self) -> f64 {
+        f64::from_bits(self.weight.load(Ordering::Relaxed))
+    }
+
+    fn add_accessed(&self, bytes: f64) {
+        let mut cur = self.accessed.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + bytes).to_bits();
+            match self.accessed.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    fn accessed(&self) -> f64 {
+        f64::from_bits(self.accessed.load(Ordering::Relaxed))
+    }
+}
+
+/// Accumulated access statistics across jobs — and, since the broker's
+/// column cache went popularity-aware, the *live* per-feature demand
+/// tracker its admission/eviction order reads. All recording paths take
+/// `&self`: per-feature counters are atomics, and the feature map is
+/// behind an `RwLock` whose write path only runs the first time a
+/// feature is seen, so concurrent broker serves never contend on a
+/// global lock in steady state.
+#[derive(Default)]
 pub struct AccessStats {
-    /// feature → (stored bytes weight, access count weighted by bytes).
-    pub per_feature: HashMap<FeatureId, (f64, f64)>,
-    pub jobs: usize,
+    per_feature: RwLock<HashMap<FeatureId, Arc<FeatureDemand>>>,
+    jobs: AtomicU64,
+}
+
+impl Clone for AccessStats {
+    /// Snapshot clone: the copy starts from this tracker's current
+    /// counter values and accumulates independently afterwards.
+    fn clone(&self) -> AccessStats {
+        let map = read_or_recover(&self.per_feature, "popularity");
+        AccessStats {
+            per_feature: RwLock::new(
+                map.iter()
+                    .map(|(k, v)| {
+                        (
+                            *k,
+                            Arc::new(FeatureDemand {
+                                weight: AtomicU64::new(
+                                    v.weight.load(Ordering::Relaxed),
+                                ),
+                                accessed: AtomicU64::new(
+                                    v.accessed.load(Ordering::Relaxed),
+                                ),
+                            }),
+                        )
+                    })
+                    .collect(),
+            ),
+            jobs: AtomicU64::new(self.jobs.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl fmt::Debug for AccessStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("AccessStats")
+            .field(
+                "features",
+                &read_or_recover(&self.per_feature, "popularity").len(),
+            )
+            .field("jobs", &self.jobs())
+            .finish()
+    }
 }
 
 impl AccessStats {
+    /// Jobs recorded so far.
+    pub fn jobs(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// The demand accumulator for one feature (created on first touch).
+    fn entry(&self, id: FeatureId) -> Arc<FeatureDemand> {
+        if let Some(d) =
+            read_or_recover(&self.per_feature, "popularity").get(&id)
+        {
+            return d.clone();
+        }
+        write_or_recover(&self.per_feature, "popularity")
+            .entry(id)
+            .or_default()
+            .clone()
+    }
+
     /// Record one job's projection over the schema.
-    pub fn record_job(&mut self, schema: &Schema, projection: &[FeatureId]) {
-        self.jobs += 1;
+    pub fn record_job(&self, schema: &Schema, projection: &[FeatureId]) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
         for f in &schema.features {
-            let entry = self
-                .per_feature
-                .entry(f.id)
-                .or_insert((f.expected_bytes_per_row(), 0.0));
-            entry.0 = f.expected_bytes_per_row();
+            let d = self.entry(f.id);
+            d.set_weight(f.expected_bytes_per_row());
             if projection.contains(&f.id) {
-                entry.1 += f.expected_bytes_per_row();
+                d.add_accessed(f.expected_bytes_per_row());
             }
         }
+    }
+
+    /// Record one broker column serve: `bytes` of feature `id` were
+    /// demanded by some session. This is the live feed the column
+    /// cache's admission/eviction order runs on.
+    pub fn record_serve(&self, id: FeatureId, bytes: u64) {
+        self.entry(id).add_accessed(bytes as f64);
+    }
+
+    /// Live demand score for one feature: accumulated byte-weighted
+    /// accesses (0.0 for never-seen features).
+    pub fn demand(&self, id: FeatureId) -> f64 {
+        read_or_recover(&self.per_feature, "popularity")
+            .get(&id)
+            .map_or(0.0, |d| d.accessed())
+    }
+
+    /// Consistent point-in-time view of every feature's
+    /// (weight, accessed) pair.
+    fn snapshot(&self) -> Vec<(FeatureId, (f64, f64))> {
+        read_or_recover(&self.per_feature, "popularity")
+            .iter()
+            .map(|(k, v)| (*k, (v.weight(), v.accessed())))
+            .collect()
     }
 
     /// Fig 7's CDF: (fraction of stored bytes, fraction of I/O served).
     pub fn cdf(&self) -> Vec<(f64, f64)> {
         let items: Vec<(f64, f64)> =
-            self.per_feature.values().copied().collect();
+            self.snapshot().into_iter().map(|(_, wa)| wa).collect();
         popularity_cdf(&items)
     }
 
@@ -53,8 +184,7 @@ impl AccessStats {
     /// writer order (§7.5: ordered by popularity in jobs launched within
     /// a recent window).
     pub fn reorder(&self) -> Vec<FeatureId> {
-        let mut feats: Vec<(&FeatureId, &(f64, f64))> =
-            self.per_feature.iter().collect();
+        let mut feats = self.snapshot();
         // Rank by access density (accesses per stored byte): the features
         // most often read per byte of footprint lead each stripe, which
         // both concentrates job projections at the stripe front (FR) and
@@ -62,9 +192,9 @@ impl AccessStats {
         feats.sort_by(|a, b| {
             let da = a.1 .1 / a.1 .0.max(1e-12);
             let db = b.1 .1 / b.1 .0.max(1e-12);
-            db.partial_cmp(&da).unwrap().then(a.0.cmp(b.0))
+            db.partial_cmp(&da).unwrap().then(a.0.cmp(&b.0))
         });
-        feats.into_iter().map(|(id, _)| *id).collect()
+        feats.into_iter().map(|(id, _)| id).collect()
     }
 }
 
@@ -76,7 +206,7 @@ pub fn simulate_month(
     schema: &Schema,
     jobs: usize,
 ) -> AccessStats {
-    let mut stats = AccessStats::default();
+    let stats = AccessStats::default();
     let take = (schema.features.len() as f64 * rm.frac_feats_used())
         .round()
         .max(1.0) as usize;
@@ -149,6 +279,32 @@ mod tests {
             avg_front < schema.features.len() as f64 / 3.0,
             "front avg rank {avg_front}"
         );
+    }
+
+    #[test]
+    fn concurrent_serves_lose_no_demand() {
+        let stats = Arc::new(AccessStats::default());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let stats = stats.clone();
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        stats.record_serve(FeatureId((i % 7) as u32), 10);
+                        let _ = stats.demand(FeatureId(t));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let total: f64 =
+            (0..7).map(|i| stats.demand(FeatureId(i))).sum();
+        assert!((total - 4.0 * 500.0 * 10.0).abs() < 1e-6);
+        // A clone snapshots and then diverges.
+        let snap = stats.clone();
+        stats.record_serve(FeatureId(0), 10);
+        assert!(stats.demand(FeatureId(0)) > snap.demand(FeatureId(0)));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Loom-style model tests for the four riskiest DSI protocols.
+//! Loom-style model tests for the riskiest DSI protocols.
 //!
 //! Each test runs the *production* code (no test doubles) under the
 //! bounded-preemption scheduler in [`super::model`], so every lock
@@ -8,11 +8,15 @@
 
 use super::model;
 use super::model::thread;
-use crate::broker::{FetchedStripe, MemoryBudget, ServeOutcome, StripeBuffer};
+use crate::broker::{
+    ColumnBuffer, ColumnId, FetchedColumns, FetchedStripe, MemoryBudget,
+    ServeOutcome, SharedColumn, StripeBuffer,
+};
 use crate::data::ColumnarBatch;
 use crate::dpp::Master;
 use crate::metrics::StageClock;
 use crate::obs::Histogram;
+use crate::schema::FeatureId;
 use crate::tectonic::FileId;
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -43,6 +47,42 @@ fn fetched(bytes: usize) -> FetchedStripe {
 
 fn key(f: u64, s: usize) -> (FileId, usize) {
     (FileId(f), s)
+}
+
+fn col_of(bytes: usize) -> SharedColumn {
+    // Meta counts labels at 4 bytes each.
+    SharedColumn::Meta {
+        labels: vec![0.0; bytes / 4],
+        timestamps: Vec::new(),
+        inverse: None,
+        col_rows: bytes / 4,
+    }
+}
+
+fn fetched_cols(ids: &[ColumnId], bytes_each: usize) -> FetchedColumns {
+    FetchedColumns {
+        cols: ids
+            .iter()
+            .map(|&c| (c, col_of(bytes_each), bytes_each as u64))
+            .collect(),
+        fetched_bytes: (ids.len() * bytes_each) as u64,
+        extents: ids.len(),
+        ios: 1,
+    }
+}
+
+fn feat(id: u32) -> ColumnId {
+    ColumnId::Feature(FeatureId(id))
+}
+
+/// Live per-column demand used by the column-grain models: row metadata
+/// is infinitely hot (every projection needs it), features are as hot
+/// as their id.
+fn demand(c: ColumnId) -> f64 {
+    match c {
+        ColumnId::Meta => f64::MAX,
+        ColumnId::Feature(f) => f.0 as f64,
+    }
 }
 
 /// Protocol 1: lock-free `Histogram` record/merge. Two recorders and a
@@ -248,5 +288,114 @@ fn model_master_failure_requeues_only_incomplete() {
         );
         assert!(m.is_done());
         assert_eq!(m.progress(), (1, 1));
+    });
+}
+
+/// Protocol 5a: `ColumnBuffer` single-flight at column grain — two
+/// sessions with *overlapping* projections of one stripe ([Meta, F1]
+/// vs [Meta, F2]) pay for each column's fetch exactly once in every
+/// interleaving: the shared Meta column is fetched by one serve and hit
+/// by the other, the private features are fetched by their sole
+/// requester, and dropping the stripe frees every byte.
+#[test]
+fn model_column_buffer_single_flight() {
+    model::check("column_buffer_single_flight", || {
+        let buf = Arc::new(ColumnBuffer::new(MemoryBudget::new(1 << 20)));
+        let fetched = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for i in 0..2u32 {
+            let buf = buf.clone();
+            let fetched = fetched.clone();
+            handles.push(thread::spawn(move || {
+                let needed = [ColumnId::Meta, feat(i + 1)];
+                // remaining = 1: one more registered serve expected, so
+                // columns stay cached (budget is ample → all charged).
+                let out = buf
+                    .serve(key(1, 0), &needed, 1, &demand, |m| {
+                        fetched.fetch_add(m.len(), Ordering::Relaxed);
+                        Ok(fetched_cols(m, 200))
+                    })
+                    .unwrap();
+                assert_eq!(out.cols.len(), 2, "column went unserved");
+                out.hits
+            }));
+        }
+        let mut hits = 0;
+        for h in handles {
+            hits += h.join().unwrap();
+        }
+        assert_eq!(
+            fetched.load(Ordering::Relaxed),
+            3,
+            "single-flight violated: a column was fetched twice"
+        );
+        assert_eq!(hits, 1, "shared Meta column not hit by the peer");
+        assert_eq!(buf.budget().used(), 600, "wrong bytes charged");
+        buf.release_stripe(key(1, 0));
+        assert_eq!(buf.len(), 0, "released stripe left columns behind");
+        assert_eq!(buf.budget().used(), 0, "budget leaked");
+    });
+}
+
+/// Protocol 5b: `MemoryBudget` accounting under concurrent column
+/// serves with eviction pressure, plus popularity-aware admission —
+/// `used` never exceeds `total`, release returns the pool to zero, and
+/// (checked deterministically after the race) a cold column is refused
+/// admission rather than displacing a hotter one.
+#[test]
+fn model_column_buffer_eviction_accounting() {
+    model::check("column_buffer_eviction_accounting", || {
+        // Two 400-byte columns against a 500-byte pool: at most one can
+        // be cached; the other serves uncharged or evicts the first.
+        let buf = Arc::new(ColumnBuffer::new(MemoryBudget::new(500)));
+        let mut handles = Vec::new();
+        for i in 0..2u32 {
+            let buf = buf.clone();
+            handles.push(thread::spawn(move || {
+                let out = buf
+                    .serve(key(1, i as usize), &[feat(i + 1)], 1, &demand, |m| {
+                        Ok(fetched_cols(m, 400))
+                    })
+                    .unwrap();
+                assert_eq!(out.cols.len(), 1, "column went unserved");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(
+            buf.budget().used() <= 500,
+            "budget overcommitted: {}",
+            buf.budget().used()
+        );
+        buf.release_stripe(key(1, 0));
+        buf.release_stripe(key(1, 1));
+        assert_eq!(buf.budget().used(), 0, "budget leaked after release");
+        assert_eq!(buf.len(), 0);
+        // Popularity-aware admission, checked on the now-quiescent
+        // buffer: hot feature 2 is cached, then cold feature 1 must be
+        // served uncharged — never by displacing the hotter column.
+        drop(
+            buf.serve(key(1, 0), &[feat(2)], 1, &demand, |m| {
+                Ok(fetched_cols(m, 400))
+            })
+            .unwrap(),
+        );
+        drop(
+            buf.serve(key(1, 1), &[feat(1)], 1, &demand, |m| {
+                Ok(fetched_cols(m, 400))
+            })
+            .unwrap(),
+        );
+        assert_eq!(buf.len(), 1, "cold column displaced a hot one");
+        let out = buf
+            .serve(key(1, 0), &[feat(2)], 0, &demand, |_| {
+                panic!("hot column was evicted")
+            })
+            .unwrap();
+        assert_eq!(out.hits, 1);
+        drop(out);
+        assert_eq!(buf.len(), 0, "last-consumer columns not freed");
+        assert_eq!(buf.budget().used(), 0, "budget leaked");
     });
 }

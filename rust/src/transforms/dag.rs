@@ -148,9 +148,45 @@ impl TransformDag {
         &self,
         batch: &ColumnarBatch,
     ) -> Result<(Vec<(FeatureId, Value)>, DagStats), XformError> {
+        // Evaluate every node (even ones feeding no output), preserving
+        // the historical stats accounting.
+        let all: Vec<usize> = (0..self.nodes.len()).collect();
+        let (slots, stats) = self.execute_subset(batch, &all)?;
+        let outputs = self
+            .outputs
+            .iter()
+            .map(|&(id, n)| (id, slots[n].clone().expect("output slot")))
+            .collect();
+        Ok((outputs, stats))
+    }
+
+    /// Execute only the nodes in `wanted` plus their ancestors — the
+    /// partial-evaluation entry the cross-job transform cache uses when
+    /// some outputs were served from cache and only the missing
+    /// sub-DAGs still need CPU. Returns the full slot vector (skipped
+    /// nodes stay `None`) and stats covering only the ops actually run.
+    pub fn execute_subset(
+        &self,
+        batch: &ColumnarBatch,
+        wanted: &[usize],
+    ) -> Result<(Vec<Option<Value>>, DagStats), XformError> {
+        let mut need = vec![false; self.nodes.len()];
+        let mut stack: Vec<usize> = wanted.to_vec();
+        while let Some(i) = stack.pop() {
+            if need[i] {
+                continue;
+            }
+            need[i] = true;
+            if let Node::Apply { inputs, .. } = &self.nodes[i] {
+                stack.extend(inputs.iter().copied());
+            }
+        }
         let mut slots: Vec<Option<Value>> = vec![None; self.nodes.len()];
         let mut stats = DagStats::default();
         for (i, node) in self.nodes.iter().enumerate() {
+            if !need[i] {
+                continue;
+            }
             match node {
                 Node::Input { id, kind } => {
                     let v = if let Some(c) =
@@ -194,12 +230,7 @@ impl TransformDag {
                 }
             }
         }
-        let outputs = self
-            .outputs
-            .iter()
-            .map(|&(id, n)| (id, slots[n].clone().expect("output slot")))
-            .collect();
-        Ok((outputs, stats))
+        Ok((slots, stats))
     }
 }
 

@@ -1,0 +1,242 @@
+//! Property: column-grain sharing is lossless under *any* partition of
+//! a session's projection into cached-wider vs fresh columns. A warmer
+//! session with a random projection populates the broker's column
+//! cache; a target session with another random projection (overlapping
+//! arbitrarily — subset, superset, disjoint, or partial) then serves
+//! some columns from the warmer's wider decode and fetches the rest,
+//! and its wire output must be byte-identical to a private scan — for
+//! Flattened and Dedup encodings, with and without row predicates.
+//! (Random data via the in-repo `util::prop` mini-harness; proptest is
+//! unavailable offline.)
+
+use dsi::broker::ReadBroker;
+use dsi::config::{RmConfig, RmId, SimScale};
+use dsi::datagen::{build_dataset_with, GenOptions};
+use dsi::dpp::{Master, SessionSpec, WorkerCore};
+use dsi::dwrf::{Encoding, WriterOptions};
+use dsi::filter::RowPredicate;
+use dsi::metrics::EtlMetrics;
+use dsi::schema::{FeatureId, FeatureKind};
+use dsi::tectonic::{Cluster, ClusterConfig};
+use dsi::transforms::{Op, TransformDag};
+use dsi::util::prop::{check, Gen};
+use dsi::warehouse::Catalog;
+use std::sync::Arc;
+
+struct World {
+    cluster: Arc<Cluster>,
+    catalog: Catalog,
+    table: String,
+    /// (feature, is_dense) for every materialized feature.
+    features: Vec<(FeatureId, bool)>,
+}
+
+fn build(encoding: Encoding, dup_factor: usize) -> World {
+    let cluster = Arc::new(Cluster::new(ClusterConfig {
+        chunk_bytes: 64 << 10,
+        ..Default::default()
+    }));
+    let catalog = Catalog::new();
+    let rm = RmConfig::get(RmId::Rm3);
+    let scale = SimScale::tiny();
+    let h = build_dataset_with(
+        &cluster,
+        &catalog,
+        &rm,
+        &scale,
+        WriterOptions {
+            encoding,
+            stripe_rows: 16,
+            ..Default::default()
+        },
+        31,
+        &GenOptions {
+            dup_factor,
+            tick_max: 40, // spread timestamps so recency cuts bite
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let features = h
+        .schema
+        .features
+        .iter()
+        .map(|f| (f.id, matches!(f.kind, FeatureKind::Dense)))
+        .collect();
+    World {
+        cluster,
+        catalog,
+        table: h.table_name,
+        features,
+    }
+}
+
+/// The same per-feature normalization chain for every session, so a
+/// projection alone defines the session.
+fn spec_for(world: &World, proj: &[FeatureId]) -> SessionSpec {
+    let mut dag = TransformDag::default();
+    for &fid in proj {
+        let dense = world
+            .features
+            .iter()
+            .find(|(id, _)| *id == fid)
+            .map(|(_, d)| *d)
+            .unwrap_or(false);
+        if dense {
+            let i = dag.input_dense(fid);
+            let c = dag.apply(Op::Clamp { lo: -3.0, hi: 3.0 }, vec![i]);
+            dag.output(fid, c);
+        } else {
+            let i = dag.input_sparse(fid);
+            let s = dag.apply(
+                Op::SigridHash {
+                    salt: 5,
+                    modulus: 1 << 12,
+                },
+                vec![i],
+            );
+            dag.output(fid, s);
+        }
+    }
+    SessionSpec::from_dag(&world.table, 0, u32::MAX, dag, 8)
+}
+
+type Wire = Vec<(u64, usize, bool, Vec<u8>)>;
+
+/// Build (and, for brokered sessions, *register*) a session without
+/// draining it — registration order decides whose interest keeps the
+/// peer's columns cached.
+fn session(
+    world: &World,
+    spec: SessionSpec,
+    broker: Option<&Arc<ReadBroker>>,
+) -> (Master, WorkerCore) {
+    let mut spec = spec;
+    spec.pipeline.shared_reads = broker.is_some();
+    let master = match broker {
+        Some(b) => Master::new_shared(
+            &world.catalog,
+            &world.cluster,
+            spec.clone(),
+            b,
+        ),
+        None => Master::new(&world.catalog, &world.cluster, spec.clone()),
+    }
+    .unwrap();
+    let metrics = Arc::new(EtlMetrics::default());
+    let mut core =
+        WorkerCore::new(Arc::new(spec), world.cluster.clone(), metrics);
+    if let Some(h) = master.broker_handle() {
+        core = core.with_broker(h);
+    }
+    (master, core)
+}
+
+fn drain(master: Master, mut core: WorkerCore) -> Wire {
+    let w = master.register_worker();
+    let mut wire = Wire::new();
+    while let Some(split) = master.fetch_split(w) {
+        for b in core.process_split(&split).unwrap() {
+            wire.push((b.seq, b.rows, b.dedup, b.bytes));
+        }
+        master.complete_split(w, split.id);
+    }
+    wire
+}
+
+/// One random case: draw warmer/target projections feature by feature
+/// (both, warmer-only, target-only, neither), optionally predicate the
+/// target, warm the column cache, and demand byte-identity.
+fn column_partition_case(
+    world: &World,
+    g: &mut Gen,
+) -> Result<(), String> {
+    let mut warm: Vec<FeatureId> = Vec::new();
+    let mut target: Vec<FeatureId> = Vec::new();
+    for &(fid, _) in &world.features {
+        match g.u64(0..4) {
+            0 => warm.push(fid),
+            1 => target.push(fid),
+            2 => {
+                warm.push(fid);
+                target.push(fid);
+            }
+            _ => {}
+        }
+    }
+    // Both sessions need at least one output.
+    if warm.is_empty() {
+        warm.push(world.features[0].0);
+    }
+    if target.is_empty() {
+        target.push(world.features[world.features.len() - 1].0);
+    }
+    let warm_spec = spec_for(world, &warm);
+    let mut target_spec = spec_for(world, &target);
+    target_spec = match g.u64(0..3) {
+        0 => target_spec,
+        1 => target_spec.with_predicate(RowPredicate::TimestampRange {
+            min: 0,
+            max: g.u64(1..40),
+        }),
+        _ => target_spec.with_predicate(RowPredicate::SampleRate {
+            rate: 0.5,
+            seed: g.u64(0..1000),
+        }),
+    };
+
+    // Private reference for the target session.
+    let (bm, bc) = session(world, target_spec.clone(), None);
+    let base = drain(bm, bc);
+
+    // Both sessions register before the warmer drains, so the target's
+    // outstanding interest keeps the warmer's columns cached.
+    let broker =
+        ReadBroker::with_budget_bytes(world.cluster.clone(), 64 << 20);
+    let (wm, wc) = session(world, warm_spec, Some(&broker));
+    let (tm, tc) = session(world, target_spec, Some(&broker));
+    let warm_wire = drain(wm, wc);
+    if warm_wire.is_empty() {
+        return Err("warmer session produced no wire".into());
+    }
+    let got = drain(tm, tc);
+
+    if got != base {
+        return Err(format!(
+            "wire diverged: warm proj {warm:?}, target proj {target:?}, \
+             {} vs {} batches",
+            got.len(),
+            base.len()
+        ));
+    }
+    // The row-meta column alone guarantees the target hit the cache.
+    if broker.metrics.column_hits.get() == 0 {
+        return Err("target session never hit the column cache".into());
+    }
+    // Both sessions consumed their registered interest: nothing stays
+    // resident or charged.
+    if broker.buffered_columns() != 0 || broker.budget().used() != 0 {
+        return Err(format!(
+            "column cache leaked: {} columns, {} bytes",
+            broker.buffered_columns(),
+            broker.budget().used()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_column_partition_lossless_flattened() {
+    let world = build(Encoding::Flattened, 1);
+    check("column_partition_flattened", 12, |g| {
+        column_partition_case(&world, g)
+    });
+}
+
+#[test]
+fn prop_column_partition_lossless_dedup() {
+    let world = build(Encoding::Dedup, 3);
+    check("column_partition_dedup", 12, |g| {
+        column_partition_case(&world, g)
+    });
+}
