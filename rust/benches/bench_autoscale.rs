@@ -378,9 +378,7 @@ fn main() {
     out.set("criterion_stall_ok", crit_stall_ok);
     out.set("criterion_broker_hit_scales_below_cold", crit_broker);
     out.set("criterion_pass", pass);
-    let _ = std::fs::create_dir_all("target");
-    let path = "target/autoscale_results.json";
-    if std::fs::write(path, out.to_string_pretty()).is_ok() {
+    for path in dsi::util::bench::publish_results("autoscale", &out) {
         println!("wrote {path}");
     }
     // Telemetry artifact from the broker-hit session: attribution plus

@@ -426,9 +426,7 @@ fn main() {
         .set("criterion_pass", mixed_pass);
     out.set("mixed_projection", mj);
     out.set("criterion_pass", pass);
-    let _ = std::fs::create_dir_all("target");
-    let path = "target/broker_results.json";
-    if std::fs::write(path, out.to_string_pretty()).is_ok() {
+    for path in dsi::util::bench::publish_results("broker", &out) {
         println!("wrote {path}");
     }
     // CI smoke: regressions that erode cross-job sharing below the

@@ -197,9 +197,7 @@ fn main() {
     let mut out = Json::obj();
     out.set("table", Json::Arr(arr));
     out.set("criterion_pass", pass);
-    let _ = std::fs::create_dir_all("target");
-    let path = "target/dedup_results.json";
-    if std::fs::write(path, out.to_string_pretty()).is_ok() {
+    for path in dsi::util::bench::publish_results("dedup", &out) {
         println!("wrote {path}");
     }
     // The CI smoke step relies on this exit code to catch regressions

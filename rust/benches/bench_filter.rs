@@ -348,9 +348,7 @@ fn main() {
     out.set("wire_identical_all", wires_identical);
     out.set("rowgroup_criterion_x", crit_group_x);
     out.set("criterion_pass", pass);
-    let _ = std::fs::create_dir_all("target");
-    let path = "target/filter_results.json";
-    if std::fs::write(path, out.to_string_pretty()).is_ok() {
+    for path in dsi::util::bench::publish_results("filter", &out) {
         println!("wrote {path}");
     }
     // CI smoke: regressions that erode pushdown below the acceptance

@@ -10,9 +10,9 @@ fn main() {
     let seed = 42;
     match paper::run_all(&scale, seed) {
         Ok(json) => {
-            let path = "target/paper_results.json";
-            if std::fs::write(path, json.to_string_pretty()).is_ok() {
-                println!("\nwrote {path}");
+            println!();
+            for path in dsi::util::bench::publish_results("paper", &json) {
+                println!("wrote {path}");
             }
         }
         Err(e) => {

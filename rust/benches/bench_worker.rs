@@ -207,8 +207,7 @@ fn main() {
         .set("gate_ratio_dup4_level3", gate_ratio)
         .set("gate_min_ratio", 2.0)
         .set("decoded_identical", identical);
-    let path = "target/worker_results.json";
-    if std::fs::write(path, res.to_string_pretty()).is_ok() {
+    for path in dsi::util::bench::publish_results("worker", &res) {
         println!("wrote {path}");
     }
     if gate_ratio < 2.0 || !identical {

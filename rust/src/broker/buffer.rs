@@ -40,6 +40,9 @@ impl MemoryBudget {
         self.total
     }
 
+    // Relaxed loads: reporting reads of `used`/`peak` want a recent
+    // value, not a synchronized one; both are plain counters with no
+    // data published through them.
     pub fn used(&self) -> u64 {
         self.used.load(Ordering::Relaxed)
     }
@@ -50,6 +53,11 @@ impl MemoryBudget {
     }
 
     /// Reserve `bytes` if the pool has room.
+    //
+    // Relaxed CAS loop: the budget invariant (`used + bytes <= total`)
+    // is enforced by the compare_exchange itself — a stale initial load
+    // only costs a retry. No memory is published by a reservation; the
+    // buffers it guards hand data over under their own mutexes.
     pub fn try_reserve(&self, bytes: u64) -> bool {
         let mut cur = self.used.load(Ordering::Relaxed);
         loop {
@@ -66,6 +74,9 @@ impl MemoryBudget {
                 Ordering::Relaxed,
             ) {
                 Ok(_) => {
+                    // Relaxed max-CAS: `peak` is advisory (see the
+                    // field doc); racing reservations may settle the
+                    // high-water mark in any order, monotone either way.
                     let mut p = self.peak.load(Ordering::Relaxed);
                     while next > p {
                         match self.peak.compare_exchange_weak(
@@ -88,6 +99,9 @@ impl MemoryBudget {
     /// Return `bytes` to the pool. Saturates at zero: the pool can
     /// never go negative, and a defensive over-release clamps instead
     /// of wrapping (see `budget_reserve_release`).
+    //
+    // Relaxed CAS loop: like try_reserve, the subtraction is made
+    // atomic by the CAS; release carries no payload to synchronize.
     pub fn release(&self, bytes: u64) {
         let mut cur = self.used.load(Ordering::Relaxed);
         loop {

@@ -188,6 +188,11 @@ impl Client {
                 return Ok(None);
             }
             let remaining = timeout - elapsed;
+            // Under the loom model this hands the scheduler token to a
+            // peer (mpsc channels are not instrumented, so the poll
+            // loop would otherwise spin without ever letting a sender
+            // run); on normal builds it is a no-op before the park.
+            crate::sync::model_yield();
             std::thread::park_timeout(park.min(remaining));
             park = (park * 2).min(PARK_MAX);
         }

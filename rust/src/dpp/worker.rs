@@ -812,6 +812,9 @@ impl Worker {
                     // Traced session: worker id is the trace lane.
                     core = core.with_obs(h, id as u32);
                 }
+                // Relaxed stop checks: `stop` is a one-way latch; a
+                // delayed read costs at most one extra loop iteration
+                // and no data rides on the flag.
                 while !stop2.load(Ordering::Relaxed) {
                     let Some(split) = master.fetch_split(id) else {
                         if master.is_done() {
@@ -849,6 +852,10 @@ impl Worker {
                                 // drains (backpressure).
                                 let t_send = Instant::now();
                                 let mut item = b;
+                                // Relaxed `produced` bump and stop
+                                // check: the counter is a monotone
+                                // statistic; batch handoff itself
+                                // synchronizes through the channel.
                                 loop {
                                     match tx.try_send(item) {
                                         Ok(()) => {
@@ -919,6 +926,9 @@ impl Worker {
     }
 
     /// Simulate a crash: the thread stops without completing its split.
+    //
+    // Relaxed store: setting the one-way stop latch; the worker loop
+    // tolerates reading it late (see the spawn loop's comment).
     pub fn kill(&self) {
         self.stop.store(true, Ordering::Relaxed);
     }
@@ -943,12 +953,14 @@ impl Worker {
 fn buffered_estimate(produced: &AtomicU64) -> usize {
     // The worker cannot see the channel depth directly; report recent
     // production as a proxy (the Session refines this from the client
-    // side).
+    // side). Relaxed: a heuristic read of a monotone counter.
     (produced.load(Ordering::Relaxed) % 8) as usize + 1
 }
 
 impl Drop for Worker {
     fn drop(&mut self) {
+        // Relaxed: one-way stop latch (see the spawn loop's comment);
+        // the join below is the real synchronization point.
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
             let _ = h.join();

@@ -21,7 +21,9 @@ pub struct IoRange {
 
 impl IoRange {
     pub fn end(&self) -> u64 {
-        self.offset + self.len
+        // Offsets/lengths come from footers; saturate rather than wrap
+        // so a corrupt extent can only shrink comparisons, not alias.
+        self.offset.saturating_add(self.len)
     }
 }
 
@@ -155,9 +157,11 @@ impl IoBuffers {
             Err(i) => i - 1,
         };
         let (r, data) = &self.bufs[idx];
-        if offset >= r.offset && offset + len <= r.end() {
+        // Footer-derived extent: reject on overflow instead of wrapping.
+        let end = offset.checked_add(len)?;
+        if offset >= r.offset && end <= r.end() {
             let start = (offset - r.offset) as usize;
-            Some(&data[start..start + len as usize])
+            data.get(start..start.checked_add(len as usize)?)
         } else {
             None
         }

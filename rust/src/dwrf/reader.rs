@@ -168,6 +168,8 @@ impl DwrfReader {
     pub fn open_table(bytes: &[u8], table: &str) -> Result<DwrfReader> {
         let file_len = bytes.len() as u64;
         let (foff, flen) = Self::footer_extent(bytes)?;
+        // dsi-lint: allow(unchecked-wire-arith): footer_extent proved
+        // foff + flen == bytes.len() - 12, so the sum cannot wrap.
         let footer = &bytes[foff as usize..(foff + flen) as usize];
         let meta = FileMeta::decode_footer(footer, file_len)?;
         Ok(DwrfReader {
@@ -1208,7 +1210,7 @@ impl DwrfReader {
             for io in &sp.ios {
                 bufs.insert(
                     *io,
-                    file[io.offset as usize..(io.offset + io.len) as usize].to_vec(),
+                    file[io.offset as usize..io.end() as usize].to_vec(),
                 );
             }
         }

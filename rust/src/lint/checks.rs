@@ -1,0 +1,548 @@
+//! Convention lints enforcing the PR 8 concurrency rules, plus the
+//! justification-comment allowlist shared by every v2 lint.
+//!
+//! A finding is suppressed by writing, directly above the offending
+//! line (or trailing on it):
+//!
+//! ```text
+//! // dsi-lint: allow(<lint-name>): <why this site is sound>
+//! ```
+//!
+//! The justification is mandatory and allow comments must pay their
+//! way: an allow that matches no finding is itself an `unused-allow`
+//! finding, so suppressions cannot rot in place when the code under
+//! them changes.
+
+use super::lex::TokKind;
+use super::parse::ParsedFile;
+use super::Finding;
+
+/// `std::sync` names that must come through the `dsi::sync` facade
+/// instead (the facade swaps them for instrumented shims under
+/// `--cfg loom`). `Arc`/`mpsc`/`Barrier` are fine: the model checker
+/// does not instrument them and the facade does not wrap them.
+const BANNED_STD_SYNC: &[&str] = &[
+    "Mutex",
+    "RwLock",
+    "Condvar",
+    "MutexGuard",
+    "RwLockReadGuard",
+    "RwLockWriteGuard",
+    "atomic",
+];
+
+/// Identifiers that carry wire- or footer-derived sizes in the decode
+/// paths; arithmetic on them must be `checked_*`/`saturating_*` or
+/// carry an allowlist justification.
+const WIRE_SIZE_IDENTS: &[&str] =
+    &["len", "offset", "off", "raw_len", "flen", "foff", "footer_len"];
+
+/// Files whose length/offset values come from untrusted bytes.
+fn wire_scope(rel: &str) -> bool {
+    rel.starts_with("dwrf/")
+        || rel == "dpp/transport.rs"
+        || rel == "dpp/codec.rs"
+}
+
+/// How far above an `Ordering::Relaxed` use its invariant comment may
+/// sit (a comment at the top of a short fn covers the fn's uses).
+const RELAXED_COMMENT_REACH: u32 = 20;
+
+/// Run every convention lint over the crate.
+pub fn conventions(files: &[ParsedFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        let in_sync = f.rel.starts_with("sync/");
+        if !in_sync {
+            std_sync_imports(f, &mut out);
+            bare_lock_unwrap(f, &mut out);
+            undocumented_relaxed(f, &mut out);
+        }
+        if wire_scope(&f.rel) {
+            unchecked_wire_arith(f, &mut out);
+        }
+    }
+    out
+}
+
+/// Lint: no `std::sync` primitive imports (or inline paths) outside
+/// `dsi::sync`.
+fn std_sync_imports(f: &ParsedFile, out: &mut Vec<Finding>) {
+    for u in &f.uses {
+        // Covers `use std::sync::X` and the nested
+        // `use std::{sync::X, …}` form alike.
+        let words: Vec<&str> = u.text.split(' ').collect();
+        if u.is_test
+            || !words.contains(&"std")
+            || !words.contains(&"sync")
+        {
+            continue;
+        }
+        if let Some(bad) =
+            words.iter().find(|w| BANNED_STD_SYNC.contains(*w))
+        {
+            out.push(Finding {
+                lint: "std-sync-import".into(),
+                file: f.rel.clone(),
+                line: u.line,
+                msg: format!(
+                    "`{bad}` imported from std::sync — route it \
+                     through dsi::sync so loom models instrument it"
+                ),
+            });
+        }
+    }
+    // Inline fully-qualified paths: `std :: sync :: Mutex`.
+    let toks = &f.toks;
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Ident || f.text(i) != "std" {
+            continue;
+        }
+        if f.is_test_tok(i) {
+            continue;
+        }
+        let mut j = f.skip_trivia(i + 1);
+        let mut path = Vec::new();
+        while j < toks.len() && f.text(j) == ":" {
+            j = f.skip_trivia(j + 1);
+            if j < toks.len() && f.text(j) == ":" {
+                j = f.skip_trivia(j + 1);
+                if j < toks.len() && toks[j].kind == TokKind::Ident {
+                    path.push((j, f.text(j)));
+                    j = f.skip_trivia(j + 1);
+                    continue;
+                }
+            }
+            break;
+        }
+        if path.first().map(|&(_, t)| t) == Some("sync") {
+            if let Some(&(k, bad)) = path
+                .iter()
+                .skip(1)
+                .find(|&&(_, t)| BANNED_STD_SYNC.contains(&t))
+            {
+                out.push(Finding {
+                    lint: "std-sync-import".into(),
+                    file: f.rel.clone(),
+                    line: toks[k].line,
+                    msg: format!(
+                        "inline `std::sync::{bad}` path — use \
+                         dsi::sync"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Lint: no bare `.lock()/.read()/.write()` followed by
+/// `.unwrap()/.expect()` — production code must use the
+/// poison-recovering `*_or_recover` helpers.
+fn bare_lock_unwrap(f: &ParsedFile, out: &mut Vec<Finding>) {
+    for i in 0..f.toks.len() {
+        if f.toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let name = f.text(i);
+        if !matches!(name, "lock" | "read" | "write" | "try_lock") {
+            continue;
+        }
+        if f.is_test_tok(i) {
+            continue;
+        }
+        let Some(prev) = prev_sig(f, i) else { continue };
+        if f.text(prev) != "." {
+            continue;
+        }
+        // name ( ) . unwrap|expect (
+        let open = f.skip_trivia(i + 1);
+        if at(f, open) != Some("(") {
+            continue;
+        }
+        let close = f.skip_trivia(open + 1);
+        if at(f, close) != Some(")") {
+            continue;
+        }
+        let dot = f.skip_trivia(close + 1);
+        if at(f, dot) != Some(".") {
+            continue;
+        }
+        let m = f.skip_trivia(dot + 1);
+        let Some(mname) = at(f, m) else { continue };
+        if mname == "unwrap" || mname == "expect" {
+            out.push(Finding {
+                lint: "bare-lock-unwrap".into(),
+                file: f.rel.clone(),
+                line: f.toks[i].line,
+                msg: format!(
+                    "bare `.{name}().{mname}()` — use the \
+                     poison-recovering `*_or_recover` helper from \
+                     dsi::sync"
+                ),
+            });
+        }
+    }
+}
+
+/// Lint: every `Ordering::Relaxed` carries a nearby invariant comment
+/// that names "Relaxed" (within [`RELAXED_COMMENT_REACH`] lines above).
+fn undocumented_relaxed(f: &ParsedFile, out: &mut Vec<Finding>) {
+    // Comment lines that mention Relaxed, for the proximity test.
+    let comment_lines: Vec<u32> = f
+        .toks
+        .iter()
+        .filter(|t| {
+            matches!(t.kind, TokKind::LineComment | TokKind::BlockComment)
+                && t.text(&f.src).contains("Relaxed")
+        })
+        .map(|t| t.line)
+        .collect();
+    for i in 0..f.toks.len() {
+        if f.toks[i].kind != TokKind::Ident || f.text(i) != "Relaxed" {
+            continue;
+        }
+        if f.is_test_tok(i) {
+            continue;
+        }
+        // Require the `Ordering :: Relaxed` (or `atomic::…`) shape so a
+        // stray ident named Relaxed can't trip it.
+        let Some(c2) = prev_sig(f, i) else { continue };
+        let Some(c1) = prev_sig(f, c2) else { continue };
+        let Some(q) = prev_sig(f, c1) else { continue };
+        if f.text(c2) != ":" || f.text(c1) != ":" || f.text(q) != "Ordering"
+        {
+            continue;
+        }
+        let line = f.toks[i].line;
+        let documented = comment_lines.iter().any(|&cl| {
+            cl <= line && cl + RELAXED_COMMENT_REACH >= line
+        });
+        if !documented {
+            out.push(Finding {
+                lint: "undocumented-relaxed".into(),
+                file: f.rel.clone(),
+                line,
+                msg: "Ordering::Relaxed without a nearby invariant \
+                      comment naming Relaxed — state why unordered \
+                      access is sound here"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// Lint: in wire/footer decode scope, `+`/`*` on size-carrying
+/// identifiers must be `checked_*`/`saturating_*` (which carry no bare
+/// operator) or allowlisted.
+fn unchecked_wire_arith(f: &ParsedFile, out: &mut Vec<Finding>) {
+    let mut lines_flagged = std::collections::HashSet::new();
+    for i in 0..f.toks.len() {
+        if f.toks[i].kind != TokKind::Punct {
+            continue;
+        }
+        let op = f.text(i);
+        if op != "+" && op != "*" {
+            continue;
+        }
+        if f.is_test_tok(i) {
+            continue;
+        }
+        let prev = prev_sig(f, i);
+        let next = f.skip_trivia(i + 1);
+        // Binary operators only: a unary `*x`/`&x` deref has a
+        // non-operand token (or nothing) on its left.
+        let left_operand = prev.is_some_and(|p| {
+            matches!(f.toks[p].kind, TokKind::Ident | TokKind::Num)
+                || matches!(f.text(p), ")" | "]")
+        });
+        if !left_operand {
+            continue;
+        }
+        let mut hit = prev.and_then(|p| wire_watch(f, p));
+        if hit.is_none() && next < f.toks.len() {
+            if let Some(w) = wire_watch(f, next) {
+                // `x + len(…)` would be a call, not a value.
+                let after = f.skip_trivia(next + 1);
+                if at(f, after) != Some("(") {
+                    hit = Some(w);
+                }
+            }
+        }
+        let Some(w) = hit else { continue };
+        let line = f.toks[i].line;
+        if lines_flagged.insert(line) {
+            out.push(Finding {
+                lint: "unchecked-wire-arith".into(),
+                file: f.rel.clone(),
+                line,
+                msg: format!(
+                    "unchecked `{op}` on wire/footer-derived `{w}` — \
+                     use checked_*/saturating_* or allowlist with a \
+                     justification"
+                ),
+            });
+        }
+    }
+}
+
+fn at<'a>(f: &'a ParsedFile, i: usize) -> Option<&'a str> {
+    (i < f.toks.len()).then(|| f.text(i))
+}
+
+/// Token `k` when it is one of the watched wire-size identifiers.
+fn wire_watch<'a>(f: &'a ParsedFile, k: usize) -> Option<&'a str> {
+    (f.toks[k].kind == TokKind::Ident
+        && WIRE_SIZE_IDENTS.contains(&f.text(k)))
+    .then(|| f.text(k))
+}
+
+fn prev_sig(f: &ParsedFile, i: usize) -> Option<usize> {
+    let mut k = i;
+    while k > 0 {
+        k -= 1;
+        if !f.toks[k].is_trivia() {
+            return Some(k);
+        }
+    }
+    None
+}
+
+/// One parsed `dsi-lint: allow(...)` comment.
+struct Allow {
+    lint: String,
+    has_reason: bool,
+    comment_line: u32,
+    /// The line of code this allow covers.
+    target_line: u32,
+    used: bool,
+    file: String,
+}
+
+/// Apply the allowlist: drop findings covered by a justified allow
+/// comment on (or directly above) their line; surface unjustified and
+/// unused allows as findings of their own.
+pub fn apply_allowlist(
+    files: &[ParsedFile],
+    findings: Vec<Finding>,
+) -> Vec<Finding> {
+    let mut allows: Vec<Allow> = Vec::new();
+    for f in files {
+        collect_allows(f, &mut allows);
+    }
+    let mut out = Vec::new();
+    for fi in findings {
+        let suppressed = allows.iter_mut().find(|a| {
+            a.has_reason
+                && a.file == fi.file
+                && a.lint == fi.lint
+                && a.target_line == fi.line
+        });
+        if let Some(a) = suppressed {
+            a.used = true;
+        } else {
+            out.push(fi);
+        }
+    }
+    for a in &allows {
+        if !a.has_reason {
+            out.push(Finding {
+                lint: "allow-missing-justification".into(),
+                file: a.file.clone(),
+                line: a.comment_line,
+                msg: format!(
+                    "allow({}) has no justification after the colon",
+                    a.lint
+                ),
+            });
+        } else if !a.used {
+            out.push(Finding {
+                lint: "unused-allow".into(),
+                file: a.file.clone(),
+                line: a.comment_line,
+                msg: format!(
+                    "allow({}) suppresses nothing on line {} — remove \
+                     it or move it to the offending line",
+                    a.lint, a.target_line
+                ),
+            });
+        }
+    }
+    out
+}
+
+fn collect_allows(f: &ParsedFile, allows: &mut Vec<Allow>) {
+    for (i, t) in f.toks.iter().enumerate() {
+        if !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment)
+        {
+            continue;
+        }
+        let text = t.text(&f.src);
+        let Some(at) = text.find("dsi-lint: allow(") else {
+            continue;
+        };
+        let rest = &text[at + "dsi-lint: allow(".len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let lint = rest[..close].trim().to_string();
+        let after = rest[close + 1..].trim_start();
+        let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+        // Trailing allow (code earlier on the same line) targets its
+        // own line; a standalone comment targets the next code line.
+        let trailing = (0..i)
+            .rev()
+            .take_while(|&k| f.toks[k].line == t.line)
+            .any(|k| !f.toks[k].is_trivia());
+        let target_line = if trailing {
+            t.line
+        } else {
+            let mut k = i + 1;
+            let mut line = t.line;
+            while k < f.toks.len() {
+                if !f.toks[k].is_trivia() {
+                    line = f.toks[k].line;
+                    break;
+                }
+                // Another allow/comment in between: keep scanning.
+                k += 1;
+            }
+            line
+        };
+        allows.push(Allow {
+            lint,
+            has_reason: !reason.is_empty(),
+            comment_line: t.line,
+            target_line,
+            used: false,
+            file: f.rel.clone(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(rel: &str, src: &str) -> ParsedFile {
+        ParsedFile::parse(rel, src.to_string())
+    }
+
+    fn lints(fs: &[Finding]) -> Vec<(&str, u32)> {
+        fs.iter().map(|f| (f.lint.as_str(), f.line)).collect()
+    }
+
+    #[test]
+    fn flags_std_sync_imports_outside_sync() {
+        let f = file(
+            "broker/mod.rs",
+            "use std::sync::{Arc, Mutex};\nuse std::sync::mpsc::Receiver;\n",
+        );
+        let out = conventions(&[f]);
+        assert_eq!(lints(&out), vec![("std-sync-import", 1)]);
+        // Arc/mpsc alone are fine.
+        let f = file(
+            "broker/mod.rs",
+            "use std::sync::Arc;\nuse std::sync::mpsc::channel;\n",
+        );
+        assert!(conventions(&[f]).is_empty());
+        // The sync facade itself is exempt.
+        let f = file("sync/mod.rs", "use std::sync::Mutex;\n");
+        assert!(conventions(&[f]).is_empty());
+        // Test modules may import raw primitives.
+        let f = file(
+            "broker/mod.rs",
+            "#[cfg(test)]\nmod tests {\n    use std::sync::Barrier;\n    use std::sync::atomic::AtomicU64;\n}\n",
+        );
+        assert!(conventions(&[f]).is_empty());
+    }
+
+    #[test]
+    fn flags_inline_std_sync_paths() {
+        let f = file(
+            "obs/mod.rs",
+            "fn f() { let m = std::sync::Mutex::new(0); }\n",
+        );
+        let out = conventions(&[f]);
+        assert_eq!(lints(&out), vec![("std-sync-import", 1)]);
+    }
+
+    #[test]
+    fn flags_bare_lock_unwrap_outside_tests() {
+        let src = "fn f(m: &Mutex<u32>) {\n    let g = m.lock().unwrap();\n}\n\
+                   #[cfg(test)]\nmod tests {\n    fn t(m: &Mutex<u32>) { let g = m.lock().unwrap(); }\n}\n";
+        let out = conventions(&[file("broker/x.rs", src)]);
+        assert_eq!(lints(&out), vec![("bare-lock-unwrap", 2)]);
+    }
+
+    #[test]
+    fn relaxed_requires_nearby_comment() {
+        let bad = "fn f(c: &AtomicU64) { c.load(Ordering::Relaxed); }\n";
+        let out = conventions(&[file("obs/x.rs", bad)]);
+        assert_eq!(lints(&out), vec![("undocumented-relaxed", 1)]);
+        let good = "// Relaxed: monotone counter, no ordering needed.\n\
+                    fn f(c: &AtomicU64) { c.load(Ordering::Relaxed); }\n";
+        assert!(conventions(&[file("obs/x.rs", good)]).is_empty());
+        // A comment 30 lines up is too far to justify anything.
+        let far = format!(
+            "// Relaxed: some old rationale.\n{}fn f(c: &AtomicU64) {{ c.load(Ordering::Relaxed); }}\n",
+            "\n".repeat(30)
+        );
+        let out = conventions(&[file("obs/x.rs", &far)]);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn wire_arith_flags_only_wire_scope() {
+        let src = "fn f(offset: u64, len: u64) -> u64 { offset + len }\n";
+        let out = conventions(&[file("dwrf/plan.rs", src)]);
+        assert_eq!(lints(&out), vec![("unchecked-wire-arith", 1)]);
+        // Same code outside the wire scope: silent.
+        assert!(conventions(&[file("sched/mod.rs", src)]).is_empty());
+        // Method calls and checked arithmetic don't trip it.
+        let ok = "fn f(b: &[u8], offset: u64, len: u64) -> Option<u64> {\n\
+                  let n = b.len() + 1;\n    offset.checked_add(len)\n}\n";
+        assert!(conventions(&[file("dwrf/plan.rs", ok)]).is_empty());
+    }
+
+    #[test]
+    fn allowlist_suppresses_and_requires_justification() {
+        let src = "fn f(offset: u64, len: u64) -> u64 {\n\
+                   // dsi-lint: allow(unchecked-wire-arith): extents validated at decode.\n\
+                   offset + len\n}\n";
+        let f = file("dwrf/plan.rs", src);
+        let out = apply_allowlist(&[f], {
+            let f = file("dwrf/plan.rs", src);
+            conventions(&[f])
+        });
+        assert!(out.is_empty(), "{out:?}");
+        // No justification → the allow itself is a finding.
+        let src = "fn f(offset: u64, len: u64) -> u64 {\n\
+                   // dsi-lint: allow(unchecked-wire-arith)\n\
+                   offset + len\n}\n";
+        let out = apply_allowlist(&[file("dwrf/plan.rs", src)], {
+            conventions(&[file("dwrf/plan.rs", src)])
+        });
+        assert!(out
+            .iter()
+            .any(|x| x.lint == "allow-missing-justification"));
+        assert!(out.iter().any(|x| x.lint == "unchecked-wire-arith"));
+    }
+
+    #[test]
+    fn unused_allow_is_a_finding() {
+        let src = "// dsi-lint: allow(bare-lock-unwrap): stale reason.\n\
+                   fn f() {}\n";
+        let out =
+            apply_allowlist(&[file("obs/x.rs", src)], Vec::new());
+        assert_eq!(lints(&out), vec![("unused-allow", 1)]);
+    }
+
+    #[test]
+    fn trailing_allow_targets_its_own_line() {
+        let src = "fn f(offset: u64, len: u64) -> u64 {\n\
+                   offset + len // dsi-lint: allow(unchecked-wire-arith): planner-validated.\n\
+                   }\n";
+        let out = apply_allowlist(&[file("dwrf/plan.rs", src)], {
+            conventions(&[file("dwrf/plan.rs", src)])
+        });
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

@@ -1,0 +1,1269 @@
+//! Concurrency analysis: guard-scope tracking, the crate-wide
+//! lock-order graph, and the blocking-under-lock lint.
+//!
+//! **Guard scopes.** Each `fn` body is walked with a block stack. An
+//! acquisition (`lock_or_recover`/`read_or_recover`/`write_or_recover`,
+//! or a zero-argument `.lock()`/`.read()`/`.write()`) registers a live
+//! guard: `let`-bound guards die at the end of their block or at an
+//! explicit `drop(g)`; unbound temporaries die at the statement's `;`.
+//! `wait_or_recover(&cv, g, …)` is understood as releasing and
+//! reacquiring `g`'s own lock — the guard stays live, and any *other*
+//! guard held across the wait is a blocking-under-lock finding.
+//!
+//! **Lock names.** A lock site is canonicalized to a struct-field path:
+//! `&self.state` inside `impl StripeBuffer` names `StripeBuffer.state`,
+//! and `&self.buf.state` inside the `LoadGuard` drop impl resolves
+//! through the struct field map back to the same `StripeBuffer.state`
+//! node, so aliases unify. Paths rooted at unresolvable locals fall
+//! back to a file-scoped name — still a node, just without cross-file
+//! unification.
+//!
+//! **Lock-order graph.** Acquiring B while holding A adds edge A→B.
+//! Edges also propagate interprocedurally: each fn's transitively
+//! acquired lock set is computed by fixpoint over a name-resolved call
+//! graph. Method calls resolve through the receiver's *type* —
+//! `self.m(…)` within the impl, `self.field.m(…)`/`param.m(…)` through
+//! the struct field map — never by bare name, because std collections
+//! share method names (`insert`, `entry`, `clone`) with crate types.
+//! `Path::f(…)` calls resolve against the qualifier's impl, falling
+//! back to a unique crate-wide *free* fn for module paths; bare `f(…)`
+//! calls resolve only to a unique free fn. Ambiguous or local-receiver
+//! calls are skipped rather than over-approximated — a deliberate
+//! no-false-positives trade. Any cycle — including a self-edge, i.e. a
+//! call chain that re-locks a held lock — is reported as a potential
+//! deadlock.
+//!
+//! Known blind spots, accepted for a linter: closures are analyzed at
+//! their definition site (a deferred closure captured under no lock and
+//! invoked under one is invisible), and guard lifetimes follow Rust
+//! 2021 drop rules only approximately: a guard binds to its `let` var
+//! only when the acquire call is the whole initializer, an `if let`
+//! scrutinee guard lives exactly for the conditional's block, a plain
+//! `if`/`while` condition guard dies at the block's `{`, and other
+//! temporaries die at the statement's `;`.
+
+use super::parse::{base_type, FnDef, ParsedFile};
+use super::Finding;
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+/// A single lock acquisition site.
+#[derive(Clone, Debug)]
+pub struct Acquire {
+    pub lock: String,
+    /// The `*_or_recover` context string, when present.
+    pub ctx: Option<String>,
+    pub line: u32,
+}
+
+/// A lock-order edge: `to` acquired while `from` is held.
+#[derive(Clone, Debug)]
+pub struct Edge {
+    pub from: String,
+    pub to: String,
+    pub file: String,
+    pub line: u32,
+    /// Interprocedural edges carry the callee that (transitively)
+    /// acquires `to`.
+    pub via: Option<String>,
+}
+
+/// The crate-wide lock-order graph.
+#[derive(Default, Debug)]
+pub struct LockGraph {
+    /// Lock name → the `*_or_recover` ctx strings seen at its sites.
+    pub nodes: BTreeMap<String, HashSet<String>>,
+    pub edges: Vec<Edge>,
+}
+
+/// Per-fn facts collected by the guard walk.
+struct FnFacts {
+    qual: String,
+    owner: Option<String>,
+    name: String,
+    file: String,
+    acquires: Vec<Acquire>,
+    /// (held lock, acquired) pairs — direct same-fn nesting.
+    nested: Vec<(String, Acquire)>,
+    calls: Vec<CallSite>,
+    /// (held locks, op description, line).
+    blocking: Vec<(Vec<String>, String, u32)>,
+}
+
+struct CallSite {
+    name: String,
+    /// For method calls: the receiver's resolved type (`None` when the
+    /// receiver is a local). For path calls: the `Type::` qualifier.
+    qualifier: Option<String>,
+    /// Explicit `Self::`/`self.` call (resolves even if the name is
+    /// ambiguous crate-wide).
+    self_call: bool,
+    /// `.name(…)` method-call shape — resolves via `qualifier` only,
+    /// never by the unique-name rule.
+    method: bool,
+    held: Vec<String>,
+    line: u32,
+}
+
+struct LiveGuard {
+    var: Option<String>,
+    lock: String,
+    depth: usize,
+    alive: bool,
+}
+
+/// Sentinel guard names for condition-scoped acquisitions; never match
+/// a real `drop(var)` since they aren't identifiers.
+const COND_GUARD: &str = "<cond>";
+const IF_LET_GUARD: &str = "<if-let>";
+
+/// Zero-arg method names that acquire (`m.lock()`, `l.read()`, …).
+const METHOD_ACQUIRE: &[&str] = &["lock", "read", "write", "try_lock"];
+
+/// Helper fns that acquire; arg 0 is the lock, arg 1 the ctx string.
+const HELPER_ACQUIRE: &[&str] =
+    &["lock_or_recover", "read_or_recover", "write_or_recover"];
+
+/// Method calls that can block the calling thread.
+const BLOCKING_METHODS: &[&str] = &[
+    "send",
+    "recv",
+    "recv_timeout",
+    "wait",
+    "wait_timeout",
+    "accept",
+    "read_to_end",
+    "read_exact",
+    "write_all",
+    "flush",
+    "sync_all",
+    "open",
+    "join",
+];
+
+/// `Qualifier::name` paths that block: (qualifier, name, label).
+const BLOCKING_PATHS: &[(&str, &str)] = &[
+    ("thread", "sleep"),
+    ("thread", "park"),
+    ("thread", "park_timeout"),
+    ("File", "open"),
+    ("File", "create"),
+    ("TcpStream", "connect"),
+    ("TcpListener", "bind"),
+    ("fs", "read"),
+    ("fs", "write"),
+    ("fs", "read_to_string"),
+];
+
+/// Analyze the crate: returns concurrency findings plus the lock-order
+/// graph. `files` must be the whole crate so interprocedural resolution
+/// and alias unification see every impl. Files under `sync/` are
+/// skipped: the facade and model checker *are* the primitive layer and
+/// deliberately use raw locks.
+pub fn analyze(files: &[ParsedFile]) -> (Vec<Finding>, LockGraph) {
+    let mut structs: HashMap<&str, &super::parse::StructDef> =
+        HashMap::new();
+    for f in files {
+        for s in &f.structs {
+            structs.entry(s.name.as_str()).or_insert(s);
+        }
+    }
+    let mut facts: Vec<FnFacts> = Vec::new();
+    for f in files {
+        if f.rel.starts_with("sync/") {
+            continue;
+        }
+        for d in &f.fns {
+            if d.is_test {
+                continue;
+            }
+            facts.push(walk_fn(f, d, &structs));
+        }
+    }
+    let graph = build_graph(&facts);
+    let mut findings = Vec::new();
+    for fx in &facts {
+        for (held, op, line) in &fx.blocking {
+            findings.push(Finding {
+                lint: "blocking-under-lock".into(),
+                file: fx.file.clone(),
+                line: *line,
+                msg: format!(
+                    "{op} in {} while holding {}",
+                    fx.qual,
+                    held.join(", ")
+                ),
+            });
+        }
+    }
+    findings.extend(cycle_findings(&graph));
+    (findings, graph)
+}
+
+/// Resolve a lock expression (tokens of the helper's first argument,
+/// e.g. `& self . buf . state`) to a canonical name.
+fn name_lock(
+    f: &ParsedFile,
+    d: &FnDef,
+    expr: &[usize],
+    structs: &HashMap<&str, &super::parse::StructDef>,
+) -> String {
+    // Collect the leading `a.b.c` path, ignoring `&`/`mut` and
+    // stopping at indexing or calls.
+    let mut segs: Vec<&str> = Vec::new();
+    let mut expect_ident = true;
+    for &j in expr {
+        let t = f.text(j);
+        match t {
+            "&" | "mut" | "*" => continue,
+            "." if !expect_ident => {
+                expect_ident = true;
+                continue;
+            }
+            _ if f.toks[j].kind == super::lex::TokKind::Ident => {
+                // Accepts both dotted arg slices (`& self . buf . state`)
+                // and bare receiver chains (`self buf state`).
+                segs.push(t);
+                expect_ident = false;
+            }
+            _ => break,
+        }
+    }
+    let fallback = || format!("{}:{}", f.rel, segs.join("."));
+    let Some((&first, rest)) = segs.split_first() else {
+        return format!("{}:<expr>", f.rel);
+    };
+    // Root type: `self` → the impl owner; a param → its declared type.
+    let (root_ty, path) = if first == "self" {
+        match &d.owner {
+            Some(o) => (o.clone(), rest),
+            None => return fallback(),
+        }
+    } else if let Some((_, ty)) =
+        d.params.iter().find(|(n, _)| n == first)
+    {
+        let ty = base_type(ty);
+        if ty.is_empty() || rest.is_empty() {
+            return fallback();
+        }
+        (ty, rest)
+    } else {
+        return fallback();
+    };
+    if path.is_empty() {
+        // `&self` itself is not a lock; treat as unresolved.
+        return fallback();
+    }
+    // Walk intermediate fields through the struct map so aliases like
+    // LoadGuard's `self.buf.state` land on `StripeBuffer.state`.
+    let mut cur = root_ty;
+    for (i, seg) in path.iter().enumerate() {
+        if i + 1 == path.len() {
+            return format!("{cur}.{seg}");
+        }
+        let next = structs
+            .get(cur.as_str())
+            .and_then(|s| s.fields.iter().find(|(n, _)| n == seg))
+            .map(|(_, ty)| base_type(ty));
+        match next {
+            Some(t) if !t.is_empty() => cur = t,
+            _ => return format!("{cur}.{}", path[i..].join(".")),
+        }
+    }
+    fallback()
+}
+
+fn walk_fn(
+    f: &ParsedFile,
+    d: &FnDef,
+    structs: &HashMap<&str, &super::parse::StructDef>,
+) -> FnFacts {
+    let qual = match &d.owner {
+        Some(o) => format!("{o}::{}", d.name),
+        None => d.name.clone(),
+    };
+    let mut fx = FnFacts {
+        qual,
+        owner: d.owner.clone(),
+        name: d.name.clone(),
+        file: f.rel.clone(),
+        acquires: Vec::new(),
+        nested: Vec::new(),
+        calls: Vec::new(),
+        blocking: Vec::new(),
+    };
+    let mut guards: Vec<LiveGuard> = Vec::new();
+    let mut depth = 0usize;
+    let mut stmt_let: Option<String> = None;
+    // Inside an `if`/`while` condition; upgraded to a let-condition
+    // (`if let`/`while let`) when the `let` keyword follows.
+    let mut in_cond = false;
+    let mut in_let_cond = false;
+    let live =
+        |gs: &[LiveGuard]| -> Vec<String> {
+            gs.iter().filter(|g| g.alive).map(|g| g.lock.clone()).collect()
+        };
+
+    let (start, end) = d.body;
+    let mut j = start;
+    while j < end {
+        if f.toks[j].is_trivia() {
+            j += 1;
+            continue;
+        }
+        let t = f.text(j);
+        match t {
+            "{" => {
+                // A plain condition's temporaries drop before the block
+                // runs; an `if let` scrutinee guard (registered one
+                // level deeper) survives into it.
+                for g in guards.iter_mut() {
+                    if g.var.as_deref() == Some(COND_GUARD) {
+                        g.alive = false;
+                    }
+                }
+                in_cond = false;
+                in_let_cond = false;
+                stmt_let = None;
+                depth += 1;
+                j += 1;
+                continue;
+            }
+            "}" => {
+                for g in guards.iter_mut() {
+                    if g.depth >= depth {
+                        g.alive = false;
+                    }
+                }
+                depth = depth.saturating_sub(1);
+                stmt_let = None;
+                j += 1;
+                continue;
+            }
+            ";" => {
+                for g in guards.iter_mut() {
+                    if g.var.is_none() && g.depth == depth {
+                        g.alive = false;
+                    }
+                }
+                stmt_let = None;
+                in_cond = false;
+                in_let_cond = false;
+                j += 1;
+                continue;
+            }
+            "if" | "while" => {
+                in_cond = true;
+                j += 1;
+                continue;
+            }
+            "let" => {
+                if in_cond {
+                    in_let_cond = true;
+                }
+                let mut k = f.skip_trivia(j + 1);
+                if k < end && f.text(k) == "mut" {
+                    k = f.skip_trivia(k + 1);
+                }
+                if k < end
+                    && f.toks[k].kind == super::lex::TokKind::Ident
+                {
+                    stmt_let = Some(f.text(k).to_string());
+                }
+                j += 1;
+                continue;
+            }
+            _ => {}
+        }
+        if f.toks[j].kind != super::lex::TokKind::Ident {
+            j += 1;
+            continue;
+        }
+        let next = f.skip_trivia(j + 1);
+        let next_is = |s: &str| next < end && f.text(next) == s;
+
+        // drop(g): explicit release.
+        if t == "drop" && next_is("(") {
+            let k = f.skip_trivia(next + 1);
+            if k < end && f.toks[k].kind == super::lex::TokKind::Ident {
+                let var = f.text(k);
+                for g in guards.iter_mut() {
+                    if g.var.as_deref() == Some(var) {
+                        g.alive = false;
+                    }
+                }
+            }
+            j = next + 1;
+            continue;
+        }
+
+        // wait_or_recover(&cv, g, "ctx"): g's lock is released and
+        // reacquired; other held guards span a blocking wait.
+        if t == "wait_or_recover" && next_is("(") {
+            let args = split_args(f, next, end);
+            let waited: Option<&str> = args.get(1).and_then(|a| {
+                a.iter()
+                    .find(|&&k| {
+                        f.toks[k].kind == super::lex::TokKind::Ident
+                    })
+                    .map(|&k| f.text(k))
+            });
+            let waited_lock = waited.and_then(|v| {
+                guards
+                    .iter()
+                    .find(|g| g.alive && g.var.as_deref() == Some(v))
+                    .map(|g| g.lock.clone())
+            });
+            let others: Vec<String> = guards
+                .iter()
+                .filter(|g| {
+                    g.alive && Some(&g.lock) != waited_lock.as_ref()
+                })
+                .map(|g| g.lock.clone())
+                .collect();
+            if !others.is_empty() {
+                fx.blocking.push((
+                    others,
+                    "condvar wait (releases only its own lock)".into(),
+                    f.toks[j].line,
+                ));
+            }
+            j = skip_call(f, next, end);
+            continue;
+        }
+
+        // Helper-form acquisition.
+        if HELPER_ACQUIRE.contains(&t) && next_is("(") {
+            let args = split_args(f, next, end);
+            let lock = args
+                .first()
+                .map(|a| name_lock(f, d, a, structs))
+                .unwrap_or_else(|| format!("{}:<expr>", f.rel));
+            let ctx = args.get(1).and_then(|a| {
+                a.iter()
+                    .find(|&&k| {
+                        f.toks[k].kind == super::lex::TokKind::Str
+                    })
+                    .map(|&k| f.text(k).trim_matches('"').to_string())
+            });
+            let past = skip_call(f, next, end);
+            let (var, gdepth) = guard_binding(
+                f, past, end, &stmt_let, in_cond, in_let_cond, depth,
+            );
+            register_acquire(
+                &mut fx, &mut guards, var, lock, ctx, gdepth,
+                f.toks[j].line,
+            );
+            j = past;
+            continue;
+        }
+
+        // Method-form acquisition: recv.lock() / recv.read() /
+        // recv.write() with empty parens.
+        let prev = prev_sig(f, start, j);
+        let prev_is_dot = prev.is_some_and(|p| f.text(p) == ".");
+        if METHOD_ACQUIRE.contains(&t) && prev_is_dot && next_is("(") {
+            let after = f.skip_trivia(next + 1);
+            if after < end && f.text(after) == ")" {
+                let expr = receiver_chain(f, start, prev.unwrap());
+                let lock = name_lock(f, d, &expr, structs);
+                let (var, gdepth) = guard_binding(
+                    f,
+                    after + 1,
+                    end,
+                    &stmt_let,
+                    in_cond,
+                    in_let_cond,
+                    depth,
+                );
+                register_acquire(
+                    &mut fx, &mut guards, var, lock, None, gdepth,
+                    f.toks[j].line,
+                );
+                j = after + 1;
+                continue;
+            }
+        }
+
+        // Blocking operations under a live guard.
+        let held = live(&guards);
+        if !held.is_empty() {
+            if prev_is_dot && BLOCKING_METHODS.contains(&t) && next_is("(")
+            {
+                // `.join()`/`.wait(g)` etc. — but `.join(sep)` on
+                // slices is string work: require zero args for join.
+                let blocked = if t == "join" {
+                    let a = f.skip_trivia(next + 1);
+                    a < end && f.text(a) == ")"
+                } else {
+                    true
+                };
+                if blocked {
+                    fx.blocking.push((
+                        held.clone(),
+                        format!("`.{t}(…)`"),
+                        f.toks[j].line,
+                    ));
+                }
+            } else if !prev_is_dot && next_is("(") {
+                if let Some(p) = prev {
+                    if f.text(p) == ":" {
+                        if let Some(q) = path_qualifier(f, start, p) {
+                            if BLOCKING_PATHS
+                                .iter()
+                                .any(|(pq, pn)| *pq == q && *pn == t)
+                            {
+                                fx.blocking.push((
+                                    held.clone(),
+                                    format!("`{q}::{t}(…)`"),
+                                    f.toks[j].line,
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Call sites for interprocedural propagation.
+        if next_is("(") && !is_keyword(t) {
+            let (qualifier, self_call, method) = if prev_is_dot {
+                let chain = receiver_chain(f, start, prev.unwrap());
+                let only_self = chain.len() == 1
+                    && f.text(chain[0]) == "self";
+                let ty = receiver_type(f, d, &chain, structs);
+                (ty, only_self, true)
+            } else if prev.is_some_and(|p| f.text(p) == ":") {
+                let q = path_qualifier(f, start, prev.unwrap());
+                let q = q.map(|q| {
+                    if q == "Self" {
+                        d.owner.clone().unwrap_or(q)
+                    } else {
+                        q
+                    }
+                });
+                (q.clone(), q.is_some() && q == d.owner, false)
+            } else {
+                (None, false, false)
+            };
+            fx.calls.push(CallSite {
+                name: t.to_string(),
+                qualifier,
+                self_call,
+                method,
+                held: held.clone(),
+                line: f.toks[j].line,
+            });
+        }
+        j += 1;
+    }
+    fx
+}
+
+/// How an acquire binds. An `if let`/`while let` scrutinee guard lives
+/// exactly for the conditional's block (sentinel var, one level
+/// deeper); a plain condition guard dies at the block's `{`; a direct
+/// `let g = acquire(…);` — where the call is the *whole* initializer —
+/// binds to `g`; anything else (a `let x = acquire(…).chain()` where
+/// `x` keeps only the chained result, or a bare expression) is a
+/// statement temporary that dies at the `;`.
+fn guard_binding(
+    f: &ParsedFile,
+    past_call: usize,
+    end: usize,
+    stmt_let: &Option<String>,
+    in_cond: bool,
+    in_let_cond: bool,
+    depth: usize,
+) -> (Option<String>, usize) {
+    if in_let_cond {
+        return (Some(IF_LET_GUARD.to_string()), depth + 1);
+    }
+    if in_cond {
+        return (Some(COND_GUARD.to_string()), depth);
+    }
+    let after = f.skip_trivia(past_call);
+    let whole_init = after < end && f.text(after) == ";";
+    match (whole_init, stmt_let) {
+        (true, Some(v)) => (Some(v.clone()), depth),
+        _ => (None, depth),
+    }
+}
+
+fn register_acquire(
+    fx: &mut FnFacts,
+    guards: &mut Vec<LiveGuard>,
+    var: Option<String>,
+    lock: String,
+    ctx: Option<String>,
+    depth: usize,
+    line: u32,
+) {
+    let acq = Acquire {
+        lock: lock.clone(),
+        ctx,
+        line,
+    };
+    for g in guards.iter() {
+        if g.alive {
+            fx.nested.push((g.lock.clone(), acq.clone()));
+        }
+    }
+    // A shadowing rebind (`let g = lock(…)` with `g` already a live
+    // guard) releases the old guard first. Sentinel vars never rebind.
+    if let Some(v) = var.as_deref() {
+        if !v.starts_with('<') {
+            for g in guards.iter_mut() {
+                if g.var.as_deref() == Some(v) {
+                    g.alive = false;
+                }
+            }
+        }
+    }
+    fx.acquires.push(acq);
+    guards.push(LiveGuard {
+        var,
+        lock,
+        depth,
+        alive: true,
+    });
+}
+
+/// Index of the previous non-trivia token before `j` (≥ `start`).
+fn prev_sig(f: &ParsedFile, start: usize, j: usize) -> Option<usize> {
+    let mut k = j;
+    while k > start {
+        k -= 1;
+        if !f.toks[k].is_trivia() {
+            return Some(k);
+        }
+    }
+    None
+}
+
+/// Walking back from a `.` at index `dot`, collect the receiver's
+/// `a.b.c` ident chain (in source order). Stops at anything fancier
+/// (calls, indexing) — those receivers resolve as locals.
+fn receiver_chain(f: &ParsedFile, start: usize, dot: usize) -> Vec<usize> {
+    let mut chain = Vec::new();
+    let mut k = dot;
+    let mut expect_ident = true;
+    while let Some(p) = prev_sig(f, start, k) {
+        let t = f.text(p);
+        if expect_ident {
+            if f.toks[p].kind == super::lex::TokKind::Ident {
+                chain.push(p);
+                expect_ident = false;
+                k = p;
+                continue;
+            }
+            break;
+        }
+        if t == "." {
+            expect_ident = true;
+            k = p;
+            continue;
+        }
+        break;
+    }
+    chain.reverse();
+    chain
+}
+
+/// Resolve a receiver chain (`self.field.sub` / `param.field`) to the
+/// type whose method is being called. `None` for local receivers:
+/// method calls on unresolvable receivers are deliberately never
+/// matched by name, because std collections share method names
+/// (`insert`, `entry`, `clone`) with crate types.
+fn receiver_type(
+    f: &ParsedFile,
+    d: &FnDef,
+    chain: &[usize],
+    structs: &HashMap<&str, &super::parse::StructDef>,
+) -> Option<String> {
+    let (&first, rest) = chain.split_first()?;
+    let mut cur = if f.text(first) == "self" {
+        d.owner.clone()?
+    } else {
+        let name = f.text(first);
+        let ty = d
+            .params
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, ty)| base_type(ty))?;
+        if ty.is_empty() {
+            return None;
+        }
+        ty
+    };
+    for &seg in rest {
+        let seg = f.text(seg);
+        let ty = structs
+            .get(cur.as_str())
+            .and_then(|s| s.fields.iter().find(|(n, _)| n == seg))
+            .map(|(_, ty)| base_type(ty))?;
+        if ty.is_empty() {
+            return None;
+        }
+        cur = ty;
+    }
+    Some(cur)
+}
+
+/// For an ident at a `Path :: name(` call, the qualifier ident two
+/// colons back (`p` is the second `:`).
+fn path_qualifier<'a>(
+    f: &'a ParsedFile,
+    start: usize,
+    p: usize,
+) -> Option<&'a str> {
+    let c1 = prev_sig(f, start, p)?;
+    if f.text(c1) != ":" {
+        return None;
+    }
+    let q = prev_sig(f, start, c1)?;
+    (f.toks[q].kind == super::lex::TokKind::Ident).then(|| f.text(q))
+}
+
+/// Token-index lists of a call's comma-separated top-level arguments;
+/// `open` is the `(`.
+fn split_args(f: &ParsedFile, open: usize, end: usize) -> Vec<Vec<usize>> {
+    let mut args = Vec::new();
+    let mut cur = Vec::new();
+    let mut depth = 0i32;
+    let mut j = open;
+    while j < end {
+        let t = f.text(j);
+        if f.toks[j].kind == super::lex::TokKind::Punct {
+            match t {
+                "(" | "[" | "{" => {
+                    depth += 1;
+                    if depth == 1 {
+                        j += 1;
+                        continue;
+                    }
+                }
+                ")" | "]" | "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                "," if depth == 1 => {
+                    args.push(std::mem::take(&mut cur));
+                    j += 1;
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        if depth >= 1 && !f.toks[j].is_trivia() {
+            cur.push(j);
+        }
+        j += 1;
+    }
+    if !cur.is_empty() {
+        args.push(cur);
+    }
+    args
+}
+
+/// Index just past a call's closing paren; `open` is the `(`.
+fn skip_call(f: &ParsedFile, open: usize, end: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = open;
+    while j < end {
+        if f.toks[j].kind == super::lex::TokKind::Punct {
+            match f.text(j) {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return j + 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        j += 1;
+    }
+    end
+}
+
+fn is_keyword(t: &str) -> bool {
+    matches!(
+        t,
+        "if" | "while"
+            | "for"
+            | "match"
+            | "return"
+            | "loop"
+            | "move"
+            | "unsafe"
+            | "drop"
+            | "Some"
+            | "Ok"
+            | "Err"
+            | "None"
+            | "vec"
+            | "assert"
+            | "panic"
+    )
+}
+
+/// The unique crate-wide *free* fn with this name, if any. Methods are
+/// excluded: they cannot be called by bare name, and letting them match
+/// would alias std method names onto crate types.
+fn unique_free_fn(
+    by_name: &HashMap<&str, Vec<usize>>,
+    facts: &[FnFacts],
+    name: &str,
+) -> Option<usize> {
+    match by_name.get(name) {
+        Some(v) if v.len() == 1 && facts[v[0]].owner.is_none() => {
+            Some(v[0])
+        }
+        _ => None,
+    }
+}
+
+fn build_graph(facts: &[FnFacts]) -> LockGraph {
+    let mut graph = LockGraph::default();
+    // Nodes: every acquisition site, keyed by canonical name.
+    for fx in facts {
+        for a in &fx.acquires {
+            let ctxs = graph.nodes.entry(a.lock.clone()).or_default();
+            if let Some(c) = &a.ctx {
+                ctxs.insert(c.clone());
+            }
+        }
+    }
+    // Direct edges from same-fn nesting.
+    let mut seen: HashSet<(String, String, Option<String>)> =
+        HashSet::new();
+    for fx in facts {
+        for (held, acq) in &fx.nested {
+            if seen.insert((held.clone(), acq.lock.clone(), None)) {
+                graph.edges.push(Edge {
+                    from: held.clone(),
+                    to: acq.lock.clone(),
+                    file: fx.file.clone(),
+                    line: acq.line,
+                    via: None,
+                });
+            }
+        }
+    }
+    // Interprocedural: fixpoint of transitively-acquired lock sets over
+    // the resolved call graph.
+    let by_owner: HashMap<(Option<&str>, &str), usize> = facts
+        .iter()
+        .enumerate()
+        .map(|(i, fx)| ((fx.owner.as_deref(), fx.name.as_str()), i))
+        .collect();
+    let mut by_name: HashMap<&str, Vec<usize>> = HashMap::new();
+    for (i, fx) in facts.iter().enumerate() {
+        by_name.entry(fx.name.as_str()).or_default().push(i);
+    }
+    let resolve = |c: &CallSite| -> Option<usize> {
+        if let Some(q) = &c.qualifier {
+            let hit = by_owner
+                .get(&(Some(q.as_str()), c.name.as_str()))
+                .copied();
+            if hit.is_some() || c.method || c.self_call {
+                return hit;
+            }
+            // A `mod::free_fn(…)` path misses by_owner; fall through
+            // to the unique-name rule, but only onto a free fn —
+            // `File::create` must not resolve to a type's `create`.
+            return unique_free_fn(&by_name, facts, c.name.as_str());
+        }
+        if c.method {
+            // Method call on an unresolvable (local) receiver: skipped
+            // rather than name-matched (see module docs).
+            return None;
+        }
+        // Bare call: only a free fn can be called unqualified.
+        unique_free_fn(&by_name, facts, c.name.as_str())
+    };
+    let mut acq_sets: Vec<HashSet<String>> = facts
+        .iter()
+        .map(|fx| {
+            fx.acquires.iter().map(|a| a.lock.clone()).collect()
+        })
+        .collect();
+    loop {
+        let mut changed = false;
+        for (i, fx) in facts.iter().enumerate() {
+            for c in &fx.calls {
+                let Some(t) = resolve(c) else { continue };
+                if t == i {
+                    continue;
+                }
+                let add: Vec<String> = acq_sets[t]
+                    .iter()
+                    .filter(|l| !acq_sets[i].contains(*l))
+                    .cloned()
+                    .collect();
+                if !add.is_empty() {
+                    changed = true;
+                    acq_sets[i].extend(add);
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    for fx in facts {
+        for c in &fx.calls {
+            if c.held.is_empty() {
+                continue;
+            }
+            let Some(t) = resolve(c) else { continue };
+            for to in &acq_sets[t] {
+                for from in &c.held {
+                    let via = Some(facts[t].qual.clone());
+                    let k = (from.clone(), to.clone(), via.clone());
+                    if seen.insert(k) {
+                        graph.edges.push(Edge {
+                            from: from.clone(),
+                            to: to.clone(),
+                            file: fx.file.clone(),
+                            line: c.line,
+                            via,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    graph
+}
+
+/// Report every cycle in the lock-order graph (incl. self-edges) as a
+/// potential deadlock, one finding per strongly-connected component.
+fn cycle_findings(graph: &LockGraph) -> Vec<Finding> {
+    let nodes: Vec<&String> = graph.nodes.keys().collect();
+    let idx: HashMap<&str, usize> = nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| (n.as_str(), i))
+        .collect();
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+    for e in &graph.edges {
+        if let (Some(&a), Some(&b)) =
+            (idx.get(e.from.as_str()), idx.get(e.to.as_str()))
+        {
+            adj[a].push(b);
+        }
+    }
+    // Tarjan SCC, iterative.
+    let n = nodes.len();
+    let mut index = vec![usize::MAX; n];
+    let mut low = vec![0usize; n];
+    let mut on_stack = vec![false; n];
+    let mut stack: Vec<usize> = Vec::new();
+    let mut sccs: Vec<Vec<usize>> = Vec::new();
+    let mut counter = 0usize;
+    for root in 0..n {
+        if index[root] != usize::MAX {
+            continue;
+        }
+        let mut work: Vec<(usize, usize)> = vec![(root, 0)];
+        while let Some(&mut (v, ref mut pi)) = work.last_mut() {
+            if *pi == 0 {
+                index[v] = counter;
+                low[v] = counter;
+                counter += 1;
+                stack.push(v);
+                on_stack[v] = true;
+            }
+            if *pi < adj[v].len() {
+                let w = adj[v][*pi];
+                *pi += 1;
+                if index[w] == usize::MAX {
+                    work.push((w, 0));
+                } else if on_stack[w] {
+                    low[v] = low[v].min(index[w]);
+                }
+            } else {
+                if low[v] == index[v] {
+                    let mut scc = Vec::new();
+                    while let Some(w) = stack.pop() {
+                        on_stack[w] = false;
+                        scc.push(w);
+                        if w == v {
+                            break;
+                        }
+                    }
+                    sccs.push(scc);
+                }
+                work.pop();
+                if let Some(&mut (u, _)) = work.last_mut() {
+                    low[u] = low[u].min(low[v]);
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for scc in sccs {
+        let cyclic = scc.len() > 1
+            || adj[scc[0]].contains(&scc[0]);
+        if !cyclic {
+            continue;
+        }
+        let mut names: Vec<&str> =
+            scc.iter().map(|&i| nodes[i].as_str()).collect();
+        names.sort_unstable();
+        // Anchor the finding at one edge inside the component.
+        let member: HashSet<&str> = names.iter().copied().collect();
+        let site = graph
+            .edges
+            .iter()
+            .find(|e| {
+                member.contains(e.from.as_str())
+                    && member.contains(e.to.as_str())
+            })
+            .map(|e| (e.file.clone(), e.line))
+            .unwrap_or_default();
+        out.push(Finding {
+            lint: "lock-order-cycle".into(),
+            file: site.0,
+            line: site.1,
+            msg: format!(
+                "potential deadlock: lock-order cycle through {}",
+                names.join(" -> ")
+            ),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::parse::ParsedFile;
+
+    fn analyze_src(src: &str) -> (Vec<Finding>, LockGraph) {
+        let files = vec![ParsedFile::parse("fix.rs", src.to_string())];
+        analyze(&files)
+    }
+
+    fn edge_pairs(g: &LockGraph) -> Vec<(&str, &str)> {
+        g.edges
+            .iter()
+            .map(|e| (e.from.as_str(), e.to.as_str()))
+            .collect()
+    }
+
+    #[test]
+    fn opposite_lock_orders_are_a_cycle() {
+        let src = r#"
+pub struct Pair { left: Mutex<u32>, right: Mutex<u32> }
+impl Pair {
+    pub fn forward(&self) {
+        let _a = lock_or_recover(&self.left, "left");
+        let _b = lock_or_recover(&self.right, "right");
+    }
+    pub fn backward(&self) {
+        let _b = lock_or_recover(&self.right, "right");
+        let _a = lock_or_recover(&self.left, "left");
+    }
+}
+"#;
+        let (findings, graph) = analyze_src(src);
+        assert_eq!(
+            edge_pairs(&graph),
+            vec![
+                ("Pair.left", "Pair.right"),
+                ("Pair.right", "Pair.left")
+            ]
+        );
+        let cycle = findings
+            .iter()
+            .find(|f| f.lint == "lock-order-cycle")
+            .expect("cycle reported");
+        assert!(cycle.msg.contains("Pair.left -> Pair.right"));
+    }
+
+    #[test]
+    fn blocking_call_under_guard_is_flagged_at_its_line() {
+        let src = r#"
+pub struct Q { state: Mutex<u32> }
+pub fn drain(q: &Q, rx: &Receiver<u32>) {
+    let _g = lock_or_recover(&q.state, "q state");
+    let _v = rx.recv();
+}
+"#;
+        let (findings, _) = analyze_src(src);
+        let f = findings
+            .iter()
+            .find(|f| f.lint == "blocking-under-lock")
+            .expect("blocking reported");
+        assert_eq!((f.file.as_str(), f.line), ("fix.rs", 5));
+        assert!(f.msg.contains("Q.state"), "{}", f.msg);
+    }
+
+    /// `let x = acquire(…).chain()` keeps only the chained result: the
+    /// guard is a statement temporary, not held for the rest of the fn.
+    #[test]
+    fn chained_initializer_guard_is_a_temporary() {
+        let src = r#"
+pub struct S { a: Mutex<Vec<u32>>, b: Mutex<u32> }
+impl S {
+    pub fn f(&self) -> usize {
+        let n = lock_or_recover(&self.a, "a").len();
+        let _g = lock_or_recover(&self.b, "b");
+        n
+    }
+}
+"#;
+        let (findings, graph) = analyze_src(src);
+        assert!(graph.edges.is_empty(), "{:?}", graph.edges);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    /// Rust 2021: an `if let` scrutinee temporary lives exactly for the
+    /// conditional's block — held inside it, dead after it.
+    #[test]
+    fn if_let_scrutinee_guard_scopes_to_its_block() {
+        let src = r#"
+pub struct S { a: Mutex<u32>, b: Mutex<u32>, c: Mutex<u32> }
+impl S {
+    pub fn f(&self) -> u32 {
+        if let Some(v) = lock_or_recover(&self.a, "a").checked_add(1) {
+            let _g = lock_or_recover(&self.b, "b");
+            return v;
+        }
+        let _h = lock_or_recover(&self.c, "c");
+        0
+    }
+}
+"#;
+        let (_, graph) = analyze_src(src);
+        assert_eq!(edge_pairs(&graph), vec![("S.a", "S.b")]);
+    }
+
+    /// A plain `if`/`while` condition temporary drops before the block
+    /// body runs.
+    #[test]
+    fn plain_condition_guard_dies_at_the_block() {
+        let src = r#"
+pub struct S { a: Mutex<u32>, b: Mutex<u32> }
+impl S {
+    pub fn f(&self) {
+        if *lock_or_recover(&self.a, "a") == 0 {
+            let _g = lock_or_recover(&self.b, "b");
+        }
+    }
+}
+"#;
+        let (_, graph) = analyze_src(src);
+        assert!(graph.edges.is_empty(), "{:?}", graph.edges);
+    }
+
+    /// Std collections share method names with crate types; a method
+    /// call on a local receiver must never resolve to a crate fn.
+    #[test]
+    fn local_receiver_methods_never_resolve_to_crate_fns() {
+        let src = r#"
+pub struct Registry { names: Mutex<u32> }
+impl Registry {
+    pub fn insert(&self) {
+        let _g = lock_or_recover(&self.names, "names");
+    }
+}
+pub struct Holder { m: Mutex<u32> }
+impl Holder {
+    pub fn run(&self) {
+        let _g = lock_or_recover(&self.m, "m");
+        let mut map = HashMap::new();
+        map.insert(1, 2);
+    }
+}
+"#;
+        let (findings, graph) = analyze_src(src);
+        assert!(
+            graph.edges.is_empty(),
+            "std `.insert()` aliased onto Registry::insert: {:?}",
+            graph.edges
+        );
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    /// `self.field.m(…)` resolves through the field's declared type, so
+    /// interprocedural edges cross impl boundaries.
+    #[test]
+    fn field_receiver_resolves_through_struct_types() {
+        let src = r#"
+pub struct Inner { bits: Mutex<u32> }
+impl Inner {
+    pub fn touch(&self) {
+        let _g = lock_or_recover(&self.bits, "bits");
+    }
+}
+pub struct Outer { inner: Inner, m: Mutex<u32> }
+impl Outer {
+    pub fn run(&self) {
+        let _g = lock_or_recover(&self.m, "m");
+        self.inner.touch();
+    }
+}
+"#;
+        let (_, graph) = analyze_src(src);
+        assert_eq!(edge_pairs(&graph), vec![("Outer.m", "Inner.bits")]);
+        assert_eq!(graph.edges[0].via.as_deref(), Some("Inner::touch"));
+    }
+
+    /// Re-locking a held lock through a callee is a self-edge, reported
+    /// as a cycle.
+    #[test]
+    fn relocking_through_a_callee_is_a_self_edge_cycle() {
+        let src = r#"
+pub struct S { m: Mutex<u32> }
+impl S {
+    pub fn outer(&self) {
+        let _g = lock_or_recover(&self.m, "m");
+        self.inner_op();
+    }
+    pub fn inner_op(&self) {
+        let _g = lock_or_recover(&self.m, "m");
+    }
+}
+"#;
+        let (findings, graph) = analyze_src(src);
+        assert!(edge_pairs(&graph).contains(&("S.m", "S.m")));
+        assert!(findings
+            .iter()
+            .any(|f| f.lint == "lock-order-cycle"
+                && f.msg.contains("S.m")));
+    }
+
+    /// `Type::method(…)` path calls resolve only against that type's
+    /// impl — a miss must not fall back onto a same-named method of a
+    /// different type.
+    #[test]
+    fn qualified_miss_does_not_alias_other_types_methods() {
+        let src = r#"
+pub struct Cluster { files: Mutex<u32> }
+impl Cluster {
+    pub fn create(&self) {
+        let _g = lock_or_recover(&self.files, "files");
+    }
+}
+pub struct W { m: Mutex<u32> }
+impl W {
+    pub fn run(&self) {
+        let _g = lock_or_recover(&self.m, "m");
+        let _f = File::create("x");
+    }
+}
+"#;
+        let (_, graph) = analyze_src(src);
+        assert!(
+            graph.edges.is_empty(),
+            "File::create aliased onto Cluster::create: {:?}",
+            graph.edges
+        );
+    }
+}

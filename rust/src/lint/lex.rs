@@ -1,0 +1,544 @@
+//! A minimal, total Rust tokenizer for the lint engine.
+//!
+//! Produces a flat token stream whose spans exactly tile the input —
+//! nothing is skipped or merged, so `respell` (concatenating the spans)
+//! reproduces the source byte-for-byte. That round-trip is the
+//! correctness contract (property-tested in this module's tests): if a
+//! string literal or comment were mis-lexed, downstream passes would
+//! "see" code that is really data, which is exactly the failure mode
+//! the v1 string scanner lived with.
+//!
+//! The lexer is total: malformed input (an unterminated string, a stray
+//! byte) still lexes — the broken construct runs to end-of-file as a
+//! single token. A linter must never refuse to look at a file.
+//!
+//! Handled beyond the obvious: nested block comments, raw strings with
+//! arbitrary `#` fencing (`r##"…"##`), byte and byte-raw strings, raw
+//! identifiers (`r#type`), and the `'a` lifetime vs `'a'` char-literal
+//! ambiguity.
+
+/// Token class. `Trivia` covers whitespace; comments keep their own
+/// kinds because the allowlist and documented-`Relaxed` lints read them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    Num,
+    Str,
+    Char,
+    LineComment,
+    BlockComment,
+    Punct,
+    Trivia,
+}
+
+/// One token: a half-open byte span into the source plus the 1-based
+/// line its first byte sits on.
+#[derive(Clone, Copy, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub start: usize,
+    pub end: usize,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn text<'a>(&self, src: &'a str) -> &'a str {
+        &src[self.start..self.end]
+    }
+
+    pub fn is_trivia(&self) -> bool {
+        matches!(
+            self.kind,
+            TokKind::Trivia | TokKind::LineComment | TokKind::BlockComment
+        )
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+struct Lexer<'a> {
+    src: &'a str,
+    bytes: &'a [u8],
+    pos: usize,
+    line: u32,
+}
+
+impl<'a> Lexer<'a> {
+    fn peek_char(&self) -> Option<char> {
+        self.src[self.pos..].chars().next()
+    }
+
+    fn peek_at(&self, off: usize) -> Option<u8> {
+        self.bytes.get(self.pos + off).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek_char()?;
+        if c == '\n' {
+            self.line += 1;
+        }
+        self.pos += c.len_utf8();
+        Some(c)
+    }
+
+    /// Consume chars while `f` holds.
+    fn eat_while(&mut self, f: impl Fn(char) -> bool) {
+        while let Some(c) = self.peek_char() {
+            if f(c) {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Consume a `"…"` body (opening quote already consumed), honoring
+    /// `\` escapes. Unterminated strings run to EOF.
+    fn eat_quoted(&mut self) {
+        while let Some(c) = self.bump() {
+            match c {
+                '\\' => {
+                    self.bump();
+                }
+                '"' => return,
+                _ => {}
+            }
+        }
+    }
+
+    /// Consume a raw-string body: `#…#"…"#…#` with `hashes` fence marks
+    /// (the leading hashes and opening quote already consumed).
+    fn eat_raw(&mut self, hashes: usize) {
+        while let Some(c) = self.bump() {
+            if c == '"' {
+                let mut n = 0;
+                while n < hashes && self.peek_char() == Some('#') {
+                    self.bump();
+                    n += 1;
+                }
+                if n == hashes {
+                    return;
+                }
+            }
+        }
+    }
+
+    /// True when the bytes at `pos + off` open a raw string: zero or
+    /// more `#` then `"`.
+    fn raw_string_ahead(&self, off: usize) -> Option<usize> {
+        let mut hashes = 0;
+        while self.peek_at(off + hashes) == Some(b'#') {
+            hashes += 1;
+        }
+        (self.peek_at(off + hashes) == Some(b'"')).then_some(hashes)
+    }
+
+    fn next_token(&mut self) -> Option<Tok> {
+        let start = self.pos;
+        let line = self.line;
+        let c = self.peek_char()?;
+        let kind = match c {
+            c if c.is_whitespace() => {
+                self.eat_while(char::is_whitespace);
+                TokKind::Trivia
+            }
+            '/' if self.peek_at(1) == Some(b'/') => {
+                self.eat_while(|c| c != '\n');
+                TokKind::LineComment
+            }
+            '/' if self.peek_at(1) == Some(b'*') => {
+                self.bump();
+                self.bump();
+                let mut depth = 1usize;
+                while depth > 0 {
+                    match self.bump() {
+                        None => break,
+                        Some('*') if self.peek_char() == Some('/') => {
+                            self.bump();
+                            depth -= 1;
+                        }
+                        Some('/') if self.peek_char() == Some('*') => {
+                            self.bump();
+                            depth += 1;
+                        }
+                        Some(_) => {}
+                    }
+                }
+                TokKind::BlockComment
+            }
+            '"' => {
+                self.bump();
+                self.eat_quoted();
+                TokKind::Str
+            }
+            'r' | 'b' if self.string_prefix_ahead() => {
+                // r"…" / r#"…"# / b"…" / br#"…"# / b'…'
+                if c == 'b' && self.peek_at(1) == Some(b'\'') {
+                    self.bump();
+                    self.bump();
+                    self.eat_char_body();
+                    TokKind::Char
+                } else {
+                    let mut off = 1;
+                    if c == 'b' && self.peek_at(1) == Some(b'r') {
+                        off = 2;
+                    }
+                    let hashes = self.raw_string_ahead(off).unwrap_or(0);
+                    for _ in 0..off + hashes + 1 {
+                        self.bump();
+                    }
+                    self.eat_raw(hashes);
+                    TokKind::Str
+                }
+            }
+            'r' if self.peek_at(1) == Some(b'#')
+                && self
+                    .src[self.pos + 2..]
+                    .chars()
+                    .next()
+                    .is_some_and(is_ident_start) =>
+            {
+                // Raw identifier r#type.
+                self.bump();
+                self.bump();
+                self.eat_while(is_ident_continue);
+                TokKind::Ident
+            }
+            '\'' => {
+                self.bump();
+                self.lifetime_or_char()
+            }
+            c if is_ident_start(c) => {
+                self.eat_while(is_ident_continue);
+                TokKind::Ident
+            }
+            c if c.is_ascii_digit() => {
+                self.eat_number();
+                TokKind::Num
+            }
+            _ => {
+                self.bump();
+                TokKind::Punct
+            }
+        };
+        Some(Tok {
+            kind,
+            start,
+            end: self.pos,
+            line,
+        })
+    }
+
+    /// At an `r` or `b`: does a string (or byte-char) literal start
+    /// here, as opposed to an ordinary identifier like `rows`?
+    fn string_prefix_ahead(&self) -> bool {
+        match self.peek_at(0) {
+            Some(b'r') => self.raw_string_ahead(1).is_some(),
+            Some(b'b') => match self.peek_at(1) {
+                Some(b'"') | Some(b'\'') => true,
+                Some(b'r') => self.raw_string_ahead(2).is_some(),
+                _ => false,
+            },
+            _ => false,
+        }
+    }
+
+    /// After a consumed `'`: disambiguate `'a` (lifetime) from `'a'`
+    /// (char). A lifetime is ident-shaped with no closing quote.
+    fn lifetime_or_char(&mut self) -> TokKind {
+        match self.peek_char() {
+            Some('\\') => {
+                self.bump();
+                self.bump();
+                self.eat_char_body();
+                TokKind::Char
+            }
+            Some(c) if is_ident_start(c) => {
+                // Could be 'a (lifetime) or 'a' (char) or 'static.
+                let mut probe = self.pos + c.len_utf8();
+                while let Some(n) = self.src[probe..].chars().next() {
+                    if is_ident_continue(n) {
+                        probe += n.len_utf8();
+                    } else {
+                        break;
+                    }
+                }
+                if self.src[probe..].starts_with('\'') {
+                    self.eat_while(is_ident_continue);
+                    self.bump(); // closing quote
+                    TokKind::Char
+                } else {
+                    self.eat_while(is_ident_continue);
+                    TokKind::Lifetime
+                }
+            }
+            Some(_) => {
+                self.bump();
+                self.eat_char_body();
+                TokKind::Char
+            }
+            None => TokKind::Punct,
+        }
+    }
+
+    /// Consume up to and including the closing `'` of a char literal
+    /// whose first content char was already consumed (covers multi-byte
+    /// escapes like `'\u{1F600}'`).
+    fn eat_char_body(&mut self) {
+        while let Some(c) = self.peek_char() {
+            self.bump();
+            if c == '\'' {
+                return;
+            }
+            if c == '\\' {
+                self.bump();
+            }
+        }
+    }
+
+    fn eat_number(&mut self) {
+        self.eat_while(|c| c.is_ascii_alphanumeric() || c == '_');
+        // A fraction: `.` followed by a digit (so `0..10` stays three
+        // tokens and `x.1` tuple indexing is untouched).
+        if self.peek_char() == Some('.')
+            && self.src[self.pos + 1..]
+                .chars()
+                .next()
+                .is_some_and(|c| c.is_ascii_digit())
+        {
+            self.bump();
+            self.eat_while(|c| c.is_ascii_alphanumeric() || c == '_');
+        }
+    }
+}
+
+/// Tokenize `src`. Total: every byte of the input lands in exactly one
+/// token, in order.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let mut lx = Lexer {
+        src,
+        bytes: src.as_bytes(),
+        pos: 0,
+        line: 1,
+    };
+    let mut out = Vec::with_capacity(src.len() / 4);
+    while let Some(t) = lx.next_token() {
+        out.push(t);
+    }
+    out
+}
+
+/// Reassemble the exact source from its tokens — the inverse of [`lex`].
+pub fn respell(src: &str, toks: &[Tok]) -> String {
+    toks.iter().map(|t| t.text(src)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src)
+            .iter()
+            .filter(|t| !t.is_trivia())
+            .map(|t| (t.kind, t.text(src).to_string()))
+            .collect()
+    }
+
+    /// Spans must tile the input: contiguous, in order, covering.
+    fn assert_tiles(src: &str) {
+        let toks = lex(src);
+        let mut at = 0;
+        for t in &toks {
+            assert_eq!(t.start, at, "gap or overlap in {src:?}");
+            assert!(t.end > t.start, "empty token in {src:?}");
+            at = t.end;
+        }
+        assert_eq!(at, src.len(), "tokens do not cover {src:?}");
+        assert_eq!(respell(src, &toks), src);
+    }
+
+    #[test]
+    fn strings_and_comments_are_opaque() {
+        let src = r#"let s = "a // not a comment {"; // real
+let t = 1;"#;
+        assert_tiles(src);
+        let ks = kinds(src);
+        assert!(ks
+            .iter()
+            .any(|(k, t)| *k == TokKind::Str && t.contains("not a comment")));
+        assert!(!ks.iter().any(|(_, t)| t == "real"));
+        // The `{` inside the string must not surface as punctuation.
+        assert_eq!(ks.iter().filter(|(_, t)| t == "{").count(), 0);
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        for src in [
+            r##"x(r"a\") ; "##,
+            r###"x(r#"quote " inside"# )"###,
+            r#"x(b"bytes\xff")"#,
+            r###"x(br#"raw " bytes"#)"###,
+        ] {
+            assert_tiles(src);
+            assert_eq!(
+                kinds(src)
+                    .iter()
+                    .filter(|(k, _)| *k == TokKind::Str)
+                    .count(),
+                1,
+                "in {src:?}"
+            );
+        }
+        // `r` and `b` as plain identifiers are untouched.
+        assert_eq!(kinds("r + b")[0].0, TokKind::Ident);
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let ks = kinds("fn f<'a>(x: &'a str) { let c = 'a'; let n = '\\n'; }");
+        assert_eq!(
+            ks.iter().filter(|(k, _)| *k == TokKind::Lifetime).count(),
+            2
+        );
+        assert_eq!(
+            ks.iter().filter(|(k, _)| *k == TokKind::Char).count(),
+            2
+        );
+        assert_tiles("let s: &'static str = \"x\"; let q = '\\u{1F600}';");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* outer /* inner */ still */ b";
+        assert_tiles(src);
+        let ks = kinds(src);
+        assert_eq!(ks.len(), 2, "{ks:?}");
+        assert_eq!(ks[1].1, "b");
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges() {
+        let ks = kinds("0..10");
+        assert_eq!(
+            ks.iter().map(|(_, t)| t.as_str()).collect::<Vec<_>>(),
+            vec!["0", ".", ".", "10"]
+        );
+        assert_eq!(kinds("1.5e-3")[0].1, "1.5e");
+        assert_tiles("let x = 0xff_u64 + 1.25 + 2e9;");
+    }
+
+    #[test]
+    fn unterminated_constructs_lex_to_eof() {
+        for src in ["\"never closed", "/* never closed", "r#\"open", "'\\"] {
+            assert_tiles(src);
+        }
+    }
+
+    /// Property: for arbitrary token soup — including adversarial
+    /// string/comment content — spans tile the source, `respell` is the
+    /// identity, and content hidden in strings/line-comments never
+    /// leaks out as code tokens.
+    #[test]
+    fn prop_lex_respell_round_trip() {
+        check("lex round trip", 128, |g| {
+            let (src, marker_in_data) = gen_source(g);
+            let toks = lex(&src);
+            let mut at = 0;
+            for t in &toks {
+                if t.start != at || t.end <= t.start {
+                    return Err(format!("span break at {at} in {src:?}"));
+                }
+                at = t.end;
+            }
+            if at != src.len() {
+                return Err(format!("coverage stops at {at} in {src:?}"));
+            }
+            if respell(&src, &toks) != src {
+                return Err(format!("respell mismatch for {src:?}"));
+            }
+            // The marker ident was only ever written inside string or
+            // comment bodies; it must not appear as an Ident token.
+            if marker_in_data
+                && toks.iter().any(|t| {
+                    t.kind == TokKind::Ident && t.text(&src) == "NEEDLE"
+                })
+            {
+                return Err(format!("data leaked as code in {src:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Random source: a mix of plain code atoms and data atoms (strings
+    /// and comments) whose bodies contain code-shaped text, quotes, and
+    /// the `NEEDLE` marker. Returns whether any data atom was emitted.
+    fn gen_source(g: &mut Gen) -> (String, bool) {
+        let mut out = String::new();
+        let mut data = false;
+        let n = g.usize(1..20);
+        for _ in 0..n {
+            match g.usize(0..10) {
+                0 => {
+                    let body = gen_payload(g, false);
+                    out.push_str(&format!("\"{body}\" "));
+                    data = true;
+                }
+                1 => {
+                    let hashes = "#".repeat(g.usize(0..3));
+                    // Raw-string payload must not contain the fence.
+                    let body = gen_payload(g, true)
+                        .replace('"', "q")
+                        .replace('\\', "s");
+                    out.push_str(&format!("r{hashes}\"{body}\"{hashes} "));
+                    data = true;
+                }
+                2 => {
+                    let body = gen_payload(g, true).replace('\n', " ");
+                    out.push_str(&format!("// {body}\n"));
+                    data = true;
+                }
+                3 => {
+                    let body = gen_payload(g, true)
+                        .replace('*', "x")
+                        .replace('/', "y");
+                    out.push_str(&format!("/* {body} */ "));
+                    data = true;
+                }
+                4 => out.push_str("'x' "),
+                5 => out.push_str("&'a x "),
+                6 => out.push_str(&format!("{} ", g.u64(0..1000))),
+                7 => out.push_str("{ x.y(z) } "),
+                8 => out.push_str("let v = w; "),
+                _ => out.push_str(&g.string(8)),
+            }
+        }
+        (out, data)
+    }
+
+    /// String/comment body text laced with code-shaped fragments. When
+    /// `raw` is false the result is escape-valid for a `"…"` literal.
+    fn gen_payload(g: &mut Gen, raw: bool) -> String {
+        let mut s = String::new();
+        for _ in 0..g.usize(0..4) {
+            match g.usize(0..6) {
+                0 => s.push_str("NEEDLE"),
+                1 => s.push_str("// nested"),
+                2 => s.push_str(if raw { "'" } else { "\\\"" }),
+                3 => s.push_str("{ } ( )"),
+                4 => s.push_str(&g.string(6)),
+                _ => s.push_str("lock_or_recover"),
+            }
+            s.push(' ');
+        }
+        s
+    }
+}

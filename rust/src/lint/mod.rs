@@ -1,8 +1,22 @@
-//! Repo-invariant lints — cheap textual checks that make "add a field,
-//! forget a site" a CI failure instead of a latent bug.
+//! Repo lints — machine-checked invariants that make "add a field,
+//! forget a site" and "lock in the wrong order" CI failures instead of
+//! latent bugs.
+//!
+//! Two generations live here:
+//!
+//! * **v1 invariant checks** (this module): fingerprint/clock/merge
+//!   coverage, below. Cheap and textual.
+//! * **v2 syntax-aware analysis** ([`lex`] → [`parse`] → [`checks`] +
+//!   [`conc`]): a real tokenizer and item parser feeding convention
+//!   lints (std::sync hygiene, bare lock unwraps, undocumented
+//!   `Relaxed`, unchecked wire arithmetic) and concurrency analysis
+//!   (guard-scope tracking, a crate-wide lock-order graph with deadlock
+//!   cycle detection, blocking-under-lock). Entry point:
+//!   [`run_analysis`]; findings suppress via
+//!   `// dsi-lint: allow(<lint>): <reason>` comments.
 //!
 //! Run via the `dsi-lint` binary (`cargo run --release --bin dsi-lint`)
-//! or in-process from `tests/lint.rs`. Checks:
+//! or in-process from `tests/lint.rs`. v1 checks:
 //!
 //! 1. **Fingerprint coverage** — every [`crate::dpp::PipelineOptions`]
 //!    field is either hashed by `session_fingerprint` (dpp/cache.rs) or
@@ -18,17 +32,176 @@
 //!    (`EtlMetrics` and `SessionReport` have no merge site — their
 //!    cross-site invariant is the clock coverage above.)
 //!
-//! The scanner is deliberately small: comments are stripped (line
-//! comments only — the codebase uses no block comments), string literals
-//! are honored during brace matching, and "is this field handled" means
+//! The v1 scanner is deliberately small: comments are stripped (via the
+//! v2 lexer, so block comments and raw strings are handled correctly),
+//! string literals are honored during brace matching, and "is this
+//! field handled" means
 //! "does its identifier appear in the body". That over-approximates
 //! coverage (a mention in dead code would pass), which is the right
 //! trade-off for a guard rail: no false alarms, and the common failure —
 //! a field nobody typed anywhere — is always caught.
 
+pub mod checks;
+pub mod conc;
+pub mod lex;
+pub mod parse;
+
+use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
+
+/// One v2 finding: which lint fired, where, and why.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub lint: String,
+    /// Path relative to the analyzed `src/` root, forward slashes.
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "src/{}:{}: [{}] {}",
+            self.file, self.line, self.lint, self.msg
+        )
+    }
+}
+
+/// Result of the v2 analysis over a source tree.
+pub struct Analysis {
+    pub findings: Vec<Finding>,
+    pub graph: conc::LockGraph,
+}
+
+/// The `src/` root the v2 analysis reads. `DSI_LINT_SRC_ROOT`
+/// overrides it (fixture tests point it at doctored trees).
+pub fn src_root(manifest_dir: &str) -> PathBuf {
+    std::env::var("DSI_LINT_SRC_ROOT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new(manifest_dir).join("src"))
+}
+
+/// Parse every `.rs` file under `root` (recursively, sorted for
+/// deterministic output order).
+pub fn load_tree(root: &Path) -> Result<Vec<parse::ParsedFile>> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)
+        .with_context(|| format!("walking {}", root.display()))?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let src = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(parse::ParsedFile::parse(&rel, src));
+    }
+    Ok(files)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run the full v2 analysis: convention lints + concurrency analysis,
+/// allowlist applied, findings sorted by location.
+pub fn run_analysis(manifest_dir: &str) -> Result<Analysis> {
+    let files = load_tree(&src_root(manifest_dir))?;
+    let mut findings = checks::conventions(&files);
+    let (conc_findings, graph) = conc::analyze(&files);
+    findings.extend(conc_findings);
+    let mut findings = checks::apply_allowlist(&files, findings);
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, &a.lint).cmp(&(&b.file, b.line, &b.lint))
+    });
+    Ok(Analysis { findings, graph })
+}
+
+/// Machine-readable report: findings, v1 invariant errors, and the
+/// full lock-order graph (nodes carry their `*_or_recover` contexts).
+pub fn report_json(analysis: &Analysis, invariant_errs: &[String]) -> Json {
+    let mut j = Json::obj();
+    j.set("schema", "dsi-lint-v2");
+    let findings: Vec<Json> = analysis
+        .findings
+        .iter()
+        .map(|f| {
+            let mut o = Json::obj();
+            o.set("lint", f.lint.as_str())
+                .set("file", f.file.as_str())
+                .set("line", f.line)
+                .set("msg", f.msg.as_str());
+            o
+        })
+        .collect();
+    j.set("findings", Json::Arr(findings));
+    j.set(
+        "invariant_errors",
+        Json::Arr(
+            invariant_errs.iter().map(|e| Json::from(e.as_str())).collect(),
+        ),
+    );
+    let nodes: Vec<Json> = analysis
+        .graph
+        .nodes
+        .iter()
+        .map(|(name, ctxs)| {
+            let mut o = Json::obj();
+            let mut cs: Vec<&str> = ctxs.iter().map(String::as_str).collect();
+            cs.sort_unstable();
+            o.set("name", name.as_str()).set(
+                "contexts",
+                Json::Arr(cs.into_iter().map(Json::from).collect()),
+            );
+            o
+        })
+        .collect();
+    let edges: Vec<Json> = analysis
+        .graph
+        .edges
+        .iter()
+        .map(|e| {
+            let mut o = Json::obj();
+            o.set("from", e.from.as_str())
+                .set("to", e.to.as_str())
+                .set("file", e.file.as_str())
+                .set("line", e.line);
+            o.set(
+                "via",
+                e.via.as_deref().map(Json::from).unwrap_or(Json::Null),
+            );
+            o
+        })
+        .collect();
+    let mut graph = Json::obj();
+    graph
+        .set("nodes", Json::Arr(nodes))
+        .set("edges", Json::Arr(edges));
+    j.set("lock_graph", graph);
+    let mut summary = Json::obj();
+    summary
+        .set("findings", analysis.findings.len())
+        .set("invariant_errors", invariant_errs.len())
+        .set("lock_nodes", analysis.graph.nodes.len())
+        .set("lock_edges", analysis.graph.edges.len());
+    j.set("summary", summary);
+    j
+}
 
 /// The mergeable stats structs: (file under `src/`, struct name). Each
 /// must have a `merge` fn in the same file covering every field.
@@ -44,37 +217,18 @@ fn is_ident_char(c: char) -> bool {
     c.is_alphanumeric() || c == '_'
 }
 
-/// Drop `//` line comments (incl. doc comments), preserving newlines
-/// and the contents of string literals.
+/// Drop comments (line, block, doc), preserving newlines and the
+/// contents of string literals. Built on the v2 lexer, so raw strings
+/// and nested block comments are handled exactly.
 pub fn strip_comments(src: &str) -> String {
     let mut out = String::with_capacity(src.len());
-    let mut chars = src.chars().peekable();
-    let mut in_str = false;
-    let mut escape = false;
-    while let Some(c) = chars.next() {
-        if in_str {
-            out.push(c);
-            if escape {
-                escape = false;
-            } else if c == '\\' {
-                escape = true;
-            } else if c == '"' {
-                in_str = false;
+    for t in lex::lex(src) {
+        let text = t.text(src);
+        match t.kind {
+            lex::TokKind::LineComment | lex::TokKind::BlockComment => {
+                out.extend(text.chars().filter(|&c| c == '\n'));
             }
-            continue;
-        }
-        if c == '"' {
-            in_str = true;
-            out.push(c);
-        } else if c == '/' && chars.peek() == Some(&'/') {
-            for n in chars.by_ref() {
-                if n == '\n' {
-                    out.push('\n');
-                    break;
-                }
-            }
-        } else {
-            out.push(c);
+            _ => out.push_str(text),
         }
     }
     out

@@ -1,0 +1,700 @@
+//! A lightweight item/scope parser over the [`super::lex`] token
+//! stream.
+//!
+//! This is not a Rust grammar — it recovers exactly the structure the
+//! concurrency and convention lints need: which `fn` bodies exist and
+//! who owns them (`impl Type`), which struct fields have which types
+//! (so a lock expression like `self.buf.state` can be resolved to a
+//! canonical `StripeBuffer.state` name), which `use` declarations a
+//! file makes, and which regions are test-only (`#[cfg(test)]`,
+//! `#[test]`, `mod tests`) so lints that deliberately exempt test code
+//! can skip them.
+//!
+//! Anything it does not understand it skips by brace matching, so a
+//! novel construct degrades to "no findings here", never to a crash or
+//! a misparse of the surrounding items.
+
+use super::lex::{lex, Tok, TokKind};
+
+/// A `fn` item with a body.
+#[derive(Debug)]
+pub struct FnDef {
+    pub name: String,
+    /// Enclosing `impl` type (or `trait` name), if any.
+    pub owner: Option<String>,
+    /// `(name, type-text)` of each ordinary parameter; `self` receivers
+    /// are not listed (the owner covers them).
+    pub params: Vec<(String, String)>,
+    /// Token-index range of the body, *exclusive* of its braces.
+    pub body: (usize, usize),
+    /// Inside `#[cfg(test)]` / `#[test]` / `mod tests`.
+    pub is_test: bool,
+    pub line: u32,
+}
+
+/// A struct with named fields: the type map for lock-path resolution.
+#[derive(Debug)]
+pub struct StructDef {
+    pub name: String,
+    /// `(field, type-text)` in declaration order.
+    pub fields: Vec<(String, String)>,
+}
+
+/// One `use …;` declaration, flattened to its token text.
+#[derive(Debug)]
+pub struct UseDecl {
+    /// The declaration's non-trivia token texts joined by one space,
+    /// e.g. `use std :: sync :: { Arc , Mutex } ;`.
+    pub text: String,
+    pub line: u32,
+    pub is_test: bool,
+}
+
+/// A parsed source file: the token stream plus the recovered items.
+pub struct ParsedFile {
+    /// Path relative to the source root, with `/` separators.
+    pub rel: String,
+    pub src: String,
+    pub toks: Vec<Tok>,
+    pub fns: Vec<FnDef>,
+    pub structs: Vec<StructDef>,
+    pub uses: Vec<UseDecl>,
+    /// Token-index ranges that are test-only (`#[cfg(test)]` items,
+    /// `mod tests` bodies, `#[test]` fns).
+    pub test_ranges: Vec<(usize, usize)>,
+}
+
+impl ParsedFile {
+    pub fn parse(rel: &str, src: String) -> ParsedFile {
+        let toks = lex(&src);
+        let mut p = Parser {
+            src: &src,
+            toks: &toks,
+            i: 0,
+            fns: Vec::new(),
+            structs: Vec::new(),
+            uses: Vec::new(),
+            test_ranges: Vec::new(),
+        };
+        p.items(None, false, toks.len());
+        ParsedFile {
+            rel: rel.to_string(),
+            fns: p.fns,
+            structs: p.structs,
+            uses: p.uses,
+            test_ranges: p.test_ranges,
+            src,
+            toks,
+        }
+    }
+
+    /// True when token `i` sits inside a test-only region.
+    pub fn is_test_tok(&self, i: usize) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| i >= a && i <= b)
+    }
+
+    /// Text of token `i`.
+    pub fn text(&self, i: usize) -> &str {
+        self.toks[i].text(&self.src)
+    }
+
+    /// Index of the next non-trivia token at or after `i`.
+    pub fn skip_trivia(&self, mut i: usize) -> usize {
+        while i < self.toks.len() && self.toks[i].is_trivia() {
+            i += 1;
+        }
+        i
+    }
+}
+
+struct Parser<'a> {
+    src: &'a str,
+    toks: &'a [Tok],
+    i: usize,
+    fns: Vec<FnDef>,
+    structs: Vec<StructDef>,
+    uses: Vec<UseDecl>,
+    test_ranges: Vec<(usize, usize)>,
+}
+
+impl<'a> Parser<'a> {
+    fn text(&self, i: usize) -> &'a str {
+        self.toks[i].text(self.src)
+    }
+
+    fn peek(&self) -> Option<&'a str> {
+        (self.i < self.toks.len()).then(|| self.text(self.i))
+    }
+
+    /// Advance past trivia; true while tokens remain.
+    fn skip_trivia(&mut self) -> bool {
+        while self.i < self.toks.len() && self.toks[self.i].is_trivia() {
+            self.i += 1;
+        }
+        self.i < self.toks.len()
+    }
+
+    /// With `self.i` on an opening delimiter, return the index of its
+    /// matching closer (or the last token if unbalanced).
+    fn matching(&self, open: &str, close: &str) -> usize {
+        let mut depth = 0usize;
+        let mut j = self.i;
+        while j < self.toks.len() {
+            if self.toks[j].kind == TokKind::Punct {
+                let t = self.text(j);
+                if t == open {
+                    depth += 1;
+                } else if t == close {
+                    depth -= 1;
+                    if depth == 0 {
+                        return j;
+                    }
+                }
+            }
+            j += 1;
+        }
+        self.toks.len().saturating_sub(1)
+    }
+
+    /// Skip a balanced `<…>` generic list if one starts here. Generics
+    /// nest but never contain braces/semicolons in item position, so a
+    /// simple depth count is enough.
+    fn skip_generics(&mut self) {
+        if self.peek() != Some("<") {
+            return;
+        }
+        let mut depth = 0i32;
+        while self.i < self.toks.len() {
+            match self.text(self.i) {
+                "<" => depth += 1,
+                ">" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        self.i += 1;
+                        return;
+                    }
+                }
+                "{" | ";" => return, // give up: not a generic list
+                _ => {}
+            }
+            self.i += 1;
+        }
+    }
+
+    /// Parse items until token index `end`, attributing them to
+    /// `owner` (the enclosing impl/trait type) and `in_test`.
+    fn items(&mut self, owner: Option<&str>, in_test: bool, end: usize) {
+        if in_test {
+            self.test_ranges.push((self.i, end));
+        }
+        let mut next_is_test = false;
+        while self.skip_trivia() && self.i < end {
+            let t = self.text(self.i);
+            match t {
+                "#" => {
+                    // Attribute: `#[…]` (or `#![…]`). cfg(test)/test
+                    // marks the next item as test-only.
+                    let start = self.i;
+                    self.i += 1;
+                    if self.peek() == Some("!") {
+                        self.i += 1;
+                    }
+                    if self.peek() == Some("[") {
+                        let close = self.matching("[", "]");
+                        let body: Vec<&str> = (start..=close)
+                            .filter(|&j| !self.toks[j].is_trivia())
+                            .map(|j| self.text(j))
+                            .collect();
+                        if body.contains(&"test") {
+                            next_is_test = true;
+                        }
+                        self.i = close + 1;
+                    }
+                }
+                "mod" => {
+                    self.i += 1;
+                    self.skip_trivia();
+                    let name = self.peek().unwrap_or("").to_string();
+                    self.i += 1;
+                    self.skip_trivia();
+                    if self.peek() == Some("{") {
+                        let close = self.matching("{", "}");
+                        let inner_test =
+                            in_test || next_is_test || name == "tests";
+                        self.i += 1;
+                        self.items(owner, inner_test, close);
+                        self.i = close + 1;
+                    }
+                    // `mod name;` falls through: file modules are
+                    // parsed separately.
+                    next_is_test = false;
+                }
+                "impl" | "trait" => {
+                    let is_impl = t == "impl";
+                    self.i += 1;
+                    self.skip_trivia();
+                    self.skip_generics();
+                    // Type name: last path segment before the body (or
+                    // before `<`/`for`); a `for` restarts the capture
+                    // so `impl Drop for StripeBuffer` names the type,
+                    // not the trait.
+                    let mut name = String::new();
+                    while self.skip_trivia() {
+                        match self.text(self.i) {
+                            "{" | ";" => break,
+                            "for" => name.clear(),
+                            "<" => {
+                                self.skip_generics();
+                                continue;
+                            }
+                            "where" => {
+                                // Skip bounds up to the body.
+                                while self.skip_trivia()
+                                    && self.peek() != Some("{")
+                                    && self.peek() != Some(";")
+                                {
+                                    self.i += 1;
+                                }
+                                break;
+                            }
+                            s if self.toks[self.i].kind == TokKind::Ident => {
+                                name = s.to_string();
+                            }
+                            _ => {}
+                        }
+                        self.i += 1;
+                    }
+                    if self.peek() == Some("{") {
+                        let close = self.matching("{", "}");
+                        let scope = if is_impl || !name.is_empty() {
+                            Some(name)
+                        } else {
+                            None
+                        };
+                        self.i += 1;
+                        self.items(
+                            scope.as_deref(),
+                            in_test || next_is_test,
+                            close,
+                        );
+                        self.i = close + 1;
+                    }
+                    next_is_test = false;
+                }
+                "fn" => {
+                    self.fn_item(owner, in_test || next_is_test);
+                    next_is_test = false;
+                }
+                "struct" => {
+                    self.struct_item();
+                    next_is_test = false;
+                }
+                "use" => {
+                    let start = self.i;
+                    let line = self.toks[self.i].line;
+                    while self.skip_trivia() && self.peek() != Some(";") {
+                        self.i += 1;
+                    }
+                    let text: Vec<&str> = (start..self.i)
+                        .filter(|&j| !self.toks[j].is_trivia())
+                        .map(|j| self.text(j))
+                        .collect();
+                    self.uses.push(UseDecl {
+                        text: text.join(" "),
+                        line,
+                        is_test: in_test || next_is_test,
+                    });
+                    next_is_test = false;
+                }
+                "{" => {
+                    // A stray block (e.g. a const body): recurse so
+                    // nothing inside is missed, keeping scope.
+                    let close = self.matching("{", "}");
+                    self.i += 1;
+                    self.items(owner, in_test || next_is_test, close);
+                    self.i = close + 1;
+                    next_is_test = false;
+                }
+                _ => {
+                    self.i += 1;
+                }
+            }
+        }
+        self.i = end;
+    }
+
+    fn fn_item(&mut self, owner: Option<&str>, is_test: bool) {
+        let line = self.toks[self.i].line;
+        self.i += 1;
+        self.skip_trivia();
+        let name = self.peek().unwrap_or("").to_string();
+        self.i += 1;
+        self.skip_trivia();
+        self.skip_generics();
+        self.skip_trivia();
+        let mut params = Vec::new();
+        if self.peek() == Some("(") {
+            let close = self.matching("(", ")");
+            params = self.param_list(self.i + 1, close);
+            self.i = close + 1;
+        }
+        // Skip `-> Type` and `where` clauses up to the body or `;`.
+        while self.skip_trivia()
+            && self.peek() != Some("{")
+            && self.peek() != Some(";")
+        {
+            if self.peek() == Some("<") {
+                self.skip_generics();
+            } else {
+                self.i += 1;
+            }
+        }
+        if self.peek() == Some("{") {
+            let close = self.matching("{", "}");
+            self.fns.push(FnDef {
+                name,
+                owner: owner.map(str::to_string),
+                params,
+                body: (self.i + 1, close),
+                is_test,
+                line,
+            });
+            // Recurse for nested fns (closures with inner fns, test
+            // helpers); they are parsed as their own items too.
+            self.i += 1;
+            self.items(owner, is_test, close);
+            self.i = close + 1;
+        } else if self.peek() == Some(";") {
+            self.i += 1; // trait method declaration: no body
+        }
+    }
+
+    /// `(name, type-text)` pairs between token indices `from..to`,
+    /// splitting on top-level commas. `self` receivers are dropped.
+    fn param_list(&self, from: usize, to: usize) -> Vec<(String, String)> {
+        let mut out = Vec::new();
+        let mut depth = 0i32;
+        let mut start = from;
+        let mut j = from;
+        let flush = |s: usize, e: usize, out: &mut Vec<_>| {
+            let parts: Vec<usize> = (s..e)
+                .filter(|&k| !self.toks[k].is_trivia())
+                .collect();
+            // name : Type  (skip `mut` prefixes and self receivers)
+            let mut parts = parts.as_slice();
+            while let Some(&first) = parts.first() {
+                if matches!(self.text(first), "mut" | "&" | "'") {
+                    parts = &parts[1..];
+                } else {
+                    break;
+                }
+            }
+            let Some((&first, rest)) = parts.split_first() else {
+                return;
+            };
+            if self.text(first) == "self" {
+                return;
+            }
+            if rest.first().map(|&k| self.text(k)) != Some(":") {
+                return;
+            }
+            let ty: Vec<&str> =
+                rest[1..].iter().map(|&k| self.text(k)).collect();
+            out.push((self.text(first).to_string(), ty.join(" ")));
+        };
+        while j < to {
+            if self.toks[j].kind == TokKind::Punct {
+                match self.text(j) {
+                    "(" | "[" | "{" | "<" => depth += 1,
+                    ")" | "]" | "}" | ">" => depth -= 1,
+                    "," if depth == 0 => {
+                        flush(start, j, &mut out);
+                        start = j + 1;
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        flush(start, to, &mut out);
+        out
+    }
+
+    fn struct_item(&mut self) {
+        self.i += 1;
+        self.skip_trivia();
+        let name = self.peek().unwrap_or("").to_string();
+        self.i += 1;
+        self.skip_trivia();
+        self.skip_generics();
+        self.skip_trivia();
+        // Only brace structs carry the field map; tuple/unit structs
+        // have nothing to resolve through.
+        if self.peek() != Some("{") {
+            while self.skip_trivia()
+                && self.peek() != Some(";")
+                && self.peek() != Some("{")
+            {
+                self.i += 1;
+            }
+            if self.peek() == Some("{") {
+                self.i = self.matching("{", "}") + 1;
+            }
+            return;
+        }
+        let close = self.matching("{", "}");
+        let mut fields = Vec::new();
+        let mut j = self.i + 1;
+        while j < close {
+            // Field grammar per entry: [attrs] [pub[(..)]] name : Type ,
+            while j < close
+                && (self.toks[j].is_trivia() || self.text(j) == ",")
+            {
+                j += 1;
+            }
+            if j >= close {
+                break;
+            }
+            if self.text(j) == "#" {
+                // Skip the attribute.
+                j += 1;
+                while j < close && self.toks[j].is_trivia() {
+                    j += 1;
+                }
+                if j < close && self.text(j) == "[" {
+                    let save = self.i;
+                    // matching() reads self.i; emulate locally instead.
+                    let mut depth = 0usize;
+                    while j < close {
+                        match self.text(j) {
+                            "[" => depth += 1,
+                            "]" => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    j += 1;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    let _ = save;
+                }
+                continue;
+            }
+            if self.text(j) == "pub" {
+                j += 1;
+                while j < close && self.toks[j].is_trivia() {
+                    j += 1;
+                }
+                if j < close && self.text(j) == "(" {
+                    let mut depth = 0usize;
+                    while j < close {
+                        match self.text(j) {
+                            "(" => depth += 1,
+                            ")" => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    j += 1;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                }
+                continue;
+            }
+            // name : Type up to a top-level comma.
+            let fname = self.text(j).to_string();
+            j += 1;
+            while j < close && self.toks[j].is_trivia() {
+                j += 1;
+            }
+            if j >= close || self.text(j) != ":" {
+                // Not a named field (unit variant in a misparse):
+                // resync to the next comma.
+                while j < close && self.text(j) != "," {
+                    j += 1;
+                }
+                continue;
+            }
+            j += 1;
+            let ty_start = j;
+            let mut depth = 0i32;
+            while j < close {
+                if self.toks[j].kind == TokKind::Punct {
+                    match self.text(j) {
+                        "(" | "[" | "{" | "<" => depth += 1,
+                        ")" | "]" | "}" | ">" => depth -= 1,
+                        "," if depth == 0 => break,
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            let ty: Vec<&str> = (ty_start..j)
+                .filter(|&k| !self.toks[k].is_trivia())
+                .map(|k| self.text(k))
+                .collect();
+            let ok = !fname.is_empty()
+                && fname
+                    .chars()
+                    .all(|c| c.is_alphanumeric() || c == '_')
+                && !fname.starts_with(|c: char| c.is_ascii_digit());
+            if ok {
+                fields.push((fname, ty.join(" ")));
+            }
+        }
+        if !name.is_empty() {
+            self.structs.push(StructDef { name, fields });
+        }
+        self.i = close + 1;
+    }
+}
+
+/// Last path segment of a type's base struct: strips references,
+/// lifetimes, `mut`, and unwraps one smart-pointer/container layer at a
+/// time (`Arc<T>`, `Box<T>`, `Rc<T>`, `Option<T>`, `Vec<T>`), so
+/// `& 'a Arc < StripeBuffer >` resolves to `StripeBuffer`. Returns the
+/// outermost non-wrapper segment otherwise (`Mutex < BufState >` stays
+/// `Mutex`: lock cells name themselves by owner+field, not by type).
+pub fn base_type(ty: &str) -> String {
+    let toks: Vec<&str> = ty.split_whitespace().collect();
+    let mut i = 0;
+    loop {
+        while i < toks.len()
+            && (toks[i] == "&"
+                || toks[i] == "mut"
+                || toks[i].starts_with('\''))
+        {
+            i += 1;
+        }
+        if i >= toks.len() {
+            return String::new();
+        }
+        let head = toks[i];
+        let wrapper =
+            matches!(head, "Arc" | "Rc" | "Box" | "Option" | "Vec");
+        if wrapper && toks.get(i + 1) == Some(&"<") {
+            i += 2;
+            continue;
+        }
+        // Path: a::b::C — take the last segment.
+        let mut last = head;
+        let mut j = i + 1;
+        while toks.get(j) == Some(&":") && toks.get(j + 1) == Some(&":") {
+            if let Some(seg) = toks.get(j + 2) {
+                last = seg;
+                j += 3;
+            } else {
+                break;
+            }
+        }
+        return last.to_string();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"
+use std::sync::Arc;
+
+pub struct StripeBuffer {
+    state: Mutex<BufState>,
+    pub budget: MemoryBudget,
+}
+
+pub struct LoadGuard<'a> {
+    buf: &'a StripeBuffer,
+    key: (u64, usize),
+}
+
+impl StripeBuffer {
+    pub fn serve(&self, key: u64, remaining: usize) -> u64 {
+        let st = lock_or_recover(&self.state, "stripe buffer");
+        key + remaining
+    }
+}
+
+impl<'a> Drop for LoadGuard<'a> {
+    fn drop(&mut self) {
+        let st = lock_or_recover(&self.buf.state, "stripe load cleanup");
+    }
+}
+
+fn free_helper(buf: &StripeBuffer, n: usize) -> usize { n }
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Mutex;
+    #[test]
+    fn t() { let _ = 1; }
+}
+"#;
+
+    #[test]
+    fn recovers_items_and_owners() {
+        let f = ParsedFile::parse("x.rs", SRC.to_string());
+        let names: Vec<(String, Option<String>, bool)> = f
+            .fns
+            .iter()
+            .map(|d| (d.name.clone(), d.owner.clone(), d.is_test))
+            .collect();
+        assert!(names.contains(&(
+            "serve".into(),
+            Some("StripeBuffer".into()),
+            false
+        )));
+        // Trait impl attributes the *type*, not the trait.
+        assert!(names.contains(&(
+            "drop".into(),
+            Some("LoadGuard".into()),
+            false
+        )));
+        assert!(names.contains(&("free_helper".into(), None, false)));
+        assert!(names.contains(&("t".into(), None, true)));
+    }
+
+    #[test]
+    fn recovers_struct_fields_with_types() {
+        let f = ParsedFile::parse("x.rs", SRC.to_string());
+        let sb = f.structs.iter().find(|s| s.name == "StripeBuffer");
+        let fields = &sb.expect("StripeBuffer parsed").fields;
+        assert_eq!(fields[0].0, "state");
+        assert!(fields[0].1.contains("Mutex"));
+        let lg = f.structs.iter().find(|s| s.name == "LoadGuard").unwrap();
+        assert_eq!(base_type(&lg.fields[0].1), "StripeBuffer");
+    }
+
+    #[test]
+    fn params_parse_with_types() {
+        let f = ParsedFile::parse("x.rs", SRC.to_string());
+        let fh = f.fns.iter().find(|d| d.name == "free_helper").unwrap();
+        assert_eq!(fh.params.len(), 2);
+        assert_eq!(fh.params[0].0, "buf");
+        assert_eq!(base_type(&fh.params[0].1), "StripeBuffer");
+    }
+
+    #[test]
+    fn use_decls_carry_test_scope() {
+        let f = ParsedFile::parse("x.rs", SRC.to_string());
+        assert_eq!(f.uses.len(), 2);
+        assert!(!f.uses[0].is_test);
+        assert!(f.uses[1].is_test, "use inside mod tests is test scope");
+        assert!(f.uses[1].text.contains("Mutex"));
+    }
+
+    #[test]
+    fn base_type_unwraps_wrappers() {
+        assert_eq!(base_type("& 'a StripeBuffer"), "StripeBuffer");
+        assert_eq!(base_type("Arc < Cluster >"), "Cluster");
+        assert_eq!(base_type("Vec < Arc < Node > >"), "Node");
+        assert_eq!(base_type("Mutex < BufState >"), "Mutex");
+        assert_eq!(base_type("crate :: broker :: MemoryBudget"), "MemoryBudget");
+    }
+}

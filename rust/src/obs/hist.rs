@@ -96,6 +96,8 @@ impl Histogram {
     }
 
     /// Total recorded time in seconds (exact, not bucket-quantized).
+    //
+    // Relaxed load: reporting read of a monotone sum (see record_ns).
     pub fn total_secs(&self) -> f64 {
         self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
@@ -119,6 +121,9 @@ impl Histogram {
         let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64)
             .clamp(1, total);
         let mut seen = 0u64;
+        // Relaxed bucket loads: pairs with record_ns's Relaxed bumps —
+        // a concurrent scan may see a bucket without its total (skew
+        // handled below); quiescent scans are exact.
         for (i, c) in self.counts.iter().enumerate() {
             seen += c.load(Ordering::Relaxed);
             if seen >= rank {

@@ -31,6 +31,9 @@ pub struct FeatureDemand {
 }
 
 impl FeatureDemand {
+    // Relaxed store/load: `weight` is a last-writer-wins scalar every
+    // job rewrites to the same schema-derived value; readers tolerate a
+    // stale weight and nothing else is published through it.
     fn set_weight(&self, w: f64) {
         self.weight.store(w.to_bits(), Ordering::Relaxed);
     }
@@ -39,6 +42,10 @@ impl FeatureDemand {
         f64::from_bits(self.weight.load(Ordering::Relaxed))
     }
 
+    // Relaxed CAS loop: `accessed` is an independent monotone
+    // accumulator — the CAS makes each add atomic (no update lost at
+    // any ordering), and no cross-variable invariant hangs off it, so
+    // no acquire/release edge is needed.
     fn add_accessed(&self, bytes: f64) {
         let mut cur = self.accessed.load(Ordering::Relaxed);
         loop {
@@ -55,6 +62,7 @@ impl FeatureDemand {
         }
     }
 
+    // Relaxed load: reporting read of the monotone accumulator above.
     fn accessed(&self) -> f64 {
         f64::from_bits(self.accessed.load(Ordering::Relaxed))
     }
@@ -76,6 +84,11 @@ pub struct AccessStats {
 impl Clone for AccessStats {
     /// Snapshot clone: the copy starts from this tracker's current
     /// counter values and accumulates independently afterwards.
+    //
+    // Relaxed loads: each cell is copied independently; a clone taken
+    // concurrently with recording sees a torn-but-valid snapshot (some
+    // of the in-flight adds, none corrupted), which is all a snapshot
+    // of monotone statistics can promise.
     fn clone(&self) -> AccessStats {
         let map = read_or_recover(&self.per_feature, "popularity");
         AccessStats {
@@ -96,6 +109,7 @@ impl Clone for AccessStats {
                     })
                     .collect(),
             ),
+            // Relaxed: same snapshot contract as the per-cell loads above.
             jobs: AtomicU64::new(self.jobs.load(Ordering::Relaxed)),
         }
     }
@@ -115,6 +129,10 @@ impl fmt::Debug for AccessStats {
 
 impl AccessStats {
     /// Jobs recorded so far.
+    //
+    // Relaxed: `jobs` is a monotone counter read for reporting and
+    // demand normalization; a slightly stale count is fine and no other
+    // state is synchronized through it.
     pub fn jobs(&self) -> u64 {
         self.jobs.load(Ordering::Relaxed)
     }
@@ -133,6 +151,10 @@ impl AccessStats {
     }
 
     /// Record one job's projection over the schema.
+    //
+    // Relaxed fetch_add: the job counter is an independent monotone
+    // cell (atomic RMW loses nothing at any ordering); the per-feature
+    // updates below have their own invariant comments.
     pub fn record_job(&self, schema: &Schema, projection: &[FeatureId]) {
         self.jobs.fetch_add(1, Ordering::Relaxed);
         for f in &schema.features {

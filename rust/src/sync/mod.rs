@@ -8,7 +8,8 @@
 //! scheduler ([`model`]), so the model tests in [`models`] can explore
 //! thread interleavings of the real production code paths: broker
 //! single-flight serves, `MemoryBudget` accounting, the Master lease
-//! state machine, and the lock-free observability counters.
+//! state machine, the lock-free observability counters, and the
+//! client/trainer drain loop (via the [`model_yield`] hook).
 //!
 //! The checker explores sequentially-consistent interleavings only: it
 //! catches lock/CAS/condvar protocol bugs (lost wakeups, double frees,
@@ -43,6 +44,19 @@ pub use shim::{
 pub mod model;
 #[cfg(all(loom, test))]
 mod models;
+
+/// Model scheduling hook for poll/park loops built on primitives the
+/// loom shim cannot instrument (`std::sync::mpsc` channels). On a
+/// normal build this is a no-op and the caller falls through to its
+/// `park_timeout`. Under `--cfg loom` it hands the execution token to a
+/// runnable peer ([`model::yield_blocked`]) — without it, a polling
+/// loop that holds the token would spin forever without ever letting
+/// the thread it is waiting on run.
+#[inline]
+pub fn model_yield() {
+    #[cfg(loom)]
+    model::yield_blocked();
+}
 
 /// Lock a mutex, recovering from poisoning instead of propagating the
 /// panic. The protected state in this crate is counters, caches, and

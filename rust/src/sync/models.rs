@@ -13,7 +13,9 @@ use crate::broker::{
     ServeOutcome, SharedColumn, StripeBuffer,
 };
 use crate::data::ColumnarBatch;
-use crate::dpp::Master;
+use crate::dpp::worker::WireBatch;
+use crate::dpp::{Client, Master, TensorBatch};
+use crate::dwrf::crypto::StreamCipher;
 use crate::metrics::StageClock;
 use crate::obs::Histogram;
 use crate::schema::FeatureId;
@@ -397,5 +399,73 @@ fn model_column_buffer_eviction_accounting() {
         drop(out);
         assert_eq!(buf.len(), 0, "last-consumer columns not freed");
         assert_eq!(buf.budget().used(), 0, "budget leaked");
+    });
+}
+
+/// Protocol 6: the client/trainer drain loop — a worker-shaped sender
+/// pushing wire batches through a bounded channel against the
+/// *production* `Client::next_batch` poll/park loop. The channel itself
+/// is `std::sync::mpsc` (exactly what production uses; the shim cannot
+/// instrument it), so the two sides meet the scheduler differently:
+/// the sender spins on `try_send` backpressure through
+/// [`model::yield_blocked`], and the client's poll loop yields through
+/// the `sync::model_yield` hook it calls before every park. Checked in
+/// every interleaving: each batch is delivered exactly once, in send
+/// order, and the client reports end-of-stream (`None`) only after the
+/// sender has disconnected — never early, never hanging.
+#[test]
+fn model_client_drain_loop() {
+    model::check("client_drain_loop", || {
+        // Capacity 1 forces real backpressure: the sender must observe
+        // `Full` whenever the client has not yet drained.
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        let sender = thread::spawn(move || {
+            let cipher = StreamCipher::for_table("t");
+            for seq in 0..3u64 {
+                let tb = TensorBatch {
+                    rows: 1,
+                    dense: vec![seq as f32],
+                    dense_names: vec![FeatureId(0)],
+                    sparse: vec![],
+                    labels: vec![1.0],
+                };
+                let mut wire = WireBatch::plain(
+                    seq,
+                    1,
+                    false,
+                    tb.to_wire(&cipher, seq),
+                );
+                loop {
+                    match tx.try_send(wire) {
+                        Ok(()) => break,
+                        Err(std::sync::mpsc::TrySendError::Full(w)) => {
+                            wire = w;
+                            // Blocked on the consumer: hand the token
+                            // over without spending preemption budget.
+                            model::yield_blocked();
+                        }
+                        Err(
+                            std::sync::mpsc::TrySendError::Disconnected(_),
+                        ) => unreachable!("client dropped mid-stream"),
+                    }
+                }
+            }
+            // Closure end drops `tx`: the client must now see
+            // `Disconnected`, not spin to its timeout.
+        });
+        let mut client = Client::new("t", vec![rx]);
+        let mut seen = Vec::new();
+        while let Some(tb) = client
+            .next_batch(Duration::from_secs(60))
+            .expect("wire decode failed")
+        {
+            seen.push(tb.dense[0]);
+        }
+        assert_eq!(
+            seen,
+            vec![0.0, 1.0, 2.0],
+            "batch lost, duplicated, or reordered"
+        );
+        sender.join().unwrap();
     });
 }

@@ -1,0 +1,40 @@
+//! Repo-root publication of machine-readable bench results.
+//!
+//! Every `harness = false` bench emits two copies of its results JSON:
+//! `target/<name>_results.json` (build-local, consumed by the CI
+//! collect step and the telemetry artifacts) and `BENCH_<name>.json` at
+//! the repository root — the perf-trajectory baseline. Publishing from
+//! the bench itself, rather than only from a hosted-CI copy step, means
+//! any environment that runs a bench grows the trajectory.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// The repository root: the parent of this crate's manifest directory.
+/// Falls back to the current directory for a crate checked out bare.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| Path::new("."))
+        .to_path_buf()
+}
+
+/// Write `results` to `target/<name>_results.json` and to
+/// `<repo-root>/BENCH_<name>.json`, returning every path that was
+/// actually written. A read-only checkout may reject the repo-root
+/// copy; the bench still counts as published on the `target/` copy
+/// alone, so neither write aborts the run.
+pub fn publish_results(name: &str, results: &Json) -> Vec<String> {
+    let pretty = results.to_string_pretty();
+    let mut written = Vec::new();
+    let _ = std::fs::create_dir_all("target");
+    let local = format!("target/{name}_results.json");
+    if std::fs::write(&local, &pretty).is_ok() {
+        written.push(local);
+    }
+    let root = repo_root().join(format!("BENCH_{name}.json"));
+    if std::fs::write(&root, &pretty).is_ok() {
+        written.push(root.display().to_string());
+    }
+    written
+}

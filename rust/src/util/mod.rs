@@ -16,7 +16,10 @@
 //! * [`prop`] — a miniature property-testing harness (seed-reporting,
 //!   bounded shrinking over the case index).
 //! * [`bytes`] — varint/zigzag codecs and human-readable byte formatting.
+//! * [`bench`] — publishes bench results JSON to `target/` and the
+//!   repo-root `BENCH_*.json` perf trajectory.
 
+pub mod bench;
 pub mod bytes;
 pub mod cli;
 pub mod json;

@@ -1,8 +1,14 @@
-//! dsi-lint against the real tree (must be clean) and against a
-//! doctored fixture (must fail) — proving the gate actually gates.
+//! dsi-lint against the real tree (must be clean) and against doctored
+//! fixtures (must fail, with the right lint at the right file:line) —
+//! proving the gate actually gates.
+//!
+//! v1 invariants always read the real crate sources; the v2 fixture
+//! tests point `DSI_LINT_SRC_ROOT` at small doctored trees and run the
+//! `conventions`/`concurrency` subcommands, which gate only on v2
+//! findings.
 
-use std::path::Path;
-use std::process::Command;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
 
 #[test]
 fn real_sources_pass_every_repo_check() {
@@ -56,6 +62,256 @@ fn lint_binary_fails_on_unfingerprinted_field() {
     );
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(stderr.contains("sneaky_knob"), "stderr: {stderr}");
+}
+
+/// Write a throwaway source tree under `CARGO_TARGET_TMPDIR`.
+fn write_tree(name: &str, files: &[(&str, &str)]) -> PathBuf {
+    let root = Path::new(env!("CARGO_TARGET_TMPDIR")).join(name);
+    let _ = std::fs::remove_dir_all(&root);
+    for (rel, src) in files {
+        let p = root.join(rel);
+        std::fs::create_dir_all(p.parent().unwrap()).expect("mkdir");
+        std::fs::write(&p, src).expect("write fixture");
+    }
+    root
+}
+
+/// Run the binary's v2 analysis against a fixture tree.
+fn run_lint(mode: &str, root: &Path) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_dsi-lint"))
+        .arg(mode)
+        .env("DSI_LINT_SRC_ROOT", root)
+        .output()
+        .expect("spawn dsi-lint")
+}
+
+/// The doctored tree must exit 1 and name the lint at `loc`
+/// (a `file:line` fragment of the finding's location).
+fn assert_fails_at(out: &Output, lint: &str, loc: &str) {
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(
+        out.status.code(),
+        Some(1),
+        "stdout: {}\nstderr: {stderr}",
+        String::from_utf8_lossy(&out.stdout),
+    );
+    assert!(stderr.contains(lint), "missing [{lint}] in: {stderr}");
+    assert!(stderr.contains(loc), "missing {loc} in: {stderr}");
+}
+
+/// A small well-behaved tree: sanctioned sync imports, recovering lock
+/// helpers, documented `Relaxed`, consistent lock order, and checked
+/// wire arithmetic. Every v2 mode must pass it.
+#[test]
+fn v2_clean_fixture_tree_passes() {
+    let root = write_tree(
+        "lintfix_clean",
+        &[
+            (
+                "lib.rs",
+                r#"use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{lock_or_recover, Mutex};
+
+pub struct Pair {
+    first: Mutex<u32>,
+    second: Mutex<u32>,
+    hits: AtomicU64,
+}
+
+impl Pair {
+    pub fn ordered(&self) -> u32 {
+        let a = lock_or_recover(&self.first, "first");
+        let b = lock_or_recover(&self.second, "second");
+        // Relaxed: monotone statistics counter, never read for control.
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        *a + *b
+    }
+}
+"#,
+            ),
+            (
+                "dwrf/ok.rs",
+                "pub fn end(offset: u64, len: u64) -> u64 {\n    \
+                 offset.checked_add(len).unwrap_or(u64::MAX)\n}\n",
+            ),
+        ],
+    );
+    for mode in ["conventions", "concurrency", "graph"] {
+        let out = run_lint(mode, &root);
+        assert!(
+            out.status.success(),
+            "{mode}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+}
+
+#[test]
+fn doctored_lock_order_cycle_fails() {
+    let root = write_tree(
+        "lintfix_cycle",
+        &[(
+            "bad.rs",
+            r#"pub struct Pair { left: Mutex<u32>, right: Mutex<u32> }
+impl Pair {
+    pub fn forward(&self) {
+        let _a = lock_or_recover(&self.left, "left");
+        let _b = lock_or_recover(&self.right, "right");
+    }
+    pub fn backward(&self) {
+        let _b = lock_or_recover(&self.right, "right");
+        let _a = lock_or_recover(&self.left, "left");
+    }
+}
+"#,
+        )],
+    );
+    let out = run_lint("concurrency", &root);
+    // The finding anchors at an edge inside the cycle: the second
+    // acquisition of `forward`, line 5.
+    assert_fails_at(&out, "lock-order-cycle", "bad.rs:5");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("Pair.left -> Pair.right"),
+        "cycle members unnamed: {stderr}"
+    );
+}
+
+#[test]
+fn doctored_blocking_under_lock_fails() {
+    let root = write_tree(
+        "lintfix_blocking",
+        &[(
+            "bad.rs",
+            r#"pub struct Q { state: Mutex<u32> }
+pub fn drain(q: &Q, rx: &Receiver<u32>) {
+    let _g = lock_or_recover(&q.state, "q state");
+    let _v = rx.recv();
+}
+"#,
+        )],
+    );
+    let out = run_lint("concurrency", &root);
+    assert_fails_at(&out, "blocking-under-lock", "bad.rs:4");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("Q.state"), "held lock unnamed: {stderr}");
+}
+
+#[test]
+fn doctored_std_sync_import_fails() {
+    let root = write_tree(
+        "lintfix_import",
+        &[(
+            "bad.rs",
+            "use std::sync::Mutex;\npub struct S {\n    m: Mutex<u32>,\n}\n",
+        )],
+    );
+    assert_fails_at(
+        &run_lint("conventions", &root),
+        "std-sync-import",
+        "bad.rs:1",
+    );
+}
+
+#[test]
+fn doctored_bare_lock_unwrap_fails() {
+    let root = write_tree(
+        "lintfix_unwrap",
+        &[(
+            "bad.rs",
+            "use crate::sync::Mutex;\n\
+             pub fn peek(m: &Mutex<u32>) -> u32 {\n    \
+             *m.lock().unwrap()\n}\n",
+        )],
+    );
+    assert_fails_at(
+        &run_lint("conventions", &root),
+        "bare-lock-unwrap",
+        "bad.rs:3",
+    );
+}
+
+#[test]
+fn doctored_undocumented_relaxed_fails() {
+    let root = write_tree(
+        "lintfix_relaxed",
+        &[(
+            "bad.rs",
+            "use crate::sync::atomic::{AtomicU64, Ordering};\n\
+             pub fn bump(c: &AtomicU64) {\n    \
+             c.fetch_add(1, Ordering::Relaxed);\n}\n",
+        )],
+    );
+    assert_fails_at(
+        &run_lint("conventions", &root),
+        "undocumented-relaxed",
+        "bad.rs:3",
+    );
+}
+
+#[test]
+fn doctored_unchecked_wire_arith_fails() {
+    let root = write_tree(
+        "lintfix_arith",
+        &[(
+            "dwrf/bad.rs",
+            "pub fn end(offset: u64, len: u64) -> u64 {\n    \
+             offset + len\n}\n",
+        )],
+    );
+    assert_fails_at(
+        &run_lint("conventions", &root),
+        "unchecked-wire-arith",
+        "dwrf/bad.rs:2",
+    );
+}
+
+/// The same arithmetic with a justified allow comment passes — the
+/// allowlist mechanism, end to end through the binary.
+#[test]
+fn justified_allow_suppresses_wire_arith() {
+    let root = write_tree(
+        "lintfix_allow",
+        &[(
+            "dwrf/ok.rs",
+            "pub fn end(offset: u64, len: u64) -> u64 {\n    \
+             // dsi-lint: allow(unchecked-wire-arith): caller validated \
+             the extent against the file length.\n    \
+             offset + len\n}\n",
+        )],
+    );
+    let out = run_lint("conventions", &root);
+    assert!(
+        out.status.success(),
+        "allow not honored: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// `--json` writes the machine-readable report, and the lock-order
+/// graph in it covers the real broker/dpp modules.
+#[test]
+fn json_report_carries_real_lock_graph() {
+    let path =
+        Path::new(env!("CARGO_TARGET_TMPDIR")).join("dsi_lint_report.json");
+    let out = Command::new(env!("CARGO_BIN_EXE_dsi-lint"))
+        .arg("graph")
+        .arg("--json")
+        .arg(&path)
+        .output()
+        .expect("spawn dsi-lint");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let report = std::fs::read_to_string(&path).expect("report written");
+    assert!(report.contains("dsi-lint-v2"), "schema tag missing");
+    assert!(report.contains("lock_graph"), "graph section missing");
+    // Real nodes from the broker and tiering layers.
+    for node in ["StripeBuffer.state", "ReadBroker.state", "Master.state"] {
+        assert!(report.contains(node), "missing lock node {node}");
+    }
 }
 
 /// Same fixture, in-process: the violation is exactly the new field.

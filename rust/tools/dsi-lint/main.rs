@@ -1,23 +1,136 @@
-//! dsi-lint — repo-invariant gate (see `dsi::lint` for the checks).
+//! dsi-lint — repo invariant + concurrency-convention gate (see
+//! `dsi::lint` for the checks).
 //!
-//! Exit codes: 0 = all invariants hold, 1 = violations, 2 = the checker
-//! itself failed (missing source file, bad `DSI_LINT_SPEC_PATH`, ...).
+//! ```text
+//! dsi-lint [SUBCOMMAND] [--json PATH]
+//!
+//!   all           v1 invariants + v2 analysis (default)
+//!   invariants    v1 fingerprint/clock/merge coverage only
+//!   conventions   v2 convention lints (std::sync hygiene, bare lock
+//!                 unwraps, undocumented Relaxed, wire arithmetic)
+//!   concurrency   v2 guard-scope / lock-order / blocking-under-lock
+//!   graph         print the crate lock-order graph, no lints
+//!
+//!   --json PATH   also write the machine-readable findings report
+//! ```
+//!
+//! `DSI_LINT_SRC_ROOT` points the v2 analysis at an alternate source
+//! tree (fixture tests); `DSI_LINT_SPEC_PATH` overrides the v1 spec
+//! file. Exit codes: 0 = clean, 1 = findings, 2 = the checker itself
+//! failed (missing source file, bad flag, unwritable report, ...).
+
+use dsi::lint;
 
 fn main() {
-    match dsi::lint::run_repo_checks(env!("CARGO_MANIFEST_DIR")) {
-        Ok(errs) if errs.is_empty() => {
-            println!("dsi-lint: all repo invariants hold");
-        }
-        Ok(errs) => {
-            for e in &errs {
-                eprintln!("dsi-lint: {e}");
-            }
-            eprintln!("dsi-lint: {} violation(s)", errs.len());
-            std::process::exit(1);
-        }
-        Err(e) => {
-            eprintln!("dsi-lint: error: {e:#}");
-            std::process::exit(2);
+    let mut mode = String::from("all");
+    let mut json_path: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "all" | "invariants" | "conventions" | "concurrency"
+            | "graph" => mode = a,
+            "--json" => match args.next() {
+                Some(p) => json_path = Some(p),
+                None => fail2("--json needs a path"),
+            },
+            other => fail2(&format!("unknown argument `{other}`")),
         }
     }
+
+    let manifest = env!("CARGO_MANIFEST_DIR");
+    let run_v1 = matches!(mode.as_str(), "all" | "invariants");
+    let run_v2 = matches!(
+        mode.as_str(),
+        "all" | "conventions" | "concurrency" | "graph"
+    );
+
+    // v1 invariants always run against the real crate sources (the
+    // DSI_LINT_SPEC_PATH hook still applies); the v2 analysis honors
+    // DSI_LINT_SRC_ROOT so fixtures can doctor a whole tree.
+    let invariant_errs = if run_v1 {
+        match lint::run_repo_checks(manifest) {
+            Ok(errs) => errs,
+            Err(e) => fail2(&format!("{e:#}")),
+        }
+    } else {
+        Vec::new()
+    };
+
+    let analysis = if run_v2 {
+        match lint::run_analysis(manifest) {
+            Ok(a) => a,
+            Err(e) => fail2(&format!("{e:#}")),
+        }
+    } else {
+        lint::Analysis {
+            findings: Vec::new(),
+            graph: Default::default(),
+        }
+    };
+
+    // `conventions` and `concurrency` narrow which v2 findings gate;
+    // the report always carries the full set it computed.
+    let conc_lints =
+        ["lock-order-cycle", "blocking-under-lock"];
+    let gating: Vec<&lint::Finding> = analysis
+        .findings
+        .iter()
+        .filter(|f| match mode.as_str() {
+            "conventions" => !conc_lints.contains(&f.lint.as_str()),
+            "concurrency" => conc_lints.contains(&f.lint.as_str()),
+            "graph" => false,
+            _ => true,
+        })
+        .collect();
+
+    if let Some(path) = &json_path {
+        let report = lint::report_json(&analysis, &invariant_errs);
+        if let Err(e) = std::fs::write(path, report.to_string_pretty()) {
+            fail2(&format!("writing {path}: {e}"));
+        }
+    }
+
+    if mode == "graph" {
+        for (name, ctxs) in &analysis.graph.nodes {
+            let mut cs: Vec<&str> =
+                ctxs.iter().map(String::as_str).collect();
+            cs.sort_unstable();
+            println!("node {name} [{}]", cs.join(", "));
+        }
+        for e in &analysis.graph.edges {
+            let via = e
+                .via
+                .as_deref()
+                .map(|v| format!(" via {v}"))
+                .unwrap_or_default();
+            println!(
+                "edge {} -> {}{via} (src/{}:{})",
+                e.from, e.to, e.file, e.line
+            );
+        }
+    }
+
+    for e in &invariant_errs {
+        eprintln!("dsi-lint: {e}");
+    }
+    for f in &gating {
+        eprintln!("dsi-lint: {f}");
+    }
+    let total = invariant_errs.len() + gating.len();
+    if total > 0 {
+        eprintln!("dsi-lint: {total} violation(s)");
+        std::process::exit(1);
+    }
+    if mode != "graph" {
+        println!(
+            "dsi-lint: clean ({} lock nodes, {} lock-order edges)",
+            analysis.graph.nodes.len(),
+            analysis.graph.edges.len()
+        );
+    }
+}
+
+fn fail2(msg: &str) -> ! {
+    eprintln!("dsi-lint: error: {msg}");
+    std::process::exit(2);
 }
